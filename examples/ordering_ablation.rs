@@ -1,0 +1,95 @@
+//! Ordering ablation: how much of QWYC's win comes from the *joint*
+//! ordering optimization vs just the early-stop thresholds?
+//!
+//! Reproduces the paper's Appendix B comparison on one dataset: QWYC*
+//! against {GBT natural, Random x5, Individual-MSE, Greedy-MSE} orders,
+//! all with Algorithm-2 thresholds at the same α, plus the Fan et al.
+//! early-stop mechanism on its suggested Individual-MSE order (Fan*).
+//!
+//! Run: `cargo run --release --example ordering_ablation`
+
+use qwyc::data::synth::{generate, Which};
+use qwyc::fan::FanClassifier;
+use qwyc::gbt::{train, GbtParams};
+use qwyc::orderings;
+use qwyc::qwyc::{optimize_order, optimize_thresholds_for_order, simulate, QwycConfig};
+
+fn main() {
+    let alpha = 0.005;
+    let (tr, te) = generate(Which::NomaoLike, 13, 0.15);
+    let (ens, _) = train(&tr, &GbtParams { n_trees: 300, max_depth: 6, ..Default::default() });
+    println!(
+        "Nomao-like, T={} GBT, full-ensemble test acc {:.4}; target alpha {:.2}%\n",
+        ens.len(),
+        ens.accuracy(&te),
+        alpha * 100.0
+    );
+    let sm_tr = ens.score_matrix(&tr);
+    let sm_te = ens.score_matrix(&te);
+
+    println!("{:<34} {:>12} {:>9} {:>9}", "method", "mean#models", "%diff", "acc");
+    let mut show = |name: &str, sim: &qwyc::qwyc::SimResult| {
+        println!(
+            "{:<34} {:>12.1} {:>8.2}% {:>9.4}",
+            name,
+            sim.mean_models,
+            sim.pct_diff * 100.0,
+            sim.accuracy(&te.y)
+        );
+    };
+
+    // QWYC*: joint optimization.
+    let cfg = QwycConfig { alpha, max_opt_examples: 4000, ..Default::default() };
+    let star = simulate(&optimize_order(&sm_tr, &cfg), &sm_te);
+    show("QWYC* (joint order+thresholds)", &star);
+
+    // Fixed orders + Algorithm 2 thresholds.
+    let fixed: Vec<(String, Vec<usize>)> = vec![
+        ("GBT natural order".into(), orderings::natural(sm_tr.t)),
+        ("Individual MSE order".into(), orderings::individual_mse(&sm_tr, &tr.y)),
+        ("Greedy MSE order".into(), orderings::greedy_mse(&sm_tr.select_examples(&(0..4000.min(sm_tr.n)).collect::<Vec<_>>()), &tr.y[..4000.min(sm_tr.n)])),
+    ];
+    for (name, order) in &fixed {
+        let sim = simulate(&optimize_thresholds_for_order(&sm_tr, order, alpha, false), &sm_te);
+        show(&format!("Alg2 thresholds ({name})"), &sim);
+    }
+    for seed in 1..=5u64 {
+        let order = orderings::random(sm_tr.t, seed);
+        let sim = simulate(&optimize_thresholds_for_order(&sm_tr, &order, alpha, false), &sm_te);
+        show(&format!("Alg2 thresholds (random #{seed})"), &sim);
+    }
+
+    // Fan*: their early-stop mechanism on their suggested order.
+    let ind = orderings::individual_mse(&sm_tr, &tr.y);
+    let fan = FanClassifier::calibrate(&sm_tr, &ind, 0.01);
+    // Pick gamma closest to the same %diff operating point as QWYC*.
+    let mut best: Option<(f64, f64, qwyc::qwyc::SimResult)> = None;
+    for gamma in [3.0, 2.5, 2.0, 1.5, 1.0, 0.7, 0.5] {
+        let sim = fan.simulate(&sm_te, gamma, false);
+        let d = (sim.pct_diff - star.pct_diff).abs();
+        if best.as_ref().map(|(bd, ..)| d < *bd).unwrap_or(true) {
+            best = Some((d, gamma, sim));
+        }
+    }
+    let (_, gamma, sim) = best.unwrap();
+    show(&format!("Fan* (Ind-MSE order, gamma={gamma})"), &sim);
+
+    println!(
+        "\nQWYC* evaluates {:.1}x fewer models than the best fixed ordering above.",
+        fixed_best_models(&sm_tr, &sm_te, &fixed, alpha) / star.mean_models
+    );
+}
+
+fn fixed_best_models(
+    sm_tr: &qwyc::ensemble::ScoreMatrix,
+    sm_te: &qwyc::ensemble::ScoreMatrix,
+    fixed: &[(String, Vec<usize>)],
+    alpha: f64,
+) -> f64 {
+    fixed
+        .iter()
+        .map(|(_, order)| {
+            simulate(&optimize_thresholds_for_order(sm_tr, order, alpha, false), sm_te).mean_models
+        })
+        .fold(f64::INFINITY, f64::min)
+}

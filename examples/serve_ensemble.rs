@@ -1,0 +1,106 @@
+//! End-to-end serving driver (the brief's required E2E example):
+//! train a real (small) lattice ensemble, jointly optimize order +
+//! thresholds, start the TCP coordinator with dynamic batching, drive it
+//! with a closed-loop batched client, and report latency/throughput for
+//! the QWYC policy vs full evaluation. Results are recorded in
+//! EXPERIMENTS.md §Serving.
+//!
+//! By default the engine is the native backend; pass `--backend pjrt` to
+//! serve through the AOT-compiled HLO artifacts (requires
+//! `make artifacts` and the demo geometry).
+//!
+//! Run: `cargo run --release --example serve_ensemble [-- --backend pjrt]`
+
+use qwyc::coordinator::{BatchPolicy, Client, Server};
+use qwyc::data::synth::{generate, Which};
+use qwyc::data::Dataset;
+use qwyc::lattice::{train_joint, LatticeParams};
+use qwyc::qwyc::{optimize_order, FastClassifier, QwycConfig};
+use qwyc::runtime::engine::{Engine, NativeEngine, PjrtEngine};
+use std::time::Duration;
+
+fn main() {
+    let backend = std::env::args()
+        .skip_while(|a| a != "--backend")
+        .nth(1)
+        .unwrap_or_else(|| "native".into());
+
+    // --- model: demo geometry (D=4, T=4, d=3) so both backends serve the
+    // same artifact-compatible ensemble.
+    let (tr, te) = generate(Which::Rw2Like, 77, 0.05);
+    let project = |ds: &Dataset| {
+        let mut out = Dataset::new("demo4", 4);
+        for i in 0..ds.n {
+            let r = ds.row(i);
+            out.push(&[r[0], r[7], r[14], r[21]], ds.y[i]);
+        }
+        out
+    };
+    let (tr, te) = (project(&tr), project(&te));
+    let (ens, _) = train_joint(
+        &tr,
+        &LatticeParams { n_lattices: 4, dim: 3, steps: 250, ..Default::default() },
+    );
+    let sm = ens.score_matrix(&tr);
+    let fc = optimize_order(&sm, &QwycConfig { alpha: 0.005, ..Default::default() });
+    println!(
+        "model: T={} lattices; QWYC order {:?}; backend={backend}",
+        ens.len(),
+        fc.order
+    );
+
+    // --- serve with QWYC policy, then with full evaluation, same load.
+    for (policy_name, fc_used) in [
+        ("qwyc", fc.clone()),
+        ("full", FastClassifier::no_early_stop(fc.order.clone(), fc.bias, fc.beta)),
+    ] {
+        let (ens2, backend2) = (ens.clone(), backend.clone());
+        let server = Server::start(
+            "127.0.0.1:0",
+            move || -> Box<dyn Engine> {
+                if backend2 == "pjrt" {
+                    let rt = qwyc::runtime::Runtime::open(std::path::Path::new("artifacts"))
+                        .expect("run `make artifacts` first");
+                    Box::new(PjrtEngine::new(rt, "demo_stage", &ens2, &fc_used).expect("engine"))
+                } else {
+                    Box::new(NativeEngine::new(ens2, fc_used, 4))
+                }
+            },
+            BatchPolicy { max_batch: 256, max_wait: Duration::from_micros(500) },
+        )
+        .expect("server");
+
+        // Closed-loop client with a pipeline window.
+        let requests = 20_000usize;
+        let window = 128usize;
+        let mut client = Client::connect(&server.addr).expect("connect");
+        let sw = std::time::Instant::now();
+        let (mut sent, mut recv) = (0usize, 0usize);
+        let mut lat_us: Vec<f64> = Vec::with_capacity(requests);
+        let mut models_sum = 0u64;
+        while recv < requests {
+            while sent < requests && sent - recv < window {
+                client.send_eval(te.row(sent % te.n)).expect("send");
+                sent += 1;
+            }
+            let r = client.read_response().expect("recv");
+            lat_us.push(r.latency_us as f64);
+            models_sum += r.models as u64;
+            recv += 1;
+        }
+        let secs = sw.elapsed().as_secs_f64();
+        lat_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| qwyc::util::stats::percentile_sorted(&lat_us, p);
+        println!(
+            "[{policy_name:>4}] {requests} reqs in {secs:.2}s = {:>7.0} req/s | \
+             latency p50/p95/p99 = {:>5.0}/{:>5.0}/{:>5.0} us | mean models {:.2}",
+            requests as f64 / secs,
+            pct(50.0),
+            pct(95.0),
+            pct(99.0),
+            models_sum as f64 / requests as f64,
+        );
+        server.stop();
+    }
+    println!("\n(qwyc-vs-full throughput ratio above is the serving-path speedup)");
+}

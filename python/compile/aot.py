@@ -1,0 +1,141 @@
+"""AOT pipeline: lower the L2 graphs to HLO text + manifest.json.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: the
+image's xla_extension 0.5.1 rejects jax>=0.5 protos (64-bit instruction
+ids), while the text parser reassigns ids and round-trips cleanly — see
+/opt/xla-example/README.md.
+
+Usage:  python -m compile.aot [--out ../artifacts]
+
+Emits, per geometry config (rw1 / rw2 / demo):
+    <name>_stage.hlo.txt   qwyc_stage  (the serving hot path)
+    <name>_full.hlo.txt    full_model  (baseline + survivor fallback)
+plus a manifest.json describing every artifact's inputs/outputs so the
+rust runtime can validate shapes at load time. Python runs ONCE at build
+time; the rust binary is self-contained afterwards.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Geometry configs: (D total features, T lattices, d per-lattice features,
+# B batch, K stage width). rw1/rw2 mirror the paper's real-world
+# experiments; demo is a tiny config exercised by tests.
+CONFIGS = {
+    "rw1": dict(D=16, T=5, d=13, B=256, K=1),
+    "rw2": dict(D=30, T=500, d=8, B=256, K=16),
+    "demo": dict(D=4, T=4, d=3, B=8, K=2),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def stage_specs(cfg):
+    v = 1 << cfg["d"]
+    return (
+        f32(cfg["B"], cfg["D"]),        # x
+        f32(cfg["B"]),                  # g_in
+        i32(cfg["K"], cfg["d"]),        # subsets (pi-permuted)
+        f32(cfg["K"], v),               # theta (pi-permuted)
+        f32(cfg["K"]),                  # eps_pos
+        f32(cfg["K"]),                  # eps_neg
+    )
+
+
+def full_specs(cfg):
+    v = 1 << cfg["d"]
+    return (
+        f32(cfg["B"], cfg["D"]),        # x
+        i32(cfg["T"], cfg["d"]),        # subsets
+        f32(cfg["T"], v),               # theta
+    )
+
+
+def lower_one(fn, specs):
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def input_manifest(specs):
+    return [
+        {"shape": list(s.shape), "dtype": str(s.dtype)} for s in specs
+    ]
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--configs", default="all", help="comma-separated subset of " + ",".join(CONFIGS)
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    names = list(CONFIGS) if args.configs == "all" else args.configs.split(",")
+    manifest = {"format": "hlo-text", "artifacts": {}}
+    for name in names:
+        cfg = CONFIGS[name]
+        sspecs = stage_specs(cfg)
+        fspecs = full_specs(cfg)
+
+        stage_path = f"{name}_stage.hlo.txt"
+        text = lower_one(
+            lambda x, g, s, t, ep, en: model.qwyc_stage(x, g, s, t, ep, en),
+            sspecs,
+        )
+        with open(os.path.join(args.out, stage_path), "w") as f:
+            f.write(text)
+        manifest["artifacts"][f"{name}_stage"] = {
+            "path": stage_path,
+            "fn": "qwyc_stage",
+            "config": cfg,
+            "inputs": input_manifest(sspecs),
+            "outputs": [
+                {"shape": [cfg["B"]], "dtype": "float32"},
+                {"shape": [cfg["B"]], "dtype": "int32"},
+                {"shape": [cfg["B"]], "dtype": "int32"},
+            ],
+        }
+        print(f"wrote {stage_path} ({len(text)} chars)")
+
+        full_path = f"{name}_full.hlo.txt"
+        text = lower_one(lambda x, s, t: model.full_model(x, s, t), fspecs)
+        with open(os.path.join(args.out, full_path), "w") as f:
+            f.write(text)
+        manifest["artifacts"][f"{name}_full"] = {
+            "path": full_path,
+            "fn": "full_model",
+            "config": cfg,
+            "inputs": input_manifest(fspecs),
+            "outputs": [{"shape": [cfg["B"]], "dtype": "float32"}],
+        }
+        print(f"wrote {full_path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest.json ({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""L1 Pallas kernel: batched multilinear lattice interpolation.
+
+Evaluates a block of K lattice base models on a batch of B examples.
+Inputs are pre-gathered per-lattice feature subsets (the L2 graph does the
+gather), so the kernel body is pure dense math:
+
+    xg:    [B, K, d]   coordinates in [0, 1] for each (example, lattice)
+    theta: [K, V]      vertex parameters, V = 2^d
+    out:   [B, K]      interpolated scores
+
+The schedule is the classic contraction: broadcast theta to [B, K, V] and
+fold one dimension per step, halving V each time —
+
+    acc[..., :half] <- lerp(acc[..., :half], acc[..., half:], x_j)
+
+d steps, O(B·K·2^{d+1}) FMAs total, reading each theta element exactly
+once.  On TPU the natural tiling keeps a [Bb, Kb, V] activation tile plus
+a [Kb, V] theta tile in VMEM (see DESIGN.md §7 for the footprint
+arithmetic); the grid walks K so each theta tile is loaded once per batch
+tile.  interpret=True is mandatory in this image: CPU PJRT cannot execute
+Mosaic custom-calls, and interpret-mode lowering produces portable HLO.
+
+Hardware adaptation note (DESIGN.md §Hardware-Adaptation): the paper's
+evaluation is CPU trees/lattices; the TPU rethink is batch-parallel masked
+evaluation, and this kernel is the per-stage dense hot spot. The
+contraction is VPU-shaped; a W@theta MXU formulation becomes profitable
+when 2^d >= 128 and is discussed in DESIGN.md rather than implemented,
+since interpret mode gives no TPU wallclock to compare.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lattice_kernel(xg_ref, theta_ref, out_ref, *, d: int):
+    """Kernel body for one (batch, lattice-block) tile."""
+    xg = xg_ref[...]  # [B, Kb, d]
+    theta = theta_ref[...]  # [Kb, V]
+    b = xg.shape[0]
+    # Broadcast theta across the batch: [B, Kb, V].
+    acc = jnp.broadcast_to(theta[None, :, :], (b,) + theta.shape)
+    half = theta.shape[-1] // 2
+    # Contract from the most-significant vertex bit down (bit j of the
+    # vertex index is controlled by feature j; MSB first matches the rust
+    # evaluator in rust/src/lattice/model.rs).
+    for j in range(d - 1, -1, -1):
+        xj = jnp.clip(xg[:, :, j], 0.0, 1.0)[:, :, None]  # [B, Kb, 1]
+        lo = acc[:, :, :half]
+        hi = acc[:, :, half : 2 * half]
+        acc = lo + xj * (hi - lo)
+        half //= 2
+    out_ref[...] = acc[:, :, 0]
+
+
+def lattice_scores(xg: jax.Array, theta: jax.Array, *, block_k: int | None = None) -> jax.Array:
+    """Evaluate K lattices on B examples: returns [B, K] scores.
+
+    xg: [B, K, d] pre-gathered subset coordinates.
+    theta: [K, V] with V == 2^d.
+    block_k: lattice-block tile size (must divide K); default = whole K.
+    """
+    b, k, d = xg.shape
+    kt, v = theta.shape
+    assert kt == k, f"theta K {kt} != xg K {k}"
+    assert v == 1 << d, f"theta V {v} != 2^{d}"
+    if block_k is None:
+        block_k = k
+    assert k % block_k == 0, f"block_k {block_k} must divide K {k}"
+
+    kernel = functools.partial(_lattice_kernel, d=d)
+    return pl.pallas_call(
+        kernel,
+        grid=(k // block_k,),
+        in_specs=[
+            pl.BlockSpec((b, block_k, d), lambda i: (0, i, 0)),
+            pl.BlockSpec((block_k, v), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, block_k), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((b, k), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(xg, theta)

@@ -1,0 +1,70 @@
+"""L1 Pallas kernel: fused QWYC early-stop scan.
+
+Given per-position scores of a stage (already in the optimized evaluation
+order pi) and the per-position thresholds, computes — entirely on-device,
+one pass, no host round-trip — each example's stop position, decision
+status, and running score at its stop point:
+
+    scores:  [B, K]  f_{pi(r)}(x_i) for the K positions of this stage
+    g_in:    [B]     running score entering the stage (bias included)
+    eps_pos: [K]     early-positive thresholds (use +1e30 for "none")
+    eps_neg: [K]     early-negative thresholds (use -1e30 for "none")
+
+    g_out:   [B]     running score at stop (or after all K)
+    decided: [B] i32 0 = undecided, 1 = early positive, 2 = early negative
+    used:    [B] i32 positions consumed within the stage (1..K)
+
+This is the paper's per-example sequential evaluation rule (Section 3.1)
+recast as a data-parallel cumulative scan so a whole batch advances in one
+fused kernel — the serving scheduler (rust coordinator) applies it per
+stage and compacts survivors between stages.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _scan_kernel(scores_ref, g_in_ref, eps_pos_ref, eps_neg_ref,
+                 g_out_ref, decided_ref, used_ref):
+    scores = scores_ref[...]  # [B, K]
+    g_in = g_in_ref[...]  # [B]
+    eps_pos = eps_pos_ref[...]  # [K]
+    eps_neg = eps_neg_ref[...]  # [K]
+    k = scores.shape[1]
+
+    g_cum = g_in[:, None] + jnp.cumsum(scores, axis=1)  # [B, K]
+    pos_hit = g_cum > eps_pos[None, :]
+    neg_hit = g_cum < eps_neg[None, :]
+    hit = jnp.logical_or(pos_hit, neg_hit)
+    any_hit = jnp.any(hit, axis=1)
+    # argmax returns the FIRST maximal element: the first True.
+    first = jnp.argmax(hit, axis=1).astype(jnp.int32)
+    used = jnp.where(any_hit, first + 1, k).astype(jnp.int32)
+    stop_idx = used - 1
+    g_out = jnp.take_along_axis(g_cum, stop_idx[:, None], axis=1)[:, 0]
+    first_pos = jnp.take_along_axis(pos_hit, stop_idx[:, None], axis=1)[:, 0]
+    decided = jnp.where(
+        any_hit, jnp.where(first_pos, 1, 2), 0
+    ).astype(jnp.int32)
+
+    g_out_ref[...] = g_out
+    decided_ref[...] = decided
+    used_ref[...] = used
+
+
+def qwyc_scan(scores: jax.Array, g_in: jax.Array,
+              eps_pos: jax.Array, eps_neg: jax.Array):
+    """Fused early-stop scan. Returns (g_out, decided, used)."""
+    b, k = scores.shape
+    assert g_in.shape == (b,)
+    assert eps_pos.shape == (k,) and eps_neg.shape == (k,)
+    return pl.pallas_call(
+        _scan_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+        ),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(scores, g_in, eps_pos, eps_neg)

@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness ground truth.
+
+`lattice_scores_ref` evaluates the multilinear interpolation by explicit
+vertex-weight expansion (mathematically the definition, numerically
+independent of the kernels' contraction order), and `qwyc_scan_ref` is a
+direct Python-loop transcription of the paper's sequential evaluation
+rule. pytest + hypothesis compare kernels against these across shapes.
+"""
+
+import numpy as np
+
+
+def lattice_scores_ref(xg: np.ndarray, theta: np.ndarray) -> np.ndarray:
+    """Reference lattice evaluation: [B, K, d], [K, V] -> [B, K].
+
+    score[b, k] = sum_v theta[k, v] * prod_j w(x[b,k,j], bit_j(v)).
+    """
+    b, k, d = xg.shape
+    v = theta.shape[1]
+    assert v == 1 << d
+    x = np.clip(xg.astype(np.float64), 0.0, 1.0)
+    # weights[b, k, v] built bit by bit.
+    w = np.ones((b, k, 1), dtype=np.float64)
+    for j in range(d):
+        xj = x[:, :, j : j + 1]
+        # bit j clear -> (1 - x_j), set -> x_j; vertex index bit j has
+        # stride 2^j, so Kronecker-double the weight vector.
+        w = np.concatenate([w * (1.0 - xj), w * xj], axis=2)
+    return np.einsum("bkv,kv->bk", w, theta.astype(np.float64)).astype(np.float32)
+
+
+def qwyc_scan_ref(scores: np.ndarray, g_in: np.ndarray,
+                  eps_pos: np.ndarray, eps_neg: np.ndarray):
+    """Reference sequential early-stop evaluation (paper Section 3.1)."""
+    b, k = scores.shape
+    g_out = np.zeros(b, dtype=np.float32)
+    decided = np.zeros(b, dtype=np.int32)
+    used = np.zeros(b, dtype=np.int32)
+    for i in range(b):
+        g = np.float32(g_in[i])
+        dec = 0
+        r_used = k
+        for r in range(k):
+            g = np.float32(g + scores[i, r])
+            if g > eps_pos[r]:
+                dec, r_used = 1, r + 1
+                break
+            if g < eps_neg[r]:
+                dec, r_used = 2, r + 1
+                break
+        g_out[i] = g
+        decided[i] = dec
+        used[i] = r_used
+    return g_out, decided, used

@@ -1,0 +1,65 @@
+"""L2: the JAX compute graphs AOT-compiled for the rust serving path.
+
+Three graphs, all built on the L1 Pallas kernels and lowered by aot.py:
+
+- `full_model`    — evaluate ALL T lattices and return final scores
+                    (the full-ensemble baseline and the fallback for
+                    examples that survive every early-stop stage).
+- `qwyc_stage`    — evaluate the next K base models of the optimized
+                    order for a batch, then apply the per-position
+                    early-stop thresholds in a fused scan; returns
+                    (g_out, decided, used). The rust coordinator calls
+                    this per stage, retiring decided examples and
+                    compacting survivors between calls.
+- `lattice_block` — bare K-lattice scoring (diagnostics/tests).
+
+Model parameters (theta, subsets) are *runtime inputs*, not baked
+constants: one compiled artifact serves any trained ensemble with the
+same (T, D, d) geometry, which is what lets `make artifacts` run once.
+
+Everything here is build-time only; nothing imports this at serving time.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.lattice import lattice_scores
+from compile.kernels.qwyc_scan import qwyc_scan
+
+
+def gather_subsets(x: jax.Array, subsets: jax.Array) -> jax.Array:
+    """Gather per-lattice feature subsets: [B, D], [K, d] -> [B, K, d]."""
+    # x[:, subsets] : advanced indexing lowers to a single HLO gather.
+    return x[:, subsets]
+
+
+def lattice_block(x, subsets, theta, *, block_k=None):
+    """Scores of K lattices on a batch: returns [B, K]."""
+    xg = gather_subsets(x, subsets)
+    return (lattice_scores(xg, theta, block_k=block_k),)
+
+
+def full_model(x, subsets, theta, *, block_k=None):
+    """Full-ensemble scores: bias is added on the rust side.
+
+    Returns ([B] final scores,).
+    """
+    scores = lattice_scores(gather_subsets(x, subsets), theta, block_k=block_k)
+    return (jnp.sum(scores, axis=1),)
+
+
+def qwyc_stage(x, g_in, subsets, theta, eps_pos, eps_neg, *, block_k=None):
+    """One early-exit stage over K consecutive positions of the order.
+
+    x:       [B, D] features
+    g_in:    [B]    running scores entering the stage
+    subsets: [K, d] i32 feature subsets, already permuted into pi order
+    theta:   [K, V] vertex params, already permuted into pi order
+    eps_pos: [K]    early-positive thresholds for these positions
+    eps_neg: [K]    early-negative thresholds
+
+    Returns (g_out [B] f32, decided [B] i32 {0,1,2}, used [B] i32).
+    """
+    scores = lattice_scores(gather_subsets(x, subsets), theta, block_k=block_k)
+    g_out, decided, used = qwyc_scan(scores, g_in, eps_pos, eps_neg)
+    return (g_out, decided, used)

@@ -1,0 +1,74 @@
+"""AOT pipeline: manifest correctness and HLO-text invariants that the
+rust runtime depends on (these are the cross-language contract tests)."""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[2]
+
+
+@pytest.fixture(scope="module")
+def artifacts(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    # The demo config lowers in ~1s; that's the contract surface the rust
+    # integration tests exercise.
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", str(out), "--configs", "demo"],
+        cwd=REPO / "python",
+        check=True,
+        capture_output=True,
+    )
+    return out
+
+
+def test_manifest_structure(artifacts):
+    manifest = json.loads((artifacts / "manifest.json").read_text())
+    assert manifest["format"] == "hlo-text"
+    arts = manifest["artifacts"]
+    assert set(arts) == {"demo_stage", "demo_full"}
+    stage = arts["demo_stage"]
+    assert stage["fn"] == "qwyc_stage"
+    cfg = stage["config"]
+    assert (cfg["D"], cfg["T"], cfg["d"], cfg["B"], cfg["K"]) == (4, 4, 3, 8, 2)
+    # Input order contract: x, g_in, subsets, theta, eps_pos, eps_neg.
+    shapes = [tuple(i["shape"]) for i in stage["inputs"]]
+    assert shapes == [(8, 4), (8,), (2, 3), (2, 8), (2,), (2,)]
+    dtypes = [i["dtype"] for i in stage["inputs"]]
+    assert dtypes == ["float32", "float32", "int32", "float32", "float32", "float32"]
+    # Outputs: g_out f32, decided i32, used i32.
+    assert [o["dtype"] for o in stage["outputs"]] == ["float32", "int32", "int32"]
+
+
+def test_hlo_text_is_parseable_shape(artifacts):
+    text = (artifacts / "demo_stage.hlo.txt").read_text()
+    # The rust side parses HLO text via HloModuleProto::from_text_file;
+    # these invariants are what that parser requires.
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # return_tuple=True: the root computation returns a tuple of 3.
+    assert "(f32[8]" in text.replace(" ", "")[:20000] or "f32[8]" in text
+
+
+def test_full_artifact_single_output(artifacts):
+    manifest = json.loads((artifacts / "manifest.json").read_text())
+    full = manifest["artifacts"]["demo_full"]
+    assert full["fn"] == "full_model"
+    assert len(full["outputs"]) == 1
+    assert tuple(full["outputs"][0]["shape"]) == (8,)
+
+
+def test_regeneration_is_deterministic(artifacts, tmp_path):
+    out2 = tmp_path / "artifacts2"
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", str(out2), "--configs", "demo"],
+        cwd=REPO / "python",
+        check=True,
+        capture_output=True,
+    )
+    a = (artifacts / "demo_stage.hlo.txt").read_text()
+    b = (out2 / "demo_stage.hlo.txt").read_text()
+    assert a == b, "AOT lowering must be deterministic for reproducible builds"

@@ -1,0 +1,134 @@
+"""L1 kernel correctness: Pallas kernels vs pure-numpy oracles.
+
+Hypothesis sweeps shapes/values; fixed cases pin the geometry corners the
+artifacts actually use (d=13 RW1, d=8 RW2, stage K=1 and K=16).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.lattice import lattice_scores
+from compile.kernels.qwyc_scan import qwyc_scan
+from compile.kernels.ref import lattice_scores_ref, qwyc_scan_ref
+
+RNG = np.random.default_rng(0)
+
+
+def rand_case(b, k, d, seed):
+    rng = np.random.default_rng(seed)
+    xg = rng.random((b, k, d), dtype=np.float32)
+    theta = rng.standard_normal((k, 1 << d)).astype(np.float32)
+    return xg, theta
+
+
+# ---------------------------------------------------------------- lattice
+
+
+@pytest.mark.parametrize("b,k,d", [(1, 1, 1), (4, 3, 2), (8, 2, 5), (2, 1, 13), (16, 16, 8)])
+def test_lattice_matches_ref_fixed(b, k, d):
+    xg, theta = rand_case(b, k, d, seed=b * 100 + k * 10 + d)
+    got = np.asarray(lattice_scores(xg, theta))
+    want = lattice_scores_ref(xg, theta)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    b=st.integers(1, 12),
+    k=st.integers(1, 6),
+    d=st.integers(1, 7),
+    seed=st.integers(0, 2**31),
+)
+def test_lattice_matches_ref_hypothesis(b, k, d, seed):
+    xg, theta = rand_case(b, k, d, seed)
+    got = np.asarray(lattice_scores(xg, theta))
+    want = lattice_scores_ref(xg, theta)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_lattice_corners_reproduce_theta():
+    d, k = 4, 2
+    theta = RNG.standard_normal((k, 16)).astype(np.float32)
+    for v in range(16):
+        x = np.array([[(v >> j) & 1 for j in range(d)]] * 1, dtype=np.float32)
+        xg = np.broadcast_to(x[:, None, :], (1, k, d))
+        got = np.asarray(lattice_scores(xg, theta))
+        np.testing.assert_allclose(got[0], theta[:, v], rtol=1e-5, atol=1e-5)
+
+
+def test_lattice_clamps_out_of_range_inputs():
+    xg = np.array([[[-0.5, 1.5]]], dtype=np.float32)  # clamps to (0, 1)
+    theta = np.arange(4, dtype=np.float32)[None, :]  # f(x) = x0 + 2 x1
+    got = np.asarray(lattice_scores(xg, theta))
+    np.testing.assert_allclose(got, [[2.0]], rtol=1e-6)
+
+
+def test_lattice_block_k_tiling_equivalent():
+    xg, theta = rand_case(4, 8, 3, seed=9)
+    whole = np.asarray(lattice_scores(xg, theta))
+    tiled = np.asarray(lattice_scores(xg, theta, block_k=2))
+    np.testing.assert_allclose(whole, tiled, rtol=1e-6)
+
+
+# --------------------------------------------------------------- qwyc scan
+
+
+def scan_case(b, k, seed, inf_frac=0.3):
+    rng = np.random.default_rng(seed)
+    scores = rng.standard_normal((b, k)).astype(np.float32)
+    g_in = rng.standard_normal(b).astype(np.float32)
+    eps_pos = rng.standard_normal(k).astype(np.float32) + 1.0
+    eps_neg = rng.standard_normal(k).astype(np.float32) - 1.0
+    # Some positions have no threshold (the +-inf encoding rust uses).
+    mask = rng.random(k) < inf_frac
+    eps_pos[mask] = 1e30
+    eps_neg[mask] = -1e30
+    # Keep eps_neg <= eps_pos (classifier invariant).
+    eps_neg = np.minimum(eps_neg, eps_pos)
+    return scores, g_in, eps_pos, eps_neg
+
+
+@pytest.mark.parametrize("b,k", [(1, 1), (4, 5), (8, 16), (3, 1)])
+def test_scan_matches_ref_fixed(b, k):
+    scores, g_in, ep, en = scan_case(b, k, seed=b * 31 + k)
+    g, dec, used = (np.asarray(v) for v in qwyc_scan(scores, g_in, ep, en))
+    g_r, dec_r, used_r = qwyc_scan_ref(scores, g_in, ep, en)
+    np.testing.assert_array_equal(dec, dec_r)
+    np.testing.assert_array_equal(used, used_r)
+    np.testing.assert_allclose(g, g_r, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=40, deadline=None)
+@given(b=st.integers(1, 10), k=st.integers(1, 12), seed=st.integers(0, 2**31))
+def test_scan_matches_ref_hypothesis(b, k, seed):
+    scores, g_in, ep, en = scan_case(b, k, seed)
+    g, dec, used = (np.asarray(v) for v in qwyc_scan(scores, g_in, ep, en))
+    g_r, dec_r, used_r = qwyc_scan_ref(scores, g_in, ep, en)
+    np.testing.assert_array_equal(dec, dec_r)
+    np.testing.assert_array_equal(used, used_r)
+    np.testing.assert_allclose(g, g_r, rtol=1e-4, atol=1e-4)
+
+
+def test_scan_no_thresholds_never_stops():
+    b, k = 4, 6
+    scores = RNG.standard_normal((b, k)).astype(np.float32)
+    g_in = np.zeros(b, dtype=np.float32)
+    ep = np.full(k, 1e30, dtype=np.float32)
+    en = np.full(k, -1e30, dtype=np.float32)
+    g, dec, used = (np.asarray(v) for v in qwyc_scan(scores, g_in, ep, en))
+    assert (dec == 0).all()
+    assert (used == k).all()
+    np.testing.assert_allclose(g, g_in + scores.sum(axis=1), rtol=1e-5)
+
+
+def test_scan_stops_at_first_crossing():
+    # g_in=0; scores [1, 1, 1]; eps_pos = 1.5 at every position:
+    # cumulative 1, 2, 3 -> crosses at position 2.
+    scores = np.ones((1, 3), dtype=np.float32)
+    g_in = np.zeros(1, dtype=np.float32)
+    ep = np.full(3, 1.5, dtype=np.float32)
+    en = np.full(3, -1e30, dtype=np.float32)
+    g, dec, used = (np.asarray(v) for v in qwyc_scan(scores, g_in, ep, en))
+    assert dec[0] == 1 and used[0] == 2
+    np.testing.assert_allclose(g, [2.0])

@@ -1,0 +1,83 @@
+"""L2 graph tests: gather + kernel composition, stage semantics, shapes."""
+
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels.ref import lattice_scores_ref, qwyc_scan_ref
+
+RNG = np.random.default_rng(1)
+
+
+def make_ensemble(D, T, d, seed=0):
+    rng = np.random.default_rng(seed)
+    subsets = np.stack(
+        [rng.choice(D, size=d, replace=False) for _ in range(T)]
+    ).astype(np.int32)
+    theta = rng.standard_normal((T, 1 << d)).astype(np.float32)
+    return subsets, theta
+
+
+def test_gather_subsets():
+    x = np.arange(12, dtype=np.float32).reshape(3, 4)
+    subsets = np.array([[2, 0], [1, 3]], dtype=np.int32)
+    got = np.asarray(model.gather_subsets(x, subsets))
+    assert got.shape == (3, 2, 2)
+    np.testing.assert_array_equal(got[0, 0], [2.0, 0.0])
+    np.testing.assert_array_equal(got[1, 1], [5.0, 7.0])
+
+
+def test_full_model_matches_ref_sum():
+    D, T, d, B = 6, 7, 3, 5
+    subsets, theta = make_ensemble(D, T, d)
+    x = RNG.random((B, D), dtype=np.float32)
+    (got,) = model.full_model(x, subsets, theta)
+    want = lattice_scores_ref(np.asarray(model.gather_subsets(x, subsets)), theta).sum(axis=1)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-4)
+
+
+def test_qwyc_stage_matches_composed_refs():
+    D, K, d, B = 8, 4, 3, 6
+    subsets, theta = make_ensemble(D, K, d, seed=3)
+    x = RNG.random((B, D), dtype=np.float32)
+    g_in = RNG.standard_normal(B).astype(np.float32)
+    eps_pos = np.full(K, 0.8, dtype=np.float32)
+    eps_neg = np.full(K, -0.8, dtype=np.float32)
+    g, dec, used = (np.asarray(v) for v in model.qwyc_stage(x, g_in, subsets, theta, eps_pos, eps_neg))
+    scores = lattice_scores_ref(np.asarray(model.gather_subsets(x, subsets)), theta)
+    g_r, dec_r, used_r = qwyc_scan_ref(scores, g_in, eps_pos, eps_neg)
+    np.testing.assert_array_equal(dec, dec_r)
+    np.testing.assert_array_equal(used, used_r)
+    np.testing.assert_allclose(g, g_r, rtol=1e-4, atol=1e-4)
+
+
+def test_stage_decided_semantics():
+    # One lattice with theta == 5 everywhere: score exactly 5.
+    D, K, d, B = 2, 1, 1, 3
+    subsets = np.zeros((K, d), dtype=np.int32)
+    theta = np.full((K, 2), 5.0, dtype=np.float32)
+    x = RNG.random((B, D), dtype=np.float32)
+    g_in = np.array([0.0, -20.0, -4.0], dtype=np.float32)
+    eps_pos = np.array([2.0], dtype=np.float32)
+    eps_neg = np.array([-2.0], dtype=np.float32)
+    g, dec, used = (np.asarray(v) for v in model.qwyc_stage(x, g_in, subsets, theta, eps_pos, eps_neg))
+    # g after: 5, -15, 1 -> pos, neg, undecided.
+    np.testing.assert_array_equal(dec, [1, 2, 0])
+    np.testing.assert_array_equal(used, [1, 1, 1])
+    np.testing.assert_allclose(g, [5.0, -15.0, 1.0], rtol=1e-6)
+
+
+@pytest.mark.parametrize("name", ["demo", "rw2"])
+def test_aot_geometry_lowers(name):
+    """Lowering the artifact geometries must succeed and produce HLO text."""
+    from compile import aot
+
+    cfg = dict(aot.CONFIGS[name])
+    if name == "rw2":
+        # Shrink T for test speed; geometry (d, K, B) stays the real one.
+        cfg["T"] = 32
+    text = aot.lower_one(
+        lambda x, g, s, t, ep, en: model.qwyc_stage(x, g, s, t, ep, en),
+        aot.stage_specs(cfg),
+    )
+    assert "ENTRY" in text and "f32[" in text

@@ -1,0 +1,11 @@
+//! Bench target: Figure 1 — Adult/Nomao test accuracy vs mean #base models
+//! (QWYC*, Fan*, fixed orderings, GBT-alone). Also emits the Figure 3 view.
+//! Scale via QWYC_BENCH_SCALE (default 0.1; 1.0 = paper-size datasets).
+use qwyc::experiments::{figures, FigConfig};
+
+fn main() {
+    let scale = std::env::var("QWYC_BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(0.1);
+    let cfg = FigConfig { scale, ..Default::default() };
+    std::fs::create_dir_all(&cfg.out_dir).ok();
+    figures::fig1_fig3(&cfg);
+}

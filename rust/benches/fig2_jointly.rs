@@ -1,0 +1,10 @@
+//! Bench target: Figure 2 — real-world jointly-trained lattice ensembles,
+//! % classification differences vs mean #base models (Experiments 3-4).
+use qwyc::experiments::{figures, FigConfig};
+
+fn main() {
+    let scale = std::env::var("QWYC_BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(0.05);
+    let cfg = FigConfig { scale, ..Default::default() };
+    std::fs::create_dir_all(&cfg.out_dir).ok();
+    figures::fig2_or_fig4(&cfg, true);
+}

@@ -1,0 +1,10 @@
+//! Bench target: Figure 3 — Adult/Nomao %diff vs mean #models. Shares its
+//! computation with Figure 1 (both views are emitted by fig1_fig3).
+use qwyc::experiments::{figures, FigConfig};
+
+fn main() {
+    let scale = std::env::var("QWYC_BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(0.1);
+    let cfg = FigConfig { scale, ..Default::default() };
+    std::fs::create_dir_all(&cfg.out_dir).ok();
+    figures::fig1_fig3(&cfg);
+}

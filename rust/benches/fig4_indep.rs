@@ -1,0 +1,11 @@
+//! Bench target: Figure 4 — real-world independently-trained lattice
+//! ensembles (Experiments 5-6), incl. the paper's "random beats clever
+//! orderings at T=500-independent" observation.
+use qwyc::experiments::{figures, FigConfig};
+
+fn main() {
+    let scale = std::env::var("QWYC_BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(0.05);
+    let cfg = FigConfig { scale, ..Default::default() };
+    std::fs::create_dir_all(&cfg.out_dir).ok();
+    figures::fig2_or_fig4(&cfg, false);
+}

@@ -1,0 +1,10 @@
+//! Bench target: Figures 5-6 — per-example stop-position histograms on
+//! Adult/Nomao at the ≈0.5%-diff operating point.
+use qwyc::experiments::{figures, FigConfig};
+
+fn main() {
+    let scale = std::env::var("QWYC_BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(0.1);
+    let cfg = FigConfig { scale, ..Default::default() };
+    std::fs::create_dir_all(&cfg.out_dir).ok();
+    figures::fig5_fig6(&cfg);
+}

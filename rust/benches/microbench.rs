@@ -1,0 +1,115 @@
+//! Microbenchmarks for the hot paths (the §Perf profiling targets):
+//!   - lattice single-eval contraction (d = 8 and 13)
+//!   - GBT tree walk
+//!   - QWYC early-exit eval_single vs full evaluation
+//!   - Algorithm-2 threshold search (the inner loop of Algorithm 1)
+//!   - PJRT stage execution (per-batch and per-example amortized)
+
+use qwyc::data::synth::{generate, Which};
+use qwyc::ensemble::BaseModel;
+use qwyc::gbt::{train as gbt_train, GbtParams};
+use qwyc::lattice::{train_joint, LatticeParams};
+use qwyc::qwyc::thresholds::{optimize_position, Search};
+use qwyc::qwyc::{optimize_order, QwycConfig};
+use qwyc::util::rng::Rng;
+use qwyc::util::timer::{bench_auto, black_box};
+use std::time::Duration;
+
+fn main() {
+    let budget = Duration::from_millis(200);
+    let runs = 5;
+    println!("== microbench (1 core, {runs} runs each) ==\n");
+
+    // ---- lattice contraction --------------------------------------
+    for d in [8usize, 13] {
+        let mut rng = Rng::new(1);
+        let feats: Vec<usize> = (0..d).collect();
+        let theta: Vec<f32> = (0..1 << d).map(|_| rng.normal() as f32).collect();
+        let lat = qwyc::lattice::Lattice::from_params(feats, theta);
+        let x: Vec<f32> = (0..d).map(|_| rng.f32()).collect();
+        let mut buf = vec![0f32; 1 << d];
+        let r = bench_auto(&format!("lattice eval d={d} (2^{d} vertices)"), budget, runs, || {
+            black_box(lat.eval_with_scratch(black_box(&x), &mut buf));
+        });
+        println!("{}", r.report());
+    }
+
+    // ---- GBT tree walk ---------------------------------------------
+    let (tr, _) = generate(Which::AdultLike, 2, 0.05);
+    let (gbt, _) = gbt_train(&tr, &GbtParams { n_trees: 50, max_depth: 5, ..Default::default() });
+    let x = tr.row(17).to_vec();
+    if let BaseModel::Tree(t0) = &gbt.models[0] {
+        let r = bench_auto("gbt tree walk (depth 5)", budget, runs, || {
+            black_box(t0.eval(black_box(&x)));
+        });
+        println!("{}", r.report());
+    }
+
+    // ---- early-exit vs full evaluation ------------------------------
+    let sm = gbt.score_matrix(&tr);
+    let fc = optimize_order(&sm, &QwycConfig { alpha: 0.005, ..Default::default() });
+    let full = qwyc::qwyc::FastClassifier::no_early_stop(fc.order.clone(), fc.bias, fc.beta);
+    let mut i = 0usize;
+    let r = bench_auto("qwyc eval_single (T=50 gbt)", budget, runs, || {
+        i = (i + 1) % tr.n;
+        black_box(fc.eval_single(&gbt, tr.row(i)));
+    });
+    println!("{}", r.report());
+    let r2 = bench_auto("full eval_single (T=50 gbt)", budget, runs, || {
+        i = (i + 1) % tr.n;
+        black_box(full.eval_single(&gbt, tr.row(i)));
+    });
+    println!("{}", r2.report());
+    println!("  -> early-exit speedup: {:.2}x\n", r2.mean_ns / r.mean_ns);
+
+    // ---- threshold search (Algorithm 1 inner loop) -------------------
+    let mut rng = Rng::new(3);
+    for n in [1_000usize, 10_000, 100_000] {
+        let g: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let fp: Vec<bool> = (0..n).map(|_| rng.bool(0.4)).collect();
+        let mut scratch = Vec::with_capacity(n);
+        let r = bench_auto(&format!("alg2 threshold search n={n}"), budget, runs, || {
+            black_box(optimize_position(
+                black_box(&g),
+                &fp,
+                n / 200,
+                false,
+                Search::Exact,
+                &mut scratch,
+            ));
+        });
+        println!("{}", r.report());
+    }
+
+    // ---- PJRT stage (needs artifacts) --------------------------------
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        use qwyc::runtime::engine::Engine;
+        let (tr2, _) = generate(Which::Rw2Like, 77, 0.01);
+        let project = |ds: &qwyc::data::Dataset| {
+            let mut out = qwyc::data::Dataset::new("demo4", 4);
+            for i in 0..ds.n {
+                let r = ds.row(i);
+                out.push(&[r[0], r[7], r[14], r[21]], ds.y[i]);
+            }
+            out
+        };
+        let tr2 = project(&tr2);
+        let (ens, _) = train_joint(
+            &tr2,
+            &LatticeParams { n_lattices: 4, dim: 3, steps: 60, ..Default::default() },
+        );
+        let smd = ens.score_matrix(&tr2);
+        let fcd = optimize_order(&smd, &QwycConfig { alpha: 0.01, ..Default::default() });
+        let rt = qwyc::runtime::Runtime::open(std::path::Path::new("artifacts")).unwrap();
+        let mut engine = qwyc::runtime::engine::PjrtEngine::new(rt, "demo_stage", &ens, &fcd).unwrap();
+        let b = 8 * 4; // compiled B=8, D=4
+        let xb: Vec<f32> = tr2.x[..b].to_vec();
+        let r = bench_auto("pjrt demo_stage batch (B=8,T=4,d=3)", budget, runs, || {
+            black_box(engine.classify_batch(black_box(&xb), 8).unwrap());
+        });
+        println!("{}", r.report());
+        println!("  -> per-example amortized: {:.3} us", r.mean_us() / 8.0);
+    } else {
+        println!("(skipping pjrt stage bench: run `make artifacts`)");
+    }
+}

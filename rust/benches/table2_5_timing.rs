@@ -1,0 +1,13 @@
+//! Bench target: Tables 2-5 — wall-clock evaluation-time comparison
+//! (Full vs QWYC vs Fan) at ~0.5% classification differences for the four
+//! real-world experiments. QWYC_BENCH_RUNS controls timing repeats
+//! (paper: 100; default here 5).
+use qwyc::experiments::{tables, FigConfig};
+
+fn main() {
+    let scale = std::env::var("QWYC_BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(0.05);
+    let runs = std::env::var("QWYC_BENCH_RUNS").ok().and_then(|s| s.parse().ok()).unwrap_or(5);
+    let cfg = FigConfig { scale, ..Default::default() };
+    std::fs::create_dir_all(&cfg.out_dir).ok();
+    tables::tables_2_to_5(&cfg, runs, 2000);
+}

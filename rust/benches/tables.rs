@@ -1,0 +1,7 @@
+//! Bench target: Table 1 (dataset/ensemble summary). `cargo bench --bench tables`
+use qwyc::experiments::tables;
+
+fn main() {
+    let scale = std::env::var("QWYC_BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(1.0);
+    tables::table1(scale);
+}

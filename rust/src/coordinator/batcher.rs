@@ -1,0 +1,95 @@
+//! Dynamic batcher: collects requests from the router queue into batches
+//! bounded by `max_batch` size and `max_wait` latency (the standard
+//! serving tradeoff — larger batches amortize per-call overhead on the
+//! PJRT path, smaller ones bound tail latency).
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 256, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// Collect the next batch from `rx`. Blocks for the first item, then
+/// drains until the batch is full or `max_wait` has elapsed since the
+/// first item arrived. Returns `None` when the channel is closed and
+/// empty (shutdown).
+pub fn next_batch<T>(rx: &Receiver<T>, policy: BatchPolicy) -> Option<Vec<T>> {
+    let first = rx.recv().ok()?;
+    let mut batch = Vec::with_capacity(policy.max_batch.min(64));
+    batch.push(first);
+    let deadline = Instant::now() + policy.max_wait;
+    while batch.len() < policy.max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(item) => batch.push(item),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    Some(batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    #[test]
+    fn collects_up_to_max_batch() {
+        let (tx, rx) = mpsc::channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(50) };
+        let b = next_batch(&rx, policy).unwrap();
+        assert_eq!(b, vec![0, 1, 2, 3]);
+        let b = next_batch(&rx, policy).unwrap();
+        assert_eq!(b, vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn returns_partial_batch_after_wait() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        let policy = BatchPolicy { max_batch: 100, max_wait: Duration::from_millis(5) };
+        let start = Instant::now();
+        let b = next_batch(&rx, policy).unwrap();
+        assert_eq!(b, vec![1, 2]);
+        assert!(start.elapsed() < Duration::from_millis(500));
+    }
+
+    #[test]
+    fn none_on_closed_channel() {
+        let (tx, rx) = mpsc::channel::<u32>();
+        drop(tx);
+        assert!(next_batch(&rx, BatchPolicy::default()).is_none());
+    }
+
+    #[test]
+    fn blocks_for_first_then_batches_stragglers() {
+        let (tx, rx) = mpsc::channel();
+        let handle = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            tx.send(7).unwrap();
+            tx.send(8).unwrap();
+        });
+        let policy = BatchPolicy { max_batch: 10, max_wait: Duration::from_millis(20) };
+        let b = next_batch(&rx, policy).unwrap();
+        assert!(!b.is_empty() && b[0] == 7);
+        handle.join().unwrap();
+    }
+}

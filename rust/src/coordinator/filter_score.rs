@@ -1,0 +1,135 @@
+//! Filter-and-Score pipeline (paper §3.1 "Filtering Candidates" and the
+//! real-world experiments): reject the heavy-negative bulk quickly with
+//! early-negative thresholds only; every example classified positive
+//! receives its FULL ensemble score (later pipeline stages rank them), so
+//! positives are always fully evaluated.
+
+use crate::ensemble::Ensemble;
+use crate::qwyc::FastClassifier;
+
+/// Result of pushing one candidate through the pipeline.
+#[derive(Clone, Copy, Debug)]
+pub enum FilterOutcome {
+    /// Rejected early after evaluating `models` base models.
+    Rejected { models: u32 },
+    /// Survived the filter: full score attached (all T models evaluated).
+    Scored { score: f32 },
+}
+
+/// Aggregate pipeline statistics.
+#[derive(Clone, Debug, Default)]
+pub struct FilterStats {
+    pub total: usize,
+    pub rejected: usize,
+    pub scored: usize,
+    pub mean_models: f64,
+}
+
+/// Filter-and-score one batch of candidates. `fc` must be a neg-only
+/// classifier (its ε⁺ are all +∞); this is validated on construction.
+pub struct FilterPipeline {
+    pub ensemble: Ensemble,
+    pub fc: FastClassifier,
+}
+
+impl FilterPipeline {
+    pub fn new(ensemble: Ensemble, fc: FastClassifier) -> Result<FilterPipeline, String> {
+        fc.validate()?;
+        if fc.eps_pos.iter().any(|&e| e != f32::INFINITY) {
+            return Err("filter pipeline requires a neg-only classifier (eps_pos ≡ +inf)".into());
+        }
+        if ensemble.len() != fc.t() {
+            return Err("ensemble/classifier size mismatch".into());
+        }
+        Ok(FilterPipeline { ensemble, fc })
+    }
+
+    pub fn run_one(&self, x: &[f32]) -> FilterOutcome {
+        let r = self.fc.eval_single(&self.ensemble, x);
+        if r.early {
+            // Early exit in a neg-only classifier is always a rejection.
+            debug_assert!(!r.positive);
+            FilterOutcome::Rejected { models: r.models_evaluated as u32 }
+        } else if r.positive {
+            FilterOutcome::Scored { score: r.score }
+        } else {
+            // Fully evaluated and still negative: rejected, full cost.
+            FilterOutcome::Rejected { models: r.models_evaluated as u32 }
+        }
+    }
+
+    /// Run a dataset through the filter; returns (stats, scored
+    /// candidates as (row index, full score), ready for ranking).
+    pub fn run_batch(&self, x: &[f32], n: usize) -> (FilterStats, Vec<(usize, f32)>) {
+        let d = self.ensemble.models.first().map(|_| x.len() / n.max(1)).unwrap_or(0);
+        let mut stats = FilterStats { total: n, ..Default::default() };
+        let mut scored = Vec::new();
+        let mut models_sum = 0u64;
+        for i in 0..n {
+            match self.run_one(&x[i * d..(i + 1) * d]) {
+                FilterOutcome::Rejected { models } => {
+                    stats.rejected += 1;
+                    models_sum += models as u64;
+                }
+                FilterOutcome::Scored { score } => {
+                    stats.scored += 1;
+                    models_sum += self.ensemble.len() as u64;
+                    scored.push((i, score));
+                }
+            }
+        }
+        stats.mean_models = models_sum as f64 / n.max(1) as f64;
+        // Rank survivors by score, best first (the downstream consumer).
+        scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        (stats, scored)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, Which};
+    use crate::lattice::{train_joint, LatticeParams};
+    use crate::qwyc::{optimize_order, QwycConfig};
+
+    fn setup() -> (crate::data::Dataset, FilterPipeline) {
+        let (tr, te) = generate(Which::Rw1Like, 41, 0.005);
+        let (ens, _) = train_joint(
+            &tr,
+            &LatticeParams { n_lattices: 5, dim: 6, steps: 150, ..Default::default() },
+        );
+        let sm = ens.score_matrix(&tr);
+        let cfg = QwycConfig { alpha: 0.005, neg_only: true, ..Default::default() };
+        let fc = optimize_order(&sm, &cfg);
+        (te, FilterPipeline::new(ens, fc).unwrap())
+    }
+
+    #[test]
+    fn rejects_bulk_and_scores_survivors_fully() {
+        let (te, pipe) = setup();
+        let (stats, scored) = pipe.run_batch(&te.x, te.n);
+        assert_eq!(stats.total, te.n);
+        assert_eq!(stats.rejected + stats.scored, te.n);
+        // Heavy-negative prior ⇒ most candidates rejected.
+        assert!(stats.rejected as f64 > 0.6 * te.n as f64, "rejected {}", stats.rejected);
+        // Survivor scores must equal the full ensemble score.
+        for &(i, score) in scored.iter().take(20) {
+            let full = pipe.ensemble.eval_full(te.row(i));
+            assert!((score - full).abs() < 1e-5);
+            assert!(full >= pipe.ensemble.beta);
+        }
+        // Sorted descending.
+        assert!(scored.windows(2).all(|w| w[0].1 >= w[1].1));
+        // Early rejection means mean models < T.
+        assert!(stats.mean_models < pipe.ensemble.len() as f64);
+    }
+
+    #[test]
+    fn rejects_pos_threshold_classifiers() {
+        let (_, pipe) = setup();
+        let mut fc = pipe.fc.clone();
+        fc.eps_pos[0] = 0.0;
+        fc.eps_neg[0] = fc.eps_neg[0].min(0.0);
+        assert!(FilterPipeline::new(pipe.ensemble.clone(), fc).is_err());
+    }
+}

@@ -1,0 +1,114 @@
+//! Serving metrics: latency histogram, models-evaluated accounting,
+//! early-exit ratio, throughput. Shared across worker/connection threads.
+
+use crate::util::stats::LatencyHist;
+use std::sync::Mutex;
+use std::time::Instant;
+
+#[derive(Debug, Default)]
+struct Inner {
+    latency: LatencyHist,
+    batch_sizes: Vec<u64>,
+    models_sum: u64,
+    early: u64,
+    requests: u64,
+}
+
+/// Thread-safe metrics sink.
+pub struct Metrics {
+    inner: Mutex<Inner>,
+    started: Instant,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics { inner: Mutex::new(Inner::default()), started: Instant::now() }
+    }
+
+    pub fn record_request(&self, latency_ns: u64, models: u32, early: bool) {
+        let mut m = self.inner.lock().unwrap();
+        m.latency.record_ns(latency_ns);
+        m.models_sum += models as u64;
+        m.early += early as u64;
+        m.requests += 1;
+    }
+
+    pub fn record_batch(&self, size: usize) {
+        self.inner.lock().unwrap().batch_sizes.push(size as u64);
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let m = self.inner.lock().unwrap();
+        let n = m.requests.max(1) as f64;
+        Snapshot {
+            requests: m.requests,
+            mean_latency_us: m.latency.mean_ns() / 1e3,
+            p50_latency_us: m.latency.percentile_ns(50.0) / 1e3,
+            p99_latency_us: m.latency.percentile_ns(99.0) / 1e3,
+            mean_models: m.models_sum as f64 / n,
+            early_frac: m.early as f64 / n,
+            mean_batch: if m.batch_sizes.is_empty() {
+                0.0
+            } else {
+                m.batch_sizes.iter().sum::<u64>() as f64 / m.batch_sizes.len() as f64
+            },
+            throughput_rps: m.requests as f64 / self.started.elapsed().as_secs_f64().max(1e-9),
+        }
+    }
+}
+
+/// Point-in-time metrics view.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    pub requests: u64,
+    pub mean_latency_us: f64,
+    pub p50_latency_us: f64,
+    pub p99_latency_us: f64,
+    pub mean_models: f64,
+    pub early_frac: f64,
+    pub mean_batch: f64,
+    pub throughput_rps: f64,
+}
+
+impl Snapshot {
+    pub fn report(&self) -> String {
+        format!(
+            "requests={} throughput={:.0}/s latency(mean/p50/p99)={:.1}/{:.1}/{:.1}us \
+             mean_models={:.2} early={:.1}% mean_batch={:.1}",
+            self.requests,
+            self.throughput_rps,
+            self.mean_latency_us,
+            self.p50_latency_us,
+            self.p99_latency_us,
+            self.mean_models,
+            self.early_frac * 100.0,
+            self.mean_batch
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots() {
+        let m = Metrics::new();
+        m.record_request(1_000, 3, true);
+        m.record_request(3_000, 5, false);
+        m.record_batch(2);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 2);
+        assert!((s.mean_models - 4.0).abs() < 1e-9);
+        assert!((s.early_frac - 0.5).abs() < 1e-9);
+        assert!((s.mean_latency_us - 2.0).abs() < 0.1);
+        assert!((s.mean_batch - 2.0).abs() < 1e-9);
+        assert!(!s.report().is_empty());
+    }
+}

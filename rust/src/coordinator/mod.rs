@@ -1,0 +1,14 @@
+//! L3 serving coordinator: request routing, dynamic batching, early-exit
+//! scheduling, metrics, and the TCP front-end. The QWYC fast classifier is
+//! the scheduling policy: a batch walks the optimized order and examples
+//! retire the moment their running score clears a threshold.
+
+pub mod batcher;
+pub mod filter_score;
+pub mod metrics;
+pub mod server;
+
+pub use batcher::BatchPolicy;
+pub use filter_score::{FilterOutcome, FilterPipeline, FilterStats};
+pub use metrics::{Metrics, Snapshot};
+pub use server::{Client, EvalResponse, Server};

@@ -1,0 +1,318 @@
+//! TCP serving front-end: line protocol, connection handling, and the
+//! worker loop that owns the engine. Requests flow
+//!
+//!   conn thread → router channel → batcher → engine.classify_batch
+//!     → per-request response channel → conn thread → client
+//!
+//! Responses stream back as soon as their example is decided — an
+//! early-exit example does not wait for the rest of its batch's full
+//! evaluation path (no tokio offline; plain threads + mpsc, see
+//! DESIGN.md §4).
+//!
+//! Protocol (one line per message):
+//!   client → server:  EVAL <id> <f1>,<f2>,...      classify one example
+//!                     STATS                         metrics snapshot
+//!                     QUIT                          close connection
+//!   server → client:  OK <id> <pos|neg> <score> <models> <latency_us>
+//!                     STATS <report...>
+//!                     ERR <message>
+
+use super::batcher::{next_batch, BatchPolicy};
+use super::metrics::Metrics;
+use crate::runtime::engine::Engine;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Sender};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// One in-flight request.
+struct Request {
+    id: u64,
+    features: Vec<f32>,
+    enqueued: Instant,
+    respond: Sender<String>,
+}
+
+/// Server handle: address, shutdown flag, worker/acceptor joins.
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    pub metrics: Arc<Metrics>,
+    shutdown: Arc<AtomicBool>,
+    acceptor: Option<std::thread::JoinHandle<()>>,
+    worker: Option<std::thread::JoinHandle<()>>,
+    /// Live connection streams; shut down on stop so connection threads
+    /// (which hold request-channel senders) exit and the worker drains.
+    conns: Arc<std::sync::Mutex<Vec<TcpStream>>>,
+}
+
+impl Server {
+    /// Start serving on `bind_addr` (e.g. "127.0.0.1:0"). The engine is
+    /// built by `engine_factory` *inside* the worker thread — PJRT
+    /// handles are not `Send`, so the engine must be born where it lives.
+    pub fn start<F>(bind_addr: &str, engine_factory: F, policy: BatchPolicy) -> std::io::Result<Server>
+    where
+        F: FnOnce() -> Box<dyn Engine> + Send + 'static,
+    {
+        let listener = TcpListener::bind(bind_addr)?;
+        let addr = listener.local_addr()?;
+        let metrics = Arc::new(Metrics::new());
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let (tx, rx) = mpsc::channel::<Request>();
+
+        // Worker: owns the engine, consumes batches.
+        let worker_metrics = metrics.clone();
+        let worker = std::thread::spawn(move || {
+            let mut engine = engine_factory();
+            let d = engine.n_features();
+            let mut xbuf: Vec<f32> = Vec::new();
+            while let Some(batch) = next_batch(&rx, policy) {
+                worker_metrics.record_batch(batch.len());
+                xbuf.clear();
+                let mut ok = true;
+                for r in &batch {
+                    if r.features.len() != d {
+                        ok = false;
+                    }
+                    xbuf.extend_from_slice(&r.features);
+                }
+                if !ok {
+                    for r in &batch {
+                        let _ = r.respond.send(format!(
+                            "ERR request {} has wrong feature count (want {d})",
+                            r.id
+                        ));
+                    }
+                    continue;
+                }
+                match engine.classify_batch(&xbuf, batch.len()) {
+                    Ok(outcomes) => {
+                        for (r, o) in batch.iter().zip(outcomes.iter()) {
+                            let lat = r.enqueued.elapsed().as_nanos() as u64;
+                            worker_metrics.record_request(lat, o.models_evaluated, o.early);
+                            let _ = r.respond.send(format!(
+                                "OK {} {} {:.6} {} {}",
+                                r.id,
+                                if o.positive { "pos" } else { "neg" },
+                                o.score,
+                                o.models_evaluated,
+                                lat / 1_000
+                            ));
+                        }
+                    }
+                    Err(e) => {
+                        for r in &batch {
+                            let _ = r.respond.send(format!("ERR engine: {e}"));
+                        }
+                    }
+                }
+            }
+        });
+
+        // Acceptor: one thread per connection (serving fan-in is small;
+        // the engine worker is the throughput bottleneck by design).
+        let conns: Arc<std::sync::Mutex<Vec<TcpStream>>> = Arc::new(std::sync::Mutex::new(Vec::new()));
+        let acc_shutdown = shutdown.clone();
+        let acc_metrics = metrics.clone();
+        let acc_conns = conns.clone();
+        let acceptor = std::thread::spawn(move || {
+            listener.set_nonblocking(true).ok();
+            loop {
+                if acc_shutdown.load(Ordering::Relaxed) {
+                    break;
+                }
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        stream.set_nonblocking(false).ok();
+                        if let Ok(dup) = stream.try_clone() {
+                            acc_conns.lock().unwrap().push(dup);
+                        }
+                        let tx = tx.clone();
+                        let m = acc_metrics.clone();
+                        std::thread::spawn(move || handle_conn(stream, tx, m));
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(1));
+                    }
+                    Err(_) => break,
+                }
+            }
+            // tx drops here → once connection threads exit too, the worker
+            // channel disconnects and the worker drains.
+        });
+
+        Ok(Server { addr, metrics, shutdown, acceptor: Some(acceptor), worker: Some(worker), conns })
+    }
+
+    /// Signal shutdown, sever open connections, and join threads.
+    pub fn stop(mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+        // Force connection reader loops to end so their request senders
+        // drop; otherwise the worker would wait on clients that outlive
+        // the server handle.
+        for c in self.conns.lock().unwrap().drain(..) {
+            let _ = c.shutdown(std::net::Shutdown::Both);
+        }
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, tx: Sender<Request>, metrics: Arc<Metrics>) {
+    let peer_write = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let writer = std::io::BufWriter::new(peer_write);
+    let reader = BufReader::new(stream);
+    // Response pump: a dedicated channel per connection keeps ordering
+    // per-client while letting the worker answer out of batch order.
+    let (resp_tx, resp_rx) = mpsc::channel::<String>();
+    let pump = std::thread::spawn(move || {
+        let mut w = writer;
+        while let Ok(line) = resp_rx.recv() {
+            if w.write_all(line.as_bytes()).is_err() || w.write_all(b"\n").is_err() {
+                break;
+            }
+            let _ = w.flush();
+        }
+    });
+
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break,
+        };
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut parts = line.splitn(3, ' ');
+        match parts.next() {
+            Some("EVAL") => {
+                let id = parts.next().and_then(|s| s.parse::<u64>().ok());
+                let feats: Option<Vec<f32>> = parts
+                    .next()
+                    .map(|s| s.split(',').map(|t| t.trim().parse::<f32>()).collect::<Result<_, _>>())
+                    .transpose()
+                    .ok()
+                    .flatten();
+                match (id, feats) {
+                    (Some(id), Some(features)) => {
+                        let req = Request {
+                            id,
+                            features,
+                            enqueued: Instant::now(),
+                            respond: resp_tx.clone(),
+                        };
+                        if tx.send(req).is_err() {
+                            let _ = resp_tx.send("ERR server shutting down".into());
+                        }
+                    }
+                    _ => {
+                        let _ = resp_tx.send("ERR malformed EVAL".into());
+                    }
+                }
+            }
+            Some("STATS") => {
+                let _ = resp_tx.send(format!("STATS {}", metrics.snapshot().report()));
+            }
+            Some("QUIT") => break,
+            _ => {
+                let _ = resp_tx.send("ERR unknown command".into());
+            }
+        }
+    }
+    drop(resp_tx);
+    let _ = pump.join();
+}
+
+/// Minimal blocking client for tests/examples/load generators.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    next_id: u64,
+}
+
+/// Parsed server response to an EVAL.
+#[derive(Clone, Debug)]
+pub struct EvalResponse {
+    pub id: u64,
+    pub positive: bool,
+    pub score: f32,
+    pub models: u32,
+    pub latency_us: u64,
+}
+
+impl Client {
+    pub fn connect(addr: &std::net::SocketAddr) -> std::io::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        let writer = stream.try_clone()?;
+        Ok(Client { reader: BufReader::new(stream), writer, next_id: 0 })
+    }
+
+    /// Send one EVAL (does not wait for the response).
+    pub fn send_eval(&mut self, features: &[f32]) -> std::io::Result<u64> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let feats: Vec<String> = features.iter().map(|v| format!("{v}")).collect();
+        writeln!(self.writer, "EVAL {id} {}", feats.join(","))?;
+        Ok(id)
+    }
+
+    /// Read one response line (blocking).
+    pub fn read_response(&mut self) -> std::io::Result<EvalResponse> {
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        parse_eval_response(line.trim())
+            .ok_or_else(|| std::io::Error::new(std::io::ErrorKind::InvalidData, line))
+    }
+
+    /// Convenience: send and wait.
+    pub fn eval(&mut self, features: &[f32]) -> std::io::Result<EvalResponse> {
+        self.send_eval(features)?;
+        self.read_response()
+    }
+
+    pub fn stats(&mut self) -> std::io::Result<String> {
+        writeln!(self.writer, "STATS")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Ok(line.trim().to_string())
+    }
+}
+
+fn parse_eval_response(line: &str) -> Option<EvalResponse> {
+    let mut p = line.split(' ');
+    if p.next()? != "OK" {
+        return None;
+    }
+    Some(EvalResponse {
+        id: p.next()?.parse().ok()?,
+        positive: p.next()? == "pos",
+        score: p.next()?.parse().ok()?,
+        models: p.next()?.parse().ok()?,
+        latency_us: p.next()?.parse().ok()?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_response_roundtrip() {
+        let r = parse_eval_response("OK 42 pos 1.250000 7 133").unwrap();
+        assert_eq!(r.id, 42);
+        assert!(r.positive);
+        assert_eq!(r.models, 7);
+        assert_eq!(r.latency_us, 133);
+        assert!(parse_eval_response("ERR nope").is_none());
+    }
+}

@@ -1,0 +1,104 @@
+//! CSV load/save for [`Dataset`] — lets users bring their own data to the
+//! CLI (`qwyc train --data file.csv`) and lets experiments cache generated
+//! datasets. Format: header `f0,...,f{d-1},label`, one row per example.
+
+use super::dataset::Dataset;
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+pub fn save(ds: &Dataset, path: &Path) -> std::io::Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    let header: Vec<String> = (0..ds.d).map(|j| format!("f{j}")).collect();
+    writeln!(w, "{},label", header.join(","))?;
+    for i in 0..ds.n {
+        let row: Vec<String> = ds.row(i).iter().map(|v| format!("{v}")).collect();
+        writeln!(w, "{},{}", row.join(","), ds.y[i])?;
+    }
+    Ok(())
+}
+
+pub fn load(path: &Path) -> Result<Dataset, String> {
+    let f = std::fs::File::open(path).map_err(|e| format!("open {path:?}: {e}"))?;
+    let mut lines = std::io::BufReader::new(f).lines();
+    let header = lines
+        .next()
+        .ok_or("empty csv")?
+        .map_err(|e| e.to_string())?;
+    let cols: Vec<&str> = header.split(',').collect();
+    if cols.last() != Some(&"label") {
+        return Err("csv must end with a 'label' column".into());
+    }
+    let d = cols.len() - 1;
+    let name = path
+        .file_stem()
+        .map(|s| s.to_string_lossy().to_string())
+        .unwrap_or_else(|| "csv".into());
+    let mut ds = Dataset::new(&name, d);
+    let mut feats = vec![0f32; d];
+    for (lineno, line) in lines.enumerate() {
+        let line = line.map_err(|e| e.to_string())?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let mut parts = line.split(',');
+        for (j, slot) in feats.iter_mut().enumerate() {
+            let tok = parts
+                .next()
+                .ok_or_else(|| format!("line {}: missing column {j}", lineno + 2))?;
+            *slot = tok
+                .trim()
+                .parse::<f32>()
+                .map_err(|e| format!("line {}: col {j}: {e}", lineno + 2))?;
+        }
+        let label_tok = parts
+            .next()
+            .ok_or_else(|| format!("line {}: missing label", lineno + 2))?;
+        let label: f32 = label_tok
+            .trim()
+            .parse()
+            .map_err(|e| format!("line {}: label: {e}", lineno + 2))?;
+        if parts.next().is_some() {
+            return Err(format!("line {}: too many columns", lineno + 2));
+        }
+        if label != 0.0 && label != 1.0 {
+            return Err(format!("line {}: label must be 0 or 1, got {label}", lineno + 2));
+        }
+        ds.push(&feats, label);
+    }
+    Ok(ds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut ds = Dataset::new("rt", 3);
+        ds.push(&[1.0, 2.5, -0.125], 1.0);
+        ds.push(&[0.0, -1.0, 9.0], 0.0);
+        let dir = std::env::temp_dir().join("qwyc_csv_test");
+        let path = dir.join("rt.csv");
+        save(&ds, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.n, 2);
+        assert_eq!(back.d, 3);
+        assert_eq!(back.x, ds.x);
+        assert_eq!(back.y, ds.y);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_label() {
+        let dir = std::env::temp_dir().join("qwyc_csv_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.csv");
+        std::fs::write(&path, "f0,label\n1.0,2.0\n").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,161 @@
+//! Core dataset representation: a dense row-major feature matrix plus
+//! binary labels. All generators and trainers work against this type.
+
+use crate::util::rng::Rng;
+
+/// A labeled binary-classification dataset. Features are f32, row-major
+/// (`x[i*d .. (i+1)*d]` is example i); labels are 0.0 / 1.0.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub n: usize,
+    pub d: usize,
+    pub x: Vec<f32>,
+    pub y: Vec<f32>,
+}
+
+impl Dataset {
+    pub fn new(name: &str, d: usize) -> Self {
+        Dataset { name: name.to_string(), n: 0, d, x: Vec::new(), y: Vec::new() }
+    }
+
+    pub fn with_capacity(name: &str, d: usize, n: usize) -> Self {
+        Dataset {
+            name: name.to_string(),
+            n: 0,
+            d,
+            x: Vec::with_capacity(n * d),
+            y: Vec::with_capacity(n),
+        }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.d..(i + 1) * self.d]
+    }
+
+    pub fn push(&mut self, features: &[f32], label: f32) {
+        debug_assert_eq!(features.len(), self.d);
+        self.x.extend_from_slice(features);
+        self.y.push(label);
+        self.n += 1;
+    }
+
+    /// Fraction of positive labels.
+    pub fn positive_rate(&self) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        self.y.iter().map(|&v| v as f64).sum::<f64>() / self.n as f64
+    }
+
+    /// Deterministic shuffled split into (train, test) with `test_frac` of
+    /// rows in the test set — the paper's 80-20 protocol.
+    pub fn split(&self, test_frac: f64, seed: u64) -> (Dataset, Dataset) {
+        let mut rng = Rng::new(seed);
+        let perm = rng.permutation(self.n);
+        let n_test = (self.n as f64 * test_frac).round() as usize;
+        let mut train = Dataset::with_capacity(&format!("{}-train", self.name), self.d, self.n - n_test);
+        let mut test = Dataset::with_capacity(&format!("{}-test", self.name), self.d, n_test);
+        for (pos, &i) in perm.iter().enumerate() {
+            let target = if pos < n_test { &mut test } else { &mut train };
+            target.push(self.row(i), self.y[i]);
+        }
+        (train, test)
+    }
+
+    /// First-`k`-rows subsample (rows are already generator-shuffled).
+    pub fn take(&self, k: usize) -> Dataset {
+        let k = k.min(self.n);
+        let mut out = Dataset::with_capacity(&self.name, self.d, k);
+        for i in 0..k {
+            out.push(self.row(i), self.y[i]);
+        }
+        out
+    }
+
+    /// Random subsample of `k` rows.
+    pub fn subsample(&self, k: usize, seed: u64) -> Dataset {
+        let k = k.min(self.n);
+        let mut rng = Rng::new(seed);
+        let idx = rng.choose_k(self.n, k);
+        let mut out = Dataset::with_capacity(&self.name, self.d, k);
+        for &i in &idx {
+            out.push(self.row(i), self.y[i]);
+        }
+        out
+    }
+
+    /// Per-feature (min, max) — used by binners and lattice scaling.
+    pub fn feature_ranges(&self) -> Vec<(f32, f32)> {
+        let mut r = vec![(f32::INFINITY, f32::NEG_INFINITY); self.d];
+        for i in 0..self.n {
+            for (j, &v) in self.row(i).iter().enumerate() {
+                r[j].0 = r[j].0.min(v);
+                r[j].1 = r[j].1.max(v);
+            }
+        }
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy(n: usize, d: usize) -> Dataset {
+        let mut ds = Dataset::new("toy", d);
+        for i in 0..n {
+            let feats: Vec<f32> = (0..d).map(|j| (i * d + j) as f32).collect();
+            ds.push(&feats, (i % 2) as f32);
+        }
+        ds
+    }
+
+    #[test]
+    fn push_and_row() {
+        let ds = toy(10, 3);
+        assert_eq!(ds.n, 10);
+        assert_eq!(ds.row(4), &[12.0, 13.0, 14.0]);
+        assert!((ds.positive_rate() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn split_partitions_exactly() {
+        let ds = toy(100, 2);
+        let (tr, te) = ds.split(0.2, 1);
+        assert_eq!(tr.n, 80);
+        assert_eq!(te.n, 20);
+        // Union of first-feature values must be the full set.
+        let mut vals: Vec<f32> = tr.x.iter().step_by(2).chain(te.x.iter().step_by(2)).copied().collect();
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let expect: Vec<f32> = (0..100).map(|i| (i * 2) as f32).collect();
+        assert_eq!(vals, expect);
+    }
+
+    #[test]
+    fn split_is_deterministic() {
+        let ds = toy(50, 2);
+        let (a, _) = ds.split(0.2, 7);
+        let (b, _) = ds.split(0.2, 7);
+        assert_eq!(a.x, b.x);
+        let (c, _) = ds.split(0.2, 8);
+        assert_ne!(a.x, c.x);
+    }
+
+    #[test]
+    fn ranges() {
+        let ds = toy(5, 2);
+        let r = ds.feature_ranges();
+        assert_eq!(r[0], (0.0, 8.0));
+        assert_eq!(r[1], (1.0, 9.0));
+    }
+
+    #[test]
+    fn subsample_sizes() {
+        let ds = toy(50, 2);
+        assert_eq!(ds.subsample(10, 1).n, 10);
+        assert_eq!(ds.subsample(500, 1).n, 50);
+        assert_eq!(ds.take(7).n, 7);
+    }
+}

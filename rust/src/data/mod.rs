@@ -1,0 +1,10 @@
+//! Dataset substrate: representation, CSV interchange, and deterministic
+//! synthetic generators standing in for the paper's four datasets
+//! (DESIGN.md §4 documents each substitution).
+
+pub mod csv;
+pub mod dataset;
+pub mod synth;
+
+pub use dataset::Dataset;
+pub use synth::{generate, Which};

@@ -1,0 +1,245 @@
+//! Additive ensembles `f(x) = bias + Σ_t f_t(x)` — the object QWYC
+//! operates on. Base models are regression trees (benchmark experiments)
+//! or lattices (real-world experiments); both expose per-example scalar
+//! scores and a constant evaluation cost `c_t` (the paper models c_t = 1
+//! for both families; arbitrary costs are supported throughout).
+
+pub mod scores;
+
+use crate::data::Dataset;
+use crate::gbt::tree::Tree;
+use crate::lattice::model::Lattice;
+use crate::util::json::Json;
+
+pub use scores::ScoreMatrix;
+
+/// A single base model.
+#[derive(Clone, Debug)]
+pub enum BaseModel {
+    Tree(Tree),
+    Lattice(Lattice),
+}
+
+impl BaseModel {
+    #[inline]
+    pub fn eval(&self, x: &[f32]) -> f32 {
+        match self {
+            BaseModel::Tree(t) => t.eval(x),
+            BaseModel::Lattice(l) => l.eval(x),
+        }
+    }
+
+    pub fn kind(&self) -> &'static str {
+        match self {
+            BaseModel::Tree(_) => "tree",
+            BaseModel::Lattice(_) => "lattice",
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        match self {
+            BaseModel::Tree(t) => Json::obj(vec![("kind", Json::str("tree")), ("model", t.to_json())]),
+            BaseModel::Lattice(l) => {
+                Json::obj(vec![("kind", Json::str("lattice")), ("model", l.to_json())])
+            }
+        }
+    }
+
+    fn from_json(v: &Json) -> Result<BaseModel, String> {
+        match v.req("kind")?.as_str()? {
+            "tree" => Ok(BaseModel::Tree(Tree::from_json(v.req("model")?)?)),
+            "lattice" => Ok(BaseModel::Lattice(Lattice::from_json(v.req("model")?)?)),
+            other => Err(format!("unknown base model kind '{other}'")),
+        }
+    }
+}
+
+/// An additive ensemble with a decision threshold β: classify positive iff
+/// `f(x) ≥ β` (the paper's convention in §3.1: P_full = {x | f(x) ≥ β}).
+#[derive(Clone, Debug)]
+pub struct Ensemble {
+    pub name: String,
+    pub models: Vec<BaseModel>,
+    /// Additive bias (GBT base score); folded into the running sum at t=0.
+    pub bias: f32,
+    /// Decision threshold β.
+    pub beta: f32,
+    /// Evaluation cost c_t per base model (paper: 1.0 for all).
+    pub costs: Vec<f32>,
+}
+
+impl Ensemble {
+    pub fn new(name: &str, models: Vec<BaseModel>, bias: f32, beta: f32) -> Self {
+        let costs = vec![1.0; models.len()];
+        Ensemble { name: name.to_string(), models, bias, beta, costs }
+    }
+
+    pub fn len(&self) -> usize {
+        self.models.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.models.is_empty()
+    }
+
+    /// Full-ensemble score.
+    pub fn eval_full(&self, x: &[f32]) -> f32 {
+        self.bias + self.models.iter().map(|m| m.eval(x)).sum::<f32>()
+    }
+
+    /// Full-ensemble classification decision.
+    #[inline]
+    pub fn classify_full(&self, x: &[f32]) -> bool {
+        self.eval_full(x) >= self.beta
+    }
+
+    /// Accuracy of the full ensemble on a dataset.
+    pub fn accuracy(&self, ds: &Dataset) -> f64 {
+        let mut correct = 0usize;
+        for i in 0..ds.n {
+            let pred = self.classify_full(ds.row(i));
+            if pred == (ds.y[i] > 0.5) {
+                correct += 1;
+            }
+        }
+        correct as f64 / ds.n.max(1) as f64
+    }
+
+    /// Precompute the N×T score matrix `F[i][t] = f_t(x_i)` that all
+    /// ordering/threshold optimizers and simulators consume.
+    pub fn score_matrix(&self, ds: &Dataset) -> ScoreMatrix {
+        let t = self.models.len();
+        let mut cols = vec![0f32; t * ds.n];
+        for (ti, m) in self.models.iter().enumerate() {
+            let col = &mut cols[ti * ds.n..(ti + 1) * ds.n];
+            match m {
+                // Batched lattice evaluation is substantially faster than
+                // row-at-a-time (see lattice::model::eval_batch).
+                BaseModel::Lattice(l) => l.eval_batch(ds, col),
+                BaseModel::Tree(tr) => {
+                    for (i, slot) in col.iter_mut().enumerate() {
+                        *slot = tr.eval(ds.row(i));
+                    }
+                }
+            }
+        }
+        ScoreMatrix::new(ds.n, t, cols, self.bias, self.beta, self.costs.clone())
+    }
+
+    /// Truncated ensemble containing only the first `k` models (used by the
+    /// "train a smaller ensemble" baseline in Figure 1 for GBTs, whose
+    /// prefix is itself a valid boosted model).
+    pub fn prefix(&self, k: usize) -> Ensemble {
+        Ensemble {
+            name: format!("{}-first{k}", self.name),
+            models: self.models[..k.min(self.models.len())].to_vec(),
+            bias: self.bias,
+            beta: self.beta,
+            costs: self.costs[..k.min(self.costs.len())].to_vec(),
+        }
+    }
+
+    // ---- serialization -------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("bias", Json::Num(self.bias as f64)),
+            ("beta", Json::Num(self.beta as f64)),
+            ("costs", Json::arr_f32(&self.costs)),
+            (
+                "models",
+                Json::Arr(self.models.iter().map(|m| m.to_json()).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Ensemble, String> {
+        let models = v
+            .req("models")?
+            .as_arr()?
+            .iter()
+            .map(BaseModel::from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+        let costs = v.req("costs")?.as_vec_f32()?;
+        if costs.len() != models.len() {
+            return Err("costs/models length mismatch".into());
+        }
+        Ok(Ensemble {
+            name: v.req("name")?.as_str()?.to_string(),
+            models,
+            bias: v.req("bias")?.as_f64()? as f32,
+            beta: v.req("beta")?.as_f64()? as f32,
+            costs,
+        })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
+        crate::util::json::write_file(path, &self.to_json())
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Ensemble, String> {
+        Ensemble::from_json(&crate::util::json::read_file(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lattice::model::Lattice;
+
+    fn toy_ensemble() -> Ensemble {
+        // Two 1-feature lattices: f0(x)=x0 (θ=[0,1]), f1(x)=1-x1 (θ=[1,0]).
+        let l0 = Lattice::from_params(vec![0], vec![0.0, 1.0]);
+        let l1 = Lattice::from_params(vec![1], vec![1.0, 0.0]);
+        Ensemble::new(
+            "toy",
+            vec![BaseModel::Lattice(l0), BaseModel::Lattice(l1)],
+            0.0,
+            1.0,
+        )
+    }
+
+    #[test]
+    fn eval_full_sums_models() {
+        let e = toy_ensemble();
+        let x = [0.25f32, 0.5];
+        // 0.25 + (1 - 0.5) = 0.75
+        assert!((e.eval_full(&x) - 0.75).abs() < 1e-6);
+        assert!(!e.classify_full(&x));
+        assert!(e.classify_full(&[1.0, 0.0]));
+    }
+
+    #[test]
+    fn score_matrix_matches_eval() {
+        let e = toy_ensemble();
+        let mut ds = Dataset::new("t", 2);
+        ds.push(&[0.1, 0.9], 0.0);
+        ds.push(&[0.8, 0.2], 1.0);
+        let sm = e.score_matrix(&ds);
+        for i in 0..ds.n {
+            for t in 0..e.len() {
+                assert!((sm.score(i, t) - e.models[t].eval(ds.row(i))).abs() < 1e-6);
+            }
+            assert!((sm.full_score(i) - e.eval_full(ds.row(i))).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let e = toy_ensemble();
+        let back = Ensemble::from_json(&e.to_json()).unwrap();
+        assert_eq!(back.len(), 2);
+        let x = [0.3f32, 0.6];
+        assert!((back.eval_full(&x) - e.eval_full(&x)).abs() < 1e-6);
+        assert_eq!(back.beta, e.beta);
+    }
+
+    #[test]
+    fn prefix_truncates() {
+        let e = toy_ensemble();
+        let p = e.prefix(1);
+        assert_eq!(p.len(), 1);
+        assert!((p.eval_full(&[0.5, 0.5]) - 0.5).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,129 @@
+//! Precomputed score matrix `F[i][t] = f_t(x_i)`.
+//!
+//! Every optimizer in this repo (QWYC Algorithms 1-2, the fixed-ordering
+//! baselines, Fan et al. calibration) and every tradeoff simulation
+//! consumes this matrix rather than the ensemble itself — making the
+//! optimization ensemble-agnostic and turning the inner loops into dense
+//! column scans. Storage is column-major (one contiguous slice per base
+//! model) because the optimizers sweep one model over all active examples.
+
+/// N×T score matrix with the ensemble's bias/β/costs carried along.
+#[derive(Clone, Debug)]
+pub struct ScoreMatrix {
+    pub n: usize,
+    pub t: usize,
+    /// Column-major: `cols[t*n + i]` = f_t(x_i).
+    cols: Vec<f32>,
+    pub bias: f32,
+    pub beta: f32,
+    pub costs: Vec<f32>,
+    /// Cached full scores f(x_i) = bias + Σ_t F[i][t].
+    full: Vec<f32>,
+}
+
+impl ScoreMatrix {
+    pub fn new(n: usize, t: usize, cols: Vec<f32>, bias: f32, beta: f32, costs: Vec<f32>) -> Self {
+        assert_eq!(cols.len(), n * t);
+        assert_eq!(costs.len(), t);
+        let mut full = vec![bias; n];
+        for ti in 0..t {
+            let col = &cols[ti * n..(ti + 1) * n];
+            for (f, &s) in full.iter_mut().zip(col.iter()) {
+                *f += s;
+            }
+        }
+        ScoreMatrix { n, t, cols, bias, beta, costs, full }
+    }
+
+    #[inline]
+    pub fn score(&self, i: usize, t: usize) -> f32 {
+        self.cols[t * self.n + i]
+    }
+
+    /// Contiguous column for base model t (all examples).
+    #[inline]
+    pub fn col(&self, t: usize) -> &[f32] {
+        &self.cols[t * self.n..(t + 1) * self.n]
+    }
+
+    #[inline]
+    pub fn full_score(&self, i: usize) -> f32 {
+        self.full[i]
+    }
+
+    #[inline]
+    pub fn full_scores(&self) -> &[f32] {
+        &self.full
+    }
+
+    /// Full-classifier decision for example i: f(x_i) ≥ β.
+    #[inline]
+    pub fn full_positive(&self, i: usize) -> bool {
+        self.full[i] >= self.beta
+    }
+
+    /// Restrict to a subset of example indices (e.g. the optimization
+    /// subsample used to keep Algorithm 1 tractable at T=500).
+    pub fn select_examples(&self, idx: &[usize]) -> ScoreMatrix {
+        let n2 = idx.len();
+        let mut cols = vec![0f32; n2 * self.t];
+        for t in 0..self.t {
+            let src = self.col(t);
+            let dst = &mut cols[t * n2..(t + 1) * n2];
+            for (slot, &i) in dst.iter_mut().zip(idx.iter()) {
+                *slot = src[i];
+            }
+        }
+        ScoreMatrix::new(n2, self.t, cols, self.bias, self.beta, self.costs.clone())
+    }
+
+    /// Total cost of full evaluation (Σ c_t) — the denominator in
+    /// cost-based speedup numbers.
+    pub fn total_cost(&self) -> f64 {
+        self.costs.iter().map(|&c| c as f64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> ScoreMatrix {
+        // n=3 examples, t=2 models.
+        // model 0 scores: [1, -1, 0.5]; model 1 scores: [0.5, -0.5, -1].
+        let cols = vec![1.0, -1.0, 0.5, 0.5, -0.5, -1.0];
+        ScoreMatrix::new(3, 2, cols, 0.25, 0.0, vec![1.0, 2.0])
+    }
+
+    #[test]
+    fn full_scores_cached() {
+        let sm = toy();
+        assert!((sm.full_score(0) - 1.75).abs() < 1e-6);
+        assert!((sm.full_score(1) + 1.25).abs() < 1e-6);
+        assert!((sm.full_score(2) + 0.25).abs() < 1e-6);
+        assert!(sm.full_positive(0));
+        assert!(!sm.full_positive(1));
+        assert!(!sm.full_positive(2));
+    }
+
+    #[test]
+    fn column_access() {
+        let sm = toy();
+        assert_eq!(sm.col(1), &[0.5, -0.5, -1.0]);
+        assert_eq!(sm.score(2, 0), 0.5);
+    }
+
+    #[test]
+    fn select_examples_subsets() {
+        let sm = toy();
+        let sub = sm.select_examples(&[2, 0]);
+        assert_eq!(sub.n, 2);
+        assert_eq!(sub.col(0), &[0.5, 1.0]);
+        assert!((sub.full_score(1) - 1.75).abs() < 1e-6);
+    }
+
+    #[test]
+    fn total_cost() {
+        assert!((toy().total_cost() - 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,254 @@
+//! Method runners shared by all figures/tables: given train/test score
+//! matrices, produce tradeoff curves for QWYC*, Algorithm-2-with-fixed-
+//! orderings, and Fan-with-fixed-orderings — the full comparison grid of
+//! the paper's experiments (Sections 5, Appendices B-D).
+
+use super::report::{Curve, Point};
+use crate::ensemble::ScoreMatrix;
+use crate::fan::FanClassifier;
+use crate::orderings;
+use crate::qwyc::{optimize_order, optimize_thresholds_for_order, simulate, QwycConfig, SimResult};
+
+/// Shared experiment inputs.
+pub struct ExpData<'a> {
+    pub sm_tr: &'a ScoreMatrix,
+    pub sm_te: &'a ScoreMatrix,
+    /// Train labels (None for the unlabeled real-world sets — MSE
+    /// orderings are skipped without labels, as in the paper).
+    pub labels_tr: Option<&'a [f32]>,
+    /// Test labels for accuracy reporting (benchmark experiments).
+    pub labels_te: Option<&'a [f32]>,
+    pub neg_only: bool,
+    /// Optimization-set subsample bound for O(T²N) methods (0 = all).
+    pub max_opt_examples: usize,
+    pub seed: u64,
+}
+
+fn point_from(sim: &SimResult, knob: f64, labels: Option<&[f32]>) -> Point {
+    Point {
+        knob,
+        mean_models: sim.mean_models,
+        pct_diff: sim.pct_diff,
+        accuracy: labels.map(|y| sim.accuracy(y)),
+    }
+}
+
+/// QWYC*: Algorithm 1 joint optimization, one point per α.
+pub fn qwyc_star(d: &ExpData, alphas: &[f64]) -> Curve {
+    let mut c = Curve::new("QWYC* (joint opt)");
+    for &alpha in alphas {
+        let cfg = QwycConfig {
+            alpha,
+            neg_only: d.neg_only,
+            max_opt_examples: d.max_opt_examples,
+            seed: d.seed,
+        };
+        let fc = optimize_order(d.sm_tr, &cfg);
+        let sim = simulate(&fc, d.sm_te);
+        c.push(point_from(&sim, alpha, d.labels_te));
+    }
+    c
+}
+
+/// Algorithm 2 thresholds on a fixed ordering, one point per α.
+pub fn alg2_fixed_order(d: &ExpData, name: &str, order: &[usize], alphas: &[f64]) -> Curve {
+    let mut c = Curve::new(&format!("QWYC thresholds ({name})"));
+    for &alpha in alphas {
+        let fc = optimize_thresholds_for_order(d.sm_tr, order, alpha, d.neg_only);
+        let sim = simulate(&fc, d.sm_te);
+        c.push(point_from(&sim, alpha, d.labels_te));
+    }
+    c
+}
+
+/// Fan et al. early stopping on a fixed ordering, one point per γ.
+pub fn fan_fixed_order(
+    d: &ExpData,
+    name: &str,
+    order: &[usize],
+    lambda: f64,
+    gammas: &[f64],
+) -> Curve {
+    let mut c = Curve::new(&format!("Fan ({name})"));
+    let fan = FanClassifier::calibrate(d.sm_tr, order, lambda);
+    for &gamma in gammas {
+        let sim = fan.simulate(d.sm_te, gamma, d.neg_only);
+        c.push(point_from(&sim, gamma, d.labels_te));
+    }
+    c
+}
+
+/// Random ordering averaged over `trials` seeds (the paper's 5-trial mean
+/// ± std error bars), with Algorithm-2 thresholds.
+pub fn alg2_random_orders(d: &ExpData, alphas: &[f64], trials: u64) -> Curve {
+    let mut c = Curve::new("QWYC thresholds (Random order)");
+    for &alpha in alphas {
+        let mut models = Vec::new();
+        let mut diffs = Vec::new();
+        let mut accs = Vec::new();
+        for trial in 0..trials {
+            let order = orderings::random(d.sm_tr.t, d.seed ^ (trial + 1));
+            let fc = optimize_thresholds_for_order(d.sm_tr, &order, alpha, d.neg_only);
+            let sim = simulate(&fc, d.sm_te);
+            models.push(sim.mean_models);
+            diffs.push(sim.pct_diff);
+            if let Some(y) = d.labels_te {
+                accs.push(sim.accuracy(y));
+            }
+        }
+        let p = Point {
+            knob: alpha,
+            mean_models: crate::util::stats::mean(&models),
+            pct_diff: crate::util::stats::mean(&diffs),
+            accuracy: if accs.is_empty() { None } else { Some(crate::util::stats::mean(&accs)) },
+        };
+        c.push_with_std(p, crate::util::stats::std(&models));
+    }
+    c
+}
+
+/// Fan early stopping over random orderings (mean over trials).
+pub fn fan_random_orders(
+    d: &ExpData,
+    lambda: f64,
+    gammas: &[f64],
+    trials: u64,
+) -> Curve {
+    let mut c = Curve::new("Fan (Random order)");
+    let fans: Vec<FanClassifier> = (0..trials)
+        .map(|trial| {
+            let order = orderings::random(d.sm_tr.t, d.seed ^ (trial + 1));
+            FanClassifier::calibrate(d.sm_tr, &order, lambda)
+        })
+        .collect();
+    for &gamma in gammas {
+        let mut models = Vec::new();
+        let mut diffs = Vec::new();
+        let mut accs = Vec::new();
+        for fan in &fans {
+            let sim = fan.simulate(d.sm_te, gamma, d.neg_only);
+            models.push(sim.mean_models);
+            diffs.push(sim.pct_diff);
+            if let Some(y) = d.labels_te {
+                accs.push(sim.accuracy(y));
+            }
+        }
+        let p = Point {
+            knob: gamma,
+            mean_models: crate::util::stats::mean(&models),
+            pct_diff: crate::util::stats::mean(&diffs),
+            accuracy: if accs.is_empty() { None } else { Some(crate::util::stats::mean(&accs)) },
+        };
+        c.push_with_std(p, crate::util::stats::std(&models));
+    }
+    c
+}
+
+/// The full comparison grid for one experiment: QWYC* + {GBT/natural,
+/// Random, Individual-MSE, Greedy-MSE} × {Alg2, Fan}. `natural_name` is
+/// "GBT order" for boosted ensembles, "natural order" otherwise.
+pub fn comparison_grid(
+    d: &ExpData,
+    natural_name: &str,
+    alphas: &[f64],
+    gammas: &[f64],
+    lambda: f64,
+    random_trials: u64,
+) -> Vec<Curve> {
+    let t = d.sm_tr.t;
+    let mut curves = Vec::new();
+    curves.push(qwyc_star(d, alphas));
+
+    let natural = orderings::natural(t);
+    curves.push(alg2_fixed_order(d, natural_name, &natural, alphas));
+    curves.push(fan_fixed_order(d, natural_name, &natural, lambda, gammas));
+
+    curves.push(alg2_random_orders(d, alphas, random_trials));
+    curves.push(fan_random_orders(d, lambda, gammas, random_trials));
+
+    if let Some(labels) = d.labels_tr {
+        // MSE orderings need labels; subsample the (possibly huge)
+        // optimization set the same way Algorithm 1 does.
+        let (sm_sub, labels_sub): (ScoreMatrix, Vec<f32>) =
+            if d.max_opt_examples > 0 && d.sm_tr.n > d.max_opt_examples {
+                let mut rng = crate::util::rng::Rng::new(d.seed ^ 0x315e);
+                let idx = rng.choose_k(d.sm_tr.n, d.max_opt_examples);
+                (
+                    d.sm_tr.select_examples(&idx),
+                    idx.iter().map(|&i| labels[i]).collect(),
+                )
+            } else {
+                (d.sm_tr.select_examples(&(0..d.sm_tr.n).collect::<Vec<_>>()), labels.to_vec())
+            };
+        let ind = orderings::individual_mse(&sm_sub, &labels_sub);
+        curves.push(alg2_fixed_order(d, "Individual MSE", &ind, alphas));
+        // Fan* = Fan early stopping with Individual MSE order (their
+        // suggested configuration).
+        let mut fan_star = fan_fixed_order(d, "Individual MSE", &ind, lambda, gammas);
+        fan_star.method = "Fan* (Individual MSE)".into();
+        curves.push(fan_star);
+
+        let gre = orderings::greedy_mse(&sm_sub, &labels_sub);
+        curves.push(alg2_fixed_order(d, "Greedy MSE", &gre, alphas));
+        curves.push(fan_fixed_order(d, "Greedy MSE", &gre, lambda, gammas));
+    }
+    curves
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, Which};
+    use crate::gbt::{train, GbtParams};
+
+    #[test]
+    fn grid_produces_all_methods() {
+        let (tr, te) = generate(Which::AdultLike, 5, 0.02);
+        let (ens, _) = train(&tr, &GbtParams { n_trees: 20, max_depth: 3, ..Default::default() });
+        let sm_tr = ens.score_matrix(&tr);
+        let sm_te = ens.score_matrix(&te);
+        let d = ExpData {
+            sm_tr: &sm_tr,
+            sm_te: &sm_te,
+            labels_tr: Some(&tr.y),
+            labels_te: Some(&te.y),
+            neg_only: false,
+            max_opt_examples: 0,
+            seed: 1,
+        };
+        let curves = comparison_grid(&d, "GBT order", &[0.01], &[1.5], 0.01, 2);
+        assert_eq!(curves.len(), 9);
+        for c in &curves {
+            assert!(!c.points.is_empty(), "{} empty", c.method);
+            for p in &c.points {
+                assert!(p.mean_models >= 1.0 && p.mean_models <= sm_tr.t as f64);
+                assert!(p.accuracy.unwrap() > 0.5);
+            }
+        }
+        // QWYC* curve exists and respects alpha on test within slack.
+        assert!(curves[0].method.starts_with("QWYC*"));
+    }
+
+    #[test]
+    fn unlabeled_grid_skips_mse_orderings() {
+        let (tr, te) = generate(Which::Rw1Like, 6, 0.003);
+        let (ens, _) = crate::lattice::train_joint(
+            &tr,
+            &crate::lattice::LatticeParams { n_lattices: 5, dim: 5, steps: 80, ..Default::default() },
+        );
+        let sm_tr = ens.score_matrix(&tr);
+        let sm_te = ens.score_matrix(&te);
+        let d = ExpData {
+            sm_tr: &sm_tr,
+            sm_te: &sm_te,
+            labels_tr: None,
+            labels_te: None,
+            neg_only: true,
+            max_opt_examples: 0,
+            seed: 1,
+        };
+        let curves = comparison_grid(&d, "natural order", &[0.005], &[1.0], 0.01, 2);
+        assert_eq!(curves.len(), 5);
+        assert!(curves.iter().all(|c| !c.method.contains("MSE")));
+    }
+}

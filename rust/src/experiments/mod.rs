@@ -1,0 +1,11 @@
+//! Experiment harness: regenerates every table and figure in the paper's
+//! evaluation (DESIGN.md §3 maps each to its module and bench target).
+
+pub mod figures;
+pub mod methods;
+pub mod report;
+pub mod tables;
+pub mod workload;
+
+pub use figures::FigConfig;
+pub use report::{Curve, Point};

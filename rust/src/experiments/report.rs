@@ -1,0 +1,200 @@
+//! Reporting: ASCII tables/curves for the terminal plus JSON dumps under
+//! `results/` so every figure and table regenerates as both human-readable
+//! output and machine-readable data.
+
+use crate::util::json::{self, Json};
+use std::path::Path;
+
+/// One point on a tradeoff curve.
+#[derive(Clone, Debug)]
+pub struct Point {
+    /// The knob that produced this point (α for QWYC/Alg2, γ for Fan).
+    pub knob: f64,
+    pub mean_models: f64,
+    pub pct_diff: f64,
+    /// Test accuracy when labels exist (benchmark experiments).
+    pub accuracy: Option<f64>,
+}
+
+/// A method's tradeoff curve.
+#[derive(Clone, Debug)]
+pub struct Curve {
+    pub method: String,
+    pub points: Vec<Point>,
+    /// Std across random-order trials (Random ordering error bars).
+    pub models_std: Vec<f64>,
+}
+
+impl Curve {
+    pub fn new(method: &str) -> Curve {
+        Curve { method: method.to_string(), points: Vec::new(), models_std: Vec::new() }
+    }
+
+    pub fn push(&mut self, p: Point) {
+        self.points.push(p);
+        self.models_std.push(0.0);
+    }
+
+    pub fn push_with_std(&mut self, p: Point, std: f64) {
+        self.points.push(p);
+        self.models_std.push(std);
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("method", Json::str(&self.method)),
+            ("knob", Json::arr_f64(&self.points.iter().map(|p| p.knob).collect::<Vec<_>>())),
+            (
+                "mean_models",
+                Json::arr_f64(&self.points.iter().map(|p| p.mean_models).collect::<Vec<_>>()),
+            ),
+            (
+                "pct_diff",
+                Json::arr_f64(&self.points.iter().map(|p| p.pct_diff).collect::<Vec<_>>()),
+            ),
+            (
+                "accuracy",
+                Json::Arr(
+                    self.points
+                        .iter()
+                        .map(|p| p.accuracy.map(Json::Num).unwrap_or(Json::Null))
+                        .collect(),
+                ),
+            ),
+            ("models_std", Json::arr_f64(&self.models_std)),
+        ])
+    }
+}
+
+/// Save a set of curves as one results file.
+pub fn save_curves(path: &Path, title: &str, curves: &[Curve]) -> std::io::Result<()> {
+    let v = Json::obj(vec![
+        ("title", Json::str(title)),
+        ("curves", Json::Arr(curves.iter().map(|c| c.to_json()).collect())),
+    ]);
+    json::write_file(path, &v)
+}
+
+/// Render curves as an aligned text table: one row per point.
+pub fn curves_table(curves: &[Curve], y: YAxis) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "{:<28} {:>8} {:>14} {:>12}\n",
+        "method",
+        "knob",
+        "mean#models",
+        match y {
+            YAxis::PctDiff => "%diff",
+            YAxis::Accuracy => "accuracy",
+        }
+    ));
+    s.push_str(&"-".repeat(66));
+    s.push('\n');
+    for c in curves {
+        for (p, std) in c.points.iter().zip(c.models_std.iter()) {
+            let yval = match y {
+                YAxis::PctDiff => p.pct_diff * 100.0,
+                YAxis::Accuracy => p.accuracy.unwrap_or(f64::NAN) * 100.0,
+            };
+            let models = if *std > 0.0 {
+                format!("{:.1}±{:.1}", p.mean_models, std)
+            } else {
+                format!("{:.2}", p.mean_models)
+            };
+            s.push_str(&format!(
+                "{:<28} {:>8.4} {:>14} {:>11.3}%\n",
+                c.method, p.knob, models, yval
+            ));
+        }
+    }
+    s
+}
+
+/// Which quantity goes on the y axis of the printed table.
+#[derive(Clone, Copy, Debug)]
+pub enum YAxis {
+    PctDiff,
+    Accuracy,
+}
+
+/// Crude terminal scatter plot: x = mean models, y = %diff (log-ish).
+pub fn ascii_plot(curves: &[Curve], width: usize, height: usize) -> String {
+    let pts: Vec<(f64, f64, usize)> = curves
+        .iter()
+        .enumerate()
+        .flat_map(|(ci, c)| c.points.iter().map(move |p| (p.mean_models, p.pct_diff, ci)))
+        .collect();
+    if pts.is_empty() {
+        return String::new();
+    }
+    let (mut xmin, mut xmax) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut ymin, mut ymax) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &(x, y, _) in &pts {
+        xmin = xmin.min(x);
+        xmax = xmax.max(x);
+        ymin = ymin.min(y);
+        ymax = ymax.max(y);
+    }
+    if xmax - xmin < 1e-12 {
+        xmax = xmin + 1.0;
+    }
+    if ymax - ymin < 1e-12 {
+        ymax = ymin + 1.0;
+    }
+    let mut grid = vec![vec![' '; width]; height];
+    let marks = ['*', 'o', '+', 'x', '#', '@', '%', '&', '$', '~'];
+    for &(x, y, ci) in &pts {
+        let col = (((x - xmin) / (xmax - xmin)) * (width - 1) as f64).round() as usize;
+        let row = (((y - ymin) / (ymax - ymin)) * (height - 1) as f64).round() as usize;
+        let row = height - 1 - row;
+        grid[row][col.min(width - 1)] = marks[ci % marks.len()];
+    }
+    let mut s = format!("  %diff {:.3}%..{:.3}%  vs  mean#models {:.1}..{:.1}\n", ymin * 100.0, ymax * 100.0, xmin, xmax);
+    for row in grid {
+        s.push_str("  |");
+        s.extend(row);
+        s.push('\n');
+    }
+    s.push_str("  +");
+    s.push_str(&"-".repeat(width));
+    s.push('\n');
+    for (ci, c) in curves.iter().enumerate() {
+        s.push_str(&format!("   {} = {}\n", marks[ci % marks.len()], c.method));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn curve() -> Curve {
+        let mut c = Curve::new("qwyc*");
+        c.push(Point { knob: 0.01, mean_models: 40.0, pct_diff: 0.008, accuracy: Some(0.86) });
+        c.push(Point { knob: 0.02, mean_models: 25.0, pct_diff: 0.015, accuracy: Some(0.85) });
+        c
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = curve();
+        let j = c.to_json();
+        assert_eq!(j.req("method").unwrap().as_str().unwrap(), "qwyc*");
+        assert_eq!(j.req("mean_models").unwrap().as_vec_f32().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn table_renders() {
+        let t = curves_table(&[curve()], YAxis::PctDiff);
+        assert!(t.contains("qwyc*"));
+        assert!(t.contains("40.00"));
+        let t = curves_table(&[curve()], YAxis::Accuracy);
+        assert!(t.contains("86.000%"));
+    }
+
+    #[test]
+    fn plot_renders_without_panic() {
+        let p = ascii_plot(&[curve()], 40, 10);
+        assert!(p.contains('*'));
+    }
+}

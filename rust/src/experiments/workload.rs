@@ -1,0 +1,114 @@
+//! Experiment workload construction: datasets + trained ensembles for
+//! each of the paper's six experiments, with a `scale` knob that shrinks
+//! dataset sizes (never geometry: T, d, priors stay the paper's) so the
+//! full figure suite can regenerate quickly on small machines while
+//! `--scale 1.0` reproduces the full-size runs.
+
+use crate::data::synth::{generate, Which};
+use crate::data::Dataset;
+use crate::ensemble::Ensemble;
+use crate::gbt::{train as gbt_train, GbtParams};
+use crate::lattice::{train_independent, train_joint, LatticeParams};
+
+/// A ready-to-run experiment: data + full ensemble.
+pub struct Workload {
+    pub name: String,
+    pub train: Dataset,
+    pub test: Dataset,
+    pub ensemble: Ensemble,
+    /// Filter-and-Score experiments optimize only ε⁻.
+    pub neg_only: bool,
+    /// Labels usable for ordering baselines? (Real-world sets: no.)
+    pub labeled: bool,
+}
+
+/// Experiments 1-2: GBT ensembles on the benchmark datasets.
+/// Paper geometry: Adult T=500 depth 5; Nomao T=500 depth 9.
+pub fn benchmark(which: Which, scale: f64, trees: usize, seed: u64) -> Workload {
+    assert!(matches!(which, Which::AdultLike | Which::NomaoLike));
+    let (train, test) = generate(which, seed, scale);
+    let depth = if which == Which::AdultLike { 5 } else { 9 };
+    let params = GbtParams { n_trees: trees, max_depth: depth, ..Default::default() };
+    let (ensemble, _) = gbt_train(&train, &params);
+    Workload {
+        name: format!("{}-gbt{}d{}", which.name(), trees, depth),
+        train,
+        test,
+        ensemble,
+        neg_only: false,
+        labeled: true,
+    }
+}
+
+/// Experiments 3-6: lattice ensembles on the real-world-like datasets.
+/// Paper geometry: RW1 T=5 lattices on 13-of-16 features; RW2 T=500 on
+/// random 8-of-30 subsets. `joint` selects joint vs independent training.
+pub fn real_world(which: Which, scale: f64, t_override: Option<usize>, joint: bool, seed: u64) -> Workload {
+    assert!(matches!(which, Which::Rw1Like | Which::Rw2Like));
+    let (train, test) = generate(which, seed, scale);
+    let (t, dim) = match which {
+        Which::Rw1Like => (5, 13),
+        _ => (500, 8),
+    };
+    let t = t_override.unwrap_or(t);
+    // Step/batch budget: T=500 ensembles cost ~1000x more per step than
+    // T=5, so they get fewer, smaller steps (quality is still far above
+    // the prior baseline; see lattice::train tests).
+    let params = LatticeParams {
+        n_lattices: t,
+        dim,
+        steps: if t > 50 { 300 } else { 400 },
+        batch: if t > 50 { 64 } else { 128 },
+        lr: 0.05,
+        // T=500 ensembles carry ~128k parameters; stronger L2 keeps the
+        // score distribution away from the decision boundary at the
+        // smaller-than-paper train sizes the benches use.
+        l2: if t > 50 { 1e-4 } else { 1e-5 },
+        seed,
+    };
+    let (ensemble, _) = if joint {
+        train_joint(&train, &params)
+    } else {
+        train_independent(&train, &params)
+    };
+    Workload {
+        name: format!(
+            "{}-lattice{}x{}-{}",
+            which.name(),
+            t,
+            dim,
+            if joint { "joint" } else { "indep" }
+        ),
+        train,
+        test,
+        ensemble,
+        neg_only: true,
+        labeled: false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn benchmark_workload_trains() {
+        let w = benchmark(Which::AdultLike, 0.02, 15, 3);
+        assert_eq!(w.ensemble.len(), 15);
+        assert!(w.labeled && !w.neg_only);
+        assert!(w.ensemble.accuracy(&w.test) > 0.6);
+    }
+
+    #[test]
+    fn real_world_geometry_matches_paper() {
+        let w = real_world(Which::Rw1Like, 0.003, None, true, 3);
+        assert_eq!(w.ensemble.len(), 5);
+        if let crate::ensemble::BaseModel::Lattice(l) = &w.ensemble.models[0] {
+            assert_eq!(l.dim(), 13);
+            assert_eq!(l.n_vertices(), 8192);
+        } else {
+            panic!("expected lattice");
+        }
+        assert!(w.neg_only && !w.labeled);
+    }
+}

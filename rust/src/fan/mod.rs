@@ -1,0 +1,292 @@
+//! The Fan et al. (2002) "dynamic scheduling" baseline, implemented
+//! faithfully to the paper's Appendix C.
+//!
+//! For a fixed base-model ordering, calibration computes — per position r
+//! and per bin of the running score g_r — the empirical mean μ_B and
+//! std σ_B of the remaining mass Δ = f(x) − g_r(x) over a representative
+//! set. At serving time the final score is estimated as g_r + μ_B and an
+//! early decision is made when the estimate clears the decision threshold
+//! β by a confidence margin γσ_B:
+//!
+//! ```text
+//! g_r > β − μ_B + γσ_B  ⇒ classify positive, stop
+//! g_r < β − μ_B − γσ_B  ⇒ classify negative, stop
+//! ```
+//!
+//! (the statistically-coherent reading of Appendix C's thresholds
+//! ε±_{r,B} = μ_B ± γσ_B around β). Bins are `floor(g_r / λ)` with the
+//! knob λ controlling bin width; unseen bins at evaluation time fall back
+//! to full evaluation, exactly as Fan et al. prescribe.
+
+use crate::ensemble::ScoreMatrix;
+use std::collections::HashMap;
+
+/// Calibrated Fan classifier for one ordering and one λ.
+#[derive(Clone, Debug)]
+pub struct FanClassifier {
+    pub order: Vec<usize>,
+    pub lambda: f64,
+    /// Per position r: bin id → (μ_B, σ_B).
+    pub bins: Vec<HashMap<i64, (f32, f32)>>,
+    pub bias: f32,
+    pub beta: f32,
+}
+
+#[inline]
+fn bin_of(g: f32, lambda: f64) -> i64 {
+    (g as f64 / lambda).floor() as i64
+}
+
+impl FanClassifier {
+    /// Calibrate per-bin statistics on a representative (unlabeled) set.
+    pub fn calibrate(sm: &ScoreMatrix, order: &[usize], lambda: f64) -> FanClassifier {
+        assert_eq!(order.len(), sm.t);
+        let n = sm.n;
+        let t = sm.t;
+        let mut g: Vec<f32> = vec![sm.bias; n];
+        let mut bins: Vec<HashMap<i64, (f32, f32)>> = Vec::with_capacity(t);
+        for r in 0..t {
+            let col = sm.col(order[r]);
+            // Accumulate (count, Σδ, Σδ²) per bin.
+            let mut acc: HashMap<i64, (u32, f64, f64)> = HashMap::new();
+            for i in 0..n {
+                g[i] += col[i];
+                let delta = (sm.full_score(i) - g[i]) as f64;
+                let e = acc.entry(bin_of(g[i], lambda)).or_insert((0, 0.0, 0.0));
+                e.0 += 1;
+                e.1 += delta;
+                e.2 += delta * delta;
+            }
+            let stats: HashMap<i64, (f32, f32)> = acc
+                .into_iter()
+                .map(|(b, (c, s, s2))| {
+                    let mu = s / c as f64;
+                    let var = (s2 / c as f64 - mu * mu).max(0.0);
+                    // Floor σ: singleton bins have zero empirical variance
+                    // but are NOT infinitely confident — without a floor
+                    // any γ would stop on them.
+                    (b, (mu as f32, var.sqrt().max(1e-6) as f32))
+                })
+                .collect();
+            bins.push(stats);
+        }
+        FanClassifier { order: order.to_vec(), lambda, bins, bias: sm.bias, beta: sm.beta }
+    }
+
+    /// Mean number of bins per position (the paper reports 10-400 as λ
+    /// sweeps 0.1 → 0.001).
+    pub fn mean_bins(&self) -> f64 {
+        let total: usize = self.bins.iter().map(|b| b.len()).sum();
+        total as f64 / self.bins.len().max(1) as f64
+    }
+
+    /// Simulate over a score matrix with confidence `gamma`; returns the
+    /// same aggregate as `qwyc::simulate`. `neg_only` restricts to early
+    /// negatives (Filter-and-Score experiments).
+    pub fn simulate(&self, sm: &ScoreMatrix, gamma: f64, neg_only: bool) -> crate::qwyc::SimResult {
+        let n = sm.n;
+        let t = self.order.len();
+        assert_eq!(t, sm.t);
+        let mut g = vec![self.bias; n];
+        let mut decisions = vec![false; n];
+        let mut stops = vec![t as u32; n];
+        let mut active: Vec<u32> = (0..n as u32).collect();
+        let mut n_early = 0usize;
+        let mut models_sum = 0f64;
+        let mut cost_sum = 0f64;
+        let mut cum_cost = 0f64;
+
+        for r in 0..t {
+            let col = sm.col(self.order[r]);
+            cum_cost += sm.costs[self.order[r]] as f64;
+            let stats = &self.bins[r];
+            let mut w = 0usize;
+            for idx in 0..active.len() {
+                let i = active[idx] as usize;
+                let gi = g[i] + col[i];
+                g[i] = gi;
+                let mut decided = false;
+                if r + 1 < t {
+                    if let Some(&(mu, sigma)) = stats.get(&bin_of(gi, self.lambda)) {
+                        let margin = gamma as f32 * sigma;
+                        let est = gi + mu; // estimated full score
+                        if !neg_only && est - margin > self.beta {
+                            decisions[i] = true;
+                            decided = true;
+                        } else if est + margin < self.beta {
+                            decisions[i] = false;
+                            decided = true;
+                        }
+                    }
+                    // Unseen bin ⇒ no early stop at this position (the
+                    // example proceeds toward full evaluation).
+                }
+                if decided {
+                    stops[i] = (r + 1) as u32;
+                    models_sum += (r + 1) as f64;
+                    cost_sum += cum_cost;
+                    n_early += 1;
+                } else {
+                    active[w] = i as u32;
+                    w += 1;
+                }
+            }
+            active.truncate(w);
+            if active.is_empty() {
+                break;
+            }
+        }
+        for &i in &active {
+            let i = i as usize;
+            decisions[i] = g[i] >= sm.beta;
+            stops[i] = t as u32;
+            models_sum += t as f64;
+            cost_sum += sm.total_cost();
+        }
+        let diffs = (0..n).filter(|&i| decisions[i] != sm.full_positive(i)).count();
+        crate::qwyc::SimResult {
+            mean_models: models_sum / n.max(1) as f64,
+            mean_cost: cost_sum / n.max(1) as f64,
+            pct_diff: diffs as f64 / n.max(1) as f64,
+            decisions,
+            stops,
+            n_early,
+        }
+    }
+
+    /// True early-exit single-example evaluation (timing path).
+    pub fn eval_single(
+        &self,
+        ens: &crate::ensemble::Ensemble,
+        x: &[f32],
+        gamma: f64,
+        neg_only: bool,
+    ) -> crate::qwyc::SingleResult {
+        let t = self.order.len();
+        let mut g = self.bias;
+        for (r, &m) in self.order.iter().enumerate() {
+            g += ens.models[m].eval(x);
+            if r + 1 < t {
+                if let Some(&(mu, sigma)) = self.bins[r].get(&bin_of(g, self.lambda)) {
+                    let margin = gamma as f32 * sigma;
+                    let est = g + mu;
+                    if !neg_only && est - margin > self.beta {
+                        return crate::qwyc::SingleResult {
+                            positive: true,
+                            score: g,
+                            models_evaluated: r + 1,
+                            early: true,
+                        };
+                    }
+                    if est + margin < self.beta {
+                        return crate::qwyc::SingleResult {
+                            positive: false,
+                            score: g,
+                            models_evaluated: r + 1,
+                            early: true,
+                        };
+                    }
+                }
+            }
+        }
+        crate::qwyc::SingleResult { positive: g >= self.beta, score: g, models_evaluated: t, early: false }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, Which};
+    use crate::gbt::{train, GbtParams};
+
+    fn small_setup() -> (crate::ensemble::Ensemble, ScoreMatrix, ScoreMatrix) {
+        let (tr, te) = generate(Which::AdultLike, 31, 0.02);
+        let (ens, _) = train(&tr, &GbtParams { n_trees: 30, max_depth: 3, ..Default::default() });
+        let sm_tr = ens.score_matrix(&tr);
+        let sm_te = ens.score_matrix(&te);
+        (ens, sm_tr, sm_te)
+    }
+
+    #[test]
+    fn huge_gamma_never_stops_early() {
+        let (_, sm_tr, _) = small_setup();
+        let order: Vec<usize> = (0..sm_tr.t).collect();
+        let fan = FanClassifier::calibrate(&sm_tr, &order, 0.01);
+        let sim = fan.simulate(&sm_tr, 1e9, false);
+        assert_eq!(sim.n_early, 0);
+        assert_eq!(sim.pct_diff, 0.0);
+        assert_eq!(sim.mean_models, sm_tr.t as f64);
+    }
+
+    #[test]
+    fn gamma_tradeoff_monotone() {
+        let (_, sm_tr, sm_te) = small_setup();
+        let order: Vec<usize> = (0..sm_tr.t).collect();
+        let fan = FanClassifier::calibrate(&sm_tr, &order, 0.01);
+        let mut prev_models = 0.0;
+        for &gamma in &[4.0, 2.0, 1.0, 0.5] {
+            let sim = fan.simulate(&sm_te, gamma, false);
+            assert!(
+                sim.mean_models >= prev_models - 1e2 * f64::EPSILON || sim.mean_models <= prev_models,
+                "sanity"
+            );
+            // Lower gamma ⇒ fewer models evaluated (weakly).
+            if prev_models > 0.0 {
+                assert!(sim.mean_models <= prev_models + 1e-9, "gamma={gamma}");
+            }
+            prev_models = sim.mean_models;
+        }
+    }
+
+    #[test]
+    fn early_stopping_happens_and_tracks_full_decisions() {
+        let (_, sm_tr, sm_te) = small_setup();
+        let order: Vec<usize> = (0..sm_tr.t).collect();
+        let fan = FanClassifier::calibrate(&sm_tr, &order, 0.01);
+        let sim = fan.simulate(&sm_te, 2.5, false);
+        assert!(sim.n_early > 0, "no early exits");
+        assert!(sim.mean_models < sm_te.t as f64);
+        assert!(sim.pct_diff < 0.05, "diff {}", sim.pct_diff);
+    }
+
+    #[test]
+    fn lambda_controls_bin_count() {
+        let (_, sm_tr, _) = small_setup();
+        let order: Vec<usize> = (0..sm_tr.t).collect();
+        let coarse = FanClassifier::calibrate(&sm_tr, &order, 0.1);
+        let fine = FanClassifier::calibrate(&sm_tr, &order, 0.001);
+        assert!(
+            fine.mean_bins() > 4.0 * coarse.mean_bins(),
+            "bins: coarse {} fine {}",
+            coarse.mean_bins(),
+            fine.mean_bins()
+        );
+    }
+
+    #[test]
+    fn simulate_agrees_with_eval_single() {
+        let (ens, sm_tr, sm_te) = small_setup();
+        let (_, te) = generate(Which::AdultLike, 31, 0.02);
+        let order: Vec<usize> = (0..sm_tr.t).collect();
+        let fan = FanClassifier::calibrate(&sm_tr, &order, 0.01);
+        let sim = fan.simulate(&sm_te, 1.5, false);
+        for i in (0..te.n).step_by(29) {
+            let single = fan.eval_single(&ens, te.row(i), 1.5, false);
+            assert_eq!(single.positive, sim.decisions[i], "example {i}");
+            assert_eq!(single.models_evaluated as u32, sim.stops[i], "example {i}");
+        }
+    }
+
+    #[test]
+    fn neg_only_mode_produces_no_early_positives() {
+        let (_, sm_tr, sm_te) = small_setup();
+        let order: Vec<usize> = (0..sm_tr.t).collect();
+        let fan = FanClassifier::calibrate(&sm_tr, &order, 0.01);
+        let sim = fan.simulate(&sm_te, 1.0, true);
+        for i in 0..sm_te.n {
+            if sim.stops[i] < sm_te.t as u32 {
+                assert!(!sim.decisions[i], "early positive in neg_only mode");
+            }
+        }
+    }
+}

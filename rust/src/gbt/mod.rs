@@ -1,0 +1,11 @@
+//! Gradient-boosted trees: the base-model substrate for the benchmark
+//! experiments (UCI Adult / Nomao analogues, T=500 trees). Implements
+//! histogram-based second-order boosting from scratch — no GBT library is
+//! available offline (DESIGN.md §4).
+
+pub mod histogram;
+pub mod trainer;
+pub mod tree;
+
+pub use trainer::{train, GbtParams};
+pub use tree::Tree;

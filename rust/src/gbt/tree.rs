@@ -1,0 +1,174 @@
+//! Regression tree: the base model of the benchmark-experiment ensembles.
+//! Trees are stored as flat node arrays; evaluation is a simple root-to-leaf
+//! walk on raw feature values (split thresholds are stored in feature units,
+//! so no binning is needed at serving time).
+
+use crate::util::json::Json;
+
+/// One node. Leaves have `feature == u32::MAX` and carry `value`.
+#[derive(Clone, Copy, Debug)]
+pub struct Node {
+    /// Split feature, or `u32::MAX` for a leaf.
+    pub feature: u32,
+    /// Go left iff `x[feature] <= threshold`.
+    pub threshold: f32,
+    /// Index of left child; right child is `left + 1`.
+    pub left: u32,
+    /// Leaf value (0.0 on internal nodes).
+    pub value: f32,
+}
+
+const LEAF: u32 = u32::MAX;
+
+impl Node {
+    pub fn leaf(value: f32) -> Node {
+        Node { feature: LEAF, threshold: 0.0, left: 0, value }
+    }
+
+    #[inline]
+    pub fn is_leaf(&self) -> bool {
+        self.feature == LEAF
+    }
+}
+
+/// A binary regression tree.
+#[derive(Clone, Debug)]
+pub struct Tree {
+    pub nodes: Vec<Node>,
+}
+
+impl Tree {
+    pub fn single_leaf(value: f32) -> Tree {
+        Tree { nodes: vec![Node::leaf(value)] }
+    }
+
+    /// Evaluate on one example.
+    #[inline]
+    pub fn eval(&self, x: &[f32]) -> f32 {
+        let mut idx = 0usize;
+        loop {
+            let node = unsafe { self.nodes.get_unchecked(idx) };
+            if node.is_leaf() {
+                return node.value;
+            }
+            let v = x[node.feature as usize];
+            idx = if v <= node.threshold { node.left as usize } else { node.left as usize + 1 };
+        }
+    }
+
+    pub fn n_leaves(&self) -> usize {
+        self.nodes.iter().filter(|n| n.is_leaf()).count()
+    }
+
+    pub fn depth(&self) -> usize {
+        fn rec(nodes: &[Node], idx: usize) -> usize {
+            let n = &nodes[idx];
+            if n.is_leaf() {
+                0
+            } else {
+                1 + rec(nodes, n.left as usize).max(rec(nodes, n.left as usize + 1))
+            }
+        }
+        rec(&self.nodes, 0)
+    }
+
+    /// Scale all leaf values (used to apply the boosting learning rate once
+    /// at the end of tree construction).
+    pub fn scale_leaves(&mut self, factor: f32) {
+        for n in self.nodes.iter_mut() {
+            if n.is_leaf() {
+                n.value *= factor;
+            }
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        // Compact parallel-array encoding.
+        let feats: Vec<f64> = self.nodes.iter().map(|n| n.feature as f64).collect();
+        let thr: Vec<f32> = self.nodes.iter().map(|n| n.threshold).collect();
+        let left: Vec<f64> = self.nodes.iter().map(|n| n.left as f64).collect();
+        let val: Vec<f32> = self.nodes.iter().map(|n| n.value).collect();
+        Json::obj(vec![
+            ("feature", Json::arr_f64(&feats)),
+            ("threshold", Json::arr_f32(&thr)),
+            ("left", Json::arr_f64(&left)),
+            ("value", Json::arr_f32(&val)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Tree, String> {
+        let feats = v.req("feature")?.as_arr()?;
+        let thr = v.req("threshold")?.as_vec_f32()?;
+        let left = v.req("left")?.as_arr()?;
+        let val = v.req("value")?.as_vec_f32()?;
+        if feats.len() != thr.len() || thr.len() != left.len() || left.len() != val.len() {
+            return Err("tree arrays length mismatch".into());
+        }
+        let mut nodes = Vec::with_capacity(feats.len());
+        for i in 0..feats.len() {
+            nodes.push(Node {
+                feature: feats[i].as_f64()? as u32,
+                threshold: thr[i],
+                left: left[i].as_f64()? as u32,
+                value: val[i],
+            });
+        }
+        if nodes.is_empty() {
+            return Err("empty tree".into());
+        }
+        Ok(Tree { nodes })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// x0 <= 0.5 ? (x1 <= 0.3 ? 1.0 : 2.0) : 3.0
+    fn stump2() -> Tree {
+        Tree {
+            nodes: vec![
+                Node { feature: 0, threshold: 0.5, left: 1, value: 0.0 },
+                Node { feature: 1, threshold: 0.3, left: 3, value: 0.0 },
+                Node::leaf(3.0),
+                Node::leaf(1.0),
+                Node::leaf(2.0),
+            ],
+        }
+    }
+
+    #[test]
+    fn eval_walks_correctly() {
+        let t = stump2();
+        assert_eq!(t.eval(&[0.4, 0.2]), 1.0);
+        assert_eq!(t.eval(&[0.4, 0.9]), 2.0);
+        assert_eq!(t.eval(&[0.9, 0.0]), 3.0);
+        // Boundary: <= goes left.
+        assert_eq!(t.eval(&[0.5, 0.3]), 1.0);
+    }
+
+    #[test]
+    fn depth_and_leaves() {
+        let t = stump2();
+        assert_eq!(t.depth(), 2);
+        assert_eq!(t.n_leaves(), 3);
+        assert_eq!(Tree::single_leaf(1.0).depth(), 0);
+    }
+
+    #[test]
+    fn scale_leaves_only() {
+        let mut t = stump2();
+        t.scale_leaves(0.1);
+        assert!((t.eval(&[0.9, 0.0]) - 0.3).abs() < 1e-7);
+        assert_eq!(t.nodes[0].threshold, 0.5); // split untouched
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let t = stump2();
+        let back = Tree::from_json(&t.to_json()).unwrap();
+        for x in [[0.1f32, 0.1], [0.4, 0.9], [0.9, 0.5]] {
+            assert_eq!(t.eval(&x), back.eval(&x));
+        }
+    }
+}

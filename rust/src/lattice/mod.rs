@@ -1,0 +1,10 @@
+//! Lattice-ensemble substrate for the real-world experiments (Exps 3-6):
+//! interpolated look-up tables (Canini et al. 2016) with joint and
+//! independent training. The same multilinear-interpolation schedule is
+//! implemented as the L1 Pallas kernel for the AOT serving path.
+
+pub mod model;
+pub mod train;
+
+pub use model::Lattice;
+pub use train::{make_subsets, train_independent, train_joint, LatticeParams};

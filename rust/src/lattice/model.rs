@@ -1,0 +1,237 @@
+//! Lattice base models (Canini et al. 2016): multilinear interpolated
+//! look-up tables over a subset of the input features. A lattice with
+//! d_sub features has 2^d_sub vertex parameters θ_v; its output is
+//!
+//!   f(x) = Σ_v θ_v · Π_j ( x_j if v_j = 1 else 1 - x_j )
+//!
+//! with x restricted to the lattice's feature subset and clamped to [0,1].
+//! Evaluation uses the standard iterative contraction (d_sub successive
+//! linear interpolations halving the parameter buffer) — O(2^{d_sub+1})
+//! FMAs — which is also exactly the schedule the L1 Pallas kernel
+//! implements on the TPU side (python/compile/kernels/lattice.py).
+
+use crate::data::Dataset;
+use crate::util::json::Json;
+
+/// A single lattice over a feature subset.
+#[derive(Clone, Debug)]
+pub struct Lattice {
+    /// Indices into the full feature vector; `features[j]` is the feature
+    /// controlling bit j of the vertex index (bit 0 = LSB).
+    pub features: Vec<usize>,
+    /// 2^{features.len()} vertex parameters.
+    pub theta: Vec<f32>,
+}
+
+impl Lattice {
+    /// Zero-initialized lattice on the given subset.
+    pub fn zeros(features: Vec<usize>) -> Lattice {
+        assert!(features.len() <= MAX_DIM, "lattice dim {} > MAX_DIM {MAX_DIM}", features.len());
+        let v = 1usize << features.len();
+        Lattice { features, theta: vec![0.0; v] }
+    }
+
+    /// Construct from explicit parameters (tests, serialization).
+    pub fn from_params(features: Vec<usize>, theta: Vec<f32>) -> Lattice {
+        assert!(features.len() <= MAX_DIM, "lattice dim {} > MAX_DIM {MAX_DIM}", features.len());
+        assert_eq!(theta.len(), 1 << features.len(), "theta must have 2^d entries");
+        Lattice { features, theta }
+    }
+
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.features.len()
+    }
+
+    #[inline]
+    pub fn n_vertices(&self) -> usize {
+        self.theta.len()
+    }
+
+    /// Evaluate on a full feature vector (gathers the subset internally).
+    pub fn eval(&self, x: &[f32]) -> f32 {
+        let mut buf = [0f32; 1 << MAX_DIM];
+        self.eval_with_scratch(x, &mut buf)
+    }
+
+    /// Evaluate using caller-provided scratch (hot path; avoids zeroing).
+    #[inline]
+    pub fn eval_with_scratch(&self, x: &[f32], buf: &mut [f32]) -> f32 {
+        let d = self.dim();
+        let v = 1usize << d;
+        debug_assert!(buf.len() >= v);
+        buf[..v].copy_from_slice(&self.theta);
+        let mut half = v >> 1;
+        // Contract from the most-significant bit down: at each step,
+        // buf[i] <- lerp(buf[i], buf[i + half], x_j).
+        for j in (0..d).rev() {
+            let xj = x[self.features[j]].clamp(0.0, 1.0);
+            let (lo, hi) = buf.split_at_mut(half);
+            for (l, &h) in lo[..half].iter_mut().zip(hi[..half].iter()) {
+                *l += xj * (h - *l);
+            }
+            half >>= 1;
+        }
+        buf[0]
+    }
+
+    /// Batched evaluation over a dataset into `out[i] = f(x_i)`.
+    pub fn eval_batch(&self, ds: &Dataset, out: &mut [f32]) {
+        assert_eq!(out.len(), ds.n);
+        let mut buf = vec![0f32; self.n_vertices()];
+        for (i, slot) in out.iter_mut().enumerate() {
+            *slot = self.eval_with_scratch(ds.row(i), &mut buf);
+        }
+    }
+
+    /// Interpolation weights w_v(x) for all vertices — the gradient of the
+    /// output w.r.t. θ. Built by Kronecker doubling: O(2^{d+1}).
+    /// `w` must have length ≥ 2^d.
+    pub fn weights_into(&self, x: &[f32], w: &mut [f32]) {
+        let d = self.dim();
+        w[0] = 1.0;
+        let mut len = 1usize;
+        for j in 0..d {
+            let xj = x[self.features[j]].clamp(0.0, 1.0);
+            // Bit j set ⇒ multiply by x_j; clear ⇒ by (1 - x_j).
+            let (lo, hi) = w.split_at_mut(len);
+            for (h, l) in hi[..len].iter_mut().zip(lo[..len].iter_mut()) {
+                *h = *l * xj;
+                *l *= 1.0 - xj;
+            }
+            len <<= 1;
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("features", Json::arr_usize(&self.features)),
+            ("theta", Json::arr_f32(&self.theta)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Lattice, String> {
+        let features = v.req("features")?.as_vec_usize()?;
+        let theta = v.req("theta")?.as_vec_f32()?;
+        if theta.len() != 1 << features.len() {
+            return Err(format!(
+                "lattice theta len {} != 2^{}",
+                theta.len(),
+                features.len()
+            ));
+        }
+        Ok(Lattice { features, theta })
+    }
+}
+
+/// Maximum supported lattice dimensionality (RW1 uses 13).
+pub const MAX_DIM: usize = 14;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn identity_1d() {
+        // θ = [0, 1] ⇒ f(x) = x0.
+        let l = Lattice::from_params(vec![0], vec![0.0, 1.0]);
+        for x in [0.0f32, 0.25, 0.5, 1.0] {
+            assert!((l.eval(&[x]) - x).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn corners_reproduce_theta() {
+        // On hypercube corners, interpolation returns the vertex value.
+        let mut rng = Rng::new(1);
+        let d = 4;
+        let feats: Vec<usize> = (0..d).collect();
+        let theta: Vec<f32> = (0..1 << d).map(|_| rng.normal() as f32).collect();
+        let l = Lattice::from_params(feats, theta.clone());
+        for v in 0..1usize << d {
+            let x: Vec<f32> = (0..d).map(|j| ((v >> j) & 1) as f32).collect();
+            assert!(
+                (l.eval(&x) - theta[v]).abs() < 1e-5,
+                "corner {v}: {} vs {}",
+                l.eval(&x),
+                theta[v]
+            );
+        }
+    }
+
+    #[test]
+    fn matches_bruteforce_interpolation() {
+        let mut rng = Rng::new(2);
+        let d = 5;
+        let feats = vec![3, 0, 4, 1, 2]; // scrambled subset mapping
+        let theta: Vec<f32> = (0..1 << d).map(|_| rng.normal() as f32).collect();
+        let l = Lattice::from_params(feats.clone(), theta.clone());
+        for _ in 0..50 {
+            let x: Vec<f32> = (0..5).map(|_| rng.f32()).collect();
+            // Brute force: Σ_v θ_v Π_j w_j.
+            let mut expect = 0f64;
+            for v in 0..1usize << d {
+                let mut w = 1f64;
+                for (j, &fj) in feats.iter().enumerate() {
+                    let xj = x[fj] as f64;
+                    w *= if (v >> j) & 1 == 1 { xj } else { 1.0 - xj };
+                }
+                expect += w * theta[v] as f64;
+            }
+            assert!((l.eval(&x) as f64 - expect).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn weights_sum_to_one_and_match_eval() {
+        let mut rng = Rng::new(3);
+        let d = 6;
+        let theta: Vec<f32> = (0..1 << d).map(|_| rng.normal() as f32).collect();
+        let l = Lattice::from_params((0..d).collect(), theta.clone());
+        let mut w = vec![0f32; 1 << d];
+        for _ in 0..20 {
+            let x: Vec<f32> = (0..d).map(|_| rng.f32()).collect();
+            l.weights_into(&x, &mut w);
+            let sum: f64 = w.iter().map(|&v| v as f64).sum();
+            assert!((sum - 1.0).abs() < 1e-5, "weights sum {sum}");
+            let dot: f64 = w
+                .iter()
+                .zip(theta.iter())
+                .map(|(&a, &b)| a as f64 * b as f64)
+                .sum();
+            assert!((dot - l.eval(&x) as f64).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn input_clamping() {
+        let l = Lattice::from_params(vec![0], vec![0.0, 1.0]);
+        assert!((l.eval(&[-0.5]) - 0.0).abs() < 1e-6);
+        assert!((l.eval(&[1.5]) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let mut rng = Rng::new(4);
+        let theta: Vec<f32> = (0..8).map(|_| rng.normal() as f32).collect();
+        let l = Lattice::from_params(vec![0, 1, 2], theta);
+        let mut ds = Dataset::new("b", 3);
+        for _ in 0..40 {
+            ds.push(&[rng.f32(), rng.f32(), rng.f32()], 0.0);
+        }
+        let mut out = vec![0f32; ds.n];
+        l.eval_batch(&ds, &mut out);
+        for i in 0..ds.n {
+            assert_eq!(out[i], l.eval(ds.row(i)));
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let l = Lattice::from_params(vec![2, 0], vec![1.0, -2.0, 3.5, 0.25]);
+        let back = Lattice::from_json(&l.to_json()).unwrap();
+        assert_eq!(back.features, l.features);
+        assert_eq!(back.theta, l.theta);
+    }
+}

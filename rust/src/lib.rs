@@ -1,0 +1,35 @@
+//! # QWYC — Quit When You Can
+//!
+//! Production-oriented reproduction of *"Quit When You Can: Efficient
+//! Evaluation of Ensembles with Ordering Optimization"* (Wang, Gupta, You,
+//! 2018): jointly optimize a fixed evaluation order of an additive
+//! ensemble's base models together with per-position early-stopping
+//! thresholds, so that easy examples are classified after a few base
+//! models while the fast classifier's decisions differ from the full
+//! ensemble on at most a fraction α of examples.
+//!
+//! The crate is organized as a three-layer serving system:
+//!
+//! - **L3 (this crate)** — ensemble training substrates ([`gbt`],
+//!   [`lattice`]), the QWYC optimizer ([`qwyc`]) and baselines ([`fan`],
+//!   [`orderings`]), and a serving [`coordinator`] with dynamic batching
+//!   and early-exit scheduling, backed by [`runtime`] (PJRT) for the
+//!   AOT-compiled dense path.
+//! - **L2/L1 (build-time Python)** — JAX graph + Pallas lattice kernel,
+//!   AOT-lowered to HLO text (`python/compile/`), never on the request
+//!   path.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured record.
+
+pub mod coordinator;
+pub mod data;
+pub mod ensemble;
+pub mod experiments;
+pub mod fan;
+pub mod gbt;
+pub mod lattice;
+pub mod orderings;
+pub mod qwyc;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,382 @@
+//! `qwyc` — the command-line launcher for the QWYC serving system.
+//!
+//! Subcommands:
+//!   gen-data     generate a synthetic dataset as CSV
+//!   train        train an ensemble (GBT or lattice) and save it
+//!   optimize     run QWYC (Algorithm 1 or 2) and save the fast classifier
+//!   simulate     evaluate a fast classifier against a dataset
+//!   serve        start the TCP serving coordinator
+//!   bench-client load-test a running server
+//!   experiment   regenerate paper figures/tables (fig1..fig6, tables, all)
+//!
+//! Flags are listed in USAGE below per arm; unknown flags error out.
+
+use qwyc::coordinator::{BatchPolicy, Client, Server};
+use qwyc::data::synth::{generate, Which};
+use qwyc::data::{csv, Dataset};
+use qwyc::ensemble::Ensemble;
+use qwyc::experiments::{figures, tables, FigConfig};
+use qwyc::gbt::GbtParams;
+use qwyc::lattice::LatticeParams;
+use qwyc::qwyc::{optimize_order, optimize_thresholds_for_order, simulate, FastClassifier, QwycConfig};
+use qwyc::runtime::engine::{NativeEngine, PjrtEngine};
+use qwyc::util::cli::Args;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<(), String> {
+    match args.subcommand() {
+        Some("gen-data") => gen_data(args),
+        Some("train") => train(args),
+        Some("optimize") => optimize(args),
+        Some("simulate") => simulate_cmd(args),
+        Some("serve") => serve(args),
+        Some("bench-client") => bench_client(args),
+        Some("experiment") => experiment(args),
+        _ => {
+            println!("{}", USAGE);
+            Ok(())
+        }
+    }
+}
+
+const USAGE: &str = "qwyc — Quit When You Can: efficient ensemble evaluation (Wang/Gupta/You 2018)
+
+USAGE: qwyc <subcommand> [flags]
+
+  gen-data     --dataset adult|nomao|rw1|rw2 --scale 1.0 --seed N --out dir/
+  train        --dataset ... --kind gbt|lattice-joint|lattice-indep
+               [--trees 500 --depth 5 | --lattices 5 --dim 13 --steps 400]
+               --scale 1.0 --out model.json
+  optimize     --model model.json --dataset ... --alpha 0.005
+               [--neg-only] [--fixed-order natural|random|ind-mse|greedy-mse]
+               [--max-opt 0] --out fast.json
+  simulate     --model model.json --fast fast.json --dataset ... [--split test]
+  serve        --model model.json --fast fast.json --addr 127.0.0.1:7077
+               [--backend native|pjrt --artifact rw1_stage --artifacts-dir artifacts]
+               [--max-batch 256 --max-wait-ms 2]
+  bench-client --addr 127.0.0.1:7077 --dataset ... --requests 5000 [--pipeline 64]
+  experiment   fig1|fig2|fig3|fig4|fig5|fig6|table1|tables|all
+               [--scale 0.1 --trees 500 --max-opt 3000 --runs 5 --out results/]
+";
+
+fn which_of(args: &Args) -> Result<Which, String> {
+    Which::parse(&args.get_str("dataset", "adult"))
+}
+
+fn gen_data(args: &Args) -> Result<(), String> {
+    let which = which_of(args)?;
+    let scale = args.get_f64("scale", 1.0)?;
+    let seed = args.get_u64("seed", 1)?;
+    let out = PathBuf::from(args.get_str("out", "data"));
+    args.check_unknown()?;
+    let (tr, te) = generate(which, seed, scale);
+    csv::save(&tr, &out.join(format!("{}_train.csv", which.name()))).map_err(|e| e.to_string())?;
+    csv::save(&te, &out.join(format!("{}_test.csv", which.name()))).map_err(|e| e.to_string())?;
+    println!(
+        "wrote {}_{{train,test}}.csv  (train n={} test n={} d={} pos-rate={:.3})",
+        which.name(),
+        tr.n,
+        te.n,
+        tr.d,
+        tr.positive_rate()
+    );
+    Ok(())
+}
+
+fn load_data(args: &Args) -> Result<(Dataset, Dataset), String> {
+    if let Some(path) = args.get_opt("data") {
+        let ds = csv::load(Path::new(&path))?;
+        Ok(ds.split(0.2, args.get_u64("seed", 1)?))
+    } else {
+        let which = which_of(args)?;
+        Ok(generate(which, args.get_u64("seed", 1)?, args.get_f64("scale", 1.0)?))
+    }
+}
+
+fn train(args: &Args) -> Result<(), String> {
+    let (tr, te) = load_data(args)?;
+    let kind = args.get_str("kind", "gbt");
+    let out = PathBuf::from(args.get_str("out", "model.json"));
+    let sw = qwyc::util::timer::Stopwatch::new();
+    let ens: Ensemble = match kind.as_str() {
+        "gbt" => {
+            let params = GbtParams {
+                n_trees: args.get_usize("trees", 500)?,
+                max_depth: args.get_usize("depth", 5)?,
+                learning_rate: args.get_f64("lr", 0.1)? as f32,
+                ..Default::default()
+            };
+            args.check_unknown()?;
+            let (ens, losses) = qwyc::gbt::train(&tr, &params);
+            println!("gbt: {} trees, final train logloss {:.4}", ens.len(), losses.last().unwrap());
+            ens
+        }
+        "lattice-joint" | "lattice-indep" => {
+            let params = LatticeParams {
+                n_lattices: args.get_usize("lattices", 5)?,
+                dim: args.get_usize("dim", 13)?,
+                steps: args.get_usize("steps", 400)?,
+                batch: args.get_usize("batch", 128)?,
+                lr: args.get_f64("lr", 0.05)?,
+                l2: 1e-5,
+                seed: args.get_u64("seed", 1)?,
+            };
+            args.check_unknown()?;
+            let (ens, losses) = if kind == "lattice-joint" {
+                qwyc::lattice::train_joint(&tr, &params)
+            } else {
+                qwyc::lattice::train_independent(&tr, &params)
+            };
+            println!(
+                "{kind}: {} lattices (dim {}), final train loss {:.4}",
+                ens.len(),
+                params.dim,
+                losses.last().unwrap()
+            );
+            ens
+        }
+        other => return Err(format!("unknown --kind {other}")),
+    };
+    println!(
+        "trained in {:.1}s; train acc {:.4}, test acc {:.4}",
+        sw.elapsed_s(),
+        ens.accuracy(&tr),
+        ens.accuracy(&te)
+    );
+    ens.save(&out).map_err(|e| e.to_string())?;
+    println!("saved {}", out.display());
+    Ok(())
+}
+
+fn optimize(args: &Args) -> Result<(), String> {
+    let model = PathBuf::from(args.get_str("model", "model.json"));
+    let ens = Ensemble::load(&model)?;
+    let (tr, _) = load_data(args)?;
+    let alpha = args.get_f64("alpha", 0.005)?;
+    let neg_only = args.get_bool("neg-only", false)?;
+    let max_opt = args.get_usize("max-opt", 0)?;
+    let out = PathBuf::from(args.get_str("out", "fast.json"));
+    let fixed = args.get_opt("fixed-order");
+    args.check_unknown()?;
+
+    println!("computing score matrix ({} x {})...", tr.n, ens.len());
+    let sm = ens.score_matrix(&tr);
+    let sw = qwyc::util::timer::Stopwatch::new();
+    let fc = match fixed.as_deref() {
+        None => {
+            let cfg = QwycConfig { alpha, neg_only, max_opt_examples: max_opt, seed: 17 };
+            optimize_order(&sm, &cfg)
+        }
+        Some(name) => {
+            let order = match name {
+                "natural" => qwyc::orderings::natural(sm.t),
+                "random" => qwyc::orderings::random(sm.t, 17),
+                "ind-mse" => qwyc::orderings::individual_mse(&sm, &tr.y),
+                "greedy-mse" => qwyc::orderings::greedy_mse(&sm, &tr.y),
+                other => return Err(format!("unknown --fixed-order {other}")),
+            };
+            optimize_thresholds_for_order(&sm, &order, alpha, neg_only)
+        }
+    };
+    let sim = simulate(&fc, &sm);
+    println!(
+        "optimized in {:.1}s: train mean models {:.2}/{} ({:.1}x), diff {:.3}% (alpha {:.3}%)",
+        sw.elapsed_s(),
+        sim.mean_models,
+        sm.t,
+        sm.t as f64 / sim.mean_models,
+        sim.pct_diff * 100.0,
+        alpha * 100.0
+    );
+    fc.save(&out).map_err(|e| e.to_string())?;
+    println!("saved {}", out.display());
+    Ok(())
+}
+
+fn simulate_cmd(args: &Args) -> Result<(), String> {
+    let ens = Ensemble::load(Path::new(&args.get_str("model", "model.json")))?;
+    let fc = FastClassifier::load(Path::new(&args.get_str("fast", "fast.json")))?;
+    let (tr, te) = load_data(args)?;
+    let split = args.get_str("split", "test");
+    args.check_unknown()?;
+    let ds = if split == "train" { &tr } else { &te };
+    let sm = ens.score_matrix(ds);
+    let sim = simulate(&fc, &sm);
+    println!(
+        "{} ({} examples): mean models {:.2}/{} ({:.2}x), diff {:.3}%, early {:.1}%, acc {:.4}",
+        split,
+        ds.n,
+        sim.mean_models,
+        sm.t,
+        sm.t as f64 / sim.mean_models,
+        sim.pct_diff * 100.0,
+        sim.n_early as f64 / ds.n as f64 * 100.0,
+        sim.accuracy(&ds.y)
+    );
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<(), String> {
+    let model_path = args.get_str("model", "model.json");
+    let fast_path = args.get_str("fast", "fast.json");
+    let addr = args.get_str("addr", "127.0.0.1:7077");
+    let backend = args.get_str("backend", "native");
+    let artifact = args.get_str("artifact", "rw1_stage");
+    let artifacts_dir = args.get_str("artifacts-dir", "artifacts");
+    let policy = BatchPolicy {
+        max_batch: args.get_usize("max-batch", 256)?,
+        max_wait: Duration::from_millis(args.get_u64("max-wait-ms", 2)?),
+    };
+    args.check_unknown()?;
+
+    let ens = Ensemble::load(Path::new(&model_path))?;
+    let fc = FastClassifier::load(Path::new(&fast_path))?;
+    let d = feature_count(&ens)?;
+    println!(
+        "serving {} (T={}, backend={backend}) on {addr}; batch<={} wait<={:?}",
+        ens.name,
+        ens.len(),
+        policy.max_batch,
+        policy.max_wait
+    );
+    let server = Server::start(
+        &addr,
+        move || -> Box<dyn qwyc::runtime::engine::Engine> {
+            if backend == "pjrt" {
+                let rt = qwyc::runtime::Runtime::open(Path::new(&artifacts_dir))
+                    .expect("open artifacts (run `make artifacts`)");
+                Box::new(PjrtEngine::new(rt, &artifact, &ens, &fc).expect("pjrt engine"))
+            } else {
+                Box::new(NativeEngine::new(ens, fc, d))
+            }
+        },
+        policy,
+    )
+    .map_err(|e| e.to_string())?;
+    println!("listening on {} — Ctrl-C to stop", server.addr);
+    loop {
+        std::thread::sleep(Duration::from_secs(10));
+        println!("{}", server.metrics.snapshot().report());
+    }
+}
+
+fn bench_client(args: &Args) -> Result<(), String> {
+    let addr: std::net::SocketAddr = args
+        .get_str("addr", "127.0.0.1:7077")
+        .parse()
+        .map_err(|e| format!("--addr: {e}"))?;
+    let requests = args.get_usize("requests", 5000)?;
+    let pipeline = args.get_usize("pipeline", 64)?;
+    let (_, te) = load_data(args)?;
+    args.check_unknown()?;
+
+    let mut client = Client::connect(&addr).map_err(|e| e.to_string())?;
+    let sw = qwyc::util::timer::Stopwatch::new();
+    let mut sent = 0usize;
+    let mut recv = 0usize;
+    let mut models_sum = 0u64;
+    let mut lat_us: Vec<f64> = Vec::with_capacity(requests);
+    while recv < requests {
+        while sent < requests && sent - recv < pipeline {
+            client.send_eval(te.row(sent % te.n)).map_err(|e| e.to_string())?;
+            sent += 1;
+        }
+        let r = client.read_response().map_err(|e| e.to_string())?;
+        models_sum += r.models as u64;
+        lat_us.push(r.latency_us as f64);
+        recv += 1;
+    }
+    let el = sw.elapsed_s();
+    lat_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    println!(
+        "{} requests in {:.2}s = {:.0} rps; latency p50/p95/p99 = {:.0}/{:.0}/{:.0} us; mean models {:.2}",
+        requests,
+        el,
+        requests as f64 / el,
+        qwyc::util::stats::percentile_sorted(&lat_us, 50.0),
+        qwyc::util::stats::percentile_sorted(&lat_us, 95.0),
+        qwyc::util::stats::percentile_sorted(&lat_us, 99.0),
+        models_sum as f64 / requests as f64
+    );
+    println!("server: {}", client.stats().map_err(|e| e.to_string())?);
+    Ok(())
+}
+
+fn experiment(args: &Args) -> Result<(), String> {
+    let what = args.positional.get(1).cloned().unwrap_or_else(|| "all".into());
+    let cfg = FigConfig {
+        scale: args.get_f64("scale", 0.1)?,
+        trees: args.get_usize("trees", 500)?,
+        max_opt: args.get_usize("max-opt", 3000)?,
+        out_dir: PathBuf::from(args.get_str("out", "results")),
+        ..Default::default()
+    };
+    let runs = args.get_usize("runs", 5)?;
+    let timing_examples = args.get_usize("timing-examples", 2000)?;
+    args.check_unknown()?;
+    std::fs::create_dir_all(&cfg.out_dir).ok();
+
+    match what.as_str() {
+        "fig1" | "fig3" => figures::fig1_fig3(&cfg),
+        "fig2" => figures::fig2_or_fig4(&cfg, true),
+        "fig4" => figures::fig2_or_fig4(&cfg, false),
+        "fig5" | "fig6" => figures::fig5_fig6(&cfg),
+        "table1" => tables::table1(cfg.scale),
+        "tables" => tables::tables_2_to_5(&cfg, runs, timing_examples),
+        "all" => {
+            tables::table1(cfg.scale);
+            figures::fig1_fig3(&cfg);
+            figures::fig2_or_fig4(&cfg, true);
+            figures::fig2_or_fig4(&cfg, false);
+            figures::fig5_fig6(&cfg);
+            tables::tables_2_to_5(&cfg, runs, timing_examples);
+        }
+        other => return Err(format!("unknown experiment '{other}'")),
+    }
+    println!("\nresults written under {}", cfg.out_dir.display());
+    Ok(())
+}
+
+fn feature_count(ens: &Ensemble) -> Result<usize, String> {
+    // Infer D from the models (max feature index + 1).
+    let mut d = 0usize;
+    for m in &ens.models {
+        match m {
+            qwyc::ensemble::BaseModel::Lattice(l) => {
+                for &f in &l.features {
+                    d = d.max(f + 1);
+                }
+            }
+            qwyc::ensemble::BaseModel::Tree(t) => {
+                for n in &t.nodes {
+                    if !n.is_leaf() {
+                        d = d.max(n.feature as usize + 1);
+                    }
+                }
+            }
+        }
+    }
+    if d == 0 {
+        return Err("cannot infer feature count from ensemble".into());
+    }
+    Ok(d)
+}

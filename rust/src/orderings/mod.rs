@@ -1,0 +1,156 @@
+//! Pre-selected base-model orderings (paper Appendix B) — the baselines
+//! QWYC*'s joint optimization is compared against. Each produces a
+//! permutation that is then combined with either Algorithm-2 thresholds
+//! (`qwyc::optimize_thresholds_for_order`) or the Fan et al. early-stop
+//! mechanism (`fan::`).
+
+use crate::ensemble::ScoreMatrix;
+use crate::util::rng::Rng;
+
+/// Natural training order (for GBTs this is the boosting order — each tree
+/// was fit to the residual of the trees before it).
+pub fn natural(t: usize) -> Vec<usize> {
+    (0..t).collect()
+}
+
+/// Uniformly random permutation; the paper reports mean ± std over 5 such
+/// orderings.
+pub fn random(t: usize, seed: u64) -> Vec<usize> {
+    Rng::new(seed ^ 0x0d0e0f).permutation(t)
+}
+
+/// Order by Individual MSE (ascending): each base model's mean squared
+/// error as a standalone predictor of the ±1 label margin — Fan et al.'s
+/// suggested "total benefits" metric. Requires labels.
+pub fn individual_mse(sm: &ScoreMatrix, labels: &[f32]) -> Vec<usize> {
+    assert_eq!(labels.len(), sm.n);
+    let z: Vec<f32> = labels.iter().map(|&y| 2.0 * y - 1.0).collect();
+    let mut mses: Vec<(f64, usize)> = (0..sm.t)
+        .map(|t| {
+            let col = sm.col(t);
+            let mse = col
+                .iter()
+                .zip(z.iter())
+                .map(|(&s, &zi)| ((s - zi) as f64).powi(2))
+                .sum::<f64>()
+                / sm.n as f64;
+            (mse, t)
+        })
+        .collect();
+    mses.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+    mses.into_iter().map(|(_, t)| t).collect()
+}
+
+/// Order by Greedy MSE: first the best individual model, then repeatedly
+/// the model that minimizes the MSE of the accumulated partial ensemble
+/// against the ±1 margin (Appendix B; analogous to ordered-bagging
+/// pruning). O(T²N) — pass a subsampled matrix for large T.
+pub fn greedy_mse(sm: &ScoreMatrix, labels: &[f32]) -> Vec<usize> {
+    assert_eq!(labels.len(), sm.n);
+    let z: Vec<f32> = labels.iter().map(|&y| 2.0 * y - 1.0).collect();
+    let n = sm.n;
+    let mut g: Vec<f32> = vec![sm.bias; n];
+    let mut remaining: Vec<usize> = (0..sm.t).collect();
+    let mut order = Vec::with_capacity(sm.t);
+    while !remaining.is_empty() {
+        let mut best = (f64::INFINITY, usize::MAX, 0usize);
+        for (pos, &t) in remaining.iter().enumerate() {
+            let col = sm.col(t);
+            let mut mse = 0f64;
+            for i in 0..n {
+                let e = (g[i] + col[i] - z[i]) as f64;
+                mse += e * e;
+            }
+            if mse < best.0 || (mse == best.0 && t < best.1) {
+                best = (mse, t, pos);
+            }
+        }
+        let (_, t, pos) = best;
+        let col = sm.col(t);
+        for i in 0..n {
+            g[i] += col[i];
+        }
+        remaining.swap_remove(pos);
+        order.push(t);
+    }
+    order
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ensemble::ScoreMatrix;
+
+    /// Matrix where model 1 is a perfect predictor, model 0 is noise, and
+    /// model 2 is anti-correlated.
+    fn toy() -> (ScoreMatrix, Vec<f32>) {
+        let labels = vec![1.0, 0.0, 1.0, 0.0];
+        let z: Vec<f32> = vec![1.0, -1.0, 1.0, -1.0];
+        let n = 4;
+        let mut cols = vec![0f32; n * 3];
+        // model 0: noise
+        cols[..n].copy_from_slice(&[0.1, 0.1, -0.1, -0.1]);
+        // model 1: perfect
+        cols[n..2 * n].copy_from_slice(&z);
+        // model 2: inverted
+        for i in 0..n {
+            cols[2 * n + i] = -z[i];
+        }
+        (ScoreMatrix::new(n, 3, cols, 0.0, 0.0, vec![1.0; 3]), labels)
+    }
+
+    #[test]
+    fn individual_mse_ranks_perfect_model_first() {
+        let (sm, labels) = toy();
+        let ord = individual_mse(&sm, &labels);
+        assert_eq!(ord[0], 1);
+        assert_eq!(ord[2], 2); // anti-correlated model last
+    }
+
+    #[test]
+    fn greedy_mse_starts_with_best_and_is_permutation() {
+        let (sm, labels) = toy();
+        let ord = greedy_mse(&sm, &labels);
+        assert_eq!(ord[0], 1);
+        let mut s = ord.clone();
+        s.sort_unstable();
+        assert_eq!(s, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn greedy_differs_from_individual_with_correlated_models() {
+        // Two identical good models + one complementary model: individual
+        // MSE ranks the twins 1st and 2nd; greedy picks a twin then the
+        // complementary model (adding the second twin over-shoots).
+        let labels = vec![1.0, 0.0, 1.0, 0.0];
+        let z = [1.0f32, -1.0, 1.0, -1.0];
+        let n = 4;
+        let mut cols = vec![0f32; n * 3];
+        for i in 0..n {
+            cols[i] = z[i] * 0.9; // twin A
+            cols[n + i] = z[i] * 0.9; // twin B
+            cols[2 * n + i] = z[i] * 0.2; // small complement
+        }
+        let sm = ScoreMatrix::new(n, 3, cols, 0.0, 0.0, vec![1.0; 3]);
+        let ind = individual_mse(&sm, &labels);
+        let gre = greedy_mse(&sm, &labels);
+        assert_eq!(&ind[..2], &[0, 1]);
+        assert_eq!(gre[0], 0);
+        assert_eq!(gre[1], 2, "greedy should pick the complement: {gre:?}");
+    }
+
+    #[test]
+    fn random_orders_are_permutations_and_differ() {
+        let a = random(100, 1);
+        let b = random(100, 2);
+        assert_ne!(a, b);
+        let mut s = a.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn natural_is_identity() {
+        assert_eq!(natural(4), vec![0, 1, 2, 3]);
+    }
+}

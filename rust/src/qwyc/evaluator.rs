@@ -1,0 +1,234 @@
+//! Batched simulation of a fast classifier over a precomputed score
+//! matrix: reproduces the paper's evaluation metrics — mean number of base
+//! models evaluated, mean evaluation cost, % classification differences
+//! from the full ensemble, accuracy against labels, and the per-example
+//! stop-position histogram (Figures 5-6).
+//!
+//! The sweep is position-major with an active list (the same compaction
+//! pattern the serving scheduler uses), so each base model's score column
+//! is read contiguously once.
+
+use super::FastClassifier;
+use crate::ensemble::ScoreMatrix;
+
+/// Aggregate simulation result.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    /// Mean number of base models evaluated per example.
+    pub mean_models: f64,
+    /// Mean evaluation cost (Σ c over evaluated prefix; equals
+    /// `mean_models` when all costs are 1).
+    pub mean_cost: f64,
+    /// Fraction of examples whose fast decision differs from the full
+    /// classifier's decision.
+    pub pct_diff: f64,
+    /// Fast decision per example.
+    pub decisions: Vec<bool>,
+    /// Stop position (1-based count of models evaluated) per example.
+    pub stops: Vec<u32>,
+    /// Examples that exited early (vs. falling through to full eval).
+    pub n_early: usize,
+}
+
+impl SimResult {
+    /// Accuracy of the fast decisions against labels.
+    pub fn accuracy(&self, labels: &[f32]) -> f64 {
+        assert_eq!(labels.len(), self.decisions.len());
+        let correct = self
+            .decisions
+            .iter()
+            .zip(labels.iter())
+            .filter(|(&d, &y)| d == (y > 0.5))
+            .count();
+        correct as f64 / labels.len().max(1) as f64
+    }
+
+    /// Histogram of stop positions with `bins` buckets over [1, T].
+    pub fn stop_histogram(&self, t: usize, bins: usize) -> crate::util::stats::Histogram {
+        let mut h = crate::util::stats::Histogram::new(0.5, t as f64 + 0.5, bins.min(t));
+        for &s in &self.stops {
+            h.add(s as f64);
+        }
+        h
+    }
+}
+
+/// Simulate the fast classifier on every example of the score matrix.
+pub fn simulate(fc: &FastClassifier, sm: &ScoreMatrix) -> SimResult {
+    let n = sm.n;
+    let t = fc.order.len();
+    assert_eq!(t, sm.t, "classifier/matrix T mismatch");
+
+    let mut g = vec![fc.bias; n];
+    let mut decisions = vec![false; n];
+    let mut stops = vec![t as u32; n];
+    let mut active: Vec<u32> = (0..n as u32).collect();
+    let mut n_early = 0usize;
+    let mut cost_sum = 0f64;
+    let mut models_sum = 0f64;
+    let mut cum_cost = 0f64;
+
+    for r in 0..t {
+        let m = fc.order[r];
+        let col = sm.col(m);
+        cum_cost += sm.costs[m] as f64;
+        let (ep, en) = (fc.eps_pos[r], fc.eps_neg[r]);
+        let mut w = 0usize;
+        for idx in 0..active.len() {
+            let i = active[idx] as usize;
+            let gi = g[i] + col[i];
+            g[i] = gi;
+            if gi > ep || gi < en {
+                decisions[i] = gi > ep;
+                stops[i] = (r + 1) as u32;
+                models_sum += (r + 1) as f64;
+                cost_sum += cum_cost;
+                n_early += 1;
+            } else {
+                active[w] = i as u32;
+                w += 1;
+            }
+        }
+        active.truncate(w);
+        if active.is_empty() {
+            break;
+        }
+    }
+    // Survivors: full evaluation, decide by β.
+    for &i in &active {
+        let i = i as usize;
+        decisions[i] = g[i] >= sm.beta;
+        stops[i] = t as u32;
+        models_sum += t as f64;
+        cost_sum += sm.total_cost();
+    }
+
+    let mut diffs = 0usize;
+    for i in 0..n {
+        if decisions[i] != sm.full_positive(i) {
+            diffs += 1;
+        }
+    }
+
+    SimResult {
+        mean_models: models_sum / n.max(1) as f64,
+        mean_cost: cost_sum / n.max(1) as f64,
+        pct_diff: diffs as f64 / n.max(1) as f64,
+        decisions,
+        stops,
+        n_early,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ensemble::ScoreMatrix;
+
+    /// 4 examples, 2 models; bias 0, β 0.
+    /// cols: m0 = [2, -2, 0.1, -0.1], m1 = [1, -1, 1, -1].
+    /// full  = [3, -3, 1.1, -1.1] → decisions [P, N, P, N].
+    fn toy() -> ScoreMatrix {
+        ScoreMatrix::new(
+            4,
+            2,
+            vec![2.0, -2.0, 0.1, -0.1, 1.0, -1.0, 1.0, -1.0],
+            0.0,
+            0.0,
+            vec![1.0, 1.0],
+        )
+    }
+
+    #[test]
+    fn no_early_stop_matches_full() {
+        let sm = toy();
+        let fc = FastClassifier::no_early_stop(vec![0, 1], 0.0, 0.0);
+        let sim = simulate(&fc, &sm);
+        assert_eq!(sim.pct_diff, 0.0);
+        assert_eq!(sim.mean_models, 2.0);
+        assert_eq!(sim.n_early, 0);
+        assert_eq!(sim.decisions, vec![true, false, true, false]);
+    }
+
+    #[test]
+    fn thresholds_trigger_early_exits() {
+        let sm = toy();
+        // After model 0: exit positive above 1.5, negative below -1.5.
+        let fc = FastClassifier {
+            order: vec![0, 1],
+            eps_pos: vec![1.5, f32::INFINITY],
+            eps_neg: vec![-1.5, f32::NEG_INFINITY],
+            bias: 0.0,
+            beta: 0.0,
+        };
+        let sim = simulate(&fc, &sm);
+        assert_eq!(sim.stops, vec![1, 1, 2, 2]);
+        assert_eq!(sim.n_early, 2);
+        assert_eq!(sim.mean_models, 1.5);
+        assert_eq!(sim.pct_diff, 0.0);
+        assert_eq!(sim.decisions, vec![true, false, true, false]);
+    }
+
+    #[test]
+    fn wrong_early_exit_counts_as_diff() {
+        let sm = toy();
+        // Aggressive ε⁻ = +0.5 after model 0 forces example 2 (g=0.1,
+        // full-positive) to exit negative — one disagreement.
+        let fc = FastClassifier {
+            order: vec![0, 1],
+            eps_pos: vec![1.5, f32::INFINITY],
+            eps_neg: vec![0.5, f32::NEG_INFINITY],
+            bias: 0.0,
+            beta: 0.0,
+        };
+        let sim = simulate(&fc, &sm);
+        assert_eq!(sim.pct_diff, 0.25);
+        assert!(!sim.decisions[2]);
+    }
+
+    #[test]
+    fn order_is_respected() {
+        let sm = toy();
+        // Evaluate m1 first with a tight positive threshold: examples 0 and
+        // 2 (m1 = +1) exit at position 1.
+        let fc = FastClassifier {
+            order: vec![1, 0],
+            eps_pos: vec![0.5, f32::INFINITY],
+            eps_neg: vec![-0.5, f32::NEG_INFINITY],
+            bias: 0.0,
+            beta: 0.0,
+        };
+        let sim = simulate(&fc, &sm);
+        assert_eq!(sim.stops, vec![1, 1, 1, 1]);
+        assert_eq!(sim.decisions, vec![true, false, true, false]);
+    }
+
+    #[test]
+    fn accuracy_against_labels() {
+        let sm = toy();
+        let fc = FastClassifier::no_early_stop(vec![0, 1], 0.0, 0.0);
+        let sim = simulate(&fc, &sm);
+        assert_eq!(sim.accuracy(&[1.0, 0.0, 1.0, 0.0]), 1.0);
+        assert_eq!(sim.accuracy(&[0.0, 0.0, 1.0, 0.0]), 0.75);
+    }
+
+    #[test]
+    fn simulate_agrees_with_eval_single() {
+        use crate::data::synth::{generate, Which};
+        use crate::lattice::{train_joint, LatticeParams};
+        let (tr, _) = generate(Which::Rw2Like, 9, 0.01);
+        let (ens, _) = train_joint(
+            &tr,
+            &LatticeParams { n_lattices: 6, dim: 4, steps: 60, ..Default::default() },
+        );
+        let sm = ens.score_matrix(&tr);
+        let order: Vec<usize> = (0..sm.t).collect();
+        let fc = crate::qwyc::optimize_thresholds_for_order(&sm, &order, 0.01, false);
+        let sim = simulate(&fc, &sm);
+        for i in (0..tr.n).step_by(17) {
+            let single = fc.eval_single(&ens, tr.row(i));
+            assert_eq!(single.positive, sim.decisions[i], "example {i}");
+            assert_eq!(single.models_evaluated as u32, sim.stops[i], "example {i}");
+        }
+    }
+}

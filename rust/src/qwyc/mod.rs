@@ -1,0 +1,249 @@
+//! The paper's core contribution: joint optimization of the base-model
+//! evaluation order π and per-position early-stopping thresholds
+//! (ε⁺, ε⁻) — "Quit When You Can" (Algorithms 1 and 2), plus the fast
+//! classifier they produce and simulators/evaluators over score matrices.
+//!
+//! Evaluation rule for an example x after the r-th model in order π
+//! (paper §3.1): with running score g_r = bias + Σ_{t≤r} f_{π(t)}(x),
+//!
+//! - g_r > ε_r⁺  ⇒ classify positive, stop;
+//! - g_r < ε_r⁻  ⇒ classify negative, stop;
+//! - otherwise continue; after all T models, classify by f(x) ≥ β.
+//!
+//! The optimizers guarantee the empirical fraction of examples whose fast
+//! decision differs from the full ensemble's is ≤ α on the optimization
+//! set (the paper's constraint in problem (2)).
+
+pub mod evaluator;
+pub mod multiclass;
+pub mod order;
+pub mod thresholds;
+
+pub use evaluator::{simulate, SimResult};
+pub use order::optimize_order;
+pub use thresholds::optimize_thresholds_for_order;
+
+use crate::util::json::Json;
+
+/// Configuration for the QWYC optimizers.
+#[derive(Clone, Debug)]
+pub struct QwycConfig {
+    /// Maximum fraction of examples whose fast decision may differ from
+    /// the full ensemble (the constraint level α in problem (2)).
+    pub alpha: f64,
+    /// Filter-and-score mode: only early-*negative* thresholds are
+    /// optimized (ε⁺ ≡ +∞); positives always receive the full score
+    /// (paper §3.1 "Filtering Candidates", used in Experiments 3-6).
+    pub neg_only: bool,
+    /// Subsample the optimization set to at most this many examples
+    /// (0 = use all). Keeps Algorithm 1's O(T²N) tractable at T=500 on
+    /// this single-core testbed; documented wherever used.
+    pub max_opt_examples: usize,
+    pub seed: u64,
+}
+
+impl Default for QwycConfig {
+    fn default() -> Self {
+        QwycConfig { alpha: 0.005, neg_only: false, max_opt_examples: 0, seed: 17 }
+    }
+}
+
+/// The optimized fast classifier: an evaluation order plus 2T thresholds.
+#[derive(Clone, Debug)]
+pub struct FastClassifier {
+    /// π: `order[r]` is the index (into the original ensemble) of the
+    /// base model evaluated at position r.
+    pub order: Vec<usize>,
+    /// Early-positive thresholds ε_r⁺ (`+∞` ⇒ no early positive at r).
+    pub eps_pos: Vec<f32>,
+    /// Early-negative thresholds ε_r⁻ (`-∞` ⇒ no early negative at r).
+    pub eps_neg: Vec<f32>,
+    /// Ensemble bias folded into the running score at r = 0.
+    pub bias: f32,
+    /// Full-classifier decision threshold β.
+    pub beta: f32,
+}
+
+impl FastClassifier {
+    /// A "never stop early" classifier over the given order — the
+    /// full-evaluation baseline expressed in the same machinery.
+    pub fn no_early_stop(order: Vec<usize>, bias: f32, beta: f32) -> FastClassifier {
+        let t = order.len();
+        FastClassifier {
+            order,
+            eps_pos: vec![f32::INFINITY; t],
+            eps_neg: vec![f32::NEG_INFINITY; t],
+            bias,
+            beta,
+        }
+    }
+
+    pub fn t(&self) -> usize {
+        self.order.len()
+    }
+
+    /// Check structural invariants (order is a permutation; ε⁻ ≤ ε⁺).
+    pub fn validate(&self) -> Result<(), String> {
+        let t = self.order.len();
+        if self.eps_pos.len() != t || self.eps_neg.len() != t {
+            return Err("threshold vectors must have length T".into());
+        }
+        let mut seen = vec![false; t];
+        for &m in &self.order {
+            if m >= t || seen[m] {
+                return Err(format!("order is not a permutation (model {m})"));
+            }
+            seen[m] = true;
+        }
+        for r in 0..t {
+            if !(self.eps_neg[r] <= self.eps_pos[r]) {
+                return Err(format!(
+                    "eps_neg[{r}]={} > eps_pos[{r}]={}",
+                    self.eps_neg[r], self.eps_pos[r]
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// True early-exit evaluation of one example against a live ensemble:
+    /// evaluates base models lazily in order — this is the serving hot
+    /// path measured in the paper's Tables 2-5.
+    pub fn eval_single(&self, ens: &crate::ensemble::Ensemble, x: &[f32]) -> SingleResult {
+        let mut g = self.bias;
+        for (r, &m) in self.order.iter().enumerate() {
+            g += ens.models[m].eval(x);
+            if g > self.eps_pos[r] {
+                return SingleResult { positive: true, score: g, models_evaluated: r + 1, early: true };
+            }
+            if g < self.eps_neg[r] {
+                return SingleResult { positive: false, score: g, models_evaluated: r + 1, early: true };
+            }
+        }
+        SingleResult {
+            positive: g >= self.beta,
+            score: g,
+            models_evaluated: self.order.len(),
+            early: false,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("order", Json::arr_usize(&self.order)),
+            ("eps_pos", Json::arr_f32_inf(&self.eps_pos)),
+            ("eps_neg", Json::arr_f32_inf(&self.eps_neg)),
+            ("bias", Json::Num(self.bias as f64)),
+            ("beta", Json::Num(self.beta as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<FastClassifier, String> {
+        let fc = FastClassifier {
+            order: v.req("order")?.as_vec_usize()?,
+            eps_pos: v.req("eps_pos")?.as_vec_f32_inf()?,
+            eps_neg: v.req("eps_neg")?.as_vec_f32_inf()?,
+            bias: v.req("bias")?.as_f64()? as f32,
+            beta: v.req("beta")?.as_f64()? as f32,
+        };
+        fc.validate()?;
+        Ok(fc)
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
+        crate::util::json::write_file(path, &self.to_json())
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<FastClassifier, String> {
+        FastClassifier::from_json(&crate::util::json::read_file(path)?)
+    }
+}
+
+/// Outcome of a single-example early-exit evaluation.
+#[derive(Clone, Copy, Debug)]
+pub struct SingleResult {
+    pub positive: bool,
+    pub score: f32,
+    pub models_evaluated: usize,
+    pub early: bool,
+}
+
+// JSON helpers for ±∞ thresholds (JSON has no Infinity literal).
+impl Json {
+    pub fn arr_f32_inf(xs: &[f32]) -> Json {
+        Json::Arr(
+            xs.iter()
+                .map(|&v| {
+                    if v == f32::INFINITY {
+                        Json::str("+inf")
+                    } else if v == f32::NEG_INFINITY {
+                        Json::str("-inf")
+                    } else {
+                        Json::Num(v as f64)
+                    }
+                })
+                .collect(),
+        )
+    }
+}
+
+trait JsonInfExt {
+    fn as_vec_f32_inf(&self) -> Result<Vec<f32>, String>;
+}
+
+impl JsonInfExt for Json {
+    fn as_vec_f32_inf(&self) -> Result<Vec<f32>, String> {
+        self.as_arr()?
+            .iter()
+            .map(|v| match v {
+                Json::Str(s) if s == "+inf" => Ok(f32::INFINITY),
+                Json::Str(s) if s == "-inf" => Ok(f32::NEG_INFINITY),
+                other => other.as_f64().map(|x| x as f32),
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validate_catches_bad_permutation() {
+        let fc = FastClassifier {
+            order: vec![0, 0, 1],
+            eps_pos: vec![f32::INFINITY; 3],
+            eps_neg: vec![f32::NEG_INFINITY; 3],
+            bias: 0.0,
+            beta: 0.0,
+        };
+        assert!(fc.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_crossed_thresholds() {
+        let fc = FastClassifier {
+            order: vec![0, 1],
+            eps_pos: vec![0.0, 1.0],
+            eps_neg: vec![0.5, -1.0],
+            bias: 0.0,
+            beta: 0.0,
+        };
+        assert!(fc.validate().is_err());
+    }
+
+    #[test]
+    fn json_roundtrip_with_infinities() {
+        let fc = FastClassifier {
+            order: vec![2, 0, 1],
+            eps_pos: vec![1.5, f32::INFINITY, 0.25],
+            eps_neg: vec![f32::NEG_INFINITY, -3.0, -0.25],
+            bias: 0.5,
+            beta: 0.1,
+        };
+        let back = FastClassifier::from_json(&fc.to_json()).unwrap();
+        assert_eq!(back.order, fc.order);
+        assert_eq!(back.eps_pos, fc.eps_pos);
+        assert_eq!(back.eps_neg, fc.eps_neg);
+    }
+}

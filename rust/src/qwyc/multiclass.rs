@@ -1,0 +1,438 @@
+//! Multi-class QWYC — the extension the paper's Conclusions call
+//! "straightforward": per-class additive scores g_c,r accumulate along a
+//! shared base-model order, and an example exits early at position r when
+//! the leading class's margin over the runner-up clears a per-position
+//! threshold ε_r:
+//!
+//! ```text
+//! exit with class c*  iff  g_{c*,r} − max_{c≠c*} g_{c,r} > ε_r.
+//! ```
+//!
+//! The 1-D threshold structure is the same monotone tradeoff as the
+//! binary case (raising ε_r ⇒ fewer exits and fewer disagreements with
+//! the full classifier), so Algorithm 2's search and Algorithm 1's
+//! greedy cost-ratio ordering carry over verbatim; the error budget α
+//! again bounds the fraction of examples whose fast label differs from
+//! the full ensemble's argmax.
+
+use crate::util::kth_largest;
+
+/// Per-class score tensors: `scores[c][t*n + i]` = f_{c,t}(x_i) — one
+/// additive ensemble per class over a shared base-model index space
+/// (one-vs-rest training produces exactly this).
+#[derive(Clone, Debug)]
+pub struct MultiScoreMatrix {
+    pub n: usize,
+    pub t: usize,
+    pub c: usize,
+    scores: Vec<Vec<f32>>,
+    pub biases: Vec<f32>,
+    pub costs: Vec<f32>,
+    /// Cached full-classifier argmax labels.
+    full_label: Vec<u16>,
+}
+
+impl MultiScoreMatrix {
+    pub fn new(n: usize, t: usize, scores: Vec<Vec<f32>>, biases: Vec<f32>, costs: Vec<f32>) -> Self {
+        let c = scores.len();
+        assert!(c >= 2, "need >= 2 classes");
+        assert_eq!(biases.len(), c);
+        assert_eq!(costs.len(), t);
+        for s in &scores {
+            assert_eq!(s.len(), n * t);
+        }
+        // Full scores per class → argmax label.
+        let mut full_label = vec![0u16; n];
+        let mut best = vec![f32::NEG_INFINITY; n];
+        for (ci, s) in scores.iter().enumerate() {
+            for i in 0..n {
+                let mut v = biases[ci];
+                for t_i in 0..t {
+                    v += s[t_i * n + i];
+                }
+                if v > best[i] {
+                    best[i] = v;
+                    full_label[i] = ci as u16;
+                }
+            }
+        }
+        MultiScoreMatrix { n, t, c, scores, biases, costs, full_label }
+    }
+
+    #[inline]
+    pub fn col(&self, class: usize, t: usize) -> &[f32] {
+        &self.scores[class][t * self.n..(t + 1) * self.n]
+    }
+
+    #[inline]
+    pub fn full_label(&self, i: usize) -> usize {
+        self.full_label[i] as usize
+    }
+}
+
+/// Multi-class fast classifier: shared order + per-position margin
+/// thresholds (+∞ ⇒ never exit at that position).
+#[derive(Clone, Debug)]
+pub struct MultiFastClassifier {
+    pub order: Vec<usize>,
+    pub eps: Vec<f32>,
+    pub biases: Vec<f32>,
+}
+
+/// Simulation result (mirrors the binary `SimResult`).
+#[derive(Clone, Debug)]
+pub struct MultiSimResult {
+    pub mean_models: f64,
+    pub pct_diff: f64,
+    pub labels: Vec<u16>,
+    pub stops: Vec<u32>,
+}
+
+impl MultiSimResult {
+    pub fn accuracy(&self, y: &[u16]) -> f64 {
+        let ok = self.labels.iter().zip(y.iter()).filter(|(a, b)| a == b).count();
+        ok as f64 / y.len().max(1) as f64
+    }
+}
+
+/// State shared by the optimizer passes: per-class running scores.
+struct Running {
+    g: Vec<Vec<f32>>, // [c][n]
+}
+
+impl Running {
+    fn new(sm: &MultiScoreMatrix) -> Running {
+        Running { g: sm.biases.iter().map(|&b| vec![b; sm.n]).collect() }
+    }
+
+    fn advance(&mut self, sm: &MultiScoreMatrix, model: usize, active: &[u32]) {
+        for (ci, gc) in self.g.iter_mut().enumerate() {
+            let col = sm.col(ci, model);
+            for &i in active {
+                gc[i as usize] += col[i as usize];
+            }
+        }
+    }
+
+    /// Margin of the current leader over the runner-up, plus the leader.
+    #[inline]
+    fn margin(&self, i: usize) -> (f32, u16) {
+        let (mut best, mut second, mut arg) = (f32::NEG_INFINITY, f32::NEG_INFINITY, 0u16);
+        for (ci, gc) in self.g.iter().enumerate() {
+            let v = gc[i];
+            if v > best {
+                second = best;
+                best = v;
+                arg = ci as u16;
+            } else if v > second {
+                second = v;
+            }
+        }
+        (best - second, arg)
+    }
+}
+
+/// Optimize per-position margin thresholds along a fixed order
+/// (multi-class Algorithm 2): at each position, the smallest feasible
+/// ε_r admits the most exits; feasibility = would-be-wrong exits within
+/// the remaining budget. Exits use strict `margin > ε_r`.
+pub fn optimize_thresholds_multiclass(
+    sm: &MultiScoreMatrix,
+    order: &[usize],
+    alpha: f64,
+) -> MultiFastClassifier {
+    assert_eq!(order.len(), sm.t);
+    let n = sm.n;
+    let budget_total = (alpha * n as f64).floor() as usize;
+    let mut spent = 0usize;
+    let mut run = Running::new(sm);
+    let mut active: Vec<u32> = (0..n as u32).collect();
+    let mut eps = vec![f32::INFINITY; sm.t];
+    let mut wrong_margins: Vec<f32> = Vec::with_capacity(n);
+
+    for (r, &m) in order.iter().enumerate() {
+        run.advance(sm, m, &active);
+        if r + 1 == sm.t {
+            break;
+        }
+        // Margins of actives whose current leader DISAGREES with the full
+        // label — exits on those spend budget. ε_r must keep
+        // #{wrong margins > ε} ≤ remaining budget ⇒ ε at the (B+1)-th
+        // largest wrong margin (strict >).
+        wrong_margins.clear();
+        for &i in &active {
+            let (mg, lead) = run.margin(i as usize);
+            if lead as usize != sm.full_label(i as usize) {
+                wrong_margins.push(mg);
+            }
+        }
+        let budget = budget_total - spent;
+        let e = if wrong_margins.is_empty() {
+            // Any exit is safe; exit everything with margin > 0.
+            0.0
+        } else if budget >= wrong_margins.len() {
+            0.0f32.min(neg_inf_guard())
+        } else {
+            kth_largest(&mut wrong_margins, budget).max(0.0)
+        };
+        eps[r] = e;
+        // Commit: retire exits, charge errors.
+        let mut w = 0usize;
+        for idx in 0..active.len() {
+            let i = active[idx];
+            let (mg, lead) = run.margin(i as usize);
+            if mg > e {
+                if lead as usize != sm.full_label(i as usize) {
+                    spent += 1;
+                }
+            } else {
+                active[w] = i;
+                w += 1;
+            }
+        }
+        active.truncate(w);
+        if active.is_empty() {
+            break;
+        }
+    }
+    MultiFastClassifier { order: order.to_vec(), eps, biases: sm.biases.clone() }
+}
+
+#[inline]
+fn neg_inf_guard() -> f32 {
+    // ε may not go below 0: a non-positive margin means the leader is
+    // tied/ambiguous, and exits there would be arbitrary.
+    0.0
+}
+
+/// Greedy joint order + thresholds (multi-class Algorithm 1): at each
+/// position pick the remaining base model minimizing c_k·|C| / #exits
+/// under the budget-feasible threshold.
+pub fn optimize_order_multiclass(sm: &MultiScoreMatrix, alpha: f64) -> MultiFastClassifier {
+    let t = sm.t;
+    let n = sm.n;
+    let budget_total = (alpha * n as f64).floor() as usize;
+    let mut spent = 0usize;
+    let mut run = Running::new(sm);
+    let mut active: Vec<u32> = (0..n as u32).collect();
+    let mut pi: Vec<usize> = (0..t).collect();
+    let mut eps = vec![f32::INFINITY; t];
+    let mut wrong_margins: Vec<f32> = Vec::with_capacity(n);
+
+    for r in 0..t {
+        if active.is_empty() || r + 1 == t {
+            pi[r..].sort_by(|&a, &b| sm.costs[a].partial_cmp(&sm.costs[b]).unwrap());
+            break;
+        }
+        let c_before = active.len();
+        let mut best: Option<(f64, usize, f32)> = None; // (J, k, eps)
+        for k in r..t {
+            let m = pi[k];
+            // Tentative advance: compute margins with model m added.
+            let mut exits = 0usize;
+            wrong_margins.clear();
+            let budget = budget_total - spent;
+            // Two passes: collect wrong margins, then count exits under ε.
+            let mut margins: Vec<(f32, bool)> = Vec::with_capacity(active.len());
+            for &i in &active {
+                let iu = i as usize;
+                let (mg, lead) = margin_with(sm, &run, m, iu);
+                let wrong = lead as usize != sm.full_label(iu);
+                margins.push((mg, wrong));
+                if wrong {
+                    wrong_margins.push(mg);
+                }
+            }
+            let e = if wrong_margins.is_empty() || budget >= wrong_margins.len() {
+                0.0
+            } else {
+                kth_largest(&mut wrong_margins, budget).max(0.0)
+            };
+            for &(mg, _) in &margins {
+                if mg > e {
+                    exits += 1;
+                }
+            }
+            if exits == 0 {
+                continue;
+            }
+            let j = sm.costs[m] as f64 * c_before as f64 / exits as f64;
+            if best.map(|(bj, ..)| j < bj).unwrap_or(true) {
+                best = Some((j, k, e));
+            }
+        }
+        let (k_star, e) = best.map(|(_, k, e)| (k, e)).unwrap_or((r, f32::INFINITY));
+        pi.swap(r, k_star);
+        run.advance(sm, pi[r], &active);
+        eps[r] = e;
+        let mut w = 0usize;
+        for idx in 0..active.len() {
+            let i = active[idx];
+            let (mg, lead) = run.margin(i as usize);
+            if mg > e {
+                if lead as usize != sm.full_label(i as usize) {
+                    spent += 1;
+                }
+            } else {
+                active[w] = i;
+                w += 1;
+            }
+        }
+        active.truncate(w);
+    }
+    MultiFastClassifier { order: pi, eps, biases: sm.biases.clone() }
+}
+
+#[inline]
+fn margin_with(sm: &MultiScoreMatrix, run: &Running, model: usize, i: usize) -> (f32, u16) {
+    let (mut best, mut second, mut arg) = (f32::NEG_INFINITY, f32::NEG_INFINITY, 0u16);
+    for ci in 0..sm.c {
+        let v = run.g[ci][i] + sm.col(ci, model)[i];
+        if v > best {
+            second = best;
+            best = v;
+            arg = ci as u16;
+        } else if v > second {
+            second = v;
+        }
+    }
+    (best - second, arg)
+}
+
+/// Simulate a multi-class fast classifier over a score matrix.
+pub fn simulate_multiclass(fc: &MultiFastClassifier, sm: &MultiScoreMatrix) -> MultiSimResult {
+    let n = sm.n;
+    let t = sm.t;
+    assert_eq!(fc.order.len(), t);
+    let mut run = Running::new(sm);
+    let mut active: Vec<u32> = (0..n as u32).collect();
+    let mut labels = vec![0u16; n];
+    let mut stops = vec![t as u32; n];
+    let mut models_sum = 0f64;
+    for r in 0..t {
+        run.advance(sm, fc.order[r], &active);
+        let e = fc.eps[r];
+        let mut w = 0usize;
+        for idx in 0..active.len() {
+            let i = active[idx];
+            let iu = i as usize;
+            let (mg, lead) = run.margin(iu);
+            if r + 1 < t && mg > e {
+                labels[iu] = lead;
+                stops[iu] = (r + 1) as u32;
+                models_sum += (r + 1) as f64;
+            } else {
+                active[w] = i;
+                w += 1;
+            }
+        }
+        active.truncate(w);
+        if active.is_empty() {
+            break;
+        }
+    }
+    for &i in &active {
+        let iu = i as usize;
+        let (_, lead) = run.margin(iu);
+        labels[iu] = lead;
+        stops[iu] = t as u32;
+        models_sum += t as f64;
+    }
+    let diffs = (0..n).filter(|&i| labels[i] as usize != sm.full_label(i)).count();
+    MultiSimResult {
+        mean_models: models_sum / n.max(1) as f64,
+        pct_diff: diffs as f64 / n.max(1) as f64,
+        labels,
+        stops,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Synthetic 3-class problem: latent class center per example, each
+    /// base model votes noisily for the true class.
+    fn synthetic(n: usize, t: usize, c: usize, noise: f32, seed: u64) -> (MultiScoreMatrix, Vec<u16>) {
+        let mut rng = Rng::new(seed);
+        let y: Vec<u16> = (0..n).map(|_| rng.below(c) as u16).collect();
+        let mut scores: Vec<Vec<f32>> = vec![vec![0f32; n * t]; c];
+        for t_i in 0..t {
+            for i in 0..n {
+                for (ci, s) in scores.iter_mut().enumerate() {
+                    let signal = if ci == y[i] as usize { 1.0 } else { 0.0 };
+                    s[t_i * n + i] = signal + noise * rng.normal() as f32;
+                }
+            }
+        }
+        let sm = MultiScoreMatrix::new(n, t, scores, vec![0.0; c], vec![1.0; t]);
+        (sm, y)
+    }
+
+    #[test]
+    fn full_label_matches_bruteforce() {
+        let (sm, _) = synthetic(50, 4, 3, 0.5, 1);
+        for i in 0..sm.n {
+            let mut best = (f32::NEG_INFINITY, 0usize);
+            for ci in 0..sm.c {
+                let v: f32 = sm.biases[ci] + (0..sm.t).map(|t| sm.col(ci, t)[i]).sum::<f32>();
+                if v > best.0 {
+                    best = (v, ci);
+                }
+            }
+            assert_eq!(sm.full_label(i), best.1);
+        }
+    }
+
+    #[test]
+    fn alpha_zero_is_faithful() {
+        let (sm, _) = synthetic(400, 8, 4, 0.8, 2);
+        let order: Vec<usize> = (0..sm.t).collect();
+        let fc = optimize_thresholds_multiclass(&sm, &order, 0.0);
+        let sim = simulate_multiclass(&fc, &sm);
+        assert_eq!(sim.pct_diff, 0.0);
+        assert!(sim.mean_models <= sm.t as f64);
+    }
+
+    #[test]
+    fn budget_buys_earlier_exits_and_respects_alpha() {
+        let (sm, _) = synthetic(600, 10, 3, 1.0, 3);
+        let order: Vec<usize> = (0..sm.t).collect();
+        let mut prev = f64::INFINITY;
+        for &alpha in &[0.0, 0.01, 0.05] {
+            let fc = optimize_thresholds_multiclass(&sm, &order, alpha);
+            let sim = simulate_multiclass(&fc, &sm);
+            assert!(sim.pct_diff <= alpha + 1e-9, "alpha={alpha} diff={}", sim.pct_diff);
+            assert!(sim.mean_models <= prev + 1e-9);
+            prev = sim.mean_models;
+        }
+    }
+
+    #[test]
+    fn joint_order_beats_or_matches_natural() {
+        let (sm, _) = synthetic(500, 12, 3, 0.9, 4);
+        let alpha = 0.01;
+        let star = simulate_multiclass(&optimize_order_multiclass(&sm, alpha), &sm);
+        let natural: Vec<usize> = (0..sm.t).collect();
+        let fixed = simulate_multiclass(&optimize_thresholds_multiclass(&sm, &natural, alpha), &sm);
+        assert!(star.pct_diff <= alpha + 1e-9);
+        assert!(
+            star.mean_models <= fixed.mean_models + 1e-9,
+            "joint {} vs natural {}",
+            star.mean_models,
+            fixed.mean_models
+        );
+    }
+
+    #[test]
+    fn easy_examples_exit_early() {
+        // Low noise ⇒ most examples decided after very few models.
+        let (sm, y) = synthetic(400, 20, 4, 0.2, 5);
+        let fc = optimize_order_multiclass(&sm, 0.005);
+        let sim = simulate_multiclass(&fc, &sm);
+        assert!(sim.mean_models < 5.0, "mean models {}", sim.mean_models);
+        // And the fast labels remain accurate against ground truth.
+        assert!(sim.accuracy(&y) > 0.95, "acc {}", sim.accuracy(&y));
+    }
+}

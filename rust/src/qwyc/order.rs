@@ -1,0 +1,256 @@
+//! Algorithm 1: greedy joint optimization of the evaluation order π and
+//! the early-stopping thresholds (QWYC*).
+//!
+//! At each position r the optimizer tries every remaining base model k as
+//! π(r): it advances the active examples' running scores by k's column,
+//! runs the Algorithm-2 threshold search under the remaining α budget, and
+//! scores the candidate by the paper's evaluation-time ratio
+//!
+//! ```text
+//! J_r(k) = c_k · |C_{r-1}|  /  #newly-decided(k)
+//! ```
+//!
+//! (∞ when k decides nothing). The argmin-J candidate is committed — its
+//! thresholds become (ε_r⁻, ε_r⁺), the examples it decides are retired,
+//! and its disagreements are charged against the α budget. This is the
+//! greedy cost-ratio rule of Munagala et al.'s Pipelined Set Cover, which
+//! gives QWYC its 4-approximation guarantee (paper Theorem 1, reproduced
+//! as a test in `rust/tests/pipeline_example.rs`).
+//!
+//! Complexity: O(T²·N̄) where N̄ is the (shrinking) active-set size; the
+//! per-candidate threshold search is O(|C|) via quickselect (see
+//! thresholds.rs). `QwycConfig::max_opt_examples` bounds N for T=500 runs.
+
+use super::thresholds::{optimize_position, Search};
+use super::{FastClassifier, QwycConfig};
+use crate::ensemble::ScoreMatrix;
+use crate::util::rng::Rng;
+
+/// Run QWYC* (Algorithm 1) on a score matrix.
+pub fn optimize_order(sm_full: &ScoreMatrix, cfg: &QwycConfig) -> FastClassifier {
+    // Optional optimization-set subsample (keeps O(T²N) tractable for
+    // T=500 on this testbed; the paper itself optimizes on the full train
+    // set). Only the greedy ORDER search runs on the subsample — the
+    // final thresholds are refit on the full set below, which avoids the
+    // winner's-curse overfit of picking, at every position, the candidate
+    // whose subsample order statistics happened to look most permissive.
+    let subsampled = cfg.max_opt_examples > 0 && sm_full.n > cfg.max_opt_examples;
+    let sub;
+    let sm = if subsampled {
+        let mut rng = Rng::new(cfg.seed ^ 0x0b7);
+        let idx = rng.choose_k(sm_full.n, cfg.max_opt_examples);
+        sub = sm_full.select_examples(&idx);
+        &sub
+    } else {
+        sm_full
+    };
+
+    let t = sm.t;
+    let n = sm.n;
+    let budget_total = (cfg.alpha * n as f64).floor() as usize;
+    let mut spent = 0usize;
+
+    let full_pos_all: Vec<bool> = (0..n).map(|i| sm.full_positive(i)).collect();
+    let mut g: Vec<f32> = vec![sm.bias; n];
+    let mut active: Vec<u32> = (0..n as u32).collect();
+
+    // π as a mutable array over model indices; position r picks from
+    // remaining[r..] by swapping (exactly Algorithm 1's swap structure).
+    let mut pi: Vec<usize> = (0..t).collect();
+    let mut eps_pos = vec![f32::INFINITY; t];
+    let mut eps_neg = vec![f32::NEG_INFINITY; t];
+
+    // Scratch buffers reused across candidates.
+    let mut gbuf: Vec<f32> = Vec::with_capacity(n);
+    let mut fbuf: Vec<bool> = Vec::with_capacity(n);
+    let mut scratch: Vec<f32> = Vec::with_capacity(n);
+
+    for r in 0..t {
+        if active.is_empty() || r + 1 == t {
+            // Nothing left to decide (or last position, where thresholds
+            // are moot): keep remaining models in cheapest-first order so
+            // stragglers pay as little as possible per step.
+            pi[r..].sort_by(|&a, &b| sm.costs[a].partial_cmp(&sm.costs[b]).unwrap());
+            break;
+        }
+        // Gather active full_pos once per position.
+        fbuf.clear();
+        for &i in &active {
+            fbuf.push(full_pos_all[i as usize]);
+        }
+
+        let c_before = active.len();
+        let mut best_k = r; // default: leave π unchanged at this position
+        let mut best_j = f64::INFINITY;
+        let mut best_opt = None;
+
+        for k in r..t {
+            let m = pi[k];
+            let col = sm.col(m);
+            gbuf.clear();
+            for &i in &active {
+                gbuf.push(g[i as usize] + col[i as usize]);
+            }
+            let opt = optimize_position(
+                &gbuf,
+                &fbuf,
+                budget_total - spent,
+                cfg.neg_only,
+                Search::Exact,
+                &mut scratch,
+            );
+            let exits = opt.exits();
+            if exits == 0 {
+                continue;
+            }
+            let j = sm.costs[m] as f64 * c_before as f64 / exits as f64;
+            if j < best_j {
+                best_j = j;
+                best_k = k;
+                best_opt = Some(opt);
+            }
+        }
+
+        pi.swap(r, best_k);
+        let m = pi[r];
+        let col = sm.col(m);
+        // Commit: advance running scores for actives.
+        for &i in &active {
+            g[i as usize] += col[i as usize];
+        }
+        if let Some(opt) = best_opt {
+            eps_neg[r] = opt.eps_neg;
+            eps_pos[r] = opt.eps_pos;
+            spent += opt.errs();
+            active.retain(|&i| {
+                let gi = g[i as usize];
+                !(gi < opt.eps_neg || gi > opt.eps_pos)
+            });
+        }
+        // If no candidate decided anything (best_opt None), thresholds stay
+        // ±∞ at r and the greedy continues — later positions may succeed
+        // once more score mass has accumulated.
+    }
+
+    if subsampled {
+        // Refit thresholds on the FULL optimization set along the chosen
+        // order (cost O(T·N), negligible next to the O(T²·N̄) search).
+        return super::thresholds::optimize_thresholds_for_order(
+            sm_full,
+            &pi,
+            cfg.alpha,
+            cfg.neg_only,
+        );
+    }
+    FastClassifier { order: pi, eps_pos, eps_neg, bias: sm.bias, beta: sm.beta }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qwyc::simulate;
+
+    /// The paper's Appendix A.1 PIPELINE example: 8 examples, 3 base
+    /// models, α = 0, c_t = 1, decision threshold 0.
+    ///   f1: e1 → +1, e2 → −1, else 0
+    ///   f2: e3 → +1, e4 → +1, e5 → −1, else 0
+    ///   f3: e5 → −1, e6 → +1, e7 → −1, e8 → −1, else 0
+    /// Optimal order is [3, 2, 1] with cost (8 + 4 + 2)/8 = 7/4.
+    pub(crate) fn appendix_a1() -> ScoreMatrix {
+        let n = 8;
+        let mut cols = vec![0f32; n * 3];
+        // f1 (model 0)
+        cols[0] = 1.0;
+        cols[1] = -1.0;
+        // f2 (model 1)
+        cols[n + 2] = 1.0;
+        cols[n + 3] = 1.0;
+        cols[n + 4] = -1.0;
+        // f3 (model 2)
+        cols[2 * n + 4] = -1.0;
+        cols[2 * n + 5] = 1.0;
+        cols[2 * n + 6] = -1.0;
+        cols[2 * n + 7] = -1.0;
+        ScoreMatrix::new(n, 3, cols, 0.0, 0.0, vec![1.0; 3])
+    }
+
+    #[test]
+    fn recovers_appendix_a1_optimal_order() {
+        let sm = appendix_a1();
+        let cfg = QwycConfig { alpha: 0.0, neg_only: false, max_opt_examples: 0, seed: 1 };
+        let fc = optimize_order(&sm, &cfg);
+        fc.validate().unwrap();
+        // Greedy picks f3 first (4 exits), then f2 (3 of remaining 4...),
+        // The paper's optimum: π = [3, 2, 1] (1-based) = [2, 1, 0].
+        assert_eq!(fc.order, vec![2, 1, 0], "order {:?}", fc.order);
+        let sim = simulate(&fc, &sm);
+        assert_eq!(sim.pct_diff, 0.0, "alpha=0 must classify identically");
+        // OPT cost = (8·1 + 4·1 + 2·1)/8 = 7/4 mean models.
+        assert!(
+            (sim.mean_models - 1.75).abs() < 1e-9,
+            "mean models {} != 7/4",
+            sim.mean_models
+        );
+    }
+
+    #[test]
+    fn alpha_zero_is_faithful_on_gbt() {
+        use crate::data::synth::{generate, Which};
+        use crate::gbt::{train, GbtParams};
+        let (tr, te) = generate(Which::NomaoLike, 21, 0.02);
+        let (ens, _) = train(&tr, &GbtParams { n_trees: 30, max_depth: 3, ..Default::default() });
+        let sm_tr = ens.score_matrix(&tr);
+        let cfg = QwycConfig { alpha: 0.0, ..Default::default() };
+        let fc = optimize_order(&sm_tr, &cfg);
+        fc.validate().unwrap();
+        let sim = simulate(&fc, &sm_tr);
+        assert_eq!(sim.pct_diff, 0.0, "train diffs at alpha=0");
+        assert!(sim.mean_models < sm_tr.t as f64, "no speedup at all");
+        // Held-out: differences possible but should be small.
+        let sm_te = ens.score_matrix(&te);
+        let sim_te = simulate(&fc, &sm_te);
+        assert!(sim_te.pct_diff < 0.05, "test diff {}", sim_te.pct_diff);
+    }
+
+    #[test]
+    fn larger_alpha_never_evaluates_more_models() {
+        use crate::data::synth::{generate, Which};
+        use crate::lattice::{train_joint, LatticeParams};
+        let (tr, _) = generate(Which::Rw1Like, 22, 0.005);
+        let (ens, _) = train_joint(
+            &tr,
+            &LatticeParams { n_lattices: 5, dim: 6, steps: 120, ..Default::default() },
+        );
+        let sm = ens.score_matrix(&tr);
+        let mut prev = f64::INFINITY;
+        for &alpha in &[0.0, 0.002, 0.01, 0.05] {
+            let cfg = QwycConfig { alpha, neg_only: true, ..Default::default() };
+            let fc = optimize_order(&sm, &cfg);
+            let sim = simulate(&fc, &sm);
+            assert!(sim.pct_diff <= alpha + 1e-9, "alpha={alpha} diff={}", sim.pct_diff);
+            assert!(
+                sim.mean_models <= prev + 1e-6,
+                "alpha={alpha}: {} models > previous {prev}",
+                sim.mean_models
+            );
+            prev = sim.mean_models;
+        }
+    }
+
+    #[test]
+    fn subsampled_optimization_still_valid() {
+        use crate::data::synth::{generate, Which};
+        use crate::gbt::{train, GbtParams};
+        let (tr, _) = generate(Which::AdultLike, 23, 0.02);
+        let (ens, _) = train(&tr, &GbtParams { n_trees: 25, max_depth: 3, ..Default::default() });
+        let sm = ens.score_matrix(&tr);
+        let cfg = QwycConfig { alpha: 0.01, max_opt_examples: 400, ..Default::default() };
+        let fc = optimize_order(&sm, &cfg);
+        fc.validate().unwrap();
+        let sim = simulate(&fc, &sm);
+        // Budget was enforced on a 400-example subsample only, so the
+        // full-set diff can exceed alpha — but must stay the same order of
+        // magnitude (generalization of thresholds, paper §3.1).
+        assert!(sim.pct_diff < 0.08, "diff {}", sim.pct_diff);
+    }
+}

@@ -1,0 +1,437 @@
+//! Algorithm 2: optimal early-stopping thresholds for one position.
+//!
+//! For position r with active set C_{r-1} and running scores g_r, the
+//! objective of problem (2) is monotone decreasing in ε_r⁻ (raising it
+//! lets more examples exit negative early) while the constraint violation
+//! is monotone increasing — so the optimum is the *largest feasible* ε_r⁻
+//! (and symmetrically the smallest feasible ε_r⁺). The paper finds these
+//! by binary search over the real line; we compute them exactly as order
+//! statistics: the largest ε⁻ admitting at most B new disagreements is
+//! the (B+1)-th smallest running score among active examples the full
+//! ensemble classifies positive (strict `g < ε⁻` exits). Quickselect makes
+//! each search O(|C|), which is what keeps Algorithm 1's candidate loop
+//! tractable (this is the innermost hot path of the whole optimizer).
+//! A bisection variant (`search = Bisect`) is kept for parity with the
+//! paper's description and cross-checked in tests.
+
+use crate::ensemble::ScoreMatrix;
+use crate::util::{kth_largest, kth_smallest};
+
+/// Result of optimizing (ε⁻, ε⁺) at one position.
+#[derive(Clone, Copy, Debug)]
+pub struct ThresholdOpt {
+    pub eps_neg: f32,
+    pub eps_pos: f32,
+    /// Active examples that exit (negative / positive) under these
+    /// thresholds.
+    pub exits_neg: usize,
+    pub exits_pos: usize,
+    /// Exits that disagree with the full classifier (spend α-budget).
+    pub errs_neg: usize,
+    pub errs_pos: usize,
+}
+
+impl ThresholdOpt {
+    pub fn exits(&self) -> usize {
+        self.exits_neg + self.exits_pos
+    }
+
+    pub fn errs(&self) -> usize {
+        self.errs_neg + self.errs_pos
+    }
+}
+
+/// Which 1-D search to use (Exact = order-statistic via quickselect;
+/// Bisect = the paper's binary search over threshold values).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Search {
+    Exact,
+    Bisect,
+}
+
+/// Optimize thresholds for one position given the active examples'
+/// running scores `g`, their full-classifier decisions `full_pos`, and the
+/// remaining disagreement budgets (counts of examples). The negative
+/// threshold is searched first with the whole remaining budget, then the
+/// positive threshold with what is left — matching Algorithm 2's
+/// sequential lines 4-5. `neg_only` forces ε⁺ = +∞ (Filter-and-Score).
+pub fn optimize_position(
+    g: &[f32],
+    full_pos: &[bool],
+    budget: usize,
+    neg_only: bool,
+    search: Search,
+    scratch: &mut Vec<f32>,
+) -> ThresholdOpt {
+    debug_assert_eq!(g.len(), full_pos.len());
+
+    // ---- ε⁻: largest value with ≤ budget wrong early-negatives --------
+    // Wrong exits are full-POSITIVE examples with g < ε⁻.
+    scratch.clear();
+    scratch.extend(
+        g.iter()
+            .zip(full_pos.iter())
+            .filter(|(_, &fp)| fp)
+            .map(|(&gi, _)| gi),
+    );
+    let eps_neg = match search {
+        _ if scratch.is_empty() => f32::INFINITY, // nothing can go wrong
+        Search::Exact => {
+            if budget >= scratch.len() {
+                f32::INFINITY
+            } else {
+                // Strict `g < ε` exits ⇒ ε at the (budget+1)-th smallest
+                // wrong-inducing score admits at most `budget` errors.
+                kth_smallest(scratch, budget)
+            }
+        }
+        Search::Bisect => bisect_max_feasible(scratch, budget),
+    };
+    let (exits_neg, errs_neg) = count_neg(g, full_pos, eps_neg);
+
+    // ---- ε⁺: smallest value with ≤ remaining budget wrong positives ---
+    // Wrong exits are full-NEGATIVE examples with g > ε⁺. Examples that
+    // already exited negative are no longer candidates.
+    let budget_pos = budget.saturating_sub(errs_neg);
+    let eps_pos = if neg_only {
+        f32::INFINITY
+    } else {
+        scratch.clear();
+        scratch.extend(
+            g.iter()
+                .zip(full_pos.iter())
+                .filter(|(&gi, &fp)| !fp && gi >= eps_neg)
+                .map(|(&gi, _)| gi),
+        );
+        if scratch.is_empty() {
+            f32::NEG_INFINITY // no full-negative actives: any ε⁺ is safe
+        } else {
+            match search {
+                Search::Exact => {
+                    if budget_pos >= scratch.len() {
+                        f32::NEG_INFINITY
+                    } else {
+                        // (budget_pos+1)-th LARGEST score.
+                        kth_largest(scratch, budget_pos)
+                    }
+                }
+                Search::Bisect => bisect_min_feasible(scratch, budget_pos),
+            }
+        }
+    };
+    // Enforce ε⁻ ≤ ε⁺ (raising ε⁺ only removes early-positive exits, so
+    // feasibility is preserved).
+    let eps_pos = eps_pos.max(eps_neg);
+    let (exits_pos, errs_pos) = count_pos(g, full_pos, eps_pos, eps_neg);
+
+    ThresholdOpt { eps_neg, eps_pos, exits_neg, exits_pos, errs_neg, errs_pos }
+}
+
+/// Count exits/errors for ε⁻: strict `g < ε⁻`.
+fn count_neg(g: &[f32], full_pos: &[bool], eps_neg: f32) -> (usize, usize) {
+    let mut exits = 0;
+    let mut errs = 0;
+    for (&gi, &fp) in g.iter().zip(full_pos.iter()) {
+        if gi < eps_neg {
+            exits += 1;
+            errs += fp as usize;
+        }
+    }
+    (exits, errs)
+}
+
+/// Count exits/errors for ε⁺: strict `g > ε⁺`, excluding examples that
+/// already exited negative (g < ε⁻ — disjoint since ε⁻ ≤ ε⁺).
+fn count_pos(g: &[f32], full_pos: &[bool], eps_pos: f32, eps_neg: f32) -> (usize, usize) {
+    let mut exits = 0;
+    let mut errs = 0;
+    for (&gi, &fp) in g.iter().zip(full_pos.iter()) {
+        if gi > eps_pos && gi >= eps_neg {
+            exits += 1;
+            errs += !fp as usize;
+        }
+    }
+    (exits, errs)
+}
+
+/// The paper's binary search: largest ε with #{v ∈ vals : v < ε} ≤ budget.
+/// Bisection on the value axis with a fixed iteration cap.
+fn bisect_max_feasible(vals: &[f32], budget: usize) -> f32 {
+    if budget >= vals.len() {
+        return f32::INFINITY;
+    }
+    let (mut lo, mut hi) = bounds(vals);
+    // Feasible at lo (nothing below the minimum), infeasible above hi.
+    for _ in 0..64 {
+        let mid = 0.5 * (lo + hi);
+        let wrong = vals.iter().filter(|&&v| v < mid).count();
+        if wrong <= budget {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+        if hi - lo <= f32::EPSILON * lo.abs().max(1.0) {
+            break;
+        }
+    }
+    lo
+}
+
+/// Smallest ε with #{v ∈ vals : v > ε} ≤ budget.
+fn bisect_min_feasible(vals: &[f32], budget: usize) -> f32 {
+    if budget >= vals.len() {
+        return f32::NEG_INFINITY;
+    }
+    let (mut lo, mut hi) = bounds(vals);
+    for _ in 0..64 {
+        let mid = 0.5 * (lo + hi);
+        let wrong = vals.iter().filter(|&&v| v > mid).count();
+        if wrong <= budget {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+        if hi - lo <= f32::EPSILON * hi.abs().max(1.0) {
+            break;
+        }
+    }
+    hi
+}
+
+fn bounds(vals: &[f32]) -> (f32, f32) {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &v in vals {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    (lo - 1.0, hi + 1.0)
+}
+
+/// Algorithm 2 applied along a **fixed** ordering: optimize thresholds
+/// position by position, spending the α budget greedily (this is the
+/// "QWYC (X order)" baseline used throughout the paper's experiments).
+pub fn optimize_thresholds_for_order(
+    sm: &ScoreMatrix,
+    order: &[usize],
+    alpha: f64,
+    neg_only: bool,
+) -> super::FastClassifier {
+    let t = order.len();
+    assert_eq!(t, sm.t);
+    let n = sm.n;
+    let budget_total = (alpha * n as f64).floor() as usize;
+    let mut spent = 0usize;
+
+    // Active example state.
+    let mut active: Vec<u32> = (0..n as u32).collect();
+    let mut g: Vec<f32> = vec![sm.bias; n];
+    let full_pos_all: Vec<bool> = (0..n).map(|i| sm.full_positive(i)).collect();
+
+    let mut eps_pos = vec![f32::INFINITY; t];
+    let mut eps_neg = vec![f32::NEG_INFINITY; t];
+    let mut gbuf: Vec<f32> = Vec::with_capacity(n);
+    let mut fbuf: Vec<bool> = Vec::with_capacity(n);
+    let mut scratch: Vec<f32> = Vec::with_capacity(n);
+
+    for (r, &m) in order.iter().enumerate() {
+        let col = sm.col(m);
+        // Advance running scores for actives.
+        for &i in &active {
+            g[i as usize] += col[i as usize];
+        }
+        if r + 1 == t {
+            // Last position: the full score is known; no thresholds needed
+            // (decision falls through to β). Leave ±∞.
+            break;
+        }
+        gbuf.clear();
+        fbuf.clear();
+        for &i in &active {
+            gbuf.push(g[i as usize]);
+            fbuf.push(full_pos_all[i as usize]);
+        }
+        let opt = optimize_position(
+            &gbuf,
+            &fbuf,
+            budget_total - spent,
+            neg_only,
+            Search::Exact,
+            &mut scratch,
+        );
+        eps_neg[r] = opt.eps_neg;
+        eps_pos[r] = opt.eps_pos;
+        spent += opt.errs();
+        // Retire exited examples.
+        active.retain(|&i| {
+            let gi = g[i as usize];
+            !(gi < opt.eps_neg || gi > opt.eps_pos)
+        });
+        if active.is_empty() {
+            break;
+        }
+    }
+
+    super::FastClassifier { order: order.to_vec(), eps_pos, eps_neg, bias: sm.bias, beta: sm.beta }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, Gen};
+
+    fn opt(g: &[f32], fp: &[bool], budget: usize, neg_only: bool, s: Search) -> ThresholdOpt {
+        let mut scratch = Vec::new();
+        optimize_position(g, fp, budget, neg_only, s, &mut scratch)
+    }
+
+    #[test]
+    fn zero_budget_stops_below_min_positive() {
+        // Active: negatives at -2,-1; positives at 0.5, 1.0.
+        let g = [-2.0f32, -1.0, 0.5, 1.0];
+        let fp = [false, false, true, true];
+        let o = opt(&g, &fp, 0, false, Search::Exact);
+        // Largest safe ε⁻ is the smallest positive's g: 0.5 (strict <).
+        assert_eq!(o.eps_neg, 0.5);
+        assert_eq!(o.exits_neg, 2);
+        assert_eq!(o.errs_neg, 0);
+        // Both negatives already exited below ε⁻, so no full-negative
+        // candidates remain: ε⁺ collapses to ε⁻ = 0.5 and only the g=1.0
+        // positive exits early-positive (strict >).
+        assert_eq!(o.eps_pos, 0.5);
+        assert_eq!(o.exits_pos, 1);
+        assert_eq!(o.errs_pos, 0);
+    }
+
+    #[test]
+    fn budget_buys_more_exits() {
+        let g = [-2.0f32, -1.0, -0.5, 0.5, 1.0];
+        let fp = [false, false, true, true, true]; // positive at -0.5!
+        let o0 = opt(&g, &fp, 0, true, Search::Exact);
+        assert_eq!(o0.eps_neg, -0.5); // can't cross the misranked positive
+        assert_eq!(o0.exits_neg, 2);
+        let o1 = opt(&g, &fp, 1, true, Search::Exact);
+        assert_eq!(o1.eps_neg, 0.5); // spend 1 error on the -0.5 positive
+        assert_eq!(o1.exits_neg, 3);
+        assert_eq!(o1.errs_neg, 1);
+    }
+
+    #[test]
+    fn neg_only_never_sets_pos_threshold() {
+        let g = [-1.0f32, 2.0];
+        let fp = [false, true];
+        let o = opt(&g, &fp, 5, true, Search::Exact);
+        assert_eq!(o.eps_pos, f32::INFINITY);
+        assert_eq!(o.exits_pos, 0);
+    }
+
+    #[test]
+    fn all_same_class_allows_infinite_threshold() {
+        let g = [-1.0f32, -0.3, -2.0];
+        let fp = [false, false, false];
+        let o = opt(&g, &fp, 0, false, Search::Exact);
+        // No full-positives: every early-negative is safe.
+        assert_eq!(o.eps_neg, f32::INFINITY);
+        assert_eq!(o.exits_neg, 3);
+        assert_eq!(o.errs(), 0);
+    }
+
+    #[test]
+    fn exact_matches_bisect_on_random_cases() {
+        check("exact==bisect", 300, |gen: &mut Gen| {
+            let n = gen.usize_in(1, 120);
+            let g: Vec<f32> = (0..n).map(|_| (gen.rng.normal() as f32 * 2.0).round() / 2.0).collect();
+            let fp: Vec<bool> = (0..n).map(|_| gen.rng.bool(0.4)).collect();
+            let budget = gen.usize_in(0, n / 4);
+            let neg_only = gen.rng.bool(0.5);
+            let a = opt(&g, &fp, budget, neg_only, Search::Exact);
+            let b = opt(&g, &fp, budget, neg_only, Search::Bisect);
+            // Threshold VALUES may differ (bisect converges to an interval
+            // edge) but exits/errors — the objective — must agree.
+            if a.exits_neg != b.exits_neg || a.errs_neg != b.errs_neg {
+                return Err(format!("neg mismatch: {a:?} vs {b:?} g={g:?} fp={fp:?} b={budget}"));
+            }
+            if a.exits_pos != b.exits_pos || a.errs_pos != b.errs_pos {
+                return Err(format!("pos mismatch: {a:?} vs {b:?} g={g:?} fp={fp:?} b={budget}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn errors_never_exceed_budget_property() {
+        check("errs<=budget", 500, |gen: &mut Gen| {
+            let n = gen.usize_in(1, 200);
+            let g: Vec<f32> = (0..n).map(|_| gen.score()).collect();
+            let fp: Vec<bool> = (0..n).map(|_| gen.rng.bool(0.5)).collect();
+            let budget = gen.usize_in(0, n);
+            let o = opt(&g, &fp, budget, gen.rng.bool(0.3), Search::Exact);
+            if o.errs() > budget {
+                return Err(format!("errs {} > budget {budget}", o.errs()));
+            }
+            if o.eps_neg > o.eps_pos {
+                return Err("eps_neg > eps_pos".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn exits_maximal_property() {
+        // Raising ε⁻ by any amount above the optimum must violate budget.
+        check("eps_neg maximal", 300, |gen: &mut Gen| {
+            let n = gen.usize_in(2, 150);
+            let g: Vec<f32> = (0..n).map(|_| gen.score()).collect();
+            let fp: Vec<bool> = (0..n).map(|_| gen.rng.bool(0.5)).collect();
+            let budget = gen.usize_in(0, 3);
+            let o = opt(&g, &fp, budget, true, Search::Exact);
+            if o.eps_neg == f32::INFINITY {
+                return Ok(());
+            }
+            // Next candidate threshold: smallest positive g strictly above.
+            let next = g
+                .iter()
+                .zip(fp.iter())
+                .filter(|(&gi, &f)| f && gi >= o.eps_neg)
+                .map(|(&gi, _)| gi)
+                .fold(f32::INFINITY, f32::min);
+            if next == f32::INFINITY {
+                return Ok(());
+            }
+            let eps_up = next + 1e-3;
+            let wrong = g
+                .iter()
+                .zip(fp.iter())
+                .filter(|(&gi, &f)| f && gi < eps_up)
+                .count();
+            if wrong <= budget {
+                return Err(format!(
+                    "could have pushed eps_neg from {} to {eps_up} (wrong={wrong} <= {budget})",
+                    o.eps_neg
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fixed_order_respects_alpha_on_train() {
+        use crate::data::synth::{generate, Which};
+        use crate::gbt::{train, GbtParams};
+        let (tr, _) = generate(Which::AdultLike, 11, 0.03);
+        let (ens, _) = train(&tr, &GbtParams { n_trees: 40, max_depth: 3, ..Default::default() });
+        let sm = ens.score_matrix(&tr);
+        for &alpha in &[0.0, 0.005, 0.02] {
+            let order: Vec<usize> = (0..sm.t).collect();
+            let fc = optimize_thresholds_for_order(&sm, &order, alpha, false);
+            fc.validate().unwrap();
+            let sim = crate::qwyc::simulate(&fc, &sm);
+            assert!(
+                sim.pct_diff <= alpha + 1e-9,
+                "alpha={alpha}: train diff {} exceeds budget",
+                sim.pct_diff
+            );
+            assert!(sim.mean_models <= sm.t as f64 + 1e-9);
+        }
+    }
+}

@@ -1,0 +1,317 @@
+//! Batched early-exit engines — the bridge between a trained ensemble +
+//! optimized [`FastClassifier`] and the serving scheduler.
+//!
+//! Two interchangeable backends:
+//!
+//! - [`NativeEngine`]: pure-rust lazy evaluation (`eval_single`), the
+//!   per-example path the paper times (trees are branchy and CPU-native).
+//! - [`PjrtEngine`]: drives the AOT `qwyc_stage` artifact — the batch
+//!   walks the optimized order in stages of K base models; after each
+//!   PJRT call decided examples are retired and survivors are compacted
+//!   into the next stage's fixed-B batch (padding the tail). This is the
+//!   dense lattice path: Python authored the kernel, but only compiled
+//!   HLO runs here.
+
+use super::{Input, Runtime};
+use crate::ensemble::{BaseModel, Ensemble};
+use crate::qwyc::{FastClassifier, SingleResult};
+
+/// Classification outcome for one request.
+#[derive(Clone, Copy, Debug)]
+pub struct Outcome {
+    pub positive: bool,
+    pub score: f32,
+    pub models_evaluated: u32,
+    pub early: bool,
+}
+
+impl From<SingleResult> for Outcome {
+    fn from(r: SingleResult) -> Outcome {
+        Outcome {
+            positive: r.positive,
+            score: r.score,
+            models_evaluated: r.models_evaluated as u32,
+            early: r.early,
+        }
+    }
+}
+
+/// Engine abstraction used by the coordinator. Engines are constructed
+/// inside the worker thread that owns them (see `Server::start`'s factory
+/// parameter) because PJRT handles are not `Send`.
+pub trait Engine {
+    /// Number of input features expected per example.
+    fn n_features(&self) -> usize;
+    /// Classify a batch of examples (row-major `n × n_features`).
+    fn classify_batch(&mut self, x: &[f32], n: usize) -> Result<Vec<Outcome>, String>;
+    /// Human-readable backend name (metrics/logs).
+    fn backend(&self) -> &'static str;
+}
+
+// ---------------------------------------------------------------- native
+
+/// Pure-rust early-exit evaluation.
+pub struct NativeEngine {
+    pub ensemble: Ensemble,
+    pub fc: FastClassifier,
+    n_features: usize,
+}
+
+impl NativeEngine {
+    pub fn new(ensemble: Ensemble, fc: FastClassifier, n_features: usize) -> NativeEngine {
+        assert_eq!(ensemble.len(), fc.t());
+        NativeEngine { ensemble, fc, n_features }
+    }
+}
+
+impl Engine for NativeEngine {
+    fn n_features(&self) -> usize {
+        self.n_features
+    }
+
+    fn classify_batch(&mut self, x: &[f32], n: usize) -> Result<Vec<Outcome>, String> {
+        let d = self.n_features;
+        assert_eq!(x.len(), n * d);
+        Ok((0..n)
+            .map(|i| self.fc.eval_single(&self.ensemble, &x[i * d..(i + 1) * d]).into())
+            .collect())
+    }
+
+    fn backend(&self) -> &'static str {
+        "native"
+    }
+}
+
+// ----------------------------------------------------------------- pjrt
+
+/// Pre-packed parameters for one stage of the optimized order.
+/// Model parameters and thresholds are constant across requests, so they
+/// are uploaded to the PJRT device ONCE at engine construction and reused
+/// by every `execute_b` call — only the per-batch `x`/`g_in` tensors are
+/// transferred per request (§Perf iteration 1 in EXPERIMENTS.md).
+struct StageParams {
+    subsets: xla::PjRtBuffer,
+    theta: xla::PjRtBuffer,
+    eps_pos: xla::PjRtBuffer,
+    eps_neg: xla::PjRtBuffer,
+    /// Number of REAL positions in this stage (≤ K; the rest is padding
+    /// with zero-lattices and ±∞ thresholds).
+    real_k: usize,
+}
+
+/// PJRT-backed staged engine for lattice ensembles.
+pub struct PjrtEngine {
+    rt: Runtime,
+    artifact: String,
+    stages: Vec<StageParams>,
+    b: usize,
+    /// Stage width of the compiled artifact.
+    pub k: usize,
+    d_features: usize,
+    bias: f32,
+    beta: f32,
+    t: usize,
+}
+
+impl PjrtEngine {
+    /// Build from a lattice ensemble and its optimized fast classifier.
+    /// `artifact` names a `*_stage` manifest entry whose geometry (D, d)
+    /// must match the ensemble; T is staged in blocks of the artifact's K.
+    pub fn new(
+        mut rt: Runtime,
+        artifact: &str,
+        ensemble: &Ensemble,
+        fc: &FastClassifier,
+    ) -> Result<PjrtEngine, String> {
+        let spec = rt
+            .spec(artifact)
+            .ok_or_else(|| format!("unknown artifact '{artifact}'"))?
+            .clone();
+        if spec.fn_name != "qwyc_stage" {
+            return Err(format!("artifact '{artifact}' is not a qwyc_stage artifact"));
+        }
+        let cfg = &spec.config;
+        let (b, k, dim, v) = (cfg.b, cfg.k, cfg.dim, 1usize << cfg.dim);
+        let t = ensemble.len();
+        assert_eq!(fc.t(), t);
+
+        // Pre-pack per-stage parameter tensors in π order and upload them
+        // to the device once (constant across requests).
+        let mut stages = Vec::new();
+        let mut r = 0usize;
+        while r < t {
+            let real_k = k.min(t - r);
+            let mut subsets = vec![0i32; k * dim];
+            let mut theta = vec![0f32; k * v];
+            // Padding positions keep ±∞ thresholds and zero lattices (add
+            // 0 to the running score, never trigger an exit).
+            let mut eps_pos = vec![f32::INFINITY; k];
+            let mut eps_neg = vec![f32::NEG_INFINITY; k];
+            for j in 0..real_k {
+                let m = fc.order[r + j];
+                let lat = match &ensemble.models[m] {
+                    BaseModel::Lattice(l) => l,
+                    other => {
+                        return Err(format!(
+                            "PjrtEngine requires lattice models, found {}",
+                            other.kind()
+                        ))
+                    }
+                };
+                if lat.dim() != dim {
+                    return Err(format!(
+                        "lattice dim {} != artifact dim {dim}",
+                        lat.dim()
+                    ));
+                }
+                for (jj, &f) in lat.features.iter().enumerate() {
+                    subsets[j * dim + jj] = f as i32;
+                }
+                theta[j * v..(j + 1) * v].copy_from_slice(&lat.theta);
+                eps_pos[j] = fc.eps_pos[r + j];
+                eps_neg[j] = fc.eps_neg[r + j];
+            }
+            stages.push(StageParams {
+                subsets: rt.upload_i32(&subsets, &[k, dim])?,
+                theta: rt.upload_f32(&theta, &[k, v])?,
+                eps_pos: rt.upload_f32(&eps_pos, &[k])?,
+                eps_neg: rt.upload_f32(&eps_neg, &[k])?,
+                real_k,
+            });
+            r += real_k;
+        }
+
+        // Eager-compile the artifact so serving never hits compile latency.
+        rt.get(artifact)?;
+        Ok(PjrtEngine {
+            rt,
+            artifact: artifact.to_string(),
+            stages,
+            b,
+            k,
+            d_features: cfg.d_features,
+            bias: fc.bias,
+            beta: fc.beta,
+            t,
+        })
+    }
+
+    pub fn stage_count(&self) -> usize {
+        self.stages.len()
+    }
+}
+
+impl Engine for PjrtEngine {
+    fn n_features(&self) -> usize {
+        self.d_features
+    }
+
+    fn classify_batch(&mut self, x: &[f32], n: usize) -> Result<Vec<Outcome>, String> {
+        let d = self.d_features;
+        assert_eq!(x.len(), n * d);
+        let b = self.b;
+
+        let mut outcomes = vec![
+            Outcome { positive: false, score: 0.0, models_evaluated: 0, early: false };
+            n
+        ];
+        // Active example indices and their running scores.
+        let mut active: Vec<u32> = (0..n as u32).collect();
+        let mut g: Vec<f32> = vec![self.bias; n];
+        let mut models: Vec<u32> = vec![0; n];
+
+        let mut xbuf = vec![0f32; b * d];
+        let mut gbuf = vec![0f32; b];
+
+        let mut done_positions = 0usize;
+        for stage in &self.stages {
+            if active.is_empty() {
+                break;
+            }
+            let mut survivors: Vec<u32> = Vec::with_capacity(active.len());
+            // Process actives in chunks of the compiled batch size B.
+            for chunk in active.chunks(b) {
+                let nc = chunk.len();
+                for (slot, &i) in chunk.iter().enumerate() {
+                    let i = i as usize;
+                    xbuf[slot * d..(slot + 1) * d].copy_from_slice(&x[i * d..(i + 1) * d]);
+                    gbuf[slot] = g[i];
+                }
+                // Pad the tail with the last row (harmless: results are
+                // discarded) and huge g so padding exits immediately-ish;
+                // simplest is zero rows with neutral g = 0.
+                for slot in nc..b {
+                    xbuf[slot * d..(slot + 1) * d].iter_mut().for_each(|v| *v = 0.0);
+                    gbuf[slot] = 0.0;
+                }
+                // Per-call uploads: only the batch tensors. Stage params
+                // live on-device already.
+                let xb = self.rt.upload_f32(&xbuf, &[b, d])?;
+                let gb = self.rt.upload_f32(&gbuf, &[b])?;
+                let art = self.rt.get(&self.artifact)?;
+                let out = art.execute_buffers(&[
+                    &xb,
+                    &gb,
+                    &stage.subsets,
+                    &stage.theta,
+                    &stage.eps_pos,
+                    &stage.eps_neg,
+                ])?;
+                let g_out = out[0].as_f32();
+                let decided = out[1].as_i32();
+                let used = out[2].as_i32();
+                for (slot, &i) in chunk.iter().enumerate() {
+                    let iu = i as usize;
+                    g[iu] = g_out[slot];
+                    // `used` counts padded positions too if the example ran
+                    // past the real positions; clamp to the stage's real K.
+                    models[iu] += (used[slot] as u32).min(stage.real_k as u32);
+                    match decided[slot] {
+                        1 => {
+                            outcomes[iu] = Outcome {
+                                positive: true,
+                                score: g[iu],
+                                models_evaluated: models[iu],
+                                early: true,
+                            };
+                        }
+                        2 => {
+                            outcomes[iu] = Outcome {
+                                positive: false,
+                                score: g[iu],
+                                models_evaluated: models[iu],
+                                early: true,
+                            };
+                        }
+                        _ => survivors.push(i),
+                    }
+                }
+            }
+            active = survivors;
+            done_positions += stage.real_k;
+        }
+        debug_assert!(done_positions <= self.t || self.stages.is_empty());
+        // Survivors of all stages: full evaluation happened; decide by β.
+        for &i in &active {
+            let iu = i as usize;
+            outcomes[iu] = Outcome {
+                positive: g[iu] >= self.beta,
+                score: g[iu],
+                models_evaluated: self.t as u32,
+                early: false,
+            };
+        }
+        Ok(outcomes)
+    }
+
+    fn backend(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // PJRT engine integration tests live in rust/tests/runtime_pjrt.rs —
+    // they need `make artifacts` to have run. Native engine is covered by
+    // qwyc::evaluator tests (simulate ≡ eval_single).
+}

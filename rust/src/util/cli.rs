@@ -1,0 +1,172 @@
+//! Tiny argv parser substrate (clap is unavailable offline).
+//!
+//! Supports the patterns this repo's binaries use:
+//!   `qwyc <subcommand> [positionals] --key value --flag`
+//! with typed getters and defaults. Unknown-flag detection is explicit so
+//! typos fail loudly instead of silently using a default.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    /// Flags actually consumed by getters, for unknown-flag detection.
+    seen: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (not including argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(it: I) -> Result<Args, String> {
+        let mut a = Args::default();
+        let mut it = it.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err("bare '--' not supported".into());
+                }
+                // --key=value or --key value or boolean --key
+                if let Some((k, v)) = name.split_once('=') {
+                    a.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    a.flags.insert(name.to_string(), v);
+                } else {
+                    a.flags.insert(name.to_string(), "true".to_string());
+                }
+            } else {
+                a.positional.push(arg);
+            }
+        }
+        Ok(a)
+    }
+
+    pub fn from_env() -> Result<Args, String> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    fn mark(&self, key: &str) {
+        self.seen.borrow_mut().push(key.to_string());
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.mark(key);
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn get_opt(&self, key: &str) -> Option<String> {
+        self.mark(key);
+        self.flags.get(key).cloned()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, String> {
+        self.mark(key);
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| format!("--{key}: {e}")),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, String> {
+        self.mark(key);
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| format!("--{key}: {e}")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, String> {
+        self.mark(key);
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| format!("--{key}: {e}")),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> Result<bool, String> {
+        self.mark(key);
+        match self.flags.get(key).map(|s| s.as_str()) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => Err(format!("--{key}: expected bool, got '{v}'")),
+        }
+    }
+
+    /// Comma-separated f64 list, e.g. `--alphas 0.001,0.005,0.01`.
+    pub fn get_f64_list(&self, key: &str, default: &[f64]) -> Result<Vec<f64>, String> {
+        self.mark(key);
+        match self.flags.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| s.trim().parse::<f64>().map_err(|e| format!("--{key}: {e}")))
+                .collect(),
+        }
+    }
+
+    /// Error if any provided flag was never consumed by a getter.
+    pub fn check_unknown(&self) -> Result<(), String> {
+        let seen = self.seen.borrow();
+        let unknown: Vec<&String> =
+            self.flags.keys().filter(|k| !seen.contains(k)).collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(format!("unknown flag(s): {unknown:?}"))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn positionals_and_flags() {
+        let a = parse("train fig1 --dataset adult --trees 500 --verbose");
+        assert_eq!(a.subcommand(), Some("train"));
+        assert_eq!(a.positional, vec!["train", "fig1"]);
+        assert_eq!(a.get_str("dataset", "x"), "adult");
+        assert_eq!(a.get_usize("trees", 1).unwrap(), 500);
+        assert!(a.get_bool("verbose", false).unwrap());
+    }
+
+    #[test]
+    fn eq_form_and_lists() {
+        let a = parse("x --alpha=0.01 --alphas 0.1,0.2,0.3");
+        assert_eq!(a.get_f64("alpha", 0.0).unwrap(), 0.01);
+        assert_eq!(a.get_f64_list("alphas", &[]).unwrap(), vec![0.1, 0.2, 0.3]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("x");
+        assert_eq!(a.get_usize("n", 7).unwrap(), 7);
+        assert_eq!(a.get_str("s", "d"), "d");
+        assert!(!a.get_bool("b", false).unwrap());
+    }
+
+    #[test]
+    fn unknown_flag_detection() {
+        let a = parse("x --known 1 --typo 2");
+        let _ = a.get_usize("known", 0);
+        assert!(a.check_unknown().is_err());
+        let _ = a.get_usize("typo", 0);
+        assert!(a.check_unknown().is_ok());
+    }
+
+    #[test]
+    fn bad_values_error() {
+        let a = parse("x --n abc");
+        assert!(a.get_usize("n", 0).is_err());
+    }
+}

@@ -1,0 +1,151 @@
+//! Environment substrates: deterministic PRNG, JSON, argv parsing, timing,
+//! statistics, and a mini property-testing driver. These exist because the
+//! offline image has no `rand`/`serde_json`/`clap`/`criterion`/`proptest`;
+//! see DESIGN.md §4 (Substitutions).
+
+pub mod cli;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+/// Value of the k-th smallest element (0-based) of `xs` — the threshold
+/// optimizer's order-statistic primitive, the innermost loop of
+/// Algorithm 1 (see qwyc/thresholds.rs).
+///
+/// Two strategies (§Perf iteration 2 in EXPERIMENTS.md): for small k a
+/// single sequential pass with a bounded max-heap (O(n log k), cache
+/// friendly — and k = remaining α-budget is almost always small); for
+/// large k, three-way quickselect (average O(n)).
+pub fn kth_smallest(xs: &mut [f32], k: usize) -> f32 {
+    assert!(k < xs.len(), "kth_smallest: k={k} len={}", xs.len());
+    if k < 64 {
+        return kth_smallest_heap(xs, k);
+    }
+    let (mut lo, mut hi) = (0usize, xs.len() - 1);
+    // Deterministic pivot mixing to dodge adversarial patterns.
+    let mut salt = 0x9e3779b97f4a7c15u64;
+    loop {
+        if lo == hi {
+            return xs[lo];
+        }
+        // Median-of-three-ish pivot choice with a rotating salt.
+        salt = salt.wrapping_mul(6364136223846793005).wrapping_add(1);
+        let pivot_idx = lo + (salt as usize) % (hi - lo + 1);
+        let pivot = xs[pivot_idx];
+        // Three-way partition (Dutch national flag) — robust to duplicates.
+        // After the loop: xs[lo..i] < pivot, xs[i..=j] == pivot, xs[j+1..=hi] > pivot.
+        let (mut i, mut j, mut p) = (lo, hi, lo);
+        while p <= j {
+            if xs[p] < pivot {
+                xs.swap(i, p);
+                i += 1;
+                p += 1;
+            } else if xs[p] > pivot {
+                xs.swap(p, j);
+                if j == 0 {
+                    break;
+                }
+                j -= 1;
+            } else {
+                p += 1;
+            }
+        }
+        if k < i {
+            hi = i - 1;
+        } else if k <= j {
+            return pivot;
+        } else {
+            lo = j + 1;
+        }
+    }
+}
+
+/// Value of the k-th LARGEST element (0-based). Negates in place so the
+/// small-k heap path applies symmetrically (ε⁺ search uses small k too).
+pub fn kth_largest(xs: &mut [f32], k: usize) -> f32 {
+    for v in xs.iter_mut() {
+        *v = -*v;
+    }
+    let r = kth_smallest(xs, k);
+    // Restore (callers reuse the scratch buffer contents only as a bag of
+    // values, but keep the contract clean anyway).
+    for v in xs.iter_mut() {
+        *v = -*v;
+    }
+    -r
+}
+
+/// Small-k path: keep the k+1 smallest seen so far in a max-heap; the
+/// heap root is the answer after one sequential pass.
+fn kth_smallest_heap(xs: &[f32], k: usize) -> f32 {
+    // f32 is not Ord; totally ordered here because callers never pass NaN
+    // (scores are finite). Compare via total_cmp for safety.
+    let mut heap: Vec<f32> = Vec::with_capacity(k + 1);
+    for &v in xs {
+        if heap.len() <= k {
+            heap.push(v);
+            if heap.len() == k + 1 {
+                // Heapify once full.
+                for i in (0..=(k / 2)).rev() {
+                    sift_down(&mut heap, i);
+                }
+            }
+        } else if v.total_cmp(&heap[0]) == std::cmp::Ordering::Less {
+            heap[0] = v;
+            sift_down(&mut heap, 0);
+        }
+    }
+    if heap.len() <= k {
+        unreachable!("caller guarantees k < xs.len()");
+    }
+    heap[0]
+}
+
+#[inline]
+fn sift_down(heap: &mut [f32], mut i: usize) {
+    let n = heap.len();
+    loop {
+        let (l, r) = (2 * i + 1, 2 * i + 2);
+        let mut largest = i;
+        if l < n && heap[l] > heap[largest] {
+            largest = l;
+        }
+        if r < n && heap[r] > heap[largest] {
+            largest = r;
+        }
+        if largest == i {
+            return;
+        }
+        heap.swap(i, largest);
+        i = largest;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn kth_matches_sort() {
+        let mut rng = Rng::new(3);
+        for _ in 0..200 {
+            let n = 1 + rng.below(100);
+            let xs: Vec<f32> = (0..n).map(|_| (rng.f32() * 10.0).round()).collect();
+            let k = rng.below(n);
+            let mut sorted = xs.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let mut work = xs.clone();
+            assert_eq!(kth_smallest(&mut work, k), sorted[k], "n={n} k={k} xs={xs:?}");
+        }
+    }
+
+    #[test]
+    fn kth_all_duplicates() {
+        let mut xs = vec![2.0f32; 17];
+        assert_eq!(kth_smallest(&mut xs, 0), 2.0);
+        assert_eq!(kth_smallest(&mut xs, 16), 2.0);
+    }
+}

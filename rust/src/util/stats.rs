@@ -1,0 +1,211 @@
+//! Small statistics helpers shared by the optimizer, metrics, and the
+//! experiment harness: moments, percentiles, histograms, and a fixed-bucket
+//! latency histogram for the serving path.
+
+/// Mean of a slice (0.0 for empty input).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|&v| (v - m) * (v - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Percentile by linear interpolation on a *sorted* slice; p in [0, 100].
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let p = p.clamp(0.0, 100.0);
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let w = rank - lo as f64;
+        sorted[lo] * (1.0 - w) + sorted[hi] * w
+    }
+}
+
+/// Percentile of an unsorted slice (copies + sorts).
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&v, p)
+}
+
+/// Fixed-width histogram over [lo, hi] with `bins` buckets; values outside
+/// the range clamp to the edge buckets. Used for Figures 5-6.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub counts: Vec<u64>,
+    pub total: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(bins > 0 && hi > lo);
+        Histogram { lo, hi, counts: vec![0; bins], total: 0 }
+    }
+
+    pub fn add(&mut self, v: f64) {
+        let bins = self.counts.len();
+        let t = ((v - self.lo) / (self.hi - self.lo) * bins as f64).floor();
+        let idx = (t.max(0.0) as usize).min(bins - 1);
+        self.counts[idx] += 1;
+        self.total += 1;
+    }
+
+    /// Bucket midpoints for rendering.
+    pub fn midpoints(&self) -> Vec<f64> {
+        let w = (self.hi - self.lo) / self.counts.len() as f64;
+        (0..self.counts.len()).map(|i| self.lo + w * (i as f64 + 0.5)).collect()
+    }
+
+    /// Render as an ASCII bar chart (for terminal figure output).
+    pub fn ascii(&self, width: usize) -> String {
+        let max = self.counts.iter().copied().max().unwrap_or(1).max(1);
+        let mids = self.midpoints();
+        let mut s = String::new();
+        for (m, &c) in mids.iter().zip(self.counts.iter()) {
+            let bar = "#".repeat((c as usize * width).div_ceil(max as usize).min(width));
+            s.push_str(&format!("{m:>10.1} | {bar} {c}\n"));
+        }
+        s
+    }
+}
+
+/// Log-bucketed latency recorder (nanoseconds); cheap enough for the
+/// serving hot path. Buckets are powers of √2 from 100ns to ~100s.
+#[derive(Clone, Debug)]
+pub struct LatencyHist {
+    counts: Vec<u64>,
+    total: u64,
+    sum_ns: u128,
+    max_ns: u64,
+}
+
+const LAT_BUCKETS: usize = 64;
+const LAT_BASE_NS: f64 = 100.0;
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHist {
+    pub fn new() -> Self {
+        LatencyHist { counts: vec![0; LAT_BUCKETS], total: 0, sum_ns: 0, max_ns: 0 }
+    }
+
+    #[inline]
+    pub fn record_ns(&mut self, ns: u64) {
+        let idx = if ns as f64 <= LAT_BASE_NS {
+            0
+        } else {
+            (((ns as f64 / LAT_BASE_NS).log2() * 2.0) as usize).min(LAT_BUCKETS - 1)
+        };
+        self.counts[idx] += 1;
+        self.total += 1;
+        self.sum_ns += ns as u128;
+        self.max_ns = self.max_ns.max(ns);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        self.sum_ns as f64 / self.total as f64
+    }
+
+    pub fn max_ns(&self) -> u64 {
+        self.max_ns
+    }
+
+    /// Approximate percentile from bucket boundaries.
+    pub fn percentile_ns(&self, p: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (p / 100.0 * self.total as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target.max(1) {
+                return LAT_BASE_NS * 2f64.powf(i as f64 / 2.0);
+            }
+        }
+        self.max_ns as f64
+    }
+
+    pub fn merge(&mut self, other: &LatencyHist) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum_ns += other.sum_ns;
+        self.max_ns = self.max_ns.max(other.max_ns);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_basic() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((std(&xs) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs: Vec<f64> = (1..=100).map(|v| v as f64).collect();
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-9);
+        assert!((percentile(&xs, 100.0) - 100.0).abs() < 1e-9);
+        let p50 = percentile(&xs, 50.0);
+        assert!((p50 - 50.5).abs() < 1.0, "p50={p50}");
+    }
+
+    #[test]
+    fn histogram_counts_and_clamping() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for v in [0.5, 1.5, 1.6, 9.9, -3.0, 42.0] {
+            h.add(v);
+        }
+        assert_eq!(h.total, 6);
+        assert_eq!(h.counts[0], 2); // 0.5 and clamped -3.0
+        assert_eq!(h.counts[1], 2);
+        assert_eq!(h.counts[9], 2); // 9.9 and clamped 42.0
+    }
+
+    #[test]
+    fn latency_hist_percentiles_ordered() {
+        let mut h = LatencyHist::new();
+        for i in 1..=10_000u64 {
+            h.record_ns(i * 100);
+        }
+        let p50 = h.percentile_ns(50.0);
+        let p99 = h.percentile_ns(99.0);
+        assert!(p50 < p99);
+        assert!(h.mean_ns() > 0.0);
+        assert_eq!(h.count(), 10_000);
+    }
+}

@@ -1,0 +1,149 @@
+//! Benchmark timing substrate (criterion is unavailable offline).
+//!
+//! `bench_fn` runs a closure with warmup, repeats it for a wall-clock
+//! budget, and reports mean/std per-iteration nanoseconds — enough to
+//! regenerate the paper's μs-per-example timing tables with ± spreads
+//! (Tables 2-5 report mean ± % over 100 runs; we do the same).
+
+use std::time::{Duration, Instant};
+
+/// Result of a timed benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// Mean ns per iteration across measurement runs.
+    pub mean_ns: f64,
+    /// Std dev of per-run means (the paper's ±%).
+    pub std_ns: f64,
+    pub runs: usize,
+    pub iters_per_run: u64,
+}
+
+impl BenchResult {
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns / 1e3
+    }
+
+    pub fn rel_std_pct(&self) -> f64 {
+        if self.mean_ns == 0.0 {
+            0.0
+        } else {
+            self.std_ns / self.mean_ns * 100.0
+        }
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} {:>12.3} us/iter  ±{:>4.1}%  ({} runs x {} iters)",
+            self.name,
+            self.mean_us(),
+            self.rel_std_pct(),
+            self.runs,
+            self.iters_per_run
+        )
+    }
+}
+
+/// Time `f` (which performs ONE logical iteration) with `runs` measurement
+/// runs of `iters` iterations each, after `warmup` iterations.
+pub fn bench_fn<F: FnMut()>(name: &str, warmup: u64, runs: usize, iters: u64, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut per_run_ns = Vec::with_capacity(runs);
+    for _ in 0..runs {
+        let start = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        let ns = start.elapsed().as_nanos() as f64 / iters as f64;
+        per_run_ns.push(ns);
+    }
+    BenchResult {
+        name: name.to_string(),
+        mean_ns: crate::util::stats::mean(&per_run_ns),
+        std_ns: crate::util::stats::std(&per_run_ns),
+        runs,
+        iters_per_run: iters,
+    }
+}
+
+/// Time `f` adaptively: pick an iteration count that makes one run take
+/// about `target` wall time, then do `runs` runs.
+pub fn bench_auto<F: FnMut()>(name: &str, target: Duration, runs: usize, mut f: F) -> BenchResult {
+    // Calibrate.
+    let mut iters = 1u64;
+    loop {
+        let start = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        let el = start.elapsed();
+        if el >= Duration::from_millis(5) || iters >= 1 << 24 {
+            let per = el.as_nanos().max(1) as f64 / iters as f64;
+            iters = ((target.as_nanos() as f64 / per).ceil() as u64).clamp(1, 1 << 28);
+            break;
+        }
+        iters *= 4;
+    }
+    bench_fn(name, iters / 4, runs, iters, f)
+}
+
+/// Simple stopwatch for phase timing in experiment logs.
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn lap(&mut self) -> f64 {
+        let e = self.elapsed_s();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value (std::hint-based).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_positive_time() {
+        let mut acc = 0u64;
+        let r = bench_fn("spin", 10, 3, 100, || {
+            for i in 0..100u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+        });
+        black_box(acc);
+        assert!(r.mean_ns > 0.0);
+        assert_eq!(r.runs, 3);
+    }
+
+    #[test]
+    fn auto_calibration_runs() {
+        let r = bench_auto("noop", Duration::from_millis(10), 2, || {
+            black_box(1 + 1);
+        });
+        assert!(r.iters_per_run >= 1);
+    }
+}

@@ -1,0 +1,126 @@
+//! Cross-method integration: on a mid-size GBT ensemble, the paper's
+//! qualitative ordering of methods must hold — QWYC* dominates fixed
+//! orderings with Algorithm-2 thresholds at matched α, and every method
+//! trades #models against %diff monotonically.
+
+use qwyc::data::synth::{generate, Which};
+use qwyc::fan::FanClassifier;
+use qwyc::gbt::{train, GbtParams};
+use qwyc::orderings;
+use qwyc::qwyc::{optimize_order, optimize_thresholds_for_order, simulate, QwycConfig};
+
+struct Setup {
+    sm_tr: qwyc::ensemble::ScoreMatrix,
+    sm_te: qwyc::ensemble::ScoreMatrix,
+    labels_tr: Vec<f32>,
+}
+
+fn setup() -> Setup {
+    let (tr, te) = generate(Which::AdultLike, 7, 0.06);
+    let (ens, _) = train(&tr, &GbtParams { n_trees: 60, max_depth: 4, ..Default::default() });
+    Setup {
+        sm_tr: ens.score_matrix(&tr),
+        sm_te: ens.score_matrix(&te),
+        labels_tr: tr.y.clone(),
+    }
+}
+
+#[test]
+fn qwyc_star_dominates_fixed_orderings_on_train() {
+    let s = setup();
+    let alpha = 0.01;
+    let cfg = QwycConfig { alpha, ..Default::default() };
+    let star = simulate(&optimize_order(&s.sm_tr, &cfg), &s.sm_tr);
+
+    let orders: Vec<(&str, Vec<usize>)> = vec![
+        ("natural", orderings::natural(s.sm_tr.t)),
+        ("random", orderings::random(s.sm_tr.t, 3)),
+        ("ind_mse", orderings::individual_mse(&s.sm_tr, &s.labels_tr)),
+        ("greedy_mse", orderings::greedy_mse(&s.sm_tr, &s.labels_tr)),
+    ];
+    for (name, ord) in orders {
+        let sim = simulate(&optimize_thresholds_for_order(&s.sm_tr, &ord, alpha, false), &s.sm_tr);
+        assert!(
+            star.mean_models <= sim.mean_models + 1e-9,
+            "QWYC* ({:.2}) worse than {name} ({:.2}) on the optimization set",
+            star.mean_models,
+            sim.mean_models
+        );
+    }
+}
+
+#[test]
+fn all_methods_generalize_to_test_set() {
+    let s = setup();
+    let alpha = 0.01;
+    let cfg = QwycConfig { alpha, ..Default::default() };
+    let fc = optimize_order(&s.sm_tr, &cfg);
+    let sim_te = simulate(&fc, &s.sm_te);
+    // Held-out diff can exceed alpha but must stay small, and the speedup
+    // must carry over.
+    assert!(sim_te.pct_diff < 0.05, "test diff {}", sim_te.pct_diff);
+    assert!(
+        sim_te.mean_models < 0.8 * s.sm_te.t as f64,
+        "no test-time speedup: {}",
+        sim_te.mean_models
+    );
+}
+
+#[test]
+fn fan_baseline_is_slower_than_qwyc_at_matched_diff() {
+    // The paper's headline comparison: at ≈matched %diff, QWYC* evaluates
+    // fewer base models than Fan (Individual MSE order).
+    let s = setup();
+    let fan_order = orderings::individual_mse(&s.sm_tr, &s.labels_tr);
+    let fan = FanClassifier::calibrate(&s.sm_tr, &fan_order, 0.01);
+
+    // Sweep γ to find the Fan point with test diff closest to target.
+    let target = 0.01;
+    let mut fan_best: Option<(f64, f64)> = None; // (|diff-target|, models)
+    for gamma in [0.5, 1.0, 1.5, 2.0, 2.5, 3.0, 4.0] {
+        let sim = fan.simulate(&s.sm_te, gamma, false);
+        let d = (sim.pct_diff - target).abs();
+        if fan_best.map(|(bd, _)| d < bd).unwrap_or(true) {
+            fan_best = Some((d, sim.mean_models));
+        }
+    }
+    let (_, fan_models) = fan_best.unwrap();
+
+    let mut qwyc_best: Option<(f64, f64)> = None;
+    for alpha in [0.002, 0.005, 0.01, 0.02] {
+        let cfg = QwycConfig { alpha, ..Default::default() };
+        let sim = simulate(&optimize_order(&s.sm_tr, &cfg), &s.sm_te);
+        let d = (sim.pct_diff - target).abs();
+        if qwyc_best.map(|(bd, _)| d < bd).unwrap_or(true) {
+            qwyc_best = Some((d, sim.mean_models));
+        }
+    }
+    let (_, qwyc_models) = qwyc_best.unwrap();
+    assert!(
+        qwyc_models < fan_models,
+        "QWYC* {qwyc_models:.1} models not faster than Fan {fan_models:.1}"
+    );
+}
+
+#[test]
+fn training_bigger_and_pruning_beats_small_ensemble() {
+    // Figure 1's "GBT alone" comparison: a 60-tree ensemble QWYC-pruned
+    // to ~k models should be at least as accurate as training a k-tree
+    // ensemble outright (compared at the pruned ensemble's mean #models).
+    let (tr, te) = generate(Which::AdultLike, 7, 0.06);
+    let (big, _) = train(&tr, &GbtParams { n_trees: 60, max_depth: 4, ..Default::default() });
+    let sm_tr = big.score_matrix(&tr);
+    let sm_te = big.score_matrix(&te);
+    let fc = optimize_order(&sm_tr, &QwycConfig { alpha: 0.01, ..Default::default() });
+    let sim = simulate(&fc, &sm_te);
+    let k = sim.mean_models.ceil() as usize;
+
+    let (small, _) = train(&tr, &GbtParams { n_trees: k, max_depth: 4, ..Default::default() });
+    let small_acc = small.accuracy(&te);
+    let pruned_acc = sim.accuracy(&te.y);
+    assert!(
+        pruned_acc + 0.005 >= small_acc,
+        "pruned-60-trees acc {pruned_acc:.4} (at {k} mean models) much worse than \
+         {k}-tree ensemble acc {small_acc:.4}"
+    );
+}

@@ -1,0 +1,118 @@
+//! Paper Appendix A.1: the worked PIPELINE instance. QWYC's greedy must
+//! recover the optimal order π = [3, 2, 1] and the optimal evaluation cost
+//! OPT = OPT* = (8c₃ + 4c₂ + 2c₁)/8 = 7/4, and the 4-approximation bound
+//! must hold by a wide margin (here: exactly optimal).
+
+use qwyc::ensemble::ScoreMatrix;
+use qwyc::qwyc::{optimize_order, simulate, QwycConfig};
+
+/// Build the Appendix A.1 instance: 8 examples, 3 base models, β = 0,
+/// c_t = 1.
+fn appendix_a1() -> ScoreMatrix {
+    let n = 8;
+    let mut cols = vec![0f32; n * 3];
+    // f1: e1 → +1, e2 → −1.
+    cols[0] = 1.0;
+    cols[1] = -1.0;
+    // f2: e3, e4 → +1; e5 → −1.
+    cols[n + 2] = 1.0;
+    cols[n + 3] = 1.0;
+    cols[n + 4] = -1.0;
+    // f3: e5, e7, e8 → −1; e6 → +1.
+    cols[2 * n + 4] = -1.0;
+    cols[2 * n + 5] = 1.0;
+    cols[2 * n + 6] = -1.0;
+    cols[2 * n + 7] = -1.0;
+    ScoreMatrix::new(n, 3, cols, 0.0, 0.0, vec![1.0; 3])
+}
+
+#[test]
+fn full_classifier_decisions_match_paper() {
+    let sm = appendix_a1();
+    // f = f1+f2+f3: e1..e8 = [1, -1, 1, 1, -2, 1, -1, -1]; β=0, f≥β ⇒ P.
+    let expect = [true, false, true, true, false, true, false, false];
+    for (i, &e) in expect.iter().enumerate() {
+        assert_eq!(sm.full_positive(i), e, "example e{}", i + 1);
+    }
+}
+
+#[test]
+fn qwyc_recovers_optimal_order_and_cost() {
+    let sm = appendix_a1();
+    let fc = optimize_order(&sm, &QwycConfig { alpha: 0.0, ..Default::default() });
+    fc.validate().unwrap();
+    // Optimal order [3, 2, 1] (1-based) = [2, 1, 0] (0-based).
+    assert_eq!(fc.order, vec![2, 1, 0]);
+    let sim = simulate(&fc, &sm);
+    assert_eq!(sim.pct_diff, 0.0);
+    assert!((sim.mean_models - 1.75).abs() < 1e-12, "cost {}", sim.mean_models);
+}
+
+#[test]
+fn greedy_cost_within_4x_of_opt_over_random_instances() {
+    // Theorem 1 (sanity form): on random small instances where we can
+    // brute-force all T! orders with exhaustive zero-budget thresholds,
+    // greedy cost ≤ 4·OPT. (Random instances should sit far below the
+    // bound — usually at exactly OPT.)
+    use qwyc::util::rng::Rng;
+    let mut rng = Rng::new(99);
+    let mut exact_hits = 0;
+    for trial in 0..30 {
+        let n = 24;
+        let t = 4;
+        let mut cols = vec![0f32; n * t];
+        for c in cols.iter_mut() {
+            // Sparse ±1 votes, like the appendix instance.
+            let r = rng.f64();
+            *c = if r < 0.15 {
+                1.0
+            } else if r < 0.3 {
+                -1.0
+            } else {
+                0.0
+            };
+        }
+        let sm = ScoreMatrix::new(n, t, cols, 0.0, 0.0, vec![1.0; t]);
+        let fc = optimize_order(&sm, &QwycConfig { alpha: 0.0, ..Default::default() });
+        let greedy_cost = simulate(&fc, &sm).mean_models;
+
+        // Brute force over all 24 permutations of 4 models.
+        let mut best = f64::INFINITY;
+        for p in &permutations(t) {
+            let fc_p = qwyc::qwyc::optimize_thresholds_for_order(&sm, p, 0.0, false);
+            let sim = simulate(&fc_p, &sm);
+            assert_eq!(sim.pct_diff, 0.0, "alpha=0 violated by fixed order");
+            best = best.min(sim.mean_models);
+        }
+        assert!(
+            greedy_cost <= 4.0 * best + 1e-9,
+            "trial {trial}: greedy {greedy_cost} > 4x opt {best}"
+        );
+        if (greedy_cost - best).abs() < 1e-9 {
+            exact_hits += 1;
+        }
+    }
+    assert!(exact_hits >= 20, "greedy exactly optimal only {exact_hits}/30 times");
+}
+
+fn permutations(t: usize) -> Vec<Vec<usize>> {
+    let mut out = Vec::new();
+    let mut cur: Vec<usize> = (0..t).collect();
+    heap(&mut cur, t, &mut out);
+    out
+}
+
+fn heap(cur: &mut Vec<usize>, k: usize, out: &mut Vec<Vec<usize>>) {
+    if k == 1 {
+        out.push(cur.clone());
+        return;
+    }
+    for i in 0..k {
+        heap(cur, k - 1, out);
+        if k % 2 == 0 {
+            cur.swap(i, k - 1);
+        } else {
+            cur.swap(0, k - 1);
+        }
+    }
+}

@@ -1,0 +1,145 @@
+//! Property tests over the QWYC optimizer's contract, on randomly
+//! generated score matrices (proptest substrate: util::proptest).
+
+use qwyc::ensemble::ScoreMatrix;
+use qwyc::qwyc::{optimize_order, optimize_thresholds_for_order, simulate, QwycConfig};
+use qwyc::util::proptest::{check, Gen};
+
+/// Random score matrix: n examples, t models, mixture of informative and
+/// noisy columns, random bias/β.
+fn random_matrix(g: &mut Gen) -> ScoreMatrix {
+    let n = g.usize_in(10, 250);
+    let t = g.usize_in(2, 12);
+    // Latent per-example difficulty drives correlated columns.
+    let latent: Vec<f32> = (0..n).map(|_| g.rng.normal() as f32).collect();
+    let mut cols = vec![0f32; n * t];
+    for ti in 0..t {
+        let informativeness = g.rng.f64() as f32;
+        for i in 0..n {
+            cols[ti * n + i] =
+                informativeness * latent[i] + (1.0 - informativeness) * g.rng.normal() as f32;
+        }
+    }
+    let bias = (g.rng.normal() * 0.3) as f32;
+    let beta = (g.rng.normal() * 0.3) as f32;
+    ScoreMatrix::new(n, t, cols, bias, beta, vec![1.0; t])
+}
+
+#[test]
+fn alpha_constraint_always_holds_on_optimization_set() {
+    check("diff<=alpha", 120, |g| {
+        let sm = random_matrix(g);
+        let alpha = [0.0, 0.01, 0.05, 0.2][g.usize_in(0, 3)];
+        let neg_only = g.rng.bool(0.3);
+        let cfg = QwycConfig { alpha, neg_only, max_opt_examples: 0, seed: g.seed };
+        let fc = optimize_order(&sm, &cfg);
+        fc.validate().map_err(|e| format!("invalid classifier: {e}"))?;
+        let sim = simulate(&fc, &sm);
+        if sim.pct_diff > alpha + 1e-9 {
+            return Err(format!("pct_diff {} > alpha {alpha}", sim.pct_diff));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn joint_optimization_never_worse_than_natural_order() {
+    // QWYC* (order + thresholds) must beat-or-match Algorithm 2 on the
+    // natural order, measured on the optimization set itself. Both spend
+    // the same budget; QWYC* additionally chooses the order greedily —
+    // greedy choice includes "keep the natural next model", so it can
+    // only improve the greedy-step J. (Global non-inferiority is not
+    // guaranteed in theory, but holds overwhelmingly; allow tiny slack.)
+    check("qwyc*<=natural", 60, |g| {
+        let sm = random_matrix(g);
+        let alpha = 0.02;
+        let cfg = QwycConfig { alpha, neg_only: false, max_opt_examples: 0, seed: g.seed };
+        let star = simulate(&optimize_order(&sm, &cfg), &sm);
+        let natural: Vec<usize> = (0..sm.t).collect();
+        let fixed = simulate(&optimize_thresholds_for_order(&sm, &natural, alpha, false), &sm);
+        if star.mean_models > fixed.mean_models * 1.10 + 0.5 {
+            return Err(format!(
+                "qwyc* {} models vs natural-order {} models",
+                star.mean_models, fixed.mean_models
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn neg_only_classifiers_never_exit_positive() {
+    check("neg_only no early positives", 80, |g| {
+        let sm = random_matrix(g);
+        let cfg = QwycConfig { alpha: 0.05, neg_only: true, max_opt_examples: 0, seed: g.seed };
+        let fc = optimize_order(&sm, &cfg);
+        if fc.eps_pos.iter().any(|&e| e != f32::INFINITY) {
+            return Err("finite eps_pos in neg_only mode".into());
+        }
+        let sim = simulate(&fc, &sm);
+        for i in 0..sm.n {
+            if sim.stops[i] < sm.t as u32 && sim.decisions[i] {
+                return Err(format!("example {i} exited early positive"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn stops_and_cost_accounting_consistent() {
+    check("cost accounting", 80, |g| {
+        let sm = random_matrix(g);
+        let cfg = QwycConfig { alpha: 0.05, neg_only: false, max_opt_examples: 0, seed: g.seed };
+        let fc = optimize_order(&sm, &cfg);
+        let sim = simulate(&fc, &sm);
+        let mean_stops =
+            sim.stops.iter().map(|&s| s as f64).sum::<f64>() / sm.n as f64;
+        if (mean_stops - sim.mean_models).abs() > 1e-9 {
+            return Err(format!("mean stops {mean_stops} != mean models {}", sim.mean_models));
+        }
+        // Unit costs: mean cost == mean models.
+        if (sim.mean_cost - sim.mean_models).abs() > 1e-9 {
+            return Err("mean_cost != mean_models under unit costs".into());
+        }
+        if sim.stops.iter().any(|&s| s == 0 || s > sm.t as u32) {
+            return Err("stop position out of range".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn costs_influence_greedy_choice() {
+    // Duplicate an informative column with a much cheaper cost: the
+    // greedy must prefer the cheap copy first.
+    check("cost-aware ordering", 40, |g| {
+        let n = g.usize_in(30, 120);
+        let latent: Vec<f32> = (0..n).map(|_| g.rng.normal() as f32).collect();
+        let mut cols = Vec::with_capacity(n * 3);
+        cols.extend(latent.iter().map(|&v| v)); // model 0: expensive copy
+        cols.extend(latent.iter().map(|&v| v)); // model 1: cheap copy
+        cols.extend((0..n).map(|_| g.rng.normal() as f32 * 0.1)); // noise
+        let sm = ScoreMatrix::new(n, 3, cols, 0.0, 0.0, vec![10.0, 1.0, 1.0]);
+        let cfg = QwycConfig { alpha: 0.05, neg_only: false, max_opt_examples: 0, seed: g.seed };
+        let fc = optimize_order(&sm, &cfg);
+        if fc.order[0] == 0 {
+            return Err(format!("picked expensive duplicate first: {:?}", fc.order));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn simulate_is_deterministic() {
+    check("determinism", 30, |g| {
+        let sm = random_matrix(g);
+        let cfg = QwycConfig { alpha: 0.01, neg_only: false, max_opt_examples: 0, seed: 7 };
+        let a = optimize_order(&sm, &cfg);
+        let b = optimize_order(&sm, &cfg);
+        if a.order != b.order || a.eps_pos != b.eps_pos || a.eps_neg != b.eps_neg {
+            return Err("optimizer not deterministic".into());
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,151 @@
+//! Integration: the AOT PJRT path must agree with the native rust path.
+//!
+//! Requires `make artifacts` (skipped with a loud message otherwise).
+//! This is the cross-layer correctness seam of the whole system: L1
+//! (Pallas lattice kernel) + L2 (gather/scan graph) compiled to HLO and
+//! executed through the rust runtime must produce exactly the decisions,
+//! stop positions, and scores of the pure-rust evaluator.
+
+use qwyc::data::synth::{generate, Which};
+use qwyc::ensemble::Ensemble;
+use qwyc::lattice::{train_joint, LatticeParams};
+use qwyc::qwyc::{optimize_order, QwycConfig};
+use qwyc::runtime::engine::{Engine, NativeEngine, PjrtEngine};
+use qwyc::runtime::Runtime;
+use std::path::Path;
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let p = Path::new("artifacts");
+    if p.join("manifest.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("SKIP: artifacts/manifest.json missing — run `make artifacts`");
+        None
+    }
+}
+
+/// Train a tiny ensemble matching the `demo` artifact geometry
+/// (D=4, T=4, d=3).
+fn demo_setup() -> (qwyc::data::Dataset, Ensemble, qwyc::qwyc::FastClassifier) {
+    let (mut tr, te) = generate(Which::Rw2Like, 77, 0.01);
+    // Project the rw2-like features down to D=4.
+    let project = |ds: &qwyc::data::Dataset| {
+        let mut out = qwyc::data::Dataset::new("demo4", 4);
+        for i in 0..ds.n {
+            let r = ds.row(i);
+            out.push(&[r[0], r[7], r[14], r[21]], ds.y[i]);
+        }
+        out
+    };
+    tr = project(&tr);
+    let te = project(&te);
+    let (ens, _) = train_joint(
+        &tr,
+        &LatticeParams { n_lattices: 4, dim: 3, steps: 120, batch: 64, ..Default::default() },
+    );
+    let sm = ens.score_matrix(&tr);
+    let fc = optimize_order(&sm, &QwycConfig { alpha: 0.01, ..Default::default() });
+    (te, ens, fc)
+}
+
+#[test]
+fn pjrt_stage_engine_matches_native_engine() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (te, ens, fc) = demo_setup();
+    let rt = Runtime::open(dir).expect("open runtime");
+    let mut pjrt = PjrtEngine::new(rt, "demo_stage", &ens, &fc).expect("pjrt engine");
+    let mut native = NativeEngine::new(ens.clone(), fc.clone(), 4);
+
+    // Several batch sizes, including non-multiples of the compiled B=8.
+    for n in [1usize, 7, 8, 9, 300] {
+        let n = n.min(te.n);
+        let x = &te.x[..n * 4];
+        let got = pjrt.classify_batch(x, n).expect("pjrt classify");
+        let want = native.classify_batch(x, n).expect("native classify");
+        for i in 0..n {
+            assert_eq!(got[i].positive, want[i].positive, "n={n} example {i} decision");
+            assert_eq!(
+                got[i].models_evaluated, want[i].models_evaluated,
+                "n={n} example {i} models"
+            );
+            assert!(
+                (got[i].score - want[i].score).abs() < 1e-4,
+                "n={n} example {i}: score {} vs {}",
+                got[i].score,
+                want[i].score
+            );
+            assert_eq!(got[i].early, want[i].early, "n={n} example {i} early");
+        }
+    }
+}
+
+#[test]
+fn pjrt_full_artifact_matches_ensemble_eval() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (te, ens, _) = demo_setup();
+    let mut rt = Runtime::open(dir).expect("open runtime");
+    let art = rt.get("demo_full").expect("compile demo_full");
+    let cfg = art.spec.config.clone();
+    assert_eq!(cfg.t, 4);
+    let b = cfg.b;
+
+    // Pack subsets/theta in natural order.
+    let v = 1 << cfg.dim;
+    let mut subsets = vec![0i32; cfg.t * cfg.dim];
+    let mut theta = vec![0f32; cfg.t * v];
+    for (t, m) in ens.models.iter().enumerate() {
+        let qwyc::ensemble::BaseModel::Lattice(l) = m else { panic!("lattice expected") };
+        for (j, &f) in l.features.iter().enumerate() {
+            subsets[t * cfg.dim + j] = f as i32;
+        }
+        theta[t * v..(t + 1) * v].copy_from_slice(&l.theta);
+    }
+    let mut xbuf = vec![0f32; b * cfg.d_features];
+    for (slot, i) in (0..b.min(te.n)).enumerate() {
+        xbuf[slot * cfg.d_features..(slot + 1) * cfg.d_features].copy_from_slice(te.row(i));
+    }
+    let out = art
+        .execute(&[
+            qwyc::runtime::Input::F32(&xbuf),
+            qwyc::runtime::Input::I32(&subsets),
+            qwyc::runtime::Input::F32(&theta),
+        ])
+        .expect("execute");
+    let scores = out[0].as_f32();
+    for i in 0..b.min(te.n) {
+        let want = ens.eval_full(te.row(i)) - ens.bias; // artifact excludes bias
+        assert!(
+            (scores[i] - want).abs() < 1e-4,
+            "example {i}: {} vs {}",
+            scores[i],
+            want
+        );
+    }
+}
+
+#[test]
+fn runtime_rejects_wrong_shapes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::open(dir).expect("open runtime");
+    let art = rt.get("demo_full").expect("compile");
+    // Wrong element count.
+    let err = art.execute(&[
+        qwyc::runtime::Input::F32(&[0.0; 3]),
+        qwyc::runtime::Input::I32(&[0; 12]),
+        qwyc::runtime::Input::F32(&[0.0; 32]),
+    ]);
+    assert!(err.is_err());
+    // Wrong input arity.
+    let err = art.execute(&[qwyc::runtime::Input::F32(&[0.0; 32])]);
+    assert!(err.is_err());
+}
+
+#[test]
+fn manifest_names_present() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::open(dir).expect("open runtime");
+    let names = rt.names();
+    for want in ["demo_stage", "demo_full", "rw1_stage", "rw2_stage"] {
+        assert!(names.iter().any(|n| n == want), "missing artifact {want}: {names:?}");
+    }
+}

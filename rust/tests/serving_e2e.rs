@@ -1,0 +1,181 @@
+//! End-to-end serving: TCP server + dynamic batcher + early-exit engine.
+//! Exercises the full coordinator with both backends (native always; PJRT
+//! when artifacts are present).
+
+use qwyc::coordinator::{BatchPolicy, Client, Server};
+use qwyc::data::synth::{generate, Which};
+use qwyc::lattice::{train_joint, LatticeParams};
+use qwyc::qwyc::{optimize_order, QwycConfig};
+use qwyc::runtime::engine::NativeEngine;
+use std::time::Duration;
+
+fn tiny_model() -> (qwyc::data::Dataset, qwyc::ensemble::Ensemble, qwyc::qwyc::FastClassifier) {
+    let (tr, te) = generate(Which::Rw2Like, 55, 0.005);
+    let (ens, _) = train_joint(
+        &tr,
+        &LatticeParams { n_lattices: 6, dim: 4, steps: 80, batch: 64, ..Default::default() },
+    );
+    let sm = ens.score_matrix(&tr);
+    let fc = optimize_order(&sm, &QwycConfig { alpha: 0.01, ..Default::default() });
+    (te, ens, fc)
+}
+
+#[test]
+fn server_answers_eval_requests_correctly() {
+    let (te, ens, fc) = tiny_model();
+    let d = te.d;
+    let (ens2, fc2) = (ens.clone(), fc.clone());
+    let server = Server::start(
+        "127.0.0.1:0",
+        move || Box::new(NativeEngine::new(ens2, fc2, d)),
+        BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(1) },
+    )
+    .expect("server start");
+
+    let mut client = Client::connect(&server.addr).expect("connect");
+    for i in 0..50 {
+        let x = te.row(i);
+        let resp = client.eval(x).expect("eval");
+        let want = fc.eval_single(&ens, x);
+        assert_eq!(resp.positive, want.positive, "request {i}");
+        assert_eq!(resp.models as usize, want.models_evaluated, "request {i}");
+        assert!((resp.score - want.score).abs() < 1e-4);
+    }
+    let stats = client.stats().expect("stats");
+    assert!(stats.starts_with("STATS"), "{stats}");
+    assert!(stats.contains("requests=50"), "{stats}");
+    server.stop();
+}
+
+#[test]
+fn server_batches_pipelined_requests() {
+    let (te, ens, fc) = tiny_model();
+    let d = te.d;
+    let server = Server::start(
+        "127.0.0.1:0",
+        move || Box::new(NativeEngine::new(ens, fc, d)),
+        BatchPolicy { max_batch: 64, max_wait: Duration::from_millis(5) },
+    )
+    .expect("server start");
+
+    let mut client = Client::connect(&server.addr).expect("connect");
+    // Pipeline 200 requests before reading any response.
+    let n = 200.min(te.n);
+    for i in 0..n {
+        client.send_eval(te.row(i)).expect("send");
+    }
+    let mut got = 0;
+    for _ in 0..n {
+        let r = client.read_response().expect("read");
+        assert!(r.models >= 1);
+        got += 1;
+    }
+    assert_eq!(got, n);
+    let snap = server.metrics.snapshot();
+    assert!(snap.mean_batch > 1.5, "no batching happened: {}", snap.mean_batch);
+    server.stop();
+}
+
+#[test]
+fn server_rejects_malformed_requests() {
+    let (te, ens, fc) = tiny_model();
+    let d = te.d;
+    let server = Server::start(
+        "127.0.0.1:0",
+        move || Box::new(NativeEngine::new(ens, fc, d)),
+        BatchPolicy::default(),
+    )
+    .expect("server start");
+    use std::io::{BufRead, BufReader, Write};
+    let mut s = std::net::TcpStream::connect(server.addr).unwrap();
+    writeln!(s, "EVAL notanumber 1,2").unwrap();
+    writeln!(s, "BOGUS").unwrap();
+    writeln!(s, "EVAL 1 1.0,2.0").unwrap(); // wrong feature count
+    let mut r = BufReader::new(s.try_clone().unwrap());
+    for _ in 0..3 {
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        assert!(line.starts_with("ERR"), "{line}");
+    }
+    server.stop();
+}
+
+#[test]
+fn failing_engine_reports_errors_to_clients() {
+    // Failure injection: an engine that always errors must surface ERR
+    // responses (not hangs, not dropped connections).
+    struct Broken;
+    impl qwyc::runtime::engine::Engine for Broken {
+        fn n_features(&self) -> usize {
+            2
+        }
+        fn classify_batch(
+            &mut self,
+            _x: &[f32],
+            _n: usize,
+        ) -> Result<Vec<qwyc::runtime::engine::Outcome>, String> {
+            Err("injected failure".into())
+        }
+        fn backend(&self) -> &'static str {
+            "broken"
+        }
+    }
+    let server = Server::start("127.0.0.1:0", || Box::new(Broken), BatchPolicy::default())
+        .expect("server start");
+    use std::io::{BufRead, BufReader, Write};
+    let mut s = std::net::TcpStream::connect(server.addr).unwrap();
+    writeln!(s, "EVAL 0 0.5,0.5").unwrap();
+    let mut r = BufReader::new(s.try_clone().unwrap());
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    assert!(line.starts_with("ERR"), "{line}");
+    assert!(line.contains("injected failure"), "{line}");
+    server.stop();
+}
+
+#[test]
+fn pjrt_backend_serves_when_artifacts_exist() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    }
+    // Demo geometry: D=4, T=4, d=3.
+    let (tr, te) = generate(Which::Rw2Like, 77, 0.01);
+    let project = |ds: &qwyc::data::Dataset| {
+        let mut out = qwyc::data::Dataset::new("demo4", 4);
+        for i in 0..ds.n {
+            let r = ds.row(i);
+            out.push(&[r[0], r[7], r[14], r[21]], ds.y[i]);
+        }
+        out
+    };
+    let (tr, te) = (project(&tr), project(&te));
+    let (ens, _) = train_joint(
+        &tr,
+        &LatticeParams { n_lattices: 4, dim: 3, steps: 80, batch: 64, ..Default::default() },
+    );
+    let sm = ens.score_matrix(&tr);
+    let fc = optimize_order(&sm, &QwycConfig { alpha: 0.01, ..Default::default() });
+    let (ens2, fc2) = (ens.clone(), fc.clone());
+
+    let server = Server::start(
+        "127.0.0.1:0",
+        move || {
+            let rt = qwyc::runtime::Runtime::open(std::path::Path::new("artifacts")).unwrap();
+            Box::new(
+                qwyc::runtime::engine::PjrtEngine::new(rt, "demo_stage", &ens2, &fc2).unwrap(),
+            )
+        },
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
+    )
+    .expect("server start");
+
+    let mut client = Client::connect(&server.addr).expect("connect");
+    for i in 0..30 {
+        let resp = client.eval(te.row(i)).expect("eval");
+        let want = fc.eval_single(&ens, te.row(i));
+        assert_eq!(resp.positive, want.positive, "request {i}");
+        assert_eq!(resp.models as usize, want.models_evaluated, "request {i}");
+    }
+    server.stop();
+}
