@@ -44,10 +44,12 @@ fn main() {
     show("QWYC* (joint order+thresholds)", &star);
 
     // Fixed orders + Algorithm 2 thresholds.
+    let n_opt = 4000.min(sm_tr.n);
+    let sm_sub = sm_tr.select_examples(&(0..n_opt).collect::<Vec<_>>());
     let fixed: Vec<(String, Vec<usize>)> = vec![
         ("GBT natural order".into(), orderings::natural(sm_tr.t)),
         ("Individual MSE order".into(), orderings::individual_mse(&sm_tr, &tr.y)),
-        ("Greedy MSE order".into(), orderings::greedy_mse(&sm_tr.select_examples(&(0..4000.min(sm_tr.n)).collect::<Vec<_>>()), &tr.y[..4000.min(sm_tr.n)])),
+        ("Greedy MSE order".into(), orderings::greedy_mse(&sm_sub, &tr.y[..n_opt])),
     ];
     for (name, order) in &fixed {
         let sim = simulate(&optimize_thresholds_for_order(&sm_tr, order, alpha, false), &sm_te);

@@ -31,7 +31,10 @@ fn main() {
     // 2. QWYC* joint optimization at a few faithfulness budgets.
     let sm_train = ensemble.score_matrix(&train_ds);
     let sm_test = ensemble.score_matrix(&test_ds);
-    println!("\n{:<10} {:>12} {:>10} {:>10} {:>10}", "alpha", "mean#models", "speedup", "%diff", "accuracy");
+    println!(
+        "\n{:<10} {:>12} {:>10} {:>10} {:>10}",
+        "alpha", "mean#models", "speedup", "%diff", "accuracy"
+    );
     for alpha in [0.0, 0.005, 0.01, 0.02] {
         let cfg = QwycConfig { alpha, ..Default::default() };
         let fc = optimize_order(&sm_train, &cfg);

@@ -16,7 +16,9 @@ use qwyc::data::synth::{generate, Which};
 use qwyc::data::Dataset;
 use qwyc::lattice::{train_joint, LatticeParams};
 use qwyc::qwyc::{optimize_order, FastClassifier, QwycConfig};
-use qwyc::runtime::engine::{Engine, NativeEngine, PjrtEngine};
+#[cfg(feature = "pjrt")]
+use qwyc::runtime::engine::PjrtEngine;
+use qwyc::runtime::engine::{Engine, NativeEngine};
 use std::time::Duration;
 
 fn main() {
@@ -24,6 +26,10 @@ fn main() {
         .skip_while(|a| a != "--backend")
         .nth(1)
         .unwrap_or_else(|| "native".into());
+    if backend == "pjrt" && !cfg!(feature = "pjrt") {
+        eprintln!("error: built without the 'pjrt' feature; rerun with --features pjrt");
+        std::process::exit(2);
+    }
 
     // --- model: demo geometry (D=4, T=4, d=3) so both backends serve the
     // same artifact-compatible ensemble.
@@ -58,13 +64,16 @@ fn main() {
         let server = Server::start(
             "127.0.0.1:0",
             move || -> Box<dyn Engine> {
+                #[cfg(feature = "pjrt")]
                 if backend2 == "pjrt" {
                     let rt = qwyc::runtime::Runtime::open(std::path::Path::new("artifacts"))
                         .expect("run `make artifacts` first");
-                    Box::new(PjrtEngine::new(rt, "demo_stage", &ens2, &fc_used).expect("engine"))
-                } else {
-                    Box::new(NativeEngine::new(ens2, fc_used, 4))
+                    return Box::new(
+                        PjrtEngine::new(rt, "demo_stage", &ens2, &fc_used).expect("engine"),
+                    );
                 }
+                let _ = &backend2;
+                Box::new(NativeEngine::new(ens2, fc_used, 4))
             },
             BatchPolicy { max_batch: 256, max_wait: Duration::from_micros(500) },
         )

@@ -1,0 +1,7 @@
+"""Make the build-time `compile` package importable however pytest is
+invoked (CI runs `pytest python/tests -q` from the repository root)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

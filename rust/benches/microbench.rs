@@ -8,6 +8,7 @@
 use qwyc::data::synth::{generate, Which};
 use qwyc::ensemble::BaseModel;
 use qwyc::gbt::{train as gbt_train, GbtParams};
+#[cfg(feature = "pjrt")]
 use qwyc::lattice::{train_joint, LatticeParams};
 use qwyc::qwyc::thresholds::{optimize_position, Search};
 use qwyc::qwyc::{optimize_order, QwycConfig};
@@ -81,7 +82,8 @@ fn main() {
         println!("{}", r.report());
     }
 
-    // ---- PJRT stage (needs artifacts) --------------------------------
+    // ---- PJRT stage (needs --features pjrt and artifacts) ------------
+    #[cfg(feature = "pjrt")]
     if std::path::Path::new("artifacts/manifest.json").exists() {
         use qwyc::runtime::engine::Engine;
         let (tr2, _) = generate(Which::Rw2Like, 77, 0.01);
@@ -101,7 +103,8 @@ fn main() {
         let smd = ens.score_matrix(&tr2);
         let fcd = optimize_order(&smd, &QwycConfig { alpha: 0.01, ..Default::default() });
         let rt = qwyc::runtime::Runtime::open(std::path::Path::new("artifacts")).unwrap();
-        let mut engine = qwyc::runtime::engine::PjrtEngine::new(rt, "demo_stage", &ens, &fcd).unwrap();
+        let mut engine =
+            qwyc::runtime::engine::PjrtEngine::new(rt, "demo_stage", &ens, &fcd).unwrap();
         let b = 8 * 4; // compiled B=8, D=4
         let xb: Vec<f32> = tr2.x[..b].to_vec();
         let r = bench_auto("pjrt demo_stage batch (B=8,T=4,d=3)", budget, runs, || {
@@ -112,4 +115,6 @@ fn main() {
     } else {
         println!("(skipping pjrt stage bench: run `make artifacts`)");
     }
+    #[cfg(not(feature = "pjrt"))]
+    println!("(skipping pjrt stage bench: rebuild with --features pjrt and run `make artifacts`)");
 }

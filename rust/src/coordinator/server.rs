@@ -51,7 +51,11 @@ impl Server {
     /// Start serving on `bind_addr` (e.g. "127.0.0.1:0"). The engine is
     /// built by `engine_factory` *inside* the worker thread — PJRT
     /// handles are not `Send`, so the engine must be born where it lives.
-    pub fn start<F>(bind_addr: &str, engine_factory: F, policy: BatchPolicy) -> std::io::Result<Server>
+    pub fn start<F>(
+        bind_addr: &str,
+        engine_factory: F,
+        policy: BatchPolicy,
+    ) -> std::io::Result<Server>
     where
         F: FnOnce() -> Box<dyn Engine> + Send + 'static,
     {
@@ -112,7 +116,8 @@ impl Server {
 
         // Acceptor: one thread per connection (serving fan-in is small;
         // the engine worker is the throughput bottleneck by design).
-        let conns: Arc<std::sync::Mutex<Vec<TcpStream>>> = Arc::new(std::sync::Mutex::new(Vec::new()));
+        let conns: Arc<std::sync::Mutex<Vec<TcpStream>>> =
+            Arc::new(std::sync::Mutex::new(Vec::new()));
         let acc_shutdown = shutdown.clone();
         let acc_metrics = metrics.clone();
         let acc_conns = conns.clone();
@@ -142,7 +147,14 @@ impl Server {
             // channel disconnects and the worker drains.
         });
 
-        Ok(Server { addr, metrics, shutdown, acceptor: Some(acceptor), worker: Some(worker), conns })
+        Ok(Server {
+            addr,
+            metrics,
+            shutdown,
+            acceptor: Some(acceptor),
+            worker: Some(worker),
+            conns,
+        })
     }
 
     /// Signal shutdown, sever open connections, and join threads.
@@ -198,7 +210,11 @@ fn handle_conn(stream: TcpStream, tx: Sender<Request>, metrics: Arc<Metrics>) {
                 let id = parts.next().and_then(|s| s.parse::<u64>().ok());
                 let feats: Option<Vec<f32>> = parts
                     .next()
-                    .map(|s| s.split(',').map(|t| t.trim().parse::<f32>()).collect::<Result<_, _>>())
+                    .map(|s| {
+                        s.split(',')
+                            .map(|t| t.trim().parse::<f32>())
+                            .collect::<Result<_, _>>()
+                    })
                     .transpose()
                     .ok()
                     .flatten();

@@ -55,7 +55,8 @@ impl Dataset {
         let mut rng = Rng::new(seed);
         let perm = rng.permutation(self.n);
         let n_test = (self.n as f64 * test_frac).round() as usize;
-        let mut train = Dataset::with_capacity(&format!("{}-train", self.name), self.d, self.n - n_test);
+        let mut train =
+            Dataset::with_capacity(&format!("{}-train", self.name), self.d, self.n - n_test);
         let mut test = Dataset::with_capacity(&format!("{}-test", self.name), self.d, n_test);
         for (pos, &i) in perm.iter().enumerate() {
             let target = if pos < n_test { &mut test } else { &mut train };
@@ -127,7 +128,8 @@ mod tests {
         assert_eq!(tr.n, 80);
         assert_eq!(te.n, 20);
         // Union of first-feature values must be the full set.
-        let mut vals: Vec<f32> = tr.x.iter().step_by(2).chain(te.x.iter().step_by(2)).copied().collect();
+        let mut vals: Vec<f32> =
+            tr.x.iter().step_by(2).chain(te.x.iter().step_by(2)).copied().collect();
         vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let expect: Vec<f32> = (0..100).map(|i| (i * 2) as f32).collect();
         assert_eq!(vals, expect);

@@ -95,7 +95,7 @@ fn adult_like(n: usize, rng: &mut Rng, tag: &str) -> Dataset {
         feats[8] = (rng.below(8) as f32) / 7.0; // "education"
         feats[9] = (rng.below(6) as f32) / 5.0; // "occupation group"
         feats[10] = (rng.below(4) as f32) / 3.0; // "marital"
-        feats[11] = (rng.below(2)) as f32; // "sex"
+        feats[11] = rng.below(2) as f32; // "sex"
         feats[12] = rng.f32(); // capital-ish, heavy tail below
         feats[13] = rng.f32();
         // Heavy-tail transform for the capital-like feature.

@@ -38,7 +38,9 @@ impl BaseModel {
 
     fn to_json(&self) -> Json {
         match self {
-            BaseModel::Tree(t) => Json::obj(vec![("kind", Json::str("tree")), ("model", t.to_json())]),
+            BaseModel::Tree(t) => {
+                Json::obj(vec![("kind", Json::str("tree")), ("model", t.to_json())])
+            }
             BaseModel::Lattice(l) => {
                 Json::obj(vec![("kind", Json::str("lattice")), ("model", l.to_json())])
             }

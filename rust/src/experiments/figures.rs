@@ -51,7 +51,12 @@ impl Default for FigConfig {
     }
 }
 
-fn exp_data<'a>(w: &'a Workload, sm_tr: &'a crate::ensemble::ScoreMatrix, sm_te: &'a crate::ensemble::ScoreMatrix, cfg: &FigConfig) -> ExpData<'a> {
+fn exp_data<'a>(
+    w: &'a Workload,
+    sm_tr: &'a crate::ensemble::ScoreMatrix,
+    sm_te: &'a crate::ensemble::ScoreMatrix,
+    cfg: &FigConfig,
+) -> ExpData<'a> {
     ExpData {
         sm_tr,
         sm_te,
@@ -74,7 +79,14 @@ pub fn fig1_fig3(cfg: &FigConfig) {
         let sm_tr = w.ensemble.score_matrix(&w.train);
         let sm_te = w.ensemble.score_matrix(&w.test);
         let d = exp_data(&w, &sm_tr, &sm_te, cfg);
-        let mut curves = methods::comparison_grid(&d, "GBT order", &cfg.alphas, &cfg.gammas, cfg.lambda, cfg.random_trials);
+        let mut curves = methods::comparison_grid(
+            &d,
+            "GBT order",
+            &cfg.alphas,
+            &cfg.gammas,
+            cfg.lambda,
+            cfg.random_trials,
+        );
 
         // GBT-alone baseline: accuracy of prefix ensembles, full eval.
         let mut alone = Curve::new("GBT alone (smaller ensemble)");
@@ -102,7 +114,8 @@ pub fn fig1_fig3(cfg: &FigConfig) {
         println!("{}", report::curves_table(&curves, YAxis::Accuracy));
         println!("{}", report::curves_table(&curves, YAxis::PctDiff));
         println!("{}", report::ascii_plot(&curves, 72, 20));
-        report::save_curves(&cfg.out_dir.join(format!("fig1_fig3_{}.json", which.name())), &w.name, &curves).ok();
+        let out = cfg.out_dir.join(format!("fig1_fig3_{}.json", which.name()));
+        report::save_curves(&out, &w.name, &curves).ok();
     }
 }
 
@@ -117,10 +130,18 @@ pub fn fig2_or_fig4(cfg: &FigConfig, joint: bool) {
         let sm_tr = w.ensemble.score_matrix(&w.train);
         let sm_te = w.ensemble.score_matrix(&w.test);
         let d = exp_data(&w, &sm_tr, &sm_te, cfg);
-        let curves = methods::comparison_grid(&d, "natural order", &cfg.alphas, &cfg.gammas, cfg.lambda, cfg.random_trials);
+        let curves = methods::comparison_grid(
+            &d,
+            "natural order",
+            &cfg.alphas,
+            &cfg.gammas,
+            cfg.lambda,
+            cfg.random_trials,
+        );
         println!("{}", report::curves_table(&curves, YAxis::PctDiff));
         println!("{}", report::ascii_plot(&curves, 72, 20));
-        report::save_curves(&cfg.out_dir.join(format!("{}_{}.json", fig, which.name())), &w.name, &curves).ok();
+        let out = cfg.out_dir.join(format!("{}_{}.json", fig, which.name()));
+        report::save_curves(&out, &w.name, &curves).ok();
     }
 }
 
@@ -137,7 +158,12 @@ pub fn fig5_fig6(cfg: &FigConfig) {
         // QWYC*: pick alpha whose test diff is closest to target.
         let mut best: Option<(f64, crate::qwyc::SimResult)> = None;
         for &alpha in &cfg.alphas {
-            let qcfg = QwycConfig { alpha, neg_only: false, max_opt_examples: cfg.max_opt, seed: cfg.seed };
+            let qcfg = QwycConfig {
+                alpha,
+                neg_only: false,
+                max_opt_examples: cfg.max_opt,
+                seed: cfg.seed,
+            };
             let sim = simulate(&optimize_order(&sm_tr, &qcfg), &sm_te);
             let d = (sim.pct_diff - target).abs();
             if best.as_ref().map(|(bd, _)| d < *bd).unwrap_or(true) {
@@ -157,7 +183,8 @@ pub fn fig5_fig6(cfg: &FigConfig) {
         let order: Vec<usize> = (0..sm_tr.t).collect();
         let mut best2: Option<(f64, crate::qwyc::SimResult)> = None;
         for &alpha in &cfg.alphas {
-            let sim = simulate(&optimize_thresholds_for_order(&sm_tr, &order, alpha, false), &sm_te);
+            let sim =
+                simulate(&optimize_thresholds_for_order(&sm_tr, &order, alpha, false), &sm_te);
             let d = (sim.pct_diff - target).abs();
             if best2.as_ref().map(|(bd, _)| d < *bd).unwrap_or(true) {
                 best2 = Some((d, sim));
@@ -172,12 +199,17 @@ pub fn fig5_fig6(cfg: &FigConfig) {
         println!("{}", sim_gbt.stop_histogram(sm_te.t, 25).ascii(48));
 
         // Persist both histograms.
-        let j = crate::util::json::Json::obj(vec![
-            ("dataset", crate::util::json::Json::str(which.name())),
-            ("qwyc_star_stops", crate::util::json::Json::Arr(sim_star.stops.iter().map(|&s| crate::util::json::Json::Num(s as f64)).collect())),
-            ("gbt_order_stops", crate::util::json::Json::Arr(sim_gbt.stops.iter().map(|&s| crate::util::json::Json::Num(s as f64)).collect())),
+        use crate::util::json::Json;
+        let stops_json = |stops: &[u32]| -> Json {
+            Json::Arr(stops.iter().map(|&s| Json::Num(s as f64)).collect())
+        };
+        let j = Json::obj(vec![
+            ("dataset", Json::str(which.name())),
+            ("qwyc_star_stops", stops_json(&sim_star.stops)),
+            ("gbt_order_stops", stops_json(&sim_gbt.stops)),
         ]);
-        crate::util::json::write_file(&cfg.out_dir.join(format!("fig5_fig6_{}.json", which.name())), &j).ok();
+        let out = cfg.out_dir.join(format!("fig5_fig6_{}.json", which.name()));
+        crate::util::json::write_file(&out, &j).ok();
 
         // The paper's qualitative claim: QWYC's histogram tapers roughly
         // exponentially — most examples stop very early.

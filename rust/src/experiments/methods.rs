@@ -156,8 +156,7 @@ pub fn comparison_grid(
     random_trials: u64,
 ) -> Vec<Curve> {
     let t = d.sm_tr.t;
-    let mut curves = Vec::new();
-    curves.push(qwyc_star(d, alphas));
+    let mut curves = vec![qwyc_star(d, alphas)];
 
     let natural = orderings::natural(t);
     curves.push(alg2_fixed_order(d, natural_name, &natural, alphas));
@@ -234,7 +233,12 @@ mod tests {
         let (tr, te) = generate(Which::Rw1Like, 6, 0.003);
         let (ens, _) = crate::lattice::train_joint(
             &tr,
-            &crate::lattice::LatticeParams { n_lattices: 5, dim: 5, steps: 80, ..Default::default() },
+            &crate::lattice::LatticeParams {
+                n_lattices: 5,
+                dim: 5,
+                steps: 80,
+                ..Default::default()
+            },
         );
         let sm_tr = ens.score_matrix(&tr);
         let sm_te = ens.score_matrix(&te);

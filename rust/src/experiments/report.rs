@@ -149,7 +149,13 @@ pub fn ascii_plot(curves: &[Curve], width: usize, height: usize) -> String {
         let row = height - 1 - row;
         grid[row][col.min(width - 1)] = marks[ci % marks.len()];
     }
-    let mut s = format!("  %diff {:.3}%..{:.3}%  vs  mean#models {:.1}..{:.1}\n", ymin * 100.0, ymax * 100.0, xmin, xmax);
+    let mut s = format!(
+        "  %diff {:.3}%..{:.3}%  vs  mean#models {:.1}..{:.1}\n",
+        ymin * 100.0,
+        ymax * 100.0,
+        xmin,
+        xmax
+    );
     for row in grid {
         s.push_str("  |");
         s.extend(row);

@@ -67,7 +67,8 @@ pub fn timing_table(
     // QWYC*: alpha whose held-out diff lands closest to 0.5%.
     let mut best: Option<(f64, FastClassifier, f64, f64)> = None;
     for &alpha in &cfg.alphas {
-        let qcfg = QwycConfig { alpha, neg_only: true, max_opt_examples: cfg.max_opt, seed: cfg.seed };
+        let qcfg =
+            QwycConfig { alpha, neg_only: true, max_opt_examples: cfg.max_opt, seed: cfg.seed };
         let fc = optimize_order(&sm_tr, &qcfg);
         let sim = simulate(&fc, &sm_te);
         let d = (sim.pct_diff - target).abs();
@@ -94,7 +95,8 @@ pub fn timing_table(
 
     // ---- wall-clock timing over the test set ---------------------------
     let n_time = timing_examples.min(w.test.n);
-    let full_fc = FastClassifier::no_early_stop(orderings::natural(sm_tr.t), sm_tr.bias, sm_tr.beta);
+    let full_fc =
+        FastClassifier::no_early_stop(orderings::natural(sm_tr.t), sm_tr.bias, sm_tr.beta);
 
     let time_fc = |fc: &FastClassifier| -> (f64, f64) {
         let mut per_run = Vec::with_capacity(runs);

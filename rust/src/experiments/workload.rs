@@ -43,7 +43,13 @@ pub fn benchmark(which: Which, scale: f64, trees: usize, seed: u64) -> Workload 
 /// Experiments 3-6: lattice ensembles on the real-world-like datasets.
 /// Paper geometry: RW1 T=5 lattices on 13-of-16 features; RW2 T=500 on
 /// random 8-of-30 subsets. `joint` selects joint vs independent training.
-pub fn real_world(which: Which, scale: f64, t_override: Option<usize>, joint: bool, seed: u64) -> Workload {
+pub fn real_world(
+    which: Which,
+    scale: f64,
+    t_override: Option<usize>,
+    joint: bool,
+    seed: u64,
+) -> Workload {
     assert!(matches!(which, Which::Rw1Like | Which::Rw2Like));
     let (train, test) = generate(which, seed, scale);
     let (t, dim) = match which {

@@ -189,7 +189,12 @@ impl FanClassifier {
                 }
             }
         }
-        crate::qwyc::SingleResult { positive: g >= self.beta, score: g, models_evaluated: t, early: false }
+        crate::qwyc::SingleResult {
+            positive: g >= self.beta,
+            score: g,
+            models_evaluated: t,
+            early: false,
+        }
     }
 }
 
@@ -227,7 +232,8 @@ mod tests {
         for &gamma in &[4.0, 2.0, 1.0, 0.5] {
             let sim = fan.simulate(&sm_te, gamma, false);
             assert!(
-                sim.mean_models >= prev_models - 1e2 * f64::EPSILON || sim.mean_models <= prev_models,
+                sim.mean_models >= prev_models - 1e2 * f64::EPSILON
+                    || sim.mean_models <= prev_models,
                 "sanity"
             );
             // Lower gamma ⇒ fewer models evaluated (weakly).

@@ -17,7 +17,7 @@ pub struct Binner {
 impl Binner {
     /// Fit quantile bin edges on (a sample of) the dataset.
     pub fn fit(ds: &Dataset, max_bins: usize) -> Binner {
-        assert!(max_bins >= 2 && max_bins <= 256);
+        assert!((2..=256).contains(&max_bins));
         let sample_cap = 100_000usize;
         let stride = (ds.n / sample_cap).max(1);
         let mut edges = Vec::with_capacity(ds.d);

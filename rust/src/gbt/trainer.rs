@@ -235,7 +235,8 @@ impl<'a> TreeBuilder<'a> {
                 let gain =
                     lg * lg / (lh + lambda) + rg * rg / (rh + lambda) - parent_score;
                 if best.map(|c| gain > c.gain).unwrap_or(gain > 0.0) {
-                    best = Some(SplitCand { gain, feature: j, bin: b, left_grad: lg, left_hess: lh });
+                    best =
+                        Some(SplitCand { gain, feature: j, bin: b, left_grad: lg, left_hess: lh });
                 }
             }
         }

@@ -24,14 +24,27 @@ pub struct LatticeParams {
 
 impl Default for LatticeParams {
     fn default() -> Self {
-        LatticeParams { n_lattices: 5, dim: 13, steps: 400, batch: 128, lr: 0.05, l2: 1e-5, seed: 7 }
+        LatticeParams {
+            n_lattices: 5,
+            dim: 13,
+            steps: 400,
+            batch: 128,
+            lr: 0.05,
+            l2: 1e-5,
+            seed: 7,
+        }
     }
 }
 
 /// Draw the feature subsets: distinct-seeded random k-of-D subsets (RW2's
 /// "randomly generated" subsets; for RW1 the paper picks subsets maximizing
 /// feature interactions — random distinct subsets exercise the same code).
-pub fn make_subsets(n_lattices: usize, dim: usize, n_features: usize, seed: u64) -> Vec<Vec<usize>> {
+pub fn make_subsets(
+    n_lattices: usize,
+    dim: usize,
+    n_features: usize,
+    seed: u64,
+) -> Vec<Vec<usize>> {
     let mut rng = Rng::new(seed ^ 0x5b5e75);
     (0..n_lattices)
         .map(|_| {

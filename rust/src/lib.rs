@@ -30,6 +30,8 @@ pub mod fan;
 pub mod gbt;
 pub mod lattice;
 pub mod orderings;
+// The crate and its core-algorithm module intentionally share the name.
+#[allow(clippy::module_inception)]
 pub mod qwyc;
 pub mod runtime;
 pub mod util;

@@ -18,8 +18,12 @@ use qwyc::ensemble::Ensemble;
 use qwyc::experiments::{figures, tables, FigConfig};
 use qwyc::gbt::GbtParams;
 use qwyc::lattice::LatticeParams;
-use qwyc::qwyc::{optimize_order, optimize_thresholds_for_order, simulate, FastClassifier, QwycConfig};
-use qwyc::runtime::engine::{NativeEngine, PjrtEngine};
+use qwyc::qwyc::{
+    optimize_order, optimize_thresholds_for_order, simulate, FastClassifier, QwycConfig,
+};
+use qwyc::runtime::engine::NativeEngine;
+#[cfg(feature = "pjrt")]
+use qwyc::runtime::engine::PjrtEngine;
 use qwyc::util::cli::Args;
 use std::path::{Path, PathBuf};
 use std::time::Duration;
@@ -248,6 +252,13 @@ fn serve(args: &Args) -> Result<(), String> {
     };
     args.check_unknown()?;
 
+    if backend == "pjrt" && !cfg!(feature = "pjrt") {
+        return Err(
+            "this binary was built without the 'pjrt' feature; rebuild with \
+             `cargo build --release --features pjrt`"
+                .into(),
+        );
+    }
     let ens = Ensemble::load(Path::new(&model_path))?;
     let fc = FastClassifier::load(Path::new(&fast_path))?;
     let d = feature_count(&ens)?;
@@ -261,13 +272,14 @@ fn serve(args: &Args) -> Result<(), String> {
     let server = Server::start(
         &addr,
         move || -> Box<dyn qwyc::runtime::engine::Engine> {
+            #[cfg(feature = "pjrt")]
             if backend == "pjrt" {
                 let rt = qwyc::runtime::Runtime::open(Path::new(&artifacts_dir))
                     .expect("open artifacts (run `make artifacts`)");
-                Box::new(PjrtEngine::new(rt, &artifact, &ens, &fc).expect("pjrt engine"))
-            } else {
-                Box::new(NativeEngine::new(ens, fc, d))
+                return Box::new(PjrtEngine::new(rt, &artifact, &ens, &fc).expect("pjrt engine"));
             }
+            let _ = (&backend, &artifact, &artifacts_dir);
+            Box::new(NativeEngine::new(ens, fc, d))
         },
         policy,
     )

@@ -83,6 +83,8 @@ impl FastClassifier {
     }
 
     /// Check structural invariants (order is a permutation; ε⁻ ≤ ε⁺).
+    // `!(a <= b)` is deliberate: NaN thresholds must fail validation too.
+    #[allow(clippy::neg_cmp_op_on_partial_ord)]
     pub fn validate(&self) -> Result<(), String> {
         let t = self.order.len();
         if self.eps_pos.len() != t || self.eps_neg.len() != t {
@@ -114,10 +116,20 @@ impl FastClassifier {
         for (r, &m) in self.order.iter().enumerate() {
             g += ens.models[m].eval(x);
             if g > self.eps_pos[r] {
-                return SingleResult { positive: true, score: g, models_evaluated: r + 1, early: true };
+                return SingleResult {
+                    positive: true,
+                    score: g,
+                    models_evaluated: r + 1,
+                    early: true,
+                };
             }
             if g < self.eps_neg[r] {
-                return SingleResult { positive: false, score: g, models_evaluated: r + 1, early: true };
+                return SingleResult {
+                    positive: false,
+                    score: g,
+                    models_evaluated: r + 1,
+                    early: true,
+                };
             }
         }
         SingleResult {

@@ -33,7 +33,13 @@ pub struct MultiScoreMatrix {
 }
 
 impl MultiScoreMatrix {
-    pub fn new(n: usize, t: usize, scores: Vec<Vec<f32>>, biases: Vec<f32>, costs: Vec<f32>) -> Self {
+    pub fn new(
+        n: usize,
+        t: usize,
+        scores: Vec<Vec<f32>>,
+        biases: Vec<f32>,
+        costs: Vec<f32>,
+    ) -> Self {
         let c = scores.len();
         assert!(c >= 2, "need >= 2 classes");
         assert_eq!(biases.len(), c);
@@ -354,7 +360,13 @@ mod tests {
 
     /// Synthetic 3-class problem: latent class center per example, each
     /// base model votes noisily for the true class.
-    fn synthetic(n: usize, t: usize, c: usize, noise: f32, seed: u64) -> (MultiScoreMatrix, Vec<u16>) {
+    fn synthetic(
+        n: usize,
+        t: usize,
+        c: usize,
+        noise: f32,
+        seed: u64,
+    ) -> (MultiScoreMatrix, Vec<u16>) {
         let mut rng = Rng::new(seed);
         let y: Vec<u16> = (0..n).map(|_| rng.below(c) as u16).collect();
         let mut scores: Vec<Vec<f32>> = vec![vec![0f32; n * t]; c];

@@ -340,7 +340,8 @@ mod tests {
     fn exact_matches_bisect_on_random_cases() {
         check("exact==bisect", 300, |gen: &mut Gen| {
             let n = gen.usize_in(1, 120);
-            let g: Vec<f32> = (0..n).map(|_| (gen.rng.normal() as f32 * 2.0).round() / 2.0).collect();
+            let g: Vec<f32> =
+                (0..n).map(|_| (gen.rng.normal() as f32 * 2.0).round() / 2.0).collect();
             let fp: Vec<bool> = (0..n).map(|_| gen.rng.bool(0.4)).collect();
             let budget = gen.usize_in(0, n / 4);
             let neg_only = gen.rng.bool(0.5);

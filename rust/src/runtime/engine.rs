@@ -5,15 +5,18 @@
 //!
 //! - [`NativeEngine`]: pure-rust lazy evaluation (`eval_single`), the
 //!   per-example path the paper times (trees are branchy and CPU-native).
-//! - [`PjrtEngine`]: drives the AOT `qwyc_stage` artifact — the batch
-//!   walks the optimized order in stages of K base models; after each
-//!   PJRT call decided examples are retired and survivors are compacted
-//!   into the next stage's fixed-B batch (padding the tail). This is the
-//!   dense lattice path: Python authored the kernel, but only compiled
-//!   HLO runs here.
+//! - `PjrtEngine` (behind the `pjrt` feature): drives the AOT
+//!   `qwyc_stage` artifact — the batch walks the optimized order in
+//!   stages of K base models; after each PJRT call decided examples are
+//!   retired and survivors are compacted into the next stage's fixed-B
+//!   batch (padding the tail). This is the dense lattice path: Python
+//!   authored the kernel, but only compiled HLO runs here.
 
-use super::{Input, Runtime};
-use crate::ensemble::{BaseModel, Ensemble};
+#[cfg(feature = "pjrt")]
+use super::Runtime;
+#[cfg(feature = "pjrt")]
+use crate::ensemble::BaseModel;
+use crate::ensemble::Ensemble;
 use crate::qwyc::{FastClassifier, SingleResult};
 
 /// Classification outcome for one request.
@@ -89,6 +92,7 @@ impl Engine for NativeEngine {
 /// are uploaded to the PJRT device ONCE at engine construction and reused
 /// by every `execute_b` call — only the per-batch `x`/`g_in` tensors are
 /// transferred per request (§Perf iteration 1 in EXPERIMENTS.md).
+#[cfg(feature = "pjrt")]
 struct StageParams {
     subsets: xla::PjRtBuffer,
     theta: xla::PjRtBuffer,
@@ -100,6 +104,7 @@ struct StageParams {
 }
 
 /// PJRT-backed staged engine for lattice ensembles.
+#[cfg(feature = "pjrt")]
 pub struct PjrtEngine {
     rt: Runtime,
     artifact: String,
@@ -113,6 +118,7 @@ pub struct PjrtEngine {
     t: usize,
 }
 
+#[cfg(feature = "pjrt")]
 impl PjrtEngine {
     /// Build from a lattice ensemble and its optimized fast classifier.
     /// `artifact` names a `*_stage` manifest entry whose geometry (D, d)
@@ -201,6 +207,7 @@ impl PjrtEngine {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl Engine for PjrtEngine {
     fn n_features(&self) -> usize {
         self.d_features

@@ -1,317 +1,20 @@
-//! PJRT runtime: loads the AOT artifacts emitted by `python/compile/aot.py`
-//! (`make artifacts`) and executes them from the serving hot path.
+//! Execution runtimes for the serving hot path.
 //!
-//! Artifacts are HLO **text** — the interchange format that survives the
-//! jax≥0.5 / xla_extension 0.5.1 proto-id mismatch (see aot.py). Each
-//! artifact is compiled once at load time into a `PjRtLoadedExecutable`
-//! keyed by name; shapes are validated against `manifest.json` before any
-//! execution, so a stale artifact directory fails loudly at startup
-//! instead of corrupting results.
+//! [`engine`] holds the backend abstraction ([`engine::Engine`]) and the
+//! always-available pure-Rust backend ([`engine::NativeEngine`]).
+//!
+//! The PJRT path — loading the AOT artifacts emitted by
+//! `python/compile/aot.py` (`make artifacts`) and executing them from the
+//! serving hot path — lives behind the non-default `pjrt` feature: the
+//! default build is pure Rust with no XLA dependency, while
+//! `--features pjrt` compiles `Runtime` and `engine::PjrtEngine`
+//! against the `xla` bindings (the offline tree vendors a stub; see
+//! rust/vendor/xla-stub).
 
 pub mod engine;
 
-use crate::util::json::{self, Json};
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+#[cfg(feature = "pjrt")]
+mod pjrt;
 
-/// Shape+dtype of one artifact input/output.
-#[derive(Clone, Debug, PartialEq)]
-pub struct TensorSpec {
-    pub shape: Vec<usize>,
-    pub dtype: String,
-}
-
-impl TensorSpec {
-    fn from_json(v: &Json) -> Result<TensorSpec, String> {
-        Ok(TensorSpec {
-            shape: v.req("shape")?.as_vec_usize()?,
-            dtype: v.req("dtype")?.as_str()?.to_string(),
-        })
-    }
-
-    pub fn elements(&self) -> usize {
-        self.shape.iter().product()
-    }
-}
-
-/// Geometry of one artifact (mirrors aot.py CONFIGS).
-#[derive(Clone, Debug)]
-pub struct ArtifactConfig {
-    /// Total input features D.
-    pub d_features: usize,
-    /// Ensemble size T.
-    pub t: usize,
-    /// Per-lattice dimensionality d (V = 2^d).
-    pub dim: usize,
-    /// Compiled batch size B.
-    pub b: usize,
-    /// Stage width K.
-    pub k: usize,
-}
-
-/// Manifest entry for one artifact.
-#[derive(Clone, Debug)]
-pub struct ArtifactSpec {
-    pub name: String,
-    pub path: PathBuf,
-    pub fn_name: String,
-    pub config: ArtifactConfig,
-    pub inputs: Vec<TensorSpec>,
-    pub outputs: Vec<TensorSpec>,
-}
-
-/// A compiled artifact ready to execute.
-pub struct LoadedArtifact {
-    pub spec: ArtifactSpec,
-    exe: xla::PjRtLoadedExecutable,
-}
-
-/// One input tensor for execution.
-pub enum Input<'a> {
-    F32(&'a [f32]),
-    I32(&'a [i32]),
-}
-
-/// One output tensor.
-#[derive(Clone, Debug)]
-pub enum Output {
-    F32(Vec<f32>),
-    I32(Vec<i32>),
-}
-
-impl Output {
-    pub fn as_f32(&self) -> &[f32] {
-        match self {
-            Output::F32(v) => v,
-            Output::I32(_) => panic!("expected f32 output"),
-        }
-    }
-
-    pub fn as_i32(&self) -> &[i32] {
-        match self {
-            Output::I32(v) => v,
-            Output::F32(_) => panic!("expected i32 output"),
-        }
-    }
-}
-
-impl LoadedArtifact {
-    /// Execute with pre-staged device buffers (hot path: constant inputs
-    /// like model parameters are uploaded once via `Runtime::upload_*`
-    /// and reused across calls — see §Perf in EXPERIMENTS.md).
-    pub fn execute_buffers(&self, inputs: &[&xla::PjRtBuffer]) -> Result<Vec<Output>, String> {
-        if inputs.len() != self.spec.inputs.len() {
-            return Err(format!(
-                "{}: expected {} inputs, got {}",
-                self.spec.name,
-                self.spec.inputs.len(),
-                inputs.len()
-            ));
-        }
-        let result = self
-            .exe
-            .execute_b::<&xla::PjRtBuffer>(inputs)
-            .map_err(|e| format!("{}: execute_b: {e:?}", self.spec.name))?;
-        self.decode_outputs(&result[0][0])
-    }
-
-    fn decode_outputs(&self, out: &xla::PjRtBuffer) -> Result<Vec<Output>, String> {
-        let tuple = out
-            .to_literal_sync()
-            .map_err(|e| format!("{}: to_literal: {e:?}", self.spec.name))?;
-        // aot.py lowers with return_tuple=True: always a tuple.
-        let elems = tuple
-            .to_tuple()
-            .map_err(|e| format!("{}: to_tuple: {e:?}", self.spec.name))?;
-        if elems.len() != self.spec.outputs.len() {
-            return Err(format!(
-                "{}: expected {} outputs, got {}",
-                self.spec.name,
-                self.spec.outputs.len(),
-                elems.len()
-            ));
-        }
-        elems
-            .into_iter()
-            .zip(self.spec.outputs.iter())
-            .map(|(lit, spec)| match spec.dtype.as_str() {
-                "float32" => lit
-                    .to_vec::<f32>()
-                    .map(Output::F32)
-                    .map_err(|e| format!("output to_vec f32: {e:?}")),
-                "int32" => lit
-                    .to_vec::<i32>()
-                    .map(Output::I32)
-                    .map_err(|e| format!("output to_vec i32: {e:?}")),
-                other => Err(format!("unsupported output dtype {other}")),
-            })
-            .collect()
-    }
-
-    /// Execute with shape/dtype validation. Inputs must match the
-    /// manifest order exactly.
-    pub fn execute(&self, inputs: &[Input]) -> Result<Vec<Output>, String> {
-        if inputs.len() != self.spec.inputs.len() {
-            return Err(format!(
-                "{}: expected {} inputs, got {}",
-                self.spec.name,
-                self.spec.inputs.len(),
-                inputs.len()
-            ));
-        }
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (idx, (inp, spec)) in inputs.iter().zip(self.spec.inputs.iter()).enumerate() {
-            let dims: Vec<i64> = spec.shape.iter().map(|&s| s as i64).collect();
-            let lit = match inp {
-                Input::F32(data) => {
-                    if spec.dtype != "float32" {
-                        return Err(format!("{} input {idx}: expected {}, got f32", self.spec.name, spec.dtype));
-                    }
-                    if data.len() != spec.elements() {
-                        return Err(format!(
-                            "{} input {idx}: {} elements != shape {:?}",
-                            self.spec.name,
-                            data.len(),
-                            spec.shape
-                        ));
-                    }
-                    xla::Literal::vec1(data)
-                        .reshape(&dims)
-                        .map_err(|e| format!("reshape input {idx}: {e:?}"))?
-                }
-                Input::I32(data) => {
-                    if spec.dtype != "int32" {
-                        return Err(format!("{} input {idx}: expected {}, got i32", self.spec.name, spec.dtype));
-                    }
-                    if data.len() != spec.elements() {
-                        return Err(format!(
-                            "{} input {idx}: {} elements != shape {:?}",
-                            self.spec.name,
-                            data.len(),
-                            spec.shape
-                        ));
-                    }
-                    xla::Literal::vec1(data)
-                        .reshape(&dims)
-                        .map_err(|e| format!("reshape input {idx}: {e:?}"))?
-                }
-            };
-            literals.push(lit);
-        }
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| format!("{}: execute: {e:?}", self.spec.name))?;
-        self.decode_outputs(&result[0][0])
-    }
-}
-
-/// The artifact registry: one PJRT client, many compiled executables.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    artifacts: HashMap<String, LoadedArtifact>,
-    specs: HashMap<String, ArtifactSpec>,
-    dir: PathBuf,
-}
-
-impl Runtime {
-    /// Create a CPU PJRT client and parse the manifest; artifacts compile
-    /// lazily on first use (`get`).
-    pub fn open(dir: &Path) -> Result<Runtime, String> {
-        let client = xla::PjRtClient::cpu().map_err(|e| format!("PjRtClient::cpu: {e:?}"))?;
-        let manifest = json::read_file(&dir.join("manifest.json"))?;
-        let specs = parse_manifest(&manifest, dir)?;
-        Ok(Runtime { client, artifacts: HashMap::new(), specs, dir: dir.to_path_buf() })
-    }
-
-    /// Names available in the manifest.
-    pub fn names(&self) -> Vec<String> {
-        self.specs.keys().cloned().collect()
-    }
-
-    /// Spec lookup without compiling.
-    pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
-        self.specs.get(name)
-    }
-
-    /// Compile (if needed) and return an artifact by name.
-    pub fn get(&mut self, name: &str) -> Result<&LoadedArtifact, String> {
-        if !self.artifacts.contains_key(name) {
-            let spec = self
-                .specs
-                .get(name)
-                .ok_or_else(|| format!("unknown artifact '{name}' (have: {:?})", self.names()))?
-                .clone();
-            let proto = xla::HloModuleProto::from_text_file(&spec.path)
-                .map_err(|e| format!("parse {}: {e:?}", spec.path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .map_err(|e| format!("compile {name}: {e:?}"))?;
-            self.artifacts.insert(name.to_string(), LoadedArtifact { spec, exe });
-        }
-        Ok(&self.artifacts[name])
-    }
-
-    pub fn dir(&self) -> &Path {
-        &self.dir
-    }
-
-    /// Upload an f32 tensor to the device once; reuse across executions.
-    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer, String> {
-        self.client
-            .buffer_from_host_buffer(data, dims, None)
-            .map_err(|e| format!("upload f32: {e:?}"))
-    }
-
-    /// Upload an i32 tensor to the device once; reuse across executions.
-    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer, String> {
-        self.client
-            .buffer_from_host_buffer(data, dims, None)
-            .map_err(|e| format!("upload i32: {e:?}"))
-    }
-}
-
-fn parse_manifest(manifest: &Json, dir: &Path) -> Result<HashMap<String, ArtifactSpec>, String> {
-    let arts = manifest.req("artifacts")?;
-    let map = match arts {
-        Json::Obj(m) => m,
-        _ => return Err("manifest.artifacts must be an object".into()),
-    };
-    let mut out = HashMap::new();
-    for (name, v) in map.iter() {
-        let cfgv = v.req("config")?;
-        let config = ArtifactConfig {
-            d_features: cfgv.req("D")?.as_usize()?,
-            t: cfgv.req("T")?.as_usize()?,
-            dim: cfgv.req("d")?.as_usize()?,
-            b: cfgv.req("B")?.as_usize()?,
-            k: cfgv.req("K")?.as_usize()?,
-        };
-        let inputs = v
-            .req("inputs")?
-            .as_arr()?
-            .iter()
-            .map(TensorSpec::from_json)
-            .collect::<Result<Vec<_>, _>>()?;
-        let outputs = v
-            .req("outputs")?
-            .as_arr()?
-            .iter()
-            .map(TensorSpec::from_json)
-            .collect::<Result<Vec<_>, _>>()?;
-        out.insert(
-            name.clone(),
-            ArtifactSpec {
-                name: name.clone(),
-                path: dir.join(v.req("path")?.as_str()?),
-                fn_name: v.req("fn")?.as_str()?.to_string(),
-                config,
-                inputs,
-                outputs,
-            },
-        );
-    }
-    Ok(out)
-}
+#[cfg(feature = "pjrt")]
+pub use pjrt::{ArtifactConfig, ArtifactSpec, Input, LoadedArtifact, Output, Runtime, TensorSpec};

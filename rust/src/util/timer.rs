@@ -46,7 +46,13 @@ impl BenchResult {
 
 /// Time `f` (which performs ONE logical iteration) with `runs` measurement
 /// runs of `iters` iterations each, after `warmup` iterations.
-pub fn bench_fn<F: FnMut()>(name: &str, warmup: u64, runs: usize, iters: u64, mut f: F) -> BenchResult {
+pub fn bench_fn<F: FnMut()>(
+    name: &str,
+    warmup: u64,
+    runs: usize,
+    iters: u64,
+    mut f: F,
+) -> BenchResult {
     for _ in 0..warmup {
         f();
     }

@@ -1,0 +1,59 @@
+//! CI smoke test over the quickstart example's path: synthetic dataset →
+//! GBT training → QWYC* joint optimization → simulation, with a fixed
+//! `util::rng` seed. Exercises the paper's core invariant end to end —
+//! the fraction of examples whose fast decision differs from the full
+//! ensemble's is ≤ α on the optimization set (problem (2)) — so CI
+//! checks behavior, not just compilation.
+
+use qwyc::data::synth::{generate, Which};
+use qwyc::gbt::{train, GbtParams};
+use qwyc::qwyc::{optimize_order, simulate, QwycConfig};
+
+#[test]
+fn quickstart_path_respects_alpha_end_to_end() {
+    // Same seed/dataset family as examples/quickstart.rs, scaled for CI.
+    let (tr, te) = generate(Which::AdultLike, 42, 0.03);
+    let params = GbtParams { n_trees: 40, max_depth: 4, ..Default::default() };
+    let (ens, losses) = train(&tr, &params);
+    assert_eq!(ens.len(), 40);
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "boosting did not reduce the train loss: {:?}",
+        (losses.first(), losses.last())
+    );
+
+    let sm_tr = ens.score_matrix(&tr);
+    let sm_te = ens.score_matrix(&te);
+    let mut prev_models = f64::INFINITY;
+    for alpha in [0.0, 0.005, 0.02] {
+        let cfg = QwycConfig { alpha, seed: 17, ..Default::default() };
+        let fc = optimize_order(&sm_tr, &cfg);
+        fc.validate().expect("optimizer must emit a structurally valid classifier");
+
+        // The paper's constraint: disagreement ≤ α on the optimization set.
+        let sim = simulate(&fc, &sm_tr);
+        assert!(
+            sim.pct_diff <= alpha + 1e-9,
+            "alpha={alpha}: train disagreement {} exceeds the budget",
+            sim.pct_diff
+        );
+        // Larger budgets buy earlier exits (small slack: the greedy order
+        // itself may differ between alphas).
+        assert!(
+            sim.mean_models <= prev_models * 1.05 + 0.5,
+            "alpha={alpha}: {} mean models > {prev_models} at a smaller alpha",
+            sim.mean_models
+        );
+        prev_models = sim.mean_models;
+
+        // Held-out: thresholds generalize (diff can exceed alpha but must
+        // stay small) and the early-exit machinery stays consistent.
+        let sim_te = simulate(&fc, &sm_te);
+        assert!(
+            sim_te.pct_diff < 0.05,
+            "alpha={alpha}: test disagreement {} is out of family",
+            sim_te.pct_diff
+        );
+        assert!(sim_te.mean_models >= 1.0 && sim_te.mean_models <= sm_te.t as f64);
+    }
+}

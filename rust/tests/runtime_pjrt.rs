@@ -6,6 +6,10 @@
 //! executed through the rust runtime must produce exactly the decisions,
 //! stop positions, and scores of the pure-rust evaluator.
 
+// The whole suite needs the PJRT runtime; the default build has no
+// `qwyc::runtime::Runtime` at all.
+#![cfg(feature = "pjrt")]
+
 use qwyc::data::synth::{generate, Which};
 use qwyc::ensemble::Ensemble;
 use qwyc::lattice::{train_joint, LatticeParams};

@@ -133,6 +133,7 @@ fn failing_engine_reports_errors_to_clients() {
     server.stop();
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn pjrt_backend_serves_when_artifacts_exist() {
     if !std::path::Path::new("artifacts/manifest.json").exists() {

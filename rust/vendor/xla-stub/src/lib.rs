@@ -1,0 +1,142 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The container this repo builds in has no XLA/PJRT runtime, so the real
+//! `xla` crate cannot be linked. This stub mirrors exactly the API surface
+//! `qwyc::runtime` consumes — enough for `cargo build --features pjrt` and
+//! `cargo clippy` to typecheck the whole PJRT path — while every
+//! constructor fails at runtime with a clear message. Swapping this path
+//! dependency for a real PJRT binding (same method names) turns the
+//! feature on for real; no call-site changes are needed.
+//!
+//! Only the entry points (`PjRtClient::cpu`, `HloModuleProto::from_text_file`)
+//! can ever be reached at runtime: they return `Err`, so values of the other
+//! types are never constructed and their methods are unreachable by
+//! construction (they still return `Err` defensively rather than panic).
+
+use std::path::Path;
+
+/// Error type; the runtime layer formats it with `{:?}`.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "xla stub: {what} is unavailable in this offline build — link a real \
+         PJRT binding in rust/vendor to enable the pjrt feature at runtime"
+    ))
+}
+
+/// Sealed marker for element types the stub understands.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u8 {}
+
+/// Host/device tensor value.
+pub struct Literal {
+    _priv: (),
+}
+
+impl Literal {
+    /// Build a rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(_data: &[T]) -> Literal {
+        Literal { _priv: () }
+    }
+
+    /// Reshape to the given dimensions.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
+        Err(unavailable("Literal::reshape"))
+    }
+
+    /// Destructure a tuple literal into its elements.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, Error> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+
+    /// Copy out as a host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
+        Err(unavailable("Literal::to_vec"))
+    }
+}
+
+/// A device buffer handle.
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    /// Synchronously copy the buffer back to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// A compiled executable.
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with host literals as arguments.
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+
+    /// Execute with pre-staged device buffers as arguments.
+    pub fn execute_b<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(unavailable("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+/// The PJRT client; the real binding owns a device here.
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    /// Create a CPU client. Always fails in the stub — this is the message
+    /// users see when running a `--features pjrt` binary offline.
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    /// Compile a computation into a loaded executable.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+
+    /// Upload a host tensor to the device.
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer, Error> {
+        Err(unavailable("PjRtClient::buffer_from_host_buffer"))
+    }
+}
+
+/// Parsed HLO module (text interchange format).
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+impl HloModuleProto {
+    /// Parse HLO text from a file.
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto, Error> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation ready for compilation.
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    /// Wrap a parsed HLO module.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _priv: () }
+    }
+}
