@@ -1,9 +1,20 @@
 //! Microbenchmarks for the hot paths (the §Perf profiling targets):
 //!   - lattice single-eval contraction (d = 8 and 13)
-//!   - GBT tree walk
+//!   - GBT tree walk: scalar vs the SoA `eval_batch` kernel
 //!   - QWYC early-exit eval_single vs full evaluation
 //!   - Algorithm-2 threshold search (the inner loop of Algorithm 1)
+//!   - Algorithm-1 candidate search: serial vs `QWYC_THREADS` pool
+//!   - batch scoring (`score_matrix`) and `simulate`: serial vs pool
+//!   - NativeEngine blocked classify_batch
 //!   - PJRT stage execution (per-batch and per-example amortized)
+//!
+//! Every target lands in `BENCH.json` (schema `qwyc-bench-v1`, see
+//! `util::timer::BenchReport`) with mean/p50/p99 ns, the thread count,
+//! and — for the parallelized targets — the measured speedup vs the
+//! single-thread pool, so the perf trajectory is tracked across PRs.
+//!
+//! Flags: `--quick` (tiny datasets + budget; the CI smoke path),
+//! `--out <path>` (default: `BENCH.json` at the workspace root).
 
 use qwyc::data::synth::{generate, Which};
 use qwyc::ensemble::BaseModel;
@@ -11,18 +22,47 @@ use qwyc::gbt::{train as gbt_train, GbtParams};
 #[cfg(feature = "pjrt")]
 use qwyc::lattice::{train_joint, LatticeParams};
 use qwyc::qwyc::thresholds::{optimize_position, Search};
-use qwyc::qwyc::{optimize_order, QwycConfig};
+use qwyc::qwyc::{optimize_order_with_pool, simulate_with_pool, QwycConfig};
+use qwyc::runtime::engine::Engine;
+use qwyc::util::pool::{threads_from_env, Pool};
 use qwyc::util::rng::Rng;
-use qwyc::util::timer::{bench_auto, black_box};
+use qwyc::util::timer::{bench_auto, black_box, BenchReport};
 use std::time::Duration;
 
 fn main() {
-    let budget = Duration::from_millis(200);
-    let runs = 5;
-    println!("== microbench (1 core, {runs} runs each) ==\n");
+    let mut quick = false;
+    // cargo runs bench binaries with cwd = the package dir (rust/), so
+    // anchor the default output at the workspace root where the README
+    // and CI expect it; `--out` still accepts any path.
+    let mut out_path =
+        std::path::PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH.json"));
+    let mut argv = std::env::args().skip(1);
+    while let Some(a) = argv.next() {
+        match a.as_str() {
+            "--quick" => quick = true,
+            "--out" => {
+                if let Some(p) = argv.next() {
+                    out_path = p.into();
+                }
+            }
+            // `cargo bench` passes --bench to harness=false targets.
+            "--bench" => {}
+            other => eprintln!("microbench: ignoring unknown arg '{other}'"),
+        }
+    }
+
+    let budget = Duration::from_millis(if quick { 20 } else { 200 });
+    let runs = if quick { 2 } else { 5 };
+    let threads = threads_from_env();
+    let serial = Pool::new(1);
+    let pool = Pool::new(threads);
+    let mut report = BenchReport::new(threads);
+    let mode = if quick { ", --quick" } else { "" };
+    println!("== microbench ({threads} threads, {runs} runs each{mode}) ==\n");
 
     // ---- lattice contraction --------------------------------------
-    for d in [8usize, 13] {
+    let lattice_dims: &[usize] = if quick { &[8] } else { &[8, 13] };
+    for &d in lattice_dims {
         let mut rng = Rng::new(1);
         let feats: Vec<usize> = (0..d).collect();
         let theta: Vec<f32> = (0..1 << d).map(|_| rng.normal() as f32).collect();
@@ -33,39 +73,65 @@ fn main() {
             black_box(lat.eval_with_scratch(black_box(&x), &mut buf));
         });
         println!("{}", r.report());
+        report.push(&r);
     }
 
-    // ---- GBT tree walk ---------------------------------------------
-    let (tr, _) = generate(Which::AdultLike, 2, 0.05);
-    let (gbt, _) = gbt_train(&tr, &GbtParams { n_trees: 50, max_depth: 5, ..Default::default() });
+    // ---- GBT tree walk: scalar vs SoA batch kernel -------------------
+    let scale = if quick { 0.01 } else { 0.05 };
+    let n_trees = if quick { 15 } else { 50 };
+    let (tr, _) = generate(Which::AdultLike, 2, scale);
+    let (gbt, _) = gbt_train(&tr, &GbtParams { n_trees, max_depth: 5, ..Default::default() });
     let x = tr.row(17).to_vec();
     if let BaseModel::Tree(t0) = &gbt.models[0] {
         let r = bench_auto("gbt tree walk (depth 5)", budget, runs, || {
             black_box(t0.eval(black_box(&x)));
         });
         println!("{}", r.report());
+        report.push(&r);
+
+        let nb = tr.n.min(2048);
+        let soa = t0.to_soa();
+        let mut out = vec![0f32; nb];
+        let rs = bench_auto(&format!("gbt batch scalar loop (B={nb})"), budget, runs, || {
+            for (i, slot) in out.iter_mut().enumerate() {
+                *slot = t0.eval(tr.row(i));
+            }
+            black_box(&out);
+        });
+        println!("{}", rs.report());
+        let rb = bench_auto(&format!("gbt eval_batch soa (B={nb})"), budget, runs, || {
+            soa.eval_batch(&tr.x, tr.d, &mut out[..nb]);
+            black_box(&out);
+        });
+        println!("{}", rb.report());
+        println!("  -> soa kernel speedup: {:.2}x\n", rs.mean_ns / rb.mean_ns);
+        report.push_pair(&rs, &rb);
     }
 
     // ---- early-exit vs full evaluation ------------------------------
     let sm = gbt.score_matrix(&tr);
-    let fc = optimize_order(&sm, &QwycConfig { alpha: 0.005, ..Default::default() });
+    let cfg = QwycConfig { alpha: 0.005, ..Default::default() };
+    let fc = optimize_order_with_pool(&sm, &cfg, &pool);
     let full = qwyc::qwyc::FastClassifier::no_early_stop(fc.order.clone(), fc.bias, fc.beta);
     let mut i = 0usize;
-    let r = bench_auto("qwyc eval_single (T=50 gbt)", budget, runs, || {
+    let r = bench_auto(&format!("qwyc eval_single (T={n_trees} gbt)"), budget, runs, || {
         i = (i + 1) % tr.n;
         black_box(fc.eval_single(&gbt, tr.row(i)));
     });
     println!("{}", r.report());
-    let r2 = bench_auto("full eval_single (T=50 gbt)", budget, runs, || {
+    report.push(&r);
+    let r2 = bench_auto(&format!("full eval_single (T={n_trees} gbt)"), budget, runs, || {
         i = (i + 1) % tr.n;
         black_box(full.eval_single(&gbt, tr.row(i)));
     });
     println!("{}", r2.report());
+    report.push(&r2);
     println!("  -> early-exit speedup: {:.2}x\n", r2.mean_ns / r.mean_ns);
 
-    // ---- threshold search (Algorithm 1 inner loop) -------------------
+    // ---- threshold search (Algorithm 2, inner loop of Algorithm 1) ---
     let mut rng = Rng::new(3);
-    for n in [1_000usize, 10_000, 100_000] {
+    let search_sizes: &[usize] = if quick { &[1_000] } else { &[1_000, 10_000, 100_000] };
+    for &n in search_sizes {
         let g: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
         let fp: Vec<bool> = (0..n).map(|_| rng.bool(0.4)).collect();
         let mut scratch = Vec::with_capacity(n);
@@ -80,12 +146,81 @@ fn main() {
             ));
         });
         println!("{}", r.report());
+        report.push(&r);
     }
+
+    // ---- Algorithm-1 candidate search: serial vs pool ----------------
+    let rs = bench_auto(
+        &format!("alg1 optimize_order T={n_trees} n={} (serial)", sm.n),
+        budget,
+        runs,
+        || {
+            black_box(optimize_order_with_pool(black_box(&sm), &cfg, &serial));
+        },
+    );
+    println!("{}", rs.report());
+    let rp = bench_auto(
+        &format!("alg1 optimize_order T={n_trees} n={} (threads={threads})", sm.n),
+        budget,
+        runs,
+        || {
+            black_box(optimize_order_with_pool(black_box(&sm), &cfg, &pool));
+        },
+    );
+    println!("{}", rp.report());
+    println!("  -> alg1 candidate-search speedup: {:.2}x\n", rs.mean_ns / rp.mean_ns);
+    report.push_pair(&rs, &rp);
+
+    // ---- batch scoring (score_matrix): serial vs pool ----------------
+    let (big, _) = generate(Which::AdultLike, 4, if quick { 0.02 } else { 0.2 });
+    let rs = bench_auto(
+        &format!("score_matrix T={n_trees} n={} (serial)", big.n),
+        budget,
+        runs,
+        || {
+            black_box(gbt.score_matrix_par(black_box(&big), &serial));
+        },
+    );
+    println!("{}", rs.report());
+    let rp = bench_auto(
+        &format!("score_matrix T={n_trees} n={} (threads={threads})", big.n),
+        budget,
+        runs,
+        || {
+            black_box(gbt.score_matrix_par(black_box(&big), &pool));
+        },
+    );
+    println!("{}", rp.report());
+    println!("  -> batch-scoring speedup: {:.2}x\n", rs.mean_ns / rp.mean_ns);
+    report.push_pair(&rs, &rp);
+
+    // ---- simulate sweep: serial vs pool ------------------------------
+    let sm_big = gbt.score_matrix_par(&big, &pool);
+    let rs = bench_auto(&format!("simulate n={} (serial)", big.n), budget, runs, || {
+        black_box(simulate_with_pool(black_box(&fc), &sm_big, &serial));
+    });
+    println!("{}", rs.report());
+    let rp = bench_auto(&format!("simulate n={} (threads={threads})", big.n), budget, runs, || {
+        black_box(simulate_with_pool(black_box(&fc), &sm_big, &pool));
+    });
+    println!("{}", rp.report());
+    println!("  -> simulate speedup: {:.2}x\n", rs.mean_ns / rp.mean_ns);
+    report.push_pair(&rs, &rp);
+
+    // ---- NativeEngine blocked classify_batch -------------------------
+    let mut engine = qwyc::runtime::engine::NativeEngine::new(gbt.clone(), fc.clone(), tr.d);
+    let nb = big.n.min(1024);
+    let xb = &big.x[..nb * big.d];
+    let r = bench_auto(&format!("native classify_batch (B={nb})"), budget, runs, || {
+        black_box(engine.classify_batch(black_box(xb), nb).unwrap());
+    });
+    println!("{}", r.report());
+    println!("  -> per-example amortized: {:.3} us\n", r.mean_us() / nb as f64);
+    report.push(&r);
 
     // ---- PJRT stage (needs --features pjrt and artifacts) ------------
     #[cfg(feature = "pjrt")]
     if std::path::Path::new("artifacts/manifest.json").exists() {
-        use qwyc::runtime::engine::Engine;
         let (tr2, _) = generate(Which::Rw2Like, 77, 0.01);
         let project = |ds: &qwyc::data::Dataset| {
             let mut out = qwyc::data::Dataset::new("demo4", 4);
@@ -101,7 +236,8 @@ fn main() {
             &LatticeParams { n_lattices: 4, dim: 3, steps: 60, ..Default::default() },
         );
         let smd = ens.score_matrix(&tr2);
-        let fcd = optimize_order(&smd, &QwycConfig { alpha: 0.01, ..Default::default() });
+        let cfg2 = QwycConfig { alpha: 0.01, ..Default::default() };
+        let fcd = optimize_order_with_pool(&smd, &cfg2, &pool);
         let rt = qwyc::runtime::Runtime::open(std::path::Path::new("artifacts")).unwrap();
         let mut engine =
             qwyc::runtime::engine::PjrtEngine::new(rt, "demo_stage", &ens, &fcd).unwrap();
@@ -112,9 +248,15 @@ fn main() {
         });
         println!("{}", r.report());
         println!("  -> per-example amortized: {:.3} us", r.mean_us() / 8.0);
+        report.push(&r);
     } else {
         println!("(skipping pjrt stage bench: run `make artifacts`)");
     }
     #[cfg(not(feature = "pjrt"))]
     println!("(skipping pjrt stage bench: rebuild with --features pjrt and run `make artifacts`)");
+
+    match report.write(&out_path) {
+        Ok(()) => println!("\nwrote {}", out_path.display()),
+        Err(e) => eprintln!("\nfailed to write {}: {e}", out_path.display()),
+    }
 }

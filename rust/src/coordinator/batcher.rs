@@ -1,9 +1,18 @@
-//! Dynamic batcher: collects requests from the router queue into batches
+//! Dynamic batcher: collects requests from the router into batches
 //! bounded by `max_batch` size and `max_wait` latency (the standard
 //! serving tradeoff — larger batches amortize per-call overhead on the
 //! PJRT path, smaller ones bound tail latency).
+//!
+//! The queue is a mutex + condvar pair rather than an mpsc channel: the
+//! consumer parks on the condvar with a deadline and is woken by every
+//! push, so a batch flushes the moment it fills instead of waiting out a
+//! fixed poll interval, and a burst that arrives together is drained in
+//! one wakeup. Producer handles ([`BatchSender`]) are counted; when the
+//! last one drops the queue closes and [`BatchQueue::next_batch`] drains
+//! whatever is left before returning `None` (mpsc disconnect semantics).
 
-use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// Batching policy.
@@ -19,77 +28,225 @@ impl Default for BatchPolicy {
     }
 }
 
-/// Collect the next batch from `rx`. Blocks for the first item, then
-/// drains until the batch is full or `max_wait` has elapsed since the
-/// first item arrived. Returns `None` when the channel is closed and
-/// empty (shutdown).
-pub fn next_batch<T>(rx: &Receiver<T>, policy: BatchPolicy) -> Option<Vec<T>> {
-    let first = rx.recv().ok()?;
-    let mut batch = Vec::with_capacity(policy.max_batch.min(64));
-    batch.push(first);
-    let deadline = Instant::now() + policy.max_wait;
-    while batch.len() < policy.max_batch {
-        let now = Instant::now();
-        if now >= deadline {
-            break;
-        }
-        match rx.recv_timeout(deadline - now) {
-            Ok(item) => batch.push(item),
-            Err(RecvTimeoutError::Timeout) => break,
-            Err(RecvTimeoutError::Disconnected) => break,
+struct QueueState<T> {
+    items: VecDeque<T>,
+    senders: usize,
+    closed: bool,
+}
+
+/// Condvar-backed request queue consumed in batches.
+pub struct BatchQueue<T> {
+    state: Mutex<QueueState<T>>,
+    cv: Condvar,
+}
+
+/// Counted producer handle; cloning registers another producer, dropping
+/// the last one closes the queue.
+pub struct BatchSender<T> {
+    q: Arc<BatchQueue<T>>,
+}
+
+/// Create a connected (sender, queue) pair — the batching analogue of
+/// `mpsc::channel`.
+pub fn batch_channel<T>() -> (BatchSender<T>, Arc<BatchQueue<T>>) {
+    let q = Arc::new(BatchQueue {
+        state: Mutex::new(QueueState { items: VecDeque::new(), senders: 1, closed: false }),
+        cv: Condvar::new(),
+    });
+    (BatchSender { q: q.clone() }, q)
+}
+
+impl<T> Clone for BatchSender<T> {
+    fn clone(&self) -> Self {
+        self.q.state.lock().unwrap().senders += 1;
+        BatchSender { q: self.q.clone() }
+    }
+}
+
+impl<T> Drop for BatchSender<T> {
+    fn drop(&mut self) {
+        let mut st = self.q.state.lock().unwrap();
+        st.senders -= 1;
+        if st.senders == 0 {
+            st.closed = true;
+            drop(st);
+            self.q.cv.notify_all();
         }
     }
-    Some(batch)
+}
+
+impl<T> BatchSender<T> {
+    /// Enqueue one item; `Err` returns it if the queue was closed.
+    pub fn send(&self, item: T) -> Result<(), T> {
+        let mut st = self.q.state.lock().unwrap();
+        if st.closed {
+            return Err(item);
+        }
+        st.items.push_back(item);
+        drop(st);
+        self.q.cv.notify_one();
+        Ok(())
+    }
+}
+
+impl<T> BatchQueue<T> {
+    /// Force-close the queue (normally closing happens when the last
+    /// sender drops); pending items remain drainable.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Collect the next batch. Blocks (no deadline) for the first item,
+    /// then waits on the condvar until the batch is full or `max_wait`
+    /// has elapsed since the first item arrived — a full batch returns
+    /// immediately on the push that filled it. Returns `None` when the
+    /// queue is closed and empty (shutdown).
+    pub fn next_batch(&self, policy: BatchPolicy) -> Option<Vec<T>> {
+        let max = policy.max_batch.max(1);
+        let mut batch = Vec::with_capacity(max.min(64));
+        let mut st = self.state.lock().unwrap();
+        // Phase 1: block for the first item.
+        loop {
+            if let Some(first) = st.items.pop_front() {
+                batch.push(first);
+                break;
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+        // Phase 2: deadline-bounded fill.
+        let deadline = Instant::now() + policy.max_wait;
+        loop {
+            while batch.len() < max {
+                match st.items.pop_front() {
+                    Some(item) => batch.push(item),
+                    None => break,
+                }
+            }
+            if batch.len() >= max || st.closed {
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (guard, timeout) = self.cv.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+            if timeout.timed_out() {
+                // Grab anything that raced in with the timeout.
+                while batch.len() < max {
+                    match st.items.pop_front() {
+                        Some(item) => batch.push(item),
+                        None => break,
+                    }
+                }
+                break;
+            }
+        }
+        Some(batch)
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::mpsc;
 
     #[test]
     fn collects_up_to_max_batch() {
-        let (tx, rx) = mpsc::channel();
+        let (tx, q) = batch_channel();
         for i in 0..10 {
             tx.send(i).unwrap();
         }
         let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(50) };
-        let b = next_batch(&rx, policy).unwrap();
-        assert_eq!(b, vec![0, 1, 2, 3]);
-        let b = next_batch(&rx, policy).unwrap();
-        assert_eq!(b, vec![4, 5, 6, 7]);
+        assert_eq!(q.next_batch(policy).unwrap(), vec![0, 1, 2, 3]);
+        assert_eq!(q.next_batch(policy).unwrap(), vec![4, 5, 6, 7]);
     }
 
     #[test]
     fn returns_partial_batch_after_wait() {
-        let (tx, rx) = mpsc::channel();
+        let (tx, q) = batch_channel();
         tx.send(1).unwrap();
         tx.send(2).unwrap();
         let policy = BatchPolicy { max_batch: 100, max_wait: Duration::from_millis(5) };
         let start = Instant::now();
-        let b = next_batch(&rx, policy).unwrap();
-        assert_eq!(b, vec![1, 2]);
+        assert_eq!(q.next_batch(policy).unwrap(), vec![1, 2]);
         assert!(start.elapsed() < Duration::from_millis(500));
     }
 
     #[test]
-    fn none_on_closed_channel() {
-        let (tx, rx) = mpsc::channel::<u32>();
+    fn none_on_closed_queue() {
+        let (tx, q) = batch_channel::<u32>();
         drop(tx);
-        assert!(next_batch(&rx, BatchPolicy::default()).is_none());
+        assert!(q.next_batch(BatchPolicy::default()).is_none());
+    }
+
+    #[test]
+    fn drains_pending_items_after_close() {
+        let (tx, q) = batch_channel();
+        tx.send(5).unwrap();
+        drop(tx);
+        assert_eq!(q.next_batch(BatchPolicy::default()).unwrap(), vec![5]);
+        assert!(q.next_batch(BatchPolicy::default()).is_none());
     }
 
     #[test]
     fn blocks_for_first_then_batches_stragglers() {
-        let (tx, rx) = mpsc::channel();
+        let (tx, q) = batch_channel();
         let handle = std::thread::spawn(move || {
             std::thread::sleep(Duration::from_millis(10));
             tx.send(7).unwrap();
             tx.send(8).unwrap();
         });
         let policy = BatchPolicy { max_batch: 10, max_wait: Duration::from_millis(20) };
-        let b = next_batch(&rx, policy).unwrap();
+        let b = q.next_batch(policy).unwrap();
         assert!(!b.is_empty() && b[0] == 7);
         handle.join().unwrap();
+    }
+
+    #[test]
+    fn full_batch_flushes_without_waiting_out_the_deadline() {
+        // max_wait is far longer than the test budget: the only way this
+        // returns quickly is the wake-on-fill path.
+        let (tx, q) = batch_channel();
+        let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_secs(30) };
+        let handle = std::thread::spawn(move || {
+            for i in 0..4 {
+                std::thread::sleep(Duration::from_millis(2));
+                tx.send(i).unwrap();
+            }
+            // Keep the sender alive well past the consumer's return so a
+            // close-triggered flush can't mask a missing wakeup.
+            std::thread::sleep(Duration::from_millis(200));
+        });
+        let start = Instant::now();
+        let b = q.next_batch(policy).unwrap();
+        assert_eq!(b, vec![0, 1, 2, 3]);
+        assert!(
+            start.elapsed() < Duration::from_secs(5),
+            "full batch waited on the deadline: {:?}",
+            start.elapsed()
+        );
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn send_after_close_returns_item() {
+        let (tx, q) = batch_channel();
+        q.close();
+        assert_eq!(tx.send(9), Err(9));
+    }
+
+    #[test]
+    fn clone_keeps_queue_open() {
+        let (tx, q) = batch_channel();
+        let tx2 = tx.clone();
+        drop(tx);
+        tx2.send(1).unwrap();
+        assert_eq!(q.next_batch(BatchPolicy::default()).unwrap(), vec![1]);
+        drop(tx2);
+        assert!(q.next_batch(BatchPolicy::default()).is_none());
     }
 }

@@ -8,7 +8,7 @@ pub mod filter_score;
 pub mod metrics;
 pub mod server;
 
-pub use batcher::BatchPolicy;
+pub use batcher::{batch_channel, BatchPolicy, BatchQueue, BatchSender};
 pub use filter_score::{FilterOutcome, FilterPipeline, FilterStats};
 pub use metrics::{Metrics, Snapshot};
 pub use server::{Client, EvalResponse, Server};

@@ -1,13 +1,13 @@
 //! TCP serving front-end: line protocol, connection handling, and the
 //! worker loop that owns the engine. Requests flow
 //!
-//!   conn thread → router channel → batcher → engine.classify_batch
+//!   conn thread → BatchQueue (condvar) → batcher → engine.classify_batch
 //!     → per-request response channel → conn thread → client
 //!
 //! Responses stream back as soon as their example is decided — an
 //! early-exit example does not wait for the rest of its batch's full
-//! evaluation path (no tokio offline; plain threads + mpsc, see
-//! DESIGN.md §4).
+//! evaluation path (no tokio offline; plain threads, a condvar batch
+//! queue on the request path, and mpsc response channels — DESIGN.md §4).
 //!
 //! Protocol (one line per message):
 //!   client → server:  EVAL <id> <f1>,<f2>,...      classify one example
@@ -17,7 +17,7 @@
 //!                     STATS <report...>
 //!                     ERR <message>
 
-use super::batcher::{next_batch, BatchPolicy};
+use super::batcher::{batch_channel, BatchPolicy, BatchSender};
 use super::metrics::Metrics;
 use crate::runtime::engine::Engine;
 use std::io::{BufRead, BufReader, Write};
@@ -63,7 +63,7 @@ impl Server {
         let addr = listener.local_addr()?;
         let metrics = Arc::new(Metrics::new());
         let shutdown = Arc::new(AtomicBool::new(false));
-        let (tx, rx) = mpsc::channel::<Request>();
+        let (tx, queue) = batch_channel::<Request>();
 
         // Worker: owns the engine, consumes batches.
         let worker_metrics = metrics.clone();
@@ -71,7 +71,7 @@ impl Server {
             let mut engine = engine_factory();
             let d = engine.n_features();
             let mut xbuf: Vec<f32> = Vec::new();
-            while let Some(batch) = next_batch(&rx, policy) {
+            while let Some(batch) = queue.next_batch(policy) {
                 worker_metrics.record_batch(batch.len());
                 xbuf.clear();
                 let mut ok = true;
@@ -175,7 +175,7 @@ impl Server {
     }
 }
 
-fn handle_conn(stream: TcpStream, tx: Sender<Request>, metrics: Arc<Metrics>) {
+fn handle_conn(stream: TcpStream, tx: BatchSender<Request>, metrics: Arc<Metrics>) {
     let peer_write = match stream.try_clone() {
         Ok(s) => s,
         Err(_) => return,

@@ -7,9 +7,16 @@
 pub mod scores;
 
 use crate::data::Dataset;
-use crate::gbt::tree::Tree;
+use crate::gbt::tree::{Tree, TreeSoa};
 use crate::lattice::model::Lattice;
 use crate::util::json::Json;
+use crate::util::pool::Pool;
+
+/// Example-block width for blocked scoring: a 512-row window of features
+/// (512 · d · 4 bytes, ≈128 KiB at d = 64) stays L2-resident while every
+/// base model sweeps it, instead of re-streaming the whole feature matrix
+/// once per model.
+const SCORE_BLOCK: usize = 512;
 
 pub use scores::ScoreMatrix;
 
@@ -107,25 +114,78 @@ impl Ensemble {
         correct as f64 / ds.n.max(1) as f64
     }
 
+    /// SoA mirrors of the tree base models, index-aligned with `models`
+    /// (None for lattices). Shared by the blocked score-matrix build and
+    /// `NativeEngine` so mirror construction lives in one place.
+    pub fn soa_mirrors(&self) -> Vec<Option<TreeSoa>> {
+        self.models
+            .iter()
+            .map(|m| match m {
+                BaseModel::Tree(tr) => Some(tr.to_soa()),
+                BaseModel::Lattice(_) => None,
+            })
+            .collect()
+    }
+
     /// Precompute the N×T score matrix `F[i][t] = f_t(x_i)` that all
-    /// ordering/threshold optimizers and simulators consume.
+    /// ordering/threshold optimizers and simulators consume, using the
+    /// pool implied by `QWYC_THREADS` (or all available cores).
     pub fn score_matrix(&self, ds: &Dataset) -> ScoreMatrix {
+        self.score_matrix_par(ds, &Pool::from_env())
+    }
+
+    /// Blocked, parallel score-matrix build: examples are swept in
+    /// cache-sized blocks fanned across `pool`; inside a block every base
+    /// model scores the same L2-resident window of rows (trees through
+    /// the [`TreeSoa`] batch kernel, lattices through
+    /// `Lattice::eval_block`). Model evaluations are pure per example,
+    /// so the result is identical to the serial row-at-a-time build at
+    /// every thread count.
+    pub fn score_matrix_par(&self, ds: &Dataset, pool: &Pool) -> ScoreMatrix {
         let t = self.models.len();
-        let mut cols = vec![0f32; t * ds.n];
-        for (ti, m) in self.models.iter().enumerate() {
-            let col = &mut cols[ti * ds.n..(ti + 1) * ds.n];
-            match m {
-                // Batched lattice evaluation is substantially faster than
-                // row-at-a-time (see lattice::model::eval_batch).
-                BaseModel::Lattice(l) => l.eval_batch(ds, col),
-                BaseModel::Tree(tr) => {
-                    for (i, slot) in col.iter_mut().enumerate() {
-                        *slot = tr.eval(ds.row(i));
+        let n = ds.n;
+        let d = ds.d;
+        // SoA mirrors built once, shared read-only by every block task.
+        let soa = self.soa_mirrors();
+        // Blocks are scored in bounded waves and scattered (then dropped)
+        // between waves, so the transient block-major copies hold
+        // O(threads · SCORE_BLOCK · T) floats — not a second full N×T
+        // matrix, which at T=500 / N≈1M would double a ~2 GB build.
+        let mut cols = vec![0f32; n * t];
+        let n_blocks = n.div_ceil(SCORE_BLOCK);
+        let wave = (pool.n_threads() * 4).max(1);
+        let mut b0 = 0usize;
+        while b0 < n_blocks {
+            let b1 = (b0 + wave).min(n_blocks);
+            let blocks = pool.par_map_indexed(b1 - b0, 1, |bi| {
+                let lo = (b0 + bi) * SCORE_BLOCK;
+                let hi = (lo + SCORE_BLOCK).min(n);
+                let bn = hi - lo;
+                let xblk = &ds.x[lo * d..hi * d];
+                // Model-major scores for this block's rows.
+                let mut out = vec![0f32; t * bn];
+                for (ti, m) in self.models.iter().enumerate() {
+                    let dst = &mut out[ti * bn..(ti + 1) * bn];
+                    match (&soa[ti], m) {
+                        (Some(s), _) => s.eval_batch(xblk, d, dst),
+                        (None, BaseModel::Lattice(l)) => l.eval_block(xblk, d, dst),
+                        (None, BaseModel::Tree(_)) => {
+                            unreachable!("trees always have a SoA mirror")
+                        }
                     }
                 }
+                (lo, bn, out)
+            });
+            // Scatter this wave into column-major storage.
+            for (lo, bn, out) in blocks {
+                for ti in 0..t {
+                    cols[ti * n + lo..ti * n + lo + bn]
+                        .copy_from_slice(&out[ti * bn..(ti + 1) * bn]);
+                }
             }
+            b0 = b1;
         }
-        ScoreMatrix::new(ds.n, t, cols, self.bias, self.beta, self.costs.clone())
+        ScoreMatrix::new(n, t, cols, self.bias, self.beta, self.costs.clone())
     }
 
     /// Truncated ensemble containing only the first `k` models (used by the

@@ -8,4 +8,4 @@ pub mod trainer;
 pub mod tree;
 
 pub use trainer::{train, GbtParams};
-pub use tree::Tree;
+pub use tree::{Tree, TreeSoa};

@@ -2,6 +2,13 @@
 //! Trees are stored as flat node arrays; evaluation is a simple root-to-leaf
 //! walk on raw feature values (split thresholds are stored in feature units,
 //! so no binning is needed at serving time).
+//!
+//! Batched evaluation goes through [`TreeSoa`], a structure-of-arrays
+//! mirror of the node table that advances a group of [`SOA_LANES`]
+//! examples one tree level per step — the independent root-to-leaf walks
+//! interleave, so the out-of-order core overlaps their pointer-chasing
+//! loads instead of stalling on one chain at a time (the blocked-traversal
+//! idea behind QuickScorer-family tree servers).
 
 use crate::util::json::Json;
 
@@ -34,6 +41,11 @@ impl Node {
 /// A binary regression tree.
 #[derive(Clone, Debug)]
 pub struct Tree {
+    /// Flat node array. Invariant (checked by [`Tree::validate`], upheld
+    /// by the trainer and enforced at [`Tree::from_json`]): every
+    /// internal node's children are in bounds and strictly after the
+    /// node. Code that mutates this field directly must preserve it —
+    /// [`Tree::eval`]'s unchecked walk relies on it.
     pub nodes: Vec<Node>,
 }
 
@@ -43,6 +55,14 @@ impl Tree {
     }
 
     /// Evaluate on one example.
+    ///
+    /// The unchecked child access relies on the [`Tree::validate`]
+    /// invariant (children exist and sit strictly after their parent, so
+    /// the walk is in-bounds and terminating). Trainer-built trees hold
+    /// it by construction and deserialized trees are rejected at
+    /// [`Tree::from_json`] if they violate it; code mutating the pub
+    /// `nodes` field directly is responsible for preserving it (see the
+    /// field docs).
     #[inline]
     pub fn eval(&self, x: &[f32]) -> f32 {
         let mut idx = 0usize;
@@ -54,6 +74,62 @@ impl Tree {
             let v = x[node.feature as usize];
             idx = if v <= node.threshold { node.left as usize } else { node.left as usize + 1 };
         }
+    }
+
+    /// Structural soundness check for the flat node array: the tree is
+    /// non-empty and every internal node's children are in bounds and
+    /// strictly after the node itself (⇒ the eval walk terminates and
+    /// never indexes out of range, which is what makes the
+    /// `get_unchecked` in [`Tree::eval`] sound). Feature indices cannot
+    /// be range-checked here — the tree does not know the feature count —
+    /// but feature lookups in eval are checked slice accesses.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.nodes.is_empty() {
+            return Err("empty tree".into());
+        }
+        for (i, node) in self.nodes.iter().enumerate() {
+            if node.is_leaf() {
+                continue;
+            }
+            let l = node.left as usize;
+            if l <= i {
+                return Err(format!("node {i}: left child {l} does not follow its parent"));
+            }
+            if l + 1 >= self.nodes.len() {
+                return Err(format!(
+                    "node {i}: children {l},{} out of bounds ({} nodes)",
+                    l + 1,
+                    self.nodes.len()
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Build the structure-of-arrays mirror for batched evaluation.
+    pub fn to_soa(&self) -> TreeSoa {
+        let min_features = self
+            .nodes
+            .iter()
+            .filter(|n| !n.is_leaf())
+            .map(|n| n.feature as usize + 1)
+            .max()
+            .unwrap_or(0);
+        TreeSoa {
+            feature: self.nodes.iter().map(|n| n.feature).collect(),
+            threshold: self.nodes.iter().map(|n| n.threshold).collect(),
+            left: self.nodes.iter().map(|n| n.left).collect(),
+            value: self.nodes.iter().map(|n| n.value).collect(),
+            min_features,
+        }
+    }
+
+    /// Batched evaluation of `out.len()` consecutive examples from the
+    /// row-major feature block `x` (`x[i*d..][..d]` is example i).
+    /// Convenience wrapper that builds the SoA mirror per call; hot paths
+    /// should build [`TreeSoa`] once and reuse it.
+    pub fn eval_batch(&self, x: &[f32], d: usize, out: &mut [f32]) {
+        self.to_soa().eval_batch(x, d, out);
     }
 
     pub fn n_leaves(&self) -> usize {
@@ -113,10 +189,96 @@ impl Tree {
                 value: val[i],
             });
         }
-        if nodes.is_empty() {
-            return Err("empty tree".into());
+        let tree = Tree { nodes };
+        tree.validate()?;
+        Ok(tree)
+    }
+}
+
+/// Number of independent root-to-leaf walks advanced together by the SoA
+/// kernel. 16 in-flight loads cover the L2 latency of a depth-5 walk
+/// without spilling the lane state out of registers/L1.
+pub const SOA_LANES: usize = 16;
+
+/// Structure-of-arrays node table: one parallel array per field, so the
+/// batched walk touches only the fields it needs per step and the lane
+/// state stays dense.
+#[derive(Clone, Debug)]
+pub struct TreeSoa {
+    feature: Vec<u32>,
+    threshold: Vec<f32>,
+    left: Vec<u32>,
+    value: Vec<f32>,
+    /// 1 + the largest split-feature index (0 for all-leaf trees): the
+    /// narrowest feature vector this tree can be evaluated on. Checked
+    /// once per batch so an out-of-range feature fails loudly — the
+    /// scalar `Tree::eval` path panics on `x[feature]`, and a silent
+    /// neighbor-row read here would diverge from it.
+    min_features: usize,
+}
+
+impl TreeSoa {
+    /// Evaluate `out.len()` consecutive examples from the row-major block
+    /// `x` (`x[i*d..][..d]` is example i): `out[i] = tree(x_i)`.
+    pub fn eval_batch(&self, x: &[f32], d: usize, out: &mut [f32]) {
+        let n = out.len();
+        assert!(d >= self.min_features, "tree needs {} features, rows have {d}", self.min_features);
+        debug_assert!(x.len() >= n * d);
+        let mut base = 0usize;
+        while base < n {
+            let w = SOA_LANES.min(n - base);
+            self.walk_lanes(&mut out[base..base + w], |lane, feat| {
+                x[(base + lane) * d + feat]
+            });
+            base += w;
         }
-        Ok(Tree { nodes })
+    }
+
+    /// Evaluate the gathered examples `rows` (indices into the row-major
+    /// block `x`): `out[j] = tree(x_{rows[j]})`. This is the early-exit
+    /// engine's shape — the active set shrinks position by position, so
+    /// rows are scattered.
+    pub fn eval_indexed(&self, x: &[f32], d: usize, rows: &[u32], out: &mut [f32]) {
+        assert_eq!(rows.len(), out.len());
+        assert!(d >= self.min_features, "tree needs {} features, rows have {d}", self.min_features);
+        let mut base = 0usize;
+        while base < rows.len() {
+            let w = SOA_LANES.min(rows.len() - base);
+            self.walk_lanes(&mut out[base..base + w], |lane, feat| {
+                x[rows[base + lane] as usize * d + feat]
+            });
+            base += w;
+        }
+    }
+
+    /// Advance up to [`SOA_LANES`] walks together: every pass moves each
+    /// unfinished lane down one level, so the loads of different lanes
+    /// issue back-to-back instead of serializing on one walk's chain.
+    #[inline]
+    fn walk_lanes<G: Fn(usize, usize) -> f32>(&self, out: &mut [f32], fetch: G) {
+        let w = out.len();
+        debug_assert!(w <= SOA_LANES);
+        let mut idx = [0u32; SOA_LANES];
+        let mut done = [false; SOA_LANES];
+        let mut pending = w;
+        while pending > 0 {
+            for lane in 0..w {
+                if done[lane] {
+                    continue;
+                }
+                let node = idx[lane] as usize;
+                let feat = self.feature[node];
+                if feat == LEAF {
+                    out[lane] = self.value[node];
+                    done[lane] = true;
+                    pending -= 1;
+                    continue;
+                }
+                let v = fetch(lane, feat as usize);
+                let left = self.left[node];
+                idx[lane] = if v <= self.threshold[node] { left } else { left + 1 };
+            }
+        }
     }
 }
 
@@ -170,5 +332,64 @@ mod tests {
         for x in [[0.1f32, 0.1], [0.4, 0.9], [0.9, 0.5]] {
             assert_eq!(t.eval(&x), back.eval(&x));
         }
+    }
+
+    #[test]
+    fn malformed_json_tree_is_rejected_not_ub() {
+        // Children out of bounds: left = 7 in a 5-node tree. Without
+        // validation this would make eval's get_unchecked UB.
+        let mut t = stump2();
+        t.nodes[1].left = 7;
+        assert!(t.validate().is_err());
+        assert!(Tree::from_json(&t.to_json()).is_err());
+        // Child index not strictly after its parent: a 0-cycle at the root.
+        let mut t = stump2();
+        t.nodes[0].left = 0;
+        assert!(t.validate().is_err());
+        assert!(Tree::from_json(&t.to_json()).is_err());
+        // The well-formed original still validates and round-trips.
+        assert!(stump2().validate().is_ok());
+        assert!(Tree::from_json(&stump2().to_json()).is_ok());
+    }
+
+    #[test]
+    fn soa_batch_matches_scalar_eval() {
+        let t = stump2();
+        let soa = t.to_soa();
+        // 37 rows (exercises the partial final lane group), d = 2.
+        let mut x = Vec::new();
+        for i in 0..37 {
+            x.push((i as f32 * 0.037) % 1.0);
+            x.push((i as f32 * 0.101) % 1.0);
+        }
+        let mut out = vec![0f32; 37];
+        soa.eval_batch(&x, 2, &mut out);
+        for i in 0..37 {
+            assert_eq!(out[i], t.eval(&x[i * 2..(i + 1) * 2]), "row {i}");
+        }
+        // Indexed (gathered) variant on a scattered subset.
+        let rows: Vec<u32> = vec![36, 0, 17, 17, 5, 30, 2];
+        let mut out2 = vec![0f32; rows.len()];
+        soa.eval_indexed(&x, 2, &rows, &mut out2);
+        for (j, &i) in rows.iter().enumerate() {
+            let i = i as usize;
+            assert_eq!(out2[j], t.eval(&x[i * 2..(i + 1) * 2]), "gathered row {i}");
+        }
+        // Convenience wrapper agrees too.
+        let mut out3 = vec![0f32; 37];
+        t.eval_batch(&x, 2, &mut out3);
+        assert_eq!(out, out3);
+    }
+
+    #[test]
+    #[should_panic(expected = "features")]
+    fn soa_rejects_too_narrow_rows() {
+        // stump2 splits on feature 1; d = 1 rows must fail loudly (the
+        // scalar path would panic indexing x[1]) instead of silently
+        // reading a neighboring row's value.
+        let soa = stump2().to_soa();
+        let x = vec![0.4f32; 8];
+        let mut out = vec![0f32; 8];
+        soa.eval_batch(&x, 1, &mut out);
     }
 }

@@ -78,9 +78,17 @@ impl Lattice {
     /// Batched evaluation over a dataset into `out[i] = f(x_i)`.
     pub fn eval_batch(&self, ds: &Dataset, out: &mut [f32]) {
         assert_eq!(out.len(), ds.n);
+        self.eval_block(&ds.x, ds.d, out);
+    }
+
+    /// Batched evaluation of `out.len()` consecutive rows of the
+    /// row-major feature block `x` (`x[i*d..][..d]` is example i) — the
+    /// shape the blocked score-matrix builder feeds.
+    pub fn eval_block(&self, x: &[f32], d: usize, out: &mut [f32]) {
+        debug_assert!(x.len() >= out.len() * d);
         let mut buf = vec![0f32; self.n_vertices()];
         for (i, slot) in out.iter_mut().enumerate() {
-            *slot = self.eval_with_scratch(ds.row(i), &mut buf);
+            *slot = self.eval_with_scratch(&x[i * d..(i + 1) * d], &mut buf);
         }
     }
 

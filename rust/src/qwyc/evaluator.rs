@@ -7,9 +7,23 @@
 //! The sweep is position-major with an active list (the same compaction
 //! pattern the serving scheduler uses), so each base model's score column
 //! is read contiguously once.
+//!
+//! Examples are independent, so the sweep runs over cache-sized example
+//! blocks fanned across the [`Pool`]: each block keeps its own active
+//! list and reads a contiguous window of every score column. Per-example
+//! outcomes (decision, stop position, early flag) are merged in block
+//! order and the scalar aggregates are reduced in a deterministic serial
+//! pass afterwards — `simulate` is bit-identical at every thread count.
 
 use super::FastClassifier;
 use crate::ensemble::ScoreMatrix;
+use crate::util::pool::Pool;
+
+/// Example-block width for the parallel sweep: 4K examples × 4-byte
+/// scores keeps a block's window of one column (16 KiB) plus its running
+/// scores comfortably in L1/L2 while giving the pool enough blocks to
+/// balance.
+const SIM_BLOCK: usize = 4096;
 
 /// Aggregate simulation result.
 #[derive(Clone, Debug)]
@@ -44,8 +58,12 @@ impl SimResult {
     }
 
     /// Histogram of stop positions with `bins` buckets over [1, T].
+    /// Degenerate inputs clamp instead of panicking: `bins` is limited to
+    /// [1, T] so tiny ensembles (t = 1, or even t = 0) never ask
+    /// `Histogram` for zero or zero-width buckets.
     pub fn stop_histogram(&self, t: usize, bins: usize) -> crate::util::stats::Histogram {
-        let mut h = crate::util::stats::Histogram::new(0.5, t as f64 + 0.5, bins.min(t));
+        let t = t.max(1);
+        let mut h = crate::util::stats::Histogram::new(0.5, t as f64 + 0.5, bins.clamp(1, t));
         for &s in &self.stops {
             h.add(s as f64);
         }
@@ -53,25 +71,89 @@ impl SimResult {
     }
 }
 
-/// Simulate the fast classifier on every example of the score matrix.
+/// Per-block sweep output, merged in block order.
+struct BlockSim {
+    decisions: Vec<bool>,
+    stops: Vec<u32>,
+    early: Vec<bool>,
+}
+
+/// Simulate the fast classifier on every example of the score matrix with
+/// the pool implied by `QWYC_THREADS` (or all available cores).
 pub fn simulate(fc: &FastClassifier, sm: &ScoreMatrix) -> SimResult {
+    simulate_with_pool(fc, sm, &Pool::from_env())
+}
+
+/// Simulate the fast classifier across an explicit pool.
+pub fn simulate_with_pool(fc: &FastClassifier, sm: &ScoreMatrix, pool: &Pool) -> SimResult {
     let n = sm.n;
     let t = fc.order.len();
     assert_eq!(t, sm.t, "classifier/matrix T mismatch");
 
-    let mut g = vec![fc.bias; n];
-    let mut decisions = vec![false; n];
-    let mut stops = vec![t as u32; n];
-    let mut active: Vec<u32> = (0..n as u32).collect();
-    let mut n_early = 0usize;
-    let mut cost_sum = 0f64;
+    let blocks = pool.par_map_indexed(n.div_ceil(SIM_BLOCK), 1, |b| {
+        let lo = b * SIM_BLOCK;
+        let hi = ((b + 1) * SIM_BLOCK).min(n);
+        simulate_block(fc, sm, lo, hi)
+    });
+
+    let mut decisions = Vec::with_capacity(n);
+    let mut stops = Vec::with_capacity(n);
+    let mut early = Vec::with_capacity(n);
+    for blk in blocks {
+        decisions.extend_from_slice(&blk.decisions);
+        stops.extend_from_slice(&blk.stops);
+        early.extend_from_slice(&blk.early);
+    }
+
+    // Aggregates reduce serially over the merged per-example outcomes so
+    // every float is added in the same order at every thread count.
+    // cum[r] = Σ_{q<r} c_{π(q)} is the cost of an exit after position r.
+    let mut cum = vec![0f64; t + 1];
+    for r in 0..t {
+        cum[r + 1] = cum[r] + sm.costs[fc.order[r]] as f64;
+    }
+    let total_cost = sm.total_cost();
     let mut models_sum = 0f64;
-    let mut cum_cost = 0f64;
+    let mut cost_sum = 0f64;
+    let mut n_early = 0usize;
+    let mut diffs = 0usize;
+    for i in 0..n {
+        models_sum += stops[i] as f64;
+        if early[i] {
+            cost_sum += cum[stops[i] as usize];
+            n_early += 1;
+        } else {
+            cost_sum += total_cost;
+        }
+        if decisions[i] != sm.full_positive(i) {
+            diffs += 1;
+        }
+    }
+
+    SimResult {
+        mean_models: models_sum / n.max(1) as f64,
+        mean_cost: cost_sum / n.max(1) as f64,
+        pct_diff: diffs as f64 / n.max(1) as f64,
+        decisions,
+        stops,
+        n_early,
+    }
+}
+
+/// Position-major early-exit sweep over examples [lo, hi): identical
+/// arithmetic to the serial path (per-example scores accumulate in π
+/// order as f32), restricted to one contiguous window of each column.
+fn simulate_block(fc: &FastClassifier, sm: &ScoreMatrix, lo: usize, hi: usize) -> BlockSim {
+    let nb = hi - lo;
+    let t = fc.order.len();
+    let mut g = vec![fc.bias; nb];
+    let mut decisions = vec![false; nb];
+    let mut stops = vec![t as u32; nb];
+    let mut early = vec![false; nb];
+    let mut active: Vec<u32> = (0..nb as u32).collect();
 
     for r in 0..t {
-        let m = fc.order[r];
-        let col = sm.col(m);
-        cum_cost += sm.costs[m] as f64;
+        let col = &sm.col(fc.order[r])[lo..hi];
         let (ep, en) = (fc.eps_pos[r], fc.eps_neg[r]);
         let mut w = 0usize;
         for idx in 0..active.len() {
@@ -81,9 +163,7 @@ pub fn simulate(fc: &FastClassifier, sm: &ScoreMatrix) -> SimResult {
             if gi > ep || gi < en {
                 decisions[i] = gi > ep;
                 stops[i] = (r + 1) as u32;
-                models_sum += (r + 1) as f64;
-                cost_sum += cum_cost;
-                n_early += 1;
+                early[i] = true;
             } else {
                 active[w] = i as u32;
                 w += 1;
@@ -99,25 +179,8 @@ pub fn simulate(fc: &FastClassifier, sm: &ScoreMatrix) -> SimResult {
         let i = i as usize;
         decisions[i] = g[i] >= sm.beta;
         stops[i] = t as u32;
-        models_sum += t as f64;
-        cost_sum += sm.total_cost();
     }
-
-    let mut diffs = 0usize;
-    for i in 0..n {
-        if decisions[i] != sm.full_positive(i) {
-            diffs += 1;
-        }
-    }
-
-    SimResult {
-        mean_models: models_sum / n.max(1) as f64,
-        mean_cost: cost_sum / n.max(1) as f64,
-        pct_diff: diffs as f64 / n.max(1) as f64,
-        decisions,
-        stops,
-        n_early,
-    }
+    BlockSim { decisions, stops, early }
 }
 
 #[cfg(test)]
@@ -210,6 +273,24 @@ mod tests {
         let sim = simulate(&fc, &sm);
         assert_eq!(sim.accuracy(&[1.0, 0.0, 1.0, 0.0]), 1.0);
         assert_eq!(sim.accuracy(&[0.0, 0.0, 1.0, 0.0]), 0.75);
+    }
+
+    #[test]
+    fn stop_histogram_degenerate_bins() {
+        // t=1 ensemble: every stop is at position 1. bins > t used to
+        // produce zero-width buckets; now it clamps to one bucket.
+        let sm = ScoreMatrix::new(3, 1, vec![1.0, -1.0, 2.0], 0.0, 0.0, vec![1.0]);
+        let fc = FastClassifier::no_early_stop(vec![0], 0.0, 0.0);
+        let sim = simulate(&fc, &sm);
+        let h = sim.stop_histogram(1, 10);
+        assert_eq!(h.counts.len(), 1);
+        assert_eq!(h.counts[0], 3);
+        assert_eq!(h.total, 3);
+        // t=0 (no models at all) must clamp rather than panic.
+        let h0 = sim.stop_histogram(0, 4);
+        assert_eq!(h0.counts.len(), 1);
+        // Regular case keeps the requested binning.
+        assert_eq!(sim.stop_histogram(8, 4).counts.len(), 4);
     }
 
     #[test]

@@ -13,14 +13,23 @@
 //! The optimizers guarantee the empirical fraction of examples whose fast
 //! decision differs from the full ensemble's is ≤ α on the optimization
 //! set (the paper's constraint in problem (2)).
+//!
+//! **Serial-equivalence guarantee.** The optimizer and simulator hot
+//! paths fan out across the `QWYC_THREADS` worker pool
+//! ([`crate::util::pool::Pool`]), but every parallel section either
+//! computes pure per-candidate/per-example functions merged in
+//! deterministic order or feeds a sequential commit step with the serial
+//! tie-breaking — so [`optimize_order`] and [`simulate`] return
+//! **bit-identical** results at every thread count (asserted in
+//! rust/tests/parallel_equiv.rs).
 
 pub mod evaluator;
 pub mod multiclass;
 pub mod order;
 pub mod thresholds;
 
-pub use evaluator::{simulate, SimResult};
-pub use order::optimize_order;
+pub use evaluator::{simulate, simulate_with_pool, SimResult};
+pub use order::{optimize_order, optimize_order_with_pool};
 pub use thresholds::optimize_thresholds_for_order;
 
 use crate::util::json::Json;

@@ -20,14 +20,35 @@
 //! Complexity: O(T²·N̄) where N̄ is the (shrinking) active-set size; the
 //! per-candidate threshold search is O(|C|) via quickselect (see
 //! thresholds.rs). `QwycConfig::max_opt_examples` bounds N for T=500 runs.
+//!
+//! Parallelism: the candidate loop `for k in r..t` is embarrassingly
+//! parallel — each candidate reads the shared (g, active, full_pos)
+//! state and writes nothing — so it fans out across
+//! [`Pool`](crate::util::pool::Pool) workers with thread-local scratch.
+//! The *commit* step (argmin-J selection, π swap, score advance, α-budget
+//! spend) stays sequential and scans candidate results in ascending k
+//! with the same strict-improvement tie-break as the serial loop, so the
+//! returned `FastClassifier` is bit-identical at every thread count
+//! (asserted in rust/tests/parallel_equiv.rs).
 
-use super::thresholds::{optimize_position, Search};
+use super::thresholds::{optimize_position, Search, ThresholdOpt};
 use super::{FastClassifier, QwycConfig};
 use crate::ensemble::ScoreMatrix;
+use crate::util::pool::Pool;
 use crate::util::rng::Rng;
 
-/// Run QWYC* (Algorithm 1) on a score matrix.
+/// Run QWYC* (Algorithm 1) on a score matrix with the pool implied by
+/// `QWYC_THREADS` (or all available cores).
 pub fn optimize_order(sm_full: &ScoreMatrix, cfg: &QwycConfig) -> FastClassifier {
+    optimize_order_with_pool(sm_full, cfg, &Pool::from_env())
+}
+
+/// Run QWYC* (Algorithm 1) on a score matrix across an explicit pool.
+pub fn optimize_order_with_pool(
+    sm_full: &ScoreMatrix,
+    cfg: &QwycConfig,
+    pool: &Pool,
+) -> FastClassifier {
     // Optional optimization-set subsample (keeps O(T²N) tractable for
     // T=500 on this testbed; the paper itself optimizes on the full train
     // set). Only the greedy ORDER search runs on the subsample — the
@@ -60,10 +81,10 @@ pub fn optimize_order(sm_full: &ScoreMatrix, cfg: &QwycConfig) -> FastClassifier
     let mut eps_pos = vec![f32::INFINITY; t];
     let mut eps_neg = vec![f32::NEG_INFINITY; t];
 
-    // Scratch buffers reused across candidates.
-    let mut gbuf: Vec<f32> = Vec::with_capacity(n);
+    // Shared per-position gather of the actives' full decisions; the
+    // per-candidate g/scratch buffers are thread-local inside the pool
+    // workers (each candidate's threshold search is independent).
     let mut fbuf: Vec<bool> = Vec::with_capacity(n);
-    let mut scratch: Vec<f32> = Vec::with_capacity(n);
 
     for r in 0..t {
         if active.is_empty() || r + 1 == t {
@@ -84,26 +105,40 @@ pub fn optimize_order(sm_full: &ScoreMatrix, cfg: &QwycConfig) -> FastClassifier
         let mut best_j = f64::INFINITY;
         let mut best_opt = None;
 
-        for k in r..t {
-            let m = pi[k];
-            let col = sm.col(m);
-            gbuf.clear();
-            for &i in &active {
-                gbuf.push(g[i as usize] + col[i as usize]);
+        // Fan the independent candidate evaluations out across the pool.
+        // Chunks are scheduled dynamically (later chunks can be cheaper as
+        // quickselect inputs shrink); each worker reuses one g/scratch
+        // buffer pair across its chunk's candidates.
+        let cand: Vec<usize> = (r..t).collect();
+        let chunk = candidate_chunk(cand.len(), c_before, pool.n_threads());
+        let evaluated: Vec<Vec<(usize, ThresholdOpt)>> = pool.par_chunks(&cand, chunk, |_, ks| {
+            let mut gbuf: Vec<f32> = Vec::with_capacity(c_before);
+            let mut scratch: Vec<f32> = Vec::with_capacity(c_before);
+            let mut out = Vec::new();
+            for &k in ks {
+                let col = sm.col(pi[k]);
+                gbuf.clear();
+                for &i in &active {
+                    gbuf.push(g[i as usize] + col[i as usize]);
+                }
+                let opt = optimize_position(
+                    &gbuf,
+                    &fbuf,
+                    budget_total - spent,
+                    cfg.neg_only,
+                    Search::Exact,
+                    &mut scratch,
+                );
+                if opt.exits() > 0 {
+                    out.push((k, opt));
+                }
             }
-            let opt = optimize_position(
-                &gbuf,
-                &fbuf,
-                budget_total - spent,
-                cfg.neg_only,
-                Search::Exact,
-                &mut scratch,
-            );
-            let exits = opt.exits();
-            if exits == 0 {
-                continue;
-            }
-            let j = sm.costs[m] as f64 * c_before as f64 / exits as f64;
+            out
+        });
+        // Commit selection stays sequential, in ascending k with strict
+        // `<` improvement — exactly the serial loop's argmin/tie-break.
+        for (k, opt) in evaluated.into_iter().flatten() {
+            let j = sm.costs[pi[k]] as f64 * c_before as f64 / opt.exits() as f64;
             if j < best_j {
                 best_j = j;
                 best_k = k;
@@ -143,6 +178,18 @@ pub fn optimize_order(sm_full: &ScoreMatrix, cfg: &QwycConfig) -> FastClassifier
         );
     }
     FastClassifier { order: pi, eps_pos, eps_neg, bias: sm.bias, beta: sm.beta }
+}
+
+/// Chunk size for the candidate fan-out: ~4 chunks per worker so dynamic
+/// scheduling can balance the shrinking active set, but collapse to one
+/// serial chunk when the total work (candidates × actives) is too small
+/// to amortize a thread scope.
+fn candidate_chunk(candidates: usize, actives: usize, threads: usize) -> usize {
+    const MIN_PAR_WORK: usize = 1 << 14;
+    if candidates * actives < MIN_PAR_WORK {
+        return candidates.max(1);
+    }
+    candidates.div_ceil(4 * threads.max(1)).max(1)
 }
 
 #[cfg(test)]

@@ -13,6 +13,13 @@
 //! tractable (this is the innermost hot path of the whole optimizer).
 //! A bisection variant (`search = Bisect`) is kept for parity with the
 //! paper's description and cross-checked in tests.
+//!
+//! [`optimize_position`] is a pure function of its inputs plus a
+//! caller-provided scratch buffer — no globals, no interior mutability —
+//! which is what lets Algorithm 1's candidate loop call it concurrently
+//! from pool workers (each worker owns one scratch buffer; see
+//! qwyc/order.rs) while keeping results bit-identical to the serial
+//! sweep.
 
 use crate::ensemble::ScoreMatrix;
 use crate::util::{kth_largest, kth_smallest};

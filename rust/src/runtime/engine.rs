@@ -3,8 +3,13 @@
 //!
 //! Two interchangeable backends:
 //!
-//! - [`NativeEngine`]: pure-rust lazy evaluation (`eval_single`), the
-//!   per-example path the paper times (trees are branchy and CPU-native).
+//! - [`NativeEngine`]: pure-rust early-exit evaluation. Batches are
+//!   split into cache-sized blocks fanned across the `QWYC_THREADS`
+//!   pool; each block walks the optimized order position-major with an
+//!   active list, scoring tree models through the SoA batch kernel
+//!   (`gbt::tree::TreeSoa`). Outcomes are identical to per-example
+//!   `FastClassifier::eval_single` (asserted in
+//!   rust/tests/parallel_equiv.rs).
 //! - `PjrtEngine` (behind the `pjrt` feature): drives the AOT
 //!   `qwyc_stage` artifact — the batch walks the optimized order in
 //!   stages of K base models; after each PJRT call decided examples are
@@ -14,10 +19,16 @@
 
 #[cfg(feature = "pjrt")]
 use super::Runtime;
-#[cfg(feature = "pjrt")]
-use crate::ensemble::BaseModel;
-use crate::ensemble::Ensemble;
+use crate::ensemble::{BaseModel, Ensemble};
+use crate::gbt::tree::TreeSoa;
 use crate::qwyc::{FastClassifier, SingleResult};
+use crate::util::pool::Pool;
+
+/// Example-block width for batched serving: small enough that a block's
+/// feature rows and running scores stay cache-resident through the whole
+/// position sweep, large enough to fill the SoA kernel's lanes as the
+/// active set shrinks.
+const ENGINE_BLOCK: usize = 256;
 
 /// Classification outcome for one request.
 #[derive(Clone, Copy, Debug)]
@@ -53,17 +64,90 @@ pub trait Engine {
 
 // ---------------------------------------------------------------- native
 
-/// Pure-rust early-exit evaluation.
+/// Pure-rust early-exit evaluation with blocked batch scoring.
 pub struct NativeEngine {
     pub ensemble: Ensemble,
     pub fc: FastClassifier,
     n_features: usize,
+    /// SoA mirrors of tree base models, index-aligned with
+    /// `ensemble.models` (None for lattices). Built once at construction
+    /// and shared read-only by every block sweep.
+    soa: Vec<Option<TreeSoa>>,
+    pool: Pool,
 }
 
 impl NativeEngine {
     pub fn new(ensemble: Ensemble, fc: FastClassifier, n_features: usize) -> NativeEngine {
         assert_eq!(ensemble.len(), fc.t());
-        NativeEngine { ensemble, fc, n_features }
+        let soa = ensemble.soa_mirrors();
+        NativeEngine { ensemble, fc, n_features, soa, pool: Pool::from_env() }
+    }
+
+    /// Early-exit sweep over one block of examples; arithmetic matches
+    /// `FastClassifier::eval_single` per example (scores accumulate in π
+    /// order as f32, thresholds checked positive-first).
+    fn eval_block(&self, x: &[f32], nb: usize) -> Vec<Outcome> {
+        let d = self.n_features;
+        let t = self.fc.t();
+        let mut out = vec![
+            Outcome { positive: false, score: 0.0, models_evaluated: 0, early: false };
+            nb
+        ];
+        let mut g = vec![self.fc.bias; nb];
+        let mut active: Vec<u32> = (0..nb as u32).collect();
+        let mut scores = vec![0f32; nb];
+        let mut lat_scratch: Vec<f32> = Vec::new();
+
+        for r in 0..t {
+            let m = self.fc.order[r];
+            let scores = &mut scores[..active.len()];
+            match (&self.soa[m], &self.ensemble.models[m]) {
+                (Some(s), _) => s.eval_indexed(x, d, &active, scores),
+                (None, BaseModel::Lattice(l)) => {
+                    if lat_scratch.len() < l.n_vertices() {
+                        lat_scratch.resize(l.n_vertices(), 0.0);
+                    }
+                    for (slot, &i) in scores.iter_mut().zip(active.iter()) {
+                        let row = &x[i as usize * d..(i as usize + 1) * d];
+                        *slot = l.eval_with_scratch(row, &mut lat_scratch);
+                    }
+                }
+                (None, BaseModel::Tree(_)) => unreachable!("trees always have a SoA mirror"),
+            }
+            let (ep, en) = (self.fc.eps_pos[r], self.fc.eps_neg[r]);
+            let mut w = 0usize;
+            for j in 0..active.len() {
+                let i = active[j] as usize;
+                let gi = g[i] + scores[j];
+                g[i] = gi;
+                if gi > ep || gi < en {
+                    out[i] = Outcome {
+                        positive: gi > ep,
+                        score: gi,
+                        models_evaluated: (r + 1) as u32,
+                        early: true,
+                    };
+                } else {
+                    active[w] = i as u32;
+                    w += 1;
+                }
+            }
+            active.truncate(w);
+            if active.is_empty() {
+                break;
+            }
+        }
+        // Survivors of every position: full score known, decide by β.
+        for &i in &active {
+            let i = i as usize;
+            out[i] = Outcome {
+                positive: g[i] >= self.fc.beta,
+                score: g[i],
+                models_evaluated: t as u32,
+                early: false,
+            };
+        }
+        out
     }
 }
 
@@ -75,9 +159,12 @@ impl Engine for NativeEngine {
     fn classify_batch(&mut self, x: &[f32], n: usize) -> Result<Vec<Outcome>, String> {
         let d = self.n_features;
         assert_eq!(x.len(), n * d);
-        Ok((0..n)
-            .map(|i| self.fc.eval_single(&self.ensemble, &x[i * d..(i + 1) * d]).into())
-            .collect())
+        let blocks = self.pool.par_map_indexed(n.div_ceil(ENGINE_BLOCK), 1, |b| {
+            let lo = b * ENGINE_BLOCK;
+            let hi = ((b + 1) * ENGINE_BLOCK).min(n);
+            self.eval_block(&x[lo * d..hi * d], hi - lo)
+        });
+        Ok(blocks.concat())
     }
 
     fn backend(&self) -> &'static str {

@@ -1,0 +1,202 @@
+//! Std-only scoped worker pool (no external crates — the build image is
+//! offline, so rayon/crossbeam are unavailable; DESIGN.md §4).
+//!
+//! The pool is a *thread-count policy*, not a set of persistent workers:
+//! each `par_*` call opens a `std::thread::scope`, spawns up to
+//! `n_threads` workers that pull chunks of the index space off a shared
+//! atomic counter (dynamic scheduling, so uneven chunks — e.g. Algorithm
+//! 1 candidates over a shrinking active set — still balance), and joins
+//! before returning. Spawn cost is a few tens of microseconds per call,
+//! negligible against the O(T·N̄) / O(N·T) loops this parallelizes; for
+//! small inputs every primitive falls back to a plain inline loop.
+//!
+//! Determinism contract: results are returned **in index order** no
+//! matter how chunks were interleaved across workers, and the worker
+//! closures receive disjoint index ranges — so any caller whose closure
+//! is a pure function of its indices gets bit-identical output at every
+//! thread count. The QWYC optimizers rely on this (see qwyc/order.rs and
+//! rust/tests/parallel_equiv.rs).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Worker-count handle shared by every parallel hot path.
+#[derive(Clone, Debug)]
+pub struct Pool {
+    n_threads: usize,
+}
+
+/// Thread count from the `QWYC_THREADS` env var, falling back to
+/// `std::thread::available_parallelism` when unset or unparseable.
+/// A parsed value of 0 clamps to 1 (serial) — an operator disabling
+/// parallelism must never be silently handed every core.
+pub fn threads_from_env() -> usize {
+    if let Ok(s) = std::env::var("QWYC_THREADS") {
+        if let Ok(v) = s.trim().parse::<usize>() {
+            return v.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1)
+}
+
+impl Pool {
+    pub fn new(n_threads: usize) -> Pool {
+        Pool { n_threads: n_threads.max(1) }
+    }
+
+    /// Pool sized by `QWYC_THREADS` / available parallelism.
+    pub fn from_env() -> Pool {
+        Pool::new(threads_from_env())
+    }
+
+    pub fn n_threads(&self) -> usize {
+        self.n_threads
+    }
+
+    /// `(0..n).map(f)` with chunks of `chunk` indices scheduled across
+    /// the pool; results are in index order. Runs inline when the pool
+    /// has one thread or the whole range fits a single chunk.
+    pub fn par_map_indexed<R, F>(&self, n: usize, chunk: usize, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize) -> R + Sync,
+    {
+        let chunk = chunk.max(1);
+        if self.n_threads == 1 || n <= chunk {
+            return (0..n).map(f).collect();
+        }
+        let n_chunks = n.div_ceil(chunk);
+        let parts = self.run_chunked(n_chunks, |c, out: &mut Vec<R>| {
+            let lo = c * chunk;
+            let hi = ((c + 1) * chunk).min(n);
+            out.extend((lo..hi).map(&f));
+        });
+        concat_in_order(parts, n)
+    }
+
+    /// Apply `f` to disjoint consecutive chunks of `items` (chunk index,
+    /// chunk slice) and return one result per chunk, in chunk order.
+    /// Workers reuse whatever per-chunk state `f` builds internally —
+    /// this is the primitive for loops that want thread-local scratch.
+    pub fn par_chunks<T, R, F>(&self, items: &[T], chunk: usize, f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(usize, &[T]) -> R + Sync,
+    {
+        let chunk = chunk.max(1);
+        if self.n_threads == 1 || items.len() <= chunk {
+            return items.chunks(chunk).enumerate().map(|(c, s)| f(c, s)).collect();
+        }
+        let n_chunks = items.len().div_ceil(chunk);
+        let parts = self.run_chunked(n_chunks, |c, out: &mut Vec<R>| {
+            let lo = c * chunk;
+            let hi = ((c + 1) * chunk).min(items.len());
+            out.push(f(c, &items[lo..hi]));
+        });
+        concat_in_order(parts, n_chunks)
+    }
+
+    /// Shared scheduling core: workers pull chunk ids off an atomic
+    /// counter and append `(chunk_id, results)` pairs to a shared bag.
+    fn run_chunked<R, G>(&self, n_chunks: usize, work: G) -> Vec<(usize, Vec<R>)>
+    where
+        R: Send,
+        G: Fn(usize, &mut Vec<R>) + Sync,
+    {
+        let next = AtomicUsize::new(0);
+        let bag: Mutex<Vec<(usize, Vec<R>)>> = Mutex::new(Vec::with_capacity(n_chunks));
+        let workers = self.n_threads.min(n_chunks);
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| {
+                    let mut local: Vec<(usize, Vec<R>)> = Vec::new();
+                    loop {
+                        let c = next.fetch_add(1, Ordering::Relaxed);
+                        if c >= n_chunks {
+                            break;
+                        }
+                        let mut out = Vec::new();
+                        work(c, &mut out);
+                        local.push((c, out));
+                    }
+                    if !local.is_empty() {
+                        bag.lock().unwrap().extend(local);
+                    }
+                });
+            }
+        });
+        bag.into_inner().unwrap()
+    }
+}
+
+/// Restore index order after dynamic scheduling.
+fn concat_in_order<R>(mut parts: Vec<(usize, Vec<R>)>, size_hint: usize) -> Vec<R> {
+    parts.sort_unstable_by_key(|(c, _)| *c);
+    let mut out = Vec::with_capacity(size_hint);
+    for (_, v) in parts {
+        out.extend(v);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_indexed_preserves_order() {
+        for threads in [1, 2, 4, 7] {
+            let pool = Pool::new(threads);
+            let got = pool.par_map_indexed(1000, 16, |i| i * i);
+            let want: Vec<usize> = (0..1000).map(|i| i * i).collect();
+            assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn chunks_cover_everything_once() {
+        let items: Vec<u32> = (0..513).collect();
+        for threads in [1, 3, 8] {
+            let pool = Pool::new(threads);
+            let sums = pool.par_chunks(&items, 64, |c, s| (c, s.iter().sum::<u32>()));
+            // One result per chunk, in chunk order.
+            assert_eq!(sums.len(), 513usize.div_ceil(64));
+            for (i, &(c, _)) in sums.iter().enumerate() {
+                assert_eq!(c, i);
+            }
+            let total: u32 = sums.iter().map(|&(_, s)| s).sum();
+            assert_eq!(total, items.iter().sum::<u32>(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs() {
+        let pool = Pool::new(4);
+        assert!(pool.par_map_indexed(0, 8, |i| i).is_empty());
+        assert!(pool.par_chunks(&[] as &[u8], 8, |_, s| s.len()).is_empty());
+        assert_eq!(pool.par_map_indexed(1, 8, |i| i + 1), vec![1]);
+    }
+
+    #[test]
+    fn uneven_work_balances() {
+        // Chunks with wildly different costs must still come back ordered.
+        let pool = Pool::new(4);
+        let got = pool.par_map_indexed(64, 1, |i| {
+            let spins = if i % 7 == 0 { 20_000 } else { 10 };
+            let mut acc = 0u64;
+            for k in 0..spins {
+                acc = acc.wrapping_add(std::hint::black_box(k));
+            }
+            (i, acc > 0)
+        });
+        for (i, &(idx, _)) in got.iter().enumerate() {
+            assert_eq!(idx, i);
+        }
+    }
+
+    #[test]
+    fn zero_threads_clamps_to_one() {
+        assert_eq!(Pool::new(0).n_threads(), 1);
+    }
+}

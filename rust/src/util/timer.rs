@@ -15,6 +15,9 @@ pub struct BenchResult {
     pub mean_ns: f64,
     /// Std dev of per-run means (the paper's ±%).
     pub std_ns: f64,
+    /// Median / 99th percentile of the per-run means (ns per iteration).
+    pub p50_ns: f64,
+    pub p99_ns: f64,
     pub runs: usize,
     pub iters_per_run: u64,
 }
@@ -69,8 +72,87 @@ pub fn bench_fn<F: FnMut()>(
         name: name.to_string(),
         mean_ns: crate::util::stats::mean(&per_run_ns),
         std_ns: crate::util::stats::std(&per_run_ns),
+        p50_ns: crate::util::stats::percentile(&per_run_ns, 50.0),
+        p99_ns: crate::util::stats::percentile(&per_run_ns, 99.0),
         runs,
         iters_per_run: iters,
+    }
+}
+
+/// Accumulates [`BenchResult`]s (optionally paired with a serial
+/// baseline) and writes the machine-readable `BENCH.json` that tracks
+/// the perf trajectory across PRs.
+///
+/// Schema (`"schema": "qwyc-bench-v1"`):
+///
+/// ```json
+/// {
+///   "schema": "qwyc-bench-v1",
+///   "threads": 8,
+///   "targets": [
+///     {"name": "...", "mean_ns": 0.0, "p50_ns": 0.0, "p99_ns": 0.0,
+///      "std_ns": 0.0, "runs": 5, "iters_per_run": 100,
+///      "speedup_vs_serial": 3.7}   // null when no serial baseline
+///   ]
+/// }
+/// ```
+pub struct BenchReport {
+    threads: usize,
+    targets: Vec<(BenchResult, Option<f64>)>,
+}
+
+impl BenchReport {
+    pub fn new(threads: usize) -> BenchReport {
+        BenchReport { threads, targets: Vec::new() }
+    }
+
+    /// Record a standalone target.
+    pub fn push(&mut self, r: &BenchResult) {
+        self.targets.push((r.clone(), None));
+    }
+
+    /// Record a parallel target with its serial baseline; the baseline is
+    /// stored as its own target and the parallel one carries
+    /// `speedup_vs_serial = serial.mean_ns / parallel.mean_ns` (null if
+    /// the parallel measurement is degenerate — a 0.0 ratio would read
+    /// as an infinite slowdown to trend tooling, not as "invalid").
+    pub fn push_pair(&mut self, serial: &BenchResult, parallel: &BenchResult) {
+        self.targets.push((serial.clone(), None));
+        let speedup = if parallel.mean_ns > 0.0 {
+            Some(serial.mean_ns / parallel.mean_ns)
+        } else {
+            None
+        };
+        self.targets.push((parallel.clone(), speedup));
+    }
+
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let targets = self
+            .targets
+            .iter()
+            .map(|(r, speedup)| {
+                Json::obj(vec![
+                    ("name", Json::str(&r.name)),
+                    ("mean_ns", Json::Num(r.mean_ns)),
+                    ("p50_ns", Json::Num(r.p50_ns)),
+                    ("p99_ns", Json::Num(r.p99_ns)),
+                    ("std_ns", Json::Num(r.std_ns)),
+                    ("runs", Json::Num(r.runs as f64)),
+                    ("iters_per_run", Json::Num(r.iters_per_run as f64)),
+                    ("speedup_vs_serial", speedup.map_or(Json::Null, Json::Num)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("schema", Json::str("qwyc-bench-v1")),
+            ("threads", Json::Num(self.threads as f64)),
+            ("targets", Json::Arr(targets)),
+        ])
+    }
+
+    pub fn write(&self, path: &std::path::Path) -> std::io::Result<()> {
+        crate::util::json::write_file(path, &self.to_json())
     }
 }
 
@@ -143,6 +225,36 @@ mod tests {
         black_box(acc);
         assert!(r.mean_ns > 0.0);
         assert_eq!(r.runs, 3);
+    }
+
+    #[test]
+    fn bench_report_json_schema() {
+        let r = BenchResult {
+            name: "serial".into(),
+            mean_ns: 100.0,
+            std_ns: 1.0,
+            p50_ns: 99.0,
+            p99_ns: 110.0,
+            runs: 4,
+            iters_per_run: 10,
+        };
+        let mut p = r.clone();
+        p.name = "parallel".into();
+        p.mean_ns = r.mean_ns / 2.0;
+        let mut report = BenchReport::new(4);
+        report.push(&r);
+        report.push_pair(&r, &p);
+        let j = report.to_json();
+        assert_eq!(j.req("schema").unwrap().as_str().unwrap(), "qwyc-bench-v1");
+        assert_eq!(j.req("threads").unwrap().as_f64().unwrap(), 4.0);
+        let targets = j.req("targets").unwrap().as_arr().unwrap();
+        assert_eq!(targets.len(), 3);
+        // Standalone + serial-baseline entries carry a null speedup.
+        assert_eq!(targets[0].req("speedup_vs_serial").unwrap(), &crate::util::json::Json::Null);
+        let sp = targets[2].req("speedup_vs_serial").unwrap().as_f64().unwrap();
+        assert!((sp - 2.0).abs() < 1e-9, "speedup {sp}");
+        assert!(targets[0].req("p50_ns").unwrap().as_f64().unwrap() > 0.0);
+        assert!(targets[0].req("p99_ns").unwrap().as_f64().unwrap() > 0.0);
     }
 
     #[test]

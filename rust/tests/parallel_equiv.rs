@@ -1,0 +1,143 @@
+//! Parallel/serial equivalence: the perf work in the pool-backed hot
+//! paths must never change results. Every assertion here is exact
+//! (bitwise for floats) — the contract is bit-identical output at every
+//! thread count, not "close enough".
+
+use qwyc::data::synth::{generate, Which};
+use qwyc::ensemble::BaseModel;
+use qwyc::gbt::{train, GbtParams};
+use qwyc::qwyc::{optimize_order_with_pool, simulate_with_pool, QwycConfig};
+use qwyc::runtime::engine::{Engine, NativeEngine};
+use qwyc::util::pool::Pool;
+use qwyc::util::rng::Rng;
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|v| v.to_bits()).collect()
+}
+
+#[test]
+fn optimize_order_bit_identical_across_thread_counts() {
+    let (tr, _) = generate(Which::AdultLike, 31, 0.03);
+    let (ens, _) = train(&tr, &GbtParams { n_trees: 40, max_depth: 3, ..Default::default() });
+    let sm = ens.score_matrix_par(&tr, &Pool::new(1));
+    for cfg in [
+        QwycConfig { alpha: 0.01, ..Default::default() },
+        QwycConfig { alpha: 0.0, neg_only: true, ..Default::default() },
+        // Subsampled search exercises the refit path too.
+        QwycConfig { alpha: 0.02, max_opt_examples: 300, ..Default::default() },
+    ] {
+        let fc1 = optimize_order_with_pool(&sm, &cfg, &Pool::new(1));
+        for threads in [2, 4] {
+            let fcn = optimize_order_with_pool(&sm, &cfg, &Pool::new(threads));
+            assert_eq!(fc1.order, fcn.order, "order diverged at {threads} threads ({cfg:?})");
+            assert_eq!(
+                bits(&fc1.eps_pos),
+                bits(&fcn.eps_pos),
+                "eps_pos diverged at {threads} threads ({cfg:?})"
+            );
+            assert_eq!(
+                bits(&fc1.eps_neg),
+                bits(&fcn.eps_neg),
+                "eps_neg diverged at {threads} threads ({cfg:?})"
+            );
+        }
+    }
+}
+
+#[test]
+fn simulate_bit_identical_across_thread_counts() {
+    let (tr, te) = generate(Which::NomaoLike, 32, 0.05);
+    let (ens, _) = train(&tr, &GbtParams { n_trees: 30, max_depth: 3, ..Default::default() });
+    let sm_tr = ens.score_matrix_par(&tr, &Pool::new(1));
+    let sm_te = ens.score_matrix_par(&te, &Pool::new(1));
+    let cfg = QwycConfig { alpha: 0.005, ..Default::default() };
+    let fc = optimize_order_with_pool(&sm_tr, &cfg, &Pool::new(1));
+    for sm in [&sm_tr, &sm_te] {
+        let s1 = simulate_with_pool(&fc, sm, &Pool::new(1));
+        for threads in [2, 4] {
+            let sn = simulate_with_pool(&fc, sm, &Pool::new(threads));
+            assert_eq!(s1.decisions, sn.decisions, "{threads} threads");
+            assert_eq!(s1.stops, sn.stops, "{threads} threads");
+            assert_eq!(s1.n_early, sn.n_early, "{threads} threads");
+            assert_eq!(
+                s1.mean_models.to_bits(),
+                sn.mean_models.to_bits(),
+                "mean_models diverged at {threads} threads"
+            );
+            assert_eq!(
+                s1.mean_cost.to_bits(),
+                sn.mean_cost.to_bits(),
+                "mean_cost diverged at {threads} threads"
+            );
+            assert_eq!(s1.pct_diff.to_bits(), sn.pct_diff.to_bits(), "{threads} threads");
+        }
+    }
+}
+
+#[test]
+fn score_matrix_bit_identical_across_thread_counts() {
+    let (tr, _) = generate(Which::AdultLike, 33, 0.03);
+    let (ens, _) = train(&tr, &GbtParams { n_trees: 20, max_depth: 4, ..Default::default() });
+    let sm1 = ens.score_matrix_par(&tr, &Pool::new(1));
+    let sm4 = ens.score_matrix_par(&tr, &Pool::new(4));
+    assert_eq!(sm1.n, sm4.n);
+    assert_eq!(sm1.t, sm4.t);
+    for t in 0..sm1.t {
+        assert_eq!(bits(sm1.col(t)), bits(sm4.col(t)), "column {t} diverged");
+    }
+    assert_eq!(bits(sm1.full_scores()), bits(sm4.full_scores()));
+}
+
+#[test]
+fn eval_batch_agrees_with_scalar_eval_on_random_trees() {
+    // Trained trees over random query points, plus out-of-range values.
+    let (tr, _) = generate(Which::Rw2Like, 34, 0.005);
+    let (ens, _) = train(&tr, &GbtParams { n_trees: 12, max_depth: 5, ..Default::default() });
+    let mut rng = Rng::new(99);
+    let n = 301; // not a multiple of the lane width
+    let d = tr.d;
+    let mut x = Vec::with_capacity(n * d);
+    for _ in 0..n * d {
+        x.push((rng.normal() as f32) * 3.0);
+    }
+    for m in &ens.models {
+        let BaseModel::Tree(t) = m else { panic!("gbt trains trees") };
+        let soa = t.to_soa();
+        let mut out = vec![0f32; n];
+        soa.eval_batch(&x, d, &mut out);
+        for i in 0..n {
+            let want = t.eval(&x[i * d..(i + 1) * d]);
+            assert_eq!(out[i].to_bits(), want.to_bits(), "row {i}");
+        }
+        // Gathered (active-set shaped) variant: random scattered rows.
+        let rows: Vec<u32> = (0..97).map(|_| rng.below(n) as u32).collect();
+        let mut out2 = vec![0f32; rows.len()];
+        soa.eval_indexed(&x, d, &rows, &mut out2);
+        for (j, &i) in rows.iter().enumerate() {
+            let i = i as usize;
+            let want = t.eval(&x[i * d..(i + 1) * d]);
+            assert_eq!(out2[j].to_bits(), want.to_bits(), "gathered row {i}");
+        }
+    }
+}
+
+#[test]
+fn classify_batch_matches_eval_single() {
+    let (tr, te) = generate(Which::AdultLike, 35, 0.03);
+    let (ens, _) = train(&tr, &GbtParams { n_trees: 25, max_depth: 4, ..Default::default() });
+    let sm = ens.score_matrix_par(&tr, &Pool::new(1));
+    let cfg = QwycConfig { alpha: 0.01, ..Default::default() };
+    let fc = optimize_order_with_pool(&sm, &cfg, &Pool::new(1));
+    let mut engine = NativeEngine::new(ens.clone(), fc.clone(), tr.d);
+    // A batch spanning several engine blocks (te.n > 256 at this scale).
+    let n = te.n.min(700);
+    let got = engine.classify_batch(&te.x[..n * te.d], n).expect("native classify");
+    assert_eq!(got.len(), n);
+    for (i, o) in got.iter().enumerate() {
+        let want = fc.eval_single(&ens, te.row(i));
+        assert_eq!(o.positive, want.positive, "example {i}");
+        assert_eq!(o.models_evaluated as usize, want.models_evaluated, "example {i}");
+        assert_eq!(o.early, want.early, "example {i}");
+        assert_eq!(o.score.to_bits(), want.score.to_bits(), "example {i}");
+    }
+}
