@@ -9,6 +9,7 @@
 use qwyc::coordinator::FilterPipeline;
 use qwyc::data::synth::{generate, Which};
 use qwyc::lattice::{train_joint, LatticeParams};
+use qwyc::plan::QwycPlan;
 use qwyc::qwyc::{optimize_order, simulate, QwycConfig};
 
 fn main() {
@@ -43,7 +44,12 @@ fn main() {
     );
 
     // Run the actual pipeline: reject early, fully score survivors, rank.
-    let pipeline = FilterPipeline::new(ensemble, fc).expect("neg-only classifier");
+    // The filter consumes the same round-tripped qwyc-plan-v1 artifact
+    // (and the same sweep kernel) that online serving deploys.
+    let plan =
+        QwycPlan::bundle(ensemble, fc, "filter-demo", 0.001).expect("bundle plan");
+    let plan = QwycPlan::from_json(&plan.to_json()).expect("plan roundtrip");
+    let pipeline = FilterPipeline::from_plan(&plan).expect("neg-only classifier");
     let (stats, ranked) = pipeline.run_batch(&test_ds.x, test_ds.n);
     println!(
         "\npipeline: {} candidates -> {} rejected early, {} fully scored",

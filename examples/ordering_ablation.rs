@@ -12,6 +12,7 @@ use qwyc::data::synth::{generate, Which};
 use qwyc::fan::FanClassifier;
 use qwyc::gbt::{train, GbtParams};
 use qwyc::orderings;
+use qwyc::plan::QwycPlan;
 use qwyc::qwyc::{optimize_order, optimize_thresholds_for_order, simulate, QwycConfig};
 
 fn main() {
@@ -38,9 +39,14 @@ fn main() {
         );
     };
 
-    // QWYC*: joint optimization.
+    // QWYC*: joint optimization, shipped and re-read as a qwyc-plan-v1
+    // artifact so the ablation's headline row uses the deployable path.
     let cfg = QwycConfig { alpha, max_opt_examples: 4000, ..Default::default() };
-    let star = simulate(&optimize_order(&sm_tr, &cfg), &sm_te);
+    let star_plan =
+        QwycPlan::bundle(ens.clone(), optimize_order(&sm_tr, &cfg), "ablation-star", alpha)
+            .expect("bundle plan");
+    let star_plan = QwycPlan::from_json(&star_plan.to_json()).expect("plan roundtrip");
+    let star = simulate(&star_plan.fc, &sm_te);
     show("QWYC* (joint order+thresholds)", &star);
 
     // Fixed orders + Algorithm 2 thresholds.

@@ -8,6 +8,7 @@
 
 use qwyc::data::synth::{generate, Which};
 use qwyc::gbt::{train, GbtParams};
+use qwyc::plan::QwycPlan;
 use qwyc::qwyc::{optimize_order, optimize_thresholds_for_order, simulate, QwycConfig};
 
 fn main() {
@@ -50,9 +51,15 @@ fn main() {
     }
 
     // 3. Joint optimization vs fixed GBT order (paper Figure 1's gap).
+    // The QWYC* side ships as a qwyc-plan-v1 artifact (bundle → JSON
+    // round-trip) so this demo evaluates exactly what `serve --plan` runs.
     let alpha = 0.005;
     let cfg = QwycConfig { alpha, ..Default::default() };
-    let star = simulate(&optimize_order(&sm_train, &cfg), &sm_test);
+    let plan =
+        QwycPlan::bundle(ensemble.clone(), optimize_order(&sm_train, &cfg), "quickstart", alpha)
+            .expect("bundle plan");
+    let plan = QwycPlan::from_json(&plan.to_json()).expect("plan roundtrip");
+    let star = simulate(&plan.fc, &sm_test);
     let natural: Vec<usize> = (0..sm_train.t).collect();
     let fixed = simulate(
         &optimize_thresholds_for_order(&sm_train, &natural, alpha, false),

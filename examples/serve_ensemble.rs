@@ -15,6 +15,7 @@ use qwyc::coordinator::{BatchPolicy, Client, Server};
 use qwyc::data::synth::{generate, Which};
 use qwyc::data::Dataset;
 use qwyc::lattice::{train_joint, LatticeParams};
+use qwyc::plan::QwycPlan;
 use qwyc::qwyc::{optimize_order, FastClassifier, QwycConfig};
 #[cfg(feature = "pjrt")]
 use qwyc::runtime::engine::PjrtEngine;
@@ -73,7 +74,13 @@ fn main() {
                     );
                 }
                 let _ = &backend2;
-                Box::new(NativeEngine::new(ens2, fc_used, 4))
+                // Native path: bundle into the qwyc-plan-v1 artifact and
+                // compile inside the worker — the same flow as
+                // `qwyc compile-plan` + `qwyc serve --plan`.
+                let mut plan = QwycPlan::bundle(ens2, fc_used, "serve-demo", 0.005)
+                    .expect("bundle plan");
+                plan.meta.n_features = 4;
+                Box::new(NativeEngine::from_plan(plan.compile().expect("compile plan")))
             },
             BatchPolicy { max_batch: 256, max_wait: Duration::from_micros(500) },
         )

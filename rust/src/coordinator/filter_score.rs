@@ -3,9 +3,20 @@
 //! early-negative thresholds only; every example classified positive
 //! receives its FULL ensemble score (later pipeline stages rank them), so
 //! positives are always fully evaluated.
+//!
+//! The pipeline owns a [`CompiledPlan`] and runs the crate-wide sweep
+//! core (`qwyc::sweep`) — the same kernel the serving engine uses — so a
+//! candidate filtered offline and a request served online take the same
+//! code path and produce bitwise-identical outcomes.
 
 use crate::ensemble::Ensemble;
+use crate::plan::{CompiledPlan, QwycPlan};
 use crate::qwyc::FastClassifier;
+use crate::util::pool::Pool;
+
+/// Example-block width for the batched filter sweep (same cache logic as
+/// the serving engine's block).
+const FILTER_BLOCK: usize = 256;
 
 /// Result of pushing one candidate through the pipeline.
 #[derive(Clone, Copy, Debug)]
@@ -23,29 +34,44 @@ pub struct FilterStats {
     pub rejected: usize,
     pub scored: usize,
     pub mean_models: f64,
+    /// Mean evaluation cost per candidate (Σ c over the evaluated π
+    /// prefix, from the plan's precomputed prefix-cost table; equals
+    /// `mean_models` when all costs are 1).
+    pub mean_cost: f64,
 }
 
-/// Filter-and-score one batch of candidates. `fc` must be a neg-only
-/// classifier (its ε⁺ are all +∞); this is validated on construction.
+/// Filter-and-score a batch of candidates. The plan must be neg-only
+/// (its ε⁺ are all +∞); this is validated on construction.
 pub struct FilterPipeline {
-    pub ensemble: Ensemble,
-    pub fc: FastClassifier,
+    plan: CompiledPlan,
+    pool: Pool,
 }
 
 impl FilterPipeline {
-    pub fn new(ensemble: Ensemble, fc: FastClassifier) -> Result<FilterPipeline, String> {
-        fc.validate()?;
-        if fc.eps_pos.iter().any(|&e| e != f32::INFINITY) {
+    /// Build from a plan artifact with the `QWYC_THREADS` pool.
+    pub fn from_plan(plan: &QwycPlan) -> Result<FilterPipeline, String> {
+        FilterPipeline::from_plan_with_pool(plan, Pool::from_env())
+    }
+
+    pub fn from_plan_with_pool(plan: &QwycPlan, pool: Pool) -> Result<FilterPipeline, String> {
+        if plan.fc.eps_pos.iter().any(|&e| e != f32::INFINITY) {
             return Err("filter pipeline requires a neg-only classifier (eps_pos ≡ +inf)".into());
         }
-        if ensemble.len() != fc.t() {
-            return Err("ensemble/classifier size mismatch".into());
-        }
-        Ok(FilterPipeline { ensemble, fc })
+        Ok(FilterPipeline { plan: plan.compile()?, pool })
+    }
+
+    /// Deprecated loose-parts constructor: bundles a [`QwycPlan`] on the
+    /// fly. Prefer [`FilterPipeline::from_plan`].
+    pub fn new(ensemble: Ensemble, fc: FastClassifier) -> Result<FilterPipeline, String> {
+        FilterPipeline::from_plan(&QwycPlan::bundle(ensemble, fc, "filter", 0.0)?)
+    }
+
+    pub fn plan(&self) -> &CompiledPlan {
+        &self.plan
     }
 
     pub fn run_one(&self, x: &[f32]) -> FilterOutcome {
-        let r = self.fc.eval_single(&self.ensemble, x);
+        let r = self.plan.eval_single(x);
         if r.early {
             // Early exit in a neg-only classifier is always a rejection.
             debug_assert!(!r.positive);
@@ -59,26 +85,37 @@ impl FilterPipeline {
     }
 
     /// Run a dataset through the filter; returns (stats, scored
-    /// candidates as (row index, full score), ready for ranking).
+    /// candidates as (row index, full score), ready for ranking). Rows
+    /// may be wider than the plan's feature floor; the stride is taken
+    /// from the buffer shape as before.
     pub fn run_batch(&self, x: &[f32], n: usize) -> (FilterStats, Vec<(usize, f32)>) {
-        let d = self.ensemble.models.first().map(|_| x.len() / n.max(1)).unwrap_or(0);
+        let d = if n == 0 { self.plan.n_features() } else { x.len() / n };
+        let outcomes = self.plan.sweep_features(&x[..n * d], n, d, FILTER_BLOCK, &self.pool);
+        let t = self.plan.t() as u64;
+        let total_cost = self.plan.total_cost();
         let mut stats = FilterStats { total: n, ..Default::default() };
         let mut scored = Vec::new();
         let mut models_sum = 0u64;
-        for i in 0..n {
-            match self.run_one(&x[i * d..(i + 1) * d]) {
-                FilterOutcome::Rejected { models } => {
-                    stats.rejected += 1;
-                    models_sum += models as u64;
-                }
-                FilterOutcome::Scored { score } => {
-                    stats.scored += 1;
-                    models_sum += self.ensemble.len() as u64;
-                    scored.push((i, score));
-                }
+        let mut cost_sum = 0f64;
+        for (i, o) in outcomes.iter().enumerate() {
+            if o.early {
+                debug_assert!(!o.positive);
+                stats.rejected += 1;
+                models_sum += o.stop as u64;
+                cost_sum += self.plan.prefix_cost(o.stop as usize);
+            } else if o.positive {
+                stats.scored += 1;
+                models_sum += t;
+                cost_sum += total_cost;
+                scored.push((i, o.score));
+            } else {
+                stats.rejected += 1;
+                models_sum += t;
+                cost_sum += total_cost;
             }
         }
         stats.mean_models = models_sum as f64 / n.max(1) as f64;
+        stats.mean_cost = cost_sum / n.max(1) as f64;
         // Rank survivors by score, best first (the downstream consumer).
         scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
         (stats, scored)
@@ -92,7 +129,7 @@ mod tests {
     use crate::lattice::{train_joint, LatticeParams};
     use crate::qwyc::{optimize_order, QwycConfig};
 
-    fn setup() -> (crate::data::Dataset, FilterPipeline) {
+    fn setup() -> (crate::data::Dataset, Ensemble, FastClassifier, FilterPipeline) {
         let (tr, te) = generate(Which::Rw1Like, 41, 0.005);
         let (ens, _) = train_joint(
             &tr,
@@ -101,12 +138,14 @@ mod tests {
         let sm = ens.score_matrix(&tr);
         let cfg = QwycConfig { alpha: 0.005, neg_only: true, ..Default::default() };
         let fc = optimize_order(&sm, &cfg);
-        (te, FilterPipeline::new(ens, fc).unwrap())
+        let plan = QwycPlan::bundle(ens.clone(), fc.clone(), "filter-test", 0.005).unwrap();
+        let pipe = FilterPipeline::from_plan(&plan).unwrap();
+        (te, ens, fc, pipe)
     }
 
     #[test]
     fn rejects_bulk_and_scores_survivors_fully() {
-        let (te, pipe) = setup();
+        let (te, ens, _, pipe) = setup();
         let (stats, scored) = pipe.run_batch(&te.x, te.n);
         assert_eq!(stats.total, te.n);
         assert_eq!(stats.rejected + stats.scored, te.n);
@@ -114,22 +153,72 @@ mod tests {
         assert!(stats.rejected as f64 > 0.6 * te.n as f64, "rejected {}", stats.rejected);
         // Survivor scores must equal the full ensemble score.
         for &(i, score) in scored.iter().take(20) {
-            let full = pipe.ensemble.eval_full(te.row(i));
+            let full = ens.eval_full(te.row(i));
             assert!((score - full).abs() < 1e-5);
-            assert!(full >= pipe.ensemble.beta);
+            assert!(full >= ens.beta);
         }
         // Sorted descending.
         assert!(scored.windows(2).all(|w| w[0].1 >= w[1].1));
-        // Early rejection means mean models < T.
-        assert!(stats.mean_models < pipe.ensemble.len() as f64);
+        // Early rejection means mean models < T; unit costs make the
+        // prefix-cost accounting collapse to the same number.
+        assert!(stats.mean_models < ens.len() as f64);
+        assert!((stats.mean_cost - stats.mean_models).abs() < 1e-9);
+    }
+
+    #[test]
+    fn neg_only_invariant_matches_eval_single() {
+        // The pre-refactor contract, now against the shared sweep:
+        // rejected candidates stop exactly where eval_single stops, and
+        // survivors carry the bit-exact full π-order score.
+        let (te, ens, fc, pipe) = setup();
+        let n = te.n.min(500);
+        let (_, scored) = pipe.run_batch(&te.x[..n * te.d], n);
+        let survivors: std::collections::BTreeMap<usize, u32> =
+            scored.iter().map(|&(i, s)| (i, s.to_bits())).collect();
+        for i in 0..n {
+            let want = fc.eval_single(&ens, te.row(i));
+            match pipe.run_one(te.row(i)) {
+                FilterOutcome::Rejected { models } => {
+                    assert!(!want.positive, "example {i}");
+                    assert_eq!(models as usize, want.models_evaluated, "example {i}");
+                    assert!(!survivors.contains_key(&i), "example {i}");
+                }
+                FilterOutcome::Scored { score } => {
+                    assert!(want.positive && !want.early, "example {i}");
+                    assert_eq!(want.models_evaluated, ens.len(), "example {i}");
+                    assert_eq!(score.to_bits(), want.score.to_bits(), "example {i}");
+                    assert_eq!(survivors.get(&i), Some(&want.score.to_bits()), "example {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batch_is_bit_identical_across_thread_counts() {
+        let (te, ens, fc, _) = setup();
+        let plan = QwycPlan::bundle(ens, fc, "filter-threads", 0.005).unwrap();
+        let p1 = FilterPipeline::from_plan_with_pool(&plan, Pool::new(1)).unwrap();
+        let p4 = FilterPipeline::from_plan_with_pool(&plan, Pool::new(4)).unwrap();
+        let (s1, sc1) = p1.run_batch(&te.x, te.n);
+        let (s4, sc4) = p4.run_batch(&te.x, te.n);
+        assert_eq!(s1.rejected, s4.rejected);
+        assert_eq!(s1.scored, s4.scored);
+        assert_eq!(s1.mean_models.to_bits(), s4.mean_models.to_bits());
+        assert_eq!(s1.mean_cost.to_bits(), s4.mean_cost.to_bits());
+        let bits = |v: &[(usize, f32)]| {
+            v.iter().map(|&(i, s)| (i, s.to_bits())).collect::<Vec<_>>()
+        };
+        assert_eq!(bits(&sc1), bits(&sc4));
     }
 
     #[test]
     fn rejects_pos_threshold_classifiers() {
-        let (_, pipe) = setup();
-        let mut fc = pipe.fc.clone();
+        let (_, ens, fc, _) = setup();
+        let mut fc = fc;
         fc.eps_pos[0] = 0.0;
         fc.eps_neg[0] = fc.eps_neg[0].min(0.0);
-        assert!(FilterPipeline::new(pipe.ensemble.clone(), fc).is_err());
+        let plan = QwycPlan::bundle(ens.clone(), fc.clone(), "bad", 0.0).unwrap();
+        assert!(FilterPipeline::from_plan(&plan).is_err());
+        assert!(FilterPipeline::new(ens, fc).is_err());
     }
 }

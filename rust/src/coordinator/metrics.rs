@@ -1,9 +1,19 @@
-//! Serving metrics: latency histogram, models-evaluated accounting,
+//! Serving metrics: latency histogram (fixed log-bucketed bins → p50/p99),
+//! models-evaluated accounting, per-position exit counts (where in π do
+//! requests actually stop — the serving-side view of Figures 5-6),
 //! early-exit ratio, throughput. Shared across worker/connection threads.
 
 use crate::util::stats::LatencyHist;
 use std::sync::Mutex;
 use std::time::Instant;
+
+/// Per-position exit counts are tracked exactly up to this position;
+/// later exits clamp into the last slot (T beyond this is off the
+/// design map — the paper's largest ensembles are T = 500).
+const STOP_POS_CAP: usize = 512;
+
+/// Fixed bin count for the compact exit-position histogram in `report()`.
+const STOP_REPORT_BINS: usize = 8;
 
 #[derive(Debug, Default)]
 struct Inner {
@@ -12,6 +22,10 @@ struct Inner {
     models_sum: u64,
     early: u64,
     requests: u64,
+    /// `stop_counts[p]` = requests that stopped after exactly p base
+    /// models (index 0 only for degenerate zero-model plans). Grown on
+    /// demand, capped at [`STOP_POS_CAP`].
+    stop_counts: Vec<u64>,
 }
 
 /// Thread-safe metrics sink.
@@ -37,6 +51,11 @@ impl Metrics {
         m.models_sum += models as u64;
         m.early += early as u64;
         m.requests += 1;
+        let pos = (models as usize).min(STOP_POS_CAP);
+        if m.stop_counts.len() <= pos {
+            m.stop_counts.resize(pos + 1, 0);
+        }
+        m.stop_counts[pos] += 1;
     }
 
     pub fn record_batch(&self, size: usize) {
@@ -59,8 +78,26 @@ impl Metrics {
                 m.batch_sizes.iter().sum::<u64>() as f64 / m.batch_sizes.len() as f64
             },
             throughput_rps: m.requests as f64 / self.started.elapsed().as_secs_f64().max(1e-9),
+            stop_counts: m.stop_counts.clone(),
         }
     }
+}
+
+/// Smallest position whose cumulative count reaches the p-th percentile.
+fn stop_percentile(counts: &[u64], p: f64) -> usize {
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return 0;
+    }
+    let target = ((p / 100.0 * total as f64).ceil() as u64).max(1);
+    let mut acc = 0u64;
+    for (pos, &c) in counts.iter().enumerate() {
+        acc += c;
+        if acc >= target {
+            return pos;
+        }
+    }
+    counts.len().saturating_sub(1)
 }
 
 /// Point-in-time metrics view.
@@ -74,13 +111,44 @@ pub struct Snapshot {
     pub early_frac: f64,
     pub mean_batch: f64,
     pub throughput_rps: f64,
+    /// Per-position exit counts (`stop_counts[p]` = requests stopping
+    /// after exactly p models); empty until the first request.
+    pub stop_counts: Vec<u64>,
 }
 
 impl Snapshot {
+    /// Exit position below which p% of requests stop.
+    pub fn stop_percentile(&self, p: f64) -> usize {
+        stop_percentile(&self.stop_counts, p)
+    }
+
+    /// The per-position exit counts compacted into `bins` fixed-width
+    /// buckets over positions [1, max recorded position].
+    pub fn stop_histogram(&self, bins: usize) -> Vec<u64> {
+        let bins = bins.max(1);
+        let mut out = vec![0u64; bins];
+        let hi = self.stop_counts.len().saturating_sub(1).max(1);
+        for (pos, &c) in self.stop_counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let b = pos.saturating_sub(1) * bins / hi;
+            out[b.min(bins - 1)] += c;
+        }
+        out
+    }
+
     pub fn report(&self) -> String {
+        let hist = self
+            .stop_histogram(STOP_REPORT_BINS)
+            .iter()
+            .map(|c| c.to_string())
+            .collect::<Vec<_>>()
+            .join(",");
         format!(
             "requests={} throughput={:.0}/s latency(mean/p50/p99)={:.1}/{:.1}/{:.1}us \
-             mean_models={:.2} early={:.1}% mean_batch={:.1}",
+             mean_models={:.2} early={:.1}% exit_pos(p50/p99)={}/{} exit_hist=[{hist}] \
+             mean_batch={:.1}",
             self.requests,
             self.throughput_rps,
             self.mean_latency_us,
@@ -88,6 +156,8 @@ impl Snapshot {
             self.p99_latency_us,
             self.mean_models,
             self.early_frac * 100.0,
+            self.stop_percentile(50.0),
+            self.stop_percentile(99.0),
             self.mean_batch
         )
     }
@@ -110,5 +180,42 @@ mod tests {
         assert!((s.mean_latency_us - 2.0).abs() < 0.1);
         assert!((s.mean_batch - 2.0).abs() < 1e-9);
         assert!(!s.report().is_empty());
+    }
+
+    #[test]
+    fn tracks_per_position_exits() {
+        let m = Metrics::new();
+        // 8 requests stopping at position 1, one at 4, one at 10.
+        for _ in 0..8 {
+            m.record_request(1_000, 1, true);
+        }
+        m.record_request(1_000, 4, true);
+        m.record_request(1_000, 10, false);
+        let s = m.snapshot();
+        assert_eq!(s.stop_counts[1], 8);
+        assert_eq!(s.stop_counts[4], 1);
+        assert_eq!(s.stop_counts[10], 1);
+        assert_eq!(s.stop_counts.iter().sum::<u64>(), 10);
+        assert_eq!(s.stop_percentile(50.0), 1);
+        assert_eq!(s.stop_percentile(99.0), 10);
+        // Fixed-bin compaction preserves mass and lands the tail last.
+        let h = s.stop_histogram(5);
+        assert_eq!(h.iter().sum::<u64>(), 10);
+        assert_eq!(h[0], 8);
+        assert_eq!(h[4], 1);
+        // The STATS line surfaces the new fields.
+        let rep = s.report();
+        assert!(rep.contains("exit_pos(p50/p99)=1/10"), "{rep}");
+        assert!(rep.contains("exit_hist=["), "{rep}");
+    }
+
+    #[test]
+    fn positions_beyond_cap_clamp() {
+        let m = Metrics::new();
+        m.record_request(1_000, 100_000, false);
+        let s = m.snapshot();
+        assert_eq!(s.stop_counts.len(), STOP_POS_CAP + 1);
+        assert_eq!(s.stop_counts[STOP_POS_CAP], 1);
+        assert_eq!(s.stop_percentile(50.0), STOP_POS_CAP);
     }
 }

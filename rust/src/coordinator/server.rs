@@ -1,5 +1,7 @@
 //! TCP serving front-end: line protocol, connection handling, and the
-//! worker loop that owns the engine. Requests flow
+//! worker loop that owns the engine (for the native backend, the engine
+//! is a [`CompiledPlan`](crate::plan::CompiledPlan) compiled once inside
+//! the worker thread — see `NativeEngine::from_plan`). Requests flow
 //!
 //!   conn thread → BatchQueue (condvar) → batcher → engine.classify_batch
 //!     → per-request response channel → conn thread → client

@@ -114,6 +114,30 @@ impl Ensemble {
         correct as f64 / ds.n.max(1) as f64
     }
 
+    /// Smallest feature width that covers every feature index any base
+    /// model reads (max referenced index + 1; 0 when nothing is read).
+    /// Plan compilation uses this for the feature-count agreement check.
+    pub fn feature_count(&self) -> usize {
+        let mut d = 0usize;
+        for m in &self.models {
+            match m {
+                BaseModel::Lattice(l) => {
+                    for &f in &l.features {
+                        d = d.max(f + 1);
+                    }
+                }
+                BaseModel::Tree(t) => {
+                    for n in &t.nodes {
+                        if !n.is_leaf() {
+                            d = d.max(n.feature as usize + 1);
+                        }
+                    }
+                }
+            }
+        }
+        d
+    }
+
     /// SoA mirrors of the tree base models, index-aligned with `models`
     /// (None for lattices). Shared by the blocked score-matrix build and
     /// `NativeEngine` so mirror construction lives in one place.

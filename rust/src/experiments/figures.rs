@@ -14,6 +14,7 @@ use super::methods::{self, ExpData};
 use super::report::{self, Curve, Point, YAxis};
 use super::workload::{benchmark, real_world, Workload};
 use crate::data::synth::Which;
+use crate::plan::QwycPlan;
 use crate::qwyc::{optimize_order, optimize_thresholds_for_order, simulate, QwycConfig};
 use std::path::PathBuf;
 
@@ -156,7 +157,7 @@ pub fn fig5_fig6(cfg: &FigConfig) {
         let target = 0.005;
 
         // QWYC*: pick alpha whose test diff is closest to target.
-        let mut best: Option<(f64, crate::qwyc::SimResult)> = None;
+        let mut best: Option<(f64, f64, crate::qwyc::FastClassifier)> = None;
         for &alpha in &cfg.alphas {
             let qcfg = QwycConfig {
                 alpha,
@@ -164,13 +165,22 @@ pub fn fig5_fig6(cfg: &FigConfig) {
                 max_opt_examples: cfg.max_opt,
                 seed: cfg.seed,
             };
-            let sim = simulate(&optimize_order(&sm_tr, &qcfg), &sm_te);
+            let fc = optimize_order(&sm_tr, &qcfg);
+            let sim = simulate(&fc, &sm_te);
             let d = (sim.pct_diff - target).abs();
-            if best.as_ref().map(|(bd, _)| d < *bd).unwrap_or(true) {
-                best = Some((d, sim));
+            if best.as_ref().map(|(bd, ..)| d < *bd).unwrap_or(true) {
+                best = Some((d, alpha, fc));
             }
         }
-        let (_, sim_star) = best.unwrap();
+        // Re-simulate the chosen operating point through the round-tripped
+        // qwyc-plan-v1 artifact — the histogram published here is the one
+        // the deployed plan actually produces.
+        let (_, star_alpha, star_fc) = best.unwrap();
+        let star_plan =
+            QwycPlan::bundle(w.ensemble.clone(), star_fc, &w.name, star_alpha)
+                .expect("bundle fig5/6 plan");
+        let star_plan = QwycPlan::from_json(&star_plan.to_json()).expect("plan roundtrip");
+        let sim_star = simulate(&star_plan.fc, &sm_te);
         println!(
             "QWYC* @ ~0.5% diff (actual {:.3}%): mean models {:.1}",
             sim_star.pct_diff * 100.0,

@@ -7,6 +7,7 @@ use super::workload::real_world;
 use crate::data::synth::Which;
 use crate::fan::FanClassifier;
 use crate::orderings;
+use crate::plan::{CompiledPlan, QwycPlan};
 use crate::qwyc::{optimize_order, simulate, FastClassifier, QwycConfig};
 use crate::util::json::Json;
 use crate::util::timer;
@@ -65,7 +66,7 @@ pub fn timing_table(
     let target = 0.005;
 
     // QWYC*: alpha whose held-out diff lands closest to 0.5%.
-    let mut best: Option<(f64, FastClassifier, f64, f64)> = None;
+    let mut best: Option<(f64, f64, FastClassifier, f64, f64)> = None;
     for &alpha in &cfg.alphas {
         let qcfg =
             QwycConfig { alpha, neg_only: true, max_opt_examples: cfg.max_opt, seed: cfg.seed };
@@ -73,10 +74,10 @@ pub fn timing_table(
         let sim = simulate(&fc, &sm_te);
         let d = (sim.pct_diff - target).abs();
         if best.as_ref().map(|(bd, ..)| d < *bd).unwrap_or(true) {
-            best = Some((d, fc, sim.pct_diff, sim.mean_models));
+            best = Some((d, alpha, fc, sim.pct_diff, sim.mean_models));
         }
     }
-    let (_, fc_qwyc, qwyc_diff, qwyc_models) = best.unwrap();
+    let (_, qwyc_alpha, fc_qwyc, qwyc_diff, qwyc_models) = best.unwrap();
 
     // Fan*: Individual-MSE order needs labels, which the real-world sets
     // lack — the paper's Fan* there uses the given order; we calibrate on
@@ -94,17 +95,30 @@ pub fn timing_table(
     let (_, fan_gamma, fan_diff, fan_models) = best_fan.unwrap();
 
     // ---- wall-clock timing over the test set ---------------------------
+    // The Full and QWYC rows go through the compiled qwyc-plan-v1
+    // artifact (bundle → JSON round-trip → compile), so the timed path is
+    // the same one `qwyc serve --plan` deploys.
     let n_time = timing_examples.min(w.test.n);
     let full_fc =
         FastClassifier::no_early_stop(orderings::natural(sm_tr.t), sm_tr.bias, sm_tr.beta);
+    let make_compiled = |fc: &FastClassifier, name: &str, alpha: f64| -> CompiledPlan {
+        let plan = QwycPlan::bundle(w.ensemble.clone(), fc.clone(), name, alpha)
+            .expect("bundle timing plan");
+        QwycPlan::from_json(&plan.to_json())
+            .expect("plan json roundtrip")
+            .compile()
+            .expect("compile timing plan")
+    };
+    let full_plan = make_compiled(&full_fc, &format!("{}-full", w.name), 0.0);
+    let qwyc_plan = make_compiled(&fc_qwyc, &format!("{}-qwyc", w.name), qwyc_alpha);
 
-    let time_fc = |fc: &FastClassifier| -> (f64, f64) {
+    let time_fc = |cp: &CompiledPlan| -> (f64, f64) {
         let mut per_run = Vec::with_capacity(runs);
         for _ in 0..runs {
             let sw = timer::Stopwatch::new();
             let mut sink = 0f32;
             for i in 0..n_time {
-                sink += fc.eval_single(&w.ensemble, w.test.row(i)).score;
+                sink += cp.eval_single(w.test.row(i)).score;
             }
             timer::black_box(sink);
             per_run.push(sw.elapsed_s() / n_time as f64 * 1e6);
@@ -125,8 +139,8 @@ pub fn timing_table(
         (crate::util::stats::mean(&per_run), crate::util::stats::std(&per_run))
     };
 
-    let (full_us, full_std) = time_fc(&full_fc);
-    let (qwyc_us, qwyc_std) = time_fc(&fc_qwyc);
+    let (full_us, full_std) = time_fc(&full_plan);
+    let (qwyc_us, qwyc_std) = time_fc(&qwyc_plan);
     let (fan_us, fan_std) = time_fan(fan_gamma);
 
     vec![

@@ -12,9 +12,11 @@
 //!
 //! - **L3 (this crate)** — ensemble training substrates ([`gbt`],
 //!   [`lattice`]), the QWYC optimizer ([`qwyc`]) and baselines ([`fan`],
-//!   [`orderings`]), and a serving [`coordinator`] with dynamic batching
-//!   and early-exit scheduling, backed by [`runtime`] (PJRT) for the
-//!   AOT-compiled dense path.
+//!   [`orderings`]), the deployable [`plan`] artifact (`qwyc-plan-v1` +
+//!   [`plan::CompiledPlan`]) every evaluator consumes through one shared
+//!   sweep core ([`qwyc::sweep`]), and a serving [`coordinator`] with
+//!   dynamic batching and early-exit scheduling, backed by [`runtime`]
+//!   (PJRT) for the AOT-compiled dense path.
 //! - **L2/L1 (build-time Python)** — JAX graph + Pallas lattice kernel,
 //!   AOT-lowered to HLO text (`python/compile/`), never on the request
 //!   path.
@@ -30,6 +32,7 @@ pub mod fan;
 pub mod gbt;
 pub mod lattice;
 pub mod orderings;
+pub mod plan;
 // The crate and its core-algorithm module intentionally share the name.
 #[allow(clippy::module_inception)]
 pub mod qwyc;

@@ -4,8 +4,9 @@
 //!   gen-data     generate a synthetic dataset as CSV
 //!   train        train an ensemble (GBT or lattice) and save it
 //!   optimize     run QWYC (Algorithm 1 or 2) and save the fast classifier
-//!   simulate     evaluate a fast classifier against a dataset
-//!   serve        start the TCP serving coordinator
+//!   compile-plan bundle model + fast classifier into a qwyc-plan-v1 artifact
+//!   simulate     evaluate a plan (or a deprecated model/fast pair)
+//!   serve        start the TCP serving coordinator from a plan
 //!   bench-client load-test a running server
 //!   experiment   regenerate paper figures/tables (fig1..fig6, tables, all)
 //!
@@ -18,6 +19,7 @@ use qwyc::ensemble::Ensemble;
 use qwyc::experiments::{figures, tables, FigConfig};
 use qwyc::gbt::GbtParams;
 use qwyc::lattice::LatticeParams;
+use qwyc::plan::QwycPlan;
 use qwyc::qwyc::{
     optimize_order, optimize_thresholds_for_order, simulate, FastClassifier, QwycConfig,
 };
@@ -51,6 +53,7 @@ fn run(args: &Args) -> Result<(), String> {
         Some("gen-data") => gen_data(args),
         Some("train") => train(args),
         Some("optimize") => optimize(args),
+        Some("compile-plan") => compile_plan(args),
         Some("simulate") => simulate_cmd(args),
         Some("serve") => serve(args),
         Some("bench-client") => bench_client(args),
@@ -73,8 +76,12 @@ USAGE: qwyc <subcommand> [flags]
   optimize     --model model.json --dataset ... --alpha 0.005
                [--neg-only] [--fixed-order natural|random|ind-mse|greedy-mse]
                [--max-opt 0] --out fast.json
-  simulate     --model model.json --fast fast.json --dataset ... [--split test]
-  serve        --model model.json --fast fast.json --addr 127.0.0.1:7077
+  compile-plan --model model.json --fast fast.json --out plan.json
+               [--name my-plan --alpha 0.005 --n-features D | --dataset adult]
+  simulate     --plan plan.json --dataset ... [--split test]
+               (deprecated: --model model.json --fast fast.json)
+  serve        --plan plan.json --addr 127.0.0.1:7077
+               (deprecated: --model model.json --fast fast.json)
                [--backend native|pjrt --artifact rw1_stage --artifacts-dir artifacts]
                [--max-batch 256 --max-wait-ms 2]
   bench-client --addr 127.0.0.1:7077 --dataset ... --requests 5000 [--pipeline 64]
@@ -216,15 +223,75 @@ fn optimize(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// Bundle an ensemble + fast classifier into the versioned `qwyc-plan-v1`
+/// artifact that `simulate --plan` / `serve --plan` consume. Compiles the
+/// plan once here so every invariant is checked at build time, not at
+/// load time on every server start.
+fn compile_plan(args: &Args) -> Result<(), String> {
+    let model = PathBuf::from(args.get_str("model", "model.json"));
+    let fast = PathBuf::from(args.get_str("fast", "fast.json"));
+    let out = PathBuf::from(args.get_str("out", "plan.json"));
+    let alpha = args.get_f64("alpha", 0.0)?;
+    let mut n_features = args.get_usize("n-features", 0)?;
+    let dataset = args.get_opt("dataset");
+    let name = args.get_opt("name");
+    args.check_unknown()?;
+
+    // --dataset records the dataset's feature width (and provenance)
+    // without generating any data.
+    if let Some(ds) = &dataset {
+        n_features = n_features.max(Which::parse(ds)?.sizes().2);
+    }
+    let ens = Ensemble::load(&model)?;
+    let fc = FastClassifier::load(&fast)?;
+    let name = name.unwrap_or_else(|| ens.name.clone());
+    let mut plan = QwycPlan::bundle(ens, fc, &name, alpha)?;
+    plan.meta.n_features = n_features;
+    if let Some(ds) = &dataset {
+        plan.meta.source = format!("dataset={ds}");
+    }
+    let compiled = plan.compile()?;
+    plan.save(&out).map_err(|e| e.to_string())?;
+    println!(
+        "compiled plan '{}' (T={}, d={}, neg_only={}, total_cost={}) -> {}",
+        plan.meta.name,
+        compiled.t(),
+        compiled.n_features(),
+        plan.meta.neg_only,
+        compiled.total_cost(),
+        out.display()
+    );
+    Ok(())
+}
+
+/// Load `--plan`, or fall back to the deprecated `--model`/`--fast` pair
+/// (bundled into an in-memory plan so both paths exercise the same code).
+fn load_plan_or_legacy(args: &Args) -> Result<QwycPlan, String> {
+    // --model/--fast are consumed only on the legacy branch, so passing
+    // them alongside --plan fails check_unknown instead of being
+    // silently ignored.
+    match args.get_opt("plan") {
+        Some(p) => QwycPlan::load(Path::new(&p)),
+        None => {
+            eprintln!(
+                "note: loading a --model/--fast pair is deprecated; run `qwyc compile-plan` \
+                 once and pass --plan"
+            );
+            let ens = Ensemble::load(Path::new(&args.get_str("model", "model.json")))?;
+            let fc = FastClassifier::load(Path::new(&args.get_str("fast", "fast.json")))?;
+            QwycPlan::bundle(ens, fc, "adhoc-cli", 0.0)
+        }
+    }
+}
+
 fn simulate_cmd(args: &Args) -> Result<(), String> {
-    let ens = Ensemble::load(Path::new(&args.get_str("model", "model.json")))?;
-    let fc = FastClassifier::load(Path::new(&args.get_str("fast", "fast.json")))?;
+    let plan = load_plan_or_legacy(args)?;
     let (tr, te) = load_data(args)?;
     let split = args.get_str("split", "test");
     args.check_unknown()?;
     let ds = if split == "train" { &tr } else { &te };
-    let sm = ens.score_matrix(ds);
-    let sim = simulate(&fc, &sm);
+    let sm = plan.ensemble.score_matrix(ds);
+    let sim = simulate(&plan.fc, &sm);
     println!(
         "{} ({} examples): mean models {:.2}/{} ({:.2}x), diff {:.3}%, early {:.1}%, acc {:.4}",
         split,
@@ -240,8 +307,6 @@ fn simulate_cmd(args: &Args) -> Result<(), String> {
 }
 
 fn serve(args: &Args) -> Result<(), String> {
-    let model_path = args.get_str("model", "model.json");
-    let fast_path = args.get_str("fast", "fast.json");
     let addr = args.get_str("addr", "127.0.0.1:7077");
     let backend = args.get_str("backend", "native");
     let artifact = args.get_str("artifact", "rw1_stage");
@@ -250,6 +315,7 @@ fn serve(args: &Args) -> Result<(), String> {
         max_batch: args.get_usize("max-batch", 256)?,
         max_wait: Duration::from_millis(args.get_u64("max-wait-ms", 2)?),
     };
+    let plan = load_plan_or_legacy(args)?;
     args.check_unknown()?;
 
     if backend == "pjrt" && !cfg!(feature = "pjrt") {
@@ -259,13 +325,11 @@ fn serve(args: &Args) -> Result<(), String> {
                 .into(),
         );
     }
-    let ens = Ensemble::load(Path::new(&model_path))?;
-    let fc = FastClassifier::load(Path::new(&fast_path))?;
-    let d = feature_count(&ens)?;
     println!(
-        "serving {} (T={}, backend={backend}) on {addr}; batch<={} wait<={:?}",
-        ens.name,
-        ens.len(),
+        "serving plan '{}' ({}, T={}, backend={backend}) on {addr}; batch<={} wait<={:?}",
+        plan.meta.name,
+        plan.ensemble.name,
+        plan.ensemble.len(),
         policy.max_batch,
         policy.max_wait
     );
@@ -276,10 +340,15 @@ fn serve(args: &Args) -> Result<(), String> {
             if backend == "pjrt" {
                 let rt = qwyc::runtime::Runtime::open(Path::new(&artifacts_dir))
                     .expect("open artifacts (run `make artifacts`)");
-                return Box::new(PjrtEngine::new(rt, &artifact, &ens, &fc).expect("pjrt engine"));
+                return Box::new(
+                    PjrtEngine::new(rt, &artifact, &plan.ensemble, &plan.fc)
+                        .expect("pjrt engine"),
+                );
             }
             let _ = (&backend, &artifact, &artifacts_dir);
-            Box::new(NativeEngine::new(ens, fc, d))
+            // The worker thread owns the CompiledPlan: validated and
+            // pre-permuted once here, swept for the server's lifetime.
+            Box::new(NativeEngine::from_plan(plan.compile().expect("compile plan")))
         },
         policy,
     )
@@ -368,27 +437,3 @@ fn experiment(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-fn feature_count(ens: &Ensemble) -> Result<usize, String> {
-    // Infer D from the models (max feature index + 1).
-    let mut d = 0usize;
-    for m in &ens.models {
-        match m {
-            qwyc::ensemble::BaseModel::Lattice(l) => {
-                for &f in &l.features {
-                    d = d.max(f + 1);
-                }
-            }
-            qwyc::ensemble::BaseModel::Tree(t) => {
-                for n in &t.nodes {
-                    if !n.is_leaf() {
-                        d = d.max(n.feature as usize + 1);
-                    }
-                }
-            }
-        }
-    }
-    if d == 0 {
-        return Err("cannot infer feature count from ensemble".into());
-    }
-    Ok(d)
-}

@@ -1,0 +1,276 @@
+//! The serving-ready form of a [`QwycPlan`](super::QwycPlan).
+//!
+//! `compile()` pays every per-load cost exactly once: base models are
+//! cloned into π order (position r holds the model the sweep evaluates
+//! r-th — no indirection through `order[r]` on the hot path), trees get
+//! their [`TreeSoa`] banks built per position, the prefix-cost table
+//! cum[r] = Σ_{q<r} c_{π(q)} is tabulated, and the structural invariants
+//! (classifier, trees, feature-count agreement) are verified. Everything
+//! downstream — `NativeEngine`, `FilterPipeline`, the CLI — holds a
+//! `CompiledPlan` and calls the shared sweep core without re-checking.
+
+use super::QwycPlan;
+use crate::ensemble::BaseModel;
+use crate::gbt::tree::TreeSoa;
+use crate::qwyc::sweep::{sweep_batched, SweepOutcome, SweepParams};
+use crate::qwyc::SingleResult;
+use crate::util::pool::Pool;
+
+/// A validated, position-major, ready-to-sweep plan.
+#[derive(Clone, Debug)]
+pub struct CompiledPlan {
+    /// Base models in evaluation order: `models[r]` runs at position r.
+    models: Vec<BaseModel>,
+    /// Per-position SoA banks (None for lattices), aligned with `models`.
+    soa: Vec<Option<TreeSoa>>,
+    eps_pos: Vec<f32>,
+    eps_neg: Vec<f32>,
+    bias: f32,
+    beta: f32,
+    /// π — position r evaluates original model `order[r]` (provenance).
+    order: Vec<usize>,
+    /// `prefix_cost[r]` = Σ_{q<r} c_{π(q)}; `prefix_cost[T]` is the full
+    /// evaluation cost.
+    prefix_cost: Vec<f64>,
+    /// Serving feature width (declared by the plan, or inferred).
+    n_features: usize,
+    /// Largest feature index any base model reads, plus one — the floor
+    /// every input row stride must meet.
+    min_features: usize,
+}
+
+impl CompiledPlan {
+    pub(super) fn from_plan(plan: &QwycPlan) -> Result<CompiledPlan, String> {
+        plan.validate()?;
+        let t = plan.fc.t();
+        let mut models = Vec::with_capacity(t);
+        let mut prefix_cost = vec![0f64; t + 1];
+        for (r, &m) in plan.fc.order.iter().enumerate() {
+            let model = &plan.ensemble.models[m];
+            if let BaseModel::Tree(tr) = model {
+                tr.validate()?;
+            }
+            models.push(model.clone());
+            prefix_cost[r + 1] = prefix_cost[r] + plan.ensemble.costs[m] as f64;
+        }
+        let soa: Vec<Option<TreeSoa>> = models
+            .iter()
+            .map(|m| match m {
+                BaseModel::Tree(tr) => Some(tr.to_soa()),
+                BaseModel::Lattice(_) => None,
+            })
+            .collect();
+        let min_features = plan.ensemble.feature_count();
+        if min_features == 0 && t > 0 {
+            return Err(format!(
+                "plan '{}': cannot infer a feature count from the ensemble",
+                plan.meta.name
+            ));
+        }
+        let n_features = if plan.meta.n_features > 0 {
+            if plan.meta.n_features < min_features {
+                return Err(format!(
+                    "plan '{}': declared n_features {} < {} required by the base models",
+                    plan.meta.name, plan.meta.n_features, min_features
+                ));
+            }
+            plan.meta.n_features
+        } else {
+            min_features
+        };
+        Ok(CompiledPlan {
+            models,
+            soa,
+            eps_pos: plan.fc.eps_pos.clone(),
+            eps_neg: plan.fc.eps_neg.clone(),
+            bias: plan.fc.bias,
+            beta: plan.fc.beta,
+            order: plan.fc.order.clone(),
+            prefix_cost,
+            n_features,
+            min_features,
+        })
+    }
+
+    // ---- geometry ------------------------------------------------------
+
+    pub fn t(&self) -> usize {
+        self.models.len()
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.n_features
+    }
+
+    /// Minimum row stride any input must provide.
+    pub fn min_features(&self) -> usize {
+        self.min_features
+    }
+
+    pub fn order(&self) -> &[usize] {
+        &self.order
+    }
+
+    pub fn bias(&self) -> f32 {
+        self.bias
+    }
+
+    pub fn beta(&self) -> f32 {
+        self.beta
+    }
+
+    pub fn eps_pos(&self) -> &[f32] {
+        &self.eps_pos
+    }
+
+    pub fn eps_neg(&self) -> &[f32] {
+        &self.eps_neg
+    }
+
+    /// Cost of evaluating the first `r` positions of π.
+    pub fn prefix_cost(&self, r: usize) -> f64 {
+        self.prefix_cost[r]
+    }
+
+    /// Cost of full evaluation, Σ c over all positions.
+    pub fn total_cost(&self) -> f64 {
+        self.prefix_cost[self.t()]
+    }
+
+    /// Threshold view for the shared sweep core.
+    pub fn sweep_params(&self) -> SweepParams<'_> {
+        SweepParams {
+            eps_pos: &self.eps_pos,
+            eps_neg: &self.eps_neg,
+            bias: self.bias,
+            beta: self.beta,
+        }
+    }
+
+    // ---- evaluation ----------------------------------------------------
+
+    /// Fill `out[j]` with position r's score for the gathered rows
+    /// `rows[j]` of the row-major block `x` (stride `d`). Trees go
+    /// through their per-position SoA bank; lattices walk with the
+    /// caller's scratch so a block sweep allocates it once.
+    pub fn score_position(
+        &self,
+        r: usize,
+        x: &[f32],
+        d: usize,
+        rows: &[u32],
+        out: &mut [f32],
+        lat_scratch: &mut Vec<f32>,
+    ) {
+        match (&self.soa[r], &self.models[r]) {
+            (Some(s), _) => s.eval_indexed(x, d, rows, out),
+            (None, BaseModel::Lattice(l)) => {
+                if lat_scratch.len() < l.n_vertices() {
+                    lat_scratch.resize(l.n_vertices(), 0.0);
+                }
+                for (slot, &i) in out.iter_mut().zip(rows.iter()) {
+                    let row = &x[i as usize * d..(i as usize + 1) * d];
+                    *slot = l.eval_with_scratch(row, lat_scratch);
+                }
+            }
+            (None, BaseModel::Tree(_)) => unreachable!("trees always have a SoA mirror"),
+        }
+    }
+
+    /// Run the shared early-exit sweep over `n` row-major examples of
+    /// stride `d` (must cover every feature the models read), in blocks
+    /// of `block` fanned across `pool`. Outcomes are in example order and
+    /// bit-identical at every thread count.
+    pub fn sweep_features(
+        &self,
+        x: &[f32],
+        n: usize,
+        d: usize,
+        block: usize,
+        pool: &Pool,
+    ) -> Vec<SweepOutcome> {
+        assert!(
+            d >= self.min_features,
+            "row stride {d} < {} required by the base models",
+            self.min_features
+        );
+        assert_eq!(x.len(), n * d, "feature buffer is not n × d");
+        let params = self.sweep_params();
+        sweep_batched(&params, n, block, pool, |lo, hi| {
+            let xblk = &x[lo * d..hi * d];
+            let mut lat_scratch: Vec<f32> = Vec::new();
+            move |r: usize, rows: &[u32], out: &mut [f32]| {
+                self.score_position(r, xblk, d, rows, out, &mut lat_scratch)
+            }
+        })
+    }
+
+    /// Early-exit evaluation of one example — the compiled twin of
+    /// [`FastClassifier::eval_single`](crate::qwyc::FastClassifier::eval_single),
+    /// walking the pre-permuted models without order indirection.
+    pub fn eval_single(&self, x: &[f32]) -> SingleResult {
+        let mut g = self.bias;
+        for (r, m) in self.models.iter().enumerate() {
+            g += m.eval(x);
+            if g > self.eps_pos[r] {
+                return SingleResult {
+                    positive: true,
+                    score: g,
+                    models_evaluated: r + 1,
+                    early: true,
+                };
+            }
+            if g < self.eps_neg[r] {
+                return SingleResult {
+                    positive: false,
+                    score: g,
+                    models_evaluated: r + 1,
+                    early: true,
+                };
+            }
+        }
+        let t = self.t();
+        SingleResult { positive: g >= self.beta, score: g, models_evaluated: t, early: false }
+    }
+
+    /// Full-ensemble score in π order (for survivor cross-checks).
+    pub fn eval_full(&self, x: &[f32]) -> f32 {
+        self.bias + self.models.iter().map(|m| m.eval(x)).sum::<f32>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, Which};
+    use crate::gbt::{train, GbtParams};
+    use crate::plan::QwycPlan;
+    use crate::qwyc::{optimize_order_with_pool, QwycConfig};
+
+    #[test]
+    fn sweep_features_matches_eval_single_on_trees() {
+        let (tr, te) = generate(Which::AdultLike, 71, 0.02);
+        let (ens, _) = train(&tr, &GbtParams { n_trees: 18, max_depth: 3, ..Default::default() });
+        let sm = ens.score_matrix_par(&tr, &Pool::new(1));
+        let fc = optimize_order_with_pool(
+            &sm,
+            &QwycConfig { alpha: 0.01, ..Default::default() },
+            &Pool::new(1),
+        );
+        let mut plan = QwycPlan::bundle(ens, fc, "cp-test", 0.01).unwrap();
+        plan.meta.n_features = te.d;
+        let cp = plan.compile().unwrap();
+        let n = te.n.min(400);
+        for threads in [1, 4] {
+            let outs = cp.sweep_features(&te.x[..n * te.d], n, te.d, 64, &Pool::new(threads));
+            assert_eq!(outs.len(), n);
+            for (i, o) in outs.iter().enumerate() {
+                let want = cp.eval_single(te.row(i));
+                assert_eq!(o.positive, want.positive, "example {i}");
+                assert_eq!(o.stop as usize, want.models_evaluated, "example {i}");
+                assert_eq!(o.early, want.early, "example {i}");
+                assert_eq!(o.score.to_bits(), want.score.to_bits(), "example {i}");
+            }
+        }
+    }
+}

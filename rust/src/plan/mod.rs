@@ -1,0 +1,309 @@
+//! The deployable QWYC artifact.
+//!
+//! The paper's deliverable is a *deployed* fast classifier: a fixed
+//! evaluation order π plus per-position thresholds ε± that a serving
+//! system runs position-major with early exit. [`QwycPlan`] bundles
+//! everything that deployment needs — the ensemble, π, ε±, bias/β, the
+//! per-model costs (carried by the ensemble), the α the thresholds were
+//! optimized for, and provenance — into one versioned JSON artifact
+//! (schema [`PLAN_SCHEMA`] = `qwyc-plan-v1`), replacing the old loose
+//! `model.json` + `fast.json` pair that every consumer re-validated and
+//! re-packed on load.
+//!
+//! [`QwycPlan::compile`] turns the artifact into a [`CompiledPlan`]: base
+//! models pre-permuted into evaluation order, trees pre-packed into
+//! per-position `TreeSoa` banks, the prefix-cost table precomputed, and
+//! every invariant (classifier structure, tree structure, feature-count
+//! agreement) checked once — so the sweep core and the serving worker
+//! never validate per call. `simulate`, `NativeEngine`, and
+//! `FilterPipeline` all consume the same artifact through the same
+//! sweep (`qwyc::sweep`).
+
+mod compiled;
+
+pub use compiled::CompiledPlan;
+
+use crate::ensemble::Ensemble;
+use crate::qwyc::FastClassifier;
+use crate::util::json::Json;
+
+/// Schema tag written into (and required from) every plan JSON document.
+pub const PLAN_SCHEMA: &str = "qwyc-plan-v1";
+
+/// Provenance and deployment metadata carried by a plan.
+#[derive(Clone, Debug)]
+pub struct PlanMeta {
+    /// Human-readable plan name (defaults to the ensemble name).
+    pub name: String,
+    /// The α the thresholds were optimized for (provenance; 0 = unrecorded).
+    pub alpha: f64,
+    /// Filter-and-score artifact (all ε⁺ ≡ +∞)? Derived from the
+    /// classifier at construction — recorded so operators can tell a
+    /// filter plan from a full early-exit plan without reading ε.
+    pub neg_only: bool,
+    /// Free-form provenance (dataset, pipeline id, commit, ...).
+    pub source: String,
+    /// Tool that produced the artifact.
+    pub created_by: String,
+    /// Declared serving feature width; 0 = infer from the ensemble at
+    /// compile time. When set it must cover every feature index any base
+    /// model reads (checked by [`QwycPlan::compile`]).
+    pub n_features: usize,
+}
+
+impl PlanMeta {
+    fn named(name: &str, alpha: f64) -> PlanMeta {
+        PlanMeta {
+            name: name.to_string(),
+            alpha,
+            neg_only: false,
+            source: String::new(),
+            created_by: concat!("qwyc ", env!("CARGO_PKG_VERSION")).to_string(),
+            n_features: 0,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("alpha", Json::Num(self.alpha)),
+            ("neg_only", Json::Bool(self.neg_only)),
+            ("source", Json::str(&self.source)),
+            ("created_by", Json::str(&self.created_by)),
+            ("n_features", Json::Num(self.n_features as f64)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<PlanMeta, String> {
+        Ok(PlanMeta {
+            name: v.req("name")?.as_str()?.to_string(),
+            alpha: v.req("alpha")?.as_f64()?,
+            neg_only: v.req("neg_only")?.as_bool()?,
+            source: v.req("source")?.as_str()?.to_string(),
+            created_by: v.req("created_by")?.as_str()?.to_string(),
+            n_features: v.req("n_features")?.as_usize()?,
+        })
+    }
+}
+
+/// Ensemble + optimized fast classifier + metadata: the unit that ships.
+#[derive(Clone, Debug)]
+pub struct QwycPlan {
+    pub ensemble: Ensemble,
+    pub fc: FastClassifier,
+    pub meta: PlanMeta,
+}
+
+impl QwycPlan {
+    /// Bundle an ensemble and its optimized classifier into a plan,
+    /// validating the pair once. `alpha` is recorded as provenance.
+    pub fn new(
+        ensemble: Ensemble,
+        fc: FastClassifier,
+        mut meta: PlanMeta,
+    ) -> Result<QwycPlan, String> {
+        meta.neg_only = fc.eps_pos.iter().all(|&e| e == f32::INFINITY);
+        let plan = QwycPlan { ensemble, fc, meta };
+        plan.validate()?;
+        Ok(plan)
+    }
+
+    /// Convenience constructor with default provenance.
+    pub fn bundle(
+        ensemble: Ensemble,
+        fc: FastClassifier,
+        name: &str,
+        alpha: f64,
+    ) -> Result<QwycPlan, String> {
+        QwycPlan::new(ensemble, fc, PlanMeta::named(name, alpha))
+    }
+
+    /// Structural validation shared by construction and deserialization:
+    /// classifier invariants, size agreement, and bias/β consistency
+    /// between the ensemble and the classifier (they are two views of
+    /// the same deployed model — a mismatch is a packaging error).
+    pub fn validate(&self) -> Result<(), String> {
+        self.fc.validate()?;
+        if self.ensemble.len() != self.fc.t() {
+            return Err(format!(
+                "plan '{}': ensemble has {} models but classifier covers {}",
+                self.meta.name,
+                self.ensemble.len(),
+                self.fc.t()
+            ));
+        }
+        if self.fc.bias != self.ensemble.bias || self.fc.beta != self.ensemble.beta {
+            return Err(format!(
+                "plan '{}': classifier bias/beta ({}, {}) disagree with ensemble ({}, {})",
+                self.meta.name, self.fc.bias, self.fc.beta, self.ensemble.bias, self.ensemble.beta
+            ));
+        }
+        // meta.neg_only is derived metadata; a document asserting the
+        // wrong value (hand-edited artifact) must not load.
+        let neg_only = self.fc.eps_pos.iter().all(|&e| e == f32::INFINITY);
+        if self.meta.neg_only != neg_only {
+            return Err(format!(
+                "plan '{}': meta.neg_only={} but the classifier's thresholds say {}",
+                self.meta.name, self.meta.neg_only, neg_only
+            ));
+        }
+        Ok(())
+    }
+
+    /// Compile into the serving-ready form: models pre-permuted into π
+    /// order, SoA banks built, prefix costs tabulated, feature counts
+    /// agreed — all checks run here, once, instead of per call.
+    pub fn compile(&self) -> Result<CompiledPlan, String> {
+        CompiledPlan::from_plan(self)
+    }
+
+    // ---- serialization (qwyc-plan-v1) ---------------------------------
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::str(PLAN_SCHEMA)),
+            ("meta", self.meta.to_json()),
+            ("ensemble", self.ensemble.to_json()),
+            ("fast", self.fc.to_json()),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<QwycPlan, String> {
+        let schema = v.req("schema")?.as_str()?;
+        if schema != PLAN_SCHEMA {
+            return Err(format!("expected schema '{PLAN_SCHEMA}', got '{schema}'"));
+        }
+        let plan = QwycPlan {
+            ensemble: Ensemble::from_json(v.req("ensemble")?)?,
+            fc: FastClassifier::from_json(v.req("fast")?)?,
+            meta: PlanMeta::from_json(v.req("meta")?)?,
+        };
+        plan.validate()?;
+        Ok(plan)
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
+        crate::util::json::write_file(path, &self.to_json())
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<QwycPlan, String> {
+        QwycPlan::from_json(&crate::util::json::read_file(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ensemble::BaseModel;
+    use crate::lattice::model::Lattice;
+
+    fn toy_plan() -> QwycPlan {
+        // Two 1-feature lattices (f0 = x0, f1 = 1 - x1), neg-only ε.
+        let l0 = Lattice::from_params(vec![0], vec![0.0, 1.0]);
+        let l1 = Lattice::from_params(vec![1], vec![1.0, 0.0]);
+        let ens = Ensemble::new(
+            "toy",
+            vec![BaseModel::Lattice(l0), BaseModel::Lattice(l1)],
+            0.25,
+            1.0,
+        );
+        let fc = FastClassifier {
+            order: vec![1, 0],
+            eps_pos: vec![f32::INFINITY, f32::INFINITY],
+            eps_neg: vec![-0.5, f32::NEG_INFINITY],
+            bias: 0.25,
+            beta: 1.0,
+        };
+        QwycPlan::bundle(ens, fc, "toy-plan", 0.01).unwrap()
+    }
+
+    #[test]
+    fn roundtrips_through_schema_v1() {
+        let plan = toy_plan();
+        let j = plan.to_json();
+        assert_eq!(j.req("schema").unwrap().as_str().unwrap(), PLAN_SCHEMA);
+        let back = QwycPlan::from_json(&j).unwrap();
+        assert_eq!(back.fc.order, plan.fc.order);
+        assert_eq!(back.meta.name, "toy-plan");
+        assert_eq!(back.meta.alpha, 0.01);
+        assert!(back.meta.neg_only, "all eps_pos are +inf");
+        assert_eq!(back.ensemble.len(), 2);
+        // Threshold bits survive the trip (±inf encode as strings).
+        let bits = |xs: &[f32]| xs.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&back.fc.eps_neg), bits(&plan.fc.eps_neg));
+    }
+
+    #[test]
+    fn rejects_wrong_schema_and_mismatched_parts() {
+        let plan = toy_plan();
+        let mut j = plan.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("schema".into(), Json::str("qwyc-plan-v0"));
+        }
+        assert!(QwycPlan::from_json(&j).is_err());
+
+        // Classifier covering a different T than the ensemble.
+        let mut fc = plan.fc.clone();
+        fc.order = vec![0];
+        fc.eps_pos = vec![f32::INFINITY];
+        fc.eps_neg = vec![f32::NEG_INFINITY];
+        assert!(QwycPlan::bundle(plan.ensemble.clone(), fc, "bad", 0.0).is_err());
+
+        // bias drift between the two views.
+        let mut fc2 = plan.fc.clone();
+        fc2.bias = 0.5;
+        assert!(QwycPlan::bundle(plan.ensemble.clone(), fc2, "bad", 0.0).is_err());
+
+        // A hand-edited artifact lying about neg_only must not load.
+        let mut j2 = toy_plan().to_json();
+        if let Json::Obj(m) = &mut j2 {
+            if let Some(Json::Obj(meta)) = m.get_mut("meta") {
+                meta.insert("neg_only".into(), Json::Bool(false));
+            }
+        }
+        assert!(QwycPlan::from_json(&j2).is_err());
+    }
+
+    #[test]
+    fn compile_checks_feature_agreement() {
+        let plan = toy_plan();
+        let cp = plan.compile().unwrap();
+        assert_eq!(cp.t(), 2);
+        assert_eq!(cp.n_features(), 2, "lattices read features 0 and 1");
+        assert_eq!(cp.order(), &[1, 0]);
+        // Declared width below what the models read must fail compile.
+        let mut narrow = plan.clone();
+        narrow.meta.n_features = 1;
+        assert!(narrow.compile().is_err());
+        // Declared width above is allowed (extra features are ignored).
+        let mut wide = plan;
+        wide.meta.n_features = 7;
+        assert_eq!(wide.compile().unwrap().n_features(), 7);
+    }
+
+    #[test]
+    fn compiled_prefix_costs_follow_pi() {
+        let mut plan = toy_plan();
+        plan.ensemble.costs = vec![3.0, 5.0];
+        let cp = plan.compile().unwrap();
+        // π = [1, 0] ⇒ prefix costs 0, c1, c1+c0.
+        assert_eq!(cp.prefix_cost(0), 0.0);
+        assert_eq!(cp.prefix_cost(1), 5.0);
+        assert_eq!(cp.prefix_cost(2), 8.0);
+        assert_eq!(cp.total_cost(), 8.0);
+    }
+
+    #[test]
+    fn compiled_eval_single_matches_classifier_path() {
+        let plan = toy_plan();
+        let cp = plan.compile().unwrap();
+        for x in [[0.1f32, 0.9], [0.9, 0.1], [0.5, 0.5], [1.0, 0.0]] {
+            let want = plan.fc.eval_single(&plan.ensemble, &x);
+            let got = cp.eval_single(&x);
+            assert_eq!(got.positive, want.positive);
+            assert_eq!(got.models_evaluated, want.models_evaluated);
+            assert_eq!(got.early, want.early);
+            assert_eq!(got.score.to_bits(), want.score.to_bits());
+        }
+    }
+}

@@ -4,17 +4,16 @@
 //! from the full ensemble, accuracy against labels, and the per-example
 //! stop-position histogram (Figures 5-6).
 //!
-//! The sweep is position-major with an active list (the same compaction
-//! pattern the serving scheduler uses), so each base model's score column
-//! is read contiguously once.
-//!
-//! Examples are independent, so the sweep runs over cache-sized example
-//! blocks fanned across the [`Pool`]: each block keeps its own active
-//! list and reads a contiguous window of every score column. Per-example
-//! outcomes (decision, stop position, early flag) are merged in block
-//! order and the scalar aggregates are reduced in a deterministic serial
-//! pass afterwards — `simulate` is bit-identical at every thread count.
+//! The sweep itself is the crate-wide position-major active-list core in
+//! [`crate::qwyc::sweep`] — simulation's only contribution is the scorer
+//! (a contiguous window of each score-matrix column) and the aggregate
+//! reduction. Examples are independent, so the sweep runs over
+//! cache-sized example blocks fanned across the [`Pool`]; per-example
+//! outcomes come back in example order and the scalar aggregates are
+//! reduced in a deterministic serial pass afterwards — `simulate` is
+//! bit-identical at every thread count.
 
+use super::sweep::{sweep_batched, SweepParams};
 use super::FastClassifier;
 use crate::ensemble::ScoreMatrix;
 use crate::util::pool::Pool;
@@ -71,61 +70,63 @@ impl SimResult {
     }
 }
 
-/// Per-block sweep output, merged in block order.
-struct BlockSim {
-    decisions: Vec<bool>,
-    stops: Vec<u32>,
-    early: Vec<bool>,
-}
-
 /// Simulate the fast classifier on every example of the score matrix with
 /// the pool implied by `QWYC_THREADS` (or all available cores).
 pub fn simulate(fc: &FastClassifier, sm: &ScoreMatrix) -> SimResult {
     simulate_with_pool(fc, sm, &Pool::from_env())
 }
 
-/// Simulate the fast classifier across an explicit pool.
+/// Simulate the fast classifier across an explicit pool. The scorer hands
+/// the shared sweep a contiguous window of each score-matrix column, so
+/// the arithmetic is identical to the serving path (per-example scores
+/// accumulate in π order as f32).
 pub fn simulate_with_pool(fc: &FastClassifier, sm: &ScoreMatrix, pool: &Pool) -> SimResult {
     let n = sm.n;
     let t = fc.order.len();
     assert_eq!(t, sm.t, "classifier/matrix T mismatch");
+    // The sweep takes bias/β from the classifier; the pre-refactor loop
+    // took β from the matrix. They are two views of the same ensemble —
+    // pin that so a drifted pair cannot silently change survivor
+    // decisions relative to `pct_diff`'s sm-side reference.
+    assert_eq!(fc.bias, sm.bias, "classifier/matrix bias mismatch");
+    assert_eq!(fc.beta, sm.beta, "classifier/matrix beta mismatch");
 
-    let blocks = pool.par_map_indexed(n.div_ceil(SIM_BLOCK), 1, |b| {
-        let lo = b * SIM_BLOCK;
-        let hi = ((b + 1) * SIM_BLOCK).min(n);
-        simulate_block(fc, sm, lo, hi)
+    let params = SweepParams::of_classifier(fc);
+    let outcomes = sweep_batched(&params, n, SIM_BLOCK, pool, |lo, hi| {
+        move |r: usize, active: &[u32], scores: &mut [f32]| {
+            let col = &sm.col(fc.order[r])[lo..hi];
+            for (slot, &i) in scores.iter_mut().zip(active.iter()) {
+                *slot = col[i as usize];
+            }
+        }
     });
 
-    let mut decisions = Vec::with_capacity(n);
-    let mut stops = Vec::with_capacity(n);
-    let mut early = Vec::with_capacity(n);
-    for blk in blocks {
-        decisions.extend_from_slice(&blk.decisions);
-        stops.extend_from_slice(&blk.stops);
-        early.extend_from_slice(&blk.early);
-    }
-
-    // Aggregates reduce serially over the merged per-example outcomes so
-    // every float is added in the same order at every thread count.
-    // cum[r] = Σ_{q<r} c_{π(q)} is the cost of an exit after position r.
+    // Aggregates reduce serially over the in-order outcomes so every
+    // float is added in the same order at every thread count.
+    // cum[r] = Σ_{q<r} c_{π(q)} is the cost of an exit after position r
+    // (the same table `CompiledPlan` precomputes for the serving path).
     let mut cum = vec![0f64; t + 1];
     for r in 0..t {
         cum[r + 1] = cum[r] + sm.costs[fc.order[r]] as f64;
     }
     let total_cost = sm.total_cost();
+    let mut decisions = Vec::with_capacity(n);
+    let mut stops = Vec::with_capacity(n);
     let mut models_sum = 0f64;
     let mut cost_sum = 0f64;
     let mut n_early = 0usize;
     let mut diffs = 0usize;
-    for i in 0..n {
-        models_sum += stops[i] as f64;
-        if early[i] {
-            cost_sum += cum[stops[i] as usize];
+    for (i, o) in outcomes.iter().enumerate() {
+        decisions.push(o.positive);
+        stops.push(o.stop);
+        models_sum += o.stop as f64;
+        if o.early {
+            cost_sum += cum[o.stop as usize];
             n_early += 1;
         } else {
             cost_sum += total_cost;
         }
-        if decisions[i] != sm.full_positive(i) {
+        if o.positive != sm.full_positive(i) {
             diffs += 1;
         }
     }
@@ -138,49 +139,6 @@ pub fn simulate_with_pool(fc: &FastClassifier, sm: &ScoreMatrix, pool: &Pool) ->
         stops,
         n_early,
     }
-}
-
-/// Position-major early-exit sweep over examples [lo, hi): identical
-/// arithmetic to the serial path (per-example scores accumulate in π
-/// order as f32), restricted to one contiguous window of each column.
-fn simulate_block(fc: &FastClassifier, sm: &ScoreMatrix, lo: usize, hi: usize) -> BlockSim {
-    let nb = hi - lo;
-    let t = fc.order.len();
-    let mut g = vec![fc.bias; nb];
-    let mut decisions = vec![false; nb];
-    let mut stops = vec![t as u32; nb];
-    let mut early = vec![false; nb];
-    let mut active: Vec<u32> = (0..nb as u32).collect();
-
-    for r in 0..t {
-        let col = &sm.col(fc.order[r])[lo..hi];
-        let (ep, en) = (fc.eps_pos[r], fc.eps_neg[r]);
-        let mut w = 0usize;
-        for idx in 0..active.len() {
-            let i = active[idx] as usize;
-            let gi = g[i] + col[i];
-            g[i] = gi;
-            if gi > ep || gi < en {
-                decisions[i] = gi > ep;
-                stops[i] = (r + 1) as u32;
-                early[i] = true;
-            } else {
-                active[w] = i as u32;
-                w += 1;
-            }
-        }
-        active.truncate(w);
-        if active.is_empty() {
-            break;
-        }
-    }
-    // Survivors: full evaluation, decide by β.
-    for &i in &active {
-        let i = i as usize;
-        decisions[i] = g[i] >= sm.beta;
-        stops[i] = t as u32;
-    }
-    BlockSim { decisions, stops, early }
 }
 
 #[cfg(test)]

@@ -26,10 +26,12 @@
 pub mod evaluator;
 pub mod multiclass;
 pub mod order;
+pub mod sweep;
 pub mod thresholds;
 
 pub use evaluator::{simulate, simulate_with_pool, SimResult};
 pub use order::{optimize_order, optimize_order_with_pool};
+pub use sweep::{sweep_batched, sweep_block, SweepOutcome, SweepParams};
 pub use thresholds::optimize_thresholds_for_order;
 
 use crate::util::json::Json;
@@ -91,13 +93,21 @@ impl FastClassifier {
         self.order.len()
     }
 
-    /// Check structural invariants (order is a permutation; ε⁻ ≤ ε⁺).
+    /// Check structural invariants (order is a permutation; no NaN
+    /// thresholds; ε⁻ ≤ ε⁺; finite bias and β). Run once per load — the
+    /// sweep and serving hot paths assume these hold.
     // `!(a <= b)` is deliberate: NaN thresholds must fail validation too.
     #[allow(clippy::neg_cmp_op_on_partial_ord)]
     pub fn validate(&self) -> Result<(), String> {
         let t = self.order.len();
         if self.eps_pos.len() != t || self.eps_neg.len() != t {
             return Err("threshold vectors must have length T".into());
+        }
+        if !self.bias.is_finite() {
+            return Err(format!("bias must be finite, got {}", self.bias));
+        }
+        if !self.beta.is_finite() {
+            return Err(format!("beta must be finite, got {}", self.beta));
         }
         let mut seen = vec![false; t];
         for &m in &self.order {
@@ -107,6 +117,9 @@ impl FastClassifier {
             seen[m] = true;
         }
         for r in 0..t {
+            if self.eps_pos[r].is_nan() || self.eps_neg[r].is_nan() {
+                return Err(format!("NaN threshold at position {r}"));
+            }
             if !(self.eps_neg[r] <= self.eps_pos[r]) {
                 return Err(format!(
                     "eps_neg[{r}]={} > eps_pos[{r}]={}",
@@ -251,6 +264,53 @@ mod tests {
             beta: 0.0,
         };
         assert!(fc.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_nan_and_non_finite_scalars() {
+        let good = FastClassifier {
+            order: vec![0, 1],
+            eps_pos: vec![1.0, f32::INFINITY],
+            eps_neg: vec![-1.0, f32::NEG_INFINITY],
+            bias: 0.0,
+            beta: 0.0,
+        };
+        assert!(good.validate().is_ok());
+        let mut nan_thr = good.clone();
+        nan_thr.eps_pos[0] = f32::NAN;
+        assert!(nan_thr.validate().is_err());
+        let mut nan_neg = good.clone();
+        nan_neg.eps_neg[1] = f32::NAN;
+        assert!(nan_neg.validate().is_err());
+        let mut bad_bias = good.clone();
+        bad_bias.bias = f32::NAN;
+        assert!(bad_bias.validate().is_err());
+        let mut inf_beta = good.clone();
+        inf_beta.beta = f32::INFINITY;
+        assert!(inf_beta.validate().is_err());
+    }
+
+    #[test]
+    fn from_json_rejects_malformed_classifier() {
+        // A structurally well-formed document whose payload violates the
+        // invariants must fail at load, not at serving time (mirrors the
+        // Tree::from_json hardening).
+        let nan_bias = Json::obj(vec![
+            ("order", Json::arr_usize(&[0, 1])),
+            ("eps_pos", Json::arr_f32_inf(&[1.0, f32::INFINITY])),
+            ("eps_neg", Json::arr_f32_inf(&[-1.0, f32::NEG_INFINITY])),
+            ("bias", Json::Num(f64::NAN)),
+            ("beta", Json::Num(0.0)),
+        ]);
+        assert!(FastClassifier::from_json(&nan_bias).is_err());
+        let crossed = Json::obj(vec![
+            ("order", Json::arr_usize(&[0, 1])),
+            ("eps_pos", Json::arr_f32_inf(&[-2.0, f32::INFINITY])),
+            ("eps_neg", Json::arr_f32_inf(&[2.0, f32::NEG_INFINITY])),
+            ("bias", Json::Num(0.0)),
+            ("beta", Json::Num(0.0)),
+        ]);
+        assert!(FastClassifier::from_json(&crossed).is_err());
     }
 
     #[test]

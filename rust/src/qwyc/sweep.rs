@@ -1,0 +1,217 @@
+//! The single position-major early-exit sweep core.
+//!
+//! Every batched early-exit consumer in this crate — offline
+//! [`simulate`](crate::qwyc::simulate) over a score matrix,
+//! `NativeEngine::classify_batch` over live feature rows, and the
+//! `FilterPipeline` candidate filter — is the same loop: walk the
+//! optimized order π position by position, keep an active list of
+//! still-undecided examples, add each position's scores to the running
+//! totals g, retire examples that cross a threshold (ε⁺ checked first),
+//! and decide survivors of all T positions by `g ≥ β`. The only thing
+//! that differs between consumers is *where the per-position scores come
+//! from* — a score-matrix column, a `TreeSoa` bank, a lattice walk. This
+//! module owns the loop once; consumers supply a scorer callback.
+//!
+//! Arithmetic contract: per example, scores accumulate as f32 in π order
+//! starting from `bias` — exactly `FastClassifier::eval_single` — so any
+//! scorer whose position scores are bitwise equal to the single-example
+//! path yields bitwise-identical outcomes (asserted in
+//! rust/tests/plan_equiv.rs). Blocks are merged in index order, so the
+//! batched driver is also bit-identical at every thread count.
+
+use super::FastClassifier;
+use crate::util::pool::Pool;
+
+/// Thresholds + bias/β view the sweep needs, position-major. Borrowed
+/// from either a [`FastClassifier`] or a
+/// [`CompiledPlan`](crate::plan::CompiledPlan).
+#[derive(Clone, Copy, Debug)]
+pub struct SweepParams<'a> {
+    /// Early-positive thresholds ε_r⁺ (`+∞` ⇒ no early positive at r).
+    pub eps_pos: &'a [f32],
+    /// Early-negative thresholds ε_r⁻ (`-∞` ⇒ no early negative at r).
+    pub eps_neg: &'a [f32],
+    /// Ensemble bias folded into the running score at r = 0.
+    pub bias: f32,
+    /// Full-classifier decision threshold β.
+    pub beta: f32,
+}
+
+impl<'a> SweepParams<'a> {
+    pub fn of_classifier(fc: &'a FastClassifier) -> SweepParams<'a> {
+        SweepParams { eps_pos: &fc.eps_pos, eps_neg: &fc.eps_neg, bias: fc.bias, beta: fc.beta }
+    }
+
+    /// Number of positions T.
+    pub fn t(&self) -> usize {
+        self.eps_pos.len()
+    }
+}
+
+/// Per-example outcome of an early-exit sweep.
+#[derive(Clone, Copy, Debug)]
+pub struct SweepOutcome {
+    /// Final decision (early threshold crossing, or `g ≥ β` after T).
+    pub positive: bool,
+    /// Running score at the stop position.
+    pub score: f32,
+    /// 1-based count of positions evaluated (T for survivors).
+    pub stop: u32,
+    /// Exited before position T?
+    pub early: bool,
+}
+
+/// Run the sweep over one block of `nb` examples.
+///
+/// `score_position(r, active, out)` must fill `out[j]` with position r's
+/// score for the example whose block-local index is `active[j]`
+/// (`out.len() == active.len()`). It is called once per position in π
+/// order, with `active` shrinking as examples retire, and never called
+/// again once the active list empties.
+pub fn sweep_block<S>(
+    params: &SweepParams<'_>,
+    nb: usize,
+    mut score_position: S,
+) -> Vec<SweepOutcome>
+where
+    S: FnMut(usize, &[u32], &mut [f32]),
+{
+    let t = params.t();
+    debug_assert_eq!(params.eps_neg.len(), t);
+    let mut out = vec![
+        SweepOutcome { positive: false, score: 0.0, stop: t as u32, early: false };
+        nb
+    ];
+    let mut g = vec![params.bias; nb];
+    let mut scores = vec![0f32; nb];
+    let mut active: Vec<u32> = (0..nb as u32).collect();
+
+    for r in 0..t {
+        let scores = &mut scores[..active.len()];
+        score_position(r, &active, scores);
+        let (ep, en) = (params.eps_pos[r], params.eps_neg[r]);
+        let mut w = 0usize;
+        for j in 0..active.len() {
+            let i = active[j] as usize;
+            let gi = g[i] + scores[j];
+            g[i] = gi;
+            if gi > ep || gi < en {
+                let stop = (r + 1) as u32;
+                out[i] = SweepOutcome { positive: gi > ep, score: gi, stop, early: true };
+            } else {
+                active[w] = i as u32;
+                w += 1;
+            }
+        }
+        active.truncate(w);
+        if active.is_empty() {
+            break;
+        }
+    }
+    // Survivors of every position: full score known, decide by β.
+    for &i in &active {
+        let i = i as usize;
+        out[i] = SweepOutcome {
+            positive: g[i] >= params.beta,
+            score: g[i],
+            stop: t as u32,
+            early: false,
+        };
+    }
+    out
+}
+
+/// Fan [`sweep_block`] over `n` examples in blocks of `block` across the
+/// pool. `make_scorer(lo, hi)` builds the scorer for examples [lo, hi)
+/// — the scorer's `active` indices are block-local (relative to `lo`).
+/// Outcomes come back in example order, so results are bit-identical at
+/// every thread count.
+pub fn sweep_batched<S, F>(
+    params: &SweepParams<'_>,
+    n: usize,
+    block: usize,
+    pool: &Pool,
+    make_scorer: F,
+) -> Vec<SweepOutcome>
+where
+    F: Fn(usize, usize) -> S + Sync,
+    S: FnMut(usize, &[u32], &mut [f32]),
+{
+    let block = block.max(1);
+    let blocks = pool.par_map_indexed(n.div_ceil(block), 1, |b| {
+        let lo = b * block;
+        let hi = ((b + 1) * block).min(n);
+        sweep_block(params, hi - lo, make_scorer(lo, hi))
+    });
+    blocks.concat()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// 2 positions over 4 examples; position scores indexed [pos][example].
+    const COLS: [[f32; 4]; 2] = [[2.0, -2.0, 0.1, -0.1], [1.0, -1.0, 1.0, -1.0]];
+
+    fn scorer(lo: usize) -> impl FnMut(usize, &[u32], &mut [f32]) {
+        move |r: usize, active: &[u32], out: &mut [f32]| {
+            for (slot, &i) in out.iter_mut().zip(active.iter()) {
+                *slot = COLS[r][lo + i as usize];
+            }
+        }
+    }
+
+    #[test]
+    fn thresholds_retire_examples_and_beta_decides_survivors() {
+        let params = SweepParams {
+            eps_pos: &[1.5, f32::INFINITY],
+            eps_neg: &[-1.5, f32::NEG_INFINITY],
+            bias: 0.0,
+            beta: 0.0,
+        };
+        let out = sweep_block(&params, 4, scorer(0));
+        // Examples 0/1 exit at position 1 (|2| > 1.5); 2/3 survive to β.
+        assert_eq!(out[0].stop, 1);
+        assert!(out[0].positive && out[0].early);
+        assert_eq!(out[1].stop, 1);
+        assert!(!out[1].positive && out[1].early);
+        assert_eq!(out[2].stop, 2);
+        assert!(out[2].positive && !out[2].early);
+        assert!((out[2].score - 1.1).abs() < 1e-6);
+        assert_eq!(out[3].stop, 2);
+        assert!(!out[3].positive && !out[3].early);
+    }
+
+    #[test]
+    fn batched_matches_single_block_at_any_thread_count() {
+        let params = SweepParams {
+            eps_pos: &[1.5, f32::INFINITY],
+            eps_neg: &[-1.5, f32::NEG_INFINITY],
+            bias: 0.25,
+            beta: 0.0,
+        };
+        let whole = sweep_block(&params, 4, scorer(0));
+        for threads in [1, 3] {
+            let blocked = sweep_batched(&params, 4, 1, &Pool::new(threads), |lo, _hi| scorer(lo));
+            assert_eq!(blocked.len(), 4);
+            for (a, b) in whole.iter().zip(blocked.iter()) {
+                assert_eq!(a.positive, b.positive);
+                assert_eq!(a.stop, b.stop);
+                assert_eq!(a.early, b.early);
+                assert_eq!(a.score.to_bits(), b.score.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn zero_positions_and_zero_examples() {
+        let params =
+            SweepParams { eps_pos: &[], eps_neg: &[], bias: 0.5, beta: 0.0 };
+        let out = sweep_block(&params, 2, |_, _, _| unreachable!("no positions"));
+        assert!(out.iter().all(|o| o.positive && !o.early && o.stop == 0));
+        let none = sweep_batched(&params, 0, 8, &Pool::new(2), |_, _| {
+            |_: usize, _: &[u32], _: &mut [f32]| {}
+        });
+        assert!(none.is_empty());
+    }
+}

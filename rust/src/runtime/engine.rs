@@ -3,13 +3,14 @@
 //!
 //! Two interchangeable backends:
 //!
-//! - [`NativeEngine`]: pure-rust early-exit evaluation. Batches are
+//! - [`NativeEngine`]: pure-rust early-exit evaluation over a
+//!   [`CompiledPlan`] — models pre-permuted into π order with their SoA
+//!   banks and invariants checked once at compile time. Batches are
 //!   split into cache-sized blocks fanned across the `QWYC_THREADS`
-//!   pool; each block walks the optimized order position-major with an
-//!   active list, scoring tree models through the SoA batch kernel
-//!   (`gbt::tree::TreeSoa`). Outcomes are identical to per-example
+//!   pool; each block runs the crate-wide sweep core
+//!   (`qwyc::sweep`). Outcomes are identical to per-example
 //!   `FastClassifier::eval_single` (asserted in
-//!   rust/tests/parallel_equiv.rs).
+//!   rust/tests/parallel_equiv.rs and rust/tests/plan_equiv.rs).
 //! - `PjrtEngine` (behind the `pjrt` feature): drives the AOT
 //!   `qwyc_stage` artifact — the batch walks the optimized order in
 //!   stages of K base models; after each PJRT call decided examples are
@@ -19,8 +20,11 @@
 
 #[cfg(feature = "pjrt")]
 use super::Runtime;
-use crate::ensemble::{BaseModel, Ensemble};
-use crate::gbt::tree::TreeSoa;
+#[cfg(feature = "pjrt")]
+use crate::ensemble::BaseModel;
+use crate::ensemble::Ensemble;
+use crate::plan::{CompiledPlan, QwycPlan};
+use crate::qwyc::sweep::SweepOutcome;
 use crate::qwyc::{FastClassifier, SingleResult};
 use crate::util::pool::Pool;
 
@@ -28,7 +32,7 @@ use crate::util::pool::Pool;
 /// feature rows and running scores stay cache-resident through the whole
 /// position sweep, large enough to fill the SoA kernel's lanes as the
 /// active set shrinks.
-const ENGINE_BLOCK: usize = 256;
+pub const ENGINE_BLOCK: usize = 256;
 
 /// Classification outcome for one request.
 #[derive(Clone, Copy, Debug)]
@@ -50,6 +54,12 @@ impl From<SingleResult> for Outcome {
     }
 }
 
+impl From<SweepOutcome> for Outcome {
+    fn from(o: SweepOutcome) -> Outcome {
+        Outcome { positive: o.positive, score: o.score, models_evaluated: o.stop, early: o.early }
+    }
+}
+
 /// Engine abstraction used by the coordinator. Engines are constructed
 /// inside the worker thread that owns them (see `Server::start`'s factory
 /// parameter) because PJRT handles are not `Send`.
@@ -64,107 +74,47 @@ pub trait Engine {
 
 // ---------------------------------------------------------------- native
 
-/// Pure-rust early-exit evaluation with blocked batch scoring.
+/// Pure-rust early-exit evaluation: a [`CompiledPlan`] plus the worker
+/// pool that fans its blocked sweep.
 pub struct NativeEngine {
-    pub ensemble: Ensemble,
-    pub fc: FastClassifier,
-    n_features: usize,
-    /// SoA mirrors of tree base models, index-aligned with
-    /// `ensemble.models` (None for lattices). Built once at construction
-    /// and shared read-only by every block sweep.
-    soa: Vec<Option<TreeSoa>>,
+    plan: CompiledPlan,
     pool: Pool,
 }
 
 impl NativeEngine {
-    pub fn new(ensemble: Ensemble, fc: FastClassifier, n_features: usize) -> NativeEngine {
-        assert_eq!(ensemble.len(), fc.t());
-        let soa = ensemble.soa_mirrors();
-        NativeEngine { ensemble, fc, n_features, soa, pool: Pool::from_env() }
+    /// Serve a compiled plan with the pool implied by `QWYC_THREADS`.
+    pub fn from_plan(plan: CompiledPlan) -> NativeEngine {
+        NativeEngine::from_plan_with_pool(plan, Pool::from_env())
     }
 
-    /// Early-exit sweep over one block of examples; arithmetic matches
-    /// `FastClassifier::eval_single` per example (scores accumulate in π
-    /// order as f32, thresholds checked positive-first).
-    fn eval_block(&self, x: &[f32], nb: usize) -> Vec<Outcome> {
-        let d = self.n_features;
-        let t = self.fc.t();
-        let mut out = vec![
-            Outcome { positive: false, score: 0.0, models_evaluated: 0, early: false };
-            nb
-        ];
-        let mut g = vec![self.fc.bias; nb];
-        let mut active: Vec<u32> = (0..nb as u32).collect();
-        let mut scores = vec![0f32; nb];
-        let mut lat_scratch: Vec<f32> = Vec::new();
+    pub fn from_plan_with_pool(plan: CompiledPlan, pool: Pool) -> NativeEngine {
+        NativeEngine { plan, pool }
+    }
 
-        for r in 0..t {
-            let m = self.fc.order[r];
-            let scores = &mut scores[..active.len()];
-            match (&self.soa[m], &self.ensemble.models[m]) {
-                (Some(s), _) => s.eval_indexed(x, d, &active, scores),
-                (None, BaseModel::Lattice(l)) => {
-                    if lat_scratch.len() < l.n_vertices() {
-                        lat_scratch.resize(l.n_vertices(), 0.0);
-                    }
-                    for (slot, &i) in scores.iter_mut().zip(active.iter()) {
-                        let row = &x[i as usize * d..(i as usize + 1) * d];
-                        *slot = l.eval_with_scratch(row, &mut lat_scratch);
-                    }
-                }
-                (None, BaseModel::Tree(_)) => unreachable!("trees always have a SoA mirror"),
-            }
-            let (ep, en) = (self.fc.eps_pos[r], self.fc.eps_neg[r]);
-            let mut w = 0usize;
-            for j in 0..active.len() {
-                let i = active[j] as usize;
-                let gi = g[i] + scores[j];
-                g[i] = gi;
-                if gi > ep || gi < en {
-                    out[i] = Outcome {
-                        positive: gi > ep,
-                        score: gi,
-                        models_evaluated: (r + 1) as u32,
-                        early: true,
-                    };
-                } else {
-                    active[w] = i as u32;
-                    w += 1;
-                }
-            }
-            active.truncate(w);
-            if active.is_empty() {
-                break;
-            }
-        }
-        // Survivors of every position: full score known, decide by β.
-        for &i in &active {
-            let i = i as usize;
-            out[i] = Outcome {
-                positive: g[i] >= self.fc.beta,
-                score: g[i],
-                models_evaluated: t as u32,
-                early: false,
-            };
-        }
-        out
+    /// Deprecated loose-parts constructor: bundles and compiles a
+    /// [`QwycPlan`] on the fly. Prefer building the plan once
+    /// (`qwyc compile-plan`) and [`NativeEngine::from_plan`].
+    pub fn new(ensemble: Ensemble, fc: FastClassifier, n_features: usize) -> NativeEngine {
+        let mut plan =
+            QwycPlan::bundle(ensemble, fc, "adhoc", 0.0).expect("valid ensemble/classifier pair");
+        plan.meta.n_features = n_features;
+        NativeEngine::from_plan(plan.compile().expect("compile ad-hoc plan"))
+    }
+
+    pub fn plan(&self) -> &CompiledPlan {
+        &self.plan
     }
 }
 
 impl Engine for NativeEngine {
     fn n_features(&self) -> usize {
-        self.n_features
+        self.plan.n_features()
     }
 
     fn classify_batch(&mut self, x: &[f32], n: usize) -> Result<Vec<Outcome>, String> {
-        let d = self.n_features;
-        assert_eq!(x.len(), n * d);
-        let blocks = self.pool.par_map_indexed(n.div_ceil(ENGINE_BLOCK), 1, |b| {
-            let lo = b * ENGINE_BLOCK;
-            let hi = ((b + 1) * ENGINE_BLOCK).min(n);
-            self.eval_block(&x[lo * d..hi * d], hi - lo)
-        });
-        Ok(blocks.concat())
+        let d = self.plan.n_features();
+        let outcomes = self.plan.sweep_features(x, n, d, ENGINE_BLOCK, &self.pool);
+        Ok(outcomes.into_iter().map(Outcome::from).collect())
     }
 
     fn backend(&self) -> &'static str {
@@ -406,6 +356,7 @@ impl Engine for PjrtEngine {
 #[cfg(test)]
 mod tests {
     // PJRT engine integration tests live in rust/tests/runtime_pjrt.rs —
-    // they need `make artifacts` to have run. Native engine is covered by
-    // qwyc::evaluator tests (simulate ≡ eval_single).
+    // they need `make artifacts` to have run. The native engine is the
+    // shared sweep over a CompiledPlan, covered by plan::compiled tests
+    // plus rust/tests/{parallel_equiv,plan_equiv}.rs.
 }

@@ -1,0 +1,205 @@
+//! Compiled-plan equivalence: the unified sweep core, driven by a
+//! round-tripped `qwyc-plan-v1` artifact, must reproduce the pre-refactor
+//! outcomes bit-for-bit at 1 and N threads.
+//!
+//! PR 3 deleted three bespoke position-major active-list loops (offline
+//! `simulate`, `NativeEngine::classify_batch`, `FilterPipeline`) in favor
+//! of one shared core (`qwyc::sweep`) consuming a `CompiledPlan`. The
+//! reference implementations below are test-local reimplementations of
+//! the deleted arithmetic — per-example f32 accumulation in π order with
+//! positive-first threshold checks — so a regression in the shared core
+//! or in plan compilation (permutation, SoA banks, prefix costs) fails
+//! here, not in production.
+
+use qwyc::coordinator::{FilterOutcome, FilterPipeline};
+use qwyc::data::synth::{generate, Which};
+use qwyc::ensemble::{Ensemble, ScoreMatrix};
+use qwyc::gbt::{train, GbtParams};
+use qwyc::lattice::{train_joint, LatticeParams};
+use qwyc::plan::QwycPlan;
+use qwyc::qwyc::{
+    optimize_order_with_pool, simulate_with_pool, FastClassifier, QwycConfig,
+};
+use qwyc::runtime::engine::{Engine, NativeEngine};
+use qwyc::util::pool::Pool;
+
+/// Round-trip a plan through its JSON artifact, failing the test on any
+/// serialization drift.
+fn roundtrip(plan: QwycPlan) -> QwycPlan {
+    QwycPlan::from_json(&plan.to_json()).expect("qwyc-plan-v1 roundtrip")
+}
+
+/// Pre-refactor `simulate` semantics: serial per-example accumulation
+/// over score-matrix columns in π order.
+fn reference_simulate(
+    fc: &FastClassifier,
+    sm: &ScoreMatrix,
+) -> (Vec<bool>, Vec<u32>, Vec<bool>) {
+    let t = fc.order.len();
+    let mut decisions = vec![false; sm.n];
+    let mut stops = vec![t as u32; sm.n];
+    let mut early = vec![false; sm.n];
+    for i in 0..sm.n {
+        let mut g = fc.bias;
+        let mut decided = false;
+        for r in 0..t {
+            g += sm.col(fc.order[r])[i];
+            if g > fc.eps_pos[r] || g < fc.eps_neg[r] {
+                decisions[i] = g > fc.eps_pos[r];
+                stops[i] = (r + 1) as u32;
+                early[i] = true;
+                decided = true;
+                break;
+            }
+        }
+        if !decided {
+            decisions[i] = g >= sm.beta;
+        }
+    }
+    (decisions, stops, early)
+}
+
+/// Pre-refactor aggregate reduction (bit-exact f64 accumulation order).
+fn reference_aggregates(
+    fc: &FastClassifier,
+    sm: &ScoreMatrix,
+    stops: &[u32],
+    early: &[bool],
+    decisions: &[bool],
+) -> (f64, f64, f64) {
+    let t = fc.order.len();
+    let mut cum = vec![0f64; t + 1];
+    for r in 0..t {
+        cum[r + 1] = cum[r] + sm.costs[fc.order[r]] as f64;
+    }
+    let total_cost = sm.total_cost();
+    let (mut models_sum, mut cost_sum) = (0f64, 0f64);
+    let mut diffs = 0usize;
+    for i in 0..sm.n {
+        models_sum += stops[i] as f64;
+        if early[i] {
+            cost_sum += cum[stops[i] as usize];
+        } else {
+            cost_sum += total_cost;
+        }
+        if decisions[i] != sm.full_positive(i) {
+            diffs += 1;
+        }
+    }
+    let n = sm.n.max(1) as f64;
+    (models_sum / n, cost_sum / n, diffs as f64 / n)
+}
+
+fn gbt_fixture() -> (qwyc::data::Dataset, qwyc::data::Dataset, Ensemble, FastClassifier) {
+    let (tr, te) = generate(Which::AdultLike, 61, 0.03);
+    let (ens, _) = train(&tr, &GbtParams { n_trees: 28, max_depth: 3, ..Default::default() });
+    let sm = ens.score_matrix_par(&tr, &Pool::new(1));
+    let fc = optimize_order_with_pool(
+        &sm,
+        &QwycConfig { alpha: 0.01, ..Default::default() },
+        &Pool::new(1),
+    );
+    (tr, te, ens, fc)
+}
+
+#[test]
+fn simulate_from_roundtripped_plan_is_bit_identical_at_1_and_n_threads() {
+    let (tr, te, ens, fc) = gbt_fixture();
+    let plan = roundtrip(QwycPlan::bundle(ens, fc, "sim-equiv", 0.01).unwrap());
+    for ds in [&tr, &te] {
+        let sm = plan.ensemble.score_matrix_par(ds, &Pool::new(1));
+        let (rd, rs, re) = reference_simulate(&plan.fc, &sm);
+        let (r_models, r_cost, r_diff) =
+            reference_aggregates(&plan.fc, &sm, &rs, &re, &rd);
+        for threads in [1, 4] {
+            let sim = simulate_with_pool(&plan.fc, &sm, &Pool::new(threads));
+            assert_eq!(sim.decisions, rd, "{threads} threads");
+            assert_eq!(sim.stops, rs, "{threads} threads");
+            assert_eq!(sim.n_early, re.iter().filter(|&&e| e).count(), "{threads} threads");
+            assert_eq!(sim.mean_models.to_bits(), r_models.to_bits(), "{threads} threads");
+            assert_eq!(sim.mean_cost.to_bits(), r_cost.to_bits(), "{threads} threads");
+            assert_eq!(sim.pct_diff.to_bits(), r_diff.to_bits(), "{threads} threads");
+        }
+    }
+}
+
+#[test]
+fn native_engine_from_roundtripped_plan_matches_eval_single_reference() {
+    let (tr, te, ens, fc) = gbt_fixture();
+    let mut plan = QwycPlan::bundle(ens.clone(), fc.clone(), "engine-equiv", 0.01).unwrap();
+    plan.meta.n_features = tr.d;
+    let plan = roundtrip(plan);
+    let n = te.n.min(600);
+    for threads in [1, 4] {
+        let mut engine = NativeEngine::from_plan_with_pool(
+            plan.compile().expect("compile plan"),
+            Pool::new(threads),
+        );
+        assert_eq!(engine.n_features(), tr.d);
+        let got = engine.classify_batch(&te.x[..n * te.d], n).expect("classify");
+        assert_eq!(got.len(), n);
+        for (i, o) in got.iter().enumerate() {
+            // eval_single is the pre-refactor per-example contract the
+            // old blocked engine was pinned to.
+            let want = fc.eval_single(&ens, te.row(i));
+            assert_eq!(o.positive, want.positive, "example {i} ({threads} threads)");
+            assert_eq!(
+                o.models_evaluated as usize, want.models_evaluated,
+                "example {i} ({threads} threads)"
+            );
+            assert_eq!(o.early, want.early, "example {i} ({threads} threads)");
+            assert_eq!(
+                o.score.to_bits(),
+                want.score.to_bits(),
+                "example {i} ({threads} threads)"
+            );
+        }
+    }
+}
+
+#[test]
+fn filter_pipeline_from_roundtripped_plan_matches_eval_single_reference() {
+    let (tr, te) = generate(Which::Rw1Like, 62, 0.004);
+    let (ens, _) = train_joint(
+        &tr,
+        &LatticeParams { n_lattices: 5, dim: 5, steps: 120, ..Default::default() },
+    );
+    let sm = ens.score_matrix_par(&tr, &Pool::new(1));
+    let fc = optimize_order_with_pool(
+        &sm,
+        &QwycConfig { alpha: 0.005, neg_only: true, ..Default::default() },
+        &Pool::new(1),
+    );
+    let plan = roundtrip(QwycPlan::bundle(ens.clone(), fc.clone(), "filter-equiv", 0.005).unwrap());
+
+    // Reference outcomes straight from the pre-refactor per-example path.
+    let mut want_scored: Vec<(usize, f32)> = Vec::new();
+    let mut want_rejected_stops = vec![0u32; te.n];
+    for i in 0..te.n {
+        let r = fc.eval_single(&ens, te.row(i));
+        if !r.early && r.positive {
+            want_scored.push((i, r.score));
+        } else {
+            want_rejected_stops[i] = r.models_evaluated as u32;
+        }
+    }
+    want_scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    let bits = |v: &[(usize, f32)]| v.iter().map(|&(i, s)| (i, s.to_bits())).collect::<Vec<_>>();
+
+    for threads in [1, 4] {
+        let pipe = FilterPipeline::from_plan_with_pool(&plan, Pool::new(threads)).unwrap();
+        let (stats, scored) = pipe.run_batch(&te.x, te.n);
+        assert_eq!(stats.total, te.n, "{threads} threads");
+        assert_eq!(stats.scored, want_scored.len(), "{threads} threads");
+        assert_eq!(stats.rejected, te.n - want_scored.len(), "{threads} threads");
+        assert_eq!(bits(&scored), bits(&want_scored), "{threads} threads");
+        // Rejected candidates stop exactly where eval_single stopped.
+        for i in 0..te.n.min(300) {
+            if let FilterOutcome::Rejected { models } = pipe.run_one(te.row(i)) {
+                assert_eq!(models, want_rejected_stops[i], "example {i}");
+            } else {
+                assert!(want_scored.iter().any(|&(j, _)| j == i), "example {i}");
+            }
+        }
+    }
+}
