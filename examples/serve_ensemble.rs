@@ -1,8 +1,9 @@
 //! End-to-end serving driver (the brief's required E2E example):
 //! train a real (small) lattice ensemble, jointly optimize order +
-//! thresholds, start the TCP coordinator with dynamic batching, drive it
-//! with a closed-loop batched client, and report latency/throughput for
-//! the QWYC policy vs full evaluation. Results are recorded in
+//! thresholds, start the sharded TCP coordinator (two engine shards
+//! sharing one compiled plan) with dynamic batching, drive it with a
+//! closed-loop batched client, and report latency/throughput for the
+//! QWYC policy vs full evaluation. Results are recorded in
 //! EXPERIMENTS.md §Serving.
 //!
 //! By default the engine is the native backend; pass `--backend pjrt` to
@@ -11,15 +12,14 @@
 //!
 //! Run: `cargo run --release --example serve_ensemble [-- --backend pjrt]`
 
-use qwyc::coordinator::{BatchPolicy, Client, Server};
+use qwyc::coordinator::{BatchPolicy, Client, Server, ServerConfig};
 use qwyc::data::synth::{generate, Which};
 use qwyc::data::Dataset;
 use qwyc::lattice::{train_joint, LatticeParams};
 use qwyc::plan::QwycPlan;
 use qwyc::qwyc::{optimize_order, FastClassifier, QwycConfig};
 #[cfg(feature = "pjrt")]
-use qwyc::runtime::engine::PjrtEngine;
-use qwyc::runtime::engine::{Engine, NativeEngine};
+use qwyc::runtime::engine::{Engine, PjrtEngine};
 use std::time::Duration;
 
 fn main() {
@@ -57,34 +57,30 @@ fn main() {
     );
 
     // --- serve with QWYC policy, then with full evaluation, same load.
+    // Two engine shards share ONE compiled plan (native path) — the
+    // same flow as `qwyc serve --plan --shards 2`.
+    let config = ServerConfig {
+        shards: 2,
+        queue_cap: 4096,
+        policy: BatchPolicy { max_batch: 256, max_wait: Duration::from_micros(500) },
+    };
     for (policy_name, fc_used) in [
         ("qwyc", fc.clone()),
         ("full", FastClassifier::no_early_stop(fc.order.clone(), fc.bias, fc.beta)),
     ] {
         let (ens2, backend2) = (ens.clone(), backend.clone());
-        let server = Server::start(
-            "127.0.0.1:0",
-            move || -> Box<dyn Engine> {
-                #[cfg(feature = "pjrt")]
-                if backend2 == "pjrt" {
-                    let rt = qwyc::runtime::Runtime::open(std::path::Path::new("artifacts"))
-                        .expect("run `make artifacts` first");
-                    return Box::new(
-                        PjrtEngine::new(rt, "demo_stage", &ens2, &fc_used).expect("engine"),
-                    );
-                }
-                let _ = &backend2;
-                // Native path: bundle into the qwyc-plan-v1 artifact and
-                // compile inside the worker — the same flow as
-                // `qwyc compile-plan` + `qwyc serve --plan`.
-                let mut plan = QwycPlan::bundle(ens2, fc_used, "serve-demo", 0.005)
-                    .expect("bundle plan");
-                plan.meta.n_features = 4;
-                Box::new(NativeEngine::from_plan(plan.compile().expect("compile plan")))
-            },
-            BatchPolicy { max_batch: 256, max_wait: Duration::from_micros(500) },
-        )
-        .expect("server");
+        let server = if backend2 == "pjrt" {
+            start_pjrt_server(ens2, fc_used, config)
+        } else {
+            // Native path: bundle into the qwyc-plan-v1 artifact,
+            // compile ONCE, and share the Arc across both shards — the
+            // same flow as `qwyc compile-plan` + `qwyc serve --plan`.
+            let mut plan =
+                QwycPlan::bundle(ens2, fc_used, "serve-demo", 0.005).expect("bundle plan");
+            plan.meta.n_features = 4;
+            let compiled = plan.compile_shared().expect("compile plan");
+            Server::start_with_plan("127.0.0.1:0", compiled, config).expect("server")
+        };
 
         // Closed-loop client with a pipeline window.
         let requests = 20_000usize;
@@ -119,4 +115,33 @@ fn main() {
         server.stop();
     }
     println!("\n(qwyc-vs-full throughput ratio above is the serving-path speedup)");
+}
+
+/// PJRT backend: each shard opens its own runtime and builds its engine
+/// inside its worker thread — device handles are not `Send`.
+#[cfg(feature = "pjrt")]
+fn start_pjrt_server(
+    ens: qwyc::ensemble::Ensemble,
+    fc: FastClassifier,
+    config: ServerConfig,
+) -> Server {
+    Server::start(
+        "127.0.0.1:0",
+        move |_shard| -> Box<dyn Engine> {
+            let rt = qwyc::runtime::Runtime::open(std::path::Path::new("artifacts"))
+                .expect("run `make artifacts` first");
+            Box::new(PjrtEngine::new(rt, "demo_stage", &ens, &fc).expect("engine"))
+        },
+        config,
+    )
+    .expect("server")
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn start_pjrt_server(
+    _ens: qwyc::ensemble::Ensemble,
+    _fc: FastClassifier,
+    _config: ServerConfig,
+) -> Server {
+    unreachable!("--backend pjrt is rejected earlier when the feature is absent")
 }

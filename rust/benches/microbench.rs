@@ -218,6 +218,77 @@ fn main() {
     println!("  -> per-example amortized: {:.3} us\n", r.mean_us() / nb as f64);
     report.push(&r);
 
+    // ---- sharded serving throughput (1/2/4 shards) -------------------
+    // End-to-end requests/sec through the TCP coordinator: one shared
+    // compiled plan, N engine shards, 4 pipelined closed-loop
+    // connections. mean_ns is wall-clock per request (1e9/rps);
+    // p50/p99 are the server-reported per-request latencies.
+    {
+        use qwyc::coordinator::{BatchPolicy, Client, Server, ServerConfig};
+        let mut plan = qwyc::plan::QwycPlan::bundle(gbt.clone(), fc.clone(), "bench-serve", 0.005)
+            .expect("bundle plan");
+        plan.meta.n_features = tr.d;
+        let compiled = plan.compile_shared().expect("compile plan");
+        let conns = 4usize;
+        let per_conn = if quick { 200 } else { 5_000 };
+        let total = conns * per_conn;
+        for shards in [1usize, 2, 4] {
+            let config = ServerConfig {
+                shards,
+                queue_cap: 0, // unbounded: measure throughput, not shedding
+                policy: BatchPolicy {
+                    max_batch: 64,
+                    max_wait: Duration::from_micros(200),
+                },
+            };
+            let server = Server::start_with_plan("127.0.0.1:0", compiled.clone(), config)
+                .expect("bench server");
+            let addr = server.addr;
+            let sw = qwyc::util::timer::Stopwatch::new();
+            let mut lat_ns: Vec<f64> = std::thread::scope(|s| {
+                let handles: Vec<_> = (0..conns)
+                    .map(|c| {
+                        let tr = &tr;
+                        s.spawn(move || {
+                            let mut client = Client::connect(&addr).expect("connect");
+                            let window = 64usize;
+                            let (mut sent, mut recv) = (0usize, 0usize);
+                            let mut lat = Vec::with_capacity(per_conn);
+                            while recv < per_conn {
+                                while sent < per_conn && sent - recv < window {
+                                    let row = tr.row((c * per_conn + sent) % tr.n);
+                                    client.send_eval(row).expect("send");
+                                    sent += 1;
+                                }
+                                let resp = client.read_response().expect("read");
+                                lat.push(resp.latency_us as f64 * 1e3);
+                                recv += 1;
+                            }
+                            lat
+                        })
+                    })
+                    .collect();
+                handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+            });
+            let el = sw.elapsed_s();
+            server.stop();
+            lat_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let rps = total as f64 / el;
+            let rs = qwyc::util::timer::BenchResult {
+                name: format!("serve_shards shards={shards} (reqs={total}, conns={conns})"),
+                mean_ns: el * 1e9 / total as f64,
+                std_ns: 0.0,
+                p50_ns: qwyc::util::stats::percentile_sorted(&lat_ns, 50.0),
+                p99_ns: qwyc::util::stats::percentile_sorted(&lat_ns, 99.0),
+                runs: 1,
+                iters_per_run: total as u64,
+            };
+            println!("{}   -> {rps:.0} req/s", rs.report());
+            report.push(&rs);
+        }
+        println!();
+    }
+
     // ---- PJRT stage (needs --features pjrt and artifacts) ------------
     #[cfg(feature = "pjrt")]
     if std::path::Path::new("artifacts/manifest.json").exists() {

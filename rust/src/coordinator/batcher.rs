@@ -10,10 +10,27 @@
 //! one wakeup. Producer handles ([`BatchSender`]) are counted; when the
 //! last one drops the queue closes and [`BatchQueue::next_batch`] drains
 //! whatever is left before returning `None` (mpsc disconnect semantics).
+//!
+//! Queues may be **bounded** ([`batch_channel_with_cap`]): a full queue
+//! makes [`BatchSender::try_send`] return [`TrySendError::Full`] so the
+//! serving dispatcher can shed load with a protocol-level `BUSY` instead
+//! of letting an overloaded shard's backlog (and every queued request's
+//! latency) grow without bound. Blocking [`BatchSender::send`] parks on
+//! a second condvar until the consumer drains space.
 
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
+
+/// Why a [`BatchSender::try_send`] could not enqueue; carries the item
+/// back to the caller.
+#[derive(Debug, PartialEq, Eq)]
+pub enum TrySendError<T> {
+    /// The queue is at capacity — shed load or retry later.
+    Full(T),
+    /// The queue was closed (consumer gone / shutdown).
+    Closed(T),
+}
 
 /// Batching policy.
 #[derive(Clone, Copy, Debug)]
@@ -32,12 +49,23 @@ struct QueueState<T> {
     items: VecDeque<T>,
     senders: usize,
     closed: bool,
+    /// Maximum queued items; 0 = unbounded.
+    cap: usize,
+}
+
+impl<T> QueueState<T> {
+    fn full(&self) -> bool {
+        self.cap > 0 && self.items.len() >= self.cap
+    }
 }
 
 /// Condvar-backed request queue consumed in batches.
 pub struct BatchQueue<T> {
     state: Mutex<QueueState<T>>,
+    /// Consumers wait here for items (or close).
     cv: Condvar,
+    /// Blocking producers wait here for space (bounded queues only).
+    cv_space: Condvar,
 }
 
 /// Counted producer handle; cloning registers another producer, dropping
@@ -47,11 +75,19 @@ pub struct BatchSender<T> {
 }
 
 /// Create a connected (sender, queue) pair — the batching analogue of
-/// `mpsc::channel`.
+/// `mpsc::channel`. Unbounded.
 pub fn batch_channel<T>() -> (BatchSender<T>, Arc<BatchQueue<T>>) {
+    batch_channel_with_cap(0)
+}
+
+/// Bounded variant: at most `cap` items may be queued (0 = unbounded).
+/// `try_send` on a full queue returns [`TrySendError::Full`]; blocking
+/// `send` waits for the consumer to drain space.
+pub fn batch_channel_with_cap<T>(cap: usize) -> (BatchSender<T>, Arc<BatchQueue<T>>) {
     let q = Arc::new(BatchQueue {
-        state: Mutex::new(QueueState { items: VecDeque::new(), senders: 1, closed: false }),
+        state: Mutex::new(QueueState { items: VecDeque::new(), senders: 1, closed: false, cap }),
         cv: Condvar::new(),
+        cv_space: Condvar::new(),
     });
     (BatchSender { q: q.clone() }, q)
 }
@@ -71,14 +107,19 @@ impl<T> Drop for BatchSender<T> {
             st.closed = true;
             drop(st);
             self.q.cv.notify_all();
+            self.q.cv_space.notify_all();
         }
     }
 }
 
 impl<T> BatchSender<T> {
-    /// Enqueue one item; `Err` returns it if the queue was closed.
+    /// Enqueue one item, waiting for space if the queue is bounded and
+    /// full; `Err` returns the item if the queue was closed.
     pub fn send(&self, item: T) -> Result<(), T> {
         let mut st = self.q.state.lock().unwrap();
+        while st.full() && !st.closed {
+            st = self.q.cv_space.wait(st).unwrap();
+        }
         if st.closed {
             return Err(item);
         }
@@ -87,14 +128,43 @@ impl<T> BatchSender<T> {
         self.q.cv.notify_one();
         Ok(())
     }
+
+    /// Non-blocking enqueue: a full bounded queue rejects immediately
+    /// (the dispatcher turns this into a `BUSY` response) instead of
+    /// queueing unbounded latency.
+    pub fn try_send(&self, item: T) -> Result<(), TrySendError<T>> {
+        let mut st = self.q.state.lock().unwrap();
+        if st.closed {
+            return Err(TrySendError::Closed(item));
+        }
+        if st.full() {
+            return Err(TrySendError::Full(item));
+        }
+        st.items.push_back(item);
+        drop(st);
+        self.q.cv.notify_one();
+        Ok(())
+    }
+
 }
 
 impl<T> BatchQueue<T> {
     /// Force-close the queue (normally closing happens when the last
-    /// sender drops); pending items remain drainable.
+    /// sender drops); pending items remain drainable. Wakes blocked
+    /// consumers *and* producers parked on a full bounded queue.
     pub fn close(&self) {
         self.state.lock().unwrap().closed = true;
         self.cv.notify_all();
+        self.cv_space.notify_all();
+    }
+
+    /// Currently queued (not yet batched) item count.
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
     }
 
     /// Collect the next batch. Blocks (no deadline) for the first item,
@@ -145,6 +215,12 @@ impl<T> BatchQueue<T> {
                 }
                 break;
             }
+        }
+        // Space opened up: wake producers blocked on a bounded queue.
+        let bounded = st.cap > 0;
+        drop(st);
+        if bounded {
+            self.cv_space.notify_all();
         }
         Some(batch)
     }
@@ -237,6 +313,51 @@ mod tests {
         let (tx, q) = batch_channel();
         q.close();
         assert_eq!(tx.send(9), Err(9));
+        assert_eq!(tx.try_send(10), Err(TrySendError::Closed(10)));
+    }
+
+    #[test]
+    fn bounded_queue_rejects_when_full() {
+        let (tx, q) = batch_channel_with_cap(2);
+        assert_eq!(tx.try_send(1), Ok(()));
+        assert_eq!(tx.try_send(2), Ok(()));
+        assert_eq!(q.len(), 2);
+        // At capacity: overload is shed, the item comes back.
+        assert_eq!(tx.try_send(3), Err(TrySendError::Full(3)));
+        // Draining a batch opens space again.
+        let policy = BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1) };
+        assert_eq!(q.next_batch(policy).unwrap(), vec![1, 2]);
+        assert!(q.is_empty());
+        assert_eq!(tx.try_send(3), Ok(()));
+    }
+
+    #[test]
+    fn blocking_send_waits_for_space_instead_of_overfilling() {
+        let (tx, q) = batch_channel_with_cap(1);
+        tx.send(1).unwrap();
+        let handle = std::thread::spawn(move || {
+            // Full queue: this send must park until the consumer drains.
+            tx.send(2).unwrap();
+        });
+        std::thread::sleep(Duration::from_millis(10));
+        assert_eq!(q.len(), 1, "bounded send overfilled the queue");
+        let policy = BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(1) };
+        assert_eq!(q.next_batch(policy).unwrap(), vec![1]);
+        handle.join().unwrap();
+        assert_eq!(q.next_batch(policy).unwrap(), vec![2]);
+    }
+
+    #[test]
+    fn close_wakes_consumer_blocked_on_empty_queue() {
+        // A consumer parked in phase 1 (no deadline) must observe an
+        // external close() and return None, not hang forever.
+        let (tx, q) = batch_channel::<u32>();
+        let q2 = q.clone();
+        let consumer = std::thread::spawn(move || q2.next_batch(BatchPolicy::default()));
+        std::thread::sleep(Duration::from_millis(10));
+        q.close();
+        assert_eq!(consumer.join().unwrap(), None);
+        drop(tx);
     }
 
     #[test]

@@ -1,10 +1,16 @@
 //! Serving metrics: latency histogram (fixed log-bucketed bins → p50/p99),
 //! models-evaluated accounting, per-position exit counts (where in π do
 //! requests actually stop — the serving-side view of Figures 5-6),
-//! early-exit ratio, throughput. Shared across worker/connection threads.
+//! early-exit ratio, throughput.
+//!
+//! The sharded server gives every engine shard its own [`Metrics`] sink
+//! (no cross-shard lock contention on the hot path) and aggregates them
+//! in [`ShardedMetrics::snapshot`]; the aggregated [`Snapshot`] also
+//! carries per-shard request counts so the `STATS` line shows how the
+//! dispatcher balanced load.
 
 use crate::util::stats::LatencyHist;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 /// Per-position exit counts are tracked exactly up to this position;
@@ -18,7 +24,10 @@ const STOP_REPORT_BINS: usize = 8;
 #[derive(Debug, Default)]
 struct Inner {
     latency: LatencyHist,
-    batch_sizes: Vec<u64>,
+    /// Batch accounting as (Σ sizes, count): O(1) state and O(1) merge,
+    /// so a long-lived server's snapshot cost never grows.
+    batch_sum: u64,
+    batch_count: u64,
     models_sum: u64,
     early: u64,
     requests: u64,
@@ -26,6 +35,44 @@ struct Inner {
     /// models (index 0 only for degenerate zero-model plans). Grown on
     /// demand, capped at [`STOP_POS_CAP`].
     stop_counts: Vec<u64>,
+}
+
+impl Inner {
+    /// Fold another shard's counters into this aggregate.
+    fn merge(&mut self, other: &Inner) {
+        self.latency.merge(&other.latency);
+        self.batch_sum += other.batch_sum;
+        self.batch_count += other.batch_count;
+        self.models_sum += other.models_sum;
+        self.early += other.early;
+        self.requests += other.requests;
+        if self.stop_counts.len() < other.stop_counts.len() {
+            self.stop_counts.resize(other.stop_counts.len(), 0);
+        }
+        for (a, &b) in self.stop_counts.iter_mut().zip(other.stop_counts.iter()) {
+            *a += b;
+        }
+    }
+
+    fn to_snapshot(&self, elapsed_s: f64, shard_requests: Vec<u64>) -> Snapshot {
+        let n = self.requests.max(1) as f64;
+        Snapshot {
+            requests: self.requests,
+            mean_latency_us: self.latency.mean_ns() / 1e3,
+            p50_latency_us: self.latency.percentile_ns(50.0) / 1e3,
+            p99_latency_us: self.latency.percentile_ns(99.0) / 1e3,
+            mean_models: self.models_sum as f64 / n,
+            early_frac: self.early as f64 / n,
+            mean_batch: if self.batch_count == 0 {
+                0.0
+            } else {
+                self.batch_sum as f64 / self.batch_count as f64
+            },
+            throughput_rps: self.requests as f64 / elapsed_s.max(1e-9),
+            stop_counts: self.stop_counts.clone(),
+            shard_requests,
+        }
+    }
 }
 
 /// Thread-safe metrics sink.
@@ -59,27 +106,55 @@ impl Metrics {
     }
 
     pub fn record_batch(&self, size: usize) {
-        self.inner.lock().unwrap().batch_sizes.push(size as u64);
+        let mut m = self.inner.lock().unwrap();
+        m.batch_sum += size as u64;
+        m.batch_count += 1;
     }
 
     pub fn snapshot(&self) -> Snapshot {
         let m = self.inner.lock().unwrap();
-        let n = m.requests.max(1) as f64;
-        Snapshot {
-            requests: m.requests,
-            mean_latency_us: m.latency.mean_ns() / 1e3,
-            p50_latency_us: m.latency.percentile_ns(50.0) / 1e3,
-            p99_latency_us: m.latency.percentile_ns(99.0) / 1e3,
-            mean_models: m.models_sum as f64 / n,
-            early_frac: m.early as f64 / n,
-            mean_batch: if m.batch_sizes.is_empty() {
-                0.0
-            } else {
-                m.batch_sizes.iter().sum::<u64>() as f64 / m.batch_sizes.len() as f64
-            },
-            throughput_rps: m.requests as f64 / self.started.elapsed().as_secs_f64().max(1e-9),
-            stop_counts: m.stop_counts.clone(),
+        m.to_snapshot(self.started.elapsed().as_secs_f64(), Vec::new())
+    }
+}
+
+/// One [`Metrics`] sink per engine shard plus cross-shard aggregation —
+/// the serving-metrics view the sharded coordinator exposes. Shard
+/// workers record into their own sink (uncontended mutex); `snapshot()`
+/// merges all shards into one [`Snapshot`] whose `shard_requests`
+/// records the dispatcher's per-shard balance.
+pub struct ShardedMetrics {
+    shards: Vec<Arc<Metrics>>,
+    started: Instant,
+}
+
+impl ShardedMetrics {
+    pub fn new(n_shards: usize) -> ShardedMetrics {
+        ShardedMetrics {
+            shards: (0..n_shards.max(1)).map(|_| Arc::new(Metrics::new())).collect(),
+            started: Instant::now(),
         }
+    }
+
+    /// The sink for one shard (handed to that shard's worker thread).
+    pub fn shard(&self, i: usize) -> Arc<Metrics> {
+        self.shards[i].clone()
+    }
+
+    /// Aggregate snapshot across every shard.
+    pub fn snapshot(&self) -> Snapshot {
+        let mut agg = Inner::default();
+        let mut shard_requests = Vec::with_capacity(self.shards.len());
+        for m in &self.shards {
+            let inner = m.inner.lock().unwrap();
+            shard_requests.push(inner.requests);
+            agg.merge(&inner);
+        }
+        agg.to_snapshot(self.started.elapsed().as_secs_f64(), shard_requests)
+    }
+
+    /// Per-shard snapshots (same order as the shard workers).
+    pub fn shard_snapshots(&self) -> Vec<Snapshot> {
+        self.shards.iter().map(|m| m.snapshot()).collect()
     }
 }
 
@@ -114,6 +189,9 @@ pub struct Snapshot {
     /// Per-position exit counts (`stop_counts[p]` = requests stopping
     /// after exactly p models); empty until the first request.
     pub stop_counts: Vec<u64>,
+    /// Requests handled per shard (aggregated snapshots only; empty for
+    /// a single [`Metrics`] sink).
+    pub shard_requests: Vec<u64>,
 }
 
 impl Snapshot {
@@ -145,10 +223,21 @@ impl Snapshot {
             .map(|c| c.to_string())
             .collect::<Vec<_>>()
             .join(",");
+        let shards = if self.shard_requests.len() > 1 {
+            let per = self
+                .shard_requests
+                .iter()
+                .map(|c| c.to_string())
+                .collect::<Vec<_>>()
+                .join(",");
+            format!(" shard_requests=[{per}]")
+        } else {
+            String::new()
+        };
         format!(
             "requests={} throughput={:.0}/s latency(mean/p50/p99)={:.1}/{:.1}/{:.1}us \
              mean_models={:.2} early={:.1}% exit_pos(p50/p99)={}/{} exit_hist=[{hist}] \
-             mean_batch={:.1}",
+             mean_batch={:.1}{shards}",
             self.requests,
             self.throughput_rps,
             self.mean_latency_us,
@@ -207,6 +296,37 @@ mod tests {
         let rep = s.report();
         assert!(rep.contains("exit_pos(p50/p99)=1/10"), "{rep}");
         assert!(rep.contains("exit_hist=["), "{rep}");
+    }
+
+    #[test]
+    fn sharded_metrics_aggregate_across_shards() {
+        let sm = ShardedMetrics::new(3);
+        // Shard 0: two early exits at position 2; shard 1: one full stop
+        // at 10; shard 2: idle.
+        sm.shard(0).record_request(1_000, 2, true);
+        sm.shard(0).record_request(3_000, 2, true);
+        sm.shard(1).record_request(5_000, 10, false);
+        sm.shard(0).record_batch(2);
+        sm.shard(1).record_batch(1);
+        let s = sm.snapshot();
+        assert_eq!(s.requests, 3);
+        assert_eq!(s.shard_requests, vec![2, 1, 0]);
+        assert!((s.mean_models - 14.0 / 3.0).abs() < 1e-9);
+        assert!((s.early_frac - 2.0 / 3.0).abs() < 1e-9);
+        assert!((s.mean_latency_us - 3.0).abs() < 0.1);
+        assert!((s.mean_batch - 1.5).abs() < 1e-9);
+        // Merged stop counts span both shards' positions.
+        assert_eq!(s.stop_counts[2], 2);
+        assert_eq!(s.stop_counts[10], 1);
+        let rep = s.report();
+        assert!(rep.contains("shard_requests=[2,1,0]"), "{rep}");
+        // Per-shard views stay independent.
+        let per = sm.shard_snapshots();
+        assert_eq!(per[0].requests, 2);
+        assert_eq!(per[1].requests, 1);
+        assert_eq!(per[2].requests, 0);
+        assert!(per[0].shard_requests.is_empty());
+        assert!(!per[0].report().contains("shard_requests"), "{}", per[0].report());
     }
 
     #[test]

@@ -1,6 +1,7 @@
-//! L3 serving coordinator: request routing, dynamic batching, early-exit
-//! scheduling, metrics, and the TCP front-end. The QWYC fast classifier is
-//! the scheduling policy: a batch walks the optimized order and examples
+//! L3 serving coordinator: request routing across engine shards, dynamic
+//! batching with bounded admission, early-exit scheduling, per-shard
+//! metrics, and the TCP front-end. The QWYC fast classifier is the
+//! scheduling policy: a batch walks the optimized order and examples
 //! retire the moment their running score clears a threshold.
 
 pub mod batcher;
@@ -8,7 +9,9 @@ pub mod filter_score;
 pub mod metrics;
 pub mod server;
 
-pub use batcher::{batch_channel, BatchPolicy, BatchQueue, BatchSender};
+pub use batcher::{
+    batch_channel, batch_channel_with_cap, BatchPolicy, BatchQueue, BatchSender, TrySendError,
+};
 pub use filter_score::{FilterOutcome, FilterPipeline, FilterStats};
-pub use metrics::{Metrics, Snapshot};
-pub use server::{Client, EvalResponse, Server};
+pub use metrics::{Metrics, ShardedMetrics, Snapshot};
+pub use server::{Client, EvalResponse, Reply, Server, ServerConfig, DEFAULT_QUEUE_CAP};

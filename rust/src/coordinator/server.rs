@@ -1,33 +1,50 @@
 //! TCP serving front-end: line protocol, connection handling, and the
-//! worker loop that owns the engine (for the native backend, the engine
-//! is a [`CompiledPlan`](crate::plan::CompiledPlan) compiled once inside
-//! the worker thread — see `NativeEngine::from_plan`). Requests flow
+//! sharded engine runtime. The plan is compiled ONCE into a shared
+//! `Arc<CompiledPlan>`; `--shards N` engine workers each own an engine
+//! handle and drain their own bounded [`BatchQueue`]. Requests flow
 //!
-//!   conn thread → BatchQueue (condvar) → batcher → engine.classify_batch
-//!     → per-request response channel → conn thread → client
+//!   conn thread → dispatcher (least-queued shard, try_send)
+//!     → per-shard BatchQueue (condvar) → shard worker
+//!     → engine.classify_batch → per-request response channel
+//!     → conn thread → client
 //!
-//! Responses stream back as soon as their example is decided — an
-//! early-exit example does not wait for the rest of its batch's full
-//! evaluation path (no tokio offline; plain threads, a condvar batch
-//! queue on the request path, and mpsc response channels — DESIGN.md §4).
+//! Responses stream back as soon as their example is decided; each
+//! example's early-exit sweep is independent, so responses are
+//! bit-identical at any shard count (rust/tests/serving_e2e.rs).
+//! A full shard queue sheds load with `BUSY <id>` instead of queueing
+//! unbounded latency, and `RELOAD <path>` swaps the shared plan at
+//! batch boundaries via a [`PlanSlot`] — width-compatible swaps never
+//! error a request (no tokio offline; plain threads — DESIGN.md §4).
 //!
 //! Protocol (one line per message):
 //!   client → server:  EVAL <id> <f1>,<f2>,...      classify one example
 //!                     STATS                         metrics snapshot
+//!                     RELOAD <path>                 hot-swap the plan
 //!                     QUIT                          close connection
 //!   server → client:  OK <id> <pos|neg> <score> <models> <latency_us>
+//!                     BUSY <id>                     shard queues full
 //!                     STATS <report...>
-//!                     ERR <message>
+//!                     RELOADED <name> gen=<g> T=<t>
+//!                     ERR <id> <message>            (`-` id when the
+//!                                                   request id is unknown)
 
-use super::batcher::{batch_channel, BatchPolicy, BatchSender};
-use super::metrics::Metrics;
-use crate::runtime::engine::Engine;
+use super::batcher::{
+    batch_channel_with_cap, BatchPolicy, BatchQueue, BatchSender, TrySendError,
+};
+use super::metrics::ShardedMetrics;
+use crate::plan::{CompiledPlan, PlanSlot, QwycPlan};
+use crate::runtime::engine::{Engine, NativeEngine};
+use crate::util::pool::{threads_from_env, Pool};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::path::Path;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{self, Sender};
 use std::sync::Arc;
 use std::time::Instant;
+
+/// Default bound on each shard's request queue (`--queue-cap`).
+pub const DEFAULT_QUEUE_CAP: usize = 1024;
 
 /// One in-flight request.
 struct Request {
@@ -37,92 +54,224 @@ struct Request {
     respond: Sender<String>,
 }
 
+/// Runtime shape of the serving coordinator.
+#[derive(Clone, Copy, Debug)]
+pub struct ServerConfig {
+    /// Engine worker shards, each with its own queue (`--shards`).
+    pub shards: usize,
+    /// Per-shard queue bound; 0 = unbounded (`--queue-cap`).
+    pub queue_cap: usize,
+    /// Dynamic-batching policy applied by every shard.
+    pub policy: BatchPolicy,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { shards: 1, queue_cap: DEFAULT_QUEUE_CAP, policy: BatchPolicy::default() }
+    }
+}
+
+/// Single-shard config with the given batching policy (the pre-sharding
+/// call shape, kept so `Server::start(addr, factory, policy)` reads as
+/// before).
+impl From<BatchPolicy> for ServerConfig {
+    fn from(policy: BatchPolicy) -> ServerConfig {
+        ServerConfig { policy, ..ServerConfig::default() }
+    }
+}
+
+/// Routes each request to the least-queued shard; a full shard queue
+/// surfaces as BUSY instead of blocking the connection thread.
+struct Dispatcher {
+    shards: Vec<(BatchSender<Request>, Arc<BatchQueue<Request>>)>,
+}
+
+enum RouteError {
+    Busy(Request),
+    Closed(Request),
+}
+
+impl Dispatcher {
+    fn route(&self, req: Request) -> Result<(), RouteError> {
+        // Least-queued shard (ties → lowest index). Queue lengths move
+        // under us, but any stale choice only costs balance, never
+        // correctness — per-example sweeps are shard-independent.
+        let mut best = 0usize;
+        let mut best_len = usize::MAX;
+        for (i, (_, q)) in self.shards.iter().enumerate() {
+            let len = q.len();
+            if len < best_len {
+                best = i;
+                best_len = len;
+            }
+        }
+        match self.shards[best].0.try_send(req) {
+            Ok(()) => Ok(()),
+            Err(TrySendError::Full(r)) => Err(RouteError::Busy(r)),
+            Err(TrySendError::Closed(r)) => Err(RouteError::Closed(r)),
+        }
+    }
+}
+
 /// Server handle: address, shutdown flag, worker/acceptor joins.
 pub struct Server {
     pub addr: std::net::SocketAddr,
-    pub metrics: Arc<Metrics>,
+    /// Per-shard metrics; `metrics.snapshot()` aggregates all shards.
+    pub metrics: Arc<ShardedMetrics>,
     shutdown: Arc<AtomicBool>,
     acceptor: Option<std::thread::JoinHandle<()>>,
-    worker: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
     /// Live connection streams; shut down on stop so connection threads
-    /// (which hold request-channel senders) exit and the worker drains.
+    /// (which hold request-channel senders) exit and the workers drain.
     conns: Arc<std::sync::Mutex<Vec<TcpStream>>>,
 }
 
 impl Server {
-    /// Start serving on `bind_addr` (e.g. "127.0.0.1:0"). The engine is
-    /// built by `engine_factory` *inside* the worker thread — PJRT
-    /// handles are not `Send`, so the engine must be born where it lives.
-    pub fn start<F>(
+    /// Start serving on `bind_addr` (e.g. "127.0.0.1:0") with engines
+    /// built by `engine_factory(shard)` *inside* each shard's worker
+    /// thread — PJRT handles are not `Send`, so an engine must be born
+    /// where it lives. This generic entry point has no plan slot, so
+    /// `RELOAD` is refused; native serving should prefer
+    /// [`Server::start_with_plan`].
+    pub fn start<F, C>(bind_addr: &str, engine_factory: F, config: C) -> std::io::Result<Server>
+    where
+        F: Fn(usize) -> Box<dyn Engine> + Send + Sync + 'static,
+        C: Into<ServerConfig>,
+    {
+        Server::start_inner(bind_addr, Arc::new(engine_factory), config.into(), None)
+    }
+
+    /// Native sharded serving from one shared compiled plan: every shard
+    /// gets an `Arc` handle to the SAME artifact (compile once — the
+    /// plan is immutable and `Send + Sync` by construction) plus a
+    /// private worker pool splitting `QWYC_THREADS` across shards.
+    /// Enables `RELOAD <path>` hot-swap through a [`PlanSlot`].
+    pub fn start_with_plan<C>(
         bind_addr: &str,
-        engine_factory: F,
-        policy: BatchPolicy,
+        plan: Arc<CompiledPlan>,
+        config: C,
     ) -> std::io::Result<Server>
     where
-        F: FnOnce() -> Box<dyn Engine> + Send + 'static,
+        C: Into<ServerConfig>,
     {
+        let config = config.into();
+        let slot = Arc::new(PlanSlot::new(plan));
+        let per_shard_threads = (threads_from_env() / config.shards.max(1)).max(1);
+        let factory_slot = slot.clone();
+        let factory = move |_shard: usize| -> Box<dyn Engine> {
+            Box::new(NativeEngine::from_shared(
+                factory_slot.load(),
+                Pool::new(per_shard_threads),
+            ))
+        };
+        Server::start_inner(bind_addr, Arc::new(factory), config, Some(slot))
+    }
+
+    fn start_inner(
+        bind_addr: &str,
+        factory: Arc<dyn Fn(usize) -> Box<dyn Engine> + Send + Sync>,
+        config: ServerConfig,
+        plan_slot: Option<Arc<PlanSlot>>,
+    ) -> std::io::Result<Server> {
         let listener = TcpListener::bind(bind_addr)?;
         let addr = listener.local_addr()?;
-        let metrics = Arc::new(Metrics::new());
+        let n_shards = config.shards.max(1);
+        let metrics = Arc::new(ShardedMetrics::new(n_shards));
         let shutdown = Arc::new(AtomicBool::new(false));
-        let (tx, queue) = batch_channel::<Request>();
 
-        // Worker: owns the engine, consumes batches.
-        let worker_metrics = metrics.clone();
-        let worker = std::thread::spawn(move || {
-            let mut engine = engine_factory();
-            let d = engine.n_features();
-            let mut xbuf: Vec<f32> = Vec::new();
-            while let Some(batch) = queue.next_batch(policy) {
-                worker_metrics.record_batch(batch.len());
-                xbuf.clear();
-                let mut ok = true;
-                for r in &batch {
-                    if r.features.len() != d {
-                        ok = false;
+        // Shard workers: each owns an engine and drains its own queue.
+        let mut workers = Vec::with_capacity(n_shards);
+        let mut shard_channels = Vec::with_capacity(n_shards);
+        for shard in 0..n_shards {
+            let (tx, queue) = batch_channel_with_cap::<Request>(config.queue_cap);
+            shard_channels.push((tx, queue.clone()));
+            let m = metrics.shard(shard);
+            let slot = plan_slot.clone();
+            let factory = factory.clone();
+            let policy = config.policy;
+            workers.push(std::thread::spawn(move || {
+                // Read the generation BEFORE building the engine: a swap
+                // racing the spawn is re-applied on the first batch (a
+                // harmless duplicate) instead of being missed.
+                let mut gen = slot.as_ref().map(|s| s.generation()).unwrap_or(0);
+                let mut engine = factory(shard);
+                let mut d = engine.n_features();
+                let mut xbuf: Vec<f32> = Vec::new();
+                while let Some(batch) = queue.next_batch(policy) {
+                    // Plan hot-swap happens only here, at a batch
+                    // boundary: no batch ever sees a half-swapped plan,
+                    // and a batch being classified when the swap lands
+                    // completes against the plan it started with.
+                    // Requests still queued (including this just-drained
+                    // batch) evaluate under the NEW plan; if the new
+                    // plan changes the feature width, stale-width
+                    // requests get clean per-request ERRs below rather
+                    // than being dropped.
+                    if let Some(slot) = &slot {
+                        let g = slot.generation();
+                        if g != gen {
+                            gen = g;
+                            match engine.swap_plan(slot.load()) {
+                                Ok(()) => d = engine.n_features(),
+                                Err(e) => {
+                                    eprintln!("shard {shard}: plan reload failed: {e}")
+                                }
+                            }
+                        }
                     }
-                    xbuf.extend_from_slice(&r.features);
-                }
-                if !ok {
+                    m.record_batch(batch.len());
+                    xbuf.clear();
+                    let mut evals: Vec<&Request> = Vec::with_capacity(batch.len());
                     for r in &batch {
-                        let _ = r.respond.send(format!(
-                            "ERR request {} has wrong feature count (want {d})",
-                            r.id
-                        ));
-                    }
-                    continue;
-                }
-                match engine.classify_batch(&xbuf, batch.len()) {
-                    Ok(outcomes) => {
-                        for (r, o) in batch.iter().zip(outcomes.iter()) {
-                            let lat = r.enqueued.elapsed().as_nanos() as u64;
-                            worker_metrics.record_request(lat, o.models_evaluated, o.early);
+                        if r.features.len() == d {
+                            xbuf.extend_from_slice(&r.features);
+                            evals.push(r);
+                        } else {
+                            // Misfits fail alone; the rest of the batch
+                            // still evaluates.
                             let _ = r.respond.send(format!(
-                                "OK {} {} {:.6} {} {}",
-                                r.id,
-                                if o.positive { "pos" } else { "neg" },
-                                o.score,
-                                o.models_evaluated,
-                                lat / 1_000
+                                "ERR {} wrong feature count (want {d})",
+                                r.id
                             ));
                         }
                     }
-                    Err(e) => {
-                        for r in &batch {
-                            let _ = r.respond.send(format!("ERR engine: {e}"));
+                    if evals.is_empty() {
+                        continue;
+                    }
+                    match engine.classify_batch(&xbuf, evals.len()) {
+                        Ok(outcomes) => {
+                            for (r, o) in evals.iter().zip(outcomes.iter()) {
+                                let lat = r.enqueued.elapsed().as_nanos() as u64;
+                                m.record_request(lat, o.models_evaluated, o.early);
+                                let _ = r.respond.send(format!(
+                                    "OK {} {} {:.6} {} {}",
+                                    r.id,
+                                    if o.positive { "pos" } else { "neg" },
+                                    o.score,
+                                    o.models_evaluated,
+                                    lat / 1_000
+                                ));
+                            }
+                        }
+                        Err(e) => {
+                            for r in &evals {
+                                let _ = r.respond.send(format!("ERR {} engine: {e}", r.id));
+                            }
                         }
                     }
                 }
-            }
-        });
+            }));
+        }
+        let dispatcher = Arc::new(Dispatcher { shards: shard_channels });
 
         // Acceptor: one thread per connection (serving fan-in is small;
-        // the engine worker is the throughput bottleneck by design).
+        // the shard workers are the throughput engine).
         let conns: Arc<std::sync::Mutex<Vec<TcpStream>>> =
             Arc::new(std::sync::Mutex::new(Vec::new()));
         let acc_shutdown = shutdown.clone();
         let acc_metrics = metrics.clone();
         let acc_conns = conns.clone();
+        let acc_slot = plan_slot.clone();
         let acceptor = std::thread::spawn(move || {
             listener.set_nonblocking(true).ok();
             loop {
@@ -135,9 +284,10 @@ impl Server {
                         if let Ok(dup) = stream.try_clone() {
                             acc_conns.lock().unwrap().push(dup);
                         }
-                        let tx = tx.clone();
+                        let dispatch = dispatcher.clone();
                         let m = acc_metrics.clone();
-                        std::thread::spawn(move || handle_conn(stream, tx, m));
+                        let slot = acc_slot.clone();
+                        std::thread::spawn(move || handle_conn(stream, dispatch, m, slot));
                     }
                     Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                         std::thread::sleep(std::time::Duration::from_millis(1));
@@ -145,8 +295,9 @@ impl Server {
                     Err(_) => break,
                 }
             }
-            // tx drops here → once connection threads exit too, the worker
-            // channel disconnects and the worker drains.
+            // The dispatcher (and its senders) drops here → once
+            // connection threads exit too, the shard queues close and
+            // every worker drains.
         });
 
         Ok(Server {
@@ -154,7 +305,7 @@ impl Server {
             metrics,
             shutdown,
             acceptor: Some(acceptor),
-            worker: Some(worker),
+            workers,
             conns,
         })
     }
@@ -166,18 +317,48 @@ impl Server {
             let _ = a.join();
         }
         // Force connection reader loops to end so their request senders
-        // drop; otherwise the worker would wait on clients that outlive
+        // drop; otherwise the workers would wait on clients that outlive
         // the server handle.
         for c in self.conns.lock().unwrap().drain(..) {
             let _ = c.shutdown(std::net::Shutdown::Both);
         }
-        if let Some(w) = self.worker.take() {
+        for w in self.workers.drain(..) {
             let _ = w.join();
         }
     }
 }
 
-fn handle_conn(stream: TcpStream, tx: BatchSender<Request>, metrics: Arc<Metrics>) {
+/// Handle the `RELOAD <path>` control command: load + compile off the
+/// request path (on this connection's thread), then atomically publish
+/// into the slot. Shard workers adopt the new plan at their next batch
+/// boundary: a batch mid-classification finishes on its old plan, and a
+/// width-compatible swap (the deployment case: re-optimized π/ε for the
+/// same feature space) never errors any request.
+fn handle_reload(path: &str, slot: &Option<Arc<PlanSlot>>) -> String {
+    let Some(slot) = slot else {
+        return "ERR - reload unsupported for this backend".into();
+    };
+    if path.is_empty() {
+        return "ERR - malformed RELOAD (usage: RELOAD <path>)".into();
+    }
+    let loaded = QwycPlan::load(Path::new(path))
+        .and_then(|p| p.compile_shared().map(|c| (p.meta.name.clone(), c)));
+    match loaded {
+        Ok((name, compiled)) => {
+            let t = compiled.t();
+            let gen = slot.swap(compiled);
+            format!("RELOADED {name} gen={gen} T={t}")
+        }
+        Err(e) => format!("ERR - reload: {e}"),
+    }
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    dispatch: Arc<Dispatcher>,
+    metrics: Arc<ShardedMetrics>,
+    plan_slot: Option<Arc<PlanSlot>>,
+) {
     let peer_write = match stream.try_clone() {
         Ok(s) => s,
         Err(_) => return,
@@ -185,7 +366,7 @@ fn handle_conn(stream: TcpStream, tx: BatchSender<Request>, metrics: Arc<Metrics
     let writer = std::io::BufWriter::new(peer_write);
     let reader = BufReader::new(stream);
     // Response pump: a dedicated channel per connection keeps ordering
-    // per-client while letting the worker answer out of batch order.
+    // per-client while letting shard workers answer out of batch order.
     let (resp_tx, resp_rx) = mpsc::channel::<String>();
     let pump = std::thread::spawn(move || {
         let mut w = writer;
@@ -228,21 +409,34 @@ fn handle_conn(stream: TcpStream, tx: BatchSender<Request>, metrics: Arc<Metrics
                             enqueued: Instant::now(),
                             respond: resp_tx.clone(),
                         };
-                        if tx.send(req).is_err() {
-                            let _ = resp_tx.send("ERR server shutting down".into());
+                        match dispatch.route(req) {
+                            Ok(()) => {}
+                            Err(RouteError::Busy(r)) => {
+                                let _ = resp_tx.send(format!("BUSY {}", r.id));
+                            }
+                            Err(RouteError::Closed(r)) => {
+                                let _ = resp_tx
+                                    .send(format!("ERR {} server shutting down", r.id));
+                            }
                         }
                     }
                     _ => {
-                        let _ = resp_tx.send("ERR malformed EVAL".into());
+                        let _ = resp_tx.send("ERR - malformed EVAL".into());
                     }
                 }
             }
             Some("STATS") => {
                 let _ = resp_tx.send(format!("STATS {}", metrics.snapshot().report()));
             }
+            Some("RELOAD") => {
+                // The path is everything after the verb (paths may
+                // contain spaces).
+                let path = line["RELOAD".len()..].trim();
+                let _ = resp_tx.send(handle_reload(path, &plan_slot));
+            }
             Some("QUIT") => break,
             _ => {
-                let _ = resp_tx.send("ERR unknown command".into());
+                let _ = resp_tx.send("ERR - unknown command".into());
             }
         }
     }
@@ -267,6 +461,18 @@ pub struct EvalResponse {
     pub latency_us: u64,
 }
 
+/// Any server → client line, id-correlated where the protocol carries
+/// one (every ERR line now does; `-` parses as `None`).
+#[derive(Clone, Debug)]
+pub enum Reply {
+    Ok(EvalResponse),
+    /// Request shed by a full shard queue; retry or back off.
+    Busy { id: u64 },
+    Err { id: Option<u64>, message: String },
+    /// STATS / RELOADED / anything else, verbatim.
+    Other(String),
+}
+
 impl Client {
     pub fn connect(addr: &std::net::SocketAddr) -> std::io::Result<Client> {
         let stream = TcpStream::connect(addr)?;
@@ -284,12 +490,27 @@ impl Client {
         Ok(id)
     }
 
-    /// Read one response line (blocking).
-    pub fn read_response(&mut self) -> std::io::Result<EvalResponse> {
+    /// Read one response line and classify it (blocking).
+    pub fn read_reply(&mut self) -> std::io::Result<Reply> {
         let mut line = String::new();
-        self.reader.read_line(&mut line)?;
-        parse_eval_response(line.trim())
-            .ok_or_else(|| std::io::Error::new(std::io::ErrorKind::InvalidData, line))
+        if self.reader.read_line(&mut line)? == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "server closed the connection",
+            ));
+        }
+        Ok(parse_reply(line.trim()))
+    }
+
+    /// Read one OK response (blocking); any other reply is an error.
+    pub fn read_response(&mut self) -> std::io::Result<EvalResponse> {
+        match self.read_reply()? {
+            Reply::Ok(r) => Ok(r),
+            other => Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("{other:?}"),
+            )),
+        }
     }
 
     /// Convenience: send and wait.
@@ -298,12 +519,49 @@ impl Client {
         self.read_response()
     }
 
+    /// Fetch the server's STATS line. Replies are FIFO per connection,
+    /// so call this only when no pipelined EVALs are outstanding (or use
+    /// a dedicated control connection) — otherwise the next line read is
+    /// an earlier EVAL's reply, not the STATS line.
     pub fn stats(&mut self) -> std::io::Result<String> {
         writeln!(self.writer, "STATS")?;
         let mut line = String::new();
         self.reader.read_line(&mut line)?;
         Ok(line.trim().to_string())
     }
+
+    /// Ask the server to hot-swap its plan; returns the raw reply line
+    /// (`RELOADED ...` on success, `ERR - reload: ...` on failure).
+    /// Same FIFO caveat as [`Client::stats`]: issue RELOAD from a
+    /// connection with no outstanding EVALs — a dedicated control
+    /// connection, as `qwyc reload` and the e2e tests do.
+    pub fn reload(&mut self, plan_path: &str) -> std::io::Result<String> {
+        writeln!(self.writer, "RELOAD {plan_path}")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Ok(line.trim().to_string())
+    }
+}
+
+fn parse_reply(line: &str) -> Reply {
+    if let Some(r) = parse_eval_response(line) {
+        return Reply::Ok(r);
+    }
+    let mut p = line.splitn(3, ' ');
+    match p.next() {
+        Some("BUSY") => {
+            if let Some(id) = p.next().and_then(|s| s.parse::<u64>().ok()) {
+                return Reply::Busy { id };
+            }
+        }
+        Some("ERR") => {
+            let id = p.next().and_then(|s| s.parse::<u64>().ok());
+            let message = p.next().unwrap_or("").to_string();
+            return Reply::Err { id, message };
+        }
+        _ => {}
+    }
+    Reply::Other(line.to_string())
 }
 
 fn parse_eval_response(line: &str) -> Option<EvalResponse> {
@@ -331,6 +589,40 @@ mod tests {
         assert!(r.positive);
         assert_eq!(r.models, 7);
         assert_eq!(r.latency_us, 133);
-        assert!(parse_eval_response("ERR nope").is_none());
+        assert!(parse_eval_response("ERR 1 nope").is_none());
+    }
+
+    #[test]
+    fn parse_reply_classifies_protocol_lines() {
+        match parse_reply("OK 3 neg -0.500000 2 10") {
+            Reply::Ok(r) => {
+                assert_eq!(r.id, 3);
+                assert!(!r.positive);
+            }
+            other => panic!("{other:?}"),
+        }
+        match parse_reply("BUSY 17") {
+            Reply::Busy { id } => assert_eq!(id, 17),
+            other => panic!("{other:?}"),
+        }
+        match parse_reply("ERR 5 engine: boom") {
+            Reply::Err { id, message } => {
+                assert_eq!(id, Some(5));
+                assert_eq!(message, "engine: boom");
+            }
+            other => panic!("{other:?}"),
+        }
+        // `-` id (request id unknown) parses as None.
+        match parse_reply("ERR - malformed EVAL") {
+            Reply::Err { id, message } => {
+                assert_eq!(id, None);
+                assert_eq!(message, "malformed EVAL");
+            }
+            other => panic!("{other:?}"),
+        }
+        match parse_reply("RELOADED demo gen=1 T=6") {
+            Reply::Other(s) => assert!(s.starts_with("RELOADED")),
+            other => panic!("{other:?}"),
+        }
     }
 }

@@ -1,0 +1,92 @@
+//! Typed errors for the plan artifact lifecycle.
+//!
+//! The plan layer used to thread `Result<_, String>` through load /
+//! validate / compile, which made it impossible for callers (the CLI,
+//! the serving `RELOAD` handler) to tell a missing file from a corrupt
+//! document from a structurally invalid plan without string matching.
+//! [`PlanError`] names the four failure stages explicitly; `Display`
+//! keeps the old human-readable messages, and `From<PlanError> for
+//! String` keeps `?` working in the many `Result<_, String>` call sites
+//! (CLI arms, `FilterPipeline`, engine factories) without churn.
+
+use std::fmt;
+
+/// What went wrong while loading, validating, or compiling a
+/// [`QwycPlan`](crate::plan::QwycPlan).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PlanError {
+    /// The artifact file could not be read or written.
+    Io(String),
+    /// The document parsed but is not a well-formed `qwyc-plan-v1`
+    /// payload (wrong schema tag, missing keys, bad JSON shapes).
+    Schema(String),
+    /// The plan parsed but violates a structural invariant (classifier
+    /// structure, ensemble/classifier size or bias/β agreement,
+    /// derived-metadata drift).
+    Validate(String),
+    /// Compilation into the serving-ready [`CompiledPlan`]
+    /// (crate::plan::CompiledPlan) failed: tree structure, feature-count
+    /// agreement, or declared-width checks.
+    Compile(String),
+}
+
+impl PlanError {
+    /// The failure stage as a short lowercase tag (log/metrics friendly).
+    pub fn stage(&self) -> &'static str {
+        match self {
+            PlanError::Io(_) => "io",
+            PlanError::Schema(_) => "schema",
+            PlanError::Validate(_) => "validate",
+            PlanError::Compile(_) => "compile",
+        }
+    }
+}
+
+impl fmt::Display for PlanError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PlanError::Io(m) => write!(f, "plan io error: {m}"),
+            PlanError::Schema(m) => write!(f, "plan schema error: {m}"),
+            PlanError::Validate(m) => write!(f, "plan validation error: {m}"),
+            PlanError::Compile(m) => write!(f, "plan compile error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for PlanError {}
+
+/// Interop with the crate's `Result<_, String>` substrate: `?` on a
+/// plan-layer call keeps working inside CLI arms and pipelines.
+impl From<PlanError> for String {
+    fn from(e: PlanError) -> String {
+        e.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_carries_stage_and_message() {
+        let e = PlanError::Schema("expected schema 'qwyc-plan-v1'".into());
+        assert_eq!(e.stage(), "schema");
+        let s: String = e.clone().into();
+        assert!(s.contains("schema"));
+        assert!(s.contains("qwyc-plan-v1"));
+        assert_eq!(s, e.to_string());
+    }
+
+    #[test]
+    fn question_mark_converts_into_string_results() {
+        fn inner() -> Result<(), PlanError> {
+            Err(PlanError::Io("no such file".into()))
+        }
+        fn outer() -> Result<(), String> {
+            inner()?;
+            Ok(())
+        }
+        let err = outer().unwrap_err();
+        assert!(err.contains("io error"), "{err}");
+    }
+}

@@ -27,6 +27,7 @@
 pub mod coordinator;
 pub mod data;
 pub mod ensemble;
+pub mod error;
 pub mod experiments;
 pub mod fan;
 pub mod gbt;

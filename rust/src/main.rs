@@ -6,13 +6,14 @@
 //!   optimize     run QWYC (Algorithm 1 or 2) and save the fast classifier
 //!   compile-plan bundle model + fast classifier into a qwyc-plan-v1 artifact
 //!   simulate     evaluate a plan (or a deprecated model/fast pair)
-//!   serve        start the TCP serving coordinator from a plan
-//!   bench-client load-test a running server
+//!   serve        start the sharded TCP serving coordinator from a plan
+//!   reload       hot-swap the plan of a running server (RELOAD command)
+//!   bench-client load-test a running server (N pipelined connections)
 //!   experiment   regenerate paper figures/tables (fig1..fig6, tables, all)
 //!
 //! Flags are listed in USAGE below per arm; unknown flags error out.
 
-use qwyc::coordinator::{BatchPolicy, Client, Server};
+use qwyc::coordinator::{BatchPolicy, Client, Reply, Server, ServerConfig, DEFAULT_QUEUE_CAP};
 use qwyc::data::synth::{generate, Which};
 use qwyc::data::{csv, Dataset};
 use qwyc::ensemble::Ensemble;
@@ -23,7 +24,6 @@ use qwyc::plan::QwycPlan;
 use qwyc::qwyc::{
     optimize_order, optimize_thresholds_for_order, simulate, FastClassifier, QwycConfig,
 };
-use qwyc::runtime::engine::NativeEngine;
 #[cfg(feature = "pjrt")]
 use qwyc::runtime::engine::PjrtEngine;
 use qwyc::util::cli::Args;
@@ -56,6 +56,7 @@ fn run(args: &Args) -> Result<(), String> {
         Some("compile-plan") => compile_plan(args),
         Some("simulate") => simulate_cmd(args),
         Some("serve") => serve(args),
+        Some("reload") => reload_cmd(args),
         Some("bench-client") => bench_client(args),
         Some("experiment") => experiment(args),
         _ => {
@@ -83,8 +84,10 @@ USAGE: qwyc <subcommand> [flags]
   serve        --plan plan.json --addr 127.0.0.1:7077
                (deprecated: --model model.json --fast fast.json)
                [--backend native|pjrt --artifact rw1_stage --artifacts-dir artifacts]
-               [--max-batch 256 --max-wait-ms 2]
-  bench-client --addr 127.0.0.1:7077 --dataset ... --requests 5000 [--pipeline 64]
+               [--shards 1 --queue-cap 1024 --max-batch 256 --max-wait-ms 2]
+  reload       --addr 127.0.0.1:7077 --plan plan.json    (hot-swap a serving plan)
+  bench-client --addr 127.0.0.1:7077 --dataset ... --requests 5000
+               [--pipeline 64 --concurrency 1]
   experiment   fig1|fig2|fig3|fig4|fig5|fig6|table1|tables|all
                [--scale 0.1 --trees 500 --max-opt 3000 --runs 5 --out results/]
 ";
@@ -271,7 +274,7 @@ fn load_plan_or_legacy(args: &Args) -> Result<QwycPlan, String> {
     // them alongside --plan fails check_unknown instead of being
     // silently ignored.
     match args.get_opt("plan") {
-        Some(p) => QwycPlan::load(Path::new(&p)),
+        Some(p) => Ok(QwycPlan::load(Path::new(&p))?),
         None => {
             eprintln!(
                 "note: loading a --model/--fast pair is deprecated; run `qwyc compile-plan` \
@@ -279,7 +282,7 @@ fn load_plan_or_legacy(args: &Args) -> Result<QwycPlan, String> {
             );
             let ens = Ensemble::load(Path::new(&args.get_str("model", "model.json")))?;
             let fc = FastClassifier::load(Path::new(&args.get_str("fast", "fast.json")))?;
-            QwycPlan::bundle(ens, fc, "adhoc-cli", 0.0)
+            Ok(QwycPlan::bundle(ens, fc, "adhoc-cli", 0.0)?)
         }
     }
 }
@@ -311,9 +314,13 @@ fn serve(args: &Args) -> Result<(), String> {
     let backend = args.get_str("backend", "native");
     let artifact = args.get_str("artifact", "rw1_stage");
     let artifacts_dir = args.get_str("artifacts-dir", "artifacts");
-    let policy = BatchPolicy {
-        max_batch: args.get_usize("max-batch", 256)?,
-        max_wait: Duration::from_millis(args.get_u64("max-wait-ms", 2)?),
+    let config = ServerConfig {
+        shards: args.get_usize("shards", 1)?.max(1),
+        queue_cap: args.get_usize("queue-cap", DEFAULT_QUEUE_CAP)?,
+        policy: BatchPolicy {
+            max_batch: args.get_usize("max-batch", 256)?,
+            max_wait: Duration::from_millis(args.get_u64("max-wait-ms", 2)?),
+        },
     };
     let plan = load_plan_or_legacy(args)?;
     args.check_unknown()?;
@@ -326,37 +333,66 @@ fn serve(args: &Args) -> Result<(), String> {
         );
     }
     println!(
-        "serving plan '{}' ({}, T={}, backend={backend}) on {addr}; batch<={} wait<={:?}",
+        "serving plan '{}' ({}, T={}, backend={backend}, shards={}, queue_cap={}) on {addr}; \
+         batch<={} wait<={:?}",
         plan.meta.name,
         plan.ensemble.name,
         plan.ensemble.len(),
-        policy.max_batch,
-        policy.max_wait
+        config.shards,
+        config.queue_cap,
+        config.policy.max_batch,
+        config.policy.max_wait
     );
-    let server = Server::start(
-        &addr,
-        move || -> Box<dyn qwyc::runtime::engine::Engine> {
-            #[cfg(feature = "pjrt")]
-            if backend == "pjrt" {
+    #[cfg(feature = "pjrt")]
+    if backend == "pjrt" {
+        // PJRT stays a per-shard factory: device handles are not `Send`,
+        // so each shard builds its own engine inside its worker thread.
+        // No PlanSlot → the server answers RELOAD with an ERR.
+        let (ens, fc) = (plan.ensemble.clone(), plan.fc.clone());
+        let server = Server::start(
+            &addr,
+            move |_shard| -> Box<dyn qwyc::runtime::engine::Engine> {
                 let rt = qwyc::runtime::Runtime::open(Path::new(&artifacts_dir))
                     .expect("open artifacts (run `make artifacts`)");
-                return Box::new(
-                    PjrtEngine::new(rt, &artifact, &plan.ensemble, &plan.fc)
-                        .expect("pjrt engine"),
-                );
-            }
-            let _ = (&backend, &artifact, &artifacts_dir);
-            // The worker thread owns the CompiledPlan: validated and
-            // pre-permuted once here, swept for the server's lifetime.
-            Box::new(NativeEngine::from_plan(plan.compile().expect("compile plan")))
-        },
-        policy,
-    )
-    .map_err(|e| e.to_string())?;
+                Box::new(PjrtEngine::new(rt, &artifact, &ens, &fc).expect("pjrt engine"))
+            },
+            config,
+        )
+        .map_err(|e| e.to_string())?;
+        return stats_loop(server);
+    }
+    let _ = (&backend, &artifact, &artifacts_dir);
+    // Compile ONCE; all shards share the same immutable Arc'd artifact,
+    // and RELOAD swaps it at batch boundaries.
+    let compiled = plan.compile_shared()?;
+    let server = Server::start_with_plan(&addr, compiled, config).map_err(|e| e.to_string())?;
+    stats_loop(server)
+}
+
+/// Print the aggregated per-shard metrics every 10s, forever.
+fn stats_loop(server: Server) -> Result<(), String> {
     println!("listening on {} — Ctrl-C to stop", server.addr);
     loop {
         std::thread::sleep(Duration::from_secs(10));
         println!("{}", server.metrics.snapshot().report());
+    }
+}
+
+/// Ask a running server to hot-swap its plan (`RELOAD <path>`).
+fn reload_cmd(args: &Args) -> Result<(), String> {
+    let addr: std::net::SocketAddr = args
+        .get_str("addr", "127.0.0.1:7077")
+        .parse()
+        .map_err(|e| format!("--addr: {e}"))?;
+    let plan_path = args.get_str("plan", "plan.json");
+    args.check_unknown()?;
+    let mut client = Client::connect(&addr).map_err(|e| e.to_string())?;
+    let line = client.reload(&plan_path).map_err(|e| e.to_string())?;
+    if line.starts_with("RELOADED") {
+        println!("{line}");
+        Ok(())
+    } else {
+        Err(line)
     }
 }
 
@@ -366,40 +402,100 @@ fn bench_client(args: &Args) -> Result<(), String> {
         .parse()
         .map_err(|e| format!("--addr: {e}"))?;
     let requests = args.get_usize("requests", 5000)?;
-    let pipeline = args.get_usize("pipeline", 64)?;
+    let pipeline = args.get_usize("pipeline", 64)?.max(1);
+    let concurrency = args.get_usize("concurrency", 1)?.max(1);
     let (_, te) = load_data(args)?;
     args.check_unknown()?;
 
-    let mut client = Client::connect(&addr).map_err(|e| e.to_string())?;
+    // `--concurrency N` opens N pipelined connections so an N-shard
+    // server actually sees parallel load; requests are split evenly.
+    let counts: Vec<usize> = (0..concurrency)
+        .map(|c| requests / concurrency + usize::from(c < requests % concurrency))
+        .collect();
     let sw = qwyc::util::timer::Stopwatch::new();
-    let mut sent = 0usize;
-    let mut recv = 0usize;
-    let mut models_sum = 0u64;
-    let mut lat_us: Vec<f64> = Vec::with_capacity(requests);
-    while recv < requests {
-        while sent < requests && sent - recv < pipeline {
-            client.send_eval(te.row(sent % te.n)).map_err(|e| e.to_string())?;
-            sent += 1;
-        }
-        let r = client.read_response().map_err(|e| e.to_string())?;
-        models_sum += r.models as u64;
-        lat_us.push(r.latency_us as f64);
-        recv += 1;
-    }
+    let results: Vec<Result<ConnLoad, String>> = std::thread::scope(|s| {
+        let handles: Vec<_> = counts
+            .iter()
+            .enumerate()
+            .map(|(c, &n)| {
+                let te = &te;
+                s.spawn(move || run_conn_load(&addr, te, n, pipeline, c * 7919))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
     let el = sw.elapsed_s();
+
+    let mut lat_us: Vec<f64> = Vec::with_capacity(requests);
+    let (mut models_sum, mut busy) = (0u64, 0u64);
+    for r in results {
+        let load = r?;
+        lat_us.extend(load.lat_us);
+        models_sum += load.models_sum;
+        busy += load.busy;
+    }
     lat_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let answered = lat_us.len().max(1);
     println!(
-        "{} requests in {:.2}s = {:.0} rps; latency p50/p95/p99 = {:.0}/{:.0}/{:.0} us; mean models {:.2}",
+        "{} requests ({} conns) in {:.2}s = {:.0} rps; busy {}; \
+         latency p50/p95/p99 = {:.0}/{:.0}/{:.0} us; mean models {:.2}",
         requests,
+        concurrency,
         el,
         requests as f64 / el,
+        busy,
         qwyc::util::stats::percentile_sorted(&lat_us, 50.0),
         qwyc::util::stats::percentile_sorted(&lat_us, 95.0),
         qwyc::util::stats::percentile_sorted(&lat_us, 99.0),
-        models_sum as f64 / requests as f64
+        models_sum as f64 / answered as f64
     );
+    let mut client = Client::connect(&addr).map_err(|e| e.to_string())?;
     println!("server: {}", client.stats().map_err(|e| e.to_string())?);
     Ok(())
+}
+
+/// Per-connection load results (latencies of OK replies only).
+struct ConnLoad {
+    lat_us: Vec<f64>,
+    models_sum: u64,
+    busy: u64,
+}
+
+/// One closed-loop pipelined connection; BUSY replies count as completed
+/// (the request was answered — with load-shedding) but not as latency
+/// samples.
+fn run_conn_load(
+    addr: &std::net::SocketAddr,
+    te: &Dataset,
+    requests: usize,
+    pipeline: usize,
+    row_offset: usize,
+) -> Result<ConnLoad, String> {
+    let mut client = Client::connect(addr).map_err(|e| e.to_string())?;
+    let (mut sent, mut recv) = (0usize, 0usize);
+    let mut load = ConnLoad { lat_us: Vec::with_capacity(requests), models_sum: 0, busy: 0 };
+    while recv < requests {
+        while sent < requests && sent - recv < pipeline {
+            client.send_eval(te.row((row_offset + sent) % te.n)).map_err(|e| e.to_string())?;
+            sent += 1;
+        }
+        match client.read_reply().map_err(|e| e.to_string())? {
+            Reply::Ok(r) => {
+                load.models_sum += r.models as u64;
+                load.lat_us.push(r.latency_us as f64);
+                recv += 1;
+            }
+            Reply::Busy { .. } => {
+                load.busy += 1;
+                recv += 1;
+            }
+            Reply::Err { id, message } => {
+                return Err(format!("server error (id {id:?}): {message}"));
+            }
+            Reply::Other(line) => return Err(format!("unexpected reply: {line}")),
+        }
+    }
+    Ok(load)
 }
 
 fn experiment(args: &Args) -> Result<(), String> {

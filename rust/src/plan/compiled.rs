@@ -11,12 +11,20 @@
 
 use super::QwycPlan;
 use crate::ensemble::BaseModel;
+use crate::error::PlanError;
 use crate::gbt::tree::TreeSoa;
 use crate::qwyc::sweep::{sweep_batched, SweepOutcome, SweepParams};
 use crate::qwyc::SingleResult;
 use crate::util::pool::Pool;
 
 /// A validated, position-major, ready-to-sweep plan.
+///
+/// The compiled form is **immutable and self-contained** — every field
+/// is owned data, and all per-evaluation scratch (active lists, running
+/// scores, lattice walk buffers) lives with the caller, never in the
+/// plan. That makes `CompiledPlan: Send + Sync` by construction, so one
+/// compile can be shared across N serving shards behind an `Arc`
+/// (asserted below; the sharded server relies on it).
 #[derive(Clone, Debug)]
 pub struct CompiledPlan {
     /// Base models in evaluation order: `models[r]` runs at position r.
@@ -39,8 +47,15 @@ pub struct CompiledPlan {
     min_features: usize,
 }
 
+// Compile once, hand out `Arc<CompiledPlan>` to every shard: the plan
+// must stay shareable across worker threads.
+const _: fn() = || {
+    fn shared_across_shards<T: Send + Sync>() {}
+    shared_across_shards::<CompiledPlan>();
+};
+
 impl CompiledPlan {
-    pub(super) fn from_plan(plan: &QwycPlan) -> Result<CompiledPlan, String> {
+    pub(super) fn from_plan(plan: &QwycPlan) -> Result<CompiledPlan, PlanError> {
         plan.validate()?;
         let t = plan.fc.t();
         let mut models = Vec::with_capacity(t);
@@ -48,7 +63,7 @@ impl CompiledPlan {
         for (r, &m) in plan.fc.order.iter().enumerate() {
             let model = &plan.ensemble.models[m];
             if let BaseModel::Tree(tr) = model {
-                tr.validate()?;
+                tr.validate().map_err(PlanError::Compile)?;
             }
             models.push(model.clone());
             prefix_cost[r + 1] = prefix_cost[r] + plan.ensemble.costs[m] as f64;
@@ -62,17 +77,17 @@ impl CompiledPlan {
             .collect();
         let min_features = plan.ensemble.feature_count();
         if min_features == 0 && t > 0 {
-            return Err(format!(
+            return Err(PlanError::Compile(format!(
                 "plan '{}': cannot infer a feature count from the ensemble",
                 plan.meta.name
-            ));
+            )));
         }
         let n_features = if plan.meta.n_features > 0 {
             if plan.meta.n_features < min_features {
-                return Err(format!(
+                return Err(PlanError::Compile(format!(
                     "plan '{}': declared n_features {} < {} required by the base models",
                     plan.meta.name, plan.meta.n_features, min_features
-                ));
+                )));
             }
             plan.meta.n_features
         } else {

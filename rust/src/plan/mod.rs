@@ -22,10 +22,15 @@
 mod compiled;
 
 pub use compiled::CompiledPlan;
+// Re-exported so plan consumers get the artifact error type where the
+// artifact lives.
+pub use crate::error::PlanError;
 
 use crate::ensemble::Ensemble;
 use crate::qwyc::FastClassifier;
 use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 /// Schema tag written into (and required from) every plan JSON document.
 pub const PLAN_SCHEMA: &str = "qwyc-plan-v1";
@@ -74,14 +79,18 @@ impl PlanMeta {
         ])
     }
 
-    fn from_json(v: &Json) -> Result<PlanMeta, String> {
+    fn from_json(v: &Json) -> Result<PlanMeta, PlanError> {
+        let schema = |e: String| PlanError::Schema(format!("meta: {e}"));
         Ok(PlanMeta {
-            name: v.req("name")?.as_str()?.to_string(),
-            alpha: v.req("alpha")?.as_f64()?,
-            neg_only: v.req("neg_only")?.as_bool()?,
-            source: v.req("source")?.as_str()?.to_string(),
-            created_by: v.req("created_by")?.as_str()?.to_string(),
-            n_features: v.req("n_features")?.as_usize()?,
+            name: v.req("name").and_then(|v| v.as_str().map(str::to_string)).map_err(schema)?,
+            alpha: v.req("alpha").and_then(|v| v.as_f64()).map_err(schema)?,
+            neg_only: v.req("neg_only").and_then(|v| v.as_bool()).map_err(schema)?,
+            source: v.req("source").and_then(|v| v.as_str().map(str::to_string)).map_err(schema)?,
+            created_by: v
+                .req("created_by")
+                .and_then(|v| v.as_str().map(str::to_string))
+                .map_err(schema)?,
+            n_features: v.req("n_features").and_then(|v| v.as_usize()).map_err(schema)?,
         })
     }
 }
@@ -101,7 +110,7 @@ impl QwycPlan {
         ensemble: Ensemble,
         fc: FastClassifier,
         mut meta: PlanMeta,
-    ) -> Result<QwycPlan, String> {
+    ) -> Result<QwycPlan, PlanError> {
         meta.neg_only = fc.eps_pos.iter().all(|&e| e == f32::INFINITY);
         let plan = QwycPlan { ensemble, fc, meta };
         plan.validate()?;
@@ -114,7 +123,7 @@ impl QwycPlan {
         fc: FastClassifier,
         name: &str,
         alpha: f64,
-    ) -> Result<QwycPlan, String> {
+    ) -> Result<QwycPlan, PlanError> {
         QwycPlan::new(ensemble, fc, PlanMeta::named(name, alpha))
     }
 
@@ -122,30 +131,30 @@ impl QwycPlan {
     /// classifier invariants, size agreement, and bias/β consistency
     /// between the ensemble and the classifier (they are two views of
     /// the same deployed model — a mismatch is a packaging error).
-    pub fn validate(&self) -> Result<(), String> {
-        self.fc.validate()?;
+    pub fn validate(&self) -> Result<(), PlanError> {
+        self.fc.validate().map_err(PlanError::Validate)?;
         if self.ensemble.len() != self.fc.t() {
-            return Err(format!(
+            return Err(PlanError::Validate(format!(
                 "plan '{}': ensemble has {} models but classifier covers {}",
                 self.meta.name,
                 self.ensemble.len(),
                 self.fc.t()
-            ));
+            )));
         }
         if self.fc.bias != self.ensemble.bias || self.fc.beta != self.ensemble.beta {
-            return Err(format!(
+            return Err(PlanError::Validate(format!(
                 "plan '{}': classifier bias/beta ({}, {}) disagree with ensemble ({}, {})",
                 self.meta.name, self.fc.bias, self.fc.beta, self.ensemble.bias, self.ensemble.beta
-            ));
+            )));
         }
         // meta.neg_only is derived metadata; a document asserting the
         // wrong value (hand-edited artifact) must not load.
         let neg_only = self.fc.eps_pos.iter().all(|&e| e == f32::INFINITY);
         if self.meta.neg_only != neg_only {
-            return Err(format!(
+            return Err(PlanError::Validate(format!(
                 "plan '{}': meta.neg_only={} but the classifier's thresholds say {}",
                 self.meta.name, self.meta.neg_only, neg_only
-            ));
+            )));
         }
         Ok(())
     }
@@ -153,8 +162,15 @@ impl QwycPlan {
     /// Compile into the serving-ready form: models pre-permuted into π
     /// order, SoA banks built, prefix costs tabulated, feature counts
     /// agreed — all checks run here, once, instead of per call.
-    pub fn compile(&self) -> Result<CompiledPlan, String> {
+    pub fn compile(&self) -> Result<CompiledPlan, PlanError> {
         CompiledPlan::from_plan(self)
+    }
+
+    /// Compile straight into the shared serving form: an
+    /// `Arc<CompiledPlan>` ready to hand to N engine shards (and to a
+    /// [`PlanSlot`] for hot-reload).
+    pub fn compile_shared(&self) -> Result<Arc<CompiledPlan>, PlanError> {
+        self.compile().map(Arc::new)
     }
 
     // ---- serialization (qwyc-plan-v1) ---------------------------------
@@ -168,15 +184,21 @@ impl QwycPlan {
         ])
     }
 
-    pub fn from_json(v: &Json) -> Result<QwycPlan, String> {
-        let schema = v.req("schema")?.as_str()?;
+    pub fn from_json(v: &Json) -> Result<QwycPlan, PlanError> {
+        let schema =
+            v.req("schema").and_then(|v| v.as_str()).map_err(PlanError::Schema)?;
         if schema != PLAN_SCHEMA {
-            return Err(format!("expected schema '{PLAN_SCHEMA}', got '{schema}'"));
+            return Err(PlanError::Schema(format!(
+                "expected schema '{PLAN_SCHEMA}', got '{schema}'"
+            )));
         }
+        let part = |key: &str| v.req(key).map_err(PlanError::Schema);
         let plan = QwycPlan {
-            ensemble: Ensemble::from_json(v.req("ensemble")?)?,
-            fc: FastClassifier::from_json(v.req("fast")?)?,
-            meta: PlanMeta::from_json(v.req("meta")?)?,
+            ensemble: Ensemble::from_json(part("ensemble")?)
+                .map_err(|e| PlanError::Schema(format!("ensemble: {e}")))?,
+            fc: FastClassifier::from_json(part("fast")?)
+                .map_err(|e| PlanError::Schema(format!("fast: {e}")))?,
+            meta: PlanMeta::from_json(part("meta")?)?,
         };
         plan.validate()?;
         Ok(plan)
@@ -186,8 +208,55 @@ impl QwycPlan {
         crate::util::json::write_file(path, &self.to_json())
     }
 
-    pub fn load(path: &std::path::Path) -> Result<QwycPlan, String> {
-        QwycPlan::from_json(&crate::util::json::read_file(path)?)
+    pub fn load(path: &std::path::Path) -> Result<QwycPlan, PlanError> {
+        // read_file folds file-IO and JSON-syntax failures into one
+        // message; both mean "the artifact bytes are unusable" — Io.
+        let doc = crate::util::json::read_file(path).map_err(PlanError::Io)?;
+        QwycPlan::from_json(&doc)
+    }
+}
+
+// ---------------------------------------------------------------- slot
+
+/// Shared, atomically swappable handle to the *current* serving plan —
+/// the control-plane side of `RELOAD`.
+///
+/// Engine shards keep their own `Arc<CompiledPlan>` and compare
+/// [`PlanSlot::generation`] (one atomic load) at every batch boundary;
+/// only on a mismatch do they take the mutex and clone the new handle.
+/// A batch mid-classification finishes against the plan it started
+/// with, and shards adopt the new plan at their next batch boundary —
+/// the `ArcSwap` pattern with std-only parts (Mutex<Arc<_>> + an
+/// AtomicU64 generation as the fast path).
+pub struct PlanSlot {
+    current: Mutex<Arc<CompiledPlan>>,
+    generation: AtomicU64,
+}
+
+impl PlanSlot {
+    pub fn new(plan: Arc<CompiledPlan>) -> PlanSlot {
+        PlanSlot { current: Mutex::new(plan), generation: AtomicU64::new(0) }
+    }
+
+    /// Generation counter; bumped by every [`PlanSlot::swap`].
+    pub fn generation(&self) -> u64 {
+        self.generation.load(Ordering::Acquire)
+    }
+
+    /// Clone the current plan handle.
+    pub fn load(&self) -> Arc<CompiledPlan> {
+        self.current.lock().unwrap().clone()
+    }
+
+    /// Install a new plan and return the new generation. The plan is
+    /// published before the generation bump, so a reader that observes
+    /// the new generation always loads the new (or an even newer) plan.
+    pub fn swap(&self, plan: Arc<CompiledPlan>) -> u64 {
+        let mut cur = self.current.lock().unwrap();
+        *cur = plan;
+        let gen = self.generation.fetch_add(1, Ordering::AcqRel) + 1;
+        drop(cur);
+        gen
     }
 }
 
@@ -262,6 +331,75 @@ mod tests {
             }
         }
         assert!(QwycPlan::from_json(&j2).is_err());
+    }
+
+    #[test]
+    fn errors_are_staged() {
+        // Missing file → Io; wrong schema tag → Schema; mismatched
+        // parts → Validate (the typed replacements for the old strings).
+        let e = QwycPlan::load(std::path::Path::new("/nonexistent/plan.json")).unwrap_err();
+        assert_eq!(e.stage(), "io", "{e}");
+
+        let mut j = toy_plan().to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("schema".into(), Json::str("qwyc-plan-v0"));
+        }
+        assert_eq!(QwycPlan::from_json(&j).unwrap_err().stage(), "schema");
+
+        let plan = toy_plan();
+        let mut fc = plan.fc.clone();
+        fc.bias = 0.5;
+        let e = QwycPlan::bundle(plan.ensemble.clone(), fc, "bad", 0.0).unwrap_err();
+        assert_eq!(e.stage(), "validate", "{e}");
+
+        let mut narrow = plan;
+        narrow.meta.n_features = 1;
+        assert_eq!(narrow.compile().unwrap_err().stage(), "compile");
+    }
+
+    #[test]
+    fn plan_slot_swaps_atomically_and_bumps_generation() {
+        let plan = toy_plan();
+        let slot = PlanSlot::new(plan.compile_shared().unwrap());
+        assert_eq!(slot.generation(), 0);
+        let before = slot.load();
+        assert_eq!(before.t(), 2);
+
+        let mut wide = toy_plan();
+        wide.meta.n_features = 7;
+        let gen = slot.swap(wide.compile_shared().unwrap());
+        assert_eq!(gen, 1);
+        assert_eq!(slot.generation(), 1);
+        // New readers see the new plan; the old handle stays valid for
+        // any batch still in flight.
+        assert_eq!(slot.load().n_features(), 7);
+        assert_eq!(before.n_features(), 2);
+    }
+
+    #[test]
+    fn plan_slot_is_safe_under_concurrent_swap_and_load() {
+        let slot = std::sync::Arc::new(PlanSlot::new(toy_plan().compile_shared().unwrap()));
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let slot = slot.clone();
+                s.spawn(move || {
+                    for _ in 0..200 {
+                        let gen = slot.generation();
+                        let plan = slot.load();
+                        // A loaded plan is always fully formed.
+                        assert_eq!(plan.t(), 2);
+                        assert!(slot.generation() >= gen);
+                    }
+                });
+            }
+            let swapper = slot.clone();
+            s.spawn(move || {
+                for _ in 0..50 {
+                    swapper.swap(toy_plan().compile_shared().unwrap());
+                }
+            });
+        });
+        assert_eq!(slot.generation(), 50);
     }
 
     #[test]

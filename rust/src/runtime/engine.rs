@@ -27,6 +27,7 @@ use crate::plan::{CompiledPlan, QwycPlan};
 use crate::qwyc::sweep::SweepOutcome;
 use crate::qwyc::{FastClassifier, SingleResult};
 use crate::util::pool::Pool;
+use std::sync::Arc;
 
 /// Example-block width for batched serving: small enough that a block's
 /// feature rows and running scores stay cache-resident through the whole
@@ -61,8 +62,9 @@ impl From<SweepOutcome> for Outcome {
 }
 
 /// Engine abstraction used by the coordinator. Engines are constructed
-/// inside the worker thread that owns them (see `Server::start`'s factory
-/// parameter) because PJRT handles are not `Send`.
+/// inside the shard worker thread that owns them (see `Server::start`'s
+/// per-shard factory parameter) because PJRT handles are not `Send` —
+/// only the immutable `Arc<CompiledPlan>` crosses threads.
 pub trait Engine {
     /// Number of input features expected per example.
     fn n_features(&self) -> usize;
@@ -70,14 +72,23 @@ pub trait Engine {
     fn classify_batch(&mut self, x: &[f32], n: usize) -> Result<Vec<Outcome>, String>;
     /// Human-readable backend name (metrics/logs).
     fn backend(&self) -> &'static str;
+    /// Atomically adopt a new compiled plan (the serving `RELOAD` path).
+    /// Called by a shard worker at a batch boundary, never mid-batch.
+    /// Backends whose device state is baked at construction (PJRT's
+    /// staged uploads) keep the default and decline the swap.
+    fn swap_plan(&mut self, _plan: Arc<CompiledPlan>) -> Result<(), String> {
+        Err(format!("backend '{}' does not support plan hot-reload", self.backend()))
+    }
 }
 
 // ---------------------------------------------------------------- native
 
-/// Pure-rust early-exit evaluation: a [`CompiledPlan`] plus the worker
-/// pool that fans its blocked sweep.
+/// Pure-rust early-exit evaluation: a shared immutable [`CompiledPlan`]
+/// plus the worker pool that fans its blocked sweep. N serving shards
+/// hold N `Arc` handles to ONE compiled plan — per-evaluation scratch
+/// lives inside the sweep call, so sharing is free and safe.
 pub struct NativeEngine {
-    plan: CompiledPlan,
+    plan: Arc<CompiledPlan>,
     pool: Pool,
 }
 
@@ -88,6 +99,12 @@ impl NativeEngine {
     }
 
     pub fn from_plan_with_pool(plan: CompiledPlan, pool: Pool) -> NativeEngine {
+        NativeEngine::from_shared(Arc::new(plan), pool)
+    }
+
+    /// Share an already-compiled plan (the sharded-server path: compile
+    /// once, hand every shard a handle).
+    pub fn from_shared(plan: Arc<CompiledPlan>, pool: Pool) -> NativeEngine {
         NativeEngine { plan, pool }
     }
 
@@ -119,6 +136,13 @@ impl Engine for NativeEngine {
 
     fn backend(&self) -> &'static str {
         "native"
+    }
+
+    fn swap_plan(&mut self, plan: Arc<CompiledPlan>) -> Result<(), String> {
+        // The old Arc stays alive for any reader still holding it; this
+        // engine's next batch sweeps the new plan.
+        self.plan = plan;
+        Ok(())
     }
 }
 

@@ -1,12 +1,15 @@
-//! End-to-end serving: TCP server + dynamic batcher + early-exit engine.
-//! Exercises the full coordinator with both backends (native always; PJRT
-//! when artifacts are present).
+//! End-to-end serving: TCP server + dynamic batcher + sharded early-exit
+//! engines. Exercises the full coordinator with both backends (native
+//! always; PJRT when artifacts are present), the 1-vs-N-shard bitwise
+//! equivalence contract, RELOAD hot-swap, and BUSY load shedding.
 
-use qwyc::coordinator::{BatchPolicy, Client, Server};
+use qwyc::coordinator::{BatchPolicy, Client, Reply, Server, ServerConfig};
 use qwyc::data::synth::{generate, Which};
 use qwyc::lattice::{train_joint, LatticeParams};
+use qwyc::plan::QwycPlan;
 use qwyc::qwyc::{optimize_order, QwycConfig};
 use qwyc::runtime::engine::NativeEngine;
+use std::collections::BTreeMap;
 use std::time::Duration;
 
 fn tiny_model() -> (qwyc::data::Dataset, qwyc::ensemble::Ensemble, qwyc::qwyc::FastClassifier) {
@@ -20,6 +23,17 @@ fn tiny_model() -> (qwyc::data::Dataset, qwyc::ensemble::Ensemble, qwyc::qwyc::F
     (te, ens, fc)
 }
 
+fn tiny_plan_shared(
+    ens: &qwyc::ensemble::Ensemble,
+    fc: &qwyc::qwyc::FastClassifier,
+    d: usize,
+    name: &str,
+) -> std::sync::Arc<qwyc::plan::CompiledPlan> {
+    let mut plan = QwycPlan::bundle(ens.clone(), fc.clone(), name, 0.01).expect("bundle");
+    plan.meta.n_features = d;
+    plan.compile_shared().expect("compile")
+}
+
 #[test]
 fn server_answers_eval_requests_correctly() {
     let (te, ens, fc) = tiny_model();
@@ -27,7 +41,7 @@ fn server_answers_eval_requests_correctly() {
     let (ens2, fc2) = (ens.clone(), fc.clone());
     let server = Server::start(
         "127.0.0.1:0",
-        move || Box::new(NativeEngine::new(ens2, fc2, d)),
+        move |_shard| Box::new(NativeEngine::new(ens2.clone(), fc2.clone(), d)),
         BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(1) },
     )
     .expect("server start");
@@ -53,7 +67,7 @@ fn server_batches_pipelined_requests() {
     let d = te.d;
     let server = Server::start(
         "127.0.0.1:0",
-        move || Box::new(NativeEngine::new(ens, fc, d)),
+        move |_shard| Box::new(NativeEngine::new(ens.clone(), fc.clone(), d)),
         BatchPolicy { max_batch: 64, max_wait: Duration::from_millis(5) },
     )
     .expect("server start");
@@ -76,13 +90,224 @@ fn server_batches_pipelined_requests() {
     server.stop();
 }
 
+/// The sharding acceptance contract: per-request responses (decision,
+/// score bits, stop position) are identical between a 1-shard and a
+/// 4-shard server, across multiple concurrent pipelined connections —
+/// each example's sweep is independent, so shard placement must not
+/// perturb outcomes.
+#[test]
+fn responses_bitwise_identical_at_1_and_4_shards() {
+    let (te, ens, fc) = tiny_model();
+    let d = te.d;
+    let plan = tiny_plan_shared(&ens, &fc, d, "shard-equiv");
+    const CONNS: usize = 3;
+    const PER_CONN: usize = 80;
+
+    // id → (positive, score bits, models), per connection.
+    let run = |shards: usize| -> Vec<BTreeMap<u64, (bool, u32, u32)>> {
+        let config = ServerConfig {
+            shards,
+            queue_cap: 4096,
+            policy: BatchPolicy { max_batch: 16, max_wait: Duration::from_millis(1) },
+        };
+        let server =
+            Server::start_with_plan("127.0.0.1:0", plan.clone(), config).expect("server start");
+        let addr = server.addr;
+        let results: Vec<BTreeMap<u64, (bool, u32, u32)>> = std::thread::scope(|s| {
+            let te = &te;
+            let handles: Vec<_> = (0..CONNS)
+                .map(|c| {
+                    s.spawn(move || {
+                        let mut client = Client::connect(&addr).expect("connect");
+                        let mut ids = Vec::new();
+                        for i in 0..PER_CONN {
+                            let row = te.row((c * PER_CONN + i) % te.n);
+                            ids.push(client.send_eval(row).expect("send"));
+                        }
+                        let mut got = BTreeMap::new();
+                        for _ in 0..PER_CONN {
+                            let r = client.read_response().expect("read");
+                            got.insert(r.id, (r.positive, r.score.to_bits(), r.models));
+                        }
+                        assert_eq!(got.len(), PER_CONN, "conn {c}: duplicate or lost ids");
+                        for id in ids {
+                            assert!(got.contains_key(&id), "conn {c}: id {id} unanswered");
+                        }
+                        got
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        server.stop();
+        results
+    };
+
+    let one = run(1);
+    let four = run(4);
+    for (c, (a, b)) in one.iter().zip(four.iter()).enumerate() {
+        assert_eq!(a, b, "conn {c}: 1-shard vs 4-shard responses differ");
+    }
+    // Cross-check against the reference single-example path.
+    for (c, m) in one.iter().enumerate() {
+        for (&id, &(positive, score_bits, models)) in m {
+            let want = fc.eval_single(&ens, te.row((c * PER_CONN + id as usize) % te.n));
+            assert_eq!(positive, want.positive, "conn {c} id {id}");
+            assert_eq!(models as usize, want.models_evaluated, "conn {c} id {id}");
+            // The protocol prints %.6f, so compare through the same
+            // formatting, not raw bits of the f32.
+            let printed: f32 = format!("{:.6}", want.score).parse().unwrap();
+            assert_eq!(score_bits, printed.to_bits(), "conn {c} id {id}");
+        }
+    }
+}
+
+/// RELOAD swaps the shared plan at batch boundaries: nothing in flight
+/// errors, the reply names the new plan, and subsequent requests still
+/// match the reference path.
+#[test]
+fn reload_swaps_plan_without_erroring_inflight_requests() {
+    let (te, ens, fc) = tiny_model();
+    let d = te.d;
+    let plan_a = tiny_plan_shared(&ens, &fc, d, "plan-a");
+    // Same model, new artifact name — deployment's "re-optimized plan"
+    // with identical geometry, so outcomes stay comparable.
+    let mut plan_b = QwycPlan::bundle(ens.clone(), fc.clone(), "plan-b", 0.01).expect("bundle");
+    plan_b.meta.n_features = d;
+    let plan_b_path = std::env::temp_dir().join("qwyc_e2e_reload_plan_b.json");
+    plan_b.save(&plan_b_path).expect("save plan-b");
+
+    let config = ServerConfig {
+        shards: 2,
+        queue_cap: 4096,
+        policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+    };
+    let server = Server::start_with_plan("127.0.0.1:0", plan_a, config).expect("server start");
+
+    // Fill the pipe, then reload mid-stream from a second connection.
+    let mut client = Client::connect(&server.addr).expect("connect");
+    let n = 120.min(te.n);
+    for i in 0..n {
+        client.send_eval(te.row(i)).expect("send");
+    }
+    let mut ctl = Client::connect(&server.addr).expect("connect ctl");
+    let reply = ctl.reload(plan_b_path.to_str().unwrap()).expect("reload");
+    assert!(
+        reply.starts_with("RELOADED plan-b gen=1"),
+        "unexpected reload reply: {reply}"
+    );
+
+    // Every in-flight request answers OK and matches the reference path.
+    for _ in 0..n {
+        let r = client.read_response().expect("in-flight request errored");
+        let want = fc.eval_single(&ens, te.row(r.id as usize));
+        assert_eq!(r.positive, want.positive, "id {}", r.id);
+        assert_eq!(r.models as usize, want.models_evaluated, "id {}", r.id);
+    }
+    // And so do fresh requests against the swapped plan.
+    for i in 0..20 {
+        let r = client.eval(te.row(i)).expect("post-reload eval");
+        let want = fc.eval_single(&ens, te.row(i));
+        assert_eq!(r.positive, want.positive, "post-reload {i}");
+        assert_eq!(r.models as usize, want.models_evaluated, "post-reload {i}");
+    }
+    // A bogus path fails loudly without killing the server.
+    let err = ctl.reload("/nonexistent/plan.json").expect("reload io");
+    assert!(err.starts_with("ERR - reload:"), "{err}");
+    assert!(client.eval(te.row(0)).is_ok(), "server died after failed reload");
+    server.stop();
+    std::fs::remove_file(&plan_b_path).ok();
+}
+
+/// Generic-factory servers (PJRT/custom engines) have no plan slot and
+/// must refuse RELOAD instead of hanging or crashing.
+#[test]
+fn reload_without_plan_slot_is_refused() {
+    let (te, ens, fc) = tiny_model();
+    let d = te.d;
+    let server = Server::start(
+        "127.0.0.1:0",
+        move |_shard| Box::new(NativeEngine::new(ens.clone(), fc.clone(), d)),
+        BatchPolicy::default(),
+    )
+    .expect("server start");
+    let mut client = Client::connect(&server.addr).expect("connect");
+    let reply = client.reload("whatever.json").expect("reload");
+    assert!(reply.starts_with("ERR - reload unsupported"), "{reply}");
+    server.stop();
+}
+
+/// A full shard queue sheds load with `BUSY <id>` instead of queueing
+/// unbounded latency; every pipelined request still gets exactly one
+/// id-correlated reply.
+#[test]
+fn full_queue_sheds_load_with_busy() {
+    struct Slow;
+    impl qwyc::runtime::engine::Engine for Slow {
+        fn n_features(&self) -> usize {
+            2
+        }
+        fn classify_batch(
+            &mut self,
+            _x: &[f32],
+            n: usize,
+        ) -> Result<Vec<qwyc::runtime::engine::Outcome>, String> {
+            std::thread::sleep(Duration::from_millis(30));
+            Ok(vec![
+                qwyc::runtime::engine::Outcome {
+                    positive: false,
+                    score: 0.0,
+                    models_evaluated: 1,
+                    early: true,
+                };
+                n
+            ])
+        }
+        fn backend(&self) -> &'static str {
+            "slow"
+        }
+    }
+    let config = ServerConfig {
+        shards: 1,
+        queue_cap: 1,
+        policy: BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(0) },
+    };
+    let server =
+        Server::start("127.0.0.1:0", |_shard| Box::new(Slow), config).expect("server start");
+    let mut client = Client::connect(&server.addr).expect("connect");
+    let n = 20u64;
+    for _ in 0..n {
+        client.send_eval(&[0.1, 0.2]).expect("send");
+    }
+    let (mut ok, mut busy) = (0u64, 0u64);
+    let mut seen = std::collections::BTreeSet::new();
+    for _ in 0..n {
+        match client.read_reply().expect("reply") {
+            Reply::Ok(r) => {
+                ok += 1;
+                assert!(seen.insert(r.id), "duplicate id {}", r.id);
+            }
+            Reply::Busy { id } => {
+                busy += 1;
+                assert!(seen.insert(id), "duplicate id {id}");
+            }
+            other => panic!("unexpected reply: {other:?}"),
+        }
+    }
+    assert_eq!(ok + busy, n);
+    assert!(ok >= 1, "nothing was served");
+    assert!(busy >= 1, "bounded queue never shed load (ok={ok})");
+    assert_eq!(seen.len() as u64, n, "ids lost or duplicated");
+    server.stop();
+}
+
 #[test]
 fn server_rejects_malformed_requests() {
     let (te, ens, fc) = tiny_model();
     let d = te.d;
     let server = Server::start(
         "127.0.0.1:0",
-        move || Box::new(NativeEngine::new(ens, fc, d)),
+        move |_shard| Box::new(NativeEngine::new(ens.clone(), fc.clone(), d)),
         BatchPolicy::default(),
     )
     .expect("server start");
@@ -90,20 +315,28 @@ fn server_rejects_malformed_requests() {
     let mut s = std::net::TcpStream::connect(server.addr).unwrap();
     writeln!(s, "EVAL notanumber 1,2").unwrap();
     writeln!(s, "BOGUS").unwrap();
-    writeln!(s, "EVAL 1 1.0,2.0").unwrap(); // wrong feature count
+    writeln!(s, "EVAL 7 1.0,2.0").unwrap(); // wrong feature count
     let mut r = BufReader::new(s.try_clone().unwrap());
+    let mut lines = Vec::new();
     for _ in 0..3 {
         let mut line = String::new();
         r.read_line(&mut line).unwrap();
         assert!(line.starts_with("ERR"), "{line}");
+        lines.push(line.trim().to_string());
     }
+    // Unparseable requests carry the `-` placeholder id; the
+    // wrong-feature-count ERR must echo the request's own id.
+    assert!(lines[0].starts_with("ERR - "), "{}", lines[0]);
+    assert!(lines[1].starts_with("ERR - "), "{}", lines[1]);
+    assert!(lines[2].starts_with("ERR 7 "), "{}", lines[2]);
     server.stop();
 }
 
 #[test]
-fn failing_engine_reports_errors_to_clients() {
+fn failing_engine_reports_id_correlated_errors() {
     // Failure injection: an engine that always errors must surface ERR
-    // responses (not hangs, not dropped connections).
+    // responses carrying each request's id (not hangs, not dropped
+    // connections), so pipelined clients can correlate.
     struct Broken;
     impl qwyc::runtime::engine::Engine for Broken {
         fn n_features(&self) -> usize {
@@ -120,16 +353,22 @@ fn failing_engine_reports_errors_to_clients() {
             "broken"
         }
     }
-    let server = Server::start("127.0.0.1:0", || Box::new(Broken), BatchPolicy::default())
+    let server = Server::start("127.0.0.1:0", |_shard| Box::new(Broken), BatchPolicy::default())
         .expect("server start");
-    use std::io::{BufRead, BufReader, Write};
-    let mut s = std::net::TcpStream::connect(server.addr).unwrap();
-    writeln!(s, "EVAL 0 0.5,0.5").unwrap();
-    let mut r = BufReader::new(s.try_clone().unwrap());
-    let mut line = String::new();
-    r.read_line(&mut line).unwrap();
-    assert!(line.starts_with("ERR"), "{line}");
-    assert!(line.contains("injected failure"), "{line}");
+    let mut client = Client::connect(&server.addr).expect("connect");
+    client.send_eval(&[0.5, 0.5]).expect("send"); // id 0
+    client.send_eval(&[0.5, 0.5]).expect("send"); // id 1
+    let mut ids = std::collections::BTreeSet::new();
+    for _ in 0..2 {
+        match client.read_reply().expect("reply") {
+            Reply::Err { id, message } => {
+                assert!(message.contains("injected failure"), "{message}");
+                ids.insert(id.expect("engine ERR must carry the request id"));
+            }
+            other => panic!("unexpected reply: {other:?}"),
+        }
+    }
+    assert_eq!(ids.into_iter().collect::<Vec<_>>(), vec![0, 1]);
     server.stop();
 }
 
@@ -161,7 +400,7 @@ fn pjrt_backend_serves_when_artifacts_exist() {
 
     let server = Server::start(
         "127.0.0.1:0",
-        move || {
+        move |_shard| {
             let rt = qwyc::runtime::Runtime::open(std::path::Path::new("artifacts")).unwrap();
             Box::new(
                 qwyc::runtime::engine::PjrtEngine::new(rt, "demo_stage", &ens2, &fc2).unwrap(),
