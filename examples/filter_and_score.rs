@@ -8,9 +8,11 @@
 
 use qwyc::coordinator::FilterPipeline;
 use qwyc::data::synth::{generate, Which};
-use qwyc::lattice::{train_joint, LatticeParams};
+use qwyc::lattice::LatticeParams;
+use qwyc::pipeline::{PlanBuilder, TrainSpec};
 use qwyc::plan::QwycPlan;
-use qwyc::qwyc::{optimize_order, simulate, QwycConfig};
+use qwyc::qwyc::{simulate, QwycConfig};
+use qwyc::util::pool::Pool;
 
 fn main() {
     // RW1 geometry: 5 jointly-trained lattices on 13-of-16 features,
@@ -23,18 +25,27 @@ fn main() {
         test_ds.positive_rate() * 100.0
     );
     let params = LatticeParams { n_lattices: 5, dim: 13, steps: 300, ..Default::default() };
-    let (ensemble, _) = train_joint(&train_ds, &params);
+    // Train + optimize through the typed pipeline. Only rejection
+    // thresholds are optimized (neg_only): any positive classification
+    // falls through to the full score. Tight α: rejecting a
+    // would-be-positive costs real recall here, so the budget is a
+    // quarter of the positive prior.
+    let cfg = QwycConfig { alpha: 0.001, neg_only: true, ..Default::default() };
+    let optimized = PlanBuilder::new("filter-demo")
+        .train(TrainSpec::lattice_joint(&train_ds, params))
+        .expect("train lattice ensemble")
+        .optimize(&cfg, &Pool::from_env())
+        .expect("optimize");
     println!("trained T=5 lattice ensemble (2^13 = 8192 vertices each)");
 
-    // Optimize only rejection thresholds: any positive classification
-    // falls through to the full score.
-    let sm_train = ensemble.score_matrix(&train_ds);
-    let sm_test = ensemble.score_matrix(&test_ds);
-    // Tight α: rejecting a would-be-positive costs real recall here, so
-    // the budget is a quarter of the positive prior.
-    let cfg = QwycConfig { alpha: 0.001, neg_only: true, ..Default::default() };
-    let fc = optimize_order(&sm_train, &cfg);
-    let sim = simulate(&fc, &sm_test);
+    // The artifact the builder emits is what online serving deploys; the
+    // filter consumes the same round-tripped qwyc-plan-v1 document (and
+    // the same sweep kernel).
+    let plan = optimized.into_plan().expect("bundle plan");
+    let plan = QwycPlan::from_json(&plan.to_json()).expect("plan roundtrip");
+
+    let sm_test = plan.ensemble.score_matrix(&test_ds);
+    let sim = simulate(&plan.fc, &sm_test);
     println!(
         "QWYC (neg-only): mean {:.2}/5 models per candidate ({:.1}x speedup), \
          {:.2}% decisions differ from full ensemble",
@@ -44,11 +55,6 @@ fn main() {
     );
 
     // Run the actual pipeline: reject early, fully score survivors, rank.
-    // The filter consumes the same round-tripped qwyc-plan-v1 artifact
-    // (and the same sweep kernel) that online serving deploys.
-    let plan =
-        QwycPlan::bundle(ensemble, fc, "filter-demo", 0.001).expect("bundle plan");
-    let plan = QwycPlan::from_json(&plan.to_json()).expect("plan roundtrip");
     let pipeline = FilterPipeline::from_plan(&plan).expect("neg-only classifier");
     let (stats, ranked) = pipeline.run_batch(&test_ds.x, test_ds.n);
     println!(

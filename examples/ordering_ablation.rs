@@ -12,8 +12,10 @@ use qwyc::data::synth::{generate, Which};
 use qwyc::fan::FanClassifier;
 use qwyc::gbt::{train, GbtParams};
 use qwyc::orderings;
+use qwyc::pipeline::PlanBuilder;
 use qwyc::plan::QwycPlan;
-use qwyc::qwyc::{optimize_order, optimize_thresholds_for_order, simulate, QwycConfig};
+use qwyc::qwyc::{optimize_thresholds_for_order, simulate, QwycConfig};
+use qwyc::util::pool::Pool;
 
 fn main() {
     let alpha = 0.005;
@@ -39,12 +41,17 @@ fn main() {
         );
     };
 
-    // QWYC*: joint optimization, shipped and re-read as a qwyc-plan-v1
-    // artifact so the ablation's headline row uses the deployable path.
+    // QWYC*: joint optimization through the typed pipeline, shipped and
+    // re-read as a qwyc-plan-v1 artifact so the ablation's headline row
+    // uses the deployable path.
     let cfg = QwycConfig { alpha, max_opt_examples: 4000, ..Default::default() };
-    let star_plan =
-        QwycPlan::bundle(ens.clone(), optimize_order(&sm_tr, &cfg), "ablation-star", alpha)
-            .expect("bundle plan");
+    let star_plan = PlanBuilder::new("ablation-star")
+        .with_scores(&ens, &sm_tr)
+        .expect("scores entry")
+        .optimize(&cfg, &Pool::from_env())
+        .expect("optimize")
+        .into_plan()
+        .expect("bundle plan");
     let star_plan = QwycPlan::from_json(&star_plan.to_json()).expect("plan roundtrip");
     let star = simulate(&star_plan.fc, &sm_te);
     show("QWYC* (joint order+thresholds)", &star);

@@ -1,0 +1,71 @@
+//! The typed pipeline in one sitting: exactly what an embedder writes.
+//!
+//! `PlanBuilder` walks the paper's whole flow through typed stages —
+//! train → optimize → compile — and `EvalSession::decide_iter` streams
+//! per-example `Decision`s without materializing a batch. The example
+//! ends by checking the paper's constraint live: the streamed decisions
+//! differ from the full ensemble on at most a fraction α of the
+//! optimization set.
+//!
+//! Run: `cargo run --release --example pipeline_quickstart`
+
+use qwyc::prelude::*;
+
+fn main() -> Result<(), QwycError> {
+    // 1. Data + typed pipeline: train an Adult-like GBT ensemble, then
+    //    jointly optimize evaluation order and early-exit thresholds.
+    let alpha = 0.005;
+    let (train_ds, test_ds) = generate(Which::AdultLike, 42, 0.05);
+    let spec = TrainSpec::gbt(
+        &train_ds,
+        GbtParams { n_trees: 120, max_depth: 4, ..Default::default() },
+    );
+    let optimized = PlanBuilder::new("pipeline-quickstart")
+        .with_source("examples/pipeline_quickstart.rs")
+        .train(spec)?
+        .optimize(&QwycConfig { alpha, ..Default::default() }, &Pool::from_env())?;
+    println!(
+        "trained + optimized: T={} models, alpha={alpha}, order head {:?}",
+        optimized.classifier().t(),
+        &optimized.classifier().order[..5.min(optimized.classifier().t())]
+    );
+
+    // 2. Compile once; the artifact is also what `qwyc serve --plan`
+    //    would deploy (save it with `optimized.plan()?.save(...)`).
+    let session = optimized.session()?;
+
+    // 3. Stream decisions over the held-out set — pull-based, so early
+    //    consumers never pay for the rest of the buffer.
+    let mut exits = 0u64;
+    let mut models = 0u64;
+    let mut positives = 0usize;
+    for d in session.decide_iter(&test_ds.x, test_ds.n)? {
+        exits += u64::from(d.exited_early);
+        models += u64::from(d.exit_position);
+        positives += usize::from(d.label);
+    }
+    println!(
+        "test: {} examples, {:.1}% early exits, mean models {:.2}/{}, {:.1}% positive",
+        test_ds.n,
+        exits as f64 / test_ds.n as f64 * 100.0,
+        models as f64 / test_ds.n as f64,
+        session.plan().t(),
+        positives as f64 / test_ds.n as f64 * 100.0
+    );
+
+    // 4. The paper's constraint, live on the optimization set: streamed
+    //    decisions differ from the full ensemble on ≤ α of examples.
+    let full: Vec<bool> = (0..train_ds.n)
+        .map(|i| session.plan().eval_full(train_ds.row(i)) >= session.plan().beta())
+        .collect();
+    let diffs = session
+        .decide_iter(&train_ds.x, train_ds.n)?
+        .enumerate()
+        .filter(|(i, d)| d.label != full[*i])
+        .count();
+    let rate = diffs as f64 / train_ds.n as f64;
+    println!("train diff rate {:.4}% (alpha {:.2}%)", rate * 100.0, alpha * 100.0);
+    assert!(rate <= alpha + 1e-9, "diff rate {rate} exceeded alpha {alpha}");
+    println!("OK: early-exit decisions stay within the faithfulness budget");
+    Ok(())
+}

@@ -8,8 +8,10 @@
 
 use qwyc::data::synth::{generate, Which};
 use qwyc::gbt::{train, GbtParams};
+use qwyc::pipeline::PlanBuilder;
 use qwyc::plan::QwycPlan;
 use qwyc::qwyc::{optimize_order, optimize_thresholds_for_order, simulate, QwycConfig};
+use qwyc::util::pool::Pool;
 
 fn main() {
     // 1. Data + ensemble (scaled down for a fast demo; geometry is real).
@@ -51,13 +53,18 @@ fn main() {
     }
 
     // 3. Joint optimization vs fixed GBT order (paper Figure 1's gap).
-    // The QWYC* side ships as a qwyc-plan-v1 artifact (bundle → JSON
-    // round-trip) so this demo evaluates exactly what `serve --plan` runs.
+    // The QWYC* side goes through the typed pipeline builder and ships
+    // as a qwyc-plan-v1 artifact (JSON round-trip), so this demo
+    // evaluates exactly what `serve --plan` runs.
     let alpha = 0.005;
     let cfg = QwycConfig { alpha, ..Default::default() };
-    let plan =
-        QwycPlan::bundle(ensemble.clone(), optimize_order(&sm_train, &cfg), "quickstart", alpha)
-            .expect("bundle plan");
+    let plan = PlanBuilder::new("quickstart")
+        .with_scores(&ensemble, &sm_train)
+        .expect("scores entry")
+        .optimize(&cfg, &Pool::from_env())
+        .expect("optimize")
+        .into_plan()
+        .expect("bundle plan");
     let plan = QwycPlan::from_json(&plan.to_json()).expect("plan roundtrip");
     let star = simulate(&plan.fc, &sm_test);
     let natural: Vec<usize> = (0..sm_train.t).collect();

@@ -16,8 +16,10 @@ use qwyc::coordinator::{BatchPolicy, Client, Server, ServerConfig};
 use qwyc::data::synth::{generate, Which};
 use qwyc::data::Dataset;
 use qwyc::lattice::{train_joint, LatticeParams};
+use qwyc::pipeline::PlanBuilder;
 use qwyc::plan::QwycPlan;
-use qwyc::qwyc::{optimize_order, FastClassifier, QwycConfig};
+use qwyc::qwyc::{FastClassifier, QwycConfig};
+use qwyc::util::pool::Pool;
 #[cfg(feature = "pjrt")]
 use qwyc::runtime::engine::{Engine, PjrtEngine};
 use std::time::Duration;
@@ -49,7 +51,13 @@ fn main() {
         &LatticeParams { n_lattices: 4, dim: 3, steps: 250, ..Default::default() },
     );
     let sm = ens.score_matrix(&tr);
-    let fc = optimize_order(&sm, &QwycConfig { alpha: 0.005, ..Default::default() });
+    let fc = PlanBuilder::new("serve-demo")
+        .with_scores(&ens, &sm)
+        .expect("scores entry")
+        .optimize(&QwycConfig { alpha: 0.005, ..Default::default() }, &Pool::from_env())
+        .expect("optimize")
+        .classifier()
+        .clone();
     println!(
         "model: T={} lattices; QWYC order {:?}; backend={backend}",
         ens.len(),

@@ -6,6 +6,8 @@
 //!   - Algorithm-1 candidate search: serial vs `QWYC_THREADS` pool
 //!   - batch scoring (`score_matrix`) and `simulate`: serial vs pool
 //!   - NativeEngine blocked classify_batch
+//!   - pipeline_api: typed PlanBuilder optimize+compile vs the loose
+//!     optimize_order_with_pool + bundle + compile path
 //!   - PJRT stage execution (per-batch and per-example amortized)
 //!
 //! Every target lands in `BENCH.json` (schema `qwyc-bench-v1`, see
@@ -208,7 +210,12 @@ fn main() {
     report.push_pair(&rs, &rp);
 
     // ---- NativeEngine blocked classify_batch -------------------------
-    let mut engine = qwyc::runtime::engine::NativeEngine::new(gbt.clone(), fc.clone(), tr.d);
+    let bench_plan =
+        qwyc::plan::QwycPlan::bundle_with_width(gbt.clone(), fc.clone(), "bench-serve", 0.005, tr.d)
+            .expect("bundle plan");
+    let compiled = bench_plan.compile_shared().expect("compile plan");
+    let mut engine =
+        qwyc::runtime::engine::NativeEngine::from_shared(compiled.clone(), Pool::from_env());
     let nb = big.n.min(1024);
     let xb = &big.x[..nb * big.d];
     let r = bench_auto(&format!("native classify_batch (B={nb})"), budget, runs, || {
@@ -218,6 +225,33 @@ fn main() {
     println!("  -> per-example amortized: {:.3} us\n", r.mean_us() / nb as f64);
     report.push(&r);
 
+    // ---- typed pipeline builder vs the loose-function path -----------
+    // Same computation both ways (score matrix precomputed outside the
+    // loop); the pair records what the PlanBuilder facade costs on top
+    // of optimize_order_with_pool + QwycPlan::bundle + compile.
+    {
+        use qwyc::pipeline::PlanBuilder;
+        let rl = bench_auto("pipeline loose optimize+bundle+compile", budget, runs, || {
+            let fc = optimize_order_with_pool(black_box(&sm), &cfg, &pool);
+            let plan =
+                qwyc::plan::QwycPlan::bundle_with_width(gbt.clone(), fc, "loose", cfg.alpha, tr.d)
+                    .expect("bundle");
+            black_box(plan.compile_shared().expect("compile"));
+        });
+        println!("{}", rl.report());
+        let rb = bench_auto("pipeline_api builder optimize+compile", budget, runs, || {
+            let opt = PlanBuilder::new("builder")
+                .with_scores(&gbt, black_box(&sm))
+                .expect("scores")
+                .optimize(&cfg, &pool)
+                .expect("optimize");
+            black_box(opt.with_n_features(tr.d).compile().expect("compile"));
+        });
+        println!("{}", rb.report());
+        println!("  -> builder/loose mean ratio: {:.3}x\n", rb.mean_ns / rl.mean_ns);
+        report.push_pair(&rl, &rb);
+    }
+
     // ---- sharded serving throughput (1/2/4 shards) -------------------
     // End-to-end requests/sec through the TCP coordinator: one shared
     // compiled plan, N engine shards, 4 pipelined closed-loop
@@ -225,10 +259,6 @@ fn main() {
     // p50/p99 are the server-reported per-request latencies.
     {
         use qwyc::coordinator::{BatchPolicy, Client, Server, ServerConfig};
-        let mut plan = qwyc::plan::QwycPlan::bundle(gbt.clone(), fc.clone(), "bench-serve", 0.005)
-            .expect("bundle plan");
-        plan.meta.n_features = tr.d;
-        let compiled = plan.compile_shared().expect("compile plan");
         let conns = 4usize;
         let per_conn = if quick { 200 } else { 5_000 };
         let total = conns * per_conn;

@@ -9,9 +9,8 @@
 //! candidate filtered offline and a request served online take the same
 //! code path and produce bitwise-identical outcomes.
 
-use crate::ensemble::Ensemble;
+use crate::error::QwycError;
 use crate::plan::{CompiledPlan, QwycPlan};
-use crate::qwyc::FastClassifier;
 use crate::util::pool::Pool;
 
 /// Example-block width for the batched filter sweep (same cache logic as
@@ -49,21 +48,17 @@ pub struct FilterPipeline {
 
 impl FilterPipeline {
     /// Build from a plan artifact with the `QWYC_THREADS` pool.
-    pub fn from_plan(plan: &QwycPlan) -> Result<FilterPipeline, String> {
+    pub fn from_plan(plan: &QwycPlan) -> Result<FilterPipeline, QwycError> {
         FilterPipeline::from_plan_with_pool(plan, Pool::from_env())
     }
 
-    pub fn from_plan_with_pool(plan: &QwycPlan, pool: Pool) -> Result<FilterPipeline, String> {
+    pub fn from_plan_with_pool(plan: &QwycPlan, pool: Pool) -> Result<FilterPipeline, QwycError> {
         if plan.fc.eps_pos.iter().any(|&e| e != f32::INFINITY) {
-            return Err("filter pipeline requires a neg-only classifier (eps_pos ≡ +inf)".into());
+            return Err(QwycError::Validate(
+                "filter pipeline requires a neg-only classifier (eps_pos ≡ +inf)".into(),
+            ));
         }
         Ok(FilterPipeline { plan: plan.compile()?, pool })
-    }
-
-    /// Deprecated loose-parts constructor: bundles a [`QwycPlan`] on the
-    /// fly. Prefer [`FilterPipeline::from_plan`].
-    pub fn new(ensemble: Ensemble, fc: FastClassifier) -> Result<FilterPipeline, String> {
-        FilterPipeline::from_plan(&QwycPlan::bundle(ensemble, fc, "filter", 0.0)?)
     }
 
     pub fn plan(&self) -> &CompiledPlan {
@@ -126,8 +121,9 @@ impl FilterPipeline {
 mod tests {
     use super::*;
     use crate::data::synth::{generate, Which};
+    use crate::ensemble::Ensemble;
     use crate::lattice::{train_joint, LatticeParams};
-    use crate::qwyc::{optimize_order, QwycConfig};
+    use crate::qwyc::{optimize_order, FastClassifier, QwycConfig};
 
     fn setup() -> (crate::data::Dataset, Ensemble, FastClassifier, FilterPipeline) {
         let (tr, te) = generate(Which::Rw1Like, 41, 0.005);
@@ -218,7 +214,7 @@ mod tests {
         fc.eps_pos[0] = 0.0;
         fc.eps_neg[0] = fc.eps_neg[0].min(0.0);
         let plan = QwycPlan::bundle(ens.clone(), fc.clone(), "bad", 0.0).unwrap();
-        assert!(FilterPipeline::from_plan(&plan).is_err());
-        assert!(FilterPipeline::new(ens, fc).is_err());
+        let err = FilterPipeline::from_plan(&plan).unwrap_err();
+        assert_eq!(err.stage(), "validate", "{err}");
     }
 }

@@ -3,6 +3,7 @@
 //! datasets. Format: header `f0,...,f{d-1},label`, one row per example.
 
 use super::dataset::Dataset;
+use crate::error::QwycError;
 use std::io::{BufRead, BufWriter, Write};
 use std::path::Path;
 
@@ -21,16 +22,17 @@ pub fn save(ds: &Dataset, path: &Path) -> std::io::Result<()> {
     Ok(())
 }
 
-pub fn load(path: &Path) -> Result<Dataset, String> {
-    let f = std::fs::File::open(path).map_err(|e| format!("open {path:?}: {e}"))?;
+pub fn load(path: &Path) -> Result<Dataset, QwycError> {
+    let f = std::fs::File::open(path)
+        .map_err(|e| QwycError::Io(format!("open {path:?}: {e}")))?;
     let mut lines = std::io::BufReader::new(f).lines();
     let header = lines
         .next()
-        .ok_or("empty csv")?
-        .map_err(|e| e.to_string())?;
+        .ok_or_else(|| QwycError::Schema("empty csv".into()))?
+        .map_err(QwycError::from)?;
     let cols: Vec<&str> = header.split(',').collect();
     if cols.last() != Some(&"label") {
-        return Err("csv must end with a 'label' column".into());
+        return Err(QwycError::Schema("csv must end with a 'label' column".into()));
     }
     let d = cols.len() - 1;
     let name = path
@@ -40,32 +42,35 @@ pub fn load(path: &Path) -> Result<Dataset, String> {
     let mut ds = Dataset::new(&name, d);
     let mut feats = vec![0f32; d];
     for (lineno, line) in lines.enumerate() {
-        let line = line.map_err(|e| e.to_string())?;
+        let line = line.map_err(QwycError::from)?;
         if line.trim().is_empty() {
             continue;
         }
         let mut parts = line.split(',');
         for (j, slot) in feats.iter_mut().enumerate() {
-            let tok = parts
-                .next()
-                .ok_or_else(|| format!("line {}: missing column {j}", lineno + 2))?;
+            let tok = parts.next().ok_or_else(|| {
+                QwycError::Schema(format!("line {}: missing column {j}", lineno + 2))
+            })?;
             *slot = tok
                 .trim()
                 .parse::<f32>()
-                .map_err(|e| format!("line {}: col {j}: {e}", lineno + 2))?;
+                .map_err(|e| QwycError::Schema(format!("line {}: col {j}: {e}", lineno + 2)))?;
         }
         let label_tok = parts
             .next()
-            .ok_or_else(|| format!("line {}: missing label", lineno + 2))?;
+            .ok_or_else(|| QwycError::Schema(format!("line {}: missing label", lineno + 2)))?;
         let label: f32 = label_tok
             .trim()
             .parse()
-            .map_err(|e| format!("line {}: label: {e}", lineno + 2))?;
+            .map_err(|e| QwycError::Schema(format!("line {}: label: {e}", lineno + 2)))?;
         if parts.next().is_some() {
-            return Err(format!("line {}: too many columns", lineno + 2));
+            return Err(QwycError::Schema(format!("line {}: too many columns", lineno + 2)));
         }
         if label != 0.0 && label != 1.0 {
-            return Err(format!("line {}: label must be 0 or 1, got {label}", lineno + 2));
+            return Err(QwycError::Schema(format!(
+                "line {}: label must be 0 or 1, got {label}",
+                lineno + 2
+            )));
         }
         ds.push(&feats, label);
     }

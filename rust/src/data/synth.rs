@@ -13,6 +13,7 @@
 //! latent-score noise scales. See DESIGN.md §4.
 
 use super::dataset::Dataset;
+use crate::error::QwycError;
 use crate::util::rng::Rng;
 
 /// Which of the paper's four experiment datasets to generate.
@@ -25,13 +26,15 @@ pub enum Which {
 }
 
 impl Which {
-    pub fn parse(s: &str) -> Result<Which, String> {
+    pub fn parse(s: &str) -> Result<Which, QwycError> {
         match s {
             "adult" | "adult_like" => Ok(Which::AdultLike),
             "nomao" | "nomao_like" => Ok(Which::NomaoLike),
             "rw1" | "rw1_like" => Ok(Which::Rw1Like),
             "rw2" | "rw2_like" => Ok(Which::Rw2Like),
-            other => Err(format!("unknown dataset '{other}' (adult|nomao|rw1|rw2)")),
+            other => Err(QwycError::Config(format!(
+                "unknown dataset '{other}' (adult|nomao|rw1|rw2)"
+            ))),
         }
     }
 

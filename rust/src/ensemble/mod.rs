@@ -7,6 +7,7 @@
 pub mod scores;
 
 use crate::data::Dataset;
+use crate::error::QwycError;
 use crate::gbt::tree::{Tree, TreeSoa};
 use crate::lattice::model::Lattice;
 use crate::util::json::Json;
@@ -54,11 +55,11 @@ impl BaseModel {
         }
     }
 
-    fn from_json(v: &Json) -> Result<BaseModel, String> {
+    fn from_json(v: &Json) -> Result<BaseModel, QwycError> {
         match v.req("kind")?.as_str()? {
             "tree" => Ok(BaseModel::Tree(Tree::from_json(v.req("model")?)?)),
             "lattice" => Ok(BaseModel::Lattice(Lattice::from_json(v.req("model")?)?)),
-            other => Err(format!("unknown base model kind '{other}'")),
+            other => Err(QwycError::Schema(format!("unknown base model kind '{other}'"))),
         }
     }
 }
@@ -240,7 +241,7 @@ impl Ensemble {
         ])
     }
 
-    pub fn from_json(v: &Json) -> Result<Ensemble, String> {
+    pub fn from_json(v: &Json) -> Result<Ensemble, QwycError> {
         let models = v
             .req("models")?
             .as_arr()?
@@ -249,7 +250,7 @@ impl Ensemble {
             .collect::<Result<Vec<_>, _>>()?;
         let costs = v.req("costs")?.as_vec_f32()?;
         if costs.len() != models.len() {
-            return Err("costs/models length mismatch".into());
+            return Err(QwycError::Schema("costs/models length mismatch".into()));
         }
         Ok(Ensemble {
             name: v.req("name")?.as_str()?.to_string(),
@@ -264,7 +265,7 @@ impl Ensemble {
         crate::util::json::write_file(path, &self.to_json())
     }
 
-    pub fn load(path: &std::path::Path) -> Result<Ensemble, String> {
+    pub fn load(path: &std::path::Path) -> Result<Ensemble, QwycError> {
         Ensemble::from_json(&crate::util::json::read_file(path)?)
     }
 }

@@ -1,65 +1,100 @@
-//! Typed errors for the plan artifact lifecycle.
+//! The crate-wide error type.
 //!
-//! The plan layer used to thread `Result<_, String>` through load /
-//! validate / compile, which made it impossible for callers (the CLI,
-//! the serving `RELOAD` handler) to tell a missing file from a corrupt
-//! document from a structurally invalid plan without string matching.
-//! [`PlanError`] names the four failure stages explicitly; `Display`
-//! keeps the old human-readable messages, and `From<PlanError> for
-//! String` keeps `?` working in the many `Result<_, String>` call sites
-//! (CLI arms, `FilterPipeline`, engine factories) without churn.
+//! Every fallible operation in this crate — artifact IO, JSON
+//! (de)serialization, structural validation, plan compilation, ensemble
+//! training, and CLI/configuration parsing — reports a [`QwycError`].
+//! The variant names the pipeline *stage* that failed, so callers (the
+//! CLI's `error[stage]: message` lines, the serving `RELOAD` handler,
+//! metrics) can route on [`QwycError::stage`] without string matching.
+//!
+//! Until PR 5 only the plan layer was typed (`PlanError` with four
+//! variants and a shim converting into the stringly-typed error
+//! substrate everywhere else). The shim is gone: every public API
+//! returns `QwycError` directly.
+
+#![warn(missing_docs)]
 
 use std::fmt;
 
-/// What went wrong while loading, validating, or compiling a
-/// [`QwycPlan`](crate::plan::QwycPlan).
+/// What went wrong, named by the pipeline stage that failed.
 #[derive(Clone, Debug, PartialEq, Eq)]
-pub enum PlanError {
-    /// The artifact file could not be read or written.
+pub enum QwycError {
+    /// A file, device, or remote peer could not be read, written, or
+    /// driven (artifact files, CSV datasets, PJRT client/upload/execute
+    /// failures, serving-protocol errors reported by a server).
     Io(String),
-    /// The document parsed but is not a well-formed `qwyc-plan-v1`
-    /// payload (wrong schema tag, missing keys, bad JSON shapes).
+    /// A document parsed but is not well-formed for its schema (JSON
+    /// syntax, missing keys, wrong shapes, bad `qwyc-plan-v1` payloads).
     Schema(String),
-    /// The plan parsed but violates a structural invariant (classifier
-    /// structure, ensemble/classifier size or bias/β agreement,
-    /// derived-metadata drift).
+    /// A structural invariant is violated (classifier thresholds, tree
+    /// node layout, ensemble/classifier agreement, derived-metadata
+    /// drift).
     Validate(String),
-    /// Compilation into the serving-ready [`CompiledPlan`]
-    /// (crate::plan::CompiledPlan) failed: tree structure, feature-count
-    /// agreement, or declared-width checks.
+    /// Compilation into a serving-ready form failed (feature-count
+    /// agreement, declared-width checks, artifact compilation).
     Compile(String),
+    /// Ensemble training could not run (degenerate dataset, impossible
+    /// hyperparameters).
+    Train(String),
+    /// Configuration is unusable (CLI flags, dataset names, builder
+    /// arguments out of range).
+    Config(String),
 }
 
-impl PlanError {
-    /// The failure stage as a short lowercase tag (log/metrics friendly).
+impl QwycError {
+    /// The failure stage as a short lowercase tag (log/metrics friendly,
+    /// and the `[stage]` in the CLI's `error[stage]: message` lines).
     pub fn stage(&self) -> &'static str {
         match self {
-            PlanError::Io(_) => "io",
-            PlanError::Schema(_) => "schema",
-            PlanError::Validate(_) => "validate",
-            PlanError::Compile(_) => "compile",
+            QwycError::Io(_) => "io",
+            QwycError::Schema(_) => "schema",
+            QwycError::Validate(_) => "validate",
+            QwycError::Compile(_) => "compile",
+            QwycError::Train(_) => "train",
+            QwycError::Config(_) => "config",
         }
     }
-}
 
-impl fmt::Display for PlanError {
-    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+    /// The bare message, without the stage prefix `Display` adds.
+    pub fn message(&self) -> &str {
         match self {
-            PlanError::Io(m) => write!(f, "plan io error: {m}"),
-            PlanError::Schema(m) => write!(f, "plan schema error: {m}"),
-            PlanError::Validate(m) => write!(f, "plan validation error: {m}"),
-            PlanError::Compile(m) => write!(f, "plan compile error: {m}"),
+            QwycError::Io(m)
+            | QwycError::Schema(m)
+            | QwycError::Validate(m)
+            | QwycError::Compile(m)
+            | QwycError::Train(m)
+            | QwycError::Config(m) => m,
+        }
+    }
+
+    /// Prefix the message with a context label, keeping the stage (e.g.
+    /// `"ensemble"` while deserializing the ensemble part of a plan).
+    pub fn context(self, ctx: &str) -> QwycError {
+        let wrap = |m: String| format!("{ctx}: {m}");
+        match self {
+            QwycError::Io(m) => QwycError::Io(wrap(m)),
+            QwycError::Schema(m) => QwycError::Schema(wrap(m)),
+            QwycError::Validate(m) => QwycError::Validate(wrap(m)),
+            QwycError::Compile(m) => QwycError::Compile(wrap(m)),
+            QwycError::Train(m) => QwycError::Train(wrap(m)),
+            QwycError::Config(m) => QwycError::Config(wrap(m)),
         }
     }
 }
 
-impl std::error::Error for PlanError {}
+impl fmt::Display for QwycError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} error: {}", self.stage(), self.message())
+    }
+}
 
-/// Interop with the crate's `Result<_, String>` substrate: `?` on a
-/// plan-layer call keeps working inside CLI arms and pipelines.
-impl From<PlanError> for String {
-    fn from(e: PlanError) -> String {
-        e.to_string()
+impl std::error::Error for QwycError {}
+
+/// File-system failures fold into the `Io` stage, so `?` works on
+/// `std::io::Result` inside functions returning `QwycError`.
+impl From<std::io::Error> for QwycError {
+    fn from(e: std::io::Error) -> QwycError {
+        QwycError::Io(e.to_string())
     }
 }
 
@@ -69,24 +104,48 @@ mod tests {
 
     #[test]
     fn display_carries_stage_and_message() {
-        let e = PlanError::Schema("expected schema 'qwyc-plan-v1'".into());
+        let e = QwycError::Schema("expected schema 'qwyc-plan-v1'".into());
         assert_eq!(e.stage(), "schema");
-        let s: String = e.clone().into();
-        assert!(s.contains("schema"));
-        assert!(s.contains("qwyc-plan-v1"));
-        assert_eq!(s, e.to_string());
+        assert_eq!(e.message(), "expected schema 'qwyc-plan-v1'");
+        let s = e.to_string();
+        assert!(s.contains("schema error"), "{s}");
+        assert!(s.contains("qwyc-plan-v1"), "{s}");
     }
 
     #[test]
-    fn question_mark_converts_into_string_results() {
-        fn inner() -> Result<(), PlanError> {
-            Err(PlanError::Io("no such file".into()))
+    fn every_variant_maps_to_its_stage() {
+        let cases = [
+            (QwycError::Io("a".into()), "io"),
+            (QwycError::Schema("b".into()), "schema"),
+            (QwycError::Validate("c".into()), "validate"),
+            (QwycError::Compile("d".into()), "compile"),
+            (QwycError::Train("e".into()), "train"),
+            (QwycError::Config("f".into()), "config"),
+        ];
+        for (e, stage) in cases {
+            assert_eq!(e.stage(), stage);
+            assert!(e.to_string().starts_with(stage), "{e}");
         }
-        fn outer() -> Result<(), String> {
+    }
+
+    #[test]
+    fn context_prefixes_without_changing_stage() {
+        let e = QwycError::Validate("bias drift".into()).context("plan 'demo'");
+        assert_eq!(e.stage(), "validate");
+        assert_eq!(e.message(), "plan 'demo': bias drift");
+    }
+
+    #[test]
+    fn question_mark_converts_io_errors() {
+        fn inner() -> std::io::Result<()> {
+            Err(std::io::Error::new(std::io::ErrorKind::NotFound, "no such file"))
+        }
+        fn outer() -> Result<(), QwycError> {
             inner()?;
             Ok(())
         }
         let err = outer().unwrap_err();
-        assert!(err.contains("io error"), "{err}");
+        assert_eq!(err.stage(), "io");
+        assert!(err.message().contains("no such file"), "{err}");
     }
 }

@@ -14,8 +14,10 @@ use super::methods::{self, ExpData};
 use super::report::{self, Curve, Point, YAxis};
 use super::workload::{benchmark, real_world, Workload};
 use crate::data::synth::Which;
+use crate::pipeline::{Optimized, PlanBuilder};
 use crate::plan::QwycPlan;
-use crate::qwyc::{optimize_order, optimize_thresholds_for_order, simulate, QwycConfig};
+use crate::qwyc::{optimize_thresholds_for_order, simulate, QwycConfig};
+use crate::util::pool::Pool;
 use std::path::PathBuf;
 
 /// Shared figure-suite configuration.
@@ -156,8 +158,11 @@ pub fn fig5_fig6(cfg: &FigConfig) {
         let sm_te = w.ensemble.score_matrix(&w.test);
         let target = 0.005;
 
-        // QWYC*: pick alpha whose test diff is closest to target.
-        let mut best: Option<(f64, f64, crate::qwyc::FastClassifier)> = None;
+        // QWYC*: pick alpha whose test diff is closest to target. Each
+        // operating point runs through the typed pipeline builder
+        // (bitwise the optimize_order path).
+        let pool = Pool::from_env();
+        let mut best: Option<(f64, PlanBuilder<Optimized<'_>>)> = None;
         for &alpha in &cfg.alphas {
             let qcfg = QwycConfig {
                 alpha,
@@ -165,20 +170,22 @@ pub fn fig5_fig6(cfg: &FigConfig) {
                 max_opt_examples: cfg.max_opt,
                 seed: cfg.seed,
             };
-            let fc = optimize_order(&sm_tr, &qcfg);
-            let sim = simulate(&fc, &sm_te);
+            let opt = PlanBuilder::new(&w.name)
+                .with_scores(&w.ensemble, &sm_tr)
+                .expect("score-matrix entry")
+                .optimize(&qcfg, &pool)
+                .expect("optimize fig5/6 point");
+            let sim = simulate(opt.classifier(), &sm_te);
             let d = (sim.pct_diff - target).abs();
-            if best.as_ref().map(|(bd, ..)| d < *bd).unwrap_or(true) {
-                best = Some((d, alpha, fc));
+            if best.as_ref().map(|(bd, _)| d < *bd).unwrap_or(true) {
+                best = Some((d, opt));
             }
         }
         // Re-simulate the chosen operating point through the round-tripped
         // qwyc-plan-v1 artifact — the histogram published here is the one
         // the deployed plan actually produces.
-        let (_, star_alpha, star_fc) = best.unwrap();
-        let star_plan =
-            QwycPlan::bundle(w.ensemble.clone(), star_fc, &w.name, star_alpha)
-                .expect("bundle fig5/6 plan");
+        let (_, star_opt) = best.unwrap();
+        let star_plan = star_opt.into_plan().expect("bundle fig5/6 plan");
         let star_plan = QwycPlan::from_json(&star_plan.to_json()).expect("plan roundtrip");
         let sim_star = simulate(&star_plan.fc, &sm_te);
         println!(

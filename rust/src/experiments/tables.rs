@@ -7,8 +7,10 @@ use super::workload::real_world;
 use crate::data::synth::Which;
 use crate::fan::FanClassifier;
 use crate::orderings;
+use crate::pipeline::{Optimized, PlanBuilder};
 use crate::plan::{CompiledPlan, QwycPlan};
-use crate::qwyc::{optimize_order, simulate, FastClassifier, QwycConfig};
+use crate::qwyc::{simulate, FastClassifier, QwycConfig};
+use crate::util::pool::Pool;
 use crate::util::json::Json;
 use crate::util::timer;
 
@@ -65,19 +67,26 @@ pub fn timing_table(
     let sm_te = w.ensemble.score_matrix(&w.test);
     let target = 0.005;
 
-    // QWYC*: alpha whose held-out diff lands closest to 0.5%.
-    let mut best: Option<(f64, f64, FastClassifier, f64, f64)> = None;
+    // QWYC*: alpha whose held-out diff lands closest to 0.5%. Each
+    // candidate operating point runs through the typed pipeline builder
+    // (bitwise the optimize_order path).
+    let pool = Pool::from_env();
+    let mut best: Option<(f64, PlanBuilder<Optimized<'_>>, f64, f64)> = None;
     for &alpha in &cfg.alphas {
         let qcfg =
             QwycConfig { alpha, neg_only: true, max_opt_examples: cfg.max_opt, seed: cfg.seed };
-        let fc = optimize_order(&sm_tr, &qcfg);
-        let sim = simulate(&fc, &sm_te);
+        let opt = PlanBuilder::new(&format!("{}-qwyc", w.name))
+            .with_scores(&w.ensemble, &sm_tr)
+            .expect("score-matrix entry")
+            .optimize(&qcfg, &pool)
+            .expect("optimize timing point");
+        let sim = simulate(opt.classifier(), &sm_te);
         let d = (sim.pct_diff - target).abs();
         if best.as_ref().map(|(bd, ..)| d < *bd).unwrap_or(true) {
-            best = Some((d, alpha, fc, sim.pct_diff, sim.mean_models));
+            best = Some((d, opt, sim.pct_diff, sim.mean_models));
         }
     }
-    let (_, qwyc_alpha, fc_qwyc, qwyc_diff, qwyc_models) = best.unwrap();
+    let (_, qwyc_opt, qwyc_diff, qwyc_models) = best.unwrap();
 
     // Fan*: Individual-MSE order needs labels, which the real-world sets
     // lack — the paper's Fan* there uses the given order; we calibrate on
@@ -101,16 +110,17 @@ pub fn timing_table(
     let n_time = timing_examples.min(w.test.n);
     let full_fc =
         FastClassifier::no_early_stop(orderings::natural(sm_tr.t), sm_tr.bias, sm_tr.beta);
-    let make_compiled = |fc: &FastClassifier, name: &str, alpha: f64| -> CompiledPlan {
-        let plan = QwycPlan::bundle(w.ensemble.clone(), fc.clone(), name, alpha)
-            .expect("bundle timing plan");
+    let roundtrip_compile = |plan: QwycPlan| -> CompiledPlan {
         QwycPlan::from_json(&plan.to_json())
             .expect("plan json roundtrip")
             .compile()
             .expect("compile timing plan")
     };
-    let full_plan = make_compiled(&full_fc, &format!("{}-full", w.name), 0.0);
-    let qwyc_plan = make_compiled(&fc_qwyc, &format!("{}-qwyc", w.name), qwyc_alpha);
+    let full_plan = roundtrip_compile(
+        QwycPlan::bundle(w.ensemble.clone(), full_fc, &format!("{}-full", w.name), 0.0)
+            .expect("bundle timing plan"),
+    );
+    let qwyc_plan = roundtrip_compile(qwyc_opt.into_plan().expect("bundle timing plan"));
 
     let time_fc = |cp: &CompiledPlan| -> (f64, f64) {
         let mut per_run = Vec::with_capacity(runs);

@@ -10,6 +10,7 @@
 //! loads instead of stalling on one chain at a time (the blocked-traversal
 //! idea behind QuickScorer-family tree servers).
 
+use crate::error::QwycError;
 use crate::util::json::Json;
 
 /// One node. Leaves have `feature == u32::MAX` and carry `value`.
@@ -83,9 +84,9 @@ impl Tree {
     /// `get_unchecked` in [`Tree::eval`] sound). Feature indices cannot
     /// be range-checked here — the tree does not know the feature count —
     /// but feature lookups in eval are checked slice accesses.
-    pub fn validate(&self) -> Result<(), String> {
+    pub fn validate(&self) -> Result<(), QwycError> {
         if self.nodes.is_empty() {
-            return Err("empty tree".into());
+            return Err(QwycError::Validate("empty tree".into()));
         }
         for (i, node) in self.nodes.iter().enumerate() {
             if node.is_leaf() {
@@ -93,14 +94,16 @@ impl Tree {
             }
             let l = node.left as usize;
             if l <= i {
-                return Err(format!("node {i}: left child {l} does not follow its parent"));
+                return Err(QwycError::Validate(format!(
+                    "node {i}: left child {l} does not follow its parent"
+                )));
             }
             if l + 1 >= self.nodes.len() {
-                return Err(format!(
+                return Err(QwycError::Validate(format!(
                     "node {i}: children {l},{} out of bounds ({} nodes)",
                     l + 1,
                     self.nodes.len()
-                ));
+                )));
             }
         }
         Ok(())
@@ -172,13 +175,13 @@ impl Tree {
         ])
     }
 
-    pub fn from_json(v: &Json) -> Result<Tree, String> {
+    pub fn from_json(v: &Json) -> Result<Tree, QwycError> {
         let feats = v.req("feature")?.as_arr()?;
         let thr = v.req("threshold")?.as_vec_f32()?;
         let left = v.req("left")?.as_arr()?;
         let val = v.req("value")?.as_vec_f32()?;
         if feats.len() != thr.len() || thr.len() != left.len() || left.len() != val.len() {
-            return Err("tree arrays length mismatch".into());
+            return Err(QwycError::Schema("tree arrays length mismatch".into()));
         }
         let mut nodes = Vec::with_capacity(feats.len());
         for i in 0..feats.len() {

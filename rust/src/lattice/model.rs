@@ -11,6 +11,7 @@
 //! implements on the TPU side (python/compile/kernels/lattice.py).
 
 use crate::data::Dataset;
+use crate::error::QwycError;
 use crate::util::json::Json;
 
 /// A single lattice over a feature subset.
@@ -118,15 +119,15 @@ impl Lattice {
         ])
     }
 
-    pub fn from_json(v: &Json) -> Result<Lattice, String> {
+    pub fn from_json(v: &Json) -> Result<Lattice, QwycError> {
         let features = v.req("features")?.as_vec_usize()?;
         let theta = v.req("theta")?.as_vec_f32()?;
         if theta.len() != 1 << features.len() {
-            return Err(format!(
+            return Err(QwycError::Schema(format!(
                 "lattice theta len {} != 2^{}",
                 theta.len(),
                 features.len()
-            ));
+            )));
         }
         Ok(Lattice { features, theta })
     }

@@ -16,7 +16,10 @@
 //!   [`plan::CompiledPlan`]) every evaluator consumes through one shared
 //!   sweep core ([`qwyc::sweep`]), and a serving [`coordinator`] with
 //!   dynamic batching and early-exit scheduling, backed by [`runtime`]
-//!   (PJRT) for the AOT-compiled dense path.
+//!   (PJRT) for the AOT-compiled dense path. Embedders program the whole
+//!   train → optimize → compile → evaluate flow through the typed
+//!   [`pipeline`] facade (`use qwyc::prelude::*`); every fallible API
+//!   reports a staged [`error::QwycError`].
 //! - **L2/L1 (build-time Python)** — JAX graph + Pallas lattice kernel,
 //!   AOT-lowered to HLO text (`python/compile/`), never on the request
 //!   path.
@@ -33,9 +36,30 @@ pub mod fan;
 pub mod gbt;
 pub mod lattice;
 pub mod orderings;
+pub mod pipeline;
 pub mod plan;
 // The crate and its core-algorithm module intentionally share the name.
 #[allow(clippy::module_inception)]
 pub mod qwyc;
 pub mod runtime;
 pub mod util;
+
+/// The blessed embedder surface in one import:
+/// `use qwyc::prelude::*;` brings in the typed pipeline
+/// ([`pipeline::PlanBuilder`] → [`pipeline::EvalSession`]), the artifact
+/// types, the crate error, and the substrate types their signatures
+/// mention. See the README's "Library API" section for a quickstart.
+pub mod prelude {
+    pub use crate::data::synth::{generate, Which};
+    pub use crate::data::Dataset;
+    pub use crate::ensemble::{Ensemble, ScoreMatrix};
+    pub use crate::error::QwycError;
+    pub use crate::gbt::GbtParams;
+    pub use crate::lattice::LatticeParams;
+    pub use crate::pipeline::{
+        Decision, DecisionIter, EvalSession, ModelSpec, PlanBuilder, TrainSpec,
+    };
+    pub use crate::plan::{CompiledPlan, QwycPlan};
+    pub use crate::qwyc::{FastClassifier, QwycConfig};
+    pub use crate::util::pool::Pool;
+}

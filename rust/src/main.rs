@@ -5,11 +5,18 @@
 //!   train        train an ensemble (GBT or lattice) and save it
 //!   optimize     run QWYC (Algorithm 1 or 2) and save the fast classifier
 //!   compile-plan bundle model + fast classifier into a qwyc-plan-v1 artifact
-//!   simulate     evaluate a plan (or a deprecated model/fast pair)
+//!   simulate     evaluate a plan on a dataset
 //!   serve        start the sharded TCP serving coordinator from a plan
 //!   reload       hot-swap the plan of a running server (RELOAD command)
 //!   bench-client load-test a running server (N pipelined connections)
 //!   experiment   regenerate paper figures/tables (fig1..fig6, tables, all)
+//!
+//! The CLI is a thin veneer over the same typed pipeline embedders get
+//! (`qwyc::pipeline::PlanBuilder` → `qwyc-plan-v1` artifact →
+//! serving). Every failure prints `error[stage]: message` to stderr —
+//! the stage tag comes from `QwycError::stage()` — and exits non-zero
+//! (2 for config-stage errors, i.e. unusable arguments; 1 for
+//! everything else).
 //!
 //! Flags are listed in USAGE below per arm; unknown flags error out.
 
@@ -17,38 +24,39 @@ use qwyc::coordinator::{BatchPolicy, Client, Reply, Server, ServerConfig, DEFAUL
 use qwyc::data::synth::{generate, Which};
 use qwyc::data::{csv, Dataset};
 use qwyc::ensemble::Ensemble;
+use qwyc::error::QwycError;
 use qwyc::experiments::{figures, tables, FigConfig};
 use qwyc::gbt::GbtParams;
 use qwyc::lattice::LatticeParams;
+use qwyc::pipeline::{ModelSpec, PlanBuilder, TrainSpec};
 use qwyc::plan::QwycPlan;
-use qwyc::qwyc::{
-    optimize_order, optimize_thresholds_for_order, simulate, FastClassifier, QwycConfig,
-};
+use qwyc::qwyc::{optimize_thresholds_for_order, simulate, FastClassifier, QwycConfig};
 #[cfg(feature = "pjrt")]
 use qwyc::runtime::engine::PjrtEngine;
 use qwyc::util::cli::Args;
+use qwyc::util::pool::Pool;
 use std::path::{Path, PathBuf};
 use std::time::Duration;
 
 fn main() {
     let args = match Args::from_env() {
         Ok(a) => a,
-        Err(e) => {
-            eprintln!("error: {e}");
-            std::process::exit(2);
-        }
+        Err(e) => fail(&e),
     };
-    let code = match run(&args) {
-        Ok(()) => 0,
-        Err(e) => {
-            eprintln!("error: {e}");
-            1
-        }
-    };
-    std::process::exit(code);
+    if let Err(e) = run(&args) {
+        fail(&e);
+    }
 }
 
-fn run(args: &Args) -> Result<(), String> {
+/// Every CLI failure lands here: one `error[stage]: message` line on
+/// stderr and a non-zero exit — 2 for config-stage errors (unusable
+/// flags/arguments), 1 for every runtime failure.
+fn fail(e: &QwycError) -> ! {
+    eprintln!("error[{}]: {}", e.stage(), e.message());
+    std::process::exit(if matches!(e, QwycError::Config(_)) { 2 } else { 1 });
+}
+
+fn run(args: &Args) -> Result<(), QwycError> {
     match args.subcommand() {
         Some("gen-data") => gen_data(args),
         Some("train") => train(args),
@@ -80,9 +88,7 @@ USAGE: qwyc <subcommand> [flags]
   compile-plan --model model.json --fast fast.json --out plan.json
                [--name my-plan --alpha 0.005 --n-features D | --dataset adult]
   simulate     --plan plan.json --dataset ... [--split test]
-               (deprecated: --model model.json --fast fast.json)
   serve        --plan plan.json --addr 127.0.0.1:7077
-               (deprecated: --model model.json --fast fast.json)
                [--backend native|pjrt --artifact rw1_stage --artifacts-dir artifacts]
                [--shards 1 --queue-cap 1024 --max-batch 256 --max-wait-ms 2]
   reload       --addr 127.0.0.1:7077 --plan plan.json    (hot-swap a serving plan)
@@ -92,19 +98,19 @@ USAGE: qwyc <subcommand> [flags]
                [--scale 0.1 --trees 500 --max-opt 3000 --runs 5 --out results/]
 ";
 
-fn which_of(args: &Args) -> Result<Which, String> {
+fn which_of(args: &Args) -> Result<Which, QwycError> {
     Which::parse(&args.get_str("dataset", "adult"))
 }
 
-fn gen_data(args: &Args) -> Result<(), String> {
+fn gen_data(args: &Args) -> Result<(), QwycError> {
     let which = which_of(args)?;
     let scale = args.get_f64("scale", 1.0)?;
     let seed = args.get_u64("seed", 1)?;
     let out = PathBuf::from(args.get_str("out", "data"));
     args.check_unknown()?;
     let (tr, te) = generate(which, seed, scale);
-    csv::save(&tr, &out.join(format!("{}_train.csv", which.name()))).map_err(|e| e.to_string())?;
-    csv::save(&te, &out.join(format!("{}_test.csv", which.name()))).map_err(|e| e.to_string())?;
+    csv::save(&tr, &out.join(format!("{}_train.csv", which.name())))?;
+    csv::save(&te, &out.join(format!("{}_test.csv", which.name())))?;
     println!(
         "wrote {}_{{train,test}}.csv  (train n={} test n={} d={} pos-rate={:.3})",
         which.name(),
@@ -116,7 +122,7 @@ fn gen_data(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-fn load_data(args: &Args) -> Result<(Dataset, Dataset), String> {
+fn load_data(args: &Args) -> Result<(Dataset, Dataset), QwycError> {
     if let Some(path) = args.get_opt("data") {
         let ds = csv::load(Path::new(&path))?;
         Ok(ds.split(0.2, args.get_u64("seed", 1)?))
@@ -126,12 +132,13 @@ fn load_data(args: &Args) -> Result<(Dataset, Dataset), String> {
     }
 }
 
-fn train(args: &Args) -> Result<(), String> {
+fn train(args: &Args) -> Result<(), QwycError> {
     let (tr, te) = load_data(args)?;
     let kind = args.get_str("kind", "gbt");
     let out = PathBuf::from(args.get_str("out", "model.json"));
     let sw = qwyc::util::timer::Stopwatch::new();
-    let ens: Ensemble = match kind.as_str() {
+    let mut lattice_dim = 0usize;
+    let model = match kind.as_str() {
         "gbt" => {
             let params = GbtParams {
                 n_trees: args.get_usize("trees", 500)?,
@@ -140,9 +147,7 @@ fn train(args: &Args) -> Result<(), String> {
                 ..Default::default()
             };
             args.check_unknown()?;
-            let (ens, losses) = qwyc::gbt::train(&tr, &params);
-            println!("gbt: {} trees, final train logloss {:.4}", ens.len(), losses.last().unwrap());
-            ens
+            ModelSpec::Gbt(params)
         }
         "lattice-joint" | "lattice-indep" => {
             let params = LatticeParams {
@@ -155,33 +160,40 @@ fn train(args: &Args) -> Result<(), String> {
                 seed: args.get_u64("seed", 1)?,
             };
             args.check_unknown()?;
-            let (ens, losses) = if kind == "lattice-joint" {
-                qwyc::lattice::train_joint(&tr, &params)
+            lattice_dim = params.dim;
+            if kind == "lattice-joint" {
+                ModelSpec::LatticeJoint(params)
             } else {
-                qwyc::lattice::train_independent(&tr, &params)
-            };
-            println!(
-                "{kind}: {} lattices (dim {}), final train loss {:.4}",
-                ens.len(),
-                params.dim,
-                losses.last().unwrap()
-            );
-            ens
+                ModelSpec::LatticeIndependent(params)
+            }
         }
-        other => return Err(format!("unknown --kind {other}")),
+        other => return Err(QwycError::Config(format!("unknown --kind {other}"))),
     };
+    // The same typed first stage embedders use; the CLI just saves the
+    // ensemble instead of carrying on to optimize.
+    let trained = PlanBuilder::new("cli-train").train(TrainSpec { data: &tr, model })?;
+    let final_loss = trained.losses().last().copied().unwrap_or(f64::NAN);
+    if kind == "gbt" {
+        println!("gbt: {} trees, final train logloss {final_loss:.4}", trained.ensemble().len());
+    } else {
+        println!(
+            "{kind}: {} lattices (dim {lattice_dim}), final train loss {final_loss:.4}",
+            trained.ensemble().len()
+        );
+    }
+    let ens = trained.into_ensemble();
     println!(
         "trained in {:.1}s; train acc {:.4}, test acc {:.4}",
         sw.elapsed_s(),
         ens.accuracy(&tr),
         ens.accuracy(&te)
     );
-    ens.save(&out).map_err(|e| e.to_string())?;
+    ens.save(&out)?;
     println!("saved {}", out.display());
     Ok(())
 }
 
-fn optimize(args: &Args) -> Result<(), String> {
+fn optimize(args: &Args) -> Result<(), QwycError> {
     let model = PathBuf::from(args.get_str("model", "model.json"));
     let ens = Ensemble::load(&model)?;
     let (tr, _) = load_data(args)?;
@@ -197,8 +209,14 @@ fn optimize(args: &Args) -> Result<(), String> {
     let sw = qwyc::util::timer::Stopwatch::new();
     let fc = match fixed.as_deref() {
         None => {
+            // QWYC* through the typed pipeline — identical (bitwise) to
+            // the loose optimize_order_with_pool path.
             let cfg = QwycConfig { alpha, neg_only, max_opt_examples: max_opt, seed: 17 };
-            optimize_order(&sm, &cfg)
+            PlanBuilder::new("cli-optimize")
+                .with_scores(&ens, &sm)?
+                .optimize(&cfg, &Pool::from_env())?
+                .classifier()
+                .clone()
         }
         Some(name) => {
             let order = match name {
@@ -206,7 +224,9 @@ fn optimize(args: &Args) -> Result<(), String> {
                 "random" => qwyc::orderings::random(sm.t, 17),
                 "ind-mse" => qwyc::orderings::individual_mse(&sm, &tr.y),
                 "greedy-mse" => qwyc::orderings::greedy_mse(&sm, &tr.y),
-                other => return Err(format!("unknown --fixed-order {other}")),
+                other => {
+                    return Err(QwycError::Config(format!("unknown --fixed-order {other}")))
+                }
             };
             optimize_thresholds_for_order(&sm, &order, alpha, neg_only)
         }
@@ -221,7 +241,7 @@ fn optimize(args: &Args) -> Result<(), String> {
         sim.pct_diff * 100.0,
         alpha * 100.0
     );
-    fc.save(&out).map_err(|e| e.to_string())?;
+    fc.save(&out)?;
     println!("saved {}", out.display());
     Ok(())
 }
@@ -230,7 +250,7 @@ fn optimize(args: &Args) -> Result<(), String> {
 /// artifact that `simulate --plan` / `serve --plan` consume. Compiles the
 /// plan once here so every invariant is checked at build time, not at
 /// load time on every server start.
-fn compile_plan(args: &Args) -> Result<(), String> {
+fn compile_plan(args: &Args) -> Result<(), QwycError> {
     let model = PathBuf::from(args.get_str("model", "model.json"));
     let fast = PathBuf::from(args.get_str("fast", "fast.json"));
     let out = PathBuf::from(args.get_str("out", "plan.json"));
@@ -254,7 +274,7 @@ fn compile_plan(args: &Args) -> Result<(), String> {
         plan.meta.source = format!("dataset={ds}");
     }
     let compiled = plan.compile()?;
-    plan.save(&out).map_err(|e| e.to_string())?;
+    plan.save(&out)?;
     println!(
         "compiled plan '{}' (T={}, d={}, neg_only={}, total_cost={}) -> {}",
         plan.meta.name,
@@ -267,28 +287,20 @@ fn compile_plan(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-/// Load `--plan`, or fall back to the deprecated `--model`/`--fast` pair
-/// (bundled into an in-memory plan so both paths exercise the same code).
-fn load_plan_or_legacy(args: &Args) -> Result<QwycPlan, String> {
-    // --model/--fast are consumed only on the legacy branch, so passing
-    // them alongside --plan fails check_unknown instead of being
-    // silently ignored.
+/// Load the plan artifact named by `--plan` — the only deployed unit.
+fn load_plan(args: &Args) -> Result<QwycPlan, QwycError> {
     match args.get_opt("plan") {
-        Some(p) => Ok(QwycPlan::load(Path::new(&p))?),
-        None => {
-            eprintln!(
-                "note: loading a --model/--fast pair is deprecated; run `qwyc compile-plan` \
-                 once and pass --plan"
-            );
-            let ens = Ensemble::load(Path::new(&args.get_str("model", "model.json")))?;
-            let fc = FastClassifier::load(Path::new(&args.get_str("fast", "fast.json")))?;
-            Ok(QwycPlan::bundle(ens, fc, "adhoc-cli", 0.0)?)
-        }
+        Some(p) => QwycPlan::load(Path::new(&p)),
+        None => Err(QwycError::Config(
+            "--plan <plan.json> is required (the --model/--fast pair was removed: run \
+             `qwyc compile-plan` once and pass --plan)"
+                .into(),
+        )),
     }
 }
 
-fn simulate_cmd(args: &Args) -> Result<(), String> {
-    let plan = load_plan_or_legacy(args)?;
+fn simulate_cmd(args: &Args) -> Result<(), QwycError> {
+    let plan = load_plan(args)?;
     let (tr, te) = load_data(args)?;
     let split = args.get_str("split", "test");
     args.check_unknown()?;
@@ -309,7 +321,7 @@ fn simulate_cmd(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-fn serve(args: &Args) -> Result<(), String> {
+fn serve(args: &Args) -> Result<(), QwycError> {
     let addr = args.get_str("addr", "127.0.0.1:7077");
     let backend = args.get_str("backend", "native");
     let artifact = args.get_str("artifact", "rw1_stage");
@@ -322,15 +334,15 @@ fn serve(args: &Args) -> Result<(), String> {
             max_wait: Duration::from_millis(args.get_u64("max-wait-ms", 2)?),
         },
     };
-    let plan = load_plan_or_legacy(args)?;
+    let plan = load_plan(args)?;
     args.check_unknown()?;
 
     if backend == "pjrt" && !cfg!(feature = "pjrt") {
-        return Err(
+        return Err(QwycError::Config(
             "this binary was built without the 'pjrt' feature; rebuild with \
              `cargo build --release --features pjrt`"
                 .into(),
-        );
+        ));
     }
     println!(
         "serving plan '{}' ({}, T={}, backend={backend}, shards={}, queue_cap={}) on {addr}; \
@@ -357,20 +369,19 @@ fn serve(args: &Args) -> Result<(), String> {
                 Box::new(PjrtEngine::new(rt, &artifact, &ens, &fc).expect("pjrt engine"))
             },
             config,
-        )
-        .map_err(|e| e.to_string())?;
+        )?;
         return stats_loop(server);
     }
     let _ = (&backend, &artifact, &artifacts_dir);
     // Compile ONCE; all shards share the same immutable Arc'd artifact,
     // and RELOAD swaps it at batch boundaries.
     let compiled = plan.compile_shared()?;
-    let server = Server::start_with_plan(&addr, compiled, config).map_err(|e| e.to_string())?;
+    let server = Server::start_with_plan(&addr, compiled, config)?;
     stats_loop(server)
 }
 
 /// Print the aggregated per-shard metrics every 10s, forever.
-fn stats_loop(server: Server) -> Result<(), String> {
+fn stats_loop(server: Server) -> Result<(), QwycError> {
     println!("listening on {} — Ctrl-C to stop", server.addr);
     loop {
         std::thread::sleep(Duration::from_secs(10));
@@ -379,28 +390,29 @@ fn stats_loop(server: Server) -> Result<(), String> {
 }
 
 /// Ask a running server to hot-swap its plan (`RELOAD <path>`).
-fn reload_cmd(args: &Args) -> Result<(), String> {
-    let addr: std::net::SocketAddr = args
-        .get_str("addr", "127.0.0.1:7077")
-        .parse()
-        .map_err(|e| format!("--addr: {e}"))?;
+fn reload_cmd(args: &Args) -> Result<(), QwycError> {
+    let addr = parse_addr(args)?;
     let plan_path = args.get_str("plan", "plan.json");
     args.check_unknown()?;
-    let mut client = Client::connect(&addr).map_err(|e| e.to_string())?;
-    let line = client.reload(&plan_path).map_err(|e| e.to_string())?;
+    let mut client = Client::connect(&addr)?;
+    let line = client.reload(&plan_path)?;
     if line.starts_with("RELOADED") {
         println!("{line}");
         Ok(())
     } else {
-        Err(line)
+        // A remote refusal is a runtime failure, not a usage error.
+        Err(QwycError::Io(format!("server refused the reload: {line}")))
     }
 }
 
-fn bench_client(args: &Args) -> Result<(), String> {
-    let addr: std::net::SocketAddr = args
-        .get_str("addr", "127.0.0.1:7077")
+fn parse_addr(args: &Args) -> Result<std::net::SocketAddr, QwycError> {
+    args.get_str("addr", "127.0.0.1:7077")
         .parse()
-        .map_err(|e| format!("--addr: {e}"))?;
+        .map_err(|e| QwycError::Config(format!("--addr: {e}")))
+}
+
+fn bench_client(args: &Args) -> Result<(), QwycError> {
+    let addr = parse_addr(args)?;
     let requests = args.get_usize("requests", 5000)?;
     let pipeline = args.get_usize("pipeline", 64)?.max(1);
     let concurrency = args.get_usize("concurrency", 1)?.max(1);
@@ -413,7 +425,7 @@ fn bench_client(args: &Args) -> Result<(), String> {
         .map(|c| requests / concurrency + usize::from(c < requests % concurrency))
         .collect();
     let sw = qwyc::util::timer::Stopwatch::new();
-    let results: Vec<Result<ConnLoad, String>> = std::thread::scope(|s| {
+    let results: Vec<Result<ConnLoad, QwycError>> = std::thread::scope(|s| {
         let handles: Vec<_> = counts
             .iter()
             .enumerate()
@@ -449,8 +461,8 @@ fn bench_client(args: &Args) -> Result<(), String> {
         qwyc::util::stats::percentile_sorted(&lat_us, 99.0),
         models_sum as f64 / answered as f64
     );
-    let mut client = Client::connect(&addr).map_err(|e| e.to_string())?;
-    println!("server: {}", client.stats().map_err(|e| e.to_string())?);
+    let mut client = Client::connect(&addr)?;
+    println!("server: {}", client.stats()?);
     Ok(())
 }
 
@@ -470,16 +482,16 @@ fn run_conn_load(
     requests: usize,
     pipeline: usize,
     row_offset: usize,
-) -> Result<ConnLoad, String> {
-    let mut client = Client::connect(addr).map_err(|e| e.to_string())?;
+) -> Result<ConnLoad, QwycError> {
+    let mut client = Client::connect(addr)?;
     let (mut sent, mut recv) = (0usize, 0usize);
     let mut load = ConnLoad { lat_us: Vec::with_capacity(requests), models_sum: 0, busy: 0 };
     while recv < requests {
         while sent < requests && sent - recv < pipeline {
-            client.send_eval(te.row((row_offset + sent) % te.n)).map_err(|e| e.to_string())?;
+            client.send_eval(te.row((row_offset + sent) % te.n))?;
             sent += 1;
         }
-        match client.read_reply().map_err(|e| e.to_string())? {
+        match client.read_reply()? {
             Reply::Ok(r) => {
                 load.models_sum += r.models as u64;
                 load.lat_us.push(r.latency_us as f64);
@@ -490,15 +502,17 @@ fn run_conn_load(
                 recv += 1;
             }
             Reply::Err { id, message } => {
-                return Err(format!("server error (id {id:?}): {message}"));
+                return Err(QwycError::Io(format!("server error (id {id:?}): {message}")));
             }
-            Reply::Other(line) => return Err(format!("unexpected reply: {line}")),
+            Reply::Other(line) => {
+                return Err(QwycError::Io(format!("unexpected reply: {line}")))
+            }
         }
     }
     Ok(load)
 }
 
-fn experiment(args: &Args) -> Result<(), String> {
+fn experiment(args: &Args) -> Result<(), QwycError> {
     let what = args.positional.get(1).cloned().unwrap_or_else(|| "all".into());
     let cfg = FigConfig {
         scale: args.get_f64("scale", 0.1)?,
@@ -527,9 +541,8 @@ fn experiment(args: &Args) -> Result<(), String> {
             figures::fig5_fig6(&cfg);
             tables::tables_2_to_5(&cfg, runs, timing_examples);
         }
-        other => return Err(format!("unknown experiment '{other}'")),
+        other => return Err(QwycError::Config(format!("unknown experiment '{other}'"))),
     }
     println!("\nresults written under {}", cfg.out_dir.display());
     Ok(())
 }
-

@@ -1,0 +1,548 @@
+//! The typed end-to-end pipeline facade: **train → optimize → compile →
+//! evaluate** as one library API.
+//!
+//! The paper's deliverable is a pipeline — train an additive ensemble,
+//! jointly optimize its evaluation order π and early-stopping thresholds
+//! ε± (Algorithm 1), compile the result into a deployable artifact, and
+//! serve it with early exit. [`PlanBuilder`] makes that pipeline a
+//! *typed-state* value: each stage transition returns the next stage's
+//! type, so "optimize before training" or "compile before optimizing"
+//! are **compile errors**, not runtime panics.
+//!
+//! ```text
+//! PlanBuilder<Untrained>
+//!   ├─ .train(TrainSpec)            ──> PlanBuilder<Trained>
+//!   └─ .with_ensemble(ens, &data)   ──> PlanBuilder<Trained>
+//! PlanBuilder<Trained>
+//!   └─ .optimize(&QwycConfig, &Pool)──> PlanBuilder<Optimized>
+//! PlanBuilder<Optimized>
+//!   ├─ .compile()                   ──> Arc<CompiledPlan>
+//!   ├─ .into_plan()                 ──> QwycPlan (the artifact that ships)
+//!   └─ .session()                   ──> EvalSession (streaming decisions)
+//! ```
+//!
+//! The builder is a veneer, not a fork: `.optimize` runs exactly
+//! [`optimize_order_with_pool`] on exactly
+//! [`Ensemble::score_matrix_par`]'s output, so its plans are
+//! **bit-identical** to the loose-function path at every thread count
+//! (pinned in `rust/tests/pipeline_api.rs`). Evaluation goes through
+//! [`EvalSession`], whose [`Decision`]s come from the same shared sweep
+//! core every other consumer uses.
+
+#![warn(missing_docs)]
+
+mod session;
+
+pub use session::{Decision, DecisionIter, EvalSession};
+
+use crate::data::Dataset;
+use crate::ensemble::{Ensemble, ScoreMatrix};
+use crate::error::QwycError;
+use crate::gbt::GbtParams;
+use crate::lattice::model::MAX_DIM;
+use crate::lattice::LatticeParams;
+use crate::plan::{CompiledPlan, QwycPlan};
+use crate::qwyc::{optimize_order_with_pool, FastClassifier, QwycConfig};
+use crate::util::pool::Pool;
+use std::borrow::Cow;
+use std::sync::Arc;
+
+// ------------------------------------------------------------ training
+
+/// Which ensemble family to train, with its hyperparameters.
+#[derive(Clone, Debug)]
+pub enum ModelSpec {
+    /// Gradient-boosted trees (the paper's benchmark experiments).
+    Gbt(GbtParams),
+    /// Jointly trained lattice ensemble (the paper's production models).
+    LatticeJoint(LatticeParams),
+    /// Independently trained lattices (the re-trained comparison).
+    LatticeIndependent(LatticeParams),
+}
+
+/// A training request: the dataset plus the model family to fit. The
+/// dataset doubles as the optimization set for the following
+/// [`PlanBuilder::optimize`](PlanBuilder::optimize) stage.
+#[derive(Clone, Debug)]
+pub struct TrainSpec<'a> {
+    /// Training (and threshold-optimization) examples.
+    pub data: &'a Dataset,
+    /// Ensemble family and hyperparameters.
+    pub model: ModelSpec,
+}
+
+impl<'a> TrainSpec<'a> {
+    /// Boosted-tree spec.
+    pub fn gbt(data: &'a Dataset, params: GbtParams) -> TrainSpec<'a> {
+        TrainSpec { data, model: ModelSpec::Gbt(params) }
+    }
+
+    /// Jointly trained lattice spec.
+    pub fn lattice_joint(data: &'a Dataset, params: LatticeParams) -> TrainSpec<'a> {
+        TrainSpec { data, model: ModelSpec::LatticeJoint(params) }
+    }
+
+    /// Independently trained lattice spec.
+    pub fn lattice_independent(data: &'a Dataset, params: LatticeParams) -> TrainSpec<'a> {
+        TrainSpec { data, model: ModelSpec::LatticeIndependent(params) }
+    }
+
+    /// Reject impossible requests before the trainers' internal asserts
+    /// can panic: degenerate datasets and zero-sized or over-wide models
+    /// are `Train` errors.
+    fn validate(&self) -> Result<(), QwycError> {
+        let train_err = |m: String| Err(QwycError::Train(m));
+        if self.data.n < 2 {
+            return train_err(format!("need at least 2 training examples, got {}", self.data.n));
+        }
+        match &self.model {
+            ModelSpec::Gbt(p) => {
+                if p.n_trees == 0 {
+                    return train_err("gbt: n_trees must be >= 1".into());
+                }
+            }
+            ModelSpec::LatticeJoint(p) | ModelSpec::LatticeIndependent(p) => {
+                if p.n_lattices == 0 {
+                    return train_err("lattice: n_lattices must be >= 1".into());
+                }
+                if p.dim > MAX_DIM {
+                    return train_err(format!("lattice: dim {} > MAX_DIM {MAX_DIM}", p.dim));
+                }
+                if p.dim > self.data.d {
+                    return train_err(format!(
+                        "lattice: dim {} > dataset width {}",
+                        p.dim, self.data.d
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Run the trainer; returns the ensemble and its per-round train
+    /// losses. [`PlanBuilder::train`] calls this — it is public so
+    /// embedders can also fit an ensemble without entering the builder.
+    pub fn fit(&self) -> Result<(Ensemble, Vec<f64>), QwycError> {
+        self.validate()?;
+        Ok(match &self.model {
+            ModelSpec::Gbt(p) => crate::gbt::train(self.data, p),
+            ModelSpec::LatticeJoint(p) => crate::lattice::train_joint(self.data, p),
+            ModelSpec::LatticeIndependent(p) => crate::lattice::train_independent(self.data, p),
+        })
+    }
+}
+
+// -------------------------------------------------------------- stages
+
+/// Where the optimize stage reads its score matrix from.
+enum OptSet<'a> {
+    /// Score the dataset at optimize time (through the builder's pool).
+    Data(&'a Dataset),
+    /// A caller-precomputed matrix (must agree with the ensemble).
+    Scores(&'a ScoreMatrix),
+}
+
+/// Typed stage: no ensemble yet.
+pub struct Untrained(());
+
+/// Typed stage: an ensemble exists; order/thresholds do not. The
+/// ensemble is borrowed when the caller brought their own
+/// (`with_ensemble`/`with_scores`) and owned when [`PlanBuilder::train`]
+/// fitted it — no deep copies until an artifact is actually bundled.
+pub struct Trained<'a> {
+    ensemble: Cow<'a, Ensemble>,
+    losses: Vec<f64>,
+    opt_set: OptSet<'a>,
+}
+
+/// Typed stage: order π and thresholds ε± are optimized.
+pub struct Optimized<'a> {
+    ensemble: Cow<'a, Ensemble>,
+    fc: FastClassifier,
+    alpha: f64,
+}
+
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for super::Untrained {}
+    impl Sealed for super::Trained<'_> {}
+    impl Sealed for super::Optimized<'_> {}
+}
+
+/// Marker for the builder's typed states (sealed: the state machine is
+/// closed — embedders cannot add stages that skip its checks).
+pub trait Stage: sealed::Sealed {}
+
+impl Stage for Untrained {}
+impl Stage for Trained<'_> {}
+impl Stage for Optimized<'_> {}
+
+/// The capability gating the terminal methods: `classifier`, `alpha`,
+/// `plan`, `into_plan`, `compile`, and `session` are implemented for
+/// `PlanBuilder<S>` **only when `S: CompileReady`**, and the only stage
+/// implementing it is [`Optimized`] — so skipping the optimize stage is
+/// an unsatisfied-trait-bound error at compile time:
+///
+/// ```compile_fail
+/// use qwyc::data::Dataset;
+/// use qwyc::ensemble::Ensemble;
+/// use qwyc::pipeline::PlanBuilder;
+///
+/// let ds = Dataset::new("d", 1);
+/// let ens = Ensemble::new("e", vec![], 0.0, 0.0);
+/// let trained = PlanBuilder::new("p").with_ensemble(&ens, &ds);
+/// let _ = trained.compile(); // ERROR: `Trained<'_>: CompileReady` is not satisfied
+/// ```
+pub trait CompileReady: Stage {
+    /// Borrow the optimized parts: (ensemble, classifier, alpha).
+    #[doc(hidden)]
+    fn parts(&self) -> (&Ensemble, &FastClassifier, f64);
+    /// Take the optimized parts, cloning the ensemble only if it was
+    /// brought in by reference.
+    #[doc(hidden)]
+    fn into_parts(self) -> (Ensemble, FastClassifier, f64)
+    where
+        Self: Sized;
+}
+
+impl CompileReady for Optimized<'_> {
+    fn parts(&self) -> (&Ensemble, &FastClassifier, f64) {
+        (self.ensemble.as_ref(), &self.fc, self.alpha)
+    }
+
+    fn into_parts(self) -> (Ensemble, FastClassifier, f64) {
+        (self.ensemble.into_owned(), self.fc, self.alpha)
+    }
+}
+
+// ------------------------------------------------------------- builder
+
+/// Typed-state builder for the train → optimize → compile pipeline.
+/// See the [module docs](self) for the state machine.
+pub struct PlanBuilder<S: Stage> {
+    name: String,
+    n_features: usize,
+    source: String,
+    stage: S,
+}
+
+impl<S: Stage> PlanBuilder<S> {
+    /// Rename the plan (defaults to the name given at [`PlanBuilder::new`]).
+    pub fn named(mut self, name: &str) -> Self {
+        name.clone_into(&mut self.name);
+        self
+    }
+
+    /// Declare the serving feature width recorded in the plan (0 = infer:
+    /// the optimization dataset's width when one is given, else the
+    /// widest feature any base model reads).
+    pub fn with_n_features(mut self, d: usize) -> Self {
+        self.n_features = d;
+        self
+    }
+
+    /// Free-form provenance recorded in the plan (dataset, pipeline id,
+    /// commit, ...).
+    pub fn with_source(mut self, source: &str) -> Self {
+        source.clone_into(&mut self.source);
+        self
+    }
+
+    /// The plan name this builder will record.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn carry<T: Stage>(self, stage: T) -> PlanBuilder<T> {
+        PlanBuilder {
+            name: self.name,
+            n_features: self.n_features,
+            source: self.source,
+            stage,
+        }
+    }
+}
+
+impl PlanBuilder<Untrained> {
+    /// Start a pipeline; `name` becomes the plan name (provenance).
+    pub fn new(name: &str) -> PlanBuilder<Untrained> {
+        PlanBuilder {
+            name: name.to_string(),
+            n_features: 0,
+            source: String::new(),
+            stage: Untrained(()),
+        }
+    }
+
+    /// Train an ensemble per `spec`; its dataset becomes the
+    /// optimization set for [`PlanBuilder::optimize`].
+    pub fn train(self, spec: TrainSpec<'_>) -> Result<PlanBuilder<Trained<'_>>, QwycError> {
+        let (ensemble, losses) = spec.fit()?;
+        let ensemble = Cow::Owned(ensemble);
+        Ok(self.carry(Trained { ensemble, losses, opt_set: OptSet::Data(spec.data) }))
+    }
+
+    /// Bring an already-trained ensemble (borrowed — nothing is cloned
+    /// until an artifact is bundled); `opt_set` is the data the
+    /// order/threshold optimization will run against.
+    pub fn with_ensemble<'a>(
+        self,
+        ensemble: &'a Ensemble,
+        opt_set: &'a Dataset,
+    ) -> PlanBuilder<Trained<'a>> {
+        let ensemble = Cow::Borrowed(ensemble);
+        self.carry(Trained { ensemble, losses: Vec::new(), opt_set: OptSet::Data(opt_set) })
+    }
+
+    /// Bring an ensemble plus its precomputed score matrix (skips the
+    /// scoring pass inside [`PlanBuilder::optimize`]). The matrix must be
+    /// the ensemble's own: matching T, bias, and β.
+    pub fn with_scores<'a>(
+        self,
+        ensemble: &'a Ensemble,
+        scores: &'a ScoreMatrix,
+    ) -> Result<PlanBuilder<Trained<'a>>, QwycError> {
+        if scores.t != ensemble.len() {
+            return Err(QwycError::Validate(format!(
+                "score matrix covers {} models but the ensemble has {}",
+                scores.t,
+                ensemble.len()
+            )));
+        }
+        if scores.bias != ensemble.bias || scores.beta != ensemble.beta {
+            return Err(QwycError::Validate(format!(
+                "score matrix bias/beta ({}, {}) disagree with ensemble ({}, {})",
+                scores.bias, scores.beta, ensemble.bias, ensemble.beta
+            )));
+        }
+        let ensemble = Cow::Borrowed(ensemble);
+        Ok(self.carry(Trained { ensemble, losses: Vec::new(), opt_set: OptSet::Scores(scores) }))
+    }
+}
+
+impl<'a> PlanBuilder<Trained<'a>> {
+    /// The trained (or provided) ensemble.
+    pub fn ensemble(&self) -> &Ensemble {
+        &self.stage.ensemble
+    }
+
+    /// Per-round train losses when [`PlanBuilder::train`] fitted the
+    /// ensemble (empty for `with_ensemble`/`with_scores`).
+    pub fn losses(&self) -> &[f64] {
+        &self.stage.losses
+    }
+
+    /// Give up on the pipeline and take the ensemble (e.g. to save a
+    /// `model.json` without optimizing yet — the CLI `train` arm).
+    /// Clones only if the ensemble was brought in by reference.
+    pub fn into_ensemble(self) -> Ensemble {
+        self.stage.ensemble.into_owned()
+    }
+
+    /// Jointly optimize evaluation order π and thresholds ε± (QWYC*,
+    /// Algorithm 1) across `pool`. Exactly the loose-function path —
+    /// [`Ensemble::score_matrix_par`] then [`optimize_order_with_pool`] —
+    /// so the result is bit-identical to it at every thread count.
+    pub fn optimize(
+        self,
+        cfg: &QwycConfig,
+        pool: &Pool,
+    ) -> Result<PlanBuilder<Optimized<'a>>, QwycError> {
+        if !(0.0..=1.0).contains(&cfg.alpha) {
+            return Err(QwycError::Config(format!(
+                "alpha must be within [0, 1], got {}",
+                cfg.alpha
+            )));
+        }
+        if self.stage.ensemble.is_empty() {
+            return Err(QwycError::Train("cannot optimize an empty ensemble".into()));
+        }
+        let mut n_features = self.n_features;
+        let owned;
+        let sm: &ScoreMatrix = match &self.stage.opt_set {
+            OptSet::Data(ds) => {
+                let need = self.stage.ensemble.feature_count();
+                if ds.d < need {
+                    return Err(QwycError::Config(format!(
+                        "optimization set is {} features wide but the ensemble reads {need}",
+                        ds.d
+                    )));
+                }
+                if n_features == 0 {
+                    n_features = ds.d;
+                }
+                owned = self.stage.ensemble.score_matrix_par(ds, pool);
+                &owned
+            }
+            OptSet::Scores(sm) => *sm,
+        };
+        let fc = optimize_order_with_pool(sm, cfg, pool);
+        let stage = Optimized { ensemble: self.stage.ensemble, fc, alpha: cfg.alpha };
+        let mut next = PlanBuilder {
+            name: self.name,
+            n_features,
+            source: self.source,
+            stage,
+        };
+        if next.source.is_empty() {
+            next.source = String::from("qwyc::pipeline");
+        }
+        Ok(next)
+    }
+}
+
+impl<S: CompileReady> PlanBuilder<S> {
+    /// The optimized fast classifier (π + ε± + bias/β).
+    pub fn classifier(&self) -> &FastClassifier {
+        self.stage.parts().1
+    }
+
+    /// The α the thresholds were optimized for.
+    pub fn alpha(&self) -> f64 {
+        self.stage.parts().2
+    }
+
+    /// Bundle into the versioned `qwyc-plan-v1` artifact — fully
+    /// validated, including the declared feature width, so the result
+    /// is safe to save and deploy as-is.
+    pub fn plan(&self) -> Result<QwycPlan, QwycError> {
+        let (ensemble, fc, alpha) = self.stage.parts();
+        let mut plan = QwycPlan::bundle_with_width(
+            ensemble.clone(),
+            fc.clone(),
+            &self.name,
+            alpha,
+            self.n_features,
+        )?;
+        plan.meta.source.clone_from(&self.source);
+        Ok(plan)
+    }
+
+    /// [`PlanBuilder::plan`], consuming the builder — the zero-extra-copy
+    /// path when the builder trained (and therefore owns) the ensemble.
+    pub fn into_plan(self) -> Result<QwycPlan, QwycError> {
+        let (ensemble, fc, alpha) = self.stage.into_parts();
+        let mut plan =
+            QwycPlan::bundle_with_width(ensemble, fc, &self.name, alpha, self.n_features)?;
+        plan.meta.source = self.source;
+        Ok(plan)
+    }
+
+    /// Compile into the shared serving form: invariants checked once,
+    /// models pre-permuted, ready to hand to engine shards or an
+    /// [`EvalSession`].
+    pub fn compile(&self) -> Result<Arc<CompiledPlan>, QwycError> {
+        self.plan()?.compile_shared()
+    }
+
+    /// Compile and open an evaluation session with the `QWYC_THREADS`
+    /// pool — the one-call path from an optimized builder to streaming
+    /// [`Decision`]s.
+    pub fn session(&self) -> Result<EvalSession, QwycError> {
+        Ok(EvalSession::new(self.compile()?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, Which};
+
+    fn tiny() -> (Dataset, Ensemble) {
+        let (tr, _) = generate(Which::AdultLike, 5, 0.01);
+        let (ens, _) = crate::gbt::train(
+            &tr,
+            &GbtParams { n_trees: 8, max_depth: 3, ..Default::default() },
+        );
+        (tr, ens)
+    }
+
+    #[test]
+    fn train_stage_rejects_degenerate_specs() {
+        let ds = Dataset::new("empty", 3);
+        let spec = TrainSpec::gbt(&ds, GbtParams::default());
+        let err = PlanBuilder::new("p").train(spec).unwrap_err();
+        assert_eq!(err.stage(), "train", "{err}");
+
+        let (tr, _) = generate(Which::AdultLike, 5, 0.01);
+        let spec = TrainSpec::gbt(&tr, GbtParams { n_trees: 0, ..Default::default() });
+        assert_eq!(PlanBuilder::new("p").train(spec).unwrap_err().stage(), "train");
+
+        let wide =
+            LatticeParams { n_lattices: 2, dim: tr.d + 1, steps: 5, ..Default::default() };
+        let spec = TrainSpec::lattice_joint(&tr, wide);
+        assert_eq!(PlanBuilder::new("p").train(spec).unwrap_err().stage(), "train");
+    }
+
+    #[test]
+    fn with_scores_rejects_mismatched_matrices() {
+        let (tr, ens) = tiny();
+        let mut sm = ens.score_matrix_par(&tr, &Pool::new(1));
+        sm.bias += 1.0;
+        let err = PlanBuilder::new("p").with_scores(&ens, &sm).unwrap_err();
+        assert_eq!(err.stage(), "validate", "{err}");
+
+        let sm = ens.score_matrix_par(&tr, &Pool::new(1));
+        let short = ens.prefix(ens.len() - 1);
+        let err = PlanBuilder::new("p").with_scores(&short, &sm).unwrap_err();
+        assert_eq!(err.stage(), "validate", "{err}");
+    }
+
+    #[test]
+    fn optimize_rejects_bad_config_and_narrow_data() {
+        let (tr, ens) = tiny();
+        let pool = Pool::new(1);
+        let bad = QwycConfig { alpha: 1.5, ..Default::default() };
+        let err = PlanBuilder::new("p")
+            .with_ensemble(&ens, &tr)
+            .optimize(&bad, &pool)
+            .unwrap_err();
+        assert_eq!(err.stage(), "config", "{err}");
+
+        let mut narrow = Dataset::new("narrow", 1);
+        narrow.push(&[0.1], 0.0);
+        narrow.push(&[0.9], 1.0);
+        let err = PlanBuilder::new("p")
+            .with_ensemble(&ens, &narrow)
+            .optimize(&QwycConfig::default(), &pool)
+            .unwrap_err();
+        assert_eq!(err.stage(), "config", "{err}");
+    }
+
+    #[test]
+    fn narrow_declared_width_fails_at_bundle_not_deploy() {
+        let (tr, ens) = tiny();
+        let pool = Pool::new(1);
+        let opt = PlanBuilder::new("narrow")
+            .with_ensemble(&ens, &tr)
+            .optimize(&QwycConfig::default(), &pool)
+            .unwrap()
+            .with_n_features(1);
+        let err = opt.plan().unwrap_err();
+        assert_eq!(err.stage(), "compile", "{err}");
+        assert_eq!(opt.into_plan().unwrap_err().stage(), "compile");
+    }
+
+    #[test]
+    fn full_flow_produces_a_compilable_plan() {
+        let (tr, _) = generate(Which::AdultLike, 5, 0.01);
+        let spec = TrainSpec::gbt(
+            &tr,
+            GbtParams { n_trees: 8, max_depth: 3, ..Default::default() },
+        );
+        let trained = PlanBuilder::new("flow").train(spec).unwrap();
+        assert_eq!(trained.losses().len(), 8);
+        let opt = trained
+            .optimize(&QwycConfig { alpha: 0.01, ..Default::default() }, &Pool::new(1))
+            .unwrap();
+        assert_eq!(opt.alpha(), 0.01);
+        let plan = opt.plan().unwrap();
+        // The optimization set's width is recorded automatically.
+        assert_eq!(plan.meta.n_features, tr.d);
+        assert_eq!(plan.meta.name, "flow");
+        let compiled = opt.compile().unwrap();
+        assert_eq!(compiled.n_features(), tr.d);
+        assert_eq!(compiled.t(), 8);
+    }
+
+}

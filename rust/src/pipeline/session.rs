@@ -1,0 +1,277 @@
+//! Evaluation sessions over a compiled plan: per-example [`Decision`]s
+//! via one-shot [`EvalSession::decide`], batched
+//! [`EvalSession::decide_batch`], or the pull-based streaming
+//! [`EvalSession::decide_iter`].
+//!
+//! All three surfaces run the crate-wide sweep arithmetic (per-example
+//! f32 accumulation in π order — [`CompiledPlan::eval_single`]'s
+//! contract), so their decisions are **bitwise identical** to each other
+//! and to the serving engine, at every thread count and block boundary
+//! (pinned in `rust/tests/pipeline_api.rs`).
+
+use crate::error::QwycError;
+use crate::plan::CompiledPlan;
+use crate::qwyc::sweep::{sweep_block, SweepOutcome};
+use crate::qwyc::SingleResult;
+use crate::util::pool::Pool;
+use std::sync::Arc;
+
+/// Example-block width for batched/streaming decisions (same cache logic
+/// as the serving engine's block).
+const SESSION_BLOCK: usize = 256;
+
+/// One early-exit classification outcome, with its cost accounting.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Decision {
+    /// Running score at the stop position (the full score for examples
+    /// that never exited early).
+    pub score: f32,
+    /// The classification: `true` = positive.
+    pub label: bool,
+    /// 1-based count of base models evaluated (T when nothing exited).
+    pub exit_position: u32,
+    /// Evaluation cost Σ c over the evaluated π prefix (equals
+    /// `exit_position` when every base model costs 1).
+    pub cost: f64,
+    /// Did a threshold retire this example before position T?
+    pub exited_early: bool,
+}
+
+impl Decision {
+    fn from_sweep(plan: &CompiledPlan, o: &SweepOutcome) -> Decision {
+        Decision {
+            score: o.score,
+            label: o.positive,
+            exit_position: o.stop,
+            cost: plan.prefix_cost(o.stop as usize),
+            exited_early: o.early,
+        }
+    }
+
+    fn from_single(plan: &CompiledPlan, r: SingleResult) -> Decision {
+        Decision {
+            score: r.score,
+            label: r.positive,
+            exit_position: r.models_evaluated as u32,
+            cost: plan.prefix_cost(r.models_evaluated),
+            exited_early: r.early,
+        }
+    }
+}
+
+/// An evaluation handle over a shared [`CompiledPlan`]: the embedder's
+/// equivalent of one serving shard. Cheap to construct (the plan is
+/// behind an `Arc`), safe to use from many threads (one session per
+/// thread; the per-call scratch lives inside each call).
+pub struct EvalSession {
+    plan: Arc<CompiledPlan>,
+    pool: Pool,
+}
+
+impl EvalSession {
+    /// Open a session with the pool implied by `QWYC_THREADS` (or all
+    /// available cores).
+    pub fn new(plan: Arc<CompiledPlan>) -> EvalSession {
+        EvalSession::with_pool(plan, Pool::from_env())
+    }
+
+    /// Open a session over an explicit worker pool (e.g. `Pool::new(1)`
+    /// to keep batch decisions off other cores).
+    pub fn with_pool(plan: Arc<CompiledPlan>, pool: Pool) -> EvalSession {
+        EvalSession { plan, pool }
+    }
+
+    /// The compiled plan this session evaluates.
+    pub fn plan(&self) -> &CompiledPlan {
+        &self.plan
+    }
+
+    /// Feature width expected per example by [`EvalSession::decide_batch`]
+    /// and [`EvalSession::decide_iter`].
+    pub fn n_features(&self) -> usize {
+        self.plan.n_features()
+    }
+
+    fn check_stride(&self, x: &[f32], n: usize) -> Result<usize, QwycError> {
+        let d = self.plan.n_features();
+        if x.len() != n * d {
+            return Err(QwycError::Config(format!(
+                "feature buffer holds {} floats but {n} examples x {d} features need {}",
+                x.len(),
+                n * d
+            )));
+        }
+        Ok(d)
+    }
+
+    /// Classify one example (early-exit walk over the pre-permuted
+    /// models). The row may be wider than the plan's feature floor.
+    pub fn decide(&self, x: &[f32]) -> Result<Decision, QwycError> {
+        if x.len() < self.plan.min_features() {
+            return Err(QwycError::Config(format!(
+                "example has {} features but the plan's base models read {}",
+                x.len(),
+                self.plan.min_features()
+            )));
+        }
+        Ok(Decision::from_single(&self.plan, self.plan.eval_single(x)))
+    }
+
+    /// Classify `n` row-major examples of stride
+    /// [`n_features`](EvalSession::n_features), fanned across the
+    /// session's pool. Decisions come back in example order.
+    pub fn decide_batch(&self, x: &[f32], n: usize) -> Result<Vec<Decision>, QwycError> {
+        let d = self.check_stride(x, n)?;
+        let outcomes = self.plan.sweep_features(x, n, d, SESSION_BLOCK, &self.pool);
+        Ok(outcomes.iter().map(|o| Decision::from_sweep(&self.plan, o)).collect())
+    }
+
+    /// Pull-based streaming evaluation: an iterator yielding one
+    /// [`Decision`] per example, in order, sweeping lazily in
+    /// cache-sized blocks — consumers that stop early (e.g. "collect the
+    /// first K positives") never pay for the rest of the buffer, and
+    /// nothing materializes a whole batch of decisions.
+    pub fn decide_iter<'a>(
+        &'a self,
+        x: &'a [f32],
+        n: usize,
+    ) -> Result<DecisionIter<'a>, QwycError> {
+        let d = self.check_stride(x, n)?;
+        Ok(DecisionIter {
+            plan: &self.plan,
+            x,
+            d,
+            n,
+            swept: 0,
+            buf: Vec::new(),
+            buf_pos: 0,
+            lat_scratch: Vec::new(),
+        })
+    }
+}
+
+/// Streaming iterator over per-example [`Decision`]s; see
+/// [`EvalSession::decide_iter`].
+pub struct DecisionIter<'a> {
+    plan: &'a CompiledPlan,
+    x: &'a [f32],
+    d: usize,
+    n: usize,
+    /// Examples swept so far (block granularity).
+    swept: usize,
+    buf: Vec<Decision>,
+    buf_pos: usize,
+    /// Lattice walk scratch, reused across blocks (8K floats at dim 13 —
+    /// re-allocating per block would waste hot-path work).
+    lat_scratch: Vec<f32>,
+}
+
+impl Iterator for DecisionIter<'_> {
+    type Item = Decision;
+
+    fn next(&mut self) -> Option<Decision> {
+        if self.buf_pos == self.buf.len() {
+            if self.swept == self.n {
+                return None;
+            }
+            let (lo, hi) = (self.swept, (self.swept + SESSION_BLOCK).min(self.n));
+            let (plan, d) = (self.plan, self.d);
+            let xblk = &self.x[lo * d..hi * d];
+            let params = plan.sweep_params();
+            let lat_scratch = &mut self.lat_scratch;
+            let outcomes = sweep_block(&params, hi - lo, |r, rows, out| {
+                plan.score_position(r, xblk, d, rows, out, lat_scratch)
+            });
+            self.buf.clear();
+            self.buf.extend(outcomes.iter().map(|o| Decision::from_sweep(plan, o)));
+            self.buf_pos = 0;
+            self.swept = hi;
+        }
+        let d = self.buf[self.buf_pos];
+        self.buf_pos += 1;
+        Some(d)
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let rem = (self.n - self.swept) + (self.buf.len() - self.buf_pos);
+        (rem, Some(rem))
+    }
+}
+
+impl ExactSizeIterator for DecisionIter<'_> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, Which};
+    use crate::gbt::GbtParams;
+    use crate::pipeline::{PlanBuilder, TrainSpec};
+    use crate::qwyc::QwycConfig;
+
+    fn session() -> (crate::data::Dataset, EvalSession) {
+        let (tr, te) = generate(Which::AdultLike, 9, 0.01);
+        let spec = TrainSpec::gbt(
+            &tr,
+            GbtParams { n_trees: 10, max_depth: 3, ..Default::default() },
+        );
+        let s = PlanBuilder::new("session-test")
+            .train(spec)
+            .unwrap()
+            .optimize(&QwycConfig { alpha: 0.01, ..Default::default() }, &Pool::new(1))
+            .unwrap()
+            .session()
+            .unwrap();
+        (te, s)
+    }
+
+    #[test]
+    fn iter_streams_the_same_decisions_as_batch() {
+        let (te, s) = session();
+        let n = te.n.min(300); // spans two SESSION_BLOCKs
+        let x = &te.x[..n * te.d];
+        let batch = s.decide_batch(x, n).unwrap();
+        let iter = s.decide_iter(x, n).unwrap();
+        assert_eq!(iter.len(), n);
+        let streamed: Vec<Decision> = iter.collect();
+        assert_eq!(streamed.len(), n);
+        for (i, (a, b)) in batch.iter().zip(streamed.iter()).enumerate() {
+            assert_eq!(a.label, b.label, "example {i}");
+            assert_eq!(a.exit_position, b.exit_position, "example {i}");
+            assert_eq!(a.exited_early, b.exited_early, "example {i}");
+            assert_eq!(a.score.to_bits(), b.score.to_bits(), "example {i}");
+            assert_eq!(a.cost.to_bits(), b.cost.to_bits(), "example {i}");
+        }
+    }
+
+    #[test]
+    fn early_consumers_stop_without_sweeping_everything() {
+        let (te, s) = session();
+        let n = te.n.min(600);
+        let x = &te.x[..n * te.d];
+        let mut iter = s.decide_iter(x, n).unwrap();
+        let first = iter.next().unwrap();
+        let alone = s.decide(te.row(0)).unwrap();
+        assert_eq!(first.score.to_bits(), alone.score.to_bits());
+        // Only the first block has been swept so far.
+        assert!(iter.swept <= 256, "swept {} examples for one pull", iter.swept);
+        assert_eq!(iter.size_hint(), (n - 1, Some(n - 1)));
+    }
+
+    #[test]
+    fn stride_mismatches_are_config_errors() {
+        let (te, s) = session();
+        let err = s.decide_batch(&te.x[..te.d + 1], 1).unwrap_err();
+        assert_eq!(err.stage(), "config", "{err}");
+        let err = s.decide_iter(&te.x[..te.d - 1], 1).unwrap_err();
+        assert_eq!(err.stage(), "config", "{err}");
+        let err = s.decide(&te.x[..0]).unwrap_err();
+        assert_eq!(err.stage(), "config", "{err}");
+    }
+
+    #[test]
+    fn empty_input_yields_no_decisions() {
+        let (_, s) = session();
+        assert!(s.decide_batch(&[], 0).unwrap().is_empty());
+        assert_eq!(s.decide_iter(&[], 0).unwrap().count(), 0);
+    }
+}

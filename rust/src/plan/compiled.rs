@@ -11,7 +11,7 @@
 
 use super::QwycPlan;
 use crate::ensemble::BaseModel;
-use crate::error::PlanError;
+use crate::error::QwycError;
 use crate::gbt::tree::TreeSoa;
 use crate::qwyc::sweep::{sweep_batched, SweepOutcome, SweepParams};
 use crate::qwyc::SingleResult;
@@ -55,7 +55,7 @@ const _: fn() = || {
 };
 
 impl CompiledPlan {
-    pub(super) fn from_plan(plan: &QwycPlan) -> Result<CompiledPlan, PlanError> {
+    pub(super) fn from_plan(plan: &QwycPlan) -> Result<CompiledPlan, QwycError> {
         plan.validate()?;
         let t = plan.fc.t();
         let mut models = Vec::with_capacity(t);
@@ -63,7 +63,9 @@ impl CompiledPlan {
         for (r, &m) in plan.fc.order.iter().enumerate() {
             let model = &plan.ensemble.models[m];
             if let BaseModel::Tree(tr) = model {
-                tr.validate().map_err(PlanError::Compile)?;
+                tr.validate().map_err(|e| {
+                    QwycError::Compile(format!("position {r} (model {m}): {}", e.message()))
+                })?;
             }
             models.push(model.clone());
             prefix_cost[r + 1] = prefix_cost[r] + plan.ensemble.costs[m] as f64;
@@ -77,14 +79,14 @@ impl CompiledPlan {
             .collect();
         let min_features = plan.ensemble.feature_count();
         if min_features == 0 && t > 0 {
-            return Err(PlanError::Compile(format!(
+            return Err(QwycError::Compile(format!(
                 "plan '{}': cannot infer a feature count from the ensemble",
                 plan.meta.name
             )));
         }
         let n_features = if plan.meta.n_features > 0 {
             if plan.meta.n_features < min_features {
-                return Err(PlanError::Compile(format!(
+                return Err(QwycError::Compile(format!(
                     "plan '{}': declared n_features {} < {} required by the base models",
                     plan.meta.name, plan.meta.n_features, min_features
                 )));

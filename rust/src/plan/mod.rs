@@ -22,9 +22,9 @@
 mod compiled;
 
 pub use compiled::CompiledPlan;
-// Re-exported so plan consumers get the artifact error type where the
+// Re-exported so plan consumers get the crate error type where the
 // artifact lives.
-pub use crate::error::PlanError;
+pub use crate::error::QwycError;
 
 use crate::ensemble::Ensemble;
 use crate::qwyc::FastClassifier;
@@ -79,8 +79,8 @@ impl PlanMeta {
         ])
     }
 
-    fn from_json(v: &Json) -> Result<PlanMeta, PlanError> {
-        let schema = |e: String| PlanError::Schema(format!("meta: {e}"));
+    fn from_json(v: &Json) -> Result<PlanMeta, QwycError> {
+        let schema = |e: QwycError| e.context("meta");
         Ok(PlanMeta {
             name: v.req("name").and_then(|v| v.as_str().map(str::to_string)).map_err(schema)?,
             alpha: v.req("alpha").and_then(|v| v.as_f64()).map_err(schema)?,
@@ -110,7 +110,7 @@ impl QwycPlan {
         ensemble: Ensemble,
         fc: FastClassifier,
         mut meta: PlanMeta,
-    ) -> Result<QwycPlan, PlanError> {
+    ) -> Result<QwycPlan, QwycError> {
         meta.neg_only = fc.eps_pos.iter().all(|&e| e == f32::INFINITY);
         let plan = QwycPlan { ensemble, fc, meta };
         plan.validate()?;
@@ -123,18 +123,43 @@ impl QwycPlan {
         fc: FastClassifier,
         name: &str,
         alpha: f64,
-    ) -> Result<QwycPlan, PlanError> {
+    ) -> Result<QwycPlan, QwycError> {
         QwycPlan::new(ensemble, fc, PlanMeta::named(name, alpha))
+    }
+
+    /// [`QwycPlan::bundle`] with a declared serving feature width,
+    /// checked here against the base models (0 = infer at compile time)
+    /// so a too-narrow declaration fails at build time, not at deploy.
+    pub fn bundle_with_width(
+        ensemble: Ensemble,
+        fc: FastClassifier,
+        name: &str,
+        alpha: f64,
+        n_features: usize,
+    ) -> Result<QwycPlan, QwycError> {
+        let mut plan = QwycPlan::bundle(ensemble, fc, name, alpha)?;
+        if n_features > 0 {
+            let need = plan.ensemble.feature_count();
+            if n_features < need {
+                return Err(QwycError::Compile(format!(
+                    "plan '{}': declared n_features {n_features} < {need} required by the \
+                     base models",
+                    plan.meta.name
+                )));
+            }
+        }
+        plan.meta.n_features = n_features;
+        Ok(plan)
     }
 
     /// Structural validation shared by construction and deserialization:
     /// classifier invariants, size agreement, and bias/β consistency
     /// between the ensemble and the classifier (they are two views of
     /// the same deployed model — a mismatch is a packaging error).
-    pub fn validate(&self) -> Result<(), PlanError> {
-        self.fc.validate().map_err(PlanError::Validate)?;
+    pub fn validate(&self) -> Result<(), QwycError> {
+        self.fc.validate()?;
         if self.ensemble.len() != self.fc.t() {
-            return Err(PlanError::Validate(format!(
+            return Err(QwycError::Validate(format!(
                 "plan '{}': ensemble has {} models but classifier covers {}",
                 self.meta.name,
                 self.ensemble.len(),
@@ -142,7 +167,7 @@ impl QwycPlan {
             )));
         }
         if self.fc.bias != self.ensemble.bias || self.fc.beta != self.ensemble.beta {
-            return Err(PlanError::Validate(format!(
+            return Err(QwycError::Validate(format!(
                 "plan '{}': classifier bias/beta ({}, {}) disagree with ensemble ({}, {})",
                 self.meta.name, self.fc.bias, self.fc.beta, self.ensemble.bias, self.ensemble.beta
             )));
@@ -151,7 +176,7 @@ impl QwycPlan {
         // wrong value (hand-edited artifact) must not load.
         let neg_only = self.fc.eps_pos.iter().all(|&e| e == f32::INFINITY);
         if self.meta.neg_only != neg_only {
-            return Err(PlanError::Validate(format!(
+            return Err(QwycError::Validate(format!(
                 "plan '{}': meta.neg_only={} but the classifier's thresholds say {}",
                 self.meta.name, self.meta.neg_only, neg_only
             )));
@@ -162,14 +187,14 @@ impl QwycPlan {
     /// Compile into the serving-ready form: models pre-permuted into π
     /// order, SoA banks built, prefix costs tabulated, feature counts
     /// agreed — all checks run here, once, instead of per call.
-    pub fn compile(&self) -> Result<CompiledPlan, PlanError> {
+    pub fn compile(&self) -> Result<CompiledPlan, QwycError> {
         CompiledPlan::from_plan(self)
     }
 
     /// Compile straight into the shared serving form: an
     /// `Arc<CompiledPlan>` ready to hand to N engine shards (and to a
     /// [`PlanSlot`] for hot-reload).
-    pub fn compile_shared(&self) -> Result<Arc<CompiledPlan>, PlanError> {
+    pub fn compile_shared(&self) -> Result<Arc<CompiledPlan>, QwycError> {
         self.compile().map(Arc::new)
     }
 
@@ -184,21 +209,18 @@ impl QwycPlan {
         ])
     }
 
-    pub fn from_json(v: &Json) -> Result<QwycPlan, PlanError> {
-        let schema =
-            v.req("schema").and_then(|v| v.as_str()).map_err(PlanError::Schema)?;
+    pub fn from_json(v: &Json) -> Result<QwycPlan, QwycError> {
+        let schema = v.req("schema").and_then(|v| v.as_str())?;
         if schema != PLAN_SCHEMA {
-            return Err(PlanError::Schema(format!(
+            return Err(QwycError::Schema(format!(
                 "expected schema '{PLAN_SCHEMA}', got '{schema}'"
             )));
         }
-        let part = |key: &str| v.req(key).map_err(PlanError::Schema);
         let plan = QwycPlan {
-            ensemble: Ensemble::from_json(part("ensemble")?)
-                .map_err(|e| PlanError::Schema(format!("ensemble: {e}")))?,
-            fc: FastClassifier::from_json(part("fast")?)
-                .map_err(|e| PlanError::Schema(format!("fast: {e}")))?,
-            meta: PlanMeta::from_json(part("meta")?)?,
+            ensemble: Ensemble::from_json(v.req("ensemble")?)
+                .map_err(|e| e.context("ensemble"))?,
+            fc: FastClassifier::from_json(v.req("fast")?).map_err(|e| e.context("fast"))?,
+            meta: PlanMeta::from_json(v.req("meta")?)?,
         };
         plan.validate()?;
         Ok(plan)
@@ -208,11 +230,10 @@ impl QwycPlan {
         crate::util::json::write_file(path, &self.to_json())
     }
 
-    pub fn load(path: &std::path::Path) -> Result<QwycPlan, PlanError> {
-        // read_file folds file-IO and JSON-syntax failures into one
-        // message; both mean "the artifact bytes are unusable" — Io.
-        let doc = crate::util::json::read_file(path).map_err(PlanError::Io)?;
-        QwycPlan::from_json(&doc)
+    pub fn load(path: &std::path::Path) -> Result<QwycPlan, QwycError> {
+        // read_file reports missing/unreadable files as Io and corrupt
+        // bytes as Schema; both propagate as-is.
+        QwycPlan::from_json(&crate::util::json::read_file(path)?)
     }
 }
 

@@ -34,6 +34,7 @@ pub use order::{optimize_order, optimize_order_with_pool};
 pub use sweep::{sweep_batched, sweep_block, SweepOutcome, SweepParams};
 pub use thresholds::optimize_thresholds_for_order;
 
+use crate::error::QwycError;
 use crate::util::json::Json;
 
 /// Configuration for the QWYC optimizers.
@@ -98,33 +99,33 @@ impl FastClassifier {
     /// sweep and serving hot paths assume these hold.
     // `!(a <= b)` is deliberate: NaN thresholds must fail validation too.
     #[allow(clippy::neg_cmp_op_on_partial_ord)]
-    pub fn validate(&self) -> Result<(), String> {
+    pub fn validate(&self) -> Result<(), QwycError> {
         let t = self.order.len();
         if self.eps_pos.len() != t || self.eps_neg.len() != t {
-            return Err("threshold vectors must have length T".into());
+            return Err(QwycError::Validate("threshold vectors must have length T".into()));
         }
         if !self.bias.is_finite() {
-            return Err(format!("bias must be finite, got {}", self.bias));
+            return Err(QwycError::Validate(format!("bias must be finite, got {}", self.bias)));
         }
         if !self.beta.is_finite() {
-            return Err(format!("beta must be finite, got {}", self.beta));
+            return Err(QwycError::Validate(format!("beta must be finite, got {}", self.beta)));
         }
         let mut seen = vec![false; t];
         for &m in &self.order {
             if m >= t || seen[m] {
-                return Err(format!("order is not a permutation (model {m})"));
+                return Err(QwycError::Validate(format!("order is not a permutation (model {m})")));
             }
             seen[m] = true;
         }
         for r in 0..t {
             if self.eps_pos[r].is_nan() || self.eps_neg[r].is_nan() {
-                return Err(format!("NaN threshold at position {r}"));
+                return Err(QwycError::Validate(format!("NaN threshold at position {r}")));
             }
             if !(self.eps_neg[r] <= self.eps_pos[r]) {
-                return Err(format!(
+                return Err(QwycError::Validate(format!(
                     "eps_neg[{r}]={} > eps_pos[{r}]={}",
                     self.eps_neg[r], self.eps_pos[r]
-                ));
+                )));
             }
         }
         Ok(())
@@ -172,7 +173,7 @@ impl FastClassifier {
         ])
     }
 
-    pub fn from_json(v: &Json) -> Result<FastClassifier, String> {
+    pub fn from_json(v: &Json) -> Result<FastClassifier, QwycError> {
         let fc = FastClassifier {
             order: v.req("order")?.as_vec_usize()?,
             eps_pos: v.req("eps_pos")?.as_vec_f32_inf()?,
@@ -188,7 +189,7 @@ impl FastClassifier {
         crate::util::json::write_file(path, &self.to_json())
     }
 
-    pub fn load(path: &std::path::Path) -> Result<FastClassifier, String> {
+    pub fn load(path: &std::path::Path) -> Result<FastClassifier, QwycError> {
         FastClassifier::from_json(&crate::util::json::read_file(path)?)
     }
 }
@@ -222,11 +223,11 @@ impl Json {
 }
 
 trait JsonInfExt {
-    fn as_vec_f32_inf(&self) -> Result<Vec<f32>, String>;
+    fn as_vec_f32_inf(&self) -> Result<Vec<f32>, QwycError>;
 }
 
 impl JsonInfExt for Json {
-    fn as_vec_f32_inf(&self) -> Result<Vec<f32>, String> {
+    fn as_vec_f32_inf(&self) -> Result<Vec<f32>, QwycError> {
         self.as_arr()?
             .iter()
             .map(|v| match v {

@@ -357,10 +357,12 @@ mod tests {
             // Threshold VALUES may differ (bisect converges to an interval
             // edge) but exits/errors — the objective — must agree.
             if a.exits_neg != b.exits_neg || a.errs_neg != b.errs_neg {
-                return Err(format!("neg mismatch: {a:?} vs {b:?} g={g:?} fp={fp:?} b={budget}"));
+                let m = format!("neg mismatch: {a:?} vs {b:?} g={g:?} fp={fp:?} b={budget}");
+                return Err(m.into());
             }
             if a.exits_pos != b.exits_pos || a.errs_pos != b.errs_pos {
-                return Err(format!("pos mismatch: {a:?} vs {b:?} g={g:?} fp={fp:?} b={budget}"));
+                let m = format!("pos mismatch: {a:?} vs {b:?} g={g:?} fp={fp:?} b={budget}");
+                return Err(m.into());
             }
             Ok(())
         });
@@ -375,7 +377,7 @@ mod tests {
             let budget = gen.usize_in(0, n);
             let o = opt(&g, &fp, budget, gen.rng.bool(0.3), Search::Exact);
             if o.errs() > budget {
-                return Err(format!("errs {} > budget {budget}", o.errs()));
+                return Err(format!("errs {} > budget {budget}", o.errs()).into());
             }
             if o.eps_neg > o.eps_pos {
                 return Err("eps_neg > eps_pos".into());
@@ -416,7 +418,8 @@ mod tests {
                 return Err(format!(
                     "could have pushed eps_neg from {} to {eps_up} (wrong={wrong} <= {budget})",
                     o.eps_neg
-                ));
+                )
+                .into());
             }
             Ok(())
         });

@@ -1,5 +1,6 @@
 //! Batched early-exit engines — the bridge between a trained ensemble +
-//! optimized [`FastClassifier`] and the serving scheduler.
+//! optimized [`FastClassifier`](crate::qwyc::FastClassifier) and the
+//! serving scheduler.
 //!
 //! Two interchangeable backends:
 //!
@@ -22,10 +23,14 @@
 use super::Runtime;
 #[cfg(feature = "pjrt")]
 use crate::ensemble::BaseModel;
+#[cfg(feature = "pjrt")]
 use crate::ensemble::Ensemble;
-use crate::plan::{CompiledPlan, QwycPlan};
+use crate::error::QwycError;
+use crate::plan::CompiledPlan;
 use crate::qwyc::sweep::SweepOutcome;
-use crate::qwyc::{FastClassifier, SingleResult};
+#[cfg(feature = "pjrt")]
+use crate::qwyc::FastClassifier;
+use crate::qwyc::SingleResult;
 use crate::util::pool::Pool;
 use std::sync::Arc;
 
@@ -69,15 +74,18 @@ pub trait Engine {
     /// Number of input features expected per example.
     fn n_features(&self) -> usize;
     /// Classify a batch of examples (row-major `n × n_features`).
-    fn classify_batch(&mut self, x: &[f32], n: usize) -> Result<Vec<Outcome>, String>;
+    fn classify_batch(&mut self, x: &[f32], n: usize) -> Result<Vec<Outcome>, QwycError>;
     /// Human-readable backend name (metrics/logs).
     fn backend(&self) -> &'static str;
     /// Atomically adopt a new compiled plan (the serving `RELOAD` path).
     /// Called by a shard worker at a batch boundary, never mid-batch.
     /// Backends whose device state is baked at construction (PJRT's
     /// staged uploads) keep the default and decline the swap.
-    fn swap_plan(&mut self, _plan: Arc<CompiledPlan>) -> Result<(), String> {
-        Err(format!("backend '{}' does not support plan hot-reload", self.backend()))
+    fn swap_plan(&mut self, _plan: Arc<CompiledPlan>) -> Result<(), QwycError> {
+        Err(QwycError::Config(format!(
+            "backend '{}' does not support plan hot-reload",
+            self.backend()
+        )))
     }
 }
 
@@ -108,16 +116,6 @@ impl NativeEngine {
         NativeEngine { plan, pool }
     }
 
-    /// Deprecated loose-parts constructor: bundles and compiles a
-    /// [`QwycPlan`] on the fly. Prefer building the plan once
-    /// (`qwyc compile-plan`) and [`NativeEngine::from_plan`].
-    pub fn new(ensemble: Ensemble, fc: FastClassifier, n_features: usize) -> NativeEngine {
-        let mut plan =
-            QwycPlan::bundle(ensemble, fc, "adhoc", 0.0).expect("valid ensemble/classifier pair");
-        plan.meta.n_features = n_features;
-        NativeEngine::from_plan(plan.compile().expect("compile ad-hoc plan"))
-    }
-
     pub fn plan(&self) -> &CompiledPlan {
         &self.plan
     }
@@ -128,7 +126,7 @@ impl Engine for NativeEngine {
         self.plan.n_features()
     }
 
-    fn classify_batch(&mut self, x: &[f32], n: usize) -> Result<Vec<Outcome>, String> {
+    fn classify_batch(&mut self, x: &[f32], n: usize) -> Result<Vec<Outcome>, QwycError> {
         let d = self.plan.n_features();
         let outcomes = self.plan.sweep_features(x, n, d, ENGINE_BLOCK, &self.pool);
         Ok(outcomes.into_iter().map(Outcome::from).collect())
@@ -138,7 +136,7 @@ impl Engine for NativeEngine {
         "native"
     }
 
-    fn swap_plan(&mut self, plan: Arc<CompiledPlan>) -> Result<(), String> {
+    fn swap_plan(&mut self, plan: Arc<CompiledPlan>) -> Result<(), QwycError> {
         // The old Arc stays alive for any reader still holding it; this
         // engine's next batch sweeps the new plan.
         self.plan = plan;
@@ -189,13 +187,15 @@ impl PjrtEngine {
         artifact: &str,
         ensemble: &Ensemble,
         fc: &FastClassifier,
-    ) -> Result<PjrtEngine, String> {
+    ) -> Result<PjrtEngine, QwycError> {
         let spec = rt
             .spec(artifact)
-            .ok_or_else(|| format!("unknown artifact '{artifact}'"))?
+            .ok_or_else(|| QwycError::Config(format!("unknown artifact '{artifact}'")))?
             .clone();
         if spec.fn_name != "qwyc_stage" {
-            return Err(format!("artifact '{artifact}' is not a qwyc_stage artifact"));
+            return Err(QwycError::Config(format!(
+                "artifact '{artifact}' is not a qwyc_stage artifact"
+            )));
         }
         let cfg = &spec.config;
         let (b, k, dim, v) = (cfg.b, cfg.k, cfg.dim, 1usize << cfg.dim);
@@ -219,17 +219,17 @@ impl PjrtEngine {
                 let lat = match &ensemble.models[m] {
                     BaseModel::Lattice(l) => l,
                     other => {
-                        return Err(format!(
+                        return Err(QwycError::Config(format!(
                             "PjrtEngine requires lattice models, found {}",
                             other.kind()
-                        ))
+                        )))
                     }
                 };
                 if lat.dim() != dim {
-                    return Err(format!(
+                    return Err(QwycError::Config(format!(
                         "lattice dim {} != artifact dim {dim}",
                         lat.dim()
-                    ));
+                    )));
                 }
                 for (jj, &f) in lat.features.iter().enumerate() {
                     subsets[j * dim + jj] = f as i32;
@@ -274,7 +274,7 @@ impl Engine for PjrtEngine {
         self.d_features
     }
 
-    fn classify_batch(&mut self, x: &[f32], n: usize) -> Result<Vec<Outcome>, String> {
+    fn classify_batch(&mut self, x: &[f32], n: usize) -> Result<Vec<Outcome>, QwycError> {
         let d = self.d_features;
         assert_eq!(x.len(), n * d);
         let b = self.b;

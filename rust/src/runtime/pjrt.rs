@@ -8,6 +8,7 @@
 //! execution, so a stale artifact directory fails loudly at startup
 //! instead of corrupting results.
 
+use crate::error::QwycError;
 use crate::util::json::{self, Json};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -20,7 +21,7 @@ pub struct TensorSpec {
 }
 
 impl TensorSpec {
-    fn from_json(v: &Json) -> Result<TensorSpec, String> {
+    fn from_json(v: &Json) -> Result<TensorSpec, QwycError> {
         Ok(TensorSpec {
             shape: v.req("shape")?.as_vec_usize()?,
             dtype: v.req("dtype")?.as_str()?.to_string(),
@@ -97,37 +98,37 @@ impl LoadedArtifact {
     /// Execute with pre-staged device buffers (hot path: constant inputs
     /// like model parameters are uploaded once via `Runtime::upload_*`
     /// and reused across calls — see §Perf in EXPERIMENTS.md).
-    pub fn execute_buffers(&self, inputs: &[&xla::PjRtBuffer]) -> Result<Vec<Output>, String> {
+    pub fn execute_buffers(&self, inputs: &[&xla::PjRtBuffer]) -> Result<Vec<Output>, QwycError> {
         if inputs.len() != self.spec.inputs.len() {
-            return Err(format!(
+            return Err(QwycError::Config(format!(
                 "{}: expected {} inputs, got {}",
                 self.spec.name,
                 self.spec.inputs.len(),
                 inputs.len()
-            ));
+            )));
         }
         let result = self
             .exe
             .execute_b::<&xla::PjRtBuffer>(inputs)
-            .map_err(|e| format!("{}: execute_b: {e:?}", self.spec.name))?;
+            .map_err(|e| QwycError::Io(format!("{}: execute_b: {e:?}", self.spec.name)))?;
         self.decode_outputs(&result[0][0])
     }
 
-    fn decode_outputs(&self, out: &xla::PjRtBuffer) -> Result<Vec<Output>, String> {
+    fn decode_outputs(&self, out: &xla::PjRtBuffer) -> Result<Vec<Output>, QwycError> {
         let tuple = out
             .to_literal_sync()
-            .map_err(|e| format!("{}: to_literal: {e:?}", self.spec.name))?;
+            .map_err(|e| QwycError::Io(format!("{}: to_literal: {e:?}", self.spec.name)))?;
         // aot.py lowers with return_tuple=True: always a tuple.
         let elems = tuple
             .to_tuple()
-            .map_err(|e| format!("{}: to_tuple: {e:?}", self.spec.name))?;
+            .map_err(|e| QwycError::Io(format!("{}: to_tuple: {e:?}", self.spec.name)))?;
         if elems.len() != self.spec.outputs.len() {
-            return Err(format!(
+            return Err(QwycError::Schema(format!(
                 "{}: expected {} outputs, got {}",
                 self.spec.name,
                 self.spec.outputs.len(),
                 elems.len()
-            ));
+            )));
         }
         elems
             .into_iter()
@@ -136,26 +137,26 @@ impl LoadedArtifact {
                 "float32" => lit
                     .to_vec::<f32>()
                     .map(Output::F32)
-                    .map_err(|e| format!("output to_vec f32: {e:?}")),
+                    .map_err(|e| QwycError::Io(format!("output to_vec f32: {e:?}"))),
                 "int32" => lit
                     .to_vec::<i32>()
                     .map(Output::I32)
-                    .map_err(|e| format!("output to_vec i32: {e:?}")),
-                other => Err(format!("unsupported output dtype {other}")),
+                    .map_err(|e| QwycError::Io(format!("output to_vec i32: {e:?}"))),
+                other => Err(QwycError::Schema(format!("unsupported output dtype {other}"))),
             })
             .collect()
     }
 
     /// Execute with shape/dtype validation. Inputs must match the
     /// manifest order exactly.
-    pub fn execute(&self, inputs: &[Input]) -> Result<Vec<Output>, String> {
+    pub fn execute(&self, inputs: &[Input]) -> Result<Vec<Output>, QwycError> {
         if inputs.len() != self.spec.inputs.len() {
-            return Err(format!(
+            return Err(QwycError::Config(format!(
                 "{}: expected {} inputs, got {}",
                 self.spec.name,
                 self.spec.inputs.len(),
                 inputs.len()
-            ));
+            )));
         }
         let mut literals = Vec::with_capacity(inputs.len());
         for (idx, (inp, spec)) in inputs.iter().zip(self.spec.inputs.iter()).enumerate() {
@@ -163,41 +164,41 @@ impl LoadedArtifact {
             let lit = match inp {
                 Input::F32(data) => {
                     if spec.dtype != "float32" {
-                        return Err(format!(
+                        return Err(QwycError::Config(format!(
                             "{} input {idx}: expected {}, got f32",
                             self.spec.name, spec.dtype
-                        ));
+                        )));
                     }
                     if data.len() != spec.elements() {
-                        return Err(format!(
+                        return Err(QwycError::Config(format!(
                             "{} input {idx}: {} elements != shape {:?}",
                             self.spec.name,
                             data.len(),
                             spec.shape
-                        ));
+                        )));
                     }
                     xla::Literal::vec1(data)
                         .reshape(&dims)
-                        .map_err(|e| format!("reshape input {idx}: {e:?}"))?
+                        .map_err(|e| QwycError::Io(format!("reshape input {idx}: {e:?}")))?
                 }
                 Input::I32(data) => {
                     if spec.dtype != "int32" {
-                        return Err(format!(
+                        return Err(QwycError::Config(format!(
                             "{} input {idx}: expected {}, got i32",
                             self.spec.name, spec.dtype
-                        ));
+                        )));
                     }
                     if data.len() != spec.elements() {
-                        return Err(format!(
+                        return Err(QwycError::Config(format!(
                             "{} input {idx}: {} elements != shape {:?}",
                             self.spec.name,
                             data.len(),
                             spec.shape
-                        ));
+                        )));
                     }
                     xla::Literal::vec1(data)
                         .reshape(&dims)
-                        .map_err(|e| format!("reshape input {idx}: {e:?}"))?
+                        .map_err(|e| QwycError::Io(format!("reshape input {idx}: {e:?}")))?
                 }
             };
             literals.push(lit);
@@ -205,7 +206,7 @@ impl LoadedArtifact {
         let result = self
             .exe
             .execute::<xla::Literal>(&literals)
-            .map_err(|e| format!("{}: execute: {e:?}", self.spec.name))?;
+            .map_err(|e| QwycError::Io(format!("{}: execute: {e:?}", self.spec.name)))?;
         self.decode_outputs(&result[0][0])
     }
 }
@@ -221,8 +222,9 @@ pub struct Runtime {
 impl Runtime {
     /// Create a CPU PJRT client and parse the manifest; artifacts compile
     /// lazily on first use (`get`).
-    pub fn open(dir: &Path) -> Result<Runtime, String> {
-        let client = xla::PjRtClient::cpu().map_err(|e| format!("PjRtClient::cpu: {e:?}"))?;
+    pub fn open(dir: &Path) -> Result<Runtime, QwycError> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| QwycError::Io(format!("PjRtClient::cpu: {e:?}")))?;
         let manifest = json::read_file(&dir.join("manifest.json"))?;
         let specs = parse_manifest(&manifest, dir)?;
         Ok(Runtime { client, artifacts: HashMap::new(), specs, dir: dir.to_path_buf() })
@@ -242,20 +244,24 @@ impl Runtime {
     // Not the entry API: compilation is fallible and must not hold a
     // vacant-entry borrow across the `?` early returns.
     #[allow(clippy::map_entry)]
-    pub fn get(&mut self, name: &str) -> Result<&LoadedArtifact, String> {
+    pub fn get(&mut self, name: &str) -> Result<&LoadedArtifact, QwycError> {
         if !self.artifacts.contains_key(name) {
             let spec = self
                 .specs
                 .get(name)
-                .ok_or_else(|| format!("unknown artifact '{name}' (have: {:?})", self.names()))?
+                .ok_or_else(|| {
+                    let have = self.names();
+                    QwycError::Config(format!("unknown artifact '{name}' (have: {have:?})"))
+                })?
                 .clone();
-            let proto = xla::HloModuleProto::from_text_file(&spec.path)
-                .map_err(|e| format!("parse {}: {e:?}", spec.path.display()))?;
+            let proto = xla::HloModuleProto::from_text_file(&spec.path).map_err(|e| {
+                QwycError::Compile(format!("parse {}: {e:?}", spec.path.display()))
+            })?;
             let comp = xla::XlaComputation::from_proto(&proto);
             let exe = self
                 .client
                 .compile(&comp)
-                .map_err(|e| format!("compile {name}: {e:?}"))?;
+                .map_err(|e| QwycError::Compile(format!("compile {name}: {e:?}")))?;
             self.artifacts.insert(name.to_string(), LoadedArtifact { spec, exe });
         }
         Ok(&self.artifacts[name])
@@ -266,25 +272,28 @@ impl Runtime {
     }
 
     /// Upload an f32 tensor to the device once; reuse across executions.
-    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer, String> {
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer, QwycError> {
         self.client
             .buffer_from_host_buffer(data, dims, None)
-            .map_err(|e| format!("upload f32: {e:?}"))
+            .map_err(|e| QwycError::Io(format!("upload f32: {e:?}")))
     }
 
     /// Upload an i32 tensor to the device once; reuse across executions.
-    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer, String> {
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer, QwycError> {
         self.client
             .buffer_from_host_buffer(data, dims, None)
-            .map_err(|e| format!("upload i32: {e:?}"))
+            .map_err(|e| QwycError::Io(format!("upload i32: {e:?}")))
     }
 }
 
-fn parse_manifest(manifest: &Json, dir: &Path) -> Result<HashMap<String, ArtifactSpec>, String> {
+fn parse_manifest(
+    manifest: &Json,
+    dir: &Path,
+) -> Result<HashMap<String, ArtifactSpec>, QwycError> {
     let arts = manifest.req("artifacts")?;
     let map = match arts {
         Json::Obj(m) => m,
-        _ => return Err("manifest.artifacts must be an object".into()),
+        _ => return Err(QwycError::Schema("manifest.artifacts must be an object".into())),
     };
     let mut out = HashMap::new();
     for (name, v) in map.iter() {

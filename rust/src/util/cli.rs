@@ -5,7 +5,13 @@
 //! with typed getters and defaults. Unknown-flag detection is explicit so
 //! typos fail loudly instead of silently using a default.
 
+use crate::error::QwycError;
 use std::collections::BTreeMap;
+
+/// Every CLI-parse failure is a `Config` error.
+fn config(msg: String) -> QwycError {
+    QwycError::Config(msg)
+}
 
 #[derive(Clone, Debug, Default)]
 pub struct Args {
@@ -17,13 +23,13 @@ pub struct Args {
 
 impl Args {
     /// Parse from an iterator of arguments (not including argv[0]).
-    pub fn parse<I: IntoIterator<Item = String>>(it: I) -> Result<Args, String> {
+    pub fn parse<I: IntoIterator<Item = String>>(it: I) -> Result<Args, QwycError> {
         let mut a = Args::default();
         let mut it = it.into_iter().peekable();
         while let Some(arg) = it.next() {
             if let Some(name) = arg.strip_prefix("--") {
                 if name.is_empty() {
-                    return Err("bare '--' not supported".into());
+                    return Err(config("bare '--' not supported".into()));
                 }
                 // --key=value or --key value or boolean --key
                 if let Some((k, v)) = name.split_once('=') {
@@ -41,7 +47,7 @@ impl Args {
         Ok(a)
     }
 
-    pub fn from_env() -> Result<Args, String> {
+    pub fn from_env() -> Result<Args, QwycError> {
         Args::parse(std::env::args().skip(1))
     }
 
@@ -63,61 +69,61 @@ impl Args {
         self.flags.get(key).cloned()
     }
 
-    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, String> {
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, QwycError> {
         self.mark(key);
         match self.flags.get(key) {
             None => Ok(default),
-            Some(v) => v.parse().map_err(|e| format!("--{key}: {e}")),
+            Some(v) => v.parse().map_err(|e| config(format!("--{key}: {e}"))),
         }
     }
 
-    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, String> {
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, QwycError> {
         self.mark(key);
         match self.flags.get(key) {
             None => Ok(default),
-            Some(v) => v.parse().map_err(|e| format!("--{key}: {e}")),
+            Some(v) => v.parse().map_err(|e| config(format!("--{key}: {e}"))),
         }
     }
 
-    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, String> {
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, QwycError> {
         self.mark(key);
         match self.flags.get(key) {
             None => Ok(default),
-            Some(v) => v.parse().map_err(|e| format!("--{key}: {e}")),
+            Some(v) => v.parse().map_err(|e| config(format!("--{key}: {e}"))),
         }
     }
 
-    pub fn get_bool(&self, key: &str, default: bool) -> Result<bool, String> {
+    pub fn get_bool(&self, key: &str, default: bool) -> Result<bool, QwycError> {
         self.mark(key);
         match self.flags.get(key).map(|s| s.as_str()) {
             None => Ok(default),
             Some("true") | Some("1") | Some("yes") => Ok(true),
             Some("false") | Some("0") | Some("no") => Ok(false),
-            Some(v) => Err(format!("--{key}: expected bool, got '{v}'")),
+            Some(v) => Err(config(format!("--{key}: expected bool, got '{v}'"))),
         }
     }
 
     /// Comma-separated f64 list, e.g. `--alphas 0.001,0.005,0.01`.
-    pub fn get_f64_list(&self, key: &str, default: &[f64]) -> Result<Vec<f64>, String> {
+    pub fn get_f64_list(&self, key: &str, default: &[f64]) -> Result<Vec<f64>, QwycError> {
         self.mark(key);
         match self.flags.get(key) {
             None => Ok(default.to_vec()),
             Some(v) => v
                 .split(',')
-                .map(|s| s.trim().parse::<f64>().map_err(|e| format!("--{key}: {e}")))
+                .map(|s| s.trim().parse::<f64>().map_err(|e| config(format!("--{key}: {e}"))))
                 .collect(),
         }
     }
 
     /// Error if any provided flag was never consumed by a getter.
-    pub fn check_unknown(&self) -> Result<(), String> {
+    pub fn check_unknown(&self) -> Result<(), QwycError> {
         let seen = self.seen.borrow();
         let unknown: Vec<&String> =
             self.flags.keys().filter(|k| !seen.contains(k)).collect();
         if unknown.is_empty() {
             Ok(())
         } else {
-            Err(format!("unknown flag(s): {unknown:?}"))
+            Err(config(format!("unknown flag(s): {unknown:?}")))
         }
     }
 }

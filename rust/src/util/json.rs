@@ -6,8 +6,14 @@
 //! emits compact or pretty output. Numbers are kept as f64 (all our payloads
 //! are f32 tensors, counts, and ratios — well within f64's exact range).
 
+use crate::error::QwycError;
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
+
+/// Every malformed-document failure in this module is a `Schema` error.
+fn schema(msg: String) -> QwycError {
+    QwycError::Schema(msg)
+}
 
 /// A JSON value.
 #[derive(Clone, Debug, PartialEq)]
@@ -51,51 +57,51 @@ impl Json {
     }
 
     /// Field access that reports the missing key — models fail loudly.
-    pub fn req(&self, key: &str) -> Result<&Json, String> {
-        self.get(key).ok_or_else(|| format!("missing JSON field '{key}'"))
+    pub fn req(&self, key: &str) -> Result<&Json, QwycError> {
+        self.get(key).ok_or_else(|| schema(format!("missing JSON field '{key}'")))
     }
 
-    pub fn as_f64(&self) -> Result<f64, String> {
+    pub fn as_f64(&self) -> Result<f64, QwycError> {
         match self {
             Json::Num(v) => Ok(*v),
-            other => Err(format!("expected number, got {other:?}")),
+            other => Err(schema(format!("expected number, got {other:?}"))),
         }
     }
 
-    pub fn as_usize(&self) -> Result<usize, String> {
+    pub fn as_usize(&self) -> Result<usize, QwycError> {
         let v = self.as_f64()?;
         if v < 0.0 || v.fract() != 0.0 {
-            return Err(format!("expected non-negative integer, got {v}"));
+            return Err(schema(format!("expected non-negative integer, got {v}")));
         }
         Ok(v as usize)
     }
 
-    pub fn as_str(&self) -> Result<&str, String> {
+    pub fn as_str(&self) -> Result<&str, QwycError> {
         match self {
             Json::Str(s) => Ok(s),
-            other => Err(format!("expected string, got {other:?}")),
+            other => Err(schema(format!("expected string, got {other:?}"))),
         }
     }
 
-    pub fn as_bool(&self) -> Result<bool, String> {
+    pub fn as_bool(&self) -> Result<bool, QwycError> {
         match self {
             Json::Bool(b) => Ok(*b),
-            other => Err(format!("expected bool, got {other:?}")),
+            other => Err(schema(format!("expected bool, got {other:?}"))),
         }
     }
 
-    pub fn as_arr(&self) -> Result<&[Json], String> {
+    pub fn as_arr(&self) -> Result<&[Json], QwycError> {
         match self {
             Json::Arr(a) => Ok(a),
-            other => Err(format!("expected array, got {other:?}")),
+            other => Err(schema(format!("expected array, got {other:?}"))),
         }
     }
 
-    pub fn as_vec_f32(&self) -> Result<Vec<f32>, String> {
+    pub fn as_vec_f32(&self) -> Result<Vec<f32>, QwycError> {
         self.as_arr()?.iter().map(|v| v.as_f64().map(|x| x as f32)).collect()
     }
 
-    pub fn as_vec_usize(&self) -> Result<Vec<usize>, String> {
+    pub fn as_vec_usize(&self) -> Result<Vec<usize>, QwycError> {
         self.as_arr()?.iter().map(|v| v.as_usize()).collect()
     }
 
@@ -163,14 +169,14 @@ impl Json {
 
     // ---- parser ------------------------------------------------------
 
-    pub fn parse(text: &str) -> Result<Json, String> {
+    pub fn parse(text: &str) -> Result<Json, QwycError> {
         let bytes = text.as_bytes();
         let mut p = Parser { b: bytes, i: 0 };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
         if p.i != bytes.len() {
-            return Err(format!("trailing characters at byte {}", p.i));
+            return Err(schema(format!("trailing characters at byte {}", p.i)));
         }
         Ok(v)
     }
@@ -228,16 +234,16 @@ impl Parser<'_> {
         self.b.get(self.i).copied()
     }
 
-    fn expect(&mut self, c: u8) -> Result<(), String> {
+    fn expect(&mut self, c: u8) -> Result<(), QwycError> {
         if self.peek() == Some(c) {
             self.i += 1;
             Ok(())
         } else {
-            Err(format!("expected '{}' at byte {}", c as char, self.i))
+            Err(schema(format!("expected '{}' at byte {}", c as char, self.i)))
         }
     }
 
-    fn value(&mut self) -> Result<Json, String> {
+    fn value(&mut self) -> Result<Json, QwycError> {
         match self.peek() {
             Some(b'{') => self.object(),
             Some(b'[') => self.array(),
@@ -246,20 +252,23 @@ impl Parser<'_> {
             Some(b'f') => self.literal("false", Json::Bool(false)),
             Some(b'n') => self.literal("null", Json::Null),
             Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
-            other => Err(format!("unexpected {:?} at byte {}", other.map(|c| c as char), self.i)),
+            other => {
+                let c = other.map(|c| c as char);
+                Err(schema(format!("unexpected {c:?} at byte {}", self.i)))
+            }
         }
     }
 
-    fn literal(&mut self, lit: &str, v: Json) -> Result<Json, String> {
+    fn literal(&mut self, lit: &str, v: Json) -> Result<Json, QwycError> {
         if self.b[self.i..].starts_with(lit.as_bytes()) {
             self.i += lit.len();
             Ok(v)
         } else {
-            Err(format!("invalid literal at byte {}", self.i))
+            Err(schema(format!("invalid literal at byte {}", self.i)))
         }
     }
 
-    fn number(&mut self) -> Result<Json, String> {
+    fn number(&mut self) -> Result<Json, QwycError> {
         let start = self.i;
         if self.peek() == Some(b'-') {
             self.i += 1;
@@ -275,15 +284,15 @@ impl Parser<'_> {
             .ok()
             .and_then(|s| s.parse::<f64>().ok())
             .map(Json::Num)
-            .ok_or_else(|| format!("bad number at byte {start}"))
+            .ok_or_else(|| schema(format!("bad number at byte {start}")))
     }
 
-    fn string(&mut self) -> Result<String, String> {
+    fn string(&mut self) -> Result<String, QwycError> {
         self.expect(b'"')?;
         let mut s = String::new();
         loop {
             match self.peek() {
-                None => return Err("unterminated string".into()),
+                None => return Err(schema("unterminated string".into())),
                 Some(b'"') => {
                     self.i += 1;
                     return Ok(s);
@@ -301,16 +310,16 @@ impl Parser<'_> {
                         Some(b'f') => s.push('\u{c}'),
                         Some(b'u') => {
                             if self.i + 4 >= self.b.len() {
-                                return Err("bad \\u escape".into());
+                                return Err(schema("bad \\u escape".into()));
                             }
                             let hex = std::str::from_utf8(&self.b[self.i + 1..self.i + 5])
-                                .map_err(|_| "bad \\u escape")?;
-                            let code =
-                                u32::from_str_radix(hex, 16).map_err(|_| "bad \\u escape")?;
+                                .map_err(|_| schema("bad \\u escape".into()))?;
+                            let code = u32::from_str_radix(hex, 16)
+                                .map_err(|_| schema("bad \\u escape".into()))?;
                             s.push(char::from_u32(code).unwrap_or('\u{fffd}'));
                             self.i += 4;
                         }
-                        other => return Err(format!("bad escape {other:?}")),
+                        other => return Err(schema(format!("bad escape {other:?}"))),
                     }
                     self.i += 1;
                 }
@@ -326,14 +335,14 @@ impl Parser<'_> {
                     }
                     s.push_str(
                         std::str::from_utf8(&self.b[start..self.i])
-                            .map_err(|_| "invalid utf8 in string")?,
+                            .map_err(|_| schema("invalid utf8 in string".into()))?,
                     );
                 }
             }
         }
     }
 
-    fn array(&mut self) -> Result<Json, String> {
+    fn array(&mut self) -> Result<Json, QwycError> {
         self.expect(b'[')?;
         let mut a = Vec::new();
         self.skip_ws();
@@ -351,12 +360,12 @@ impl Parser<'_> {
                     self.i += 1;
                     return Ok(Json::Arr(a));
                 }
-                other => return Err(format!("expected ',' or ']', got {other:?}")),
+                other => return Err(schema(format!("expected ',' or ']', got {other:?}"))),
             }
         }
     }
 
-    fn object(&mut self) -> Result<Json, String> {
+    fn object(&mut self) -> Result<Json, QwycError> {
         self.expect(b'{')?;
         let mut m = BTreeMap::new();
         self.skip_ws();
@@ -379,7 +388,7 @@ impl Parser<'_> {
                     self.i += 1;
                     return Ok(Json::Obj(m));
                 }
-                other => return Err(format!("expected ',' or '}}', got {other:?}")),
+                other => return Err(schema(format!("expected ',' or '}}', got {other:?}"))),
             }
         }
     }
@@ -393,10 +402,13 @@ pub fn write_file(path: &std::path::Path, v: &Json) -> std::io::Result<()> {
     std::fs::write(path, v.to_string_pretty())
 }
 
-/// Read and parse a JSON file.
-pub fn read_file(path: &std::path::Path) -> Result<Json, String> {
-    let text = std::fs::read_to_string(path).map_err(|e| format!("read {path:?}: {e}"))?;
-    Json::parse(&text).map_err(|e| format!("parse {path:?}: {e}"))
+/// Read and parse a JSON file. A file-system failure is an `Io` error;
+/// unparseable bytes are a `Schema` error — callers can tell a missing
+/// artifact from a corrupt one without string matching.
+pub fn read_file(path: &std::path::Path) -> Result<Json, QwycError> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| QwycError::Io(format!("read {path:?}: {e}")))?;
+    Json::parse(&text).map_err(|e| e.context(&format!("parse {path:?}")))
 }
 
 #[cfg(test)]

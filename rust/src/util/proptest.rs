@@ -7,6 +7,30 @@
 
 use crate::util::rng::Rng;
 
+/// A property failure: the human-readable description of the violated
+/// case. `Err("message".into())` and `Err(format!(...).into())` both
+/// construct it.
+#[derive(Debug)]
+pub struct PropFail(pub String);
+
+impl From<String> for PropFail {
+    fn from(s: String) -> PropFail {
+        PropFail(s)
+    }
+}
+
+impl From<&str> for PropFail {
+    fn from(s: &str) -> PropFail {
+        PropFail(s.to_string())
+    }
+}
+
+impl std::fmt::Display for PropFail {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
 /// Case generator handed to properties — a thin veneer over [`Rng`] with
 /// generators commonly needed by the QWYC invariants.
 pub struct Gen {
@@ -46,7 +70,7 @@ impl Gen {
 /// `Err(description)` to fail. Panics with seed info on first failure.
 pub fn check<F>(name: &str, cases: u64, mut prop: F)
 where
-    F: FnMut(&mut Gen) -> Result<(), String>,
+    F: FnMut(&mut Gen) -> Result<(), PropFail>,
 {
     // Fixed base seed: reproducible CI. Vary per-case deterministically.
     let base = 0x5eed_0000u64;

@@ -128,7 +128,9 @@ fn classify_batch_matches_eval_single() {
     let sm = ens.score_matrix_par(&tr, &Pool::new(1));
     let cfg = QwycConfig { alpha: 0.01, ..Default::default() };
     let fc = optimize_order_with_pool(&sm, &cfg, &Pool::new(1));
-    let mut engine = NativeEngine::new(ens.clone(), fc.clone(), tr.d);
+    let plan = qwyc::plan::QwycPlan::bundle_with_width(ens.clone(), fc.clone(), "equiv", 0.01, tr.d)
+        .expect("bundle plan");
+    let mut engine = NativeEngine::from_plan(plan.compile().expect("compile plan"));
     // A batch spanning several engine blocks (te.n > 256 at this scale).
     let n = te.n.min(700);
     let got = engine.classify_batch(&te.x[..n * te.d], n).expect("native classify");

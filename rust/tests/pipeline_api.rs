@@ -1,0 +1,191 @@
+//! Typed pipeline API contracts.
+//!
+//! The `qwyc::pipeline` facade must be a veneer, not a fork: plans built
+//! through `PlanBuilder` are pinned **bitwise** against the loose
+//! function path (`score_matrix_par` → `optimize_order_with_pool` →
+//! `QwycPlan::bundle` → `compile`) at 1 and 4 threads, and every
+//! `EvalSession` surface (`decide`, `decide_batch`, `decide_iter`) must
+//! agree bitwise with `CompiledPlan::eval_single`. The typed-state
+//! machine itself is checked two ways: a static trait-bound assertion
+//! that only the Optimized stage is `CompileReady`, plus the
+//! `compile_fail` doctest on `qwyc::pipeline::CompileReady` (an
+//! un-optimized builder has no `compile` method at all).
+
+use qwyc::data::synth::{generate, Which};
+use qwyc::data::Dataset;
+use qwyc::ensemble::Ensemble;
+use qwyc::gbt::{train, GbtParams};
+use qwyc::pipeline::{CompileReady, EvalSession, Optimized, PlanBuilder, TrainSpec};
+use qwyc::plan::QwycPlan;
+use qwyc::qwyc::{optimize_order_with_pool, QwycConfig};
+use qwyc::util::pool::Pool;
+
+fn setup() -> (Dataset, Dataset, Ensemble) {
+    let (tr, te) = generate(Which::AdultLike, 61, 0.02);
+    let (ens, _) = train(&tr, &GbtParams { n_trees: 20, max_depth: 3, ..Default::default() });
+    (tr, te, ens)
+}
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|v| v.to_bits()).collect()
+}
+
+/// The acceptance pin: builder-produced plans are bitwise identical to
+/// the loose-function path, at 1 and 4 threads, through both the
+/// `with_ensemble` (dataset) and `with_scores` (precomputed matrix)
+/// entries.
+#[test]
+fn builder_plans_bitwise_match_loose_functions_at_1_and_4_threads() {
+    let (tr, te, ens) = setup();
+    let cfg = QwycConfig { alpha: 0.01, ..Default::default() };
+    for threads in [1usize, 4] {
+        let pool = Pool::new(threads);
+
+        // Loose-function reference path.
+        let sm = ens.score_matrix_par(&tr, &pool);
+        let fc_loose = optimize_order_with_pool(&sm, &cfg, &pool);
+        let mut plan_loose =
+            QwycPlan::bundle(ens.clone(), fc_loose.clone(), "loose", cfg.alpha).expect("bundle");
+        plan_loose.meta.n_features = tr.d;
+        let cp_loose = plan_loose.compile().expect("compile");
+
+        for entry in ["data", "scores"] {
+            let builder = PlanBuilder::new("built");
+            let opt = match entry {
+                "data" => builder.with_ensemble(&ens, &tr),
+                _ => builder.with_scores(&ens, &sm).expect("scores entry"),
+            }
+            .optimize(&cfg, &pool)
+            .expect("optimize");
+
+            // Classifier: identical order, bit-identical thresholds.
+            let fc = opt.classifier();
+            assert_eq!(fc.order, fc_loose.order, "{entry}@{threads}t: order");
+            assert_eq!(bits(&fc.eps_pos), bits(&fc_loose.eps_pos), "{entry}@{threads}t");
+            assert_eq!(bits(&fc.eps_neg), bits(&fc_loose.eps_neg), "{entry}@{threads}t");
+            assert_eq!(fc.bias.to_bits(), fc_loose.bias.to_bits());
+            assert_eq!(fc.beta.to_bits(), fc_loose.beta.to_bits());
+
+            // Compiled plan: same geometry, bit-identical sweeps.
+            let cp = opt.with_n_features(tr.d).compile().expect("compile");
+            assert_eq!(cp.t(), cp_loose.t());
+            assert_eq!(cp.n_features(), cp_loose.n_features());
+            assert_eq!(cp.order(), cp_loose.order());
+            for r in 0..=cp.t() {
+                assert_eq!(cp.prefix_cost(r).to_bits(), cp_loose.prefix_cost(r).to_bits());
+            }
+            let n = te.n.min(300);
+            let a = cp.sweep_features(&te.x[..n * te.d], n, te.d, 64, &pool);
+            let b = cp_loose.sweep_features(&te.x[..n * te.d], n, te.d, 64, &pool);
+            for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+                assert_eq!(x.positive, y.positive, "{entry}@{threads}t ex {i}");
+                assert_eq!(x.stop, y.stop, "{entry}@{threads}t ex {i}");
+                assert_eq!(x.score.to_bits(), y.score.to_bits(), "{entry}@{threads}t ex {i}");
+            }
+        }
+    }
+}
+
+/// The round-tripped artifact a builder emits equals the one the loose
+/// path emits (schema, meta, thresholds).
+#[test]
+fn builder_artifact_roundtrips_like_the_loose_one() {
+    let (tr, _, ens) = setup();
+    let cfg = QwycConfig { alpha: 0.005, ..Default::default() };
+    let pool = Pool::new(1);
+    let plan = PlanBuilder::new("rt")
+        .with_source("pipeline_api test")
+        .with_ensemble(&ens, &tr)
+        .optimize(&cfg, &pool)
+        .expect("optimize")
+        .into_plan()
+        .expect("plan");
+    assert_eq!(plan.meta.name, "rt");
+    assert_eq!(plan.meta.alpha, 0.005);
+    assert_eq!(plan.meta.n_features, tr.d, "dataset width recorded automatically");
+    assert_eq!(plan.meta.source, "pipeline_api test");
+    let back = QwycPlan::from_json(&plan.to_json()).expect("roundtrip");
+    assert_eq!(back.fc.order, plan.fc.order);
+    assert_eq!(bits(&back.fc.eps_neg), bits(&plan.fc.eps_neg));
+}
+
+/// decide ≡ decide_batch ≡ decide_iter ≡ CompiledPlan::eval_single,
+/// bitwise, at 1 and 4 session threads.
+#[test]
+fn session_surfaces_agree_bitwise_with_eval_single() {
+    let (tr, te, _) = setup();
+    let spec = TrainSpec::gbt(&tr, GbtParams { n_trees: 18, max_depth: 3, ..Default::default() });
+    let opt = PlanBuilder::new("session")
+        .train(spec)
+        .expect("train")
+        .optimize(&QwycConfig { alpha: 0.01, ..Default::default() }, &Pool::new(1))
+        .expect("optimize");
+    let cp = opt.compile().expect("compile");
+    let n = te.n.min(600); // spans several streaming blocks
+    let x = &te.x[..n * te.d];
+
+    for threads in [1usize, 4] {
+        let session = EvalSession::with_pool(cp.clone(), Pool::new(threads));
+        let batch = session.decide_batch(x, n).expect("decide_batch");
+        let streamed: Vec<_> = session.decide_iter(x, n).expect("decide_iter").collect();
+        assert_eq!(batch.len(), n);
+        assert_eq!(streamed.len(), n);
+        for i in 0..n {
+            let single = cp.eval_single(te.row(i));
+            let one = session.decide(te.row(i)).expect("decide");
+            for (surface, d) in [("batch", &batch[i]), ("iter", &streamed[i]), ("one", &one)] {
+                assert_eq!(d.label, single.positive, "{surface}@{threads}t ex {i}");
+                assert_eq!(
+                    d.exit_position as usize, single.models_evaluated,
+                    "{surface}@{threads}t ex {i}"
+                );
+                assert_eq!(d.exited_early, single.early, "{surface}@{threads}t ex {i}");
+                assert_eq!(
+                    d.score.to_bits(),
+                    single.score.to_bits(),
+                    "{surface}@{threads}t ex {i}"
+                );
+                assert_eq!(
+                    d.cost.to_bits(),
+                    cp.prefix_cost(single.models_evaluated).to_bits(),
+                    "{surface}@{threads}t ex {i}"
+                );
+            }
+        }
+    }
+}
+
+/// Streaming honors the paper's constraint end to end: the fraction of
+/// decisions differing from the full ensemble is ≤ α on the
+/// optimization set.
+#[test]
+fn streamed_decisions_respect_alpha_on_the_optimization_set() {
+    let (tr, _, ens) = setup();
+    let alpha = 0.01;
+    let opt = PlanBuilder::new("alpha")
+        .with_ensemble(&ens, &tr)
+        .optimize(&QwycConfig { alpha, ..Default::default() }, &Pool::new(1))
+        .expect("optimize");
+    let session = opt.session().expect("session");
+    let diffs = session
+        .decide_iter(&tr.x, tr.n)
+        .expect("decide_iter")
+        .enumerate()
+        .filter(|(i, d)| d.label != (ens.eval_full(tr.row(*i)) >= ens.beta))
+        .count();
+    assert!(
+        diffs as f64 / tr.n as f64 <= alpha + 1e-9,
+        "diff rate {} exceeds alpha {alpha}",
+        diffs as f64 / tr.n as f64
+    );
+}
+
+/// Static trait-bound check: `CompileReady` (the capability behind
+/// `.compile()`/`.into_plan()`/`.session()`) is implemented by the
+/// Optimized stage — and, per the sealed hierarchy plus the
+/// `compile_fail` doctest on the trait, by nothing else.
+#[test]
+fn only_the_optimized_stage_is_compile_ready() {
+    fn assert_compile_ready<S: CompileReady>() {}
+    assert_compile_ready::<Optimized<'static>>();
+}

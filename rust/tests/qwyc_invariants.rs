@@ -36,7 +36,7 @@ fn alpha_constraint_always_holds_on_optimization_set() {
         fc.validate().map_err(|e| format!("invalid classifier: {e}"))?;
         let sim = simulate(&fc, &sm);
         if sim.pct_diff > alpha + 1e-9 {
-            return Err(format!("pct_diff {} > alpha {alpha}", sim.pct_diff));
+            return Err(format!("pct_diff {} > alpha {alpha}", sim.pct_diff).into());
         }
         Ok(())
     });
@@ -61,7 +61,8 @@ fn joint_optimization_never_worse_than_natural_order() {
             return Err(format!(
                 "qwyc* {} models vs natural-order {} models",
                 star.mean_models, fixed.mean_models
-            ));
+            )
+            .into());
         }
         Ok(())
     });
@@ -79,7 +80,7 @@ fn neg_only_classifiers_never_exit_positive() {
         let sim = simulate(&fc, &sm);
         for i in 0..sm.n {
             if sim.stops[i] < sm.t as u32 && sim.decisions[i] {
-                return Err(format!("example {i} exited early positive"));
+                return Err(format!("example {i} exited early positive").into());
             }
         }
         Ok(())
@@ -96,7 +97,8 @@ fn stops_and_cost_accounting_consistent() {
         let mean_stops =
             sim.stops.iter().map(|&s| s as f64).sum::<f64>() / sm.n as f64;
         if (mean_stops - sim.mean_models).abs() > 1e-9 {
-            return Err(format!("mean stops {mean_stops} != mean models {}", sim.mean_models));
+            let m = format!("mean stops {mean_stops} != mean models {}", sim.mean_models);
+            return Err(m.into());
         }
         // Unit costs: mean cost == mean models.
         if (sim.mean_cost - sim.mean_models).abs() > 1e-9 {
@@ -124,7 +126,7 @@ fn costs_influence_greedy_choice() {
         let cfg = QwycConfig { alpha: 0.05, neg_only: false, max_opt_examples: 0, seed: g.seed };
         let fc = optimize_order(&sm, &cfg);
         if fc.order[0] == 0 {
-            return Err(format!("picked expensive duplicate first: {:?}", fc.order));
+            return Err(format!("picked expensive duplicate first: {:?}", fc.order).into());
         }
         Ok(())
     });

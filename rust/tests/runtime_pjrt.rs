@@ -58,7 +58,10 @@ fn pjrt_stage_engine_matches_native_engine() {
     let (te, ens, fc) = demo_setup();
     let rt = Runtime::open(dir).expect("open runtime");
     let mut pjrt = PjrtEngine::new(rt, "demo_stage", &ens, &fc).expect("pjrt engine");
-    let mut native = NativeEngine::new(ens.clone(), fc.clone(), 4);
+    let nplan =
+        qwyc::plan::QwycPlan::bundle_with_width(ens.clone(), fc.clone(), "pjrt-native", 0.01, 4)
+            .expect("bundle plan");
+    let mut native = NativeEngine::from_plan(nplan.compile().expect("compile plan"));
 
     // Several batch sizes, including non-multiples of the compiled B=8.
     for n in [1usize, 7, 8, 9, 300] {

@@ -5,10 +5,12 @@
 
 use qwyc::coordinator::{BatchPolicy, Client, Reply, Server, ServerConfig};
 use qwyc::data::synth::{generate, Which};
+use qwyc::error::QwycError;
 use qwyc::lattice::{train_joint, LatticeParams};
 use qwyc::plan::QwycPlan;
 use qwyc::qwyc::{optimize_order, QwycConfig};
 use qwyc::runtime::engine::NativeEngine;
+use qwyc::util::pool::Pool;
 use std::collections::BTreeMap;
 use std::time::Duration;
 
@@ -29,9 +31,21 @@ fn tiny_plan_shared(
     d: usize,
     name: &str,
 ) -> std::sync::Arc<qwyc::plan::CompiledPlan> {
-    let mut plan = QwycPlan::bundle(ens.clone(), fc.clone(), name, 0.01).expect("bundle");
-    plan.meta.n_features = d;
-    plan.compile_shared().expect("compile")
+    QwycPlan::bundle_with_width(ens.clone(), fc.clone(), name, 0.01, d)
+        .expect("bundle")
+        .compile_shared()
+        .expect("compile")
+}
+
+/// The compiled-plan engine the removed loose-parts constructor used to
+/// build on the fly (generic-factory servers still construct engines
+/// per shard).
+fn native_engine(
+    ens: &qwyc::ensemble::Ensemble,
+    fc: &qwyc::qwyc::FastClassifier,
+    d: usize,
+) -> NativeEngine {
+    NativeEngine::from_shared(tiny_plan_shared(ens, fc, d, "e2e-engine"), Pool::from_env())
 }
 
 #[test]
@@ -41,7 +55,7 @@ fn server_answers_eval_requests_correctly() {
     let (ens2, fc2) = (ens.clone(), fc.clone());
     let server = Server::start(
         "127.0.0.1:0",
-        move |_shard| Box::new(NativeEngine::new(ens2.clone(), fc2.clone(), d)),
+        move |_shard| Box::new(native_engine(&ens2, &fc2, d)),
         BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(1) },
     )
     .expect("server start");
@@ -67,7 +81,7 @@ fn server_batches_pipelined_requests() {
     let d = te.d;
     let server = Server::start(
         "127.0.0.1:0",
-        move |_shard| Box::new(NativeEngine::new(ens.clone(), fc.clone(), d)),
+        move |_shard| Box::new(native_engine(&ens, &fc, d)),
         BatchPolicy { max_batch: 64, max_wait: Duration::from_millis(5) },
     )
     .expect("server start");
@@ -227,7 +241,7 @@ fn reload_without_plan_slot_is_refused() {
     let d = te.d;
     let server = Server::start(
         "127.0.0.1:0",
-        move |_shard| Box::new(NativeEngine::new(ens.clone(), fc.clone(), d)),
+        move |_shard| Box::new(native_engine(&ens, &fc, d)),
         BatchPolicy::default(),
     )
     .expect("server start");
@@ -251,7 +265,7 @@ fn full_queue_sheds_load_with_busy() {
             &mut self,
             _x: &[f32],
             n: usize,
-        ) -> Result<Vec<qwyc::runtime::engine::Outcome>, String> {
+        ) -> Result<Vec<qwyc::runtime::engine::Outcome>, QwycError> {
             std::thread::sleep(Duration::from_millis(30));
             Ok(vec![
                 qwyc::runtime::engine::Outcome {
@@ -307,7 +321,7 @@ fn server_rejects_malformed_requests() {
     let d = te.d;
     let server = Server::start(
         "127.0.0.1:0",
-        move |_shard| Box::new(NativeEngine::new(ens.clone(), fc.clone(), d)),
+        move |_shard| Box::new(native_engine(&ens, &fc, d)),
         BatchPolicy::default(),
     )
     .expect("server start");
@@ -346,8 +360,8 @@ fn failing_engine_reports_id_correlated_errors() {
             &mut self,
             _x: &[f32],
             _n: usize,
-        ) -> Result<Vec<qwyc::runtime::engine::Outcome>, String> {
-            Err("injected failure".into())
+        ) -> Result<Vec<qwyc::runtime::engine::Outcome>, QwycError> {
+            Err(QwycError::Io("injected failure".into()))
         }
         fn backend(&self) -> &'static str {
             "broken"
