@@ -30,9 +30,15 @@ fn main() -> Result<(), QwycError> {
         &optimized.classifier().order[..5.min(optimized.classifier().t())]
     );
 
-    // 2. Compile once; the artifact is also what `qwyc serve --plan`
-    //    would deploy (save it with `optimized.plan()?.save(...)`).
-    let session = optimized.session()?;
+    // 2. Compile once and write the deployable artifact — the zero-copy
+    //    binary plan is exactly what `qwyc serve --plan` would load.
+    //    Reload it to show the round trip; serving continues from the
+    //    reloaded copy.
+    let plan_path = std::env::temp_dir().join("pipeline_quickstart.plan.bin");
+    optimized.save(&plan_path, PlanFormat::Binary)?;
+    let artifact = PlanArtifact::load(&plan_path)?;
+    println!("saved + reloaded plan artifact -> {}", plan_path.display());
+    let session = EvalSession::new(artifact.compiled());
 
     // 3. Stream decisions over the held-out set — pull-based, so early
     //    consumers never pay for the rest of the buffer.
@@ -67,5 +73,6 @@ fn main() -> Result<(), QwycError> {
     println!("train diff rate {:.4}% (alpha {:.2}%)", rate * 100.0, alpha * 100.0);
     assert!(rate <= alpha + 1e-9, "diff rate {rate} exceeded alpha {alpha}");
     println!("OK: early-exit decisions stay within the faithfulness budget");
+    let _ = std::fs::remove_file(&plan_path);
     Ok(())
 }

@@ -17,7 +17,7 @@ use qwyc::data::synth::{generate, Which};
 use qwyc::data::Dataset;
 use qwyc::lattice::{train_joint, LatticeParams};
 use qwyc::pipeline::PlanBuilder;
-use qwyc::plan::QwycPlan;
+use qwyc::plan::{PlanArtifact, QwycPlan};
 use qwyc::qwyc::{FastClassifier, QwycConfig};
 use qwyc::util::pool::Pool;
 #[cfg(feature = "pjrt")]
@@ -80,14 +80,15 @@ fn main() {
         let server = if backend2 == "pjrt" {
             start_pjrt_server(ens2, fc_used, config)
         } else {
-            // Native path: bundle into the qwyc-plan-v1 artifact,
-            // compile ONCE, and share the Arc across both shards — the
-            // same flow as `qwyc compile-plan` + `qwyc serve --plan`.
+            // Native path: bundle into a plan artifact, compile ONCE,
+            // and share the Arc across both shards — the same flow as
+            // `qwyc compile-plan` + `qwyc serve --plan` (the artifact's
+            // binary form is what a deployment would ship).
             let mut plan =
                 QwycPlan::bundle(ens2, fc_used, "serve-demo", 0.005).expect("bundle plan");
             plan.meta.n_features = 4;
-            let compiled = plan.compile_shared().expect("compile plan");
-            Server::start_with_plan("127.0.0.1:0", compiled, config).expect("server")
+            let artifact = PlanArtifact::from_plan(plan).expect("compile plan");
+            Server::start_with_plan("127.0.0.1:0", artifact.compiled(), config).expect("server")
         };
 
         // Closed-loop client with a pipeline window.

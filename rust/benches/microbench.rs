@@ -8,6 +8,9 @@
 //!   - NativeEngine blocked classify_batch
 //!   - pipeline_api: typed PlanBuilder optimize+compile vs the loose
 //!     optimize_order_with_pool + bundle + compile path
+//!   - plan_load: JSON parse+compile vs zero-copy binary artifact load
+//!   - sweep_branchless: branchy reference sweep vs the mask-and-compact
+//!     kernel on an alternating-exit workload
 //!   - PJRT stage execution (per-batch and per-example amortized)
 //!
 //! Every target lands in `BENCH.json` (schema `qwyc-bench-v1`, see
@@ -252,6 +255,71 @@ fn main() {
         report.push_pair(&rl, &rb);
     }
 
+    // ---- plan artifact load: JSON parse+compile vs zero-copy binary --
+    // The pair behind the RELOAD story: a JSON load pays parse +
+    // validate + permute + SoA rebuild; a binary load is one read plus
+    // validated casts over the already-compiled layout.
+    {
+        use qwyc::plan::{PlanArtifact, PlanFormat};
+        let dir = std::env::temp_dir().join(format!("qwyc-bench-plan-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).expect("bench tmp dir");
+        let json_path = dir.join("plan.json");
+        let bin_path = dir.join("plan.bin");
+        let art = PlanArtifact::from_plan(bench_plan.clone()).expect("artifact");
+        art.save(&json_path, PlanFormat::Json).expect("save json");
+        art.save(&bin_path, PlanFormat::Binary).expect("save bin");
+        let rj = bench_auto("plan_load json parse+compile", budget, runs, || {
+            black_box(PlanArtifact::load(black_box(&json_path)).expect("load json"));
+        });
+        println!("{}", rj.report());
+        let rb = bench_auto("plan_load binary zero-copy", budget, runs, || {
+            black_box(PlanArtifact::load(black_box(&bin_path)).expect("load bin"));
+        });
+        println!("{}", rb.report());
+        println!("  -> binary load speedup: {:.2}x\n", rj.mean_ns / rb.mean_ns);
+        report.push_pair(&rj, &rb);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    // ---- early-exit sweep kernel: branchy reference vs branchless ----
+    // Same alternating-threshold workload (about half the actives retire
+    // at every position) through the pre-rework per-example branchy
+    // sweep and the production mask-and-compact kernel.
+    {
+        use qwyc::qwyc::sweep::{sweep_block, SweepParams};
+        let t = 32usize;
+        let nb = if quick { 1024 } else { 8192 };
+        let cols: Vec<Vec<f32>> = (0..t)
+            .map(|r| {
+                let mut rng = Rng::new(r as u64 + 11);
+                (0..nb).map(|_| rng.normal() as f32 * 0.25).collect()
+            })
+            .collect();
+        let eps_pos: Vec<f32> =
+            (0..t).map(|r| if r % 2 == 0 { 0.4 } else { f32::INFINITY }).collect();
+        let eps_neg: Vec<f32> =
+            (0..t).map(|r| if r % 2 == 1 { -0.4 } else { f32::NEG_INFINITY }).collect();
+        let params = SweepParams { eps_pos: &eps_pos, eps_neg: &eps_neg, bias: 0.0, beta: 0.0 };
+        let scorer = || {
+            let cols = &cols;
+            move |r: usize, active: &[u32], out: &mut [f32]| {
+                for (slot, &i) in out.iter_mut().zip(active.iter()) {
+                    *slot = cols[r][i as usize];
+                }
+            }
+        };
+        let rr = bench_auto(&format!("sweep branchy reference (T={t}, B={nb})"), budget, runs, || {
+            black_box(reference_sweep(&params, nb, scorer()));
+        });
+        println!("{}", rr.report());
+        let rb = bench_auto(&format!("sweep_branchless kernel (T={t}, B={nb})"), budget, runs, || {
+            black_box(sweep_block(&params, nb, scorer()));
+        });
+        println!("{}", rb.report());
+        println!("  -> branchless sweep speedup: {:.2}x\n", rr.mean_ns / rb.mean_ns);
+        report.push_pair(&rr, &rb);
+    }
+
     // ---- sharded serving throughput (1/2/4 shards) -------------------
     // End-to-end requests/sec through the TCP coordinator: one shared
     // compiled plan, N engine shards, 4 pipelined closed-loop
@@ -360,4 +428,56 @@ fn main() {
         Ok(()) => println!("\nwrote {}", out_path.display()),
         Err(e) => eprintln!("\nfailed to write {}: {e}", out_path.display()),
     }
+}
+
+/// The per-example branchy sweep `qwyc::sweep` used before the
+/// branchless rework — the baseline half of the `sweep_branchless`
+/// pair (same copy the kernel's equivalence tests pin against).
+fn reference_sweep<S>(
+    params: &qwyc::qwyc::SweepParams<'_>,
+    nb: usize,
+    mut score_position: S,
+) -> Vec<qwyc::qwyc::SweepOutcome>
+where
+    S: FnMut(usize, &[u32], &mut [f32]),
+{
+    use qwyc::qwyc::SweepOutcome;
+    let t = params.t();
+    let mut out =
+        vec![SweepOutcome { positive: false, score: 0.0, stop: t as u32, early: false }; nb];
+    let mut g = vec![params.bias; nb];
+    let mut scores = vec![0f32; nb];
+    let mut active: Vec<u32> = (0..nb as u32).collect();
+    for r in 0..t {
+        if active.is_empty() {
+            break;
+        }
+        let scores = &mut scores[..active.len()];
+        score_position(r, &active, scores);
+        let (ep, en) = (params.eps_pos[r], params.eps_neg[r]);
+        let mut w = 0usize;
+        for j in 0..active.len() {
+            let i = active[j] as usize;
+            let gi = g[i] + scores[j];
+            g[i] = gi;
+            if gi > ep || gi < en {
+                let stop = (r + 1) as u32;
+                out[i] = SweepOutcome { positive: gi > ep, score: gi, stop, early: true };
+            } else {
+                active[w] = i as u32;
+                w += 1;
+            }
+        }
+        active.truncate(w);
+    }
+    for &i in &active {
+        let i = i as usize;
+        out[i] = SweepOutcome {
+            positive: g[i] >= params.beta,
+            score: g[i],
+            stop: t as u32,
+            early: false,
+        };
+    }
+    out
 }

@@ -32,7 +32,7 @@ use super::batcher::{
     batch_channel_with_cap, BatchPolicy, BatchQueue, BatchSender, TrySendError,
 };
 use super::metrics::ShardedMetrics;
-use crate::plan::{CompiledPlan, PlanSlot, QwycPlan};
+use crate::plan::{CompiledPlan, PlanArtifact, PlanSlot};
 use crate::runtime::engine::{Engine, NativeEngine};
 use crate::util::pool::{threads_from_env, Pool};
 use std::io::{BufRead, BufReader, Write};
@@ -334,6 +334,11 @@ impl Server {
 /// boundary: a batch mid-classification finishes on its old plan, and a
 /// width-compatible swap (the deployment case: re-optimized π/ε for the
 /// same feature space) never errors any request.
+///
+/// The path may name either artifact format — [`PlanArtifact::load`]
+/// sniffs the magic bytes. Deploying the zero-copy `qwyc-plan-bin-v1`
+/// form makes the reload near-free: one read + validated pointer casts
+/// instead of a JSON parse + re-permute.
 fn handle_reload(path: &str, slot: &Option<Arc<PlanSlot>>) -> String {
     let Some(slot) = slot else {
         return "ERR - reload unsupported for this backend".into();
@@ -341,13 +346,12 @@ fn handle_reload(path: &str, slot: &Option<Arc<PlanSlot>>) -> String {
     if path.is_empty() {
         return "ERR - malformed RELOAD (usage: RELOAD <path>)".into();
     }
-    let loaded = QwycPlan::load(Path::new(path))
-        .and_then(|p| p.compile_shared().map(|c| (p.meta.name.clone(), c)));
-    match loaded {
-        Ok((name, compiled)) => {
+    match PlanArtifact::load(Path::new(path)) {
+        Ok(artifact) => {
+            let compiled = artifact.compiled();
             let t = compiled.t();
             let gen = slot.swap(compiled);
-            format!("RELOADED {name} gen={gen} T={t}")
+            format!("RELOADED {} gen={gen} T={t}", artifact.name())
         }
         Err(e) => format!("ERR - reload: {e}"),
     }

@@ -8,12 +8,20 @@
 //! examples one tree level per step — the independent root-to-leaf walks
 //! interleave, so the out-of-order core overlaps their pointer-chasing
 //! loads instead of stalling on one chain at a time (the blocked-traversal
-//! idea behind QuickScorer-family tree servers).
+//! idea behind QuickScorer-family tree servers). The walk is branchless:
+//! leaves are self-loop sentinels and every lane runs exactly `depth`
+//! steps, so the inner loop is a fixed-trip-count compare+select chain.
 
 use crate::error::QwycError;
 use crate::util::json::Json;
 
 /// One node. Leaves have `feature == u32::MAX` and carry `value`.
+///
+/// `#[repr(C)]` because this exact 16-byte record is what the
+/// `qwyc-plan-bin-v1` artifact stores for tree payloads (see
+/// `plan/binary.rs`); the field order is part of the on-disk format and
+/// is pinned by const assertions in `plan/compiled.rs`.
+#[repr(C)]
 #[derive(Clone, Copy, Debug)]
 pub struct Node {
     /// Split feature, or `u32::MAX` for a leaf.
@@ -110,6 +118,12 @@ impl Tree {
     }
 
     /// Build the structure-of-arrays mirror for batched evaluation.
+    ///
+    /// Leaves become *self-loop sentinels*: `left == right == self`, with
+    /// feature index 0 (an always-in-bounds fetch whose value is unused).
+    /// A lane that reaches a leaf before the fixed-depth walk ends just
+    /// keeps re-selecting the same node, so the batched walk needs no
+    /// per-lane done flags or data-dependent exits.
     pub fn to_soa(&self) -> TreeSoa {
         let min_features = self
             .nodes
@@ -118,13 +132,27 @@ impl Tree {
             .map(|n| n.feature as usize + 1)
             .max()
             .unwrap_or(0);
-        TreeSoa {
-            feature: self.nodes.iter().map(|n| n.feature).collect(),
-            threshold: self.nodes.iter().map(|n| n.threshold).collect(),
-            left: self.nodes.iter().map(|n| n.left).collect(),
-            value: self.nodes.iter().map(|n| n.value).collect(),
-            min_features,
+        let n = self.nodes.len();
+        let mut feature = Vec::with_capacity(n);
+        let mut threshold = Vec::with_capacity(n);
+        let mut left = Vec::with_capacity(n);
+        let mut right = Vec::with_capacity(n);
+        let mut value = Vec::with_capacity(n);
+        for (i, nd) in self.nodes.iter().enumerate() {
+            if nd.is_leaf() {
+                feature.push(0);
+                threshold.push(0.0);
+                left.push(i as u32);
+                right.push(i as u32);
+            } else {
+                feature.push(nd.feature);
+                threshold.push(nd.threshold);
+                left.push(nd.left);
+                right.push(nd.left + 1);
+            }
+            value.push(nd.value);
         }
+        TreeSoa { feature, threshold, left, right, value, depth: self.depth(), min_features }
     }
 
     /// Batched evaluation of `out.len()` consecutive examples from the
@@ -206,12 +234,22 @@ pub const SOA_LANES: usize = 16;
 /// Structure-of-arrays node table: one parallel array per field, so the
 /// batched walk touches only the fields it needs per step and the lane
 /// state stays dense.
+///
+/// Unlike the AoS [`Node`] table, the SoA bank stores an explicit
+/// `right` array and encodes leaves as self-loop sentinels
+/// (`left == right == self`, feature 0). Together with the recorded max
+/// `depth`, the walk becomes a fixed-trip-count select chain with no
+/// data-dependent branches: every lane runs exactly `depth` steps and
+/// early-arriving lanes idle harmlessly on their leaf.
 #[derive(Clone, Debug)]
 pub struct TreeSoa {
     feature: Vec<u32>,
     threshold: Vec<f32>,
     left: Vec<u32>,
+    right: Vec<u32>,
     value: Vec<f32>,
+    /// Maximum root-to-leaf depth: the fixed trip count of the walk.
+    depth: usize,
     /// 1 + the largest split-feature index (0 for all-leaf trees): the
     /// narrowest feature vector this tree can be evaluated on. Checked
     /// once per batch so an out-of-range feature fails loudly — the
@@ -228,12 +266,18 @@ impl TreeSoa {
         assert!(d >= self.min_features, "tree needs {} features, rows have {d}", self.min_features);
         debug_assert!(x.len() >= n * d);
         let mut base = 0usize;
-        while base < n {
-            let w = SOA_LANES.min(n - base);
-            self.walk_lanes(&mut out[base..base + w], |lane, feat| {
-                x[(base + lane) * d + feat]
-            });
-            base += w;
+        let mut rows = [0u32; SOA_LANES];
+        while base + SOA_LANES <= n {
+            for (lane, r) in rows.iter_mut().enumerate() {
+                *r = (base + lane) as u32;
+            }
+            let chunk: &mut [f32; SOA_LANES] =
+                (&mut out[base..base + SOA_LANES]).try_into().unwrap();
+            self.walk16(x, d, &rows, chunk);
+            base += SOA_LANES;
+        }
+        for (i, slot) in out.iter_mut().enumerate().skip(base) {
+            *slot = self.walk_one(x, d, i as u32);
         }
     }
 
@@ -245,43 +289,55 @@ impl TreeSoa {
         assert_eq!(rows.len(), out.len());
         assert!(d >= self.min_features, "tree needs {} features, rows have {d}", self.min_features);
         let mut base = 0usize;
-        while base < rows.len() {
-            let w = SOA_LANES.min(rows.len() - base);
-            self.walk_lanes(&mut out[base..base + w], |lane, feat| {
-                x[rows[base + lane] as usize * d + feat]
-            });
-            base += w;
+        while base + SOA_LANES <= rows.len() {
+            let lanes: &[u32; SOA_LANES] = rows[base..base + SOA_LANES].try_into().unwrap();
+            let chunk: &mut [f32; SOA_LANES] =
+                (&mut out[base..base + SOA_LANES]).try_into().unwrap();
+            self.walk16(x, d, lanes, chunk);
+            base += SOA_LANES;
+        }
+        for (slot, &row) in out.iter_mut().zip(rows.iter()).skip(base) {
+            *slot = self.walk_one(x, d, row);
         }
     }
 
-    /// Advance up to [`SOA_LANES`] walks together: every pass moves each
-    /// unfinished lane down one level, so the loads of different lanes
-    /// issue back-to-back instead of serializing on one walk's chain.
+    /// Advance [`SOA_LANES`] root-to-leaf walks in lockstep for exactly
+    /// `depth` levels. There are no per-lane done flags and no
+    /// data-dependent exits: leaves are self-loop sentinels (see
+    /// [`Tree::to_soa`]), so a lane that lands early keeps re-selecting
+    /// the same node. The inner loop is a fixed-trip-count compare+select
+    /// chain over parallel arrays — branchless, so the compiler can turn
+    /// it into gathers + blends where the target supports them, and the
+    /// independent lanes keep the out-of-order core's loads overlapped.
     #[inline]
-    fn walk_lanes<G: Fn(usize, usize) -> f32>(&self, out: &mut [f32], fetch: G) {
-        let w = out.len();
-        debug_assert!(w <= SOA_LANES);
+    fn walk16(&self, x: &[f32], d: usize, rows: &[u32; SOA_LANES], out: &mut [f32; SOA_LANES]) {
         let mut idx = [0u32; SOA_LANES];
-        let mut done = [false; SOA_LANES];
-        let mut pending = w;
-        while pending > 0 {
-            for lane in 0..w {
-                if done[lane] {
-                    continue;
-                }
+        for _ in 0..self.depth {
+            for lane in 0..SOA_LANES {
                 let node = idx[lane] as usize;
-                let feat = self.feature[node];
-                if feat == LEAF {
-                    out[lane] = self.value[node];
-                    done[lane] = true;
-                    pending -= 1;
-                    continue;
-                }
-                let v = fetch(lane, feat as usize);
-                let left = self.left[node];
-                idx[lane] = if v <= self.threshold[node] { left } else { left + 1 };
+                let v = x[rows[lane] as usize * d + self.feature[node] as usize];
+                // NaN compares false ⇒ goes right, matching `Tree::eval`.
+                idx[lane] =
+                    if v <= self.threshold[node] { self.left[node] } else { self.right[node] };
             }
         }
+        for lane in 0..SOA_LANES {
+            out[lane] = self.value[idx[lane] as usize];
+        }
+    }
+
+    /// Scalar fixed-depth walk for the tail lanes of a partial group —
+    /// the same select chain as [`TreeSoa::walk16`], one lane wide, so
+    /// small active sets don't pay for padded lanes they don't use.
+    #[inline]
+    fn walk_one(&self, x: &[f32], d: usize, row: u32) -> f32 {
+        let mut idx = 0u32;
+        for _ in 0..self.depth {
+            let node = idx as usize;
+            let v = x[row as usize * d + self.feature[node] as usize];
+            idx = if v <= self.threshold[node] { self.left[node] } else { self.right[node] };
+        }
+        self.value[idx as usize]
     }
 }
 
@@ -382,6 +438,26 @@ mod tests {
         let mut out3 = vec![0f32; 37];
         t.eval_batch(&x, 2, &mut out3);
         assert_eq!(out, out3);
+    }
+
+    #[test]
+    fn soa_handles_leaf_only_trees_and_nan_features() {
+        // Depth-0 tree: the fixed-depth walk runs zero steps and must
+        // never fetch a feature (d = 0 rows are legal here).
+        let leaf = Tree::single_leaf(7.5).to_soa();
+        let mut out = vec![0f32; 19];
+        leaf.eval_batch(&[], 0, &mut out);
+        assert!(out.iter().all(|&v| v == 7.5));
+        // NaN feature values: the select chain's `v <= thr` compares
+        // false, so NaN routes right — exactly like the scalar walk.
+        let t = stump2();
+        let soa = t.to_soa();
+        let x = [f32::NAN, 0.2, 0.4, f32::NAN, 0.4, 0.2];
+        let mut got = vec![0f32; 3];
+        soa.eval_batch(&x, 2, &mut got);
+        for i in 0..3 {
+            assert_eq!(got[i], t.eval(&x[i * 2..(i + 1) * 2]), "row {i}");
+        }
     }
 
     #[test]

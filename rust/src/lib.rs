@@ -12,7 +12,9 @@
 //!
 //! - **L3 (this crate)** — ensemble training substrates ([`gbt`],
 //!   [`lattice`]), the QWYC optimizer ([`qwyc`]) and baselines ([`fan`],
-//!   [`orderings`]), the deployable [`plan`] artifact (`qwyc-plan-v1` +
+//!   [`orderings`]), the deployable [`plan`] artifact
+//!   ([`plan::PlanArtifact`]: `qwyc-plan-v1` JSON or zero-copy
+//!   `qwyc-plan-bin-v1`, compiled into one
 //!   [`plan::CompiledPlan`]) every evaluator consumes through one shared
 //!   sweep core ([`qwyc::sweep`]), and a serving [`coordinator`] with
 //!   dynamic batching and early-exit scheduling, backed by [`runtime`]
@@ -59,7 +61,7 @@ pub mod prelude {
     pub use crate::pipeline::{
         Decision, DecisionIter, EvalSession, ModelSpec, PlanBuilder, TrainSpec,
     };
-    pub use crate::plan::{CompiledPlan, QwycPlan};
+    pub use crate::plan::{CompiledPlan, PlanArtifact, PlanFormat, QwycPlan};
     pub use crate::qwyc::{FastClassifier, QwycConfig};
     pub use crate::util::pool::Pool;
 }

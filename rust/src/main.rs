@@ -4,15 +4,21 @@
 //!   gen-data     generate a synthetic dataset as CSV
 //!   train        train an ensemble (GBT or lattice) and save it
 //!   optimize     run QWYC (Algorithm 1 or 2) and save the fast classifier
-//!   compile-plan bundle model + fast classifier into a qwyc-plan-v1 artifact
+//!   compile-plan bundle model + fast classifier into a plan artifact
+//!                (--format bin → zero-copy qwyc-plan-bin-v1, the default;
+//!                 --format json → diff-able qwyc-plan-v1)
+//!   plan-info    print an artifact's header/version/section sizes
 //!   simulate     evaluate a plan on a dataset
 //!   serve        start the sharded TCP serving coordinator from a plan
 //!   reload       hot-swap the plan of a running server (RELOAD command)
 //!   bench-client load-test a running server (N pipelined connections)
 //!   experiment   regenerate paper figures/tables (fig1..fig6, tables, all)
 //!
+//! Every subcommand that takes `--plan` accepts either artifact format
+//! transparently — `PlanArtifact::load` sniffs the magic bytes.
+//!
 //! The CLI is a thin veneer over the same typed pipeline embedders get
-//! (`qwyc::pipeline::PlanBuilder` → `qwyc-plan-v1` artifact →
+//! (`qwyc::pipeline::PlanBuilder` → plan artifact →
 //! serving). Every failure prints `error[stage]: message` to stderr —
 //! the stage tag comes from `QwycError::stage()` — and exits non-zero
 //! (2 for config-stage errors, i.e. unusable arguments; 1 for
@@ -29,7 +35,7 @@ use qwyc::experiments::{figures, tables, FigConfig};
 use qwyc::gbt::GbtParams;
 use qwyc::lattice::LatticeParams;
 use qwyc::pipeline::{ModelSpec, PlanBuilder, TrainSpec};
-use qwyc::plan::QwycPlan;
+use qwyc::plan::{ArtifactInfo, PlanArtifact, PlanFormat, QwycPlan};
 use qwyc::qwyc::{optimize_thresholds_for_order, simulate, FastClassifier, QwycConfig};
 #[cfg(feature = "pjrt")]
 use qwyc::runtime::engine::PjrtEngine;
@@ -62,6 +68,7 @@ fn run(args: &Args) -> Result<(), QwycError> {
         Some("train") => train(args),
         Some("optimize") => optimize(args),
         Some("compile-plan") => compile_plan(args),
+        Some("plan-info") => plan_info(args),
         Some("simulate") => simulate_cmd(args),
         Some("serve") => serve(args),
         Some("reload") => reload_cmd(args),
@@ -85,13 +92,16 @@ USAGE: qwyc <subcommand> [flags]
   optimize     --model model.json --dataset ... --alpha 0.005
                [--neg-only] [--fixed-order natural|random|ind-mse|greedy-mse]
                [--max-opt 0] --out fast.json
-  compile-plan --model model.json --fast fast.json --out plan.json
+  compile-plan --model model.json --fast fast.json --out plan.bin
+               [--format bin|json  (default bin: zero-copy qwyc-plan-bin-v1)]
                [--name my-plan --alpha 0.005 --n-features D | --dataset adult]
-  simulate     --plan plan.json --dataset ... [--split test]
-  serve        --plan plan.json --addr 127.0.0.1:7077
+  plan-info    <plan.bin|plan.json>   print header/version/section sizes
+  simulate     --plan plan.bin|plan.json --dataset ... [--split test]
+  serve        --plan plan.bin|plan.json --addr 127.0.0.1:7077
                [--backend native|pjrt --artifact rw1_stage --artifacts-dir artifacts]
                [--shards 1 --queue-cap 1024 --max-batch 256 --max-wait-ms 2]
-  reload       --addr 127.0.0.1:7077 --plan plan.json    (hot-swap a serving plan)
+  reload       --addr 127.0.0.1:7077 --plan plan.bin     (hot-swap a serving plan;
+               either artifact format is accepted)
   bench-client --addr 127.0.0.1:7077 --dataset ... --requests 5000
                [--pipeline 64 --concurrency 1]
   experiment   fig1|fig2|fig3|fig4|fig5|fig6|table1|tables|all
@@ -246,14 +256,18 @@ fn optimize(args: &Args) -> Result<(), QwycError> {
     Ok(())
 }
 
-/// Bundle an ensemble + fast classifier into the versioned `qwyc-plan-v1`
-/// artifact that `simulate --plan` / `serve --plan` consume. Compiles the
-/// plan once here so every invariant is checked at build time, not at
-/// load time on every server start.
+/// Bundle an ensemble + fast classifier into a plan artifact that
+/// `simulate --plan` / `serve --plan` consume — zero-copy
+/// `qwyc-plan-bin-v1` by default, `--format json` for the diff-able
+/// `qwyc-plan-v1` document. Compiles the plan once here so every
+/// invariant is checked at build time, not at load time on every server
+/// start.
 fn compile_plan(args: &Args) -> Result<(), QwycError> {
     let model = PathBuf::from(args.get_str("model", "model.json"));
     let fast = PathBuf::from(args.get_str("fast", "fast.json"));
-    let out = PathBuf::from(args.get_str("out", "plan.json"));
+    let format = PlanFormat::parse(&args.get_str("format", "bin"))?;
+    let default_out = if format == PlanFormat::Json { "plan.json" } else { "plan.bin" };
+    let out = PathBuf::from(args.get_str("out", default_out));
     let alpha = args.get_f64("alpha", 0.0)?;
     let mut n_features = args.get_usize("n-features", 0)?;
     let dataset = args.get_opt("dataset");
@@ -273,34 +287,65 @@ fn compile_plan(args: &Args) -> Result<(), QwycError> {
     if let Some(ds) = &dataset {
         plan.meta.source = format!("dataset={ds}");
     }
-    let compiled = plan.compile()?;
-    plan.save(&out)?;
+    let artifact = PlanArtifact::from_plan(plan)?;
+    artifact.save(&out, format)?;
+    let compiled = artifact.compiled();
     println!(
-        "compiled plan '{}' (T={}, d={}, neg_only={}, total_cost={}) -> {}",
-        plan.meta.name,
+        "compiled plan '{}' (T={}, d={}, neg_only={}, total_cost={}, format={}) -> {}",
+        artifact.name(),
         compiled.t(),
         compiled.n_features(),
-        plan.meta.neg_only,
+        artifact.meta().neg_only,
         compiled.total_cost(),
+        if format == PlanFormat::Json { "json" } else { "bin" },
         out.display()
     );
     Ok(())
 }
 
+/// Print the header-level summary of a plan artifact (either format):
+/// `qwyc plan-info <path>` or `qwyc plan-info --plan <path>`.
+fn plan_info(args: &Args) -> Result<(), QwycError> {
+    let path = match args.get_opt("plan").or_else(|| args.positional.get(1).cloned()) {
+        Some(p) => PathBuf::from(p),
+        None => return Err(QwycError::Config("usage: qwyc plan-info <plan.bin|plan.json>".into())),
+    };
+    args.check_unknown()?;
+    match PlanArtifact::info(&path)? {
+        ArtifactInfo::Json { name, t, n_features } => {
+            println!("{}: qwyc-plan-v1 (JSON)", path.display());
+            println!("  plan '{name}'  T={t}  n_features={n_features}");
+        }
+        ArtifactInfo::Binary(info) => {
+            println!("{}: qwyc-plan-bin-v1 version {}", path.display(), info.version);
+            println!(
+                "  plan '{}'  T={}  n_features={}  file_len={} bytes",
+                info.plan_name, info.t, info.n_features, info.file_len
+            );
+            println!("  {:<12} {:>10} {:>10}", "section", "offset", "bytes");
+            for s in &info.sections {
+                println!("  {:<12} {:>10} {:>10}", s.name, s.offset, s.len);
+            }
+        }
+    }
+    Ok(())
+}
+
 /// Load the plan artifact named by `--plan` — the only deployed unit.
-fn load_plan(args: &Args) -> Result<QwycPlan, QwycError> {
+/// Either format (JSON or binary) is accepted; the magic bytes decide.
+fn load_artifact(args: &Args) -> Result<PlanArtifact, QwycError> {
     match args.get_opt("plan") {
-        Some(p) => QwycPlan::load(Path::new(&p)),
+        Some(p) => PlanArtifact::load(Path::new(&p)),
         None => Err(QwycError::Config(
-            "--plan <plan.json> is required (the --model/--fast pair was removed: run \
-             `qwyc compile-plan` once and pass --plan)"
+            "--plan <plan.bin|plan.json> is required (the --model/--fast pair was removed: \
+             run `qwyc compile-plan` once and pass --plan)"
                 .into(),
         )),
     }
 }
 
 fn simulate_cmd(args: &Args) -> Result<(), QwycError> {
-    let plan = load_plan(args)?;
+    let plan = load_artifact(args)?.to_plan()?;
     let (tr, te) = load_data(args)?;
     let split = args.get_str("split", "test");
     args.check_unknown()?;
@@ -334,7 +379,7 @@ fn serve(args: &Args) -> Result<(), QwycError> {
             max_wait: Duration::from_millis(args.get_u64("max-wait-ms", 2)?),
         },
     };
-    let plan = load_plan(args)?;
+    let loaded = load_artifact(args)?;
     args.check_unknown()?;
 
     if backend == "pjrt" && !cfg!(feature = "pjrt") {
@@ -347,9 +392,9 @@ fn serve(args: &Args) -> Result<(), QwycError> {
     println!(
         "serving plan '{}' ({}, T={}, backend={backend}, shards={}, queue_cap={}) on {addr}; \
          batch<={} wait<={:?}",
-        plan.meta.name,
-        plan.ensemble.name,
-        plan.ensemble.len(),
+        loaded.name(),
+        loaded.ensemble_name(),
+        loaded.compiled().t(),
         config.shards,
         config.queue_cap,
         config.policy.max_batch,
@@ -360,6 +405,7 @@ fn serve(args: &Args) -> Result<(), QwycError> {
         // PJRT stays a per-shard factory: device handles are not `Send`,
         // so each shard builds its own engine inside its worker thread.
         // No PlanSlot → the server answers RELOAD with an ERR.
+        let plan = loaded.to_plan()?;
         let (ens, fc) = (plan.ensemble.clone(), plan.fc.clone());
         let server = Server::start(
             &addr,
@@ -373,10 +419,10 @@ fn serve(args: &Args) -> Result<(), QwycError> {
         return stats_loop(server);
     }
     let _ = (&backend, &artifact, &artifacts_dir);
-    // Compile ONCE; all shards share the same immutable Arc'd artifact,
-    // and RELOAD swaps it at batch boundaries.
-    let compiled = plan.compile_shared()?;
-    let server = Server::start_with_plan(&addr, compiled, config)?;
+    // The artifact is already compiled (for binary plans, load itself was
+    // near-free); all shards share the same immutable Arc'd plan, and
+    // RELOAD swaps it at batch boundaries.
+    let server = Server::start_with_plan(&addr, loaded.compiled(), config)?;
     stats_loop(server)
 }
 
@@ -389,10 +435,11 @@ fn stats_loop(server: Server) -> Result<(), QwycError> {
     }
 }
 
-/// Ask a running server to hot-swap its plan (`RELOAD <path>`).
+/// Ask a running server to hot-swap its plan (`RELOAD <path>`); the
+/// server accepts either artifact format.
 fn reload_cmd(args: &Args) -> Result<(), QwycError> {
     let addr = parse_addr(args)?;
-    let plan_path = args.get_str("plan", "plan.json");
+    let plan_path = args.get_str("plan", "plan.bin");
     args.check_unknown()?;
     let mut client = Client::connect(&addr)?;
     let line = client.reload(&plan_path)?;

@@ -41,7 +41,7 @@ use crate::error::QwycError;
 use crate::gbt::GbtParams;
 use crate::lattice::model::MAX_DIM;
 use crate::lattice::LatticeParams;
-use crate::plan::{CompiledPlan, QwycPlan};
+use crate::plan::{CompiledPlan, PlanArtifact, PlanFormat, QwycPlan};
 use crate::qwyc::{optimize_order_with_pool, FastClassifier, QwycConfig};
 use crate::util::pool::Pool;
 use std::borrow::Cow;
@@ -433,6 +433,21 @@ impl<S: CompileReady> PlanBuilder<S> {
     /// [`EvalSession`].
     pub fn compile(&self) -> Result<Arc<CompiledPlan>, QwycError> {
         self.plan()?.compile_shared()
+    }
+
+    /// Compile and write the deployable plan artifact in one call —
+    /// zero-copy `qwyc-plan-bin-v1` ([`PlanFormat::Binary`]) or the
+    /// diff-able `qwyc-plan-v1` JSON document ([`PlanFormat::Json`]).
+    /// Returns the artifact so callers can keep serving from the same
+    /// compiled plan they just wrote.
+    pub fn save(
+        &self,
+        path: &std::path::Path,
+        format: PlanFormat,
+    ) -> Result<PlanArtifact, QwycError> {
+        let artifact = PlanArtifact::from_plan(self.plan()?)?;
+        artifact.save(path, format)?;
+        Ok(artifact)
     }
 
     /// Compile and open an evaluation session with the `QWYC_THREADS`

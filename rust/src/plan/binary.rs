@@ -1,0 +1,608 @@
+//! `qwyc-plan-bin-v1`: the zero-copy binary plan artifact.
+//!
+//! A compiled plan flattened into one contiguous, alignment-padded
+//! buffer: a fixed 64-byte header (magic / version / endianness tag /
+//! section count), a fixed-width section table, and eight sections of
+//! fixed-width `#[repr(C)]` records — scalars, the four meta strings,
+//! the order π, the ε⁺/ε⁻ threshold vectors, per-position costs, a
+//! model directory, and the packed model payloads (16-byte tree node
+//! records, u32 lattice feature subsets + f32 vertex tables). Loading
+//! is one `read` into an 8-byte-aligned buffer followed by validated
+//! pointer casts — no parsing, no re-permutation — so a serving
+//! `RELOAD` costs little more than the file read plus the invariant
+//! checks every compile path runs.
+//!
+//! Layout rules (documented in README "Plan artifacts"):
+//! - all multi-byte fields are stored in the **writer's native byte
+//!   order**; the header carries an endianness tag and readers reject a
+//!   mismatch rather than byte-swap,
+//! - the writer starts every section on a 64-byte boundary; readers
+//!   require only the 8-byte alignment the record types need,
+//! - section sizes are fully determined by `t` (from the scalars
+//!   section) and the model directory, and every length is checked
+//!   before a cast — a flipped byte fails loudly as
+//!   [`QwycError::Schema`] naming the bad section,
+//! - the version field is bumped on any layout change; readers accept
+//!   exactly the versions they know.
+//!
+//! The section payloads store the *compiled* (position-major) form plus
+//! the original-index order π, which is enough to reconstruct the
+//! uncompiled [`QwycPlan`](super::QwycPlan) exactly (inverse-permute
+//! models and costs), so `plan-info`, JSON re-export, and `simulate`
+//! work from either format.
+
+use super::compiled::CompiledPlan;
+use super::PlanMeta;
+use crate::ensemble::BaseModel;
+use crate::error::QwycError;
+use crate::gbt::tree::{Node, Tree};
+use crate::lattice::model::MAX_DIM;
+use crate::lattice::Lattice;
+use std::io::Read;
+use std::mem::{align_of, size_of};
+use std::path::Path;
+
+/// First eight bytes of every binary plan. Distinct from `{` so format
+/// auto-detection is a one-byte sniff.
+pub const MAGIC: [u8; 8] = *b"QWYCBIN1";
+/// Current layout version; bumped on any change to the byte layout.
+pub const VERSION: u32 = 1;
+/// Stored natively by the writer; a reader that sees these bytes in a
+/// different order is running on hardware with the opposite endianness.
+const ENDIAN_TAG: u32 = 0x0102_0304;
+const N_SECTIONS: usize = 8;
+const SECTION_NAMES: [&str; N_SECTIONS] =
+    ["scalars", "strings", "order", "eps_pos", "eps_neg", "costs", "model_dir", "model_data"];
+const FMT: &str = "qwyc-plan-bin-v1";
+
+// ---- on-disk records ---------------------------------------------------
+// Sizes and alignments are pinned by const assertions in
+// `plan/compiled.rs`; a field reorder is a compile error, not a corrupt
+// artifact. None of these records have padding bytes, so writing them
+// as raw bytes never leaks uninitialized memory.
+
+/// Fixed 64-byte file header.
+#[repr(C)]
+#[derive(Clone, Copy, Debug)]
+pub struct FileHeader {
+    /// [`MAGIC`].
+    pub magic: [u8; 8],
+    /// [`VERSION`].
+    pub version: u32,
+    /// Endianness tag (must read back as `0x01020304`).
+    pub endian: u32,
+    /// Total header size in bytes (64 for v1).
+    pub header_len: u32,
+    /// Number of section-table entries that follow the header.
+    pub n_sections: u32,
+    /// Total file length in bytes — rejects truncated files up front.
+    pub file_len: u64,
+    /// Reserved, zero-filled.
+    pub reserved: [u8; 32],
+}
+
+/// One section-table entry.
+#[repr(C)]
+#[derive(Clone, Copy, Debug)]
+pub struct SectionEntry {
+    /// Section kind; v1 requires the eight known kinds in order 0..=7.
+    pub kind: u32,
+    /// Reserved, zero.
+    pub reserved: u32,
+    /// Byte offset of the section payload from the start of the file.
+    pub offset: u64,
+    /// Payload length in bytes (excluding alignment padding).
+    pub len: u64,
+}
+
+/// Fixed-width scalar fields of the plan (section 0).
+#[repr(C)]
+#[derive(Clone, Copy, Debug)]
+pub struct PlanScalars {
+    /// Trade-off weight the plan was optimized for (provenance).
+    pub alpha: f64,
+    /// Declared serving feature width (0 ⇒ infer from the models).
+    pub n_features: u64,
+    /// Number of positions T; sizes every other section.
+    pub t: u64,
+    /// Ensemble bias folded into the running score at position 0.
+    pub bias: f32,
+    /// Full-classifier decision threshold β.
+    pub beta: f32,
+    /// 1 if the plan is negative-exit-only (derived metadata).
+    pub neg_only: u32,
+    /// Reserved, zero.
+    pub reserved: u32,
+}
+
+/// Model directory entry (section 6), one per position.
+#[repr(C)]
+#[derive(Clone, Copy, Debug)]
+pub struct ModelRec {
+    /// 0 = tree (payload: `count` × [`Node`]), 1 = lattice (payload:
+    /// `count` × u32 features, padded to 8, then 2^count × f32 theta).
+    pub kind: u32,
+    /// Node count (tree) or dimension (lattice).
+    pub count: u32,
+    /// Payload byte offset *within* the model-data section.
+    pub offset: u64,
+    /// Payload byte length.
+    pub len: u64,
+}
+
+/// Marker for types that may be reinterpreted to/from raw bytes.
+///
+/// # Safety
+/// Implement only for `#[repr(C)]` types in which every bit pattern is
+/// a valid value and whose layout has no padding bytes (both pinned by
+/// the const assertions in `plan/compiled.rs`).
+unsafe trait Pod: Copy {}
+unsafe impl Pod for u32 {}
+unsafe impl Pod for f32 {}
+unsafe impl Pod for Node {}
+unsafe impl Pod for FileHeader {}
+unsafe impl Pod for SectionEntry {}
+unsafe impl Pod for PlanScalars {}
+unsafe impl Pod for ModelRec {}
+
+fn bytes_of<T: Pod>(v: &T) -> &[u8] {
+    // SAFETY: Pod guarantees no padding, so all size_of::<T>() bytes
+    // are initialized; lifetime is tied to the borrow of `v`.
+    unsafe { std::slice::from_raw_parts((v as *const T).cast::<u8>(), size_of::<T>()) }
+}
+
+fn bytes_of_slice<T: Pod>(v: &[T]) -> &[u8] {
+    // SAFETY: as above, element count times.
+    unsafe { std::slice::from_raw_parts(v.as_ptr().cast::<u8>(), std::mem::size_of_val(v)) }
+}
+
+fn view<T: Pod>(b: &[u8], what: &str) -> Result<&T, QwycError> {
+    if b.len() != size_of::<T>() {
+        return Err(QwycError::Schema(format!(
+            "{FMT}: {what}: expected {} bytes, got {}",
+            size_of::<T>(),
+            b.len()
+        )));
+    }
+    if b.as_ptr() as usize % align_of::<T>() != 0 {
+        return Err(QwycError::Schema(format!("{FMT}: {what}: payload is misaligned")));
+    }
+    // SAFETY: length and alignment checked; Pod makes any bytes valid.
+    Ok(unsafe { &*b.as_ptr().cast::<T>() })
+}
+
+fn view_slice<'a, T: Pod>(b: &'a [u8], what: &str) -> Result<&'a [T], QwycError> {
+    if b.len() % size_of::<T>() != 0 {
+        return Err(QwycError::Schema(format!(
+            "{FMT}: {what}: {} bytes is not a whole number of {}-byte records",
+            b.len(),
+            size_of::<T>()
+        )));
+    }
+    if b.as_ptr() as usize % align_of::<T>() != 0 {
+        return Err(QwycError::Schema(format!("{FMT}: {what}: payload is misaligned")));
+    }
+    // SAFETY: length and alignment checked; Pod makes any bytes valid.
+    Ok(unsafe { std::slice::from_raw_parts(b.as_ptr().cast::<T>(), b.len() / size_of::<T>()) })
+}
+
+/// An owned byte buffer whose storage is 8-byte aligned, so section
+/// payloads (whose offsets are multiples of 8) can be viewed in place
+/// as `&[u32]`/`&[f32]`/record slices without copying.
+pub(super) struct AlignedBuf {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl AlignedBuf {
+    /// Read a whole file with a single `read_exact` into aligned storage.
+    pub fn read_file(path: &Path) -> Result<AlignedBuf, QwycError> {
+        let mut f = std::fs::File::open(path)
+            .map_err(|e| QwycError::Io(format!("{}: {e}", path.display())))?;
+        let len = f
+            .metadata()
+            .map_err(|e| QwycError::Io(format!("{}: {e}", path.display())))?
+            .len() as usize;
+        let mut buf = AlignedBuf { words: vec![0u64; len.div_ceil(8)], len };
+        f.read_exact(buf.bytes_mut())
+            .map_err(|e| QwycError::Io(format!("{}: {e}", path.display())))?;
+        Ok(buf)
+    }
+
+    /// Copy an existing byte slice into aligned storage (tests, sniffed
+    /// in-memory buffers).
+    pub fn from_bytes(b: &[u8]) -> AlignedBuf {
+        let mut buf = AlignedBuf { words: vec![0u64; b.len().div_ceil(8)], len: b.len() };
+        buf.bytes_mut().copy_from_slice(b);
+        buf
+    }
+
+    pub fn bytes(&self) -> &[u8] {
+        // SAFETY: words owns at least `len` initialized bytes.
+        unsafe { std::slice::from_raw_parts(self.words.as_ptr().cast::<u8>(), self.len) }
+    }
+
+    fn bytes_mut(&mut self) -> &mut [u8] {
+        // SAFETY: as above, and the borrow is exclusive.
+        unsafe { std::slice::from_raw_parts_mut(self.words.as_mut_ptr().cast::<u8>(), self.len) }
+    }
+}
+
+// ---- encode ------------------------------------------------------------
+
+fn pad_to(buf: &mut Vec<u8>, align: usize) {
+    while buf.len() % align != 0 {
+        buf.push(0);
+    }
+}
+
+fn push_str(buf: &mut Vec<u8>, s: &str) {
+    buf.extend_from_slice(&(s.len() as u32).to_ne_bytes());
+    buf.extend_from_slice(s.as_bytes());
+}
+
+/// Serialize a compiled plan (plus its meta and the ensemble name, which
+/// the compiled form does not carry) into a `qwyc-plan-bin-v1` buffer.
+pub(super) fn encode(meta: &PlanMeta, ensemble_name: &str, cp: &CompiledPlan) -> Vec<u8> {
+    let t = cp.t();
+    assert!(t < u32::MAX as usize, "plan too large for qwyc-plan-bin-v1");
+    let scalars = PlanScalars {
+        alpha: meta.alpha,
+        n_features: meta.n_features as u64,
+        t: t as u64,
+        bias: cp.bias(),
+        beta: cp.beta(),
+        neg_only: meta.neg_only as u32,
+        reserved: 0,
+    };
+    let mut strings = Vec::new();
+    for s in [meta.name.as_str(), ensemble_name, meta.source.as_str(), meta.created_by.as_str()] {
+        push_str(&mut strings, s);
+    }
+    let order: Vec<u32> = cp.order().iter().map(|&m| m as u32).collect();
+    let mut dir: Vec<ModelRec> = Vec::with_capacity(t);
+    let mut data: Vec<u8> = Vec::new();
+    for m in cp.models() {
+        pad_to(&mut data, 8);
+        let off = data.len() as u64;
+        match m {
+            BaseModel::Tree(tr) => {
+                data.extend_from_slice(bytes_of_slice(&tr.nodes));
+                dir.push(ModelRec {
+                    kind: 0,
+                    count: tr.nodes.len() as u32,
+                    offset: off,
+                    len: data.len() as u64 - off,
+                });
+            }
+            BaseModel::Lattice(l) => {
+                let feats: Vec<u32> = l.features.iter().map(|&f| f as u32).collect();
+                data.extend_from_slice(bytes_of_slice(&feats));
+                pad_to(&mut data, 8);
+                data.extend_from_slice(bytes_of_slice(&l.theta));
+                dir.push(ModelRec {
+                    kind: 1,
+                    count: l.dim() as u32,
+                    offset: off,
+                    len: data.len() as u64 - off,
+                });
+            }
+        }
+    }
+
+    let payloads: [&[u8]; N_SECTIONS] = [
+        bytes_of(&scalars),
+        &strings,
+        bytes_of_slice(&order),
+        bytes_of_slice(cp.eps_pos()),
+        bytes_of_slice(cp.eps_neg()),
+        bytes_of_slice(cp.position_costs()),
+        bytes_of_slice(&dir),
+        &data,
+    ];
+    let table_len = N_SECTIONS * size_of::<SectionEntry>();
+    let mut file = vec![0u8; size_of::<FileHeader>() + table_len];
+    let mut entries = [SectionEntry { kind: 0, reserved: 0, offset: 0, len: 0 }; N_SECTIONS];
+    for (k, payload) in payloads.iter().enumerate() {
+        // The writer starts every section on a 64-byte boundary; readers
+        // only require the record alignment (8).
+        pad_to(&mut file, 64);
+        entries[k] = SectionEntry {
+            kind: k as u32,
+            reserved: 0,
+            offset: file.len() as u64,
+            len: payload.len() as u64,
+        };
+        file.extend_from_slice(payload);
+    }
+    let header = FileHeader {
+        magic: MAGIC,
+        version: VERSION,
+        endian: ENDIAN_TAG,
+        header_len: size_of::<FileHeader>() as u32,
+        n_sections: N_SECTIONS as u32,
+        file_len: file.len() as u64,
+        reserved: [0; 32],
+    };
+    file[..size_of::<FileHeader>()].copy_from_slice(bytes_of(&header));
+    file[size_of::<FileHeader>()..size_of::<FileHeader>() + table_len]
+        .copy_from_slice(bytes_of_slice(&entries));
+    file
+}
+
+// ---- decode ------------------------------------------------------------
+
+/// Everything a binary artifact yields: the serving-ready compiled plan
+/// plus the metadata needed to reconstruct the uncompiled `QwycPlan`.
+pub(super) struct DecodedPlan {
+    pub compiled: CompiledPlan,
+    pub meta: PlanMeta,
+    pub ensemble_name: String,
+}
+
+/// True if `bytes` starts with the `qwyc-plan-bin-v1` magic.
+pub(super) fn is_binary(bytes: &[u8]) -> bool {
+    bytes.len() >= MAGIC.len() && bytes[..MAGIC.len()] == MAGIC
+}
+
+fn parse_header(bytes: &[u8]) -> Result<&FileHeader, QwycError> {
+    if bytes.len() < size_of::<FileHeader>() {
+        return Err(QwycError::Schema(format!(
+            "{FMT}: file too short for the header ({} bytes)",
+            bytes.len()
+        )));
+    }
+    if bytes[..MAGIC.len()] != MAGIC {
+        return Err(QwycError::Schema(format!("{FMT}: bad magic (not a binary plan)")));
+    }
+    let hdr: &FileHeader = view(&bytes[..size_of::<FileHeader>()], "header")?;
+    if hdr.version != VERSION {
+        return Err(QwycError::Schema(format!(
+            "{FMT}: unsupported version {} (this reader knows version {VERSION})",
+            hdr.version
+        )));
+    }
+    if hdr.endian != ENDIAN_TAG {
+        return Err(QwycError::Schema(format!(
+            "{FMT}: endianness mismatch (written on opposite-endian hardware)"
+        )));
+    }
+    if hdr.header_len as usize != size_of::<FileHeader>()
+        || hdr.n_sections as usize != N_SECTIONS
+    {
+        return Err(QwycError::Schema(format!(
+            "{FMT}: header geometry mismatch (header_len {}, n_sections {})",
+            hdr.header_len, hdr.n_sections
+        )));
+    }
+    if hdr.file_len != bytes.len() as u64 {
+        return Err(QwycError::Schema(format!(
+            "{FMT}: truncated or padded file (header says {} bytes, file has {})",
+            hdr.file_len,
+            bytes.len()
+        )));
+    }
+    Ok(hdr)
+}
+
+fn parse_sections(bytes: &[u8]) -> Result<&[SectionEntry], QwycError> {
+    let lo = size_of::<FileHeader>();
+    let hi = lo + N_SECTIONS * size_of::<SectionEntry>();
+    if bytes.len() < hi {
+        return Err(QwycError::Schema(format!("{FMT}: file too short for the section table")));
+    }
+    let entries: &[SectionEntry] = view_slice(&bytes[lo..hi], "section table")?;
+    for (k, e) in entries.iter().enumerate() {
+        let name = SECTION_NAMES[k];
+        if e.kind != k as u32 {
+            return Err(QwycError::Schema(format!(
+                "{FMT}: section {k} ({name}): unexpected kind {}",
+                e.kind
+            )));
+        }
+        if e.offset % 8 != 0 {
+            return Err(QwycError::Schema(format!(
+                "{FMT}: section {name}: offset {} is not 8-byte aligned",
+                e.offset
+            )));
+        }
+        let end = e.offset.checked_add(e.len).ok_or_else(|| {
+            QwycError::Schema(format!("{FMT}: section {name}: offset+len overflows"))
+        })?;
+        if end > bytes.len() as u64 {
+            return Err(QwycError::Schema(format!(
+                "{FMT}: section {name}: [{}, {end}) runs past end of file ({} bytes)",
+                e.offset,
+                bytes.len()
+            )));
+        }
+    }
+    Ok(entries)
+}
+
+fn section<'a>(bytes: &'a [u8], entries: &[SectionEntry], k: usize) -> &'a [u8] {
+    let e = &entries[k];
+    &bytes[e.offset as usize..(e.offset + e.len) as usize]
+}
+
+fn read_str(buf: &[u8], cursor: &mut usize, what: &str) -> Result<String, QwycError> {
+    let err = |m: String| QwycError::Schema(format!("{FMT}: section strings: {what}: {m}"));
+    let lo = *cursor;
+    if lo + 4 > buf.len() {
+        return Err(err("length prefix runs past section end".into()));
+    }
+    let n = u32::from_ne_bytes(buf[lo..lo + 4].try_into().unwrap()) as usize;
+    let (s0, s1) = (lo + 4, lo + 4 + n);
+    if s1 > buf.len() {
+        return Err(err(format!("{n}-byte string runs past section end")));
+    }
+    *cursor = s1;
+    String::from_utf8(buf[s0..s1].to_vec()).map_err(|_| err("not valid UTF-8".into()))
+}
+
+fn expect_len(name: &str, got: usize, want: usize) -> Result<(), QwycError> {
+    if got != want {
+        return Err(QwycError::Schema(format!(
+            "{FMT}: section {name}: expected {want} entries, got {got}"
+        )));
+    }
+    Ok(())
+}
+
+/// Decode a `qwyc-plan-bin-v1` buffer (must come from an [`AlignedBuf`]
+/// or otherwise be 8-byte aligned). Every section is bounds- and
+/// shape-checked before its pointer cast, then the parts run through the
+/// same [`CompiledPlan::from_parts`] validation as the JSON path.
+pub(super) fn decode(bytes: &[u8]) -> Result<DecodedPlan, QwycError> {
+    parse_header(bytes)?;
+    let entries = parse_sections(bytes)?;
+
+    let scalars: &PlanScalars = view(section(bytes, entries, 0), "section scalars")?;
+    let t = scalars.t as usize;
+
+    let strings = section(bytes, entries, 1);
+    let mut cursor = 0usize;
+    let plan_name = read_str(strings, &mut cursor, "plan name")?;
+    let ensemble_name = read_str(strings, &mut cursor, "ensemble name")?;
+    let source = read_str(strings, &mut cursor, "source")?;
+    let created_by = read_str(strings, &mut cursor, "created_by")?;
+
+    let order_raw: &[u32] = view_slice(section(bytes, entries, 2), "section order")?;
+    expect_len("order", order_raw.len(), t)?;
+    let eps_pos: &[f32] = view_slice(section(bytes, entries, 3), "section eps_pos")?;
+    expect_len("eps_pos", eps_pos.len(), t)?;
+    let eps_neg: &[f32] = view_slice(section(bytes, entries, 4), "section eps_neg")?;
+    expect_len("eps_neg", eps_neg.len(), t)?;
+    let costs: &[f32] = view_slice(section(bytes, entries, 5), "section costs")?;
+    expect_len("costs", costs.len(), t)?;
+    let dir: &[ModelRec] = view_slice(section(bytes, entries, 6), "section model_dir")?;
+    expect_len("model_dir", dir.len(), t)?;
+
+    let data = section(bytes, entries, 7);
+    let mut models: Vec<BaseModel> = Vec::with_capacity(t);
+    for (r, rec) in dir.iter().enumerate() {
+        let err = |m: String| {
+            QwycError::Schema(format!("{FMT}: section model_data: model at position {r}: {m}"))
+        };
+        let end = rec
+            .offset
+            .checked_add(rec.len)
+            .ok_or_else(|| err("offset+len overflows".into()))?;
+        if end > data.len() as u64 || rec.offset % 8 != 0 {
+            return Err(err(format!(
+                "payload [{}, {end}) is misaligned or out of bounds ({} bytes)",
+                rec.offset,
+                data.len()
+            )));
+        }
+        let payload = &data[rec.offset as usize..end as usize];
+        match rec.kind {
+            0 => {
+                let nodes: &[Node] = view_slice(payload, "tree payload")?;
+                if nodes.len() != rec.count as usize {
+                    return Err(err(format!(
+                        "directory says {} nodes, payload holds {}",
+                        rec.count,
+                        nodes.len()
+                    )));
+                }
+                models.push(BaseModel::Tree(Tree { nodes: nodes.to_vec() }));
+            }
+            1 => {
+                let dim = rec.count as usize;
+                if dim > MAX_DIM {
+                    return Err(err(format!("lattice dim {dim} > MAX_DIM {MAX_DIM}")));
+                }
+                let feats_len = dim * 4;
+                let theta_off = feats_len.div_ceil(8) * 8;
+                let want = theta_off + (1usize << dim) * 4;
+                if payload.len() != want {
+                    return Err(err(format!(
+                        "lattice payload is {} bytes, dim {dim} requires {want}",
+                        payload.len()
+                    )));
+                }
+                let feats: &[u32] = view_slice(&payload[..feats_len], "lattice features")?;
+                let theta: &[f32] = view_slice(&payload[theta_off..], "lattice theta")?;
+                models.push(BaseModel::Lattice(Lattice::from_params(
+                    feats.iter().map(|&f| f as usize).collect(),
+                    theta.to_vec(),
+                )));
+            }
+            k => return Err(err(format!("unknown model kind {k}"))),
+        }
+    }
+
+    let compiled = CompiledPlan::from_parts(
+        &plan_name,
+        models,
+        order_raw.iter().map(|&m| m as usize).collect(),
+        eps_pos.to_vec(),
+        eps_neg.to_vec(),
+        scalars.bias,
+        scalars.beta,
+        costs.to_vec(),
+        scalars.n_features as usize,
+    )?;
+    let meta = PlanMeta {
+        name: plan_name,
+        alpha: scalars.alpha,
+        neg_only: scalars.neg_only != 0,
+        source,
+        created_by,
+        n_features: scalars.n_features as usize,
+    };
+    Ok(DecodedPlan { compiled, meta, ensemble_name })
+}
+
+// ---- inspection --------------------------------------------------------
+
+/// One section-table row, for `plan-info`.
+#[derive(Clone, Debug)]
+pub struct SectionInfo {
+    /// Section name (fixed per kind in v1).
+    pub name: &'static str,
+    /// Byte offset from the start of the file.
+    pub offset: u64,
+    /// Payload length in bytes.
+    pub len: u64,
+}
+
+/// Header-level summary of a binary plan artifact.
+#[derive(Clone, Debug)]
+pub struct BinaryInfo {
+    /// Layout version from the header.
+    pub version: u32,
+    /// Total file length in bytes.
+    pub file_len: u64,
+    /// Plan name (strings section).
+    pub plan_name: String,
+    /// Number of positions T.
+    pub t: u64,
+    /// Declared feature width (0 ⇒ inferred at compile).
+    pub n_features: u64,
+    /// The section table.
+    pub sections: Vec<SectionInfo>,
+}
+
+/// Read only the header, section table, scalars, and plan name — the
+/// cheap ops-debugging view behind `plan-info`.
+pub(super) fn inspect(bytes: &[u8]) -> Result<BinaryInfo, QwycError> {
+    let hdr = parse_header(bytes)?;
+    let entries = parse_sections(bytes)?;
+    let scalars: &PlanScalars = view(section(bytes, entries, 0), "section scalars")?;
+    let mut cursor = 0usize;
+    let plan_name = read_str(section(bytes, entries, 1), &mut cursor, "plan name")?;
+    Ok(BinaryInfo {
+        version: hdr.version,
+        file_len: hdr.file_len,
+        plan_name,
+        t: scalars.t,
+        n_features: scalars.n_features,
+        sections: entries
+            .iter()
+            .enumerate()
+            .map(|(k, e)| SectionInfo { name: SECTION_NAMES[k], offset: e.offset, len: e.len })
+            .collect(),
+    })
+}

@@ -14,8 +14,26 @@ use crate::ensemble::BaseModel;
 use crate::error::QwycError;
 use crate::gbt::tree::TreeSoa;
 use crate::qwyc::sweep::{sweep_batched, SweepOutcome, SweepParams};
-use crate::qwyc::SingleResult;
+use crate::qwyc::{FastClassifier, SingleResult};
 use crate::util::pool::Pool;
+
+// ---- binary-layout record pinning --------------------------------------
+//
+// Every record type that lands in the `qwyc-plan-bin-v1` artifact is
+// `#[repr(C)]` and its size/alignment is asserted here, so a silent
+// struct reorder or field-width change becomes a compile error instead
+// of a corrupt artifact. The layouts themselves live next to the
+// encoder/decoder in `plan/binary.rs` (and `gbt/tree.rs` for `Node`).
+const _: () = {
+    use super::binary::{FileHeader, ModelRec, PlanScalars, SectionEntry};
+    use crate::gbt::tree::Node;
+    use std::mem::{align_of, size_of};
+    assert!(size_of::<FileHeader>() == 64 && align_of::<FileHeader>() == 8);
+    assert!(size_of::<SectionEntry>() == 24 && align_of::<SectionEntry>() == 8);
+    assert!(size_of::<PlanScalars>() == 40 && align_of::<PlanScalars>() == 8);
+    assert!(size_of::<ModelRec>() == 24 && align_of::<ModelRec>() == 8);
+    assert!(size_of::<Node>() == 16 && align_of::<Node>() == 4);
+};
 
 /// A validated, position-major, ready-to-sweep plan.
 ///
@@ -37,6 +55,10 @@ pub struct CompiledPlan {
     beta: f32,
     /// π — position r evaluates original model `order[r]` (provenance).
     order: Vec<usize>,
+    /// Per-position costs `costs[r] = c_{π(r)}` as declared by the plan
+    /// (kept exact so the binary artifact and plan reconstruction never
+    /// have to recover f32 costs by differencing the f64 prefix table).
+    costs: Vec<f32>,
     /// `prefix_cost[r]` = Σ_{q<r} c_{π(q)}; `prefix_cost[T]` is the full
     /// evaluation cost.
     prefix_cost: Vec<f64>,
@@ -59,16 +81,70 @@ impl CompiledPlan {
         plan.validate()?;
         let t = plan.fc.t();
         let mut models = Vec::with_capacity(t);
-        let mut prefix_cost = vec![0f64; t + 1];
-        for (r, &m) in plan.fc.order.iter().enumerate() {
-            let model = &plan.ensemble.models[m];
+        let mut costs = Vec::with_capacity(t);
+        for &m in &plan.fc.order {
+            models.push(plan.ensemble.models[m].clone());
+            costs.push(plan.ensemble.costs[m]);
+        }
+        CompiledPlan::from_parts(
+            &plan.meta.name,
+            models,
+            plan.fc.order.clone(),
+            plan.fc.eps_pos.clone(),
+            plan.fc.eps_neg.clone(),
+            plan.fc.bias,
+            plan.fc.beta,
+            costs,
+            plan.meta.n_features,
+        )
+    }
+
+    /// Assemble a compiled plan from position-major parts, running every
+    /// invariant check `compile()` has always run: classifier geometry
+    /// (lengths, permutation, NaN thresholds, finite bias/β), per-tree
+    /// structural soundness, and feature-count agreement. This is the
+    /// binary decoder's entry point, and [`CompiledPlan::from_plan`]
+    /// funnels through it too, so JSON- and binary-loaded plans are
+    /// validated and assembled identically. The prefix-cost table is
+    /// recomputed here with the same f64 accumulation both paths share —
+    /// bitwise identical regardless of the source format.
+    #[allow(clippy::too_many_arguments)]
+    pub(super) fn from_parts(
+        name: &str,
+        models: Vec<BaseModel>,
+        order: Vec<usize>,
+        eps_pos: Vec<f32>,
+        eps_neg: Vec<f32>,
+        bias: f32,
+        beta: f32,
+        costs: Vec<f32>,
+        declared_features: usize,
+    ) -> Result<CompiledPlan, QwycError> {
+        let t = models.len();
+        if order.len() != t || costs.len() != t {
+            return Err(QwycError::Validate(format!(
+                "plan '{name}': {t} models but {} order entries and {} costs",
+                order.len(),
+                costs.len()
+            )));
+        }
+        let fc = FastClassifier { order, eps_pos, eps_neg, bias, beta };
+        fc.validate()?;
+        let FastClassifier { order, eps_pos, eps_neg, bias, beta } = fc;
+        for (r, model) in models.iter().enumerate() {
             if let BaseModel::Tree(tr) = model {
                 tr.validate().map_err(|e| {
-                    QwycError::Compile(format!("position {r} (model {m}): {}", e.message()))
+                    QwycError::Compile(format!(
+                        "position {r} (model {}): {}",
+                        order[r],
+                        e.message()
+                    ))
                 })?;
             }
-            models.push(model.clone());
-            prefix_cost[r + 1] = prefix_cost[r] + plan.ensemble.costs[m] as f64;
+        }
+        let mut prefix_cost = vec![0f64; t + 1];
+        for (r, &c) in costs.iter().enumerate() {
+            prefix_cost[r + 1] = prefix_cost[r] + c as f64;
         }
         let soa: Vec<Option<TreeSoa>> = models
             .iter()
@@ -77,32 +153,48 @@ impl CompiledPlan {
                 BaseModel::Lattice(_) => None,
             })
             .collect();
-        let min_features = plan.ensemble.feature_count();
+        let mut min_features = 0usize;
+        for m in &models {
+            match m {
+                BaseModel::Lattice(l) => {
+                    for &f in &l.features {
+                        min_features = min_features.max(f + 1);
+                    }
+                }
+                BaseModel::Tree(tr) => {
+                    for n in &tr.nodes {
+                        if !n.is_leaf() {
+                            min_features = min_features.max(n.feature as usize + 1);
+                        }
+                    }
+                }
+            }
+        }
         if min_features == 0 && t > 0 {
             return Err(QwycError::Compile(format!(
-                "plan '{}': cannot infer a feature count from the ensemble",
-                plan.meta.name
+                "plan '{name}': cannot infer a feature count from the ensemble"
             )));
         }
-        let n_features = if plan.meta.n_features > 0 {
-            if plan.meta.n_features < min_features {
+        let n_features = if declared_features > 0 {
+            if declared_features < min_features {
                 return Err(QwycError::Compile(format!(
-                    "plan '{}': declared n_features {} < {} required by the base models",
-                    plan.meta.name, plan.meta.n_features, min_features
+                    "plan '{name}': declared n_features {declared_features} < {min_features} \
+                     required by the base models"
                 )));
             }
-            plan.meta.n_features
+            declared_features
         } else {
             min_features
         };
         Ok(CompiledPlan {
             models,
             soa,
-            eps_pos: plan.fc.eps_pos.clone(),
-            eps_neg: plan.fc.eps_neg.clone(),
-            bias: plan.fc.bias,
-            beta: plan.fc.beta,
-            order: plan.fc.order.clone(),
+            eps_pos,
+            eps_neg,
+            bias,
+            beta,
+            order,
+            costs,
             prefix_cost,
             n_features,
             min_features,
@@ -126,6 +218,18 @@ impl CompiledPlan {
 
     pub fn order(&self) -> &[usize] {
         &self.order
+    }
+
+    /// Base models in evaluation order (`models()[r]` runs at position r).
+    pub fn models(&self) -> &[BaseModel] {
+        &self.models
+    }
+
+    /// Per-position evaluation costs `c_{π(r)}`, exactly as the plan
+    /// declared them (the f64 [`CompiledPlan::prefix_cost`] table is
+    /// derived from these).
+    pub fn position_costs(&self) -> &[f32] {
+        &self.costs
     }
 
     pub fn bias(&self) -> f32 {

@@ -18,9 +18,20 @@
 //! never validate per call. `simulate`, `NativeEngine`, and
 //! `FilterPipeline` all consume the same artifact through the same
 //! sweep (`qwyc::sweep`).
+//!
+//! Plans ship in two interchangeable formats behind one load/save
+//! surface, [`PlanArtifact`]: the self-describing JSON document above,
+//! and the zero-copy binary form `qwyc-plan-bin-v1` (module `binary`)
+//! that stores the *compiled* layout and loads by one read + validated
+//! pointer casts. [`PlanArtifact::load`] auto-detects the format from
+//! the leading magic bytes; both paths funnel through the same
+//! `CompiledPlan::from_parts` validation, so a plan behaves bit-for-bit
+//! identically however it was stored.
 
+mod binary;
 mod compiled;
 
+pub use binary::{BinaryInfo, SectionInfo};
 pub use compiled::CompiledPlan;
 // Re-exported so plan consumers get the crate error type where the
 // artifact lives.
@@ -237,6 +248,209 @@ impl QwycPlan {
     }
 }
 
+// ------------------------------------------------------------ artifact
+
+/// On-disk encoding of a plan artifact.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlanFormat {
+    /// Self-describing `qwyc-plan-v1` JSON: diff-able, hand-inspectable.
+    Json,
+    /// Zero-copy `qwyc-plan-bin-v1`: the compiled layout, loaded by one
+    /// read + validated pointer casts (the serving/`RELOAD` format).
+    Binary,
+}
+
+impl PlanFormat {
+    /// Parse a CLI-style format name (`json` | `bin` | `binary`).
+    pub fn parse(s: &str) -> Result<PlanFormat, QwycError> {
+        match s {
+            "json" => Ok(PlanFormat::Json),
+            "bin" | "binary" => Ok(PlanFormat::Binary),
+            other => {
+                Err(QwycError::Config(format!("unknown plan format '{other}' (json|bin)")))
+            }
+        }
+    }
+}
+
+/// Header-level summary of a plan artifact, for `plan-info`.
+#[derive(Clone, Debug)]
+pub enum ArtifactInfo {
+    /// A `qwyc-plan-v1` JSON document.
+    Json {
+        /// Plan name from the meta block.
+        name: String,
+        /// Number of positions T.
+        t: usize,
+        /// Declared feature width (0 ⇒ inferred at compile).
+        n_features: usize,
+    },
+    /// A `qwyc-plan-bin-v1` binary artifact.
+    Binary(BinaryInfo),
+}
+
+/// The single load/save surface for plan artifacts, format-agnostic.
+///
+/// Construction always compiles (and therefore fully validates) the
+/// plan, so holding a `PlanArtifact` means holding a serving-ready
+/// [`Arc<CompiledPlan>`] plus the metadata needed to re-export either
+/// format. [`PlanArtifact::load`] sniffs the leading magic bytes to pick
+/// the decoder; [`PlanArtifact::save`] writes whichever [`PlanFormat`]
+/// the caller asks for — a binary-loaded artifact can be re-exported as
+/// JSON (the binary form carries π, so the original model order is
+/// recoverable exactly) and vice versa.
+pub struct PlanArtifact {
+    compiled: Arc<CompiledPlan>,
+    meta: PlanMeta,
+    ensemble_name: String,
+    format: PlanFormat,
+    /// Present when the artifact came from JSON or an in-memory plan;
+    /// binary loads reconstruct it on demand in [`PlanArtifact::to_plan`].
+    plan: Option<QwycPlan>,
+}
+
+impl PlanArtifact {
+    /// Wrap (and compile) an in-memory plan.
+    pub fn from_plan(plan: QwycPlan) -> Result<PlanArtifact, QwycError> {
+        let compiled = plan.compile_shared()?;
+        Ok(PlanArtifact {
+            compiled,
+            meta: plan.meta.clone(),
+            ensemble_name: plan.ensemble.name.clone(),
+            format: PlanFormat::Json,
+            plan: Some(plan),
+        })
+    }
+
+    /// Load a plan artifact in either format, auto-detected from the
+    /// file's leading bytes. Either way the result is validated by the
+    /// same `CompiledPlan` checks, so downstream code cannot observe
+    /// which format a plan came from (except via [`PlanArtifact::format`]).
+    pub fn load(path: &std::path::Path) -> Result<PlanArtifact, QwycError> {
+        let buf = binary::AlignedBuf::read_file(path)?;
+        if binary::is_binary(buf.bytes()) {
+            let d = binary::decode(buf.bytes())?;
+            return Ok(PlanArtifact {
+                compiled: Arc::new(d.compiled),
+                meta: d.meta,
+                ensemble_name: d.ensemble_name,
+                format: PlanFormat::Binary,
+                plan: None,
+            });
+        }
+        let text = std::str::from_utf8(buf.bytes())
+            .map_err(|_| QwycError::Schema(format!("parse {path:?}: not UTF-8 JSON")))?;
+        let json = Json::parse(text).map_err(|e| e.context(&format!("parse {path:?}")))?;
+        let plan = QwycPlan::from_json(&json)?;
+        let mut art = PlanArtifact::from_plan(plan)?;
+        art.format = PlanFormat::Json;
+        Ok(art)
+    }
+
+    /// [`PlanArtifact::load`], returning just the serving handle.
+    pub fn load_compiled(path: &std::path::Path) -> Result<Arc<CompiledPlan>, QwycError> {
+        PlanArtifact::load(path).map(|a| a.compiled())
+    }
+
+    /// Save in the requested format (creating parent directories).
+    pub fn save(&self, path: &std::path::Path, format: PlanFormat) -> Result<(), QwycError> {
+        let io = |e: std::io::Error| QwycError::Io(format!("write {path:?}: {e}"));
+        match format {
+            PlanFormat::Json => self.to_plan()?.save(path).map_err(io),
+            PlanFormat::Binary => {
+                let bytes = binary::encode(&self.meta, &self.ensemble_name, &self.compiled);
+                if let Some(parent) = path.parent() {
+                    if !parent.as_os_str().is_empty() {
+                        std::fs::create_dir_all(parent).map_err(io)?;
+                    }
+                }
+                std::fs::write(path, bytes).map_err(io)
+            }
+        }
+    }
+
+    /// The shared serving handle (cheap Arc clone).
+    pub fn compiled(&self) -> Arc<CompiledPlan> {
+        self.compiled.clone()
+    }
+
+    /// Provenance/deployment metadata.
+    pub fn meta(&self) -> &PlanMeta {
+        &self.meta
+    }
+
+    /// Plan name (meta).
+    pub fn name(&self) -> &str {
+        &self.meta.name
+    }
+
+    /// Name of the underlying ensemble.
+    pub fn ensemble_name(&self) -> &str {
+        &self.ensemble_name
+    }
+
+    /// The format this artifact was loaded from ([`PlanFormat::Json`]
+    /// for in-memory constructions).
+    pub fn format(&self) -> PlanFormat {
+        self.format
+    }
+
+    /// The uncompiled [`QwycPlan`]. JSON-backed artifacts return a clone
+    /// of the loaded plan; binary-backed artifacts reconstruct it
+    /// exactly by inverse-permuting the compiled (position-major) models
+    /// and costs back to original model indices through π.
+    pub fn to_plan(&self) -> Result<QwycPlan, QwycError> {
+        if let Some(p) = &self.plan {
+            return Ok(p.clone());
+        }
+        let cp = &self.compiled;
+        let t = cp.t();
+        let mut models: Vec<Option<crate::ensemble::BaseModel>> = vec![None; t];
+        let mut costs = vec![0f32; t];
+        for (r, &m) in cp.order().iter().enumerate() {
+            models[m] = Some(cp.models()[r].clone());
+            costs[m] = cp.position_costs()[r];
+        }
+        let models = models
+            .into_iter()
+            .map(|m| m.expect("compiled order is a validated permutation"))
+            .collect();
+        let ensemble = Ensemble {
+            name: self.ensemble_name.clone(),
+            models,
+            bias: cp.bias(),
+            beta: cp.beta(),
+            costs,
+        };
+        let fc = FastClassifier {
+            order: cp.order().to_vec(),
+            eps_pos: cp.eps_pos().to_vec(),
+            eps_neg: cp.eps_neg().to_vec(),
+            bias: cp.bias(),
+            beta: cp.beta(),
+        };
+        QwycPlan::new(ensemble, fc, self.meta.clone())
+    }
+
+    /// Cheap header-level summary of an artifact file, without
+    /// compiling it (ops debugging; the `plan-info` subcommand).
+    pub fn info(path: &std::path::Path) -> Result<ArtifactInfo, QwycError> {
+        let buf = binary::AlignedBuf::read_file(path)?;
+        if binary::is_binary(buf.bytes()) {
+            return Ok(ArtifactInfo::Binary(binary::inspect(buf.bytes())?));
+        }
+        let text = std::str::from_utf8(buf.bytes())
+            .map_err(|_| QwycError::Schema(format!("parse {path:?}: not UTF-8 JSON")))?;
+        let json = Json::parse(text).map_err(|e| e.context(&format!("parse {path:?}")))?;
+        let plan = QwycPlan::from_json(&json)?;
+        Ok(ArtifactInfo::Json {
+            name: plan.meta.name.clone(),
+            t: plan.fc.t(),
+            n_features: plan.meta.n_features,
+        })
+    }
+}
+
 // ---------------------------------------------------------------- slot
 
 /// Shared, atomically swappable handle to the *current* serving plan —
@@ -450,6 +664,58 @@ mod tests {
         assert_eq!(cp.prefix_cost(1), 5.0);
         assert_eq!(cp.prefix_cost(2), 8.0);
         assert_eq!(cp.total_cost(), 8.0);
+    }
+
+    #[test]
+    fn artifact_roundtrips_binary_and_json_with_lattices() {
+        let dir = std::env::temp_dir().join(format!("qwyc-artifact-rt-{}", std::process::id()));
+        let bin = dir.join("plan.bin");
+        let json = dir.join("plan.json");
+        let art = PlanArtifact::from_plan(toy_plan()).unwrap();
+        art.save(&bin, PlanFormat::Binary).unwrap();
+        art.save(&json, PlanFormat::Json).unwrap();
+        let from_bin = PlanArtifact::load(&bin).unwrap();
+        let from_json = PlanArtifact::load(&json).unwrap();
+        assert_eq!(from_bin.format(), PlanFormat::Binary);
+        assert_eq!(from_json.format(), PlanFormat::Json);
+        let (a, b) = (from_bin.compiled(), from_json.compiled());
+        assert_eq!(a.t(), b.t());
+        assert_eq!(a.order(), b.order());
+        assert_eq!(a.n_features(), b.n_features());
+        assert_eq!(a.bias().to_bits(), b.bias().to_bits());
+        assert_eq!(a.beta().to_bits(), b.beta().to_bits());
+        let bits = |xs: &[f32]| xs.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(a.eps_pos()), bits(b.eps_pos()));
+        assert_eq!(bits(a.eps_neg()), bits(b.eps_neg()));
+        assert_eq!(a.total_cost().to_bits(), b.total_cost().to_bits());
+        for x in [[0.1f32, 0.9], [0.9, 0.1], [0.5, 0.5]] {
+            let (ra, rb) = (a.eval_single(&x), b.eval_single(&x));
+            assert_eq!(ra.score.to_bits(), rb.score.to_bits());
+            assert_eq!(ra.models_evaluated, rb.models_evaluated);
+        }
+        // Binary-backed artifacts reconstruct the uncompiled plan
+        // exactly (inverse permutation through π).
+        let back = from_bin.to_plan().unwrap();
+        let orig = toy_plan();
+        assert_eq!(back.ensemble.name, orig.ensemble.name);
+        assert_eq!(back.fc.order, orig.fc.order);
+        assert_eq!(bits(&back.ensemble.costs), bits(&orig.ensemble.costs));
+        assert_eq!(back.meta.name, orig.meta.name);
+        assert_eq!(back.meta.alpha, orig.meta.alpha);
+        // ... and can re-export as JSON that loads identically.
+        let json2 = dir.join("plan2.json");
+        from_bin.save(&json2, PlanFormat::Json).unwrap();
+        let again = PlanArtifact::load(&json2).unwrap();
+        assert_eq!(bits(again.compiled().eps_neg()), bits(a.eps_neg()));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn plan_format_parses_cli_names() {
+        assert_eq!(PlanFormat::parse("json").unwrap(), PlanFormat::Json);
+        assert_eq!(PlanFormat::parse("bin").unwrap(), PlanFormat::Binary);
+        assert_eq!(PlanFormat::parse("binary").unwrap(), PlanFormat::Binary);
+        assert_eq!(PlanFormat::parse("yaml").unwrap_err().stage(), "config");
     }
 
     #[test]

@@ -68,6 +68,24 @@ pub struct SweepOutcome {
 /// (`out.len() == active.len()`). It is called once per position in π
 /// order, with `active` shrinking as examples retire, and never called
 /// again once the active list empties.
+///
+/// The per-position body is branchless. Running scores live in `g`,
+/// *compacted in parallel with* the active list (`g[j]` belongs to
+/// example `active[j]`), so the accumulate loop is a linear
+/// `g[j] += scores[j]` with a keep-mask side output instead of a
+/// gather/scatter with a per-example `if exited`. A second linear pass
+/// unconditionally records an as-if-exited outcome for every active
+/// example — exiters keep theirs, survivors overwrite at a later
+/// position or in the final β pass — and stream-compacts `active`/`g` by
+/// the mask in one go. No branch in either loop depends on the scores,
+/// so mixed exit patterns cost the same as uniform ones and both loops
+/// auto-vectorize.
+///
+/// The accumulation itself is untouched: per example, f32 adds in π
+/// order from `bias`, identical to the scalar path and to the previous
+/// branchy sweep (pinned by the `reference_sweep` tests below; the keep
+/// mask is `!((g > ε⁺) | (g < ε⁻))` — both compares are false for a NaN
+/// running score, so NaN keeps an example active exactly as before).
 pub fn sweep_block<S>(
     params: &SweepParams<'_>,
     nb: usize,
@@ -84,36 +102,45 @@ where
     ];
     let mut g = vec![params.bias; nb];
     let mut scores = vec![0f32; nb];
+    let mut keep = vec![0u8; nb];
     let mut active: Vec<u32> = (0..nb as u32).collect();
 
     for r in 0..t {
-        let scores = &mut scores[..active.len()];
-        score_position(r, &active, scores);
-        let (ep, en) = (params.eps_pos[r], params.eps_neg[r]);
-        let mut w = 0usize;
-        for j in 0..active.len() {
-            let i = active[j] as usize;
-            let gi = g[i] + scores[j];
-            g[i] = gi;
-            if gi > ep || gi < en {
-                let stop = (r + 1) as u32;
-                out[i] = SweepOutcome { positive: gi > ep, score: gi, stop, early: true };
-            } else {
-                active[w] = i as u32;
-                w += 1;
-            }
-        }
-        active.truncate(w);
-        if active.is_empty() {
+        let m = active.len();
+        if m == 0 {
             break;
         }
+        score_position(r, &active[..m], &mut scores[..m]);
+        let (ep, en) = (params.eps_pos[r], params.eps_neg[r]);
+        // Pass 1: accumulate and build the keep mask. Linear, branchless.
+        for j in 0..m {
+            let gi = g[j] + scores[j];
+            g[j] = gi;
+            keep[j] = u8::from(!((gi > ep) | (gi < en)));
+        }
+        // Pass 2: record outcomes and stream-compact active/g by the
+        // mask. Writing `out` for *every* active example is what removes
+        // the branch: survivors' records are overwritten later, exiters'
+        // last write (stop = r+1) is final.
+        let stop = (r + 1) as u32;
+        let mut w = 0usize;
+        for j in 0..m {
+            let i = active[j];
+            let gi = g[j];
+            out[i as usize] =
+                SweepOutcome { positive: gi > ep, score: gi, stop, early: true };
+            active[w] = i;
+            g[w] = gi;
+            w += keep[j] as usize;
+        }
+        active.truncate(w);
     }
     // Survivors of every position: full score known, decide by β.
-    for &i in &active {
-        let i = i as usize;
-        out[i] = SweepOutcome {
-            positive: g[i] >= params.beta,
-            score: g[i],
+    for (j, &i) in active.iter().enumerate() {
+        let gi = g[j];
+        out[i as usize] = SweepOutcome {
+            positive: gi >= params.beta,
+            score: gi,
             stop: t as u32,
             early: false,
         };
@@ -213,5 +240,138 @@ mod tests {
             |_: usize, _: &[u32], _: &mut [f32]| {}
         });
         assert!(none.is_empty());
+    }
+
+    /// The branchy per-example sweep this module used before the
+    /// branchless rework — kept verbatim as the semantic reference the
+    /// equivalence tests pin the production kernel against.
+    fn reference_sweep<S>(
+        params: &SweepParams<'_>,
+        nb: usize,
+        mut score_position: S,
+    ) -> Vec<SweepOutcome>
+    where
+        S: FnMut(usize, &[u32], &mut [f32]),
+    {
+        let t = params.t();
+        let mut out = vec![
+            SweepOutcome { positive: false, score: 0.0, stop: t as u32, early: false };
+            nb
+        ];
+        let mut g = vec![params.bias; nb];
+        let mut scores = vec![0f32; nb];
+        let mut active: Vec<u32> = (0..nb as u32).collect();
+        for r in 0..t {
+            if active.is_empty() {
+                break;
+            }
+            let scores = &mut scores[..active.len()];
+            score_position(r, &active, scores);
+            let (ep, en) = (params.eps_pos[r], params.eps_neg[r]);
+            let mut w = 0usize;
+            for j in 0..active.len() {
+                let i = active[j] as usize;
+                let gi = g[i] + scores[j];
+                g[i] = gi;
+                if gi > ep || gi < en {
+                    let stop = (r + 1) as u32;
+                    out[i] = SweepOutcome { positive: gi > ep, score: gi, stop, early: true };
+                } else {
+                    active[w] = i as u32;
+                    w += 1;
+                }
+            }
+            active.truncate(w);
+        }
+        for &i in &active {
+            let i = i as usize;
+            out[i] = SweepOutcome {
+                positive: g[i] >= params.beta,
+                score: g[i],
+                stop: t as u32,
+                early: false,
+            };
+        }
+        out
+    }
+
+    fn assert_same(a: &[SweepOutcome], b: &[SweepOutcome]) {
+        assert_eq!(a.len(), b.len());
+        for (k, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+            assert_eq!(x.positive, y.positive, "example {k}: positive");
+            assert_eq!(x.stop, y.stop, "example {k}: stop");
+            assert_eq!(x.early, y.early, "example {k}: early");
+            assert_eq!(x.score.to_bits(), y.score.to_bits(), "example {k}: score bits");
+        }
+    }
+
+    /// Deterministic pseudo-random position scores (same for both sweeps).
+    fn synth_score(r: usize, i: usize) -> f32 {
+        let h = (r as u32).wrapping_mul(2654435761).wrapping_add(i as u32).wrapping_mul(40503);
+        ((h >> 16) as f32 / 65536.0) - 0.5
+    }
+
+    fn synth_scorer(lo: usize) -> impl FnMut(usize, &[u32], &mut [f32]) {
+        move |r: usize, active: &[u32], out: &mut [f32]| {
+            for (slot, &i) in out.iter_mut().zip(active.iter()) {
+                *slot = synth_score(r, lo + i as usize);
+            }
+        }
+    }
+
+    /// Branchless kernel vs the reference on adversarial exit patterns:
+    /// every example exits at position 0, nobody ever exits, and
+    /// alternating thresholds that retire roughly half the actives at
+    /// every position.
+    #[test]
+    fn branchless_sweep_matches_reference_on_adversarial_patterns() {
+        let t = 13;
+        let nb = 97; // not a multiple of any lane width
+        let all_exit_pos: Vec<f32> = vec![-10.0; t]; // g > -10 everywhere ⇒ exit at 0
+        let all_exit_neg: Vec<f32> = vec![f32::NEG_INFINITY; t];
+        let none_pos: Vec<f32> = vec![f32::INFINITY; t];
+        let none_neg: Vec<f32> = vec![f32::NEG_INFINITY; t];
+        let alt_pos: Vec<f32> =
+            (0..t).map(|r| if r % 2 == 0 { 0.05 } else { f32::INFINITY }).collect();
+        let alt_neg: Vec<f32> =
+            (0..t).map(|r| if r % 2 == 1 { -0.05 } else { f32::NEG_INFINITY }).collect();
+        for (name, ep, en) in [
+            ("all-exit-at-0", &all_exit_pos, &all_exit_neg),
+            ("none-exit", &none_pos, &none_neg),
+            ("alternating", &alt_pos, &alt_neg),
+        ] {
+            let params = SweepParams { eps_pos: ep, eps_neg: en, bias: 0.125, beta: 0.0 };
+            let got = sweep_block(&params, nb, synth_scorer(0));
+            let want = reference_sweep(&params, nb, synth_scorer(0));
+            assert_same(&got, &want);
+            // Sanity on the pattern itself.
+            match name {
+                "all-exit-at-0" => assert!(got.iter().all(|o| o.early && o.stop == 1)),
+                "none-exit" => assert!(got.iter().all(|o| !o.early && o.stop == t as u32)),
+                _ => assert!(got.iter().any(|o| o.early) && got.iter().any(|o| !o.early)),
+            }
+        }
+    }
+
+    /// A NaN running score compares false against both thresholds, so the
+    /// example stays active to the end and survives with `positive =
+    /// false` (NaN ≥ β is false): pin the branchless keep mask against
+    /// the reference's `if gi > ep || gi < en` on that path.
+    #[test]
+    fn branchless_sweep_matches_reference_on_nan_scores() {
+        let params = SweepParams {
+            eps_pos: &[1.0, 1.0],
+            eps_neg: &[-1.0, -1.0],
+            bias: 0.0,
+            beta: 0.0,
+        };
+        let nan_scorer = |r: usize, active: &[u32], out: &mut [f32]| {
+            for (slot, &i) in out.iter_mut().zip(active.iter()) {
+                *slot = if (i as usize + r) % 2 == 0 { f32::NAN } else { 0.5 };
+            }
+        };
+        let got = sweep_block(&params, 8, nan_scorer);
+        let want = reference_sweep(&params, 8, nan_scorer);
+        assert_same(&got, &want);
     }
 }

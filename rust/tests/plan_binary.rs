@@ -1,0 +1,199 @@
+//! The zero-copy binary plan artifact against the JSON path: bitwise
+//! round-trip equivalence (same sweep outcomes, same bits, at 1 and N
+//! threads) on a real GBT plan, plus loud rejection of corrupted,
+//! truncated, and wrong-format files — every failure a staged `Schema`
+//! error naming the bad section.
+
+use qwyc::data::synth::{generate, Which};
+use qwyc::error::QwycError;
+use qwyc::gbt::{train, GbtParams};
+use qwyc::plan::{PlanArtifact, PlanFormat, QwycPlan};
+use qwyc::qwyc::{optimize_order, QwycConfig};
+use qwyc::util::pool::Pool;
+use std::path::PathBuf;
+
+/// A small but real GBT plan (trees exercise the SoA walk paths) plus
+/// its held-out feature matrix.
+fn gbt_plan() -> (QwycPlan, qwyc::data::Dataset) {
+    let (tr, te) = generate(Which::AdultLike, 1234, 0.02);
+    let (ens, _) = train(&tr, &GbtParams { n_trees: 12, max_depth: 3, ..Default::default() });
+    let sm = ens.score_matrix(&tr);
+    let fc = optimize_order(&sm, &QwycConfig { alpha: 0.01, ..Default::default() });
+    let d = tr.d;
+    let plan =
+        QwycPlan::bundle_with_width(ens, fc, "bin-roundtrip", 0.01, d).expect("bundle plan");
+    (plan, te)
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("qwyc-plan-binary-{}-{name}", std::process::id()))
+}
+
+/// Save the same plan as JSON and as binary, load both through
+/// `PlanArtifact`, and demand bitwise-identical sweep outcomes at one
+/// and four threads — the artifact format must be invisible to serving.
+#[test]
+fn binary_and_json_artifacts_sweep_bitwise_identically() {
+    let (plan, te) = gbt_plan();
+    let dir = tmp("sweep");
+    std::fs::create_dir_all(&dir).unwrap();
+    let json_path = dir.join("plan.json");
+    let bin_path = dir.join("plan.bin");
+    let art = PlanArtifact::from_plan(plan).expect("compile");
+    art.save(&json_path, PlanFormat::Json).expect("save json");
+    art.save(&bin_path, PlanFormat::Binary).expect("save bin");
+
+    let from_json = PlanArtifact::load(&json_path).expect("load json");
+    let from_bin = PlanArtifact::load(&bin_path).expect("load bin");
+    assert_eq!(from_json.format(), PlanFormat::Json);
+    assert_eq!(from_bin.format(), PlanFormat::Binary);
+
+    let (cj, cb) = (from_json.compiled(), from_bin.compiled());
+    let (n, d) = (te.n, te.d);
+    for threads in [1, 4] {
+        let pool = Pool::new(threads);
+        let a = cj.sweep_features(&te.x, n, d, 64, &pool);
+        let b = cb.sweep_features(&te.x, n, d, 64, &pool);
+        assert_eq!(a.len(), b.len());
+        for (i, (oa, ob)) in a.iter().zip(b.iter()).enumerate() {
+            assert_eq!(oa.positive, ob.positive, "example {i} ({threads} threads)");
+            assert_eq!(oa.stop, ob.stop, "example {i} ({threads} threads)");
+            assert_eq!(oa.early, ob.early, "example {i} ({threads} threads)");
+            assert_eq!(
+                oa.score.to_bits(),
+                ob.score.to_bits(),
+                "example {i} ({threads} threads): score bits diverge"
+            );
+        }
+    }
+    // The single-example path agrees too (first 50 rows is plenty).
+    for i in 0..50.min(n) {
+        let (a, b) = (cj.eval_single(te.row(i)), cb.eval_single(te.row(i)));
+        assert_eq!(a.positive, b.positive, "eval_single {i}");
+        assert_eq!(a.models_evaluated, b.models_evaluated, "eval_single {i}");
+        assert_eq!(a.score.to_bits(), b.score.to_bits(), "eval_single {i}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A binary artifact reconstructs the uncompiled plan exactly: JSON
+/// re-export of a binary load is accepted by the strict JSON loader and
+/// compiles to the same thresholds/order.
+#[test]
+fn binary_artifact_reconstructs_plan_for_json_reexport() {
+    let (plan, _) = gbt_plan();
+    let dir = tmp("reexport");
+    std::fs::create_dir_all(&dir).unwrap();
+    let bin_path = dir.join("plan.bin");
+    let json_path = dir.join("reexport.json");
+    PlanArtifact::from_plan(plan.clone())
+        .expect("compile")
+        .save(&bin_path, PlanFormat::Binary)
+        .expect("save bin");
+
+    let from_bin = PlanArtifact::load(&bin_path).expect("load bin");
+    from_bin.save(&json_path, PlanFormat::Json).expect("reexport json");
+    let back = PlanArtifact::load(&json_path).expect("reload json");
+    assert_eq!(back.name(), plan.meta.name);
+    let (a, b) = (back.compiled(), from_bin.compiled());
+    assert_eq!(a.order(), b.order());
+    assert_eq!(a.bias().to_bits(), b.bias().to_bits());
+    for r in 0..a.t() {
+        assert_eq!(a.eps_pos()[r].to_bits(), b.eps_pos()[r].to_bits(), "eps_pos[{r}]");
+        assert_eq!(a.eps_neg()[r].to_bits(), b.eps_neg()[r].to_bits(), "eps_neg[{r}]");
+        assert_eq!(a.prefix_cost(r).to_bits(), b.prefix_cost(r).to_bits(), "prefix_cost[{r}]");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Write a valid binary plan and return its bytes for corruption tests.
+fn valid_bytes() -> Vec<u8> {
+    let (plan, _) = gbt_plan();
+    let dir = tmp("bytes");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join("plan.bin");
+    PlanArtifact::from_plan(plan).unwrap().save(&p, PlanFormat::Binary).unwrap();
+    let bytes = std::fs::read(&p).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+    bytes
+}
+
+/// Load `bytes` through the public artifact API and return the error.
+fn load_err(bytes: &[u8], name: &str) -> QwycError {
+    let dir = tmp(name);
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join("bad.bin");
+    std::fs::write(&p, bytes).unwrap();
+    let err = PlanArtifact::load(&p).expect_err("corrupted artifact must not load");
+    std::fs::remove_dir_all(&dir).ok();
+    err
+}
+
+#[test]
+fn corrupted_binary_artifacts_are_rejected_with_staged_schema_errors() {
+    let good = valid_bytes();
+    // Sanity: the pristine bytes do load.
+    {
+        let dir = tmp("good");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("good.bin");
+        std::fs::write(&p, &good).unwrap();
+        PlanArtifact::load(&p).expect("pristine bytes load");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    // Wrong magic, but still not JSON: rejected as a schema error that
+    // names the format.
+    let mut bad = good.clone();
+    bad[0] = b'X';
+    let e = load_err(&bad, "magic");
+    assert_eq!(e.stage(), "schema", "{e}");
+    assert!(e.message().contains("qwyc-plan-bin-v1") || e.message().contains("parse"), "{e}");
+
+    // Unsupported version.
+    let mut bad = good.clone();
+    bad[8..12].copy_from_slice(&99u32.to_ne_bytes());
+    let e = load_err(&bad, "version");
+    assert_eq!(e.stage(), "schema", "{e}");
+    assert!(e.message().contains("unsupported version 99"), "{e}");
+
+    // Truncation at several depths: mid-header, mid-table, mid-payload.
+    for (keep, name) in [(32usize, "hdr"), (100, "table"), (good.len() - 7, "payload")] {
+        let e = load_err(&good[..keep], name);
+        assert_eq!(e.stage(), "schema", "truncated to {keep}: {e}");
+    }
+
+    // A flipped section kind is named in the message.
+    let hdr_len = 64usize;
+    let mut bad = good.clone();
+    bad[hdr_len..hdr_len + 4].copy_from_slice(&7u32.to_ne_bytes());
+    let e = load_err(&bad, "kind");
+    assert_eq!(e.stage(), "schema", "{e}");
+    assert!(e.message().contains("section 0 (scalars)"), "{e}");
+
+    // A section length running past end-of-file is named too. Entry 7
+    // (model_data) starts at hdr + 7*24; its `len` field is at +16.
+    let len_off = hdr_len + 7 * 24 + 16;
+    let mut bad = good.clone();
+    bad[len_off..len_off + 8].copy_from_slice(&(u64::MAX / 2).to_ne_bytes());
+    let e = load_err(&bad, "len");
+    assert_eq!(e.stage(), "schema", "{e}");
+    assert!(e.message().contains("model_data"), "{e}");
+
+    // Appending junk makes the header's file_len disagree.
+    let mut bad = good.clone();
+    bad.extend_from_slice(&[0u8; 16]);
+    let e = load_err(&bad, "padded");
+    assert_eq!(e.stage(), "schema", "{e}");
+    assert!(e.message().contains("truncated or padded"), "{e}");
+}
+
+/// Files that are neither binary plans nor valid JSON fail as schema
+/// errors through the same single entry point.
+#[test]
+fn non_plan_files_fail_loudly() {
+    let e = load_err(b"not a plan at all", "garbage");
+    assert_eq!(e.stage(), "schema", "{e}");
+    let e = load_err(&[0xFFu8, 0xFE, 0x00, 0x01, 0x02], "binary-garbage");
+    assert_eq!(e.stage(), "schema", "{e}");
+}

@@ -7,7 +7,7 @@ use qwyc::coordinator::{BatchPolicy, Client, Reply, Server, ServerConfig};
 use qwyc::data::synth::{generate, Which};
 use qwyc::error::QwycError;
 use qwyc::lattice::{train_joint, LatticeParams};
-use qwyc::plan::QwycPlan;
+use qwyc::plan::{PlanArtifact, PlanFormat, QwycPlan};
 use qwyc::qwyc::{optimize_order, QwycConfig};
 use qwyc::runtime::engine::NativeEngine;
 use qwyc::util::pool::Pool;
@@ -229,8 +229,31 @@ fn reload_swaps_plan_without_erroring_inflight_requests() {
     let err = ctl.reload("/nonexistent/plan.json").expect("reload io");
     assert!(err.starts_with("ERR - reload:"), "{err}");
     assert!(client.eval(te.row(0)).is_ok(), "server died after failed reload");
+
+    // Reload once more from the zero-copy binary form — the server
+    // sniffs the format from the magic bytes, so ops can switch artifact
+    // formats without touching the protocol.
+    let mut plan_c = QwycPlan::bundle(ens.clone(), fc.clone(), "plan-c", 0.01).expect("bundle c");
+    plan_c.meta.n_features = d;
+    let plan_c_path = std::env::temp_dir().join("qwyc_e2e_reload_plan_c.bin");
+    PlanArtifact::from_plan(plan_c)
+        .expect("compile plan-c")
+        .save(&plan_c_path, PlanFormat::Binary)
+        .expect("save plan-c");
+    let reply = ctl.reload(plan_c_path.to_str().unwrap()).expect("reload bin");
+    assert!(
+        reply.starts_with("RELOADED plan-c gen=2"),
+        "unexpected binary reload reply: {reply}"
+    );
+    for i in 0..20 {
+        let r = client.eval(te.row(i)).expect("post-binary-reload eval");
+        let want = fc.eval_single(&ens, te.row(i));
+        assert_eq!(r.positive, want.positive, "post-binary-reload {i}");
+        assert_eq!(r.models as usize, want.models_evaluated, "post-binary-reload {i}");
+    }
     server.stop();
     std::fs::remove_file(&plan_b_path).ok();
+    std::fs::remove_file(&plan_c_path).ok();
 }
 
 /// Generic-factory servers (PJRT/custom engines) have no plan slot and
