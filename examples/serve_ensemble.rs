@@ -71,6 +71,7 @@ fn main() {
         shards: 2,
         queue_cap: 4096,
         policy: BatchPolicy { max_batch: 256, max_wait: Duration::from_micros(500) },
+        default_deadline: None,
     };
     for (policy_name, fc_used) in [
         ("qwyc", fc.clone()),

@@ -338,6 +338,7 @@ fn main() {
                     max_batch: 64,
                     max_wait: Duration::from_micros(200),
                 },
+                default_deadline: None,
             };
             let server = Server::start_with_plan("127.0.0.1:0", compiled.clone(), config)
                 .expect("bench server");
@@ -385,6 +386,30 @@ fn main() {
             report.push(&rs);
         }
         println!();
+    }
+
+    // ---- failpoint disabled-path overhead ----------------------------
+    // Chaos hooks sit on the serving batch loop; with QWYC_FAILPOINTS
+    // unset they must cost one relaxed atomic load and nothing else.
+    // Paired against a bare counter bump so the delta IS the hook cost.
+    {
+        use qwyc::util::failpoints;
+        let mut acc = 0u64;
+        let rr = bench_auto("failpoint baseline (counter bump)", budget, runs, || {
+            acc = acc.wrapping_add(1);
+            black_box(acc);
+        });
+        println!("{}", rr.report());
+        let rb = bench_auto("failpoint disabled check (enabled() gate)", budget, runs, || {
+            if failpoints::enabled() {
+                black_box(failpoints::fire("bench_nop"));
+            }
+            acc = acc.wrapping_add(1);
+            black_box(acc);
+        });
+        println!("{}", rb.report());
+        println!("  -> disabled-failpoint overhead: {:.2} ns/check\n", rb.mean_ns - rr.mean_ns);
+        report.push_pair(&rr, &rb);
     }
 
     // ---- PJRT stage (needs --features pjrt and artifacts) ------------

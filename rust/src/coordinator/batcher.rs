@@ -216,13 +216,32 @@ impl<T> BatchQueue<T> {
                 break;
             }
         }
-        // Space opened up: wake producers blocked on a bounded queue.
-        let bounded = st.cap > 0;
+        // Space opened up: wake producers blocked on a bounded queue and
+        // drain-waiters parked in `wait_empty` (which also rides the
+        // space condvar — "space opened" and "possibly empty now" are
+        // the same event from the consumer side).
         drop(st);
-        if bounded {
-            self.cv_space.notify_all();
-        }
+        self.cv_space.notify_all();
         Some(batch)
+    }
+
+    /// Block until the queue holds no queued items or `timeout` expires;
+    /// returns whether the queue was observed empty. Items already handed
+    /// to a consumer batch no longer count as queued — the serving DRAIN
+    /// path relies on per-request replies for in-flight work and uses
+    /// this only to wait out the backlog.
+    pub fn wait_empty(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.state.lock().unwrap();
+        while !st.items.is_empty() {
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (guard, _) = self.cv_space.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
+        true
     }
 }
 
@@ -357,6 +376,30 @@ mod tests {
         std::thread::sleep(Duration::from_millis(10));
         q.close();
         assert_eq!(consumer.join().unwrap(), None);
+        drop(tx);
+    }
+
+    #[test]
+    fn wait_empty_observes_a_consumer_draining_the_backlog() {
+        let (tx, q) = batch_channel();
+        for i in 0..5 {
+            tx.send(i).unwrap();
+        }
+        // Not empty and nobody consuming: the bounded wait times out.
+        assert!(!q.wait_empty(Duration::from_millis(5)));
+        let q2 = q.clone();
+        let consumer = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            let policy = BatchPolicy { max_batch: 100, max_wait: Duration::from_millis(1) };
+            q2.next_batch(policy)
+        });
+        // The drain waiter is woken by the consumer taking the batch —
+        // even on an UNBOUNDED queue (the DRAIN path depends on this).
+        assert!(q.wait_empty(Duration::from_secs(5)));
+        assert!(q.is_empty());
+        assert_eq!(consumer.join().unwrap().unwrap().len(), 5);
+        // An already-empty queue reports success immediately.
+        assert!(q.wait_empty(Duration::from_millis(1)));
         drop(tx);
     }
 

@@ -10,6 +10,7 @@
 //! dispatcher balanced load.
 
 use crate::util::stats::LatencyHist;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -54,7 +55,7 @@ impl Inner {
         }
     }
 
-    fn to_snapshot(&self, elapsed_s: f64, shard_requests: Vec<u64>) -> Snapshot {
+    fn to_snapshot(&self, elapsed_s: f64, shard_requests: Vec<u64>, ops: OpsSnapshot) -> Snapshot {
         let n = self.requests.max(1) as f64;
         Snapshot {
             requests: self.requests,
@@ -71,8 +72,52 @@ impl Inner {
             throughput_rps: self.requests as f64 / elapsed_s.max(1e-9),
             stop_counts: self.stop_counts.clone(),
             shard_requests,
+            ops,
         }
     }
+}
+
+/// Monotonic counters for the serving runtime's failure paths: load shed
+/// at admission (`busy_shed`), deadline expiries (`timeouts`), shard
+/// supervisor restarts (`shard_restarts`), and reload outcomes. Lock-free
+/// atomics so the admission path and supervisor never contend with the
+/// latency sinks.
+#[derive(Debug, Default)]
+pub struct OpsCounters {
+    /// Requests refused with `BUSY` because every shard queue was full.
+    pub busy_shed: AtomicU64,
+    /// Requests shed with `TIMEOUT` because their deadline expired while
+    /// queued.
+    pub timeouts: AtomicU64,
+    /// Shard worker restarts after a caught panic (engine rebuilds).
+    pub shard_restarts: AtomicU64,
+    /// `RELOAD` commands that passed canary validation and swapped.
+    pub reload_ok: AtomicU64,
+    /// `RELOAD` commands rejected (load failure or canary mismatch).
+    pub reload_rejected: AtomicU64,
+}
+
+impl OpsCounters {
+    /// Point-in-time copy of every counter.
+    pub fn snapshot(&self) -> OpsSnapshot {
+        OpsSnapshot {
+            busy_shed: self.busy_shed.load(Ordering::Relaxed),
+            timeouts: self.timeouts.load(Ordering::Relaxed),
+            shard_restarts: self.shard_restarts.load(Ordering::Relaxed),
+            reload_ok: self.reload_ok.load(Ordering::Relaxed),
+            reload_rejected: self.reload_rejected.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time values of [`OpsCounters`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct OpsSnapshot {
+    pub busy_shed: u64,
+    pub timeouts: u64,
+    pub shard_restarts: u64,
+    pub reload_ok: u64,
+    pub reload_rejected: u64,
 }
 
 /// Thread-safe metrics sink.
@@ -113,7 +158,7 @@ impl Metrics {
 
     pub fn snapshot(&self) -> Snapshot {
         let m = self.inner.lock().unwrap();
-        m.to_snapshot(self.started.elapsed().as_secs_f64(), Vec::new())
+        m.to_snapshot(self.started.elapsed().as_secs_f64(), Vec::new(), OpsSnapshot::default())
     }
 }
 
@@ -124,6 +169,7 @@ impl Metrics {
 /// records the dispatcher's per-shard balance.
 pub struct ShardedMetrics {
     shards: Vec<Arc<Metrics>>,
+    ops: Arc<OpsCounters>,
     started: Instant,
 }
 
@@ -131,6 +177,7 @@ impl ShardedMetrics {
     pub fn new(n_shards: usize) -> ShardedMetrics {
         ShardedMetrics {
             shards: (0..n_shards.max(1)).map(|_| Arc::new(Metrics::new())).collect(),
+            ops: Arc::new(OpsCounters::default()),
             started: Instant::now(),
         }
     }
@@ -138,6 +185,12 @@ impl ShardedMetrics {
     /// The sink for one shard (handed to that shard's worker thread).
     pub fn shard(&self, i: usize) -> Arc<Metrics> {
         self.shards[i].clone()
+    }
+
+    /// The server-wide operational counters (shared by the admission
+    /// path, the shard supervisors, and the reload handler).
+    pub fn ops(&self) -> &Arc<OpsCounters> {
+        &self.ops
     }
 
     /// Aggregate snapshot across every shard.
@@ -149,7 +202,7 @@ impl ShardedMetrics {
             shard_requests.push(inner.requests);
             agg.merge(&inner);
         }
-        agg.to_snapshot(self.started.elapsed().as_secs_f64(), shard_requests)
+        agg.to_snapshot(self.started.elapsed().as_secs_f64(), shard_requests, self.ops.snapshot())
     }
 
     /// Per-shard snapshots (same order as the shard workers).
@@ -192,6 +245,9 @@ pub struct Snapshot {
     /// Requests handled per shard (aggregated snapshots only; empty for
     /// a single [`Metrics`] sink).
     pub shard_requests: Vec<u64>,
+    /// Operational counters (all zero for a single [`Metrics`] sink,
+    /// which has no admission/supervision machinery).
+    pub ops: OpsSnapshot,
 }
 
 impl Snapshot {
@@ -234,10 +290,12 @@ impl Snapshot {
         } else {
             String::new()
         };
+        let o = &self.ops;
         format!(
             "requests={} throughput={:.0}/s latency(mean/p50/p99)={:.1}/{:.1}/{:.1}us \
              mean_models={:.2} early={:.1}% exit_pos(p50/p99)={}/{} exit_hist=[{hist}] \
-             mean_batch={:.1}{shards}",
+             mean_batch={:.1} busy_shed={} timeouts={} shard_restarts={} reload_ok={} \
+             reload_rejected={}{shards}",
             self.requests,
             self.throughput_rps,
             self.mean_latency_us,
@@ -247,7 +305,12 @@ impl Snapshot {
             self.early_frac * 100.0,
             self.stop_percentile(50.0),
             self.stop_percentile(99.0),
-            self.mean_batch
+            self.mean_batch,
+            o.busy_shed,
+            o.timeouts,
+            o.shard_restarts,
+            o.reload_ok,
+            o.reload_rejected
         )
     }
 }
@@ -327,6 +390,39 @@ mod tests {
         assert_eq!(per[2].requests, 0);
         assert!(per[0].shard_requests.is_empty());
         assert!(!per[0].report().contains("shard_requests"), "{}", per[0].report());
+    }
+
+    #[test]
+    fn ops_counters_surface_in_the_aggregated_report() {
+        let sm = ShardedMetrics::new(2);
+        sm.ops().busy_shed.fetch_add(3, Ordering::Relaxed);
+        sm.ops().timeouts.fetch_add(2, Ordering::Relaxed);
+        sm.ops().shard_restarts.fetch_add(1, Ordering::Relaxed);
+        sm.ops().reload_ok.fetch_add(4, Ordering::Relaxed);
+        sm.ops().reload_rejected.fetch_add(5, Ordering::Relaxed);
+        let s = sm.snapshot();
+        assert_eq!(
+            s.ops,
+            OpsSnapshot {
+                busy_shed: 3,
+                timeouts: 2,
+                shard_restarts: 1,
+                reload_ok: 4,
+                reload_rejected: 5
+            }
+        );
+        let rep = s.report();
+        for needle in [
+            "busy_shed=3",
+            "timeouts=2",
+            "shard_restarts=1",
+            "reload_ok=4",
+            "reload_rejected=5",
+        ] {
+            assert!(rep.contains(needle), "{rep}");
+        }
+        // A bare per-shard sink reports zeros (no admission machinery).
+        assert_eq!(sm.shard_snapshots()[0].ops, OpsSnapshot::default());
     }
 
     #[test]

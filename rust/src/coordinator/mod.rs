@@ -13,5 +13,7 @@ pub use batcher::{
     batch_channel, batch_channel_with_cap, BatchPolicy, BatchQueue, BatchSender, TrySendError,
 };
 pub use filter_score::{FilterOutcome, FilterPipeline, FilterStats};
-pub use metrics::{Metrics, ShardedMetrics, Snapshot};
-pub use server::{Client, EvalResponse, Reply, Server, ServerConfig, DEFAULT_QUEUE_CAP};
+pub use metrics::{Metrics, OpsCounters, OpsSnapshot, ShardedMetrics, Snapshot};
+pub use server::{
+    Client, EvalResponse, Reply, Server, ServerConfig, DEFAULT_QUEUE_CAP, MAX_LINE_BYTES,
+};

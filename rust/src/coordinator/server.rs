@@ -1,7 +1,7 @@
 //! TCP serving front-end: line protocol, connection handling, and the
-//! sharded engine runtime. The plan is compiled ONCE into a shared
-//! `Arc<CompiledPlan>`; `--shards N` engine workers each own an engine
-//! handle and drain their own bounded [`BatchQueue`]. Requests flow
+//! supervised sharded engine runtime. The plan is compiled ONCE into a
+//! shared `Arc<CompiledPlan>`; `--shards N` engine workers each own an
+//! engine handle and drain their own bounded [`BatchQueue`]. Requests flow
 //!
 //!   conn thread → dispatcher (least-queued shard, try_send)
 //!     → per-shard BatchQueue (condvar) → shard worker
@@ -11,46 +11,91 @@
 //! Responses stream back as soon as their example is decided; each
 //! example's early-exit sweep is independent, so responses are
 //! bit-identical at any shard count (rust/tests/serving_e2e.rs).
-//! A full shard queue sheds load with `BUSY <id>` instead of queueing
-//! unbounded latency, and `RELOAD <path>` swaps the shared plan at
-//! batch boundaries via a [`PlanSlot`] — width-compatible swaps never
-//! error a request (no tokio offline; plain threads — DESIGN.md §4).
 //!
-//! Protocol (one line per message):
-//!   client → server:  EVAL <id> <f1>,<f2>,...      classify one example
+//! Failure semantics (rust/tests/chaos_serving.rs):
+//! - **Supervision**: every batch is processed under `catch_unwind`. A
+//!   panicking shard answers each not-yet-answered request in the
+//!   poisoned batch with a terminal `ERR <id> shard_panic: <why>` (never
+//!   a hang, never a duplicate reply — per-request progress flags
+//!   survive the unwind), then the supervisor rebuilds the engine with
+//!   capped exponential backoff and keeps draining the same queue.
+//! - **Deadlines**: `ServerConfig::default_deadline` and the per-request
+//!   `DEADLINE_MS=` token bound queueing latency; requests whose
+//!   deadline has expired are shed with `TIMEOUT <id>` at the batch
+//!   boundary, before any engine work.
+//! - **Overload**: a full shard queue sheds with `BUSY <id>` instead of
+//!   queueing unbounded latency.
+//! - **Validated reload**: `RELOAD <path>` compiles the candidate and
+//!   canary-scores it against a probe set captured from the live plan
+//!   ([`ProbeSet`]); any mismatch keeps last-known-good and replies
+//!   `RELOAD_REJECTED <stage>: <why>`. Accepted swaps land at batch
+//!   boundaries via a [`PlanSlot`].
+//! - **Drain**: `DRAIN` stops admission (subsequent EVALs get
+//!   `ERR <id> draining`) and waits for the shard queues to empty.
+//!
+//! (No tokio offline; plain threads — DESIGN.md §4.)
+//!
+//! Protocol (one line per message, lines capped at [`MAX_LINE_BYTES`]):
+//!   client → server:  EVAL <id> [DEADLINE_MS=<d>] <f1>,<f2>,...
 //!                     STATS                         metrics snapshot
-//!                     RELOAD <path>                 hot-swap the plan
+//!                     RELOAD <path>                 validated hot-swap
+//!                     DRAIN                         stop admission, drain
 //!                     QUIT                          close connection
 //!   server → client:  OK <id> <pos|neg> <score> <models> <latency_us>
 //!                     BUSY <id>                     shard queues full
+//!                     TIMEOUT <id>                  deadline expired queued
 //!                     STATS <report...>
 //!                     RELOADED <name> gen=<g> T=<t>
+//!                     RELOAD_REJECTED <stage>: <why>
+//!                     DRAINED queued=0
 //!                     ERR <id> <message>            (`-` id when the
 //!                                                   request id is unknown)
 
 use super::batcher::{
     batch_channel_with_cap, BatchPolicy, BatchQueue, BatchSender, TrySendError,
 };
-use super::metrics::ShardedMetrics;
-use crate::plan::{CompiledPlan, PlanArtifact, PlanSlot};
+use super::metrics::{Metrics, OpsCounters, ShardedMetrics};
+use crate::error::QwycError;
+use crate::plan::{CompiledPlan, PlanArtifact, PlanSlot, ProbeSet, DEFAULT_PROBES};
 use crate::runtime::engine::{Engine, NativeEngine};
+use crate::util::failpoints;
 use crate::util::pool::{threads_from_env, Pool};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{self, Sender};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Default bound on each shard's request queue (`--queue-cap`).
 pub const DEFAULT_QUEUE_CAP: usize = 1024;
+
+/// Hard cap on one protocol line; longer lines get a clean
+/// `ERR - line too long` and the connection keeps working.
+pub const MAX_LINE_BYTES: usize = 64 * 1024;
+
+/// Supervisor restart backoff: base doubles per consecutive panic,
+/// capped. Resets after any clean batch.
+const BACKOFF_BASE_MS: u64 = 10;
+const BACKOFF_CAP_MS: u64 = 1_000;
+
+/// Seed for the reload canary's probe rows — fixed so a rejection
+/// reproduces from the reply alone.
+const CANARY_SEED: u64 = 0xca9a41;
+
+/// Upper bound on how long a `DRAIN` command waits for the shard
+/// backlogs to empty before reporting failure.
+const DRAIN_TIMEOUT: Duration = Duration::from_secs(10);
 
 /// One in-flight request.
 struct Request {
     id: u64,
     features: Vec<f32>,
     enqueued: Instant,
+    /// Shed with `TIMEOUT` if still queued past this instant.
+    deadline: Option<Instant>,
     respond: Sender<String>,
 }
 
@@ -63,11 +108,19 @@ pub struct ServerConfig {
     pub queue_cap: usize,
     /// Dynamic-batching policy applied by every shard.
     pub policy: BatchPolicy,
+    /// Deadline applied to requests that don't carry their own
+    /// `DEADLINE_MS=` token; `None` = no default deadline.
+    pub default_deadline: Option<Duration>,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { shards: 1, queue_cap: DEFAULT_QUEUE_CAP, policy: BatchPolicy::default() }
+        ServerConfig {
+            shards: 1,
+            queue_cap: DEFAULT_QUEUE_CAP,
+            policy: BatchPolicy::default(),
+            default_deadline: None,
+        }
     }
 }
 
@@ -81,18 +134,24 @@ impl From<BatchPolicy> for ServerConfig {
 }
 
 /// Routes each request to the least-queued shard; a full shard queue
-/// surfaces as BUSY instead of blocking the connection thread.
+/// surfaces as BUSY instead of blocking the connection thread, and a
+/// draining server refuses admission outright.
 struct Dispatcher {
     shards: Vec<(BatchSender<Request>, Arc<BatchQueue<Request>>)>,
+    draining: AtomicBool,
 }
 
 enum RouteError {
     Busy(Request),
+    Draining(Request),
     Closed(Request),
 }
 
 impl Dispatcher {
     fn route(&self, req: Request) -> Result<(), RouteError> {
+        if self.draining.load(Ordering::Relaxed) {
+            return Err(RouteError::Draining(req));
+        }
         // Least-queued shard (ties → lowest index). Queue lengths move
         // under us, but any stale choice only costs balance, never
         // correctness — per-example sweeps are shard-independent.
@@ -111,6 +170,32 @@ impl Dispatcher {
             Err(TrySendError::Closed(r)) => Err(RouteError::Closed(r)),
         }
     }
+
+    /// Stop admission, then wait (bounded) for every shard backlog to
+    /// empty. Returns the number of requests still queued at timeout
+    /// (0 = fully drained). In-flight batches answer through their own
+    /// response channels as usual.
+    fn drain(&self, timeout: Duration) -> usize {
+        self.draining.store(true, Ordering::SeqCst);
+        let deadline = Instant::now() + timeout;
+        for (_, q) in &self.shards {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            q.wait_empty(deadline - now);
+        }
+        self.shards.iter().map(|(_, q)| q.len()).sum()
+    }
+}
+
+/// Everything a connection thread needs, bundled so the acceptor clones
+/// one Arc per connection.
+struct ConnShared {
+    dispatch: Dispatcher,
+    metrics: Arc<ShardedMetrics>,
+    plan_slot: Option<Arc<PlanSlot>>,
+    default_deadline: Option<Duration>,
 }
 
 /// Server handle: address, shutdown flag, worker/acceptor joins.
@@ -145,7 +230,7 @@ impl Server {
     /// gets an `Arc` handle to the SAME artifact (compile once — the
     /// plan is immutable and `Send + Sync` by construction) plus a
     /// private worker pool splitting `QWYC_THREADS` across shards.
-    /// Enables `RELOAD <path>` hot-swap through a [`PlanSlot`].
+    /// Enables `RELOAD <path>` validated hot-swap through a [`PlanSlot`].
     pub fn start_with_plan<C>(
         bind_addr: &str,
         plan: Arc<CompiledPlan>,
@@ -179,99 +264,35 @@ impl Server {
         let metrics = Arc::new(ShardedMetrics::new(n_shards));
         let shutdown = Arc::new(AtomicBool::new(false));
 
-        // Shard workers: each owns an engine and drains its own queue.
+        // Shard workers: each owns an engine and drains its own queue
+        // under supervision (see `supervise_shard`).
         let mut workers = Vec::with_capacity(n_shards);
         let mut shard_channels = Vec::with_capacity(n_shards);
         for shard in 0..n_shards {
             let (tx, queue) = batch_channel_with_cap::<Request>(config.queue_cap);
             shard_channels.push((tx, queue.clone()));
             let m = metrics.shard(shard);
+            let ops = metrics.ops().clone();
             let slot = plan_slot.clone();
             let factory = factory.clone();
             let policy = config.policy;
             workers.push(std::thread::spawn(move || {
-                // Read the generation BEFORE building the engine: a swap
-                // racing the spawn is re-applied on the first batch (a
-                // harmless duplicate) instead of being missed.
-                let mut gen = slot.as_ref().map(|s| s.generation()).unwrap_or(0);
-                let mut engine = factory(shard);
-                let mut d = engine.n_features();
-                let mut xbuf: Vec<f32> = Vec::new();
-                while let Some(batch) = queue.next_batch(policy) {
-                    // Plan hot-swap happens only here, at a batch
-                    // boundary: no batch ever sees a half-swapped plan,
-                    // and a batch being classified when the swap lands
-                    // completes against the plan it started with.
-                    // Requests still queued (including this just-drained
-                    // batch) evaluate under the NEW plan; if the new
-                    // plan changes the feature width, stale-width
-                    // requests get clean per-request ERRs below rather
-                    // than being dropped.
-                    if let Some(slot) = &slot {
-                        let g = slot.generation();
-                        if g != gen {
-                            gen = g;
-                            match engine.swap_plan(slot.load()) {
-                                Ok(()) => d = engine.n_features(),
-                                Err(e) => {
-                                    eprintln!("shard {shard}: plan reload failed: {e}")
-                                }
-                            }
-                        }
-                    }
-                    m.record_batch(batch.len());
-                    xbuf.clear();
-                    let mut evals: Vec<&Request> = Vec::with_capacity(batch.len());
-                    for r in &batch {
-                        if r.features.len() == d {
-                            xbuf.extend_from_slice(&r.features);
-                            evals.push(r);
-                        } else {
-                            // Misfits fail alone; the rest of the batch
-                            // still evaluates.
-                            let _ = r.respond.send(format!(
-                                "ERR {} wrong feature count (want {d})",
-                                r.id
-                            ));
-                        }
-                    }
-                    if evals.is_empty() {
-                        continue;
-                    }
-                    match engine.classify_batch(&xbuf, evals.len()) {
-                        Ok(outcomes) => {
-                            for (r, o) in evals.iter().zip(outcomes.iter()) {
-                                let lat = r.enqueued.elapsed().as_nanos() as u64;
-                                m.record_request(lat, o.models_evaluated, o.early);
-                                let _ = r.respond.send(format!(
-                                    "OK {} {} {:.6} {} {}",
-                                    r.id,
-                                    if o.positive { "pos" } else { "neg" },
-                                    o.score,
-                                    o.models_evaluated,
-                                    lat / 1_000
-                                ));
-                            }
-                        }
-                        Err(e) => {
-                            for r in &evals {
-                                let _ = r.respond.send(format!("ERR {} engine: {e}", r.id));
-                            }
-                        }
-                    }
-                }
+                supervise_shard(shard, queue, factory, slot, m, ops, policy)
             }));
         }
-        let dispatcher = Arc::new(Dispatcher { shards: shard_channels });
+        let ctx = Arc::new(ConnShared {
+            dispatch: Dispatcher { shards: shard_channels, draining: AtomicBool::new(false) },
+            metrics: metrics.clone(),
+            plan_slot,
+            default_deadline: config.default_deadline,
+        });
 
         // Acceptor: one thread per connection (serving fan-in is small;
         // the shard workers are the throughput engine).
         let conns: Arc<std::sync::Mutex<Vec<TcpStream>>> =
             Arc::new(std::sync::Mutex::new(Vec::new()));
         let acc_shutdown = shutdown.clone();
-        let acc_metrics = metrics.clone();
         let acc_conns = conns.clone();
-        let acc_slot = plan_slot.clone();
         let acceptor = std::thread::spawn(move || {
             listener.set_nonblocking(true).ok();
             loop {
@@ -284,10 +305,8 @@ impl Server {
                         if let Ok(dup) = stream.try_clone() {
                             acc_conns.lock().unwrap().push(dup);
                         }
-                        let dispatch = dispatcher.clone();
-                        let m = acc_metrics.clone();
-                        let slot = acc_slot.clone();
-                        std::thread::spawn(move || handle_conn(stream, dispatch, m, slot));
+                        let ctx = ctx.clone();
+                        std::thread::spawn(move || handle_conn(stream, ctx));
                     }
                     Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                         std::thread::sleep(std::time::Duration::from_millis(1));
@@ -295,9 +314,9 @@ impl Server {
                     Err(_) => break,
                 }
             }
-            // The dispatcher (and its senders) drops here → once
-            // connection threads exit too, the shard queues close and
-            // every worker drains.
+            // The shared context (and the dispatcher's senders) drops
+            // here → once connection threads exit too, the shard queues
+            // close and every worker drains.
         });
 
         Ok(Server {
@@ -328,47 +347,322 @@ impl Server {
     }
 }
 
-/// Handle the `RELOAD <path>` control command: load + compile off the
-/// request path (on this connection's thread), then atomically publish
-/// into the slot. Shard workers adopt the new plan at their next batch
-/// boundary: a batch mid-classification finishes on its old plan, and a
-/// width-compatible swap (the deployment case: re-optimized π/ε for the
-/// same feature space) never errors any request.
+/// Capped exponential restart backoff (10ms · 2ⁿ, max 1s).
+fn restart_backoff(consecutive_panics: u32) -> Duration {
+    let exp = consecutive_panics.min(7);
+    Duration::from_millis((BACKOFF_BASE_MS << exp).min(BACKOFF_CAP_MS))
+}
+
+/// Best-effort human-readable panic payload.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "panic".to_string()
+    }
+}
+
+/// The supervised shard worker loop. The worker thread itself never
+/// dies to a panic: engine construction and batch processing both run
+/// under `catch_unwind`, every request in a poisoned batch gets a
+/// terminal reply, and the engine is rebuilt (after capped exponential
+/// backoff) unless it declares itself [`Engine::reusable_after_panic`].
+fn supervise_shard(
+    shard: usize,
+    queue: Arc<BatchQueue<Request>>,
+    factory: Arc<dyn Fn(usize) -> Box<dyn Engine> + Send + Sync>,
+    slot: Option<Arc<PlanSlot>>,
+    m: Arc<Metrics>,
+    ops: Arc<OpsCounters>,
+    policy: BatchPolicy,
+) {
+    let mut engine: Option<Box<dyn Engine>> = None;
+    let mut gen = 0u64;
+    let mut d = 0usize;
+    let mut xbuf: Vec<f32> = Vec::new();
+    let mut consecutive_panics = 0u32;
+    while let Some(batch) = queue.next_batch(policy) {
+        if failpoints::enabled() {
+            // Chaos hook: stall this shard's batch loop (`slow_batch`,
+            // `ms=` payload) to force queue buildup and deadline expiry.
+            failpoints::sleep_ms("slow_batch", shard as u64);
+        }
+        // Deadline shedding at the batch boundary: anything that expired
+        // while queued is answered TIMEOUT before any engine work.
+        let now = Instant::now();
+        let mut live: Vec<Request> = Vec::with_capacity(batch.len());
+        for r in batch {
+            match r.deadline {
+                Some(deadline) if now >= deadline => {
+                    ops.timeouts.fetch_add(1, Ordering::Relaxed);
+                    let _ = r.respond.send(format!("TIMEOUT {}", r.id));
+                }
+                _ => live.push(r),
+            }
+        }
+        if live.is_empty() {
+            continue;
+        }
+        // (Re)build the engine if the last panic consumed it. Factories
+        // can panic too (artifact opening, device init), so this also
+        // runs supervised; a failed rebuild errors the batch and backs
+        // off before the next attempt.
+        if engine.is_none() {
+            // Read the generation BEFORE building the engine: a swap
+            // racing the build is re-applied on the first batch (a
+            // harmless duplicate) instead of being missed.
+            gen = slot.as_ref().map(|s| s.generation()).unwrap_or(0);
+            match catch_unwind(AssertUnwindSafe(|| factory(shard))) {
+                Ok(e) => {
+                    d = e.n_features();
+                    engine = Some(e);
+                    if consecutive_panics > 0 {
+                        eprintln!("shard {shard}: engine rebuilt, resuming service");
+                    }
+                }
+                Err(payload) => {
+                    let why = panic_message(payload.as_ref());
+                    eprintln!("shard {shard}: engine construction panicked: {why}");
+                    for r in &live {
+                        let _ = r.respond.send(format!("ERR {} shard_panic: {why}", r.id));
+                    }
+                    ops.shard_restarts.fetch_add(1, Ordering::Relaxed);
+                    let pause = restart_backoff(consecutive_panics);
+                    consecutive_panics = consecutive_panics.saturating_add(1);
+                    std::thread::sleep(pause);
+                    continue;
+                }
+            }
+        }
+        let eng = engine.as_mut().expect("engine present after rebuild");
+        // Plan hot-swap happens only here, at a batch boundary: no batch
+        // ever sees a half-swapped plan, and a batch being classified
+        // when the swap lands completes against the plan it started
+        // with. Requests still queued (including this just-drained
+        // batch) evaluate under the NEW plan; if the new plan changes
+        // the feature width, stale-width requests get clean per-request
+        // ERRs below rather than being dropped.
+        if let Some(slot) = &slot {
+            let g = slot.generation();
+            if g != gen {
+                gen = g;
+                match eng.swap_plan(slot.load()) {
+                    Ok(()) => d = eng.n_features(),
+                    Err(e) => eprintln!("shard {shard}: plan reload failed: {e}"),
+                }
+            }
+        }
+        // Everything that touches the engine runs under catch_unwind.
+        // The per-request `answered` flags are written the moment each
+        // reply is sent and survive the unwind, so a panic mid-batch
+        // yields exactly one terminal reply per request: already-sent
+        // OKs are never duplicated, everything else gets shard_panic.
+        let mut answered = vec![false; live.len()];
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            failpoints::maybe_panic("shard_panic", shard as u64);
+            process_batch(eng.as_mut(), &live, &mut answered, d, &m, &mut xbuf);
+        }));
+        match outcome {
+            Ok(()) => consecutive_panics = 0,
+            Err(payload) => {
+                let why = panic_message(payload.as_ref());
+                // Terminal replies first — no client may hang on the
+                // poisoned batch — then recover the engine.
+                for (r, &done) in live.iter().zip(answered.iter()) {
+                    if !done {
+                        let _ = r.respond.send(format!("ERR {} shard_panic: {why}", r.id));
+                    }
+                }
+                ops.shard_restarts.fetch_add(1, Ordering::Relaxed);
+                let reuse = engine.as_ref().is_some_and(|e| e.reusable_after_panic());
+                if !reuse {
+                    engine = None;
+                }
+                eprintln!(
+                    "shard {shard}: batch panicked ({why}); {} (restart #{})",
+                    if reuse { "engine reused" } else { "engine dropped for rebuild" },
+                    consecutive_panics + 1
+                );
+                let pause = restart_backoff(consecutive_panics);
+                consecutive_panics = consecutive_panics.saturating_add(1);
+                std::thread::sleep(pause);
+            }
+        }
+    }
+}
+
+/// One batch through the engine: width checks, classify, reply. Marks
+/// `answered[j]` immediately after each send so the supervisor knows
+/// exactly which requests still need a terminal reply if this unwinds.
+fn process_batch(
+    engine: &mut dyn Engine,
+    live: &[Request],
+    answered: &mut [bool],
+    d: usize,
+    m: &Metrics,
+    xbuf: &mut Vec<f32>,
+) {
+    m.record_batch(live.len());
+    xbuf.clear();
+    let mut evals: Vec<usize> = Vec::with_capacity(live.len());
+    for (j, r) in live.iter().enumerate() {
+        if r.features.len() == d {
+            xbuf.extend_from_slice(&r.features);
+            evals.push(j);
+        } else {
+            // Misfits fail alone; the rest of the batch still evaluates.
+            let _ = r.respond.send(format!("ERR {} wrong feature count (want {d})", r.id));
+            answered[j] = true;
+        }
+    }
+    if evals.is_empty() {
+        return;
+    }
+    match engine.classify_batch(xbuf, evals.len()) {
+        Ok(outcomes) => {
+            for (&j, o) in evals.iter().zip(outcomes.iter()) {
+                let r = &live[j];
+                let lat = r.enqueued.elapsed().as_nanos() as u64;
+                m.record_request(lat, o.models_evaluated, o.early);
+                let _ = r.respond.send(format!(
+                    "OK {} {} {:.6} {} {}",
+                    r.id,
+                    if o.positive { "pos" } else { "neg" },
+                    o.score,
+                    o.models_evaluated,
+                    lat / 1_000
+                ));
+                answered[j] = true;
+            }
+        }
+        Err(e) => {
+            for &j in &evals {
+                let r = &live[j];
+                let _ = r.respond.send(format!("ERR {} engine: {e}", r.id));
+                answered[j] = true;
+            }
+        }
+    }
+}
+
+/// Handle the `RELOAD <path>` control command: load + compile the
+/// candidate off the request path (on this connection's thread), canary
+/// it against probes captured from the LIVE plan, and only then publish
+/// into the slot. Any failure — unreadable artifact, schema error, or a
+/// canary violation (feature-width change, non-finite score, broken
+/// early-exit invariant) — keeps last-known-good serving and replies
+/// `RELOAD_REJECTED <stage>: <why>`.
+///
+/// Shard workers adopt an accepted plan at their next batch boundary: a
+/// batch mid-classification finishes on its old plan, and an accepted
+/// swap (same feature space by construction — the canary enforces it)
+/// never errors any request.
 ///
 /// The path may name either artifact format — [`PlanArtifact::load`]
 /// sniffs the magic bytes. Deploying the zero-copy `qwyc-plan-bin-v1`
 /// form makes the reload near-free: one read + validated pointer casts
 /// instead of a JSON parse + re-permute.
-fn handle_reload(path: &str, slot: &Option<Arc<PlanSlot>>) -> String {
+fn handle_reload(path: &str, slot: &Option<Arc<PlanSlot>>, ops: &OpsCounters) -> String {
     let Some(slot) = slot else {
         return "ERR - reload unsupported for this backend".into();
     };
     if path.is_empty() {
         return "ERR - malformed RELOAD (usage: RELOAD <path>)".into();
     }
-    match PlanArtifact::load(Path::new(path)) {
-        Ok(artifact) => {
-            let compiled = artifact.compiled();
-            let t = compiled.t();
-            let gen = slot.swap(compiled);
-            format!("RELOADED {} gen={gen} T={t}", artifact.name())
+    let reject = |e: QwycError| {
+        ops.reload_rejected.fetch_add(1, Ordering::Relaxed);
+        format!("RELOAD_REJECTED {}: {}", e.stage(), e.message())
+    };
+    let candidate = match PlanArtifact::load(Path::new(path)) {
+        Ok(artifact) => artifact,
+        Err(e) => return reject(e),
+    };
+    let compiled = candidate.compiled();
+    let live = slot.load();
+    let probes = ProbeSet::capture(&live, DEFAULT_PROBES, CANARY_SEED);
+    let canary = if failpoints::fire("reload_corrupt") {
+        // Chaos hook: force the canary verdict the harness expects from
+        // a corrupt-but-loadable artifact.
+        Err(QwycError::Validate("injected failpoint 'reload_corrupt'".into()))
+    } else {
+        probes.check(&compiled)
+    };
+    if let Err(e) = canary {
+        // Canary verdicts get their own stage tag regardless of the
+        // underlying error variant: the operator's question is "which
+        // reload gate failed", not "which crate stage built the error".
+        ops.reload_rejected.fetch_add(1, Ordering::Relaxed);
+        return format!("RELOAD_REJECTED canary: {}", e.message());
+    }
+    let t = compiled.t();
+    let gen = slot.swap(compiled);
+    ops.reload_ok.fetch_add(1, Ordering::Relaxed);
+    format!("RELOADED {} gen={gen} T={t}", candidate.name())
+}
+
+/// One line read with a hard byte cap.
+enum LineRead {
+    Line(String),
+    /// The line exceeded the cap; it has been consumed from the stream.
+    TooLong,
+    Eof,
+}
+
+/// Read one `\n`-terminated line of at most `cap` bytes via
+/// `fill_buf`/`consume` — unlike `BufRead::read_line`, an oversized (or
+/// maliciously endless) line is discarded as it streams in instead of
+/// being accumulated, so one bad client line costs O(cap) memory.
+/// A final unterminated line (client half-wrote then shut down its
+/// write side) is returned as a normal line at EOF. Invalid UTF-8 is
+/// replaced lossily — the protocol parser then rejects the line, which
+/// is the per-line error behavior we want for binary garbage.
+fn read_line_capped<R: BufRead>(reader: &mut R, cap: usize) -> std::io::Result<LineRead> {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut discarding = false;
+    loop {
+        let chunk = reader.fill_buf()?;
+        if chunk.is_empty() {
+            // EOF.
+            if discarding {
+                return Ok(LineRead::TooLong);
+            }
+            if buf.is_empty() {
+                return Ok(LineRead::Eof);
+            }
+            return Ok(LineRead::Line(String::from_utf8_lossy(&buf).into_owned()));
         }
-        Err(e) => format!("ERR - reload: {e}"),
+        let (take, found_newline) = match chunk.iter().position(|&b| b == b'\n') {
+            Some(i) => (i + 1, true),
+            None => (chunk.len(), false),
+        };
+        if !discarding {
+            let keep = take - usize::from(found_newline);
+            if buf.len() + keep > cap {
+                discarding = true;
+                buf.clear();
+            } else {
+                buf.extend_from_slice(&chunk[..keep]);
+            }
+        }
+        reader.consume(take);
+        if found_newline {
+            if discarding {
+                return Ok(LineRead::TooLong);
+            }
+            return Ok(LineRead::Line(String::from_utf8_lossy(&buf).into_owned()));
+        }
     }
 }
 
-fn handle_conn(
-    stream: TcpStream,
-    dispatch: Arc<Dispatcher>,
-    metrics: Arc<ShardedMetrics>,
-    plan_slot: Option<Arc<PlanSlot>>,
-) {
+fn handle_conn(stream: TcpStream, ctx: Arc<ConnShared>) {
     let peer_write = match stream.try_clone() {
         Ok(s) => s,
         Err(_) => return,
     };
     let writer = std::io::BufWriter::new(peer_write);
-    let reader = BufReader::new(stream);
+    let mut reader = BufReader::new(stream);
     // Response pump: a dedicated channel per connection keeps ordering
     // per-client while letting shard workers answer out of batch order.
     let (resp_tx, resp_rx) = mpsc::channel::<String>();
@@ -382,63 +676,44 @@ fn handle_conn(
         }
     });
 
-    for line in reader.lines() {
-        let line = match line {
-            Ok(l) => l,
+    loop {
+        let line = match read_line_capped(&mut reader, MAX_LINE_BYTES) {
             Err(_) => break,
+            Ok(LineRead::Eof) => break,
+            Ok(LineRead::TooLong) => {
+                let _ = resp_tx.send(format!("ERR - line too long (cap {MAX_LINE_BYTES} bytes)"));
+                continue;
+            }
+            Ok(LineRead::Line(l)) => l,
         };
         let line = line.trim();
         if line.is_empty() {
             continue;
         }
-        let mut parts = line.splitn(3, ' ');
-        match parts.next() {
-            Some("EVAL") => {
-                let id = parts.next().and_then(|s| s.parse::<u64>().ok());
-                let feats: Option<Vec<f32>> = parts
-                    .next()
-                    .map(|s| {
-                        s.split(',')
-                            .map(|t| t.trim().parse::<f32>())
-                            .collect::<Result<_, _>>()
-                    })
-                    .transpose()
-                    .ok()
-                    .flatten();
-                match (id, feats) {
-                    (Some(id), Some(features)) => {
-                        let req = Request {
-                            id,
-                            features,
-                            enqueued: Instant::now(),
-                            respond: resp_tx.clone(),
-                        };
-                        match dispatch.route(req) {
-                            Ok(()) => {}
-                            Err(RouteError::Busy(r)) => {
-                                let _ = resp_tx.send(format!("BUSY {}", r.id));
-                            }
-                            Err(RouteError::Closed(r)) => {
-                                let _ = resp_tx
-                                    .send(format!("ERR {} server shutting down", r.id));
-                            }
-                        }
-                    }
-                    _ => {
-                        let _ = resp_tx.send("ERR - malformed EVAL".into());
-                    }
-                }
+        let (verb, rest) = match line.split_once(' ') {
+            Some((v, r)) => (v, r.trim_start()),
+            None => (line, ""),
+        };
+        match verb {
+            "EVAL" => handle_eval(rest, &ctx, &resp_tx),
+            "STATS" => {
+                let _ = resp_tx.send(format!("STATS {}", ctx.metrics.snapshot().report()));
             }
-            Some("STATS") => {
-                let _ = resp_tx.send(format!("STATS {}", metrics.snapshot().report()));
-            }
-            Some("RELOAD") => {
+            "RELOAD" => {
                 // The path is everything after the verb (paths may
                 // contain spaces).
-                let path = line["RELOAD".len()..].trim();
-                let _ = resp_tx.send(handle_reload(path, &plan_slot));
+                let reply = handle_reload(rest.trim(), &ctx.plan_slot, ctx.metrics.ops());
+                let _ = resp_tx.send(reply);
             }
-            Some("QUIT") => break,
+            "DRAIN" => {
+                let still_queued = ctx.dispatch.drain(DRAIN_TIMEOUT);
+                let _ = resp_tx.send(if still_queued == 0 {
+                    "DRAINED queued=0".to_string()
+                } else {
+                    format!("ERR - drain timed out ({still_queued} still queued)")
+                });
+            }
+            "QUIT" => break,
             _ => {
                 let _ = resp_tx.send("ERR - unknown command".into());
             }
@@ -446,6 +721,62 @@ fn handle_conn(
     }
     drop(resp_tx);
     let _ = pump.join();
+}
+
+/// Parse and route one `EVAL` request:
+/// `<id> [DEADLINE_MS=<d>] <f1>,<f2>,...`. A `DEADLINE_MS` token
+/// overrides the server default; `DEADLINE_MS=0` explicitly opts out.
+fn handle_eval(rest: &str, ctx: &ConnShared, resp_tx: &Sender<String>) {
+    let (id_str, mut rest) =
+        rest.split_once(' ').map(|(a, b)| (a, b.trim_start())).unwrap_or((rest, ""));
+    let Ok(id) = id_str.parse::<u64>() else {
+        let _ = resp_tx.send("ERR - malformed EVAL".into());
+        return;
+    };
+    let mut deadline_ms: Option<u64> = None;
+    if let Some(after) = rest.strip_prefix("DEADLINE_MS=") {
+        let (token, feats) =
+            after.split_once(' ').map(|(a, b)| (a, b.trim_start())).unwrap_or((after, ""));
+        match token.parse::<u64>() {
+            Ok(ms) => {
+                deadline_ms = Some(ms);
+                rest = feats;
+            }
+            Err(_) => {
+                let _ = resp_tx.send(format!("ERR {id} malformed DEADLINE_MS"));
+                return;
+            }
+        }
+    }
+    let features: Option<Vec<f32>> = if rest.is_empty() {
+        None
+    } else {
+        rest.split(',').map(|t| t.trim().parse::<f32>()).collect::<Result<_, _>>().ok()
+    };
+    let Some(features) = features else {
+        let _ = resp_tx.send(format!("ERR {id} malformed EVAL"));
+        return;
+    };
+    let deadline = match deadline_ms {
+        Some(0) => None,
+        Some(ms) => Some(Instant::now() + Duration::from_millis(ms)),
+        None => ctx.default_deadline.map(|d| Instant::now() + d),
+    };
+    let req =
+        Request { id, features, enqueued: Instant::now(), deadline, respond: resp_tx.clone() };
+    match ctx.dispatch.route(req) {
+        Ok(()) => {}
+        Err(RouteError::Busy(r)) => {
+            ctx.metrics.ops().busy_shed.fetch_add(1, Ordering::Relaxed);
+            let _ = resp_tx.send(format!("BUSY {}", r.id));
+        }
+        Err(RouteError::Draining(r)) => {
+            let _ = resp_tx.send(format!("ERR {} draining", r.id));
+        }
+        Err(RouteError::Closed(r)) => {
+            let _ = resp_tx.send(format!("ERR {} server shutting down", r.id));
+        }
+    }
 }
 
 /// Minimal blocking client for tests/examples/load generators.
@@ -472,9 +803,53 @@ pub enum Reply {
     Ok(EvalResponse),
     /// Request shed by a full shard queue; retry or back off.
     Busy { id: u64 },
+    /// Request shed because its deadline expired while queued.
+    Timeout { id: u64 },
     Err { id: Option<u64>, message: String },
-    /// STATS / RELOADED / anything else, verbatim.
+    /// Accepted RELOAD (the full `RELOADED ...` line).
+    Reloaded(String),
+    /// Refused RELOAD: the failing stage (`io`, `schema`, `canary`, ...)
+    /// and the human-readable reason.
+    ReloadRejected { stage: String, why: String },
+    /// STATS / DRAINED / anything else, verbatim.
     Other(String),
+}
+
+impl Reply {
+    /// Classify one raw server → client line.
+    pub fn parse(line: &str) -> Reply {
+        if let Some(r) = parse_eval_response(line) {
+            return Reply::Ok(r);
+        }
+        if let Some(rest) = line.strip_prefix("RELOAD_REJECTED ") {
+            if let Some((stage, why)) = rest.split_once(": ") {
+                return Reply::ReloadRejected { stage: stage.to_string(), why: why.to_string() };
+            }
+        }
+        if line.starts_with("RELOADED ") {
+            return Reply::Reloaded(line.to_string());
+        }
+        let mut p = line.splitn(3, ' ');
+        match p.next() {
+            Some("BUSY") => {
+                if let Some(id) = p.next().and_then(|s| s.parse::<u64>().ok()) {
+                    return Reply::Busy { id };
+                }
+            }
+            Some("TIMEOUT") => {
+                if let Some(id) = p.next().and_then(|s| s.parse::<u64>().ok()) {
+                    return Reply::Timeout { id };
+                }
+            }
+            Some("ERR") => {
+                let id = p.next().and_then(|s| s.parse::<u64>().ok());
+                let message = p.next().unwrap_or("").to_string();
+                return Reply::Err { id, message };
+            }
+            _ => {}
+        }
+        Reply::Other(line.to_string())
+    }
 }
 
 impl Client {
@@ -494,6 +869,20 @@ impl Client {
         Ok(id)
     }
 
+    /// Send one EVAL carrying a `DEADLINE_MS=` token (0 = explicitly no
+    /// deadline, overriding the server default). Does not wait.
+    pub fn send_eval_with_deadline(
+        &mut self,
+        features: &[f32],
+        deadline_ms: u64,
+    ) -> std::io::Result<u64> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let feats: Vec<String> = features.iter().map(|v| format!("{v}")).collect();
+        writeln!(self.writer, "EVAL {id} DEADLINE_MS={deadline_ms} {}", feats.join(","))?;
+        Ok(id)
+    }
+
     /// Read one response line and classify it (blocking).
     pub fn read_reply(&mut self) -> std::io::Result<Reply> {
         let mut line = String::new();
@@ -503,7 +892,7 @@ impl Client {
                 "server closed the connection",
             ));
         }
-        Ok(parse_reply(line.trim()))
+        Ok(Reply::parse(line.trim()))
     }
 
     /// Read one OK response (blocking); any other reply is an error.
@@ -535,37 +924,27 @@ impl Client {
     }
 
     /// Ask the server to hot-swap its plan; returns the raw reply line
-    /// (`RELOADED ...` on success, `ERR - reload: ...` on failure).
-    /// Same FIFO caveat as [`Client::stats`]: issue RELOAD from a
-    /// connection with no outstanding EVALs — a dedicated control
-    /// connection, as `qwyc reload` and the e2e tests do.
+    /// (`RELOADED ...` on success, `RELOAD_REJECTED <stage>: <why>` on
+    /// refusal — classify it with [`Reply::parse`]). Same FIFO caveat as
+    /// [`Client::stats`]: issue RELOAD from a connection with no
+    /// outstanding EVALs — a dedicated control connection, as
+    /// `qwyc reload` and the e2e tests do.
     pub fn reload(&mut self, plan_path: &str) -> std::io::Result<String> {
         writeln!(self.writer, "RELOAD {plan_path}")?;
         let mut line = String::new();
         self.reader.read_line(&mut line)?;
         Ok(line.trim().to_string())
     }
-}
 
-fn parse_reply(line: &str) -> Reply {
-    if let Some(r) = parse_eval_response(line) {
-        return Reply::Ok(r);
+    /// Ask the server to stop admission and drain its queues; returns
+    /// the raw reply line (`DRAINED queued=0` on success). Same FIFO
+    /// caveat as [`Client::stats`].
+    pub fn drain(&mut self) -> std::io::Result<String> {
+        writeln!(self.writer, "DRAIN")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Ok(line.trim().to_string())
     }
-    let mut p = line.splitn(3, ' ');
-    match p.next() {
-        Some("BUSY") => {
-            if let Some(id) = p.next().and_then(|s| s.parse::<u64>().ok()) {
-                return Reply::Busy { id };
-            }
-        }
-        Some("ERR") => {
-            let id = p.next().and_then(|s| s.parse::<u64>().ok());
-            let message = p.next().unwrap_or("").to_string();
-            return Reply::Err { id, message };
-        }
-        _ => {}
-    }
-    Reply::Other(line.to_string())
 }
 
 fn parse_eval_response(line: &str) -> Option<EvalResponse> {
@@ -598,18 +977,22 @@ mod tests {
 
     #[test]
     fn parse_reply_classifies_protocol_lines() {
-        match parse_reply("OK 3 neg -0.500000 2 10") {
+        match Reply::parse("OK 3 neg -0.500000 2 10") {
             Reply::Ok(r) => {
                 assert_eq!(r.id, 3);
                 assert!(!r.positive);
             }
             other => panic!("{other:?}"),
         }
-        match parse_reply("BUSY 17") {
+        match Reply::parse("BUSY 17") {
             Reply::Busy { id } => assert_eq!(id, 17),
             other => panic!("{other:?}"),
         }
-        match parse_reply("ERR 5 engine: boom") {
+        match Reply::parse("TIMEOUT 23") {
+            Reply::Timeout { id } => assert_eq!(id, 23),
+            other => panic!("{other:?}"),
+        }
+        match Reply::parse("ERR 5 engine: boom") {
             Reply::Err { id, message } => {
                 assert_eq!(id, Some(5));
                 assert_eq!(message, "engine: boom");
@@ -617,16 +1000,74 @@ mod tests {
             other => panic!("{other:?}"),
         }
         // `-` id (request id unknown) parses as None.
-        match parse_reply("ERR - malformed EVAL") {
+        match Reply::parse("ERR - malformed EVAL") {
             Reply::Err { id, message } => {
                 assert_eq!(id, None);
                 assert_eq!(message, "malformed EVAL");
             }
             other => panic!("{other:?}"),
         }
-        match parse_reply("RELOADED demo gen=1 T=6") {
-            Reply::Other(s) => assert!(s.starts_with("RELOADED")),
+        match Reply::parse("RELOADED demo gen=1 T=6") {
+            Reply::Reloaded(s) => assert!(s.starts_with("RELOADED")),
             other => panic!("{other:?}"),
         }
+        match Reply::parse("RELOAD_REJECTED canary: feature width changed") {
+            Reply::ReloadRejected { stage, why } => {
+                assert_eq!(stage, "canary");
+                assert_eq!(why, "feature width changed");
+            }
+            other => panic!("{other:?}"),
+        }
+        match Reply::parse("DRAINED queued=0") {
+            Reply::Other(s) => assert!(s.starts_with("DRAINED")),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn capped_reader_handles_long_partial_and_binary_lines() {
+        use std::io::Cursor;
+        let cap = 16;
+        // Normal short lines pass through, CRLF and all.
+        let mut r = Cursor::new(b"hello\nworld\r\n".to_vec());
+        match read_line_capped(&mut r, cap).unwrap() {
+            LineRead::Line(l) => assert_eq!(l, "hello"),
+            _ => panic!("expected line"),
+        }
+        match read_line_capped(&mut r, cap).unwrap() {
+            LineRead::Line(l) => assert_eq!(l, "world\r"),
+            _ => panic!("expected line"),
+        }
+        assert!(matches!(read_line_capped(&mut r, cap).unwrap(), LineRead::Eof));
+        // An oversized line is consumed (not buffered) and the stream
+        // stays usable for the next line.
+        let mut big = vec![b'x'; 100];
+        big.push(b'\n');
+        big.extend_from_slice(b"next\n");
+        let mut r = Cursor::new(big);
+        assert!(matches!(read_line_capped(&mut r, cap).unwrap(), LineRead::TooLong));
+        match read_line_capped(&mut r, cap).unwrap() {
+            LineRead::Line(l) => assert_eq!(l, "next"),
+            _ => panic!("expected line"),
+        }
+        // A half-written final line (no newline before EOF) is returned
+        // as a line; binary garbage is replaced lossily, not fatal.
+        let mut r = Cursor::new(b"\xff\xfepartial".to_vec());
+        match read_line_capped(&mut r, cap).unwrap() {
+            LineRead::Line(l) => assert!(l.contains("partial")),
+            _ => panic!("expected line"),
+        }
+        // An oversized line that never terminates before EOF is TooLong.
+        let mut r = Cursor::new(vec![b'y'; 50]);
+        assert!(matches!(read_line_capped(&mut r, cap).unwrap(), LineRead::TooLong));
+    }
+
+    #[test]
+    fn backoff_is_capped_exponential() {
+        assert_eq!(restart_backoff(0), Duration::from_millis(10));
+        assert_eq!(restart_backoff(1), Duration::from_millis(20));
+        assert_eq!(restart_backoff(3), Duration::from_millis(80));
+        assert_eq!(restart_backoff(7), Duration::from_millis(1_000));
+        assert_eq!(restart_backoff(200), Duration::from_millis(1_000));
     }
 }

@@ -61,7 +61,7 @@ pub mod prelude {
     pub use crate::pipeline::{
         Decision, DecisionIter, EvalSession, ModelSpec, PlanBuilder, TrainSpec,
     };
-    pub use crate::plan::{CompiledPlan, PlanArtifact, PlanFormat, QwycPlan};
+    pub use crate::plan::{CompiledPlan, PlanArtifact, PlanFormat, ProbeSet, QwycPlan};
     pub use crate::qwyc::{FastClassifier, QwycConfig};
     pub use crate::util::pool::Pool;
 }

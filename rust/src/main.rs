@@ -9,9 +9,11 @@
 //!                 --format json → diff-able qwyc-plan-v1)
 //!   plan-info    print an artifact's header/version/section sizes
 //!   simulate     evaluate a plan on a dataset
-//!   serve        start the sharded TCP serving coordinator from a plan
-//!   reload       hot-swap the plan of a running server (RELOAD command)
-//!   bench-client load-test a running server (N pipelined connections)
+//!   serve        start the supervised sharded TCP coordinator from a plan
+//!   reload       validated hot-swap of a running server's plan (RELOAD)
+//!   drain        stop admission on a running server and drain its queues
+//!   bench-client load-test a running server (N pipelined connections,
+//!                BUSY retried with jittered exponential backoff)
 //!   experiment   regenerate paper figures/tables (fig1..fig6, tables, all)
 //!
 //! Every subcommand that takes `--plan` accepts either artifact format
@@ -72,6 +74,7 @@ fn run(args: &Args) -> Result<(), QwycError> {
         Some("simulate") => simulate_cmd(args),
         Some("serve") => serve(args),
         Some("reload") => reload_cmd(args),
+        Some("drain") => drain_cmd(args),
         Some("bench-client") => bench_client(args),
         Some("experiment") => experiment(args),
         _ => {
@@ -100,10 +103,12 @@ USAGE: qwyc <subcommand> [flags]
   serve        --plan plan.bin|plan.json --addr 127.0.0.1:7077
                [--backend native|pjrt --artifact rw1_stage --artifacts-dir artifacts]
                [--shards 1 --queue-cap 1024 --max-batch 256 --max-wait-ms 2]
-  reload       --addr 127.0.0.1:7077 --plan plan.bin     (hot-swap a serving plan;
-               either artifact format is accepted)
+               [--deadline-ms 0  (default request deadline; 0 = none)]
+  reload       --addr 127.0.0.1:7077 --plan plan.bin     (validated hot-swap;
+               either artifact format; exits non-zero on RELOAD_REJECTED)
+  drain        --addr 127.0.0.1:7077     (stop admission, drain the queues)
   bench-client --addr 127.0.0.1:7077 --dataset ... --requests 5000
-               [--pipeline 64 --concurrency 1]
+               [--pipeline 64 --concurrency 1 --deadline-ms 0]
   experiment   fig1|fig2|fig3|fig4|fig5|fig6|table1|tables|all
                [--scale 0.1 --trees 500 --max-opt 3000 --runs 5 --out results/]
 ";
@@ -378,6 +383,10 @@ fn serve(args: &Args) -> Result<(), QwycError> {
             max_batch: args.get_usize("max-batch", 256)?,
             max_wait: Duration::from_millis(args.get_u64("max-wait-ms", 2)?),
         },
+        default_deadline: match args.get_u64("deadline-ms", 0)? {
+            0 => None,
+            ms => Some(Duration::from_millis(ms)),
+        },
     };
     let loaded = load_artifact(args)?;
     args.check_unknown()?;
@@ -435,20 +444,43 @@ fn stats_loop(server: Server) -> Result<(), QwycError> {
     }
 }
 
-/// Ask a running server to hot-swap its plan (`RELOAD <path>`); the
-/// server accepts either artifact format.
+/// Ask a running server for a validated plan hot-swap (`RELOAD <path>`);
+/// the server accepts either artifact format. The reply is parsed, not
+/// pattern-sniffed: a `RELOAD_REJECTED` (or any ERR) exits non-zero with
+/// the server's staged message so deploy scripts can gate on it.
 fn reload_cmd(args: &Args) -> Result<(), QwycError> {
     let addr = parse_addr(args)?;
     let plan_path = args.get_str("plan", "plan.bin");
     args.check_unknown()?;
     let mut client = Client::connect(&addr)?;
     let line = client.reload(&plan_path)?;
-    if line.starts_with("RELOADED") {
+    match Reply::parse(&line) {
+        Reply::Reloaded(msg) => {
+            println!("{msg}");
+            Ok(())
+        }
+        // A remote refusal is a runtime failure, not a usage error.
+        Reply::ReloadRejected { stage, why } => {
+            Err(QwycError::Io(format!("reload rejected at stage '{stage}': {why}")))
+        }
+        Reply::Err { message, .. } => {
+            Err(QwycError::Io(format!("server refused the reload: {message}")))
+        }
+        _ => Err(QwycError::Io(format!("unexpected reload reply: {line}"))),
+    }
+}
+
+/// Ask a running server to stop admission and drain its queues (`DRAIN`).
+fn drain_cmd(args: &Args) -> Result<(), QwycError> {
+    let addr = parse_addr(args)?;
+    args.check_unknown()?;
+    let mut client = Client::connect(&addr)?;
+    let line = client.drain()?;
+    if line.starts_with("DRAINED") {
         println!("{line}");
         Ok(())
     } else {
-        // A remote refusal is a runtime failure, not a usage error.
-        Err(QwycError::Io(format!("server refused the reload: {line}")))
+        Err(QwycError::Io(format!("drain failed: {line}")))
     }
 }
 
@@ -458,11 +490,18 @@ fn parse_addr(args: &Args) -> Result<std::net::SocketAddr, QwycError> {
         .map_err(|e| QwycError::Config(format!("--addr: {e}")))
 }
 
+/// BUSY retry policy: a shed request is retried up to this many times
+/// with jittered exponential backoff before the client gives up on it.
+const RETRY_MAX_ATTEMPTS: u32 = 5;
+const RETRY_BASE_US: u64 = 500;
+const RETRY_CAP_US: u64 = 20_000;
+
 fn bench_client(args: &Args) -> Result<(), QwycError> {
     let addr = parse_addr(args)?;
     let requests = args.get_usize("requests", 5000)?;
     let pipeline = args.get_usize("pipeline", 64)?.max(1);
     let concurrency = args.get_usize("concurrency", 1)?.max(1);
+    let deadline_ms = args.get_u64("deadline-ms", 0)?;
     let (_, te) = load_data(args)?;
     args.check_unknown()?;
 
@@ -478,7 +517,7 @@ fn bench_client(args: &Args) -> Result<(), QwycError> {
             .enumerate()
             .map(|(c, &n)| {
                 let te = &te;
-                s.spawn(move || run_conn_load(&addr, te, n, pipeline, c * 7919))
+                s.spawn(move || run_conn_load(&addr, te, n, pipeline, c * 7919, deadline_ms))
             })
             .collect();
         handles.into_iter().map(|h| h.join().unwrap()).collect()
@@ -486,15 +525,20 @@ fn bench_client(args: &Args) -> Result<(), QwycError> {
     let el = sw.elapsed_s();
 
     let mut lat_us: Vec<f64> = Vec::with_capacity(requests);
-    let (mut models_sum, mut busy) = (0u64, 0u64);
+    let mut tot = ConnLoad::default();
     for r in results {
         let load = r?;
         lat_us.extend(load.lat_us);
-        models_sum += load.models_sum;
-        busy += load.busy;
+        tot.models_sum += load.models_sum;
+        tot.busy += load.busy;
+        tot.retries += load.retries;
+        tot.shed += load.shed;
+        tot.timeouts += load.timeouts;
+        tot.errors += load.errors;
     }
     lat_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let answered = lat_us.len().max(1);
+    let pct = |n: u64| n as f64 / requests.max(1) as f64 * 100.0;
     println!(
         "{} requests ({} conns) in {:.2}s = {:.0} rps; busy {}; \
          latency p50/p95/p99 = {:.0}/{:.0}/{:.0} us; mean models {:.2}",
@@ -502,11 +546,21 @@ fn bench_client(args: &Args) -> Result<(), QwycError> {
         concurrency,
         el,
         requests as f64 / el,
-        busy,
+        tot.busy,
         qwyc::util::stats::percentile_sorted(&lat_us, 50.0),
         qwyc::util::stats::percentile_sorted(&lat_us, 95.0),
         qwyc::util::stats::percentile_sorted(&lat_us, 99.0),
-        models_sum as f64 / answered as f64
+        tot.models_sum as f64 / answered as f64
+    );
+    println!(
+        "retries {} | shed {} ({:.2}%) | timeouts {} ({:.2}%) | errors {} ({:.2}%)",
+        tot.retries,
+        tot.shed,
+        pct(tot.shed),
+        tot.timeouts,
+        pct(tot.timeouts),
+        tot.errors,
+        pct(tot.errors)
     );
     let mut client = Client::connect(&addr)?;
     println!("server: {}", client.stats()?);
@@ -514,45 +568,115 @@ fn bench_client(args: &Args) -> Result<(), QwycError> {
 }
 
 /// Per-connection load results (latencies of OK replies only).
+#[derive(Default)]
 struct ConnLoad {
     lat_us: Vec<f64>,
     models_sum: u64,
+    /// BUSY replies received (each may trigger a retry).
     busy: u64,
+    /// Re-sends issued after a BUSY.
+    retries: u64,
+    /// Requests abandoned after `RETRY_MAX_ATTEMPTS` BUSY replies.
+    shed: u64,
+    /// TIMEOUT replies (request expired in queue past its deadline).
+    timeouts: u64,
+    /// Per-request ERR replies (e.g. `shard_panic` during a fault).
+    errors: u64,
 }
 
-/// One closed-loop pipelined connection; BUSY replies count as completed
-/// (the request was answered — with load-shedding) but not as latency
-/// samples.
+/// Jittered exponential backoff for BUSY retries: base·2^(attempt-1)
+/// capped, scaled by a uniform factor in [0.5, 1.5) so retrying
+/// connections don't re-collide in lockstep.
+fn retry_backoff(attempt: u32, rng: &mut qwyc::util::rng::Rng) -> Duration {
+    let exp = (RETRY_BASE_US << (attempt.saturating_sub(1)).min(10)).min(RETRY_CAP_US);
+    Duration::from_micros((exp as f64 * (0.5 + rng.f64())) as u64)
+}
+
+/// One closed-loop pipelined connection. BUSY replies are retried with
+/// jittered exponential backoff (the same row, a fresh id) up to
+/// `RETRY_MAX_ATTEMPTS`; only then does the request count as shed.
+/// TIMEOUT and per-request ERR replies are terminal for their request —
+/// counted, not fatal — so the load keeps flowing through faults.
 fn run_conn_load(
     addr: &std::net::SocketAddr,
     te: &Dataset,
     requests: usize,
     pipeline: usize,
     row_offset: usize,
+    deadline_ms: u64,
 ) -> Result<ConnLoad, QwycError> {
     let mut client = Client::connect(addr)?;
-    let (mut sent, mut recv) = (0usize, 0usize);
-    let mut load = ConnLoad { lat_us: Vec::with_capacity(requests), models_sum: 0, busy: 0 };
-    while recv < requests {
-        while sent < requests && sent - recv < pipeline {
-            client.send_eval(te.row((row_offset + sent) % te.n))?;
+    let mut rng = qwyc::util::rng::Rng::new(0x9e3779b9 ^ row_offset as u64);
+    let (mut sent, mut done) = (0usize, 0usize);
+    let mut load = ConnLoad { lat_us: Vec::with_capacity(requests), ..Default::default() };
+    // In-flight requests by id → (dataset row, attempt number), so a
+    // BUSY can re-send the same row and attribute the retry correctly.
+    let mut outstanding: std::collections::BTreeMap<u64, (usize, u32)> =
+        std::collections::BTreeMap::new();
+    let mut send = |client: &mut Client, row: usize| -> Result<u64, QwycError> {
+        let id = if deadline_ms == 0 {
+            client.send_eval(te.row(row % te.n))?
+        } else {
+            client.send_eval_with_deadline(te.row(row % te.n), deadline_ms)?
+        };
+        Ok(id)
+    };
+    let mut err_shown = 0usize;
+    while done < requests {
+        while sent < requests && outstanding.len() < pipeline {
+            let row = row_offset + sent;
+            let id = send(&mut client, row)?;
+            outstanding.insert(id, (row, 1));
             sent += 1;
         }
         match client.read_reply()? {
             Reply::Ok(r) => {
-                load.models_sum += r.models as u64;
-                load.lat_us.push(r.latency_us as f64);
-                recv += 1;
+                if outstanding.remove(&r.id).is_some() {
+                    load.models_sum += r.models as u64;
+                    load.lat_us.push(r.latency_us as f64);
+                    done += 1;
+                }
             }
-            Reply::Busy { .. } => {
+            Reply::Busy { id } => {
                 load.busy += 1;
-                recv += 1;
+                if let Some((row, attempt)) = outstanding.remove(&id) {
+                    if attempt >= RETRY_MAX_ATTEMPTS {
+                        load.shed += 1;
+                        done += 1;
+                    } else {
+                        std::thread::sleep(retry_backoff(attempt, &mut rng));
+                        let new_id = send(&mut client, row)?;
+                        outstanding.insert(new_id, (row, attempt + 1));
+                        load.retries += 1;
+                    }
+                }
             }
-            Reply::Err { id, message } => {
-                return Err(QwycError::Io(format!("server error (id {id:?}): {message}")));
+            Reply::Timeout { id } => {
+                if outstanding.remove(&id).is_some() {
+                    load.timeouts += 1;
+                    done += 1;
+                }
             }
-            Reply::Other(line) => {
+            Reply::Err { id: Some(id), message } => {
+                if outstanding.remove(&id).is_some() {
+                    load.errors += 1;
+                    done += 1;
+                    if err_shown < 3 {
+                        eprintln!("request {id} failed: {message}");
+                        err_shown += 1;
+                    }
+                }
+            }
+            Reply::Err { id: None, message } => {
+                return Err(QwycError::Io(format!("server error: {message}")));
+            }
+            Reply::Reloaded(line) | Reply::Other(line) => {
                 return Err(QwycError::Io(format!("unexpected reply: {line}")))
+            }
+            Reply::ReloadRejected { stage, why } => {
+                return Err(QwycError::Io(format!(
+                    "unexpected reply: RELOAD_REJECTED {stage}: {why}"
+                )))
             }
         }
     }

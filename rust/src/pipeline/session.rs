@@ -92,6 +92,16 @@ impl EvalSession {
         self.plan.n_features()
     }
 
+    /// Capture a canary probe set from this session's plan — the
+    /// embedder-side half of a validated plan swap. Before replacing a
+    /// live session with a candidate plan, run
+    /// `session.probe_set(n, seed).check(&candidate)` and keep the old
+    /// session on any `Err` (the serving runtime's `RELOAD` does exactly
+    /// this; see `coordinator::server`).
+    pub fn probe_set(&self, n_probes: usize, seed: u64) -> crate::plan::ProbeSet {
+        crate::plan::ProbeSet::capture(&self.plan, n_probes, seed)
+    }
+
     fn check_stride(&self, x: &[f32], n: usize) -> Result<usize, QwycError> {
         let d = self.plan.n_features();
         if x.len() != n * d {
@@ -273,5 +283,15 @@ mod tests {
         let (_, s) = session();
         assert!(s.decide_batch(&[], 0).unwrap().is_empty());
         assert_eq!(s.decide_iter(&[], 0).unwrap().count(), 0);
+    }
+
+    #[test]
+    fn probe_set_validates_the_sessions_own_plan() {
+        let (_, s) = session();
+        let probes = s.probe_set(8, 11);
+        assert_eq!(probes.width(), s.n_features());
+        assert_eq!(probes.len(), 8);
+        // A session's live plan always passes its own canary.
+        probes.check(s.plan()).unwrap();
     }
 }

@@ -495,6 +495,103 @@ impl PlanSlot {
     }
 }
 
+// ----------------------------------------------------------- probe set
+
+/// Default probe count used by the serving canary.
+pub const DEFAULT_PROBES: usize = 32;
+
+/// Canary probe set for validated plan swaps.
+///
+/// Captured from the *live* plan's geometry (feature width) before a
+/// `RELOAD`, then replayed against the candidate: any candidate that
+/// disagrees on feature width, produces a non-finite score, or violates
+/// the early-exit invariant (an exit that didn't cross its threshold, or
+/// a "full" evaluation that stopped short of T) is refused before a
+/// single request can reach it. Probe rows are deterministic — two fixed
+/// lattice-corner rows (all-zeros, all-ones) plus seeded uniform [0, 1)
+/// rows — so a rejection is reproducible from the reply alone.
+pub struct ProbeSet {
+    d: usize,
+    n: usize,
+    rows: Vec<f32>,
+}
+
+impl ProbeSet {
+    /// Capture `n_probes` rows (min 2) against `live`'s feature width.
+    pub fn capture(live: &CompiledPlan, n_probes: usize, seed: u64) -> ProbeSet {
+        let d = live.n_features();
+        let n = n_probes.max(2);
+        let mut rows = vec![0f32; n * d];
+        for v in rows[d..2 * d].iter_mut() {
+            *v = 1.0;
+        }
+        let mut rng = crate::util::rng::Rng::new(seed);
+        for v in rows[2 * d..].iter_mut() {
+            *v = rng.f32();
+        }
+        ProbeSet { d, n, rows }
+    }
+
+    /// Feature width the probes were captured against.
+    pub fn width(&self) -> usize {
+        self.d
+    }
+
+    /// Number of probe rows.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Score every probe against `candidate` and check the serving
+    /// invariants; `Err` explains the first violation (its message is
+    /// what `RELOAD_REJECTED canary:` carries).
+    pub fn check(&self, candidate: &CompiledPlan) -> Result<(), QwycError> {
+        if candidate.n_features() != self.d {
+            return Err(QwycError::Validate(format!(
+                "feature width changed: live plan serves d={}, candidate wants d={}",
+                self.d,
+                candidate.n_features()
+            )));
+        }
+        let t = candidate.t();
+        for i in 0..self.n {
+            let x = &self.rows[i * self.d..(i + 1) * self.d];
+            let r = candidate.eval_single(x);
+            if !r.score.is_finite() {
+                return Err(QwycError::Validate(format!(
+                    "probe {i}: non-finite score {}",
+                    r.score
+                )));
+            }
+            if r.early {
+                let p = r.models_evaluated;
+                if p == 0 || p > t {
+                    return Err(QwycError::Validate(format!(
+                        "probe {i}: early exit after {p} models, outside 1..={t}"
+                    )));
+                }
+                let crossed = r.score > candidate.eps_pos()[p - 1]
+                    || r.score < candidate.eps_neg()[p - 1];
+                if !crossed {
+                    return Err(QwycError::Validate(format!(
+                        "probe {i}: early exit at position {p} without crossing a threshold"
+                    )));
+                }
+            } else if r.models_evaluated != t {
+                return Err(QwycError::Validate(format!(
+                    "probe {i}: full evaluation stopped after {} of {t} models",
+                    r.models_evaluated
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -730,5 +827,83 @@ mod tests {
             assert_eq!(got.early, want.early);
             assert_eq!(got.score.to_bits(), want.score.to_bits());
         }
+    }
+
+    /// A 2-feature plan whose base models output `f32::MAX` each: every
+    /// probe row sums to +inf (validly structured, scores garbage) — the
+    /// shape of corruption that compiles fine but must fail the canary.
+    fn overflowing_plan() -> QwycPlan {
+        let l0 = Lattice::from_params(vec![0], vec![f32::MAX, f32::MAX]);
+        let l1 = Lattice::from_params(vec![1], vec![f32::MAX, f32::MAX]);
+        let ens =
+            Ensemble::new("hot", vec![BaseModel::Lattice(l0), BaseModel::Lattice(l1)], 0.25, 1.0);
+        let fc = FastClassifier {
+            order: vec![0, 1],
+            eps_pos: vec![f32::INFINITY, f32::INFINITY],
+            eps_neg: vec![f32::NEG_INFINITY, f32::NEG_INFINITY],
+            bias: 0.25,
+            beta: 1.0,
+        };
+        QwycPlan::bundle(ens, fc, "hot-plan", 0.01).unwrap()
+    }
+
+    #[test]
+    fn probe_set_accepts_a_well_behaved_candidate() {
+        let live = toy_plan().compile().unwrap();
+        let probes = ProbeSet::capture(&live, DEFAULT_PROBES, 42);
+        assert_eq!(probes.width(), 2);
+        assert_eq!(probes.len(), DEFAULT_PROBES);
+        assert!(!probes.is_empty());
+        // The live plan trivially passes its own probes, and so does an
+        // identically-shaped recompile (the RELOAD happy path).
+        probes.check(&live).unwrap();
+        probes.check(&toy_plan().compile().unwrap()).unwrap();
+    }
+
+    #[test]
+    fn probe_set_capture_is_deterministic_for_a_seed() {
+        let live = toy_plan().compile().unwrap();
+        let a = ProbeSet::capture(&live, 8, 7);
+        let b = ProbeSet::capture(&live, 8, 7);
+        assert_eq!(a.rows, b.rows);
+        let c = ProbeSet::capture(&live, 8, 8);
+        assert_ne!(a.rows, c.rows);
+    }
+
+    #[test]
+    fn probe_set_rejects_width_mismatch() {
+        let live = toy_plan().compile().unwrap();
+        let probes = ProbeSet::capture(&live, 4, 1);
+        // A 3-feature candidate: same toy shape plus one extra input.
+        let l0 = Lattice::from_params(vec![0], vec![0.0, 1.0]);
+        let l1 = Lattice::from_params(vec![1], vec![1.0, 0.0]);
+        let l2 = Lattice::from_params(vec![2], vec![0.0, 1.0]);
+        let ens = Ensemble::new(
+            "wide",
+            vec![BaseModel::Lattice(l0), BaseModel::Lattice(l1), BaseModel::Lattice(l2)],
+            0.25,
+            1.0,
+        );
+        let fc = FastClassifier {
+            order: vec![0, 1, 2],
+            eps_pos: vec![f32::INFINITY; 3],
+            eps_neg: vec![f32::NEG_INFINITY; 3],
+            bias: 0.25,
+            beta: 1.0,
+        };
+        let wide = QwycPlan::bundle(ens, fc, "wide-plan", 0.01).unwrap().compile().unwrap();
+        let err = probes.check(&wide).unwrap_err();
+        assert_eq!(err.stage(), "validate");
+        assert!(err.message().contains("feature width"), "{}", err.message());
+    }
+
+    #[test]
+    fn probe_set_rejects_non_finite_scores() {
+        let live = toy_plan().compile().unwrap();
+        let probes = ProbeSet::capture(&live, 4, 1);
+        let hot = overflowing_plan().compile().unwrap();
+        let err = probes.check(&hot).unwrap_err();
+        assert_eq!(err.stage(), "validate");
+        assert!(err.message().contains("non-finite"), "{}", err.message());
     }
 }

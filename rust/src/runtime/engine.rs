@@ -87,6 +87,16 @@ pub trait Engine {
             self.backend()
         )))
     }
+    /// May this SAME engine value keep serving after a panic unwound out
+    /// of [`Engine::classify_batch`]? Only sound when a half-finished
+    /// call cannot leave observable state behind (no interior
+    /// mutability, no device session to wedge). The default declines, so
+    /// the shard supervisor drops the engine and rebuilds it from the
+    /// factory; backends with mutable or external state (PJRT device
+    /// buffers) must keep the default.
+    fn reusable_after_panic(&self) -> bool {
+        false
+    }
 }
 
 // ---------------------------------------------------------------- native
@@ -142,7 +152,24 @@ impl Engine for NativeEngine {
         self.plan = plan;
         Ok(())
     }
+
+    fn reusable_after_panic(&self) -> bool {
+        // Sound because of the unwind-safety shape asserted below: an
+        // immutable shared plan plus a stateless pool means an unwound
+        // `classify_batch` leaves nothing half-mutated behind.
+        true
+    }
 }
+
+// `reusable_after_panic` above relies on NativeEngine carrying no
+// interior mutability (`Arc<CompiledPlan>` of plain data + a stateless
+// pool descriptor). Assert that shape at compile time so a future
+// mutable cache on the engine breaks this line instead of silently
+// un-sounding the supervisor's engine reuse.
+const _: () = {
+    const fn assert_unwind_safe<T: std::panic::UnwindSafe + std::panic::RefUnwindSafe>() {}
+    assert_unwind_safe::<NativeEngine>()
+};
 
 // ----------------------------------------------------------------- pjrt
 

@@ -1,0 +1,310 @@
+//! Deterministic failpoint layer for chaos testing the serving runtime.
+//!
+//! A failpoint is a named hook compiled into production code paths
+//! (`failpoints::fire("shard_panic")`) that stays dormant unless the
+//! process opts in — either through the `QWYC_FAILPOINTS` environment
+//! variable or programmatically via [`configure`]. When dormant the cost
+//! is one relaxed atomic load, so the hooks can live on the batch hot
+//! path of the coordinator without a feature gate.
+//!
+//! # Grammar
+//!
+//! ```text
+//! QWYC_FAILPOINTS = entry [';' entry]*
+//! entry           = name ['@' key '=' value [',' key '=' value]*]
+//! ```
+//!
+//! e.g. `shard_panic@at=3;slow_batch@shard=1,ms=50;reload_corrupt`.
+//!
+//! Recognised keys (all values are unsigned integers):
+//!
+//! | key       | meaning                                                   |
+//! |-----------|-----------------------------------------------------------|
+//! | `at`      | fire exactly on the Nth hit (1-based), never again        |
+//! | `batch`   | alias for `at` — reads naturally for per-batch hooks      |
+//! | `every`   | fire on every Nth hit                                     |
+//! | `shard`   | only hits reported from this shard index count            |
+//! | `ms`      | payload for sleep-style failpoints (see [`sleep_ms`])     |
+//! | `p`       | fire with probability p% per hit, seeded-deterministic    |
+//! | `seed`    | seed for `p` (default `0x5eed`)                           |
+//!
+//! A bare `name` with no args fires on every hit. Unknown names never
+//! fire; unknown keys are ignored so specs stay forward-compatible.
+//!
+//! # Determinism
+//!
+//! All triggers are functions of the per-failpoint hit counter (and, for
+//! `p`, a SplitMix64 hash of `seed ^ hit`), never of wall-clock time or
+//! global RNG state — the same spec against the same request sequence
+//! reproduces the same faults.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, Once};
+
+use crate::error::QwycError;
+
+/// Environment variable read (once, lazily) for the process-wide spec.
+pub const ENV_VAR: &str = "QWYC_FAILPOINTS";
+
+/// One configured failpoint: its parsed `key=value` args plus a
+/// monotonically increasing hit counter.
+struct Spec {
+    args: Vec<(String, u64)>,
+    hits: AtomicU64,
+}
+
+impl Spec {
+    fn arg(&self, key: &str) -> Option<u64> {
+        self.args.iter().find(|(k, _)| k == key).map(|&(_, v)| v)
+    }
+}
+
+static INIT: Once = Once::new();
+static ENABLED: AtomicBool = AtomicBool::new(false);
+// A Vec rather than a HashMap because `Mutex::new(Vec::new())` is const;
+// specs hold a handful of entries, so linear lookup is fine.
+static TABLE: Mutex<Vec<(String, Arc<Spec>)>> = Mutex::new(Vec::new());
+
+fn table() -> std::sync::MutexGuard<'static, Vec<(String, Arc<Spec>)>> {
+    // A panic while holding the table lock leaves consistent data (we
+    // only ever replace or read the Vec), so poisoning is ignorable.
+    TABLE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn install(parsed: Vec<(String, Arc<Spec>)>) {
+    let enabled = !parsed.is_empty();
+    *table() = parsed;
+    ENABLED.store(enabled, Ordering::SeqCst);
+}
+
+fn ensure_init() {
+    INIT.call_once(|| {
+        if let Ok(spec) = std::env::var(ENV_VAR) {
+            match parse(&spec) {
+                Ok(parsed) => install(parsed),
+                Err(e) => eprintln!("{ENV_VAR} ignored: {}", e.message()),
+            }
+        }
+    });
+}
+
+/// Cheap global check: are ANY failpoints configured? This is the only
+/// cost production pays when chaos is off — guard non-trivial hook
+/// work behind it.
+pub fn enabled() -> bool {
+    ensure_init();
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Install a failpoint spec programmatically, replacing any previous
+/// configuration (including one loaded from the environment). An empty
+/// spec disables all failpoints. Tests use this — it claims the
+/// one-time env read, so explicit configuration always wins.
+pub fn configure(spec: &str) -> Result<(), QwycError> {
+    INIT.call_once(|| {});
+    let parsed = parse(spec)?;
+    install(parsed);
+    Ok(())
+}
+
+fn parse(spec: &str) -> Result<Vec<(String, Arc<Spec>)>, QwycError> {
+    let mut out: Vec<(String, Arc<Spec>)> = Vec::new();
+    for entry in spec.split(';').map(str::trim).filter(|e| !e.is_empty()) {
+        let (name, args_str) = match entry.split_once('@') {
+            Some((n, a)) => (n.trim(), a),
+            None => (entry, ""),
+        };
+        if name.is_empty() {
+            return Err(QwycError::Config(format!("failpoint entry '{entry}' has no name")));
+        }
+        let mut args = Vec::new();
+        for kv in args_str.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let (k, v) = kv.split_once('=').ok_or_else(|| {
+                QwycError::Config(format!("failpoint arg '{kv}' is not key=value (in '{entry}')"))
+            })?;
+            let v: u64 = v.trim().parse().map_err(|_| {
+                QwycError::Config(format!("failpoint arg '{kv}' has a non-integer value"))
+            })?;
+            args.push((k.trim().to_string(), v));
+        }
+        out.push((name.to_string(), Arc::new(Spec { args, hits: AtomicU64::new(0) })));
+    }
+    Ok(out)
+}
+
+fn lookup(name: &str) -> Option<Arc<Spec>> {
+    table().iter().find(|(n, _)| n == name).map(|(_, s)| s.clone())
+}
+
+/// Report a hit on `name` with no shard affinity; returns whether the
+/// failpoint should trigger.
+pub fn fire(name: &str) -> bool {
+    fire_at(name, None)
+}
+
+/// Report a hit on `name` from shard `shard`. Entries carrying a
+/// `shard=` filter only count hits from that shard.
+pub fn fire_on_shard(name: &str, shard: u64) -> bool {
+    fire_at(name, Some(shard))
+}
+
+fn fire_at(name: &str, shard: Option<u64>) -> bool {
+    if !enabled() {
+        return false;
+    }
+    let Some(spec) = lookup(name) else { return false };
+    if let Some(want) = spec.arg("shard") {
+        if shard != Some(want) {
+            return false;
+        }
+    }
+    let hit = spec.hits.fetch_add(1, Ordering::SeqCst) + 1;
+    if let Some(at) = spec.arg("at").or_else(|| spec.arg("batch")) {
+        return hit == at;
+    }
+    if let Some(every) = spec.arg("every") {
+        return every > 0 && hit % every == 0;
+    }
+    if let Some(p) = spec.arg("p") {
+        let seed = spec.arg("seed").unwrap_or(0x5eed);
+        return splitmix64(seed ^ hit) % 100 < p;
+    }
+    true
+}
+
+/// The configured value of `key` for failpoint `name`, if any. Used by
+/// payload-carrying hooks (e.g. `ms` for [`sleep_ms`]).
+pub fn arg(name: &str, key: &str) -> Option<u64> {
+    if !enabled() {
+        return None;
+    }
+    lookup(name).and_then(|s| s.arg(key))
+}
+
+/// Sleep hook: if `name` fires for `shard`, sleep its `ms=` payload
+/// (default 10ms) and return true.
+pub fn sleep_ms(name: &str, shard: u64) -> bool {
+    if !fire_on_shard(name, shard) {
+        return false;
+    }
+    let ms = arg(name, "ms").unwrap_or(10);
+    std::thread::sleep(std::time::Duration::from_millis(ms));
+    true
+}
+
+/// Panic hook: if `name` fires for `shard`, panic with a recognizable
+/// message. The supervisor's `catch_unwind` is expected to absorb it.
+pub fn maybe_panic(name: &str, shard: u64) {
+    if fire_on_shard(name, shard) {
+        panic!("injected failpoint '{name}'");
+    }
+}
+
+fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The failpoint table is process-global and lib unit tests run in
+    // parallel threads, so every test in this module serializes on one
+    // lock and clears the table before releasing it.
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    struct Guard<'a>(#[allow(dead_code)] std::sync::MutexGuard<'a, ()>);
+
+    impl Drop for Guard<'_> {
+        fn drop(&mut self) {
+            configure("").unwrap();
+        }
+    }
+
+    fn guard(spec: &str) -> Guard<'_> {
+        let g = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        configure(spec).unwrap();
+        Guard(g)
+    }
+
+    #[test]
+    fn disabled_by_default_and_after_clear() {
+        let _g = guard("");
+        assert!(!enabled());
+        assert!(!fire("anything"));
+        assert_eq!(arg("anything", "ms"), None);
+    }
+
+    #[test]
+    fn bare_name_fires_every_hit_and_unknown_names_never_fire() {
+        let _g = guard("always_on");
+        assert!(enabled());
+        assert!(fire("always_on"));
+        assert!(fire("always_on"));
+        assert!(!fire("never_configured"));
+    }
+
+    #[test]
+    fn at_fires_exactly_once_on_the_nth_hit() {
+        let _g = guard("boom@at=3");
+        let fired: Vec<bool> = (0..5).map(|_| fire("boom")).collect();
+        assert_eq!(fired, vec![false, false, true, false, false]);
+    }
+
+    #[test]
+    fn batch_is_an_alias_for_at() {
+        let _g = guard("boom@batch=2");
+        assert!(!fire("boom"));
+        assert!(fire("boom"));
+        assert!(!fire("boom"));
+    }
+
+    #[test]
+    fn every_fires_periodically() {
+        let _g = guard("tick@every=2");
+        let fired: Vec<bool> = (0..6).map(|_| fire("tick")).collect();
+        assert_eq!(fired, vec![false, true, false, true, false, true]);
+    }
+
+    #[test]
+    fn shard_filter_ignores_other_shards() {
+        let _g = guard("boom@shard=1,at=1");
+        // Hits from shard 0 don't even advance the counter.
+        assert!(!fire_on_shard("boom", 0));
+        assert!(!fire_on_shard("boom", 0));
+        assert!(fire_on_shard("boom", 1));
+        assert!(!fire_on_shard("boom", 1));
+    }
+
+    #[test]
+    fn probabilistic_trigger_is_deterministic_for_a_seed() {
+        let _g = guard("flaky@p=50,seed=7");
+        let first: Vec<bool> = (0..32).map(|_| fire("flaky")).collect();
+        configure("flaky@p=50,seed=7").unwrap();
+        let second: Vec<bool> = (0..32).map(|_| fire("flaky")).collect();
+        assert_eq!(first, second);
+        assert!(first.iter().any(|&b| b) && first.iter().any(|&b| !b));
+    }
+
+    #[test]
+    fn args_are_queryable_and_multiple_entries_coexist() {
+        let _g = guard("slow_batch@shard=1,ms=50; reload_corrupt");
+        assert_eq!(arg("slow_batch", "ms"), Some(50));
+        assert_eq!(arg("slow_batch", "shard"), Some(1));
+        assert_eq!(arg("slow_batch", "missing"), None);
+        assert!(fire("reload_corrupt"));
+        assert!(!fire_on_shard("slow_batch", 0));
+        assert!(fire_on_shard("slow_batch", 1));
+    }
+
+    #[test]
+    fn malformed_specs_are_rejected() {
+        let _g = guard("");
+        assert!(configure("boom@at").is_err());
+        assert!(configure("boom@at=notanum").is_err());
+        assert!(configure("@at=1").is_err());
+    }
+}

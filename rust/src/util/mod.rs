@@ -4,6 +4,7 @@
 //! see DESIGN.md §4 (Substitutions).
 
 pub mod cli;
+pub mod failpoints;
 pub mod json;
 pub mod pool;
 pub mod proptest;

@@ -1,0 +1,333 @@
+//! Deterministic chaos harness for the supervised serving runtime.
+//!
+//! Each test drives the real TCP coordinator with a failpoint spec
+//! (`qwyc::util::failpoints`) injected through `configure()` — the same
+//! hooks `QWYC_FAILPOINTS` reaches in production — and asserts the
+//! failure-semantics contract: every request gets exactly one terminal
+//! reply, a panicked shard restarts and serves bitwise-identically, and
+//! a rejected RELOAD leaves last-known-good serving untouched.
+//!
+//! Failpoint state is process-global, so the tests serialize on a lock
+//! and clear the table on drop (even when an assertion panics).
+
+use qwyc::coordinator::{BatchPolicy, Client, Reply, Server, ServerConfig};
+use qwyc::ensemble::{BaseModel, Ensemble};
+use qwyc::lattice::Lattice;
+use qwyc::plan::{CompiledPlan, PlanArtifact, PlanFormat, QwycPlan};
+use qwyc::qwyc::FastClassifier;
+use qwyc::util::failpoints;
+use std::collections::BTreeSet;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+static FP_LOCK: Mutex<()> = Mutex::new(());
+
+/// Holds the failpoint lock for the test's duration and guarantees the
+/// global table is cleared on the way out, pass or fail.
+struct FpGuard<'a>(#[allow(dead_code)] MutexGuard<'a, ()>);
+
+impl Drop for FpGuard<'_> {
+    fn drop(&mut self) {
+        failpoints::configure("").expect("clear failpoints");
+    }
+}
+
+fn failpoints_guard(spec: &str) -> FpGuard<'static> {
+    let g = FP_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    failpoints::configure(spec).expect("configure failpoints");
+    FpGuard(g)
+}
+
+/// Tiny deterministic 2-feature plan (f0 = x0, f1 = 1 - x1; neg-only ε) —
+/// the same shape the plan-layer canary tests use.
+fn toy_plan(name: &str) -> QwycPlan {
+    let l0 = Lattice::from_params(vec![0], vec![0.0, 1.0]);
+    let l1 = Lattice::from_params(vec![1], vec![1.0, 0.0]);
+    let ens =
+        Ensemble::new("toy", vec![BaseModel::Lattice(l0), BaseModel::Lattice(l1)], 0.25, 1.0);
+    let fc = FastClassifier {
+        order: vec![1, 0],
+        eps_pos: vec![f32::INFINITY, f32::INFINITY],
+        eps_neg: vec![-0.5, f32::NEG_INFINITY],
+        bias: 0.25,
+        beta: 1.0,
+    };
+    QwycPlan::bundle_with_width(ens, fc, name, 0.01, 2).unwrap()
+}
+
+fn toy_shared(name: &str) -> Arc<CompiledPlan> {
+    toy_plan(name).compile_shared().unwrap()
+}
+
+/// Same construction, one feature wider — compiles fine, but a live
+/// 2-feature server must refuse it at the canary's width check.
+fn three_feature_plan(name: &str) -> QwycPlan {
+    let ls: Vec<BaseModel> = (0..3)
+        .map(|f| BaseModel::Lattice(Lattice::from_params(vec![f], vec![0.0, 1.0])))
+        .collect();
+    let ens = Ensemble::new("toy3", ls, 0.25, 1.0);
+    let fc = FastClassifier {
+        order: vec![0, 1, 2],
+        eps_pos: vec![f32::INFINITY; 3],
+        eps_neg: vec![f32::NEG_INFINITY; 3],
+        bias: 0.25,
+        beta: 1.0,
+    };
+    QwycPlan::bundle_with_width(ens, fc, name, 0.01, 3).unwrap()
+}
+
+/// Structurally valid but numerically poisoned: f32::MAX corner values
+/// overflow the running sum to +inf on every probe row — the shape of
+/// corruption that loads and compiles fine but must fail the canary.
+fn overflowing_plan(name: &str) -> QwycPlan {
+    let l0 = Lattice::from_params(vec![0], vec![f32::MAX, f32::MAX]);
+    let l1 = Lattice::from_params(vec![1], vec![f32::MAX, f32::MAX]);
+    let ens =
+        Ensemble::new("hot", vec![BaseModel::Lattice(l0), BaseModel::Lattice(l1)], 0.25, 1.0);
+    let fc = FastClassifier {
+        order: vec![0, 1],
+        eps_pos: vec![f32::INFINITY; 2],
+        eps_neg: vec![f32::NEG_INFINITY; 2],
+        bias: 0.25,
+        beta: 1.0,
+    };
+    QwycPlan::bundle_with_width(ens, fc, name, 0.01, 2).unwrap()
+}
+
+fn rows(n: usize) -> Vec<[f32; 2]> {
+    (0..n).map(|i| [(i as f32 * 0.137) % 1.0, (i as f32 * 0.291) % 1.0]).collect()
+}
+
+/// Score a reply bitwise against the reference single-example path,
+/// through the protocol's %.6f formatting.
+fn assert_matches_reference(plan: &CompiledPlan, row: &[f32], r: &qwyc::coordinator::EvalResponse) {
+    let want = plan.eval_single(row);
+    assert_eq!(r.positive, want.positive, "id {}", r.id);
+    assert_eq!(r.models as usize, want.models_evaluated, "id {}", r.id);
+    let printed: f32 = format!("{:.6}", want.score).parse().unwrap();
+    assert_eq!(r.score.to_bits(), printed.to_bits(), "id {}", r.id);
+}
+
+/// Tentpole acceptance #1: a shard panic mid-stream yields exactly one
+/// terminal reply per outstanding id (`ERR <id> shard_panic`, never a
+/// hang, never a duplicate), the supervisor restarts the shard, and the
+/// recovered shard serves bitwise-identically to the reference path.
+#[test]
+fn shard_panic_gets_terminal_errs_and_shard_recovers_bitwise() {
+    let _fp = failpoints_guard("shard_panic@at=1");
+    let plan = toy_shared("chaos-a");
+    let config = ServerConfig {
+        shards: 1,
+        queue_cap: 4096,
+        policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+        default_deadline: None,
+    };
+    let server = Server::start_with_plan("127.0.0.1:0", plan.clone(), config).expect("start");
+    let mut client = Client::connect(&server.addr).expect("connect");
+
+    let rows = rows(40);
+    let mut ids = Vec::new();
+    for row in &rows {
+        ids.push(client.send_eval(row).expect("send"));
+    }
+    let (mut ok, mut panicked) = (0u64, 0u64);
+    let mut seen = BTreeSet::new();
+    for _ in 0..rows.len() {
+        match client.read_reply().expect("reply") {
+            Reply::Ok(r) => {
+                assert!(seen.insert(r.id), "duplicate id {}", r.id);
+                ok += 1;
+            }
+            Reply::Err { id: Some(id), message } => {
+                assert!(message.contains("shard_panic"), "{message}");
+                assert!(seen.insert(id), "duplicate id {id}");
+                panicked += 1;
+            }
+            other => panic!("unexpected reply: {other:?}"),
+        }
+    }
+    for id in &ids {
+        assert!(seen.contains(id), "id {id} never answered");
+    }
+    assert!(panicked >= 1, "the shard_panic failpoint never fired");
+    assert!(ok >= 1, "the shard never recovered (ok={ok}, panicked={panicked})");
+    assert!(
+        server.metrics.ops().snapshot().shard_restarts >= 1,
+        "restart counter never moved"
+    );
+
+    // The recovered shard answers bitwise-identically to eval_single —
+    // restart must not perturb scoring.
+    for row in &rows {
+        let r = client.eval(row).expect("post-recovery eval");
+        assert_matches_reference(&plan, row, &r);
+    }
+    server.stop();
+}
+
+/// Tentpole acceptance #2: with every batch stalled past the default
+/// deadline (slow_batch failpoint), queued requests are shed with
+/// `TIMEOUT <id>` at the batch boundary; `DEADLINE_MS=0` opts a request
+/// out of the default and it rides out the stall to an OK.
+#[test]
+fn queued_past_deadline_requests_are_shed_with_timeout() {
+    let _fp = failpoints_guard("slow_batch@ms=60");
+    let plan = toy_shared("chaos-deadline");
+    let config = ServerConfig {
+        shards: 1,
+        queue_cap: 4096,
+        policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+        // Far below the 60ms injected stall: every defaulted request
+        // expires while queued.
+        default_deadline: Some(Duration::from_millis(15)),
+    };
+    let server = Server::start_with_plan("127.0.0.1:0", plan, config).expect("start");
+    let mut client = Client::connect(&server.addr).expect("connect");
+
+    let n = 6usize;
+    let mut ids = Vec::new();
+    for i in 0..n {
+        ids.push(client.send_eval(&[0.1 * i as f32, 0.5]).expect("send"));
+    }
+    let mut seen = BTreeSet::new();
+    for _ in 0..n {
+        match client.read_reply().expect("reply") {
+            Reply::Timeout { id } => {
+                assert!(seen.insert(id), "duplicate id {id}");
+            }
+            other => panic!("expected TIMEOUT, got {other:?}"),
+        }
+    }
+    for id in &ids {
+        assert!(seen.contains(id), "id {id} never answered");
+    }
+    assert_eq!(server.metrics.ops().snapshot().timeouts, n as u64);
+
+    // Explicit opt-out overrides the server default: the request waits
+    // out the stall and still answers OK.
+    let id = client.send_eval_with_deadline(&[0.3, 0.7], 0).expect("send opt-out");
+    match client.read_reply().expect("reply") {
+        Reply::Ok(r) => assert_eq!(r.id, id),
+        other => panic!("opt-out request should survive the stall: {other:?}"),
+    }
+    server.stop();
+}
+
+/// Tentpole acceptance #3: every rejected RELOAD — unreadable artifact,
+/// width change, numerically poisoned candidate, or the reload_corrupt
+/// failpoint — keeps last-known-good serving bitwise-identically, and a
+/// clean retry of the same valid artifact then swaps in.
+#[test]
+fn rejected_reload_keeps_last_known_good_serving() {
+    let _fp = failpoints_guard("");
+    let plan = toy_shared("chaos-lkg");
+    let config = ServerConfig {
+        shards: 1,
+        queue_cap: 4096,
+        policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+        default_deadline: None,
+    };
+    let server = Server::start_with_plan("127.0.0.1:0", plan.clone(), config).expect("start");
+    let mut client = Client::connect(&server.addr).expect("connect");
+    let mut ctl = Client::connect(&server.addr).expect("connect ctl");
+
+    let rows = rows(16);
+    let reference: Vec<(bool, u32)> = rows
+        .iter()
+        .map(|row| {
+            let r = client.eval(row).expect("reference eval");
+            (r.positive, r.score.to_bits())
+        })
+        .collect();
+    let assert_still_reference = |client: &mut Client| {
+        for (row, &(positive, bits)) in rows.iter().zip(reference.iter()) {
+            let r = client.eval(row).expect("eval");
+            assert_eq!(r.positive, positive, "decision drifted after a rejected reload");
+            assert_eq!(r.score.to_bits(), bits, "score drifted after a rejected reload");
+        }
+    };
+
+    let tmp = std::env::temp_dir();
+    // (io) Unreadable artifact.
+    let reply = ctl.reload("/nonexistent/chaos_plan.bin").expect("reload io");
+    assert!(reply.starts_with("RELOAD_REJECTED io:"), "{reply}");
+    // (canary: width) Loadable plan serving a different feature space.
+    let wide_path = tmp.join("qwyc_chaos_wide.json");
+    three_feature_plan("chaos-wide").save(&wide_path).expect("save wide");
+    let reply = ctl.reload(wide_path.to_str().unwrap()).expect("reload wide");
+    assert!(reply.starts_with("RELOAD_REJECTED canary:"), "{reply}");
+    assert!(reply.contains("feature width"), "{reply}");
+    // (canary: scores) Structurally valid, numerically poisoned.
+    let hot_path = tmp.join("qwyc_chaos_hot.bin");
+    PlanArtifact::from_plan(overflowing_plan("chaos-hot"))
+        .expect("compile hot")
+        .save(&hot_path, PlanFormat::Binary)
+        .expect("save hot");
+    let reply = ctl.reload(hot_path.to_str().unwrap()).expect("reload hot");
+    assert!(reply.starts_with("RELOAD_REJECTED canary:"), "{reply}");
+    assert!(reply.contains("non-finite"), "{reply}");
+    // (canary: injected) The reload_corrupt failpoint rejects even a
+    // perfectly valid artifact — the harness's forced-verdict hook.
+    let good_path = tmp.join("qwyc_chaos_good.bin");
+    PlanArtifact::from_plan(toy_plan("chaos-good"))
+        .expect("compile good")
+        .save(&good_path, PlanFormat::Binary)
+        .expect("save good");
+    failpoints::configure("reload_corrupt").expect("arm reload_corrupt");
+    let reply = ctl.reload(good_path.to_str().unwrap()).expect("reload corrupt");
+    assert!(
+        reply.starts_with("RELOAD_REJECTED canary: injected failpoint"),
+        "{reply}"
+    );
+    failpoints::configure("").expect("disarm");
+
+    // Four rejections, zero swaps — and the surviving generation still
+    // serves the exact reference bits.
+    let ops = server.metrics.ops().snapshot();
+    assert_eq!(ops.reload_rejected, 4);
+    assert_eq!(ops.reload_ok, 0);
+    assert_still_reference(&mut client);
+
+    // With the failpoint cleared the same artifact swaps in cleanly,
+    // and (same geometry) the replies stay bitwise identical.
+    let reply = ctl.reload(good_path.to_str().unwrap()).expect("reload good");
+    assert!(reply.starts_with("RELOADED chaos-good gen=1"), "{reply}");
+    assert_eq!(server.metrics.ops().snapshot().reload_ok, 1);
+    assert_still_reference(&mut client);
+
+    server.stop();
+    std::fs::remove_file(&wide_path).ok();
+    std::fs::remove_file(&hot_path).ok();
+    std::fs::remove_file(&good_path).ok();
+}
+
+/// DRAIN empties the shard queues, then admission stays closed: new
+/// EVALs get a terminal `ERR <id> draining` instead of queueing.
+#[test]
+fn drain_stops_admission_after_emptying_queues() {
+    let _fp = failpoints_guard("");
+    let plan = toy_shared("chaos-drain");
+    let config = ServerConfig {
+        shards: 2,
+        queue_cap: 4096,
+        policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+        default_deadline: None,
+    };
+    let server = Server::start_with_plan("127.0.0.1:0", plan, config).expect("start");
+    let mut client = Client::connect(&server.addr).expect("connect");
+    client.eval(&[0.2, 0.8]).expect("pre-drain eval");
+
+    let mut ctl = Client::connect(&server.addr).expect("connect ctl");
+    let reply = ctl.drain().expect("drain");
+    assert_eq!(reply, "DRAINED queued=0");
+
+    let id = client.send_eval(&[0.2, 0.8]).expect("send post-drain");
+    match client.read_reply().expect("reply") {
+        Reply::Err { id: got, message } => {
+            assert_eq!(got, Some(id));
+            assert!(message.contains("draining"), "{message}");
+        }
+        other => panic!("expected a draining ERR: {other:?}"),
+    }
+    server.stop();
+}

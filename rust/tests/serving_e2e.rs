@@ -123,6 +123,7 @@ fn responses_bitwise_identical_at_1_and_4_shards() {
             shards,
             queue_cap: 4096,
             policy: BatchPolicy { max_batch: 16, max_wait: Duration::from_millis(1) },
+            default_deadline: None,
         };
         let server =
             Server::start_with_plan("127.0.0.1:0", plan.clone(), config).expect("server start");
@@ -195,6 +196,7 @@ fn reload_swaps_plan_without_erroring_inflight_requests() {
         shards: 2,
         queue_cap: 4096,
         policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+        default_deadline: None,
     };
     let server = Server::start_with_plan("127.0.0.1:0", plan_a, config).expect("server start");
 
@@ -225,9 +227,10 @@ fn reload_swaps_plan_without_erroring_inflight_requests() {
         assert_eq!(r.positive, want.positive, "post-reload {i}");
         assert_eq!(r.models as usize, want.models_evaluated, "post-reload {i}");
     }
-    // A bogus path fails loudly without killing the server.
+    // A bogus path is refused loudly (validated-reload stage tag)
+    // without killing the server.
     let err = ctl.reload("/nonexistent/plan.json").expect("reload io");
-    assert!(err.starts_with("ERR - reload:"), "{err}");
+    assert!(err.starts_with("RELOAD_REJECTED io:"), "{err}");
     assert!(client.eval(te.row(0)).is_ok(), "server died after failed reload");
 
     // Reload once more from the zero-copy binary form — the server
@@ -308,6 +311,7 @@ fn full_queue_sheds_load_with_busy() {
         shards: 1,
         queue_cap: 1,
         policy: BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(0) },
+        default_deadline: None,
     };
     let server =
         Server::start("127.0.0.1:0", |_shard| Box::new(Slow), config).expect("server start");
@@ -406,6 +410,65 @@ fn failing_engine_reports_id_correlated_errors() {
         }
     }
     assert_eq!(ids.into_iter().collect::<Vec<_>>(), vec![0, 1]);
+    server.stop();
+}
+
+/// Protocol robustness: an oversized line, binary garbage, and a
+/// half-written final line each get a clean per-line reply on the same
+/// connection — neither the connection thread nor the acceptor dies,
+/// and fresh connections still work afterwards.
+#[test]
+fn garbage_oversized_and_partial_lines_get_per_line_errors() {
+    use qwyc::coordinator::MAX_LINE_BYTES;
+    use std::io::{BufRead, BufReader, Write};
+    let (te, ens, fc) = tiny_model();
+    let d = te.d;
+    let (ens2, fc2) = (ens.clone(), fc.clone());
+    let server = Server::start(
+        "127.0.0.1:0",
+        move |_shard| Box::new(native_engine(&ens2, &fc2, d)),
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+    )
+    .expect("server start");
+
+    let mut s = std::net::TcpStream::connect(server.addr).unwrap();
+    let mut r = BufReader::new(s.try_clone().unwrap());
+    let mut line = String::new();
+
+    // An oversized line (past the cap) is discarded as it streams in —
+    // one clean ERR, no unbounded buffering, connection stays up.
+    let mut big = vec![b'z'; MAX_LINE_BYTES + 1024];
+    big.push(b'\n');
+    s.write_all(&big).unwrap();
+    r.read_line(&mut line).unwrap();
+    assert!(line.starts_with("ERR - line too long"), "{line}");
+
+    // Binary garbage is an unknown command, not a crash.
+    line.clear();
+    s.write_all(b"\xde\xad\xbe\xef garbage\n").unwrap();
+    r.read_line(&mut line).unwrap();
+    assert!(line.starts_with("ERR"), "{line}");
+
+    // The same connection still serves real requests after both.
+    line.clear();
+    let feats: Vec<String> = te.row(0).iter().map(|v| format!("{v}")).collect();
+    writeln!(s, "EVAL 5 {}", feats.join(",")).unwrap();
+    r.read_line(&mut line).unwrap();
+    assert!(line.starts_with("OK 5 "), "{line}");
+
+    // A half-written final line (no newline before the client shuts its
+    // write side) is parsed at EOF and answered before close.
+    line.clear();
+    write!(s, "EVAL 9 {}", feats.join(",")).unwrap();
+    s.shutdown(std::net::Shutdown::Write).unwrap();
+    r.read_line(&mut line).unwrap();
+    assert!(line.starts_with("OK 9 "), "{line}");
+    line.clear();
+    assert_eq!(r.read_line(&mut line).unwrap(), 0, "expected close, got {line}");
+
+    // The acceptor survived it all: a fresh connection works.
+    let mut client = Client::connect(&server.addr).expect("reconnect");
+    client.eval(te.row(1)).expect("eval after garbage");
     server.stop();
 }
 
