@@ -11,6 +11,11 @@
 //!   - plan_load: JSON parse+compile vs zero-copy binary artifact load
 //!   - sweep_branchless: branchy reference sweep vs the mask-and-compact
 //!     kernel on an alternating-exit workload
+//!   - serve_path: per-request fresh-buffer allocation vs the
+//!     zero-allocation scratch-reuse hot path (parse+classify+format)
+//!   - response_cache: cold classify (miss path) vs seeded-hash lookup
+//!   - serve policy: fixed vs adaptive batch flush at low/high load,
+//!     end-to-end through the TCP coordinator
 //!   - PJRT stage execution (per-batch and per-example amortized)
 //!
 //! Every target lands in `BENCH.json` (schema `qwyc-bench-v1`, see
@@ -334,11 +339,9 @@ fn main() {
             let config = ServerConfig {
                 shards,
                 queue_cap: 0, // unbounded: measure throughput, not shedding
-                policy: BatchPolicy {
-                    max_batch: 64,
-                    max_wait: Duration::from_micros(200),
-                },
+                policy: BatchPolicy::fixed(64, Duration::from_micros(200)),
                 default_deadline: None,
+                cache_bytes: 0,
             };
             let server = Server::start_with_plan("127.0.0.1:0", compiled.clone(), config)
                 .expect("bench server");
@@ -412,6 +415,103 @@ fn main() {
         report.push_pair(&rr, &rb);
     }
 
+    // ---- request hot path: fresh buffers vs scratch reuse ------------
+    // The same component chain the server runs per request (EVAL parse →
+    // classify → OK format), once allocating every buffer per request
+    // (the pre-overhaul shape) and once reusing warmed scratch (the
+    // production shape the alloc_free test pins at zero allocations).
+    {
+        use qwyc::coordinator::{format_ok_reply, parse_eval};
+        use qwyc::runtime::engine::Outcome;
+        let line = {
+            let feats: Vec<String> = tr.row(17).iter().map(|v| format!("{v}")).collect();
+            format!("17 DEADLINE_MS=250 {}", feats.join(","))
+        };
+        let ra = bench_auto("serve_path per-request alloc", budget, runs, || {
+            let mut feats: Vec<f32> = Vec::new();
+            let (id, _) = parse_eval(black_box(line.as_str()), &mut feats).unwrap();
+            let mut outs: Vec<Outcome> = Vec::new();
+            engine.classify_into(&feats, 1, &mut outs).unwrap();
+            let mut reply = String::new();
+            format_ok_reply(&mut reply, id, &outs[0], 100);
+            black_box(&reply);
+        });
+        println!("{}", ra.report());
+        let mut feats: Vec<f32> = Vec::new();
+        let mut outs: Vec<Outcome> = Vec::new();
+        let mut reply = String::new();
+        let rz = bench_auto("serve_path zero-alloc scratch reuse", budget, runs, || {
+            let (id, _) = parse_eval(black_box(line.as_str()), &mut feats).unwrap();
+            engine.classify_into(&feats, 1, &mut outs).unwrap();
+            format_ok_reply(&mut reply, id, &outs[0], 100);
+            black_box(&reply);
+        });
+        println!("{}", rz.report());
+        println!("  -> scratch-reuse speedup: {:.2}x\n", ra.mean_ns / rz.mean_ns);
+        report.push_pair(&ra, &rz);
+    }
+
+    // ---- response cache: cold classify (miss) vs lookup (hit) --------
+    // The pair quantifies what a hit saves: a miss pays the full sweep,
+    // a hit pays one seeded hash + bytewise key compare.
+    {
+        use qwyc::coordinator::ResponseCache;
+        use qwyc::runtime::engine::Outcome;
+        let feats = tr.row(17).to_vec();
+        let mut outs: Vec<Outcome> = Vec::new();
+        let rm = bench_auto("response_cache cold classify (miss path)", budget, runs, || {
+            engine.classify_into(black_box(&feats), 1, &mut outs).unwrap();
+            black_box(&outs);
+        });
+        println!("{}", rm.report());
+        let mut cache = ResponseCache::new(1 << 20, 42);
+        engine.classify_into(&feats, 1, &mut outs).unwrap();
+        cache.insert(0, &feats, outs[0]);
+        let rh = bench_auto("response_cache lookup (hit path)", budget, runs, || {
+            black_box(cache.lookup(0, black_box(&feats)));
+        });
+        println!("{}", rh.report());
+        println!("  -> cache-hit speedup: {:.2}x\n", rm.mean_ns / rh.mean_ns);
+        report.push_pair(&rm, &rh);
+    }
+
+    // ---- fixed vs adaptive batch flush at low and high load ----------
+    // Low load = one in-flight request per connection (idle shards; the
+    // adaptive policy should flush immediately). High load = deep
+    // pipelining (the adaptive policy should stretch toward full
+    // batches). End-to-end through the TCP coordinator, 2 shards.
+    {
+        use qwyc::coordinator::BatchPolicy;
+        let conns = 4usize;
+        let per_conn = if quick { 150 } else { 2_000 };
+        let fixed = BatchPolicy::fixed(64, Duration::from_micros(200));
+        let adaptive = BatchPolicy::adaptive(64, Duration::from_micros(200));
+        for (load, window) in [("low", 1usize), ("high", 64usize)] {
+            let rf = serve_e2e(
+                &compiled,
+                &tr,
+                fixed,
+                &format!("serve fixed policy ({load} load)"),
+                conns,
+                per_conn,
+                window,
+            );
+            println!("{}", rf.report());
+            let ra = serve_e2e(
+                &compiled,
+                &tr,
+                adaptive,
+                &format!("serve adaptive policy ({load} load)"),
+                conns,
+                per_conn,
+                window,
+            );
+            println!("{}", ra.report());
+            println!("  -> adaptive/fixed mean ratio: {:.3}x\n", ra.mean_ns / rf.mean_ns);
+            report.push_pair(&rf, &ra);
+        }
+    }
+
     // ---- PJRT stage (needs --features pjrt and artifacts) ------------
     #[cfg(feature = "pjrt")]
     if std::path::Path::new("artifacts/manifest.json").exists() {
@@ -452,6 +552,69 @@ fn main() {
     match report.write(&out_path) {
         Ok(()) => println!("\nwrote {}", out_path.display()),
         Err(e) => eprintln!("\nfailed to write {}: {e}", out_path.display()),
+    }
+}
+
+/// One closed-loop end-to-end serving run (the `serve_shards` shape,
+/// parameterized by flush policy and pipeline depth) reported as a
+/// single BenchResult: mean_ns is wall-clock per request, p50/p99 are
+/// the server-reported per-request latencies.
+fn serve_e2e(
+    compiled: &std::sync::Arc<qwyc::plan::CompiledPlan>,
+    tr: &qwyc::data::Dataset,
+    policy: qwyc::coordinator::BatchPolicy,
+    name: &str,
+    conns: usize,
+    per_conn: usize,
+    window: usize,
+) -> qwyc::util::timer::BenchResult {
+    use qwyc::coordinator::{Client, Server, ServerConfig};
+    let total = conns * per_conn;
+    let config = ServerConfig {
+        shards: 2,
+        queue_cap: 0, // unbounded: measure the policy, not shedding
+        policy,
+        default_deadline: None,
+        cache_bytes: 0,
+    };
+    let server =
+        Server::start_with_plan("127.0.0.1:0", compiled.clone(), config).expect("bench server");
+    let addr = server.addr;
+    let sw = qwyc::util::timer::Stopwatch::new();
+    let mut lat_ns: Vec<f64> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..conns)
+            .map(|c| {
+                s.spawn(move || {
+                    let mut client = Client::connect(&addr).expect("connect");
+                    let (mut sent, mut recv) = (0usize, 0usize);
+                    let mut lat = Vec::with_capacity(per_conn);
+                    while recv < per_conn {
+                        while sent < per_conn && sent - recv < window {
+                            let row = tr.row((c * per_conn + sent) % tr.n);
+                            client.send_eval(row).expect("send");
+                            sent += 1;
+                        }
+                        let resp = client.read_response().expect("read");
+                        lat.push(resp.latency_us as f64 * 1e3);
+                        recv += 1;
+                    }
+                    lat
+                })
+            })
+            .collect();
+        handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+    });
+    let el = sw.elapsed_s();
+    server.stop();
+    lat_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    qwyc::util::timer::BenchResult {
+        name: name.to_string(),
+        mean_ns: el * 1e9 / total as f64,
+        std_ns: 0.0,
+        p50_ns: qwyc::util::stats::percentile_sorted(&lat_ns, 50.0),
+        p99_ns: qwyc::util::stats::percentile_sorted(&lat_ns, 99.0),
+        runs: 1,
+        iters_per_run: total as u64,
     }
 }
 

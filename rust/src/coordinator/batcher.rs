@@ -33,16 +33,82 @@ pub enum TrySendError<T> {
 }
 
 /// Batching policy.
+///
+/// With `adaptive` off, every batch waits up to `max_wait` for
+/// stragglers regardless of load. With it on, the flush deadline scales
+/// with the queue depth observed when the first request of the batch is
+/// admitted: an idle shard (nothing queued behind the first request)
+/// flushes immediately — latency-greedy, the lone request never pays
+/// `max_wait` — while a backlog of `k` requests waits
+/// `max_wait · (k+1)/max_batch`, approaching the full `max_wait` (and a
+/// full batch) as depth approaches `max_batch` — throughput-greedy under
+/// load. Batch composition never changes per-example scores (each
+/// example's sweep is independent), so the two policies are
+/// bitwise-identical in what they answer and differ only in when.
 #[derive(Clone, Copy, Debug)]
 pub struct BatchPolicy {
     pub max_batch: usize,
     pub max_wait: Duration,
+    /// Scale the flush deadline with instantaneous queue depth.
+    pub adaptive: bool,
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
-        BatchPolicy { max_batch: 256, max_wait: Duration::from_millis(2) }
+        BatchPolicy { max_batch: 256, max_wait: Duration::from_millis(2), adaptive: false }
     }
+}
+
+impl BatchPolicy {
+    /// Fixed-deadline policy (the PR 7 behavior).
+    pub fn fixed(max_batch: usize, max_wait: Duration) -> BatchPolicy {
+        BatchPolicy { max_batch, max_wait, adaptive: false }
+    }
+
+    /// Depth-adaptive policy: same bounds, load-scaled deadline.
+    pub fn adaptive(max_batch: usize, max_wait: Duration) -> BatchPolicy {
+        BatchPolicy { max_batch, max_wait, adaptive: true }
+    }
+
+    /// Policy name surfaced in `STATS` (`policy=fixed|adaptive`).
+    pub fn label(&self) -> &'static str {
+        if self.adaptive {
+            "adaptive"
+        } else {
+            "fixed"
+        }
+    }
+
+    /// Flush deadline for a batch whose first item found `depth` more
+    /// items already queued behind it.
+    fn effective_wait(&self, depth: usize) -> Duration {
+        if !self.adaptive {
+            return self.max_wait;
+        }
+        let max = self.max_batch.max(1);
+        if depth == 0 || depth + 1 >= max {
+            // Idle (flush now) or the backlog alone fills the batch
+            // (waiting buys nothing).
+            return Duration::ZERO;
+        }
+        self.max_wait.mul_f64((depth + 1) as f64 / max as f64)
+    }
+}
+
+/// Why [`BatchQueue::next_batch_into`] handed back a batch — the
+/// adaptive policy's observable decision, counted per shard in `STATS`
+/// (`flush(idle/full/deadline)`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FlushReason {
+    /// Nothing was queued behind the batch: flushed immediately without
+    /// waiting (adaptive policies only).
+    Idle,
+    /// The batch reached `max_batch`.
+    Full,
+    /// The flush deadline expired with a partial batch.
+    Deadline,
+    /// The queue closed while the batch was filling.
+    Closed,
 }
 
 struct QueueState<T> {
@@ -168,13 +234,24 @@ impl<T> BatchQueue<T> {
     }
 
     /// Collect the next batch. Blocks (no deadline) for the first item,
-    /// then waits on the condvar until the batch is full or `max_wait`
-    /// has elapsed since the first item arrived — a full batch returns
-    /// immediately on the push that filled it. Returns `None` when the
-    /// queue is closed and empty (shutdown).
+    /// then waits on the condvar until the batch is full or the policy's
+    /// flush deadline has elapsed since the first item arrived — a full
+    /// batch returns immediately on the push that filled it. Returns
+    /// `None` when the queue is closed and empty (shutdown).
     pub fn next_batch(&self, policy: BatchPolicy) -> Option<Vec<T>> {
+        let mut batch = Vec::with_capacity(policy.max_batch.max(1).min(64));
+        self.next_batch_into(policy, &mut batch).map(|_| batch)
+    }
+
+    /// [`next_batch`](Self::next_batch) into a caller-owned buffer — the
+    /// serving hot path's batch-arena recycling seam: the shard worker
+    /// hands the same `Vec` back every iteration, so a warmed worker
+    /// performs no per-batch allocation. `batch` is cleared first and
+    /// holds the new batch on `Some`; the return value reports why the
+    /// batch flushed.
+    pub fn next_batch_into(&self, policy: BatchPolicy, batch: &mut Vec<T>) -> Option<FlushReason> {
+        batch.clear();
         let max = policy.max_batch.max(1);
-        let mut batch = Vec::with_capacity(max.min(64));
         let mut st = self.state.lock().unwrap();
         // Phase 1: block for the first item.
         loop {
@@ -187,42 +264,68 @@ impl<T> BatchQueue<T> {
             }
             st = self.cv.wait(st).unwrap();
         }
-        // Phase 2: deadline-bounded fill.
-        let deadline = Instant::now() + policy.max_wait;
-        loop {
+        // Queue depth behind the first item, observed at admission time:
+        // the adaptive policy's instantaneous load signal.
+        let wait = policy.effective_wait(st.items.len());
+        let reason = if wait.is_zero() {
+            // Latency-greedy: drain whatever is already queued and flush
+            // without parking on the condvar at all.
             while batch.len() < max {
                 match st.items.pop_front() {
                     Some(item) => batch.push(item),
                     None => break,
                 }
             }
-            if batch.len() >= max || st.closed {
-                break;
+            if batch.len() >= max {
+                FlushReason::Full
+            } else {
+                FlushReason::Idle
             }
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            let (guard, timeout) = self.cv.wait_timeout(st, deadline - now).unwrap();
-            st = guard;
-            if timeout.timed_out() {
-                // Grab anything that raced in with the timeout.
+        } else {
+            // Phase 2: deadline-bounded fill.
+            let deadline = Instant::now() + wait;
+            loop {
                 while batch.len() < max {
                     match st.items.pop_front() {
                         Some(item) => batch.push(item),
                         None => break,
                     }
                 }
-                break;
+                if batch.len() >= max {
+                    break FlushReason::Full;
+                }
+                if st.closed {
+                    break FlushReason::Closed;
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    break FlushReason::Deadline;
+                }
+                let (guard, timeout) = self.cv.wait_timeout(st, deadline - now).unwrap();
+                st = guard;
+                if timeout.timed_out() {
+                    // Grab anything that raced in with the timeout.
+                    while batch.len() < max {
+                        match st.items.pop_front() {
+                            Some(item) => batch.push(item),
+                            None => break,
+                        }
+                    }
+                    break if batch.len() >= max {
+                        FlushReason::Full
+                    } else {
+                        FlushReason::Deadline
+                    };
+                }
             }
-        }
+        };
         // Space opened up: wake producers blocked on a bounded queue and
         // drain-waiters parked in `wait_empty` (which also rides the
         // space condvar — "space opened" and "possibly empty now" are
         // the same event from the consumer side).
         drop(st);
         self.cv_space.notify_all();
-        Some(batch)
+        Some(reason)
     }
 
     /// Block until the queue holds no queued items or `timeout` expires;
@@ -255,7 +358,7 @@ mod tests {
         for i in 0..10 {
             tx.send(i).unwrap();
         }
-        let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(50) };
+        let policy = BatchPolicy::fixed(4, Duration::from_millis(50));
         assert_eq!(q.next_batch(policy).unwrap(), vec![0, 1, 2, 3]);
         assert_eq!(q.next_batch(policy).unwrap(), vec![4, 5, 6, 7]);
     }
@@ -265,7 +368,7 @@ mod tests {
         let (tx, q) = batch_channel();
         tx.send(1).unwrap();
         tx.send(2).unwrap();
-        let policy = BatchPolicy { max_batch: 100, max_wait: Duration::from_millis(5) };
+        let policy = BatchPolicy::fixed(100, Duration::from_millis(5));
         let start = Instant::now();
         assert_eq!(q.next_batch(policy).unwrap(), vec![1, 2]);
         assert!(start.elapsed() < Duration::from_millis(500));
@@ -295,7 +398,7 @@ mod tests {
             tx.send(7).unwrap();
             tx.send(8).unwrap();
         });
-        let policy = BatchPolicy { max_batch: 10, max_wait: Duration::from_millis(20) };
+        let policy = BatchPolicy::fixed(10, Duration::from_millis(20));
         let b = q.next_batch(policy).unwrap();
         assert!(!b.is_empty() && b[0] == 7);
         handle.join().unwrap();
@@ -306,7 +409,7 @@ mod tests {
         // max_wait is far longer than the test budget: the only way this
         // returns quickly is the wake-on-fill path.
         let (tx, q) = batch_channel();
-        let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_secs(30) };
+        let policy = BatchPolicy::fixed(4, Duration::from_secs(30));
         let handle = std::thread::spawn(move || {
             for i in 0..4 {
                 std::thread::sleep(Duration::from_millis(2));
@@ -344,7 +447,7 @@ mod tests {
         // At capacity: overload is shed, the item comes back.
         assert_eq!(tx.try_send(3), Err(TrySendError::Full(3)));
         // Draining a batch opens space again.
-        let policy = BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1) };
+        let policy = BatchPolicy::fixed(2, Duration::from_millis(1));
         assert_eq!(q.next_batch(policy).unwrap(), vec![1, 2]);
         assert!(q.is_empty());
         assert_eq!(tx.try_send(3), Ok(()));
@@ -360,7 +463,7 @@ mod tests {
         });
         std::thread::sleep(Duration::from_millis(10));
         assert_eq!(q.len(), 1, "bounded send overfilled the queue");
-        let policy = BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(1) };
+        let policy = BatchPolicy::fixed(1, Duration::from_millis(1));
         assert_eq!(q.next_batch(policy).unwrap(), vec![1]);
         handle.join().unwrap();
         assert_eq!(q.next_batch(policy).unwrap(), vec![2]);
@@ -390,7 +493,7 @@ mod tests {
         let q2 = q.clone();
         let consumer = std::thread::spawn(move || {
             std::thread::sleep(Duration::from_millis(10));
-            let policy = BatchPolicy { max_batch: 100, max_wait: Duration::from_millis(1) };
+            let policy = BatchPolicy::fixed(100, Duration::from_millis(1));
             q2.next_batch(policy)
         });
         // The drain waiter is woken by the consumer taking the batch —
@@ -401,6 +504,88 @@ mod tests {
         // An already-empty queue reports success immediately.
         assert!(q.wait_empty(Duration::from_millis(1)));
         drop(tx);
+    }
+
+    #[test]
+    fn adaptive_idle_shard_flushes_immediately() {
+        // max_wait is far beyond the test budget: the only way a lone
+        // item returns quickly is the adaptive idle fast path.
+        let (tx, q) = batch_channel();
+        tx.send(42).unwrap();
+        let policy = BatchPolicy::adaptive(100, Duration::from_secs(30));
+        let mut batch = Vec::new();
+        let start = Instant::now();
+        let reason = q.next_batch_into(policy, &mut batch);
+        assert_eq!(reason, Some(FlushReason::Idle));
+        assert_eq!(batch, vec![42]);
+        assert!(
+            start.elapsed() < Duration::from_secs(5),
+            "idle flush waited on the deadline: {:?}",
+            start.elapsed()
+        );
+        drop(tx);
+    }
+
+    #[test]
+    fn adaptive_backlog_drains_without_waiting() {
+        // A backlog that already fills the batch flushes as Full without
+        // parking, even with a huge max_wait.
+        let (tx, q) = batch_channel();
+        for i in 0..4 {
+            tx.send(i).unwrap();
+        }
+        let policy = BatchPolicy::adaptive(4, Duration::from_secs(30));
+        let mut batch = Vec::new();
+        let start = Instant::now();
+        assert_eq!(q.next_batch_into(policy, &mut batch), Some(FlushReason::Full));
+        assert_eq!(batch, vec![0, 1, 2, 3]);
+        assert!(start.elapsed() < Duration::from_secs(5));
+        drop(tx);
+    }
+
+    #[test]
+    fn adaptive_scales_wait_with_depth() {
+        // Depth 1 of max_batch 1000 scales a 10s max_wait down to 20ms:
+        // returning at all inside the test budget proves the scaling.
+        let (tx, q) = batch_channel();
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        let policy = BatchPolicy::adaptive(1000, Duration::from_secs(10));
+        let mut batch = Vec::new();
+        let start = Instant::now();
+        assert_eq!(q.next_batch_into(policy, &mut batch), Some(FlushReason::Deadline));
+        assert_eq!(batch, vec![1, 2]);
+        assert!(
+            start.elapsed() < Duration::from_secs(5),
+            "depth-scaled wait did not shrink: {:?}",
+            start.elapsed()
+        );
+        drop(tx);
+    }
+
+    #[test]
+    fn next_batch_into_recycles_the_buffer_and_reports_reasons() {
+        let (tx, q) = batch_channel();
+        for i in 0..6 {
+            tx.send(i).unwrap();
+        }
+        let policy = BatchPolicy::fixed(4, Duration::from_millis(5));
+        let mut batch: Vec<i32> = Vec::new();
+        assert_eq!(q.next_batch_into(policy, &mut batch), Some(FlushReason::Full));
+        assert_eq!(batch, vec![0, 1, 2, 3]);
+        let cap = batch.capacity();
+        assert_eq!(q.next_batch_into(policy, &mut batch), Some(FlushReason::Deadline));
+        assert_eq!(batch, vec![4, 5]);
+        assert_eq!(batch.capacity(), cap, "recycled buffer was reallocated");
+        drop(tx);
+        assert_eq!(q.next_batch_into(policy, &mut batch), None);
+        assert!(batch.is_empty());
+    }
+
+    #[test]
+    fn fixed_policy_label_and_adaptive_label() {
+        assert_eq!(BatchPolicy::default().label(), "fixed");
+        assert_eq!(BatchPolicy::adaptive(8, Duration::from_millis(1)).label(), "adaptive");
     }
 
     #[test]

@@ -1,0 +1,348 @@
+//! Generation-keyed response cache for the serving hot path.
+//!
+//! A per-shard, bounded map from *feature-vector bytes* to the engine
+//! [`Outcome`] they evaluate to, keyed **jointly** on the
+//! [`PlanSlot`](crate::plan::PlanSlot) generation that produced the
+//! outcome. A `RELOAD` bumps the slot generation, so every cached entry
+//! from the old plan stops matching the moment the shard worker observes
+//! the swap — invalidation needs no flush message, no epoch fence, no
+//! coordination of any kind. A *rejected* reload never bumps the
+//! generation, so the cache keeps serving the surviving plan's entries,
+//! which is exactly right: the plan did not change.
+//!
+//! Shape and invariants:
+//!
+//! - Each shard worker **owns** its cache outright — no locks, no
+//!   sharing. The cache deliberately lives here and not inside
+//!   `NativeEngine`: the engine's `reusable_after_panic` contract is a
+//!   compile-time `UnwindSafe` assertion that a shared mutable cache
+//!   would break (see `runtime/engine.rs`).
+//! - Keys compare the **bit patterns** of the features
+//!   ([`f32::to_bits`]), not float equality, so `-0.0` vs `0.0` are
+//!   distinct keys and the cache can never conflate two requests the
+//!   engine could score differently. Hash collisions are resolved by a
+//!   full bitwise key comparison — a hit is always exact.
+//! - The hash is seeded per shard (a splitmix64-mixed FNV over the key
+//!   bits), so a hostile or degenerate request stream cannot aim at one
+//!   global bucket layout shared by every process.
+//! - Bounded by an approximate **byte** budget, evicted FIFO. Lookups
+//!   are allocation-free; only inserts (a miss that just got evaluated)
+//!   allocate, so a steady state of repeated queries does no heap work.
+//! - `NaN` handling is the caller's contract: feature vectors containing
+//!   NaN must bypass the cache entirely ([`ResponseCache::cacheable`]),
+//!   because NaN's bit pattern is not canonical and equal-scoring
+//!   requests could miss each other while subtly different ones match.
+
+use crate::runtime::engine::Outcome;
+use std::collections::VecDeque;
+
+/// Fixed per-entry overhead charged against the byte budget on top of
+/// the feature payload: boxed-slice header, outcome, hash, sequence
+/// number, FIFO slot, and bucket bookkeeping, rounded up.
+const ENTRY_OVERHEAD_BYTES: usize = 96;
+
+struct Entry {
+    hash: u64,
+    generation: u64,
+    /// Feature bit patterns — the exact key material.
+    key: Box<[u32]>,
+    outcome: Outcome,
+    /// Insertion sequence number, linking the entry to its FIFO slot.
+    seq: u64,
+}
+
+impl Entry {
+    fn cost(&self) -> usize {
+        self.key.len() * 4 + ENTRY_OVERHEAD_BYTES
+    }
+}
+
+/// Per-shard bounded response cache. See the module docs for the
+/// invariants; see `coordinator::server` for the serving integration
+/// (`serve --cache-bytes`).
+pub struct ResponseCache {
+    /// Power-of-two bucket array; each bucket is a short probe list.
+    buckets: Vec<Vec<Entry>>,
+    /// FIFO of (bucket index, sequence number) in insertion order.
+    fifo: VecDeque<(u32, u64)>,
+    mask: u64,
+    seed: u64,
+    next_seq: u64,
+    max_bytes: usize,
+    used_bytes: usize,
+}
+
+impl ResponseCache {
+    /// A cache bounded to roughly `max_bytes` of entry storage, with a
+    /// per-shard `seed` perturbing the bucket layout.
+    pub fn new(max_bytes: usize, seed: u64) -> ResponseCache {
+        // Size the bucket array for ~8 entries per bucket at the byte
+        // budget, assuming small feature vectors; collisions only cost a
+        // short linear scan, never a wrong answer.
+        let est_entries = (max_bytes / ENTRY_OVERHEAD_BYTES).max(1);
+        let n_buckets = (est_entries / 8 + 1).next_power_of_two();
+        ResponseCache {
+            buckets: (0..n_buckets).map(|_| Vec::new()).collect(),
+            fifo: VecDeque::new(),
+            mask: n_buckets as u64 - 1,
+            seed,
+            next_seq: 0,
+            max_bytes,
+            used_bytes: 0,
+        }
+    }
+
+    /// May this feature vector use the cache at all? NaN bit patterns
+    /// are not canonical, so NaN-bearing requests always go to the
+    /// engine (module docs).
+    pub fn cacheable(features: &[f32]) -> bool {
+        !features.iter().any(|f| f.is_nan())
+    }
+
+    /// Seeded FNV-1a over the generation and feature bits, finished with
+    /// a splitmix64 mix so low-entropy feature patterns still spread
+    /// across buckets.
+    fn hash(&self, generation: u64, features: &[f32]) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64 ^ self.seed;
+        let mut step = |word: u64| {
+            h ^= word;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        };
+        step(generation);
+        for f in features {
+            step(f.to_bits() as u64);
+        }
+        // splitmix64 finisher.
+        let mut z = h.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^ (z >> 31)
+    }
+
+    fn key_matches(entry: &Entry, hash: u64, generation: u64, features: &[f32]) -> bool {
+        entry.hash == hash
+            && entry.generation == generation
+            && entry.key.len() == features.len()
+            && entry.key.iter().zip(features.iter()).all(|(&k, f)| k == f.to_bits())
+    }
+
+    /// Allocation-free exact lookup under the given plan generation.
+    pub fn lookup(&self, generation: u64, features: &[f32]) -> Option<Outcome> {
+        let h = self.hash(generation, features);
+        let bucket = &self.buckets[(h & self.mask) as usize];
+        bucket
+            .iter()
+            .find(|e| Self::key_matches(e, h, generation, features))
+            .map(|e| e.outcome)
+    }
+
+    /// Insert a freshly evaluated outcome, evicting FIFO until the byte
+    /// budget holds. Returns the number of entries evicted. A duplicate
+    /// key (another request in the same batch raced the same features)
+    /// is left in place — both outcomes are bitwise-identical anyway.
+    pub fn insert(&mut self, generation: u64, features: &[f32], outcome: Outcome) -> u64 {
+        let h = self.hash(generation, features);
+        let bi = (h & self.mask) as usize;
+        if self.buckets[bi].iter().any(|e| Self::key_matches(e, h, generation, features)) {
+            return 0;
+        }
+        let entry = Entry {
+            hash: h,
+            generation,
+            key: features.iter().map(|f| f.to_bits()).collect(),
+            outcome,
+            seq: self.next_seq,
+        };
+        let cost = entry.cost();
+        if cost > self.max_bytes {
+            return 0; // one oversized entry can never fit
+        }
+        self.next_seq += 1;
+        let mut evicted = 0u64;
+        while self.used_bytes + cost > self.max_bytes {
+            if !self.evict_oldest() {
+                break;
+            }
+            evicted += 1;
+        }
+        self.used_bytes += cost;
+        self.fifo.push_back((bi as u32, entry.seq));
+        self.buckets[bi].push(entry);
+        evicted
+    }
+
+    fn evict_oldest(&mut self) -> bool {
+        let Some((bi, seq)) = self.fifo.pop_front() else {
+            return false;
+        };
+        let bucket = &mut self.buckets[bi as usize];
+        if let Some(pos) = bucket.iter().position(|e| e.seq == seq) {
+            let cost = bucket[pos].cost();
+            bucket.swap_remove(pos);
+            self.used_bytes -= cost;
+            return true;
+        }
+        // Unreachable by construction (every FIFO slot has its entry),
+        // but degrade to "nothing evicted" rather than loop forever.
+        false
+    }
+
+    /// Drop every entry, keeping the allocated structure. The shard
+    /// worker calls this when it observes a generation swap (stale
+    /// entries can no longer match, this just returns their bytes
+    /// early) and after a batch panic (paranoia: inserts are atomic,
+    /// but a wedged shard restarting from scratch should not trust
+    /// anything it half-built).
+    pub fn clear(&mut self) {
+        for b in &mut self.buckets {
+            b.clear();
+        }
+        self.fifo.clear();
+        self.used_bytes = 0;
+    }
+
+    /// Live entry count.
+    pub fn len(&self) -> usize {
+        self.fifo.len()
+    }
+
+    /// No live entries?
+    pub fn is_empty(&self) -> bool {
+        self.fifo.is_empty()
+    }
+
+    /// Approximate bytes charged against the budget.
+    pub fn used_bytes(&self) -> usize {
+        self.used_bytes
+    }
+
+    /// The configured byte budget.
+    pub fn max_bytes(&self) -> usize {
+        self.max_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcome(score: f32) -> Outcome {
+        Outcome { positive: score >= 0.0, score, models_evaluated: 3, early: true }
+    }
+
+    #[test]
+    fn hit_returns_the_exact_stored_outcome() {
+        let mut c = ResponseCache::new(1 << 16, 7);
+        let feats = [1.0f32, -2.5, 0.0];
+        assert!(c.lookup(1, &feats).is_none());
+        c.insert(1, &feats, outcome(0.75));
+        let got = c.lookup(1, &feats).expect("hit");
+        assert_eq!(got.score.to_bits(), 0.75f32.to_bits());
+        assert_eq!(got.models_evaluated, 3);
+        assert!(got.positive && got.early);
+    }
+
+    #[test]
+    fn generation_is_part_of_the_key() {
+        let mut c = ResponseCache::new(1 << 16, 7);
+        let feats = [4.0f32, 5.0];
+        c.insert(1, &feats, outcome(1.0));
+        assert!(c.lookup(1, &feats).is_some());
+        // Same bytes under a new generation: a miss, never a stale hit.
+        assert!(c.lookup(2, &feats).is_none());
+        c.insert(2, &feats, outcome(-1.0));
+        assert!(c.lookup(2, &feats).unwrap().score < 0.0);
+        assert!(c.lookup(1, &feats).unwrap().score > 0.0, "old gen entry untouched");
+    }
+
+    #[test]
+    fn bit_patterns_not_float_equality() {
+        let mut c = ResponseCache::new(1 << 16, 7);
+        c.insert(1, &[0.0f32], outcome(1.0));
+        // -0.0 == 0.0 as floats but is a different bit pattern ⇒ miss.
+        assert!(c.lookup(1, &[-0.0f32]).is_none());
+        assert!(c.lookup(1, &[0.0f32]).is_some());
+    }
+
+    #[test]
+    fn eviction_respects_the_byte_budget_in_fifo_order() {
+        // Budget for roughly 4 entries of 2 features each.
+        let per = 2 * 4 + ENTRY_OVERHEAD_BYTES;
+        let mut c = ResponseCache::new(per * 4, 0);
+        let mut evicted = 0u64;
+        for i in 0..10 {
+            evicted += c.insert(1, &[i as f32, 0.5], outcome(i as f32));
+            assert!(c.used_bytes() <= c.max_bytes(), "budget exceeded at insert {i}");
+        }
+        assert_eq!(evicted, 6, "10 inserts into a 4-entry budget evict 6");
+        assert_eq!(c.len(), 4);
+        // FIFO: the oldest entries are gone, the newest 4 remain.
+        for i in 0..6 {
+            assert!(c.lookup(1, &[i as f32, 0.5]).is_none(), "entry {i} should be evicted");
+        }
+        for i in 6..10 {
+            assert!(c.lookup(1, &[i as f32, 0.5]).is_some(), "entry {i} should survive");
+        }
+    }
+
+    #[test]
+    fn oversized_entry_is_refused_not_looped() {
+        let mut c = ResponseCache::new(64, 0); // smaller than any entry
+        let feats: Vec<f32> = (0..32).map(|i| i as f32).collect();
+        assert_eq!(c.insert(1, &feats, outcome(1.0)), 0);
+        assert_eq!(c.len(), 0);
+        assert_eq!(c.used_bytes(), 0);
+    }
+
+    #[test]
+    fn nan_vectors_are_not_cacheable() {
+        assert!(ResponseCache::cacheable(&[1.0, 2.0]));
+        assert!(!ResponseCache::cacheable(&[1.0, f32::NAN]));
+        assert!(ResponseCache::cacheable(&[]));
+    }
+
+    #[test]
+    fn duplicate_insert_is_a_noop() {
+        let mut c = ResponseCache::new(1 << 16, 3);
+        c.insert(1, &[1.0f32], outcome(0.5));
+        let used = c.used_bytes();
+        c.insert(1, &[1.0f32], outcome(0.5));
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.used_bytes(), used);
+    }
+
+    #[test]
+    fn clear_returns_all_bytes() {
+        let mut c = ResponseCache::new(1 << 16, 3);
+        for i in 0..8 {
+            c.insert(1, &[i as f32], outcome(0.0));
+        }
+        assert!(c.len() == 8 && c.used_bytes() > 0);
+        c.clear();
+        assert!(c.is_empty());
+        assert_eq!(c.used_bytes(), 0);
+        assert!(c.lookup(1, &[0.0f32]).is_none());
+        // Still usable after a clear.
+        c.insert(2, &[9.0f32], outcome(1.0));
+        assert!(c.lookup(2, &[9.0f32]).is_some());
+    }
+
+    #[test]
+    fn seeds_change_the_layout_not_the_answers() {
+        let mut a = ResponseCache::new(1 << 12, 0x1111);
+        let mut b = ResponseCache::new(1 << 12, 0x2222);
+        for i in 0..64 {
+            let feats = [i as f32, (i * 7) as f32];
+            a.insert(5, &feats, outcome(i as f32));
+            b.insert(5, &feats, outcome(i as f32));
+        }
+        for i in 0..64 {
+            let feats = [i as f32, (i * 7) as f32];
+            // Differently-seeded FIFOs may evict different victims; what
+            // both caches still hold must agree bit for bit.
+            if let (Some(x), Some(y)) = (a.lookup(5, &feats), b.lookup(5, &feats)) {
+                assert_eq!(x.score.to_bits(), y.score.to_bits());
+            }
+        }
+    }
+}

@@ -9,6 +9,7 @@
 //! carries per-shard request counts so the `STATS` line shows how the
 //! dispatcher balanced load.
 
+use super::batcher::FlushReason;
 use crate::util::stats::LatencyHist;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -32,6 +33,17 @@ struct Inner {
     models_sum: u64,
     early: u64,
     requests: u64,
+    /// Batch flush decisions by [`FlushReason`] (the adaptive batcher's
+    /// observable choices): immediate idle flushes, full batches, and
+    /// deadline expiries. `Closed` flushes are shutdown noise and fold
+    /// into `flush_deadline`.
+    flush_idle: u64,
+    flush_full: u64,
+    flush_deadline: u64,
+    /// Monotonic change counter: bumped by every record call, so the
+    /// cached `STATS` report can detect "nothing changed" without
+    /// rebuilding the string (see [`ShardedMetrics::report_cached`]).
+    version: u64,
     /// `stop_counts[p]` = requests that stopped after exactly p base
     /// models (index 0 only for degenerate zero-model plans). Grown on
     /// demand, capped at [`STOP_POS_CAP`].
@@ -47,6 +59,9 @@ impl Inner {
         self.models_sum += other.models_sum;
         self.early += other.early;
         self.requests += other.requests;
+        self.flush_idle += other.flush_idle;
+        self.flush_full += other.flush_full;
+        self.flush_deadline += other.flush_deadline;
         if self.stop_counts.len() < other.stop_counts.len() {
             self.stop_counts.resize(other.stop_counts.len(), 0);
         }
@@ -55,7 +70,16 @@ impl Inner {
         }
     }
 
-    fn to_snapshot(&self, elapsed_s: f64, shard_requests: Vec<u64>, ops: OpsSnapshot) -> Snapshot {
+    /// Snapshot body shared by the borrowing and consuming paths;
+    /// `stop_counts` is passed in so the aggregate path can *move* its
+    /// (potentially STOP_POS_CAP-long) vector instead of cloning it.
+    fn snapshot_with(
+        &self,
+        elapsed_s: f64,
+        shard_requests: Vec<u64>,
+        ops: OpsSnapshot,
+        stop_counts: Vec<u64>,
+    ) -> Snapshot {
         let n = self.requests.max(1) as f64;
         Snapshot {
             requests: self.requests,
@@ -70,10 +94,32 @@ impl Inner {
                 self.batch_sum as f64 / self.batch_count as f64
             },
             throughput_rps: self.requests as f64 / elapsed_s.max(1e-9),
-            stop_counts: self.stop_counts.clone(),
+            flush_idle: self.flush_idle,
+            flush_full: self.flush_full,
+            flush_deadline: self.flush_deadline,
+            policy: String::new(),
+            stop_counts,
             shard_requests,
             ops,
         }
+    }
+
+    fn to_snapshot(&self, elapsed_s: f64, shard_requests: Vec<u64>, ops: OpsSnapshot) -> Snapshot {
+        let stop_counts = self.stop_counts.clone();
+        self.snapshot_with(elapsed_s, shard_requests, ops, stop_counts)
+    }
+
+    /// Consuming variant for aggregates: the merged `Inner` is a
+    /// temporary, so its `stop_counts` moves into the [`Snapshot`]
+    /// instead of being cloned on every `STATS` request.
+    fn into_snapshot(
+        mut self,
+        elapsed_s: f64,
+        shard_requests: Vec<u64>,
+        ops: OpsSnapshot,
+    ) -> Snapshot {
+        let stop_counts = std::mem::take(&mut self.stop_counts);
+        self.snapshot_with(elapsed_s, shard_requests, ops, stop_counts)
     }
 }
 
@@ -95,6 +141,14 @@ pub struct OpsCounters {
     pub reload_ok: AtomicU64,
     /// `RELOAD` commands rejected (load failure or canary mismatch).
     pub reload_rejected: AtomicU64,
+    /// Response-cache lookups answered without touching the engine.
+    pub cache_hits: AtomicU64,
+    /// Response-cache lookups that fell through to the engine (NaN
+    /// bypasses are neither hits nor misses — they never consult the
+    /// cache).
+    pub cache_misses: AtomicU64,
+    /// Response-cache entries evicted to hold the byte budget.
+    pub cache_evictions: AtomicU64,
 }
 
 impl OpsCounters {
@@ -106,6 +160,9 @@ impl OpsCounters {
             shard_restarts: self.shard_restarts.load(Ordering::Relaxed),
             reload_ok: self.reload_ok.load(Ordering::Relaxed),
             reload_rejected: self.reload_rejected.load(Ordering::Relaxed),
+            cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            cache_misses: self.cache_misses.load(Ordering::Relaxed),
+            cache_evictions: self.cache_evictions.load(Ordering::Relaxed),
         }
     }
 }
@@ -118,6 +175,9 @@ pub struct OpsSnapshot {
     pub shard_restarts: u64,
     pub reload_ok: u64,
     pub reload_rejected: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_evictions: u64,
 }
 
 /// Thread-safe metrics sink.
@@ -143,6 +203,7 @@ impl Metrics {
         m.models_sum += models as u64;
         m.early += early as u64;
         m.requests += 1;
+        m.version += 1;
         let pos = (models as usize).min(STOP_POS_CAP);
         if m.stop_counts.len() <= pos {
             m.stop_counts.resize(pos + 1, 0);
@@ -154,6 +215,22 @@ impl Metrics {
         let mut m = self.inner.lock().unwrap();
         m.batch_sum += size as u64;
         m.batch_count += 1;
+        m.version += 1;
+    }
+
+    /// Count one batch-flush decision (see [`FlushReason`]).
+    pub fn record_flush(&self, reason: FlushReason) {
+        let mut m = self.inner.lock().unwrap();
+        match reason {
+            FlushReason::Idle => m.flush_idle += 1,
+            FlushReason::Full => m.flush_full += 1,
+            FlushReason::Deadline | FlushReason::Closed => m.flush_deadline += 1,
+        }
+        m.version += 1;
+    }
+
+    fn version(&self) -> u64 {
+        self.inner.lock().unwrap().version
     }
 
     pub fn snapshot(&self) -> Snapshot {
@@ -171,6 +248,21 @@ pub struct ShardedMetrics {
     shards: Vec<Arc<Metrics>>,
     ops: Arc<OpsCounters>,
     started: Instant,
+    /// Batch-policy label surfaced as `policy=` in `STATS` (set once at
+    /// server start; empty = omitted).
+    policy: Mutex<String>,
+    /// Cached `STATS` report keyed on (Σ shard versions, ops snapshot):
+    /// a `STATS` storm against an idle server re-serves one string
+    /// instead of re-merging every shard and re-formatting the report.
+    report_cache: Mutex<ReportCache>,
+}
+
+#[derive(Default)]
+struct ReportCache {
+    version: u64,
+    ops: OpsSnapshot,
+    /// Empty = nothing cached yet (a real report is never empty).
+    text: String,
 }
 
 impl ShardedMetrics {
@@ -179,7 +271,14 @@ impl ShardedMetrics {
             shards: (0..n_shards.max(1)).map(|_| Arc::new(Metrics::new())).collect(),
             ops: Arc::new(OpsCounters::default()),
             started: Instant::now(),
+            policy: Mutex::new(String::new()),
+            report_cache: Mutex::new(ReportCache::default()),
         }
+    }
+
+    /// Record the serving batch policy's label for `STATS` lines.
+    pub fn set_policy_label(&self, label: &str) {
+        *self.policy.lock().unwrap() = label.to_string();
     }
 
     /// The sink for one shard (handed to that shard's worker thread).
@@ -202,7 +301,45 @@ impl ShardedMetrics {
             shard_requests.push(inner.requests);
             agg.merge(&inner);
         }
-        agg.to_snapshot(self.started.elapsed().as_secs_f64(), shard_requests, self.ops.snapshot())
+        let mut snap = agg.into_snapshot(
+            self.started.elapsed().as_secs_f64(),
+            shard_requests,
+            self.ops.snapshot(),
+        );
+        snap.policy = self.policy.lock().unwrap().clone();
+        snap
+    }
+
+    /// The assembled `STATS` report, rebuilt only when a counter has
+    /// changed since the last call. Change detection is (Σ per-shard
+    /// record versions, [`OpsSnapshot`]): any record call bumps a
+    /// version and any ops event changes the snapshot, so a stale string
+    /// can never be served — but while nothing changes, repeated `STATS`
+    /// requests cost one short lock per shard plus a string clone
+    /// instead of a full merge + format. (Elapsed-time-derived fields
+    /// like `throughput=` freeze with the string until the next counter
+    /// change; a serving system at zero traffic has nothing new to
+    /// report.)
+    pub fn report_cached(&self) -> String {
+        let mut version = 0u64;
+        for m in &self.shards {
+            version = version.wrapping_add(m.version());
+        }
+        let ops = self.ops.snapshot();
+        {
+            let c = self.report_cache.lock().unwrap();
+            if c.version == version && c.ops == ops && !c.text.is_empty() {
+                return c.text.clone();
+            }
+        }
+        // Rebuild outside the cache lock: STATS is off the hot path, a
+        // racing rebuild at worst writes the same fresh content twice.
+        let text = self.snapshot().report();
+        let mut c = self.report_cache.lock().unwrap();
+        c.version = version;
+        c.ops = ops;
+        c.text.clone_from(&text);
+        text
     }
 
     /// Per-shard snapshots (same order as the shard workers).
@@ -239,6 +376,16 @@ pub struct Snapshot {
     pub early_frac: f64,
     pub mean_batch: f64,
     pub throughput_rps: f64,
+    /// Batches flushed immediately because the shard was idle (adaptive
+    /// policy's latency-greedy path).
+    pub flush_idle: u64,
+    /// Batches flushed at `max_batch`.
+    pub flush_full: u64,
+    /// Batches flushed by deadline expiry (or queue close).
+    pub flush_deadline: u64,
+    /// Serving batch-policy label (`fixed`/`adaptive`); empty for a bare
+    /// per-shard sink, which has no policy to report.
+    pub policy: String,
     /// Per-position exit counts (`stop_counts[p]` = requests stopping
     /// after exactly p models); empty until the first request.
     pub stop_counts: Vec<u64>,
@@ -291,11 +438,17 @@ impl Snapshot {
             String::new()
         };
         let o = &self.ops;
+        let policy = if self.policy.is_empty() {
+            String::new()
+        } else {
+            format!(" policy={}", self.policy)
+        };
         format!(
             "requests={} throughput={:.0}/s latency(mean/p50/p99)={:.1}/{:.1}/{:.1}us \
              mean_models={:.2} early={:.1}% exit_pos(p50/p99)={}/{} exit_hist=[{hist}] \
-             mean_batch={:.1} busy_shed={} timeouts={} shard_restarts={} reload_ok={} \
-             reload_rejected={}{shards}",
+             mean_batch={:.1} flush(idle/full/deadline)={}/{}/{}{policy} \
+             cache(hit/miss/evict)={}/{}/{} busy_shed={} timeouts={} shard_restarts={} \
+             reload_ok={} reload_rejected={}{shards}",
             self.requests,
             self.throughput_rps,
             self.mean_latency_us,
@@ -306,6 +459,12 @@ impl Snapshot {
             self.stop_percentile(50.0),
             self.stop_percentile(99.0),
             self.mean_batch,
+            self.flush_idle,
+            self.flush_full,
+            self.flush_deadline,
+            o.cache_hits,
+            o.cache_misses,
+            o.cache_evictions,
             o.busy_shed,
             o.timeouts,
             o.shard_restarts,
@@ -408,7 +567,8 @@ mod tests {
                 timeouts: 2,
                 shard_restarts: 1,
                 reload_ok: 4,
-                reload_rejected: 5
+                reload_rejected: 5,
+                ..OpsSnapshot::default()
             }
         );
         let rep = s.report();
@@ -423,6 +583,60 @@ mod tests {
         }
         // A bare per-shard sink reports zeros (no admission machinery).
         assert_eq!(sm.shard_snapshots()[0].ops, OpsSnapshot::default());
+    }
+
+    #[test]
+    fn flush_reasons_and_policy_surface_in_the_report() {
+        let sm = ShardedMetrics::new(2);
+        sm.set_policy_label("adaptive");
+        sm.shard(0).record_flush(FlushReason::Idle);
+        sm.shard(0).record_flush(FlushReason::Idle);
+        sm.shard(1).record_flush(FlushReason::Full);
+        sm.shard(1).record_flush(FlushReason::Deadline);
+        sm.shard(1).record_flush(FlushReason::Closed); // folds into deadline
+        let s = sm.snapshot();
+        assert_eq!((s.flush_idle, s.flush_full, s.flush_deadline), (2, 1, 2));
+        assert_eq!(s.policy, "adaptive");
+        let rep = s.report();
+        assert!(rep.contains("flush(idle/full/deadline)=2/1/2"), "{rep}");
+        assert!(rep.contains(" policy=adaptive"), "{rep}");
+        // A bare per-shard sink has no policy to report.
+        let bare = sm.shard_snapshots()[0].report();
+        assert!(!bare.contains("policy="), "{bare}");
+    }
+
+    #[test]
+    fn cache_counters_surface_in_the_report() {
+        let sm = ShardedMetrics::new(1);
+        sm.ops().cache_hits.fetch_add(7, Ordering::Relaxed);
+        sm.ops().cache_misses.fetch_add(9, Ordering::Relaxed);
+        sm.ops().cache_evictions.fetch_add(2, Ordering::Relaxed);
+        let rep = sm.snapshot().report();
+        assert!(rep.contains("cache(hit/miss/evict)=7/9/2"), "{rep}");
+    }
+
+    #[test]
+    fn report_cache_invalidates_on_any_counter_change() {
+        let sm = ShardedMetrics::new(2);
+        sm.set_policy_label("fixed");
+        sm.shard(0).record_request(1_000, 2, true);
+        let first = sm.report_cached();
+        // Unchanged counters: the exact same string comes back (the
+        // elapsed-derived throughput field would differ in a rebuilt
+        // report after enough wall time, so identity means "cached").
+        assert_eq!(sm.report_cached(), first);
+        // A per-shard record invalidates...
+        sm.shard(1).record_request(2_000, 3, false);
+        let second = sm.report_cached();
+        assert!(second.contains("requests=2"), "{second}");
+        // ...and so does a lock-free ops event (cache hit).
+        sm.ops().cache_hits.fetch_add(1, Ordering::Relaxed);
+        let third = sm.report_cached();
+        assert!(third.contains("cache(hit/miss/evict)=1/0/0"), "{third}");
+        assert_eq!(sm.report_cached(), third);
+        // The cached report always matches a fresh snapshot's fields.
+        assert!(third.contains("requests=2"), "{third}");
+        assert!(third.contains(" policy=fixed"), "{third}");
     }
 
     #[test]

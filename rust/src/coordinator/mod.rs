@@ -5,15 +5,19 @@
 //! retire the moment their running score clears a threshold.
 
 pub mod batcher;
+pub mod cache;
 pub mod filter_score;
 pub mod metrics;
 pub mod server;
 
 pub use batcher::{
-    batch_channel, batch_channel_with_cap, BatchPolicy, BatchQueue, BatchSender, TrySendError,
+    batch_channel, batch_channel_with_cap, BatchPolicy, BatchQueue, BatchSender, FlushReason,
+    TrySendError,
 };
+pub use cache::ResponseCache;
 pub use filter_score::{FilterOutcome, FilterPipeline, FilterStats};
 pub use metrics::{Metrics, OpsCounters, OpsSnapshot, ShardedMetrics, Snapshot};
 pub use server::{
-    Client, EvalResponse, Reply, Server, ServerConfig, DEFAULT_QUEUE_CAP, MAX_LINE_BYTES,
+    format_ok_reply, parse_eval, Client, EvalParseError, EvalResponse, Reply, Server,
+    ServerConfig, DEFAULT_QUEUE_CAP, MAX_LINE_BYTES,
 };

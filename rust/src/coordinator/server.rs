@@ -35,6 +35,22 @@
 //!
 //! (No tokio offline; plain threads — DESIGN.md §4.)
 //!
+//! Data-plane performance (rust/tests/alloc_free.rs, BENCH_8.json):
+//! - **Zero-allocation hot path**: per-connection buffer pools recycle
+//!   feature vectors and reply strings through the worker/pump loop,
+//!   the line reader fills a reusable byte buffer, and each shard
+//!   worker classifies into persistent scratch — a steady-state `EVAL`
+//!   round trip performs no heap allocation after warmup.
+//! - **Adaptive batching**: [`BatchPolicy::adaptive`] scales each flush
+//!   deadline with instantaneous queue depth (idle → flush at once,
+//!   backlogged → fill toward `max_batch`); the decision mix surfaces
+//!   as `flush(idle/full/deadline)` and `policy=` in `STATS`.
+//! - **Response cache**: with `ServerConfig::cache_bytes > 0` each
+//!   shard keeps a [`ResponseCache`] keyed on (plan generation, feature
+//!   bit-pattern); a hit replays the bitwise-identical outcome without
+//!   touching the engine, and a `RELOAD` invalidates implicitly because
+//!   the generation is part of every key.
+//!
 //! Protocol (one line per message, lines capped at [`MAX_LINE_BYTES`]):
 //!   client → server:  EVAL <id> [DEADLINE_MS=<d>] <f1>,<f2>,...
 //!                     STATS                         metrics snapshot
@@ -54,12 +70,14 @@
 use super::batcher::{
     batch_channel_with_cap, BatchPolicy, BatchQueue, BatchSender, TrySendError,
 };
+use super::cache::ResponseCache;
 use super::metrics::{Metrics, OpsCounters, ShardedMetrics};
 use crate::error::QwycError;
 use crate::plan::{CompiledPlan, PlanArtifact, PlanSlot, ProbeSet, DEFAULT_PROBES};
-use crate::runtime::engine::{Engine, NativeEngine};
+use crate::runtime::engine::{Engine, NativeEngine, Outcome};
 use crate::util::failpoints;
 use crate::util::pool::{threads_from_env, Pool};
+use std::fmt::Write as _;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -89,6 +107,58 @@ const CANARY_SEED: u64 = 0xca9a41;
 /// backlogs to empty before reporting failure.
 const DRAIN_TIMEOUT: Duration = Duration::from_secs(10);
 
+/// Seed for each shard's response-cache hash; xor'd with the shard
+/// index so shards don't share collision patterns.
+const CACHE_SEED: u64 = 0x9e37_79b9_7f4a_7c15;
+
+/// Bound on pooled buffers per connection; beyond this, returned
+/// buffers are dropped (a burst shouldn't pin its high-water memory).
+const BUF_POOL_CAP: usize = 256;
+
+/// Per-connection buffer recycler closing the request path's allocation
+/// loop: feature vectors travel conn thread → shard worker → back, and
+/// reply strings travel shard worker → pump thread → back. After warmup
+/// every buffer on a steady-state EVAL round trip comes from here
+/// instead of the allocator (rust/tests/alloc_free.rs pins the
+/// component functions).
+struct BufPool {
+    strings: std::sync::Mutex<Vec<String>>,
+    feats: std::sync::Mutex<Vec<Vec<f32>>>,
+}
+
+impl BufPool {
+    fn new() -> BufPool {
+        BufPool {
+            strings: std::sync::Mutex::new(Vec::new()),
+            feats: std::sync::Mutex::new(Vec::new()),
+        }
+    }
+
+    fn get_string(&self) -> String {
+        self.strings.lock().unwrap().pop().unwrap_or_default()
+    }
+
+    fn put_string(&self, mut s: String) {
+        s.clear();
+        let mut pool = self.strings.lock().unwrap();
+        if pool.len() < BUF_POOL_CAP {
+            pool.push(s);
+        }
+    }
+
+    fn get_feats(&self) -> Vec<f32> {
+        self.feats.lock().unwrap().pop().unwrap_or_default()
+    }
+
+    fn put_feats(&self, mut v: Vec<f32>) {
+        v.clear();
+        let mut pool = self.feats.lock().unwrap();
+        if pool.len() < BUF_POOL_CAP {
+            pool.push(v);
+        }
+    }
+}
+
 /// One in-flight request.
 struct Request {
     id: u64,
@@ -97,6 +167,23 @@ struct Request {
     /// Shed with `TIMEOUT` if still queued past this instant.
     deadline: Option<Instant>,
     respond: Sender<String>,
+    /// The owning connection's buffer pool; `features` and every reply
+    /// `String` cycle back through it instead of being reallocated.
+    pool: Arc<BufPool>,
+}
+
+/// Return a finished request's feature buffer to its connection's pool.
+fn recycle(r: Request) {
+    let Request { features, pool, .. } = r;
+    pool.put_feats(features);
+}
+
+/// Build a reply in a pooled string and send it; the connection's pump
+/// thread returns the string to the pool after writing it out.
+fn send_pooled(r: &Request, build: impl FnOnce(&mut String)) {
+    let mut s = r.pool.get_string();
+    build(&mut s);
+    let _ = r.respond.send(s);
 }
 
 /// Runtime shape of the serving coordinator.
@@ -111,6 +198,9 @@ pub struct ServerConfig {
     /// Deadline applied to requests that don't carry their own
     /// `DEADLINE_MS=` token; `None` = no default deadline.
     pub default_deadline: Option<Duration>,
+    /// Per-shard response-cache budget in bytes (`--cache-bytes`);
+    /// 0 disables the cache.
+    pub cache_bytes: usize,
 }
 
 impl Default for ServerConfig {
@@ -120,6 +210,7 @@ impl Default for ServerConfig {
             queue_cap: DEFAULT_QUEUE_CAP,
             policy: BatchPolicy::default(),
             default_deadline: None,
+            cache_bytes: 0,
         }
     }
 }
@@ -262,6 +353,7 @@ impl Server {
         let addr = listener.local_addr()?;
         let n_shards = config.shards.max(1);
         let metrics = Arc::new(ShardedMetrics::new(n_shards));
+        metrics.set_policy_label(config.policy.label());
         let shutdown = Arc::new(AtomicBool::new(false));
 
         // Shard workers: each owns an engine and drains its own queue
@@ -271,14 +363,17 @@ impl Server {
         for shard in 0..n_shards {
             let (tx, queue) = batch_channel_with_cap::<Request>(config.queue_cap);
             shard_channels.push((tx, queue.clone()));
-            let m = metrics.shard(shard);
-            let ops = metrics.ops().clone();
-            let slot = plan_slot.clone();
-            let factory = factory.clone();
-            let policy = config.policy;
-            workers.push(std::thread::spawn(move || {
-                supervise_shard(shard, queue, factory, slot, m, ops, policy)
-            }));
+            let rt = ShardRuntime {
+                shard,
+                queue,
+                factory: factory.clone(),
+                slot: plan_slot.clone(),
+                m: metrics.shard(shard),
+                ops: metrics.ops().clone(),
+                policy: config.policy,
+                cache_bytes: config.cache_bytes,
+            };
+            workers.push(std::thread::spawn(move || supervise_shard(rt)));
         }
         let ctx = Arc::new(ConnShared {
             dispatch: Dispatcher { shards: shard_channels, draining: AtomicBool::new(false) },
@@ -364,12 +459,9 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
     }
 }
 
-/// The supervised shard worker loop. The worker thread itself never
-/// dies to a panic: engine construction and batch processing both run
-/// under `catch_unwind`, every request in a poisoned batch gets a
-/// terminal reply, and the engine is rebuilt (after capped exponential
-/// backoff) unless it declares itself [`Engine::reusable_after_panic`].
-fn supervise_shard(
+/// Everything one shard worker owns, bundled so the spawn site stays
+/// readable as serving knobs accumulate.
+struct ShardRuntime {
     shard: usize,
     queue: Arc<BatchQueue<Request>>,
     factory: Arc<dyn Fn(usize) -> Box<dyn Engine> + Send + Sync>,
@@ -377,13 +469,52 @@ fn supervise_shard(
     m: Arc<Metrics>,
     ops: Arc<OpsCounters>,
     policy: BatchPolicy,
-) {
+    /// Response-cache budget in bytes; 0 disables the cache.
+    cache_bytes: usize,
+}
+
+/// Per-worker reusable state: scratch buffers recycled across batches
+/// (the zero-allocation path) plus the optional generation-keyed
+/// response cache. `answered` lives here so it survives a batch unwind
+/// and the supervisor can see exactly which requests were replied to.
+struct BatchScratch {
+    answered: Vec<bool>,
+    xbuf: Vec<f32>,
+    evals: Vec<usize>,
+    outcomes: Vec<Outcome>,
+    cache: Option<ResponseCache>,
+    /// Plan generation the current batch evaluates under — part of
+    /// every cache key, so an accepted reload invalidates implicitly.
+    generation: u64,
+}
+
+/// The supervised shard worker loop. The worker thread itself never
+/// dies to a panic: engine construction and batch processing both run
+/// under `catch_unwind`, every request in a poisoned batch gets a
+/// terminal reply, and the engine is rebuilt (after capped exponential
+/// backoff) unless it declares itself [`Engine::reusable_after_panic`].
+fn supervise_shard(rt: ShardRuntime) {
+    let ShardRuntime { shard, queue, factory, slot, m, ops, policy, cache_bytes } = rt;
     let mut engine: Option<Box<dyn Engine>> = None;
     let mut gen = 0u64;
     let mut d = 0usize;
-    let mut xbuf: Vec<f32> = Vec::new();
     let mut consecutive_panics = 0u32;
-    while let Some(batch) = queue.next_batch(policy) {
+    // Recycled across iterations: the batch/live vectors and the
+    // classify scratch reach a steady-state capacity and stop
+    // allocating.
+    let mut batch: Vec<Request> = Vec::new();
+    let mut live: Vec<Request> = Vec::new();
+    let mut scratch = BatchScratch {
+        answered: Vec::new(),
+        xbuf: Vec::new(),
+        evals: Vec::new(),
+        outcomes: Vec::new(),
+        cache: (cache_bytes > 0)
+            .then(|| ResponseCache::new(cache_bytes, CACHE_SEED ^ shard as u64)),
+        generation: 0,
+    };
+    while let Some(reason) = queue.next_batch_into(policy, &mut batch) {
+        m.record_flush(reason);
         if failpoints::enabled() {
             // Chaos hook: stall this shard's batch loop (`slow_batch`,
             // `ms=` payload) to force queue buildup and deadline expiry.
@@ -392,12 +523,15 @@ fn supervise_shard(
         // Deadline shedding at the batch boundary: anything that expired
         // while queued is answered TIMEOUT before any engine work.
         let now = Instant::now();
-        let mut live: Vec<Request> = Vec::with_capacity(batch.len());
-        for r in batch {
+        live.clear();
+        for r in batch.drain(..) {
             match r.deadline {
                 Some(deadline) if now >= deadline => {
                     ops.timeouts.fetch_add(1, Ordering::Relaxed);
-                    let _ = r.respond.send(format!("TIMEOUT {}", r.id));
+                    send_pooled(&r, |s| {
+                        let _ = write!(s, "TIMEOUT {}", r.id);
+                    });
+                    recycle(r);
                 }
                 _ => live.push(r),
             }
@@ -426,11 +560,16 @@ fn supervise_shard(
                     let why = panic_message(payload.as_ref());
                     eprintln!("shard {shard}: engine construction panicked: {why}");
                     for r in &live {
-                        let _ = r.respond.send(format!("ERR {} shard_panic: {why}", r.id));
+                        send_pooled(r, |s| {
+                            let _ = write!(s, "ERR {} shard_panic: {why}", r.id);
+                        });
                     }
                     ops.shard_restarts.fetch_add(1, Ordering::Relaxed);
                     let pause = restart_backoff(consecutive_panics);
                     consecutive_panics = consecutive_panics.saturating_add(1);
+                    for r in live.drain(..) {
+                        recycle(r);
+                    }
                     std::thread::sleep(pause);
                     continue;
                 }
@@ -448,6 +587,12 @@ fn supervise_shard(
             let g = slot.generation();
             if g != gen {
                 gen = g;
+                // A new generation makes every cached key unreachable;
+                // drop the bytes at once instead of waiting for FIFO
+                // eviction to churn the dead entries out.
+                if let Some(c) = &mut scratch.cache {
+                    c.clear();
+                }
                 match eng.swap_plan(slot.load()) {
                     Ok(()) => d = eng.n_features(),
                     Err(e) => eprintln!("shard {shard}: plan reload failed: {e}"),
@@ -459,10 +604,12 @@ fn supervise_shard(
         // reply is sent and survive the unwind, so a panic mid-batch
         // yields exactly one terminal reply per request: already-sent
         // OKs are never duplicated, everything else gets shard_panic.
-        let mut answered = vec![false; live.len()];
+        scratch.generation = gen;
+        scratch.answered.clear();
+        scratch.answered.resize(live.len(), false);
         let outcome = catch_unwind(AssertUnwindSafe(|| {
             failpoints::maybe_panic("shard_panic", shard as u64);
-            process_batch(eng.as_mut(), &live, &mut answered, d, &m, &mut xbuf);
+            process_batch(eng.as_mut(), &live, d, &m, &ops, &mut scratch);
         }));
         match outcome {
             Ok(()) => consecutive_panics = 0,
@@ -470,10 +617,17 @@ fn supervise_shard(
                 let why = panic_message(payload.as_ref());
                 // Terminal replies first — no client may hang on the
                 // poisoned batch — then recover the engine.
-                for (r, &done) in live.iter().zip(answered.iter()) {
+                for (r, &done) in live.iter().zip(scratch.answered.iter()) {
                     if !done {
-                        let _ = r.respond.send(format!("ERR {} shard_panic: {why}", r.id));
+                        send_pooled(r, |s| {
+                            let _ = write!(s, "ERR {} shard_panic: {why}", r.id);
+                        });
                     }
+                }
+                // The panic may have interrupted a cache insert; start
+                // the cache cold alongside the engine.
+                if let Some(c) = &mut scratch.cache {
+                    c.clear();
                 }
                 ops.shard_restarts.fetch_add(1, Ordering::Relaxed);
                 let reuse = engine.as_ref().is_some_and(|e| e.reusable_after_panic());
@@ -490,61 +644,161 @@ fn supervise_shard(
                 std::thread::sleep(pause);
             }
         }
+        // Every request has its terminal reply by now; hand the feature
+        // buffers back to their connections' pools.
+        for r in live.drain(..) {
+            recycle(r);
+        }
     }
 }
 
-/// One batch through the engine: width checks, classify, reply. Marks
-/// `answered[j]` immediately after each send so the supervisor knows
-/// exactly which requests still need a terminal reply if this unwinds.
+/// One batch through the cache and engine: width checks, cache lookups,
+/// classify into recycled buffers, pooled replies. Marks
+/// `scratch.answered[j]` immediately after each send so the supervisor
+/// knows exactly which requests still need a terminal reply if this
+/// unwinds.
 fn process_batch(
     engine: &mut dyn Engine,
     live: &[Request],
-    answered: &mut [bool],
     d: usize,
     m: &Metrics,
-    xbuf: &mut Vec<f32>,
+    ops: &OpsCounters,
+    scratch: &mut BatchScratch,
 ) {
     m.record_batch(live.len());
+    let BatchScratch { answered, xbuf, evals, outcomes, cache, generation } = scratch;
     xbuf.clear();
-    let mut evals: Vec<usize> = Vec::with_capacity(live.len());
+    evals.clear();
     for (j, r) in live.iter().enumerate() {
-        if r.features.len() == d {
-            xbuf.extend_from_slice(&r.features);
-            evals.push(j);
-        } else {
+        if r.features.len() != d {
             // Misfits fail alone; the rest of the batch still evaluates.
-            let _ = r.respond.send(format!("ERR {} wrong feature count (want {d})", r.id));
+            send_pooled(r, |s| {
+                let _ = write!(s, "ERR {} wrong feature count (want {d})", r.id);
+            });
             answered[j] = true;
+            continue;
         }
+        if let Some(cache) = cache.as_ref() {
+            if ResponseCache::cacheable(&r.features) {
+                if let Some(o) = cache.lookup(*generation, &r.features) {
+                    ops.cache_hits.fetch_add(1, Ordering::Relaxed);
+                    let lat = r.enqueued.elapsed().as_nanos() as u64;
+                    m.record_request(lat, o.models_evaluated, o.early);
+                    send_pooled(r, |s| format_ok_reply(s, r.id, &o, lat / 1_000));
+                    answered[j] = true;
+                    continue;
+                }
+                ops.cache_misses.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        xbuf.extend_from_slice(&r.features);
+        evals.push(j);
     }
     if evals.is_empty() {
         return;
     }
-    match engine.classify_batch(xbuf, evals.len()) {
-        Ok(outcomes) => {
-            for (&j, o) in evals.iter().zip(outcomes.iter()) {
+    match engine.classify_into(xbuf, evals.len(), outcomes) {
+        Ok(()) => {
+            for (&j, &o) in evals.iter().zip(outcomes.iter()) {
                 let r = &live[j];
+                if let Some(cache) = cache.as_mut() {
+                    if ResponseCache::cacheable(&r.features) {
+                        let evicted = cache.insert(*generation, &r.features, o);
+                        if evicted > 0 {
+                            ops.cache_evictions.fetch_add(evicted, Ordering::Relaxed);
+                        }
+                    }
+                }
                 let lat = r.enqueued.elapsed().as_nanos() as u64;
                 m.record_request(lat, o.models_evaluated, o.early);
-                let _ = r.respond.send(format!(
-                    "OK {} {} {:.6} {} {}",
-                    r.id,
-                    if o.positive { "pos" } else { "neg" },
-                    o.score,
-                    o.models_evaluated,
-                    lat / 1_000
-                ));
+                send_pooled(r, |s| format_ok_reply(s, r.id, &o, lat / 1_000));
                 answered[j] = true;
             }
         }
         Err(e) => {
-            for &j in &evals {
+            for &j in evals.iter() {
                 let r = &live[j];
-                let _ = r.respond.send(format!("ERR {} engine: {e}", r.id));
+                send_pooled(r, |s| {
+                    let _ = write!(s, "ERR {} engine: {e}", r.id);
+                });
                 answered[j] = true;
             }
         }
     }
+}
+
+/// Why one `EVAL` line failed to parse, mapped to the protocol's
+/// per-request error replies by the connection loop.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EvalParseError {
+    /// The id token is missing or not a `u64` (`ERR - malformed EVAL`).
+    BadId,
+    /// A `DEADLINE_MS=` token carried a non-numeric value.
+    BadDeadline {
+        /// The request id the error reply should carry.
+        id: u64,
+    },
+    /// The feature list is empty or contains a non-float token.
+    BadFeatures {
+        /// The request id the error reply should carry.
+        id: u64,
+    },
+}
+
+/// Parse one `EVAL` body — `<id> [DEADLINE_MS=<d>] <f1>,<f2>,...` —
+/// into a reusable feature buffer (cleared and refilled, never
+/// reallocated after warmup). Returns the id and the optional
+/// `DEADLINE_MS` value. Public so the allocation harness and benches
+/// drive the exact production parser.
+pub fn parse_eval(
+    rest: &str,
+    features: &mut Vec<f32>,
+) -> Result<(u64, Option<u64>), EvalParseError> {
+    features.clear();
+    let (id_str, mut rest) =
+        rest.split_once(' ').map(|(a, b)| (a, b.trim_start())).unwrap_or((rest, ""));
+    let Ok(id) = id_str.parse::<u64>() else {
+        return Err(EvalParseError::BadId);
+    };
+    let mut deadline_ms: Option<u64> = None;
+    if let Some(after) = rest.strip_prefix("DEADLINE_MS=") {
+        let (token, feats) =
+            after.split_once(' ').map(|(a, b)| (a, b.trim_start())).unwrap_or((after, ""));
+        match token.parse::<u64>() {
+            Ok(ms) => {
+                deadline_ms = Some(ms);
+                rest = feats;
+            }
+            Err(_) => return Err(EvalParseError::BadDeadline { id }),
+        }
+    }
+    if rest.is_empty() {
+        return Err(EvalParseError::BadFeatures { id });
+    }
+    for token in rest.split(',') {
+        match token.trim().parse::<f32>() {
+            Ok(v) => features.push(v),
+            Err(_) => return Err(EvalParseError::BadFeatures { id }),
+        }
+    }
+    Ok((id, deadline_ms))
+}
+
+/// Format the protocol's `OK` reply into a reusable buffer:
+/// `OK <id> <pos|neg> <score:.6> <models> <latency_us>`. The single
+/// authority on the reply shape, shared by the cold, cached, and
+/// panic-recovery paths — so their replies are bitwise-identical by
+/// construction. Public so the allocation harness and benches drive the
+/// exact production formatter.
+pub fn format_ok_reply(buf: &mut String, id: u64, o: &Outcome, latency_us: u64) {
+    buf.clear();
+    let _ = write!(
+        buf,
+        "OK {id} {} {:.6} {} {latency_us}",
+        if o.positive { "pos" } else { "neg" },
+        o.score,
+        o.models_evaluated
+    );
 }
 
 /// Handle the `RELOAD <path>` control command: load + compile the
@@ -602,24 +856,32 @@ fn handle_reload(path: &str, slot: &Option<Arc<PlanSlot>>, ops: &OpsCounters) ->
     format!("RELOADED {} gen={gen} T={t}", candidate.name())
 }
 
-/// One line read with a hard byte cap.
+/// One line read with a hard byte cap. The bytes land in the caller's
+/// reusable buffer; `Line` just flags that it holds a complete line.
 enum LineRead {
-    Line(String),
+    Line,
     /// The line exceeded the cap; it has been consumed from the stream.
     TooLong,
     Eof,
 }
 
-/// Read one `\n`-terminated line of at most `cap` bytes via
-/// `fill_buf`/`consume` — unlike `BufRead::read_line`, an oversized (or
-/// maliciously endless) line is discarded as it streams in instead of
-/// being accumulated, so one bad client line costs O(cap) memory.
-/// A final unterminated line (client half-wrote then shut down its
-/// write side) is returned as a normal line at EOF. Invalid UTF-8 is
-/// replaced lossily — the protocol parser then rejects the line, which
-/// is the per-line error behavior we want for binary garbage.
-fn read_line_capped<R: BufRead>(reader: &mut R, cap: usize) -> std::io::Result<LineRead> {
-    let mut buf: Vec<u8> = Vec::new();
+/// Read one `\n`-terminated line of at most `cap` bytes into `buf`
+/// (cleared first) via `fill_buf`/`consume` — unlike
+/// `BufRead::read_line`, an oversized (or maliciously endless) line is
+/// discarded as it streams in instead of being accumulated, so one bad
+/// client line costs O(cap) memory, and the reused buffer means a
+/// steady request stream stops allocating here after warmup. A final
+/// unterminated line (client half-wrote then shut down its write side)
+/// is returned as a normal line at EOF. Decoding stays lossy at the
+/// call site (`String::from_utf8_lossy`) — binary garbage turns into a
+/// line the protocol parser rejects, which is the per-line error
+/// behavior we want.
+fn read_line_capped<R: BufRead>(
+    reader: &mut R,
+    cap: usize,
+    buf: &mut Vec<u8>,
+) -> std::io::Result<LineRead> {
+    buf.clear();
     let mut discarding = false;
     loop {
         let chunk = reader.fill_buf()?;
@@ -631,7 +893,7 @@ fn read_line_capped<R: BufRead>(reader: &mut R, cap: usize) -> std::io::Result<L
             if buf.is_empty() {
                 return Ok(LineRead::Eof);
             }
-            return Ok(LineRead::Line(String::from_utf8_lossy(&buf).into_owned()));
+            return Ok(LineRead::Line);
         }
         let (take, found_newline) = match chunk.iter().position(|&b| b == b'\n') {
             Some(i) => (i + 1, true),
@@ -651,7 +913,7 @@ fn read_line_capped<R: BufRead>(reader: &mut R, cap: usize) -> std::io::Result<L
             if discarding {
                 return Ok(LineRead::TooLong);
             }
-            return Ok(LineRead::Line(String::from_utf8_lossy(&buf).into_owned()));
+            return Ok(LineRead::Line);
         }
     }
 }
@@ -663,9 +925,12 @@ fn handle_conn(stream: TcpStream, ctx: Arc<ConnShared>) {
     };
     let writer = std::io::BufWriter::new(peer_write);
     let mut reader = BufReader::new(stream);
+    let pool = Arc::new(BufPool::new());
     // Response pump: a dedicated channel per connection keeps ordering
     // per-client while letting shard workers answer out of batch order.
+    // Written reply strings go back to the connection's pool.
     let (resp_tx, resp_rx) = mpsc::channel::<String>();
+    let pump_pool = pool.clone();
     let pump = std::thread::spawn(move || {
         let mut w = writer;
         while let Ok(line) = resp_rx.recv() {
@@ -673,19 +938,23 @@ fn handle_conn(stream: TcpStream, ctx: Arc<ConnShared>) {
                 break;
             }
             let _ = w.flush();
+            pump_pool.put_string(line);
         }
     });
 
+    let mut line_buf: Vec<u8> = Vec::new();
     loop {
-        let line = match read_line_capped(&mut reader, MAX_LINE_BYTES) {
-            Err(_) => break,
-            Ok(LineRead::Eof) => break,
+        match read_line_capped(&mut reader, MAX_LINE_BYTES, &mut line_buf) {
+            Err(_) | Ok(LineRead::Eof) => break,
             Ok(LineRead::TooLong) => {
                 let _ = resp_tx.send(format!("ERR - line too long (cap {MAX_LINE_BYTES} bytes)"));
                 continue;
             }
-            Ok(LineRead::Line(l)) => l,
-        };
+            Ok(LineRead::Line) => {}
+        }
+        // Borrowed for valid UTF-8 (the steady state, no allocation);
+        // binary garbage is replaced lossily and rejected by the parse.
+        let line = String::from_utf8_lossy(&line_buf);
         let line = line.trim();
         if line.is_empty() {
             continue;
@@ -695,9 +964,9 @@ fn handle_conn(stream: TcpStream, ctx: Arc<ConnShared>) {
             None => (line, ""),
         };
         match verb {
-            "EVAL" => handle_eval(rest, &ctx, &resp_tx),
+            "EVAL" => handle_eval(rest, &ctx, &resp_tx, &pool),
             "STATS" => {
-                let _ = resp_tx.send(format!("STATS {}", ctx.metrics.snapshot().report()));
+                let _ = resp_tx.send(format!("STATS {}", ctx.metrics.report_cached()));
             }
             "RELOAD" => {
                 // The path is everything after the verb (paths may
@@ -726,55 +995,49 @@ fn handle_conn(stream: TcpStream, ctx: Arc<ConnShared>) {
 /// Parse and route one `EVAL` request:
 /// `<id> [DEADLINE_MS=<d>] <f1>,<f2>,...`. A `DEADLINE_MS` token
 /// overrides the server default; `DEADLINE_MS=0` explicitly opts out.
-fn handle_eval(rest: &str, ctx: &ConnShared, resp_tx: &Sender<String>) {
-    let (id_str, mut rest) =
-        rest.split_once(' ').map(|(a, b)| (a, b.trim_start())).unwrap_or((rest, ""));
-    let Ok(id) = id_str.parse::<u64>() else {
-        let _ = resp_tx.send("ERR - malformed EVAL".into());
-        return;
-    };
-    let mut deadline_ms: Option<u64> = None;
-    if let Some(after) = rest.strip_prefix("DEADLINE_MS=") {
-        let (token, feats) =
-            after.split_once(' ').map(|(a, b)| (a, b.trim_start())).unwrap_or((after, ""));
-        match token.parse::<u64>() {
-            Ok(ms) => {
-                deadline_ms = Some(ms);
-                rest = feats;
-            }
-            Err(_) => {
-                let _ = resp_tx.send(format!("ERR {id} malformed DEADLINE_MS"));
-                return;
-            }
+/// The feature buffer comes from — and on any non-routed exit returns
+/// to — the connection's pool.
+fn handle_eval(rest: &str, ctx: &ConnShared, resp_tx: &Sender<String>, pool: &Arc<BufPool>) {
+    let mut features = pool.get_feats();
+    let (id, deadline_ms) = match parse_eval(rest, &mut features) {
+        Ok(parsed) => parsed,
+        Err(e) => {
+            pool.put_feats(features);
+            let _ = resp_tx.send(match e {
+                EvalParseError::BadId => "ERR - malformed EVAL".to_string(),
+                EvalParseError::BadDeadline { id } => format!("ERR {id} malformed DEADLINE_MS"),
+                EvalParseError::BadFeatures { id } => format!("ERR {id} malformed EVAL"),
+            });
+            return;
         }
-    }
-    let features: Option<Vec<f32>> = if rest.is_empty() {
-        None
-    } else {
-        rest.split(',').map(|t| t.trim().parse::<f32>()).collect::<Result<_, _>>().ok()
-    };
-    let Some(features) = features else {
-        let _ = resp_tx.send(format!("ERR {id} malformed EVAL"));
-        return;
     };
     let deadline = match deadline_ms {
         Some(0) => None,
         Some(ms) => Some(Instant::now() + Duration::from_millis(ms)),
         None => ctx.default_deadline.map(|d| Instant::now() + d),
     };
-    let req =
-        Request { id, features, enqueued: Instant::now(), deadline, respond: resp_tx.clone() };
+    let req = Request {
+        id,
+        features,
+        enqueued: Instant::now(),
+        deadline,
+        respond: resp_tx.clone(),
+        pool: pool.clone(),
+    };
     match ctx.dispatch.route(req) {
         Ok(()) => {}
         Err(RouteError::Busy(r)) => {
             ctx.metrics.ops().busy_shed.fetch_add(1, Ordering::Relaxed);
             let _ = resp_tx.send(format!("BUSY {}", r.id));
+            recycle(r);
         }
         Err(RouteError::Draining(r)) => {
             let _ = resp_tx.send(format!("ERR {} draining", r.id));
+            recycle(r);
         }
         Err(RouteError::Closed(r)) => {
             let _ = resp_tx.send(format!("ERR {} server shutting down", r.id));
+            recycle(r);
         }
     }
 }
@@ -1028,38 +1291,73 @@ mod tests {
     fn capped_reader_handles_long_partial_and_binary_lines() {
         use std::io::Cursor;
         let cap = 16;
-        // Normal short lines pass through, CRLF and all.
+        let mut buf: Vec<u8> = Vec::new();
+        // Normal short lines pass through, CRLF and all. The buffer is
+        // reused across reads (cleared each time, never reallocated).
         let mut r = Cursor::new(b"hello\nworld\r\n".to_vec());
-        match read_line_capped(&mut r, cap).unwrap() {
-            LineRead::Line(l) => assert_eq!(l, "hello"),
+        match read_line_capped(&mut r, cap, &mut buf).unwrap() {
+            LineRead::Line => assert_eq!(String::from_utf8_lossy(&buf), "hello"),
             _ => panic!("expected line"),
         }
-        match read_line_capped(&mut r, cap).unwrap() {
-            LineRead::Line(l) => assert_eq!(l, "world\r"),
+        match read_line_capped(&mut r, cap, &mut buf).unwrap() {
+            LineRead::Line => assert_eq!(String::from_utf8_lossy(&buf), "world\r"),
             _ => panic!("expected line"),
         }
-        assert!(matches!(read_line_capped(&mut r, cap).unwrap(), LineRead::Eof));
+        assert!(matches!(read_line_capped(&mut r, cap, &mut buf).unwrap(), LineRead::Eof));
         // An oversized line is consumed (not buffered) and the stream
         // stays usable for the next line.
         let mut big = vec![b'x'; 100];
         big.push(b'\n');
         big.extend_from_slice(b"next\n");
         let mut r = Cursor::new(big);
-        assert!(matches!(read_line_capped(&mut r, cap).unwrap(), LineRead::TooLong));
-        match read_line_capped(&mut r, cap).unwrap() {
-            LineRead::Line(l) => assert_eq!(l, "next"),
+        assert!(matches!(read_line_capped(&mut r, cap, &mut buf).unwrap(), LineRead::TooLong));
+        match read_line_capped(&mut r, cap, &mut buf).unwrap() {
+            LineRead::Line => assert_eq!(String::from_utf8_lossy(&buf), "next"),
             _ => panic!("expected line"),
         }
         // A half-written final line (no newline before EOF) is returned
         // as a line; binary garbage is replaced lossily, not fatal.
         let mut r = Cursor::new(b"\xff\xfepartial".to_vec());
-        match read_line_capped(&mut r, cap).unwrap() {
-            LineRead::Line(l) => assert!(l.contains("partial")),
+        match read_line_capped(&mut r, cap, &mut buf).unwrap() {
+            LineRead::Line => {
+                let l = String::from_utf8_lossy(&buf);
+                assert!(l.contains("partial"));
+            }
             _ => panic!("expected line"),
         }
         // An oversized line that never terminates before EOF is TooLong.
         let mut r = Cursor::new(vec![b'y'; 50]);
-        assert!(matches!(read_line_capped(&mut r, cap).unwrap(), LineRead::TooLong));
+        assert!(matches!(read_line_capped(&mut r, cap, &mut buf).unwrap(), LineRead::TooLong));
+    }
+
+    #[test]
+    fn parse_eval_reuses_the_buffer_and_maps_errors() {
+        let mut feats: Vec<f32> = Vec::new();
+        assert_eq!(parse_eval("7 1.5,2.5,3", &mut feats), Ok((7, None)));
+        assert_eq!(feats, vec![1.5, 2.5, 3.0]);
+        // The buffer is cleared and refilled, not appended to.
+        assert_eq!(parse_eval("8 DEADLINE_MS=250 1,2", &mut feats), Ok((8, Some(250))));
+        assert_eq!(feats, vec![1.0, 2.0]);
+        assert_eq!(parse_eval("8 DEADLINE_MS=0 4", &mut feats), Ok((8, Some(0))));
+        assert_eq!(parse_eval("x 1,2", &mut feats), Err(EvalParseError::BadId));
+        assert_eq!(
+            parse_eval("9 DEADLINE_MS=abc 1", &mut feats),
+            Err(EvalParseError::BadDeadline { id: 9 })
+        );
+        assert_eq!(parse_eval("9", &mut feats), Err(EvalParseError::BadFeatures { id: 9 }));
+        assert_eq!(parse_eval("9 1,zap", &mut feats), Err(EvalParseError::BadFeatures { id: 9 }));
+    }
+
+    #[test]
+    fn format_ok_reply_matches_the_wire_shape() {
+        let o = Outcome { positive: true, score: 1.25, models_evaluated: 7, early: true };
+        // A dirty recycled buffer is cleared, not appended to.
+        let mut buf = String::from("junk");
+        format_ok_reply(&mut buf, 42, &o, 133);
+        assert_eq!(buf, "OK 42 pos 1.250000 7 133");
+        let r = parse_eval_response(&buf).unwrap();
+        assert_eq!((r.id, r.models, r.latency_us), (42, 7, 133));
+        assert!(r.positive);
     }
 
     #[test]

@@ -12,8 +12,10 @@
 //!   serve        start the supervised sharded TCP coordinator from a plan
 //!   reload       validated hot-swap of a running server's plan (RELOAD)
 //!   drain        stop admission on a running server and drain its queues
-//!   bench-client load-test a running server (N pipelined connections,
-//!                BUSY retried with jittered exponential backoff)
+//!   bench-client load-test a running server — closed-loop (N pipelined
+//!                connections, BUSY retried with jittered exponential
+//!                backoff) or open-loop (`--target-rps`: fixed-rate
+//!                lateness-corrected arrival schedule, no retries)
 //!   experiment   regenerate paper figures/tables (fig1..fig6, tables, all)
 //!
 //! Every subcommand that takes `--plan` accepts either artifact format
@@ -103,12 +105,15 @@ USAGE: qwyc <subcommand> [flags]
   serve        --plan plan.bin|plan.json --addr 127.0.0.1:7077
                [--backend native|pjrt --artifact rw1_stage --artifacts-dir artifacts]
                [--shards 1 --queue-cap 1024 --max-batch 256 --max-wait-ms 2]
+               [--adaptive  (depth-scaled flush deadlines; shows as policy= in STATS)]
+               [--cache-bytes 0  (per-shard response-cache budget; 0 = off)]
                [--deadline-ms 0  (default request deadline; 0 = none)]
   reload       --addr 127.0.0.1:7077 --plan plan.bin     (validated hot-swap;
                either artifact format; exits non-zero on RELOAD_REJECTED)
   drain        --addr 127.0.0.1:7077     (stop admission, drain the queues)
   bench-client --addr 127.0.0.1:7077 --dataset ... --requests 5000
                [--pipeline 64 --concurrency 1 --deadline-ms 0]
+               [--target-rps 0  (open-loop: fixed-rate arrivals; 0 = closed loop)]
   experiment   fig1|fig2|fig3|fig4|fig5|fig6|table1|tables|all
                [--scale 0.1 --trees 500 --max-opt 3000 --runs 5 --out results/]
 ";
@@ -376,17 +381,21 @@ fn serve(args: &Args) -> Result<(), QwycError> {
     let backend = args.get_str("backend", "native");
     let artifact = args.get_str("artifact", "rw1_stage");
     let artifacts_dir = args.get_str("artifacts-dir", "artifacts");
+    let max_batch = args.get_usize("max-batch", 256)?;
+    let max_wait = Duration::from_millis(args.get_u64("max-wait-ms", 2)?);
     let config = ServerConfig {
         shards: args.get_usize("shards", 1)?.max(1),
         queue_cap: args.get_usize("queue-cap", DEFAULT_QUEUE_CAP)?,
-        policy: BatchPolicy {
-            max_batch: args.get_usize("max-batch", 256)?,
-            max_wait: Duration::from_millis(args.get_u64("max-wait-ms", 2)?),
+        policy: if args.get_bool("adaptive", false)? {
+            BatchPolicy::adaptive(max_batch, max_wait)
+        } else {
+            BatchPolicy::fixed(max_batch, max_wait)
         },
         default_deadline: match args.get_u64("deadline-ms", 0)? {
             0 => None,
             ms => Some(Duration::from_millis(ms)),
         },
+        cache_bytes: args.get_usize("cache-bytes", 0)?,
     };
     let loaded = load_artifact(args)?;
     args.check_unknown()?;
@@ -400,14 +409,16 @@ fn serve(args: &Args) -> Result<(), QwycError> {
     }
     println!(
         "serving plan '{}' ({}, T={}, backend={backend}, shards={}, queue_cap={}) on {addr}; \
-         batch<={} wait<={:?}",
+         batch<={} wait<={:?} policy={} cache_bytes={}",
         loaded.name(),
         loaded.ensemble_name(),
         loaded.compiled().t(),
         config.shards,
         config.queue_cap,
         config.policy.max_batch,
-        config.policy.max_wait
+        config.policy.max_wait,
+        config.policy.label(),
+        config.cache_bytes
     );
     #[cfg(feature = "pjrt")]
     if backend == "pjrt" {
@@ -435,12 +446,14 @@ fn serve(args: &Args) -> Result<(), QwycError> {
     stats_loop(server)
 }
 
-/// Print the aggregated per-shard metrics every 10s, forever.
+/// Print the aggregated per-shard metrics every 10s, forever. Uses the
+/// cached report so an idle server's stats tick costs one version check
+/// instead of a full rebuild.
 fn stats_loop(server: Server) -> Result<(), QwycError> {
     println!("listening on {} — Ctrl-C to stop", server.addr);
     loop {
         std::thread::sleep(Duration::from_secs(10));
-        println!("{}", server.metrics.snapshot().report());
+        println!("{}", server.metrics.report_cached());
     }
 }
 
@@ -502,8 +515,12 @@ fn bench_client(args: &Args) -> Result<(), QwycError> {
     let pipeline = args.get_usize("pipeline", 64)?.max(1);
     let concurrency = args.get_usize("concurrency", 1)?.max(1);
     let deadline_ms = args.get_u64("deadline-ms", 0)?;
+    let target_rps = args.get_f64("target-rps", 0.0)?;
     let (_, te) = load_data(args)?;
     args.check_unknown()?;
+    if target_rps > 0.0 {
+        return bench_open_loop(&addr, &te, requests, concurrency, deadline_ms, target_rps);
+    }
 
     // `--concurrency N` opens N pipelined connections so an N-shard
     // server actually sees parallel load; requests are split evenly.
@@ -537,34 +554,245 @@ fn bench_client(args: &Args) -> Result<(), QwycError> {
         tot.errors += load.errors;
     }
     lat_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // Attempts (wire sends) and completions are different units: every
+    // BUSY retry is an extra attempt for the SAME request, so attempts =
+    // requests + retries, while the completion breakdown below accounts
+    // for each of the `requests` exactly once and its percents sum to
+    // 100 by construction.
+    let ok = lat_us.len() as u64;
     let answered = lat_us.len().max(1);
     let pct = |n: u64| n as f64 / requests.max(1) as f64 * 100.0;
     println!(
-        "{} requests ({} conns) in {:.2}s = {:.0} rps; busy {}; \
-         latency p50/p95/p99 = {:.0}/{:.0}/{:.0} us; mean models {:.2}",
+        "closed-loop: {} requests = {} attempts ({} conns, {} BUSY replies, {} retries) \
+         in {:.2}s = {:.0} rps",
         requests,
+        requests as u64 + tot.retries,
         concurrency,
-        el,
-        requests as f64 / el,
         tot.busy,
-        qwyc::util::stats::percentile_sorted(&lat_us, 50.0),
-        qwyc::util::stats::percentile_sorted(&lat_us, 95.0),
-        qwyc::util::stats::percentile_sorted(&lat_us, 99.0),
-        tot.models_sum as f64 / answered as f64
+        tot.retries,
+        el,
+        requests as f64 / el
     );
     println!(
-        "retries {} | shed {} ({:.2}%) | timeouts {} ({:.2}%) | errors {} ({:.2}%)",
-        tot.retries,
+        "completions: ok {} ({:.2}%) + shed {} ({:.2}%) + timeouts {} ({:.2}%) + \
+         errors {} ({:.2}%) = {} (100%)",
+        ok,
+        pct(ok),
         tot.shed,
         pct(tot.shed),
         tot.timeouts,
         pct(tot.timeouts),
         tot.errors,
-        pct(tot.errors)
+        pct(tot.errors),
+        requests
+    );
+    println!(
+        "latency p50/p95/p99 = {:.0}/{:.0}/{:.0} us; mean models {:.2}",
+        qwyc::util::stats::percentile_sorted(&lat_us, 50.0),
+        qwyc::util::stats::percentile_sorted(&lat_us, 95.0),
+        qwyc::util::stats::percentile_sorted(&lat_us, 99.0),
+        tot.models_sum as f64 / answered as f64
     );
     let mut client = Client::connect(&addr)?;
     println!("server: {}", client.stats()?);
     Ok(())
+}
+
+/// Per-connection open-loop schedule: request `k` on connection `c` is
+/// sent at `start + phase_ns + k·interval_ns` — an ABSOLUTE schedule.
+/// A late send is corrected by sending immediately (catching up in a
+/// burst) and the anchor is never re-based, so a slow server faces the
+/// arrival rate it was asked to face instead of quietly pacing the
+/// generator down to its own speed.
+struct OpenLoopConn {
+    requests: usize,
+    interval_ns: u64,
+    phase_ns: u64,
+    row_offset: usize,
+    deadline_ms: u64,
+    start: std::time::Instant,
+}
+
+/// Aggregated open-loop results for one connection. Latencies are
+/// client-measured (send instant → reply read), so they include queue
+/// buildup the server-reported latency would miss for shed replies.
+#[derive(Default)]
+struct OpenLoad {
+    lat_us: Vec<f64>,
+    models_sum: u64,
+    ok: u64,
+    busy: u64,
+    timeouts: u64,
+    errors: u64,
+}
+
+/// Open-loop load generation (`--target-rps`): arrivals follow a fixed
+/// deterministic schedule split across `--concurrency` phase-staggered
+/// connections, never paced by responses. There are no BUSY retries —
+/// a shed arrival is a shed arrival — so the completion mix (ok / busy
+/// / timeout / error, fractions summing to 1.0) is the server's honest
+/// behavior at the offered rate.
+fn bench_open_loop(
+    addr: &std::net::SocketAddr,
+    te: &Dataset,
+    requests: usize,
+    concurrency: usize,
+    deadline_ms: u64,
+    target_rps: f64,
+) -> Result<(), QwycError> {
+    let counts: Vec<usize> = (0..concurrency)
+        .map(|c| requests / concurrency + usize::from(c < requests % concurrency))
+        .collect();
+    let interval_ns = (1e9 * concurrency as f64 / target_rps) as u64;
+    let start = std::time::Instant::now();
+    let sw = qwyc::util::timer::Stopwatch::new();
+    let results: Vec<Result<OpenLoad, QwycError>> = std::thread::scope(|s| {
+        let handles: Vec<_> = counts
+            .iter()
+            .enumerate()
+            .map(|(c, &n)| {
+                let cfg = OpenLoopConn {
+                    requests: n,
+                    interval_ns,
+                    phase_ns: c as u64 * interval_ns / concurrency as u64,
+                    row_offset: c * 7919,
+                    deadline_ms,
+                    start,
+                };
+                s.spawn(move || run_conn_open(addr, te, cfg))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let el = sw.elapsed_s();
+
+    let mut lat_us: Vec<f64> = Vec::with_capacity(requests);
+    let mut tot = OpenLoad::default();
+    for r in results {
+        let load = r?;
+        lat_us.extend(load.lat_us);
+        tot.models_sum += load.models_sum;
+        tot.ok += load.ok;
+        tot.busy += load.busy;
+        tot.timeouts += load.timeouts;
+        tot.errors += load.errors;
+    }
+    lat_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let total = (tot.ok + tot.busy + tot.timeouts + tot.errors).max(1);
+    let frac = |n: u64| n as f64 / total as f64;
+    println!(
+        "open-loop: target {target_rps:.0} rps, achieved {:.0} rps \
+         ({requests} requests, {concurrency} conns, {el:.2}s)",
+        requests as f64 / el
+    );
+    println!(
+        "completions: ok {:.3} | busy {:.3} | timeout {:.3} | error {:.3} (fractions sum to 1.0)",
+        frac(tot.ok),
+        frac(tot.busy),
+        frac(tot.timeouts),
+        frac(tot.errors)
+    );
+    println!(
+        "client latency p50/p95/p99 = {:.0}/{:.0}/{:.0} us; mean models {:.2}",
+        qwyc::util::stats::percentile_sorted(&lat_us, 50.0),
+        qwyc::util::stats::percentile_sorted(&lat_us, 95.0),
+        qwyc::util::stats::percentile_sorted(&lat_us, 99.0),
+        tot.models_sum as f64 / tot.ok.max(1) as f64
+    );
+    let mut client = Client::connect(addr)?;
+    println!("server: {}", client.stats()?);
+    Ok(())
+}
+
+/// One open-loop connection: the writer (this thread) follows the
+/// absolute schedule while a reader thread drains replies and matches
+/// each OK against the send-instant table to get client-side latency.
+fn run_conn_open(
+    addr: &std::net::SocketAddr,
+    te: &Dataset,
+    cfg: OpenLoopConn,
+) -> Result<OpenLoad, QwycError> {
+    use std::fmt::Write as _;
+    use std::io::{BufRead, Write};
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    let io_err = |e: std::io::Error| QwycError::Io(format!("open-loop connection: {e}"));
+    let stream = std::net::TcpStream::connect(addr).map_err(io_err)?;
+    stream.set_nodelay(true).ok();
+    let mut wr = stream.try_clone().map_err(io_err)?;
+    let mut reader = std::io::BufReader::new(stream);
+    // Send instants in nanos since `cfg.start`, indexed by request id
+    // (ids are per-connection and sequential from 0).
+    let sends: Vec<AtomicU64> = (0..cfg.requests).map(|_| AtomicU64::new(0)).collect();
+
+    std::thread::scope(|s| -> Result<OpenLoad, QwycError> {
+        let sends_ref = &sends;
+        let reader_cfg = &cfg;
+        let read_side = s.spawn(move || -> Result<OpenLoad, QwycError> {
+            let mut load = OpenLoad::default();
+            let mut line = String::new();
+            let mut seen = 0usize;
+            while seen < reader_cfg.requests {
+                line.clear();
+                if reader.read_line(&mut line).map_err(io_err)? == 0 {
+                    return Err(QwycError::Io("server closed the connection".into()));
+                }
+                let now_ns = reader_cfg.start.elapsed().as_nanos() as u64;
+                match Reply::parse(line.trim()) {
+                    Reply::Ok(r) => {
+                        if let Some(cell) = sends_ref.get(r.id as usize) {
+                            let sent_ns = cell.load(Ordering::Acquire);
+                            load.lat_us.push(now_ns.saturating_sub(sent_ns) as f64 / 1_000.0);
+                        }
+                        load.models_sum += r.models as u64;
+                        load.ok += 1;
+                        seen += 1;
+                    }
+                    Reply::Busy { .. } => {
+                        load.busy += 1;
+                        seen += 1;
+                    }
+                    Reply::Timeout { .. } => {
+                        load.timeouts += 1;
+                        seen += 1;
+                    }
+                    Reply::Err { .. } => {
+                        load.errors += 1;
+                        seen += 1;
+                    }
+                    other => {
+                        return Err(QwycError::Io(format!("unexpected reply: {other:?}")));
+                    }
+                }
+            }
+            Ok(load)
+        });
+
+        let mut buf = String::new();
+        for k in 0..cfg.requests {
+            let sched_ns = cfg.phase_ns + k as u64 * cfg.interval_ns;
+            let sched = cfg.start + Duration::from_nanos(sched_ns);
+            let now = std::time::Instant::now();
+            if sched > now {
+                std::thread::sleep(sched - now);
+            }
+            // Late? Send immediately — the schedule is never re-based.
+            let row = te.row((cfg.row_offset + k) % te.n);
+            buf.clear();
+            let _ = write!(buf, "EVAL {k}");
+            if cfg.deadline_ms > 0 {
+                let _ = write!(buf, " DEADLINE_MS={}", cfg.deadline_ms);
+            }
+            for (i, v) in row.iter().enumerate() {
+                buf.push(if i == 0 { ' ' } else { ',' });
+                let _ = write!(buf, "{v}");
+            }
+            buf.push('\n');
+            sends[k].store(cfg.start.elapsed().as_nanos() as u64, Ordering::Release);
+            wr.write_all(buf.as_bytes()).map_err(io_err)?;
+        }
+        read_side.join().expect("open-loop reader thread")
+    })
 }
 
 /// Per-connection load results (latencies of OK replies only).

@@ -13,7 +13,7 @@ use super::QwycPlan;
 use crate::ensemble::BaseModel;
 use crate::error::QwycError;
 use crate::gbt::tree::TreeSoa;
-use crate::qwyc::sweep::{sweep_batched, SweepOutcome, SweepParams};
+use crate::qwyc::sweep::{sweep_batched, sweep_block_with, SweepOutcome, SweepParams, SweepScratch};
 use crate::qwyc::{FastClassifier, SingleResult};
 use crate::util::pool::Pool;
 
@@ -324,6 +324,38 @@ impl CompiledPlan {
                 self.score_position(r, xblk, d, rows, out, &mut lat_scratch)
             }
         })
+    }
+
+    /// Single-block [`sweep_features`](Self::sweep_features) with
+    /// caller-owned scratch: the serving hot path's allocation-free
+    /// entry point. Bitwise-identical to `sweep_features` whenever
+    /// `n ≤ block` there (the batched driver then runs exactly one
+    /// block over the same scorer); the caller is responsible for
+    /// splitting larger inputs. `lat_scratch` replaces the per-block
+    /// lattice scratch the batched path allocates.
+    pub fn sweep_features_into<'s>(
+        &self,
+        x: &[f32],
+        n: usize,
+        d: usize,
+        scratch: &'s mut SweepScratch,
+        lat_scratch: &mut Vec<f32>,
+    ) -> &'s [SweepOutcome] {
+        assert!(
+            d >= self.min_features,
+            "row stride {d} < {} required by the base models",
+            self.min_features
+        );
+        assert_eq!(x.len(), n * d, "feature buffer is not n × d");
+        let params = self.sweep_params();
+        sweep_block_with(
+            &params,
+            n,
+            |r: usize, rows: &[u32], out: &mut [f32]| {
+                self.score_position(r, x, d, rows, out, lat_scratch)
+            },
+            scratch,
+        )
     }
 
     /// Early-exit evaluation of one example — the compiled twin of

@@ -31,7 +31,9 @@ pub mod thresholds;
 
 pub use evaluator::{simulate, simulate_with_pool, SimResult};
 pub use order::{optimize_order, optimize_order_with_pool};
-pub use sweep::{sweep_batched, sweep_block, SweepOutcome, SweepParams};
+pub use sweep::{
+    sweep_batched, sweep_block, sweep_block_with, SweepOutcome, SweepParams, SweepScratch,
+};
 pub use thresholds::optimize_thresholds_for_order;
 
 use crate::error::QwycError;

@@ -89,21 +89,71 @@ pub struct SweepOutcome {
 pub fn sweep_block<S>(
     params: &SweepParams<'_>,
     nb: usize,
-    mut score_position: S,
+    score_position: S,
 ) -> Vec<SweepOutcome>
+where
+    S: FnMut(usize, &[u32], &mut [f32]),
+{
+    let mut scratch = SweepScratch::default();
+    sweep_block_with(params, nb, score_position, &mut scratch);
+    scratch.out
+}
+
+/// Reusable working set for [`sweep_block_with`]: the five per-block
+/// vectors (`out`, running scores, position scores, keep mask, active
+/// list) that [`sweep_block`] would otherwise allocate on every call.
+/// Every field is cleared and fully rewritten at the start of each
+/// sweep, so a scratch can be reused across calls — including after a
+/// panic unwound through an earlier call — without carrying state over.
+#[derive(Default)]
+pub struct SweepScratch {
+    out: Vec<SweepOutcome>,
+    g: Vec<f32>,
+    scores: Vec<f32>,
+    keep: Vec<u8>,
+    active: Vec<u32>,
+}
+
+impl SweepScratch {
+    /// Outcomes of the most recent [`sweep_block_with`] call (`len` is
+    /// that call's `nb`; empty before the first call).
+    pub fn outcomes(&self) -> &[SweepOutcome] {
+        &self.out
+    }
+}
+
+/// [`sweep_block`] with caller-owned scratch: identical arithmetic and
+/// outcome order, zero heap allocation once `scratch` has warmed up to
+/// the largest `nb` seen. Returns the filled `scratch.outcomes()` slice.
+pub fn sweep_block_with<'s, S>(
+    params: &SweepParams<'_>,
+    nb: usize,
+    mut score_position: S,
+    scratch: &'s mut SweepScratch,
+) -> &'s [SweepOutcome]
 where
     S: FnMut(usize, &[u32], &mut [f32]),
 {
     let t = params.t();
     debug_assert_eq!(params.eps_neg.len(), t);
-    let mut out = vec![
-        SweepOutcome { positive: false, score: 0.0, stop: t as u32, early: false };
-        nb
-    ];
-    let mut g = vec![params.bias; nb];
-    let mut scores = vec![0f32; nb];
-    let mut keep = vec![0u8; nb];
-    let mut active: Vec<u32> = (0..nb as u32).collect();
+    scratch.out.clear();
+    scratch.out.resize(
+        nb,
+        SweepOutcome { positive: false, score: 0.0, stop: t as u32, early: false },
+    );
+    scratch.g.clear();
+    scratch.g.resize(nb, params.bias);
+    scratch.scores.clear();
+    scratch.scores.resize(nb, 0f32);
+    scratch.keep.clear();
+    scratch.keep.resize(nb, 0u8);
+    scratch.active.clear();
+    scratch.active.extend(0..nb as u32);
+    let out = &mut scratch.out;
+    let g = &mut scratch.g;
+    let scores = &mut scratch.scores;
+    let keep = &mut scratch.keep;
+    let active = &mut scratch.active;
 
     for r in 0..t {
         let m = active.len();
@@ -145,7 +195,7 @@ where
             early: false,
         };
     }
-    out
+    &*out
 }
 
 /// Fan [`sweep_block`] over `n` examples in blocks of `block` across the
@@ -350,6 +400,25 @@ mod tests {
                 "none-exit" => assert!(got.iter().all(|o| !o.early && o.stop == t as u32)),
                 _ => assert!(got.iter().any(|o| o.early) && got.iter().any(|o| !o.early)),
             }
+        }
+    }
+
+    /// Reusing one `SweepScratch` across calls of varying size — growing,
+    /// shrinking, and after a prior call left retired-example state in
+    /// the buffers — is bitwise-identical to a fresh `sweep_block`.
+    #[test]
+    fn scratch_reuse_matches_fresh_allocation_at_every_size() {
+        let t = 7;
+        let pos: Vec<f32> = (0..t).map(|r| if r % 3 == 0 { 0.2 } else { f32::INFINITY }).collect();
+        let neg: Vec<f32> =
+            (0..t).map(|r| if r % 3 == 1 { -0.2 } else { f32::NEG_INFINITY }).collect();
+        let params = SweepParams { eps_pos: &pos, eps_neg: &neg, bias: 0.0, beta: 0.0 };
+        let mut scratch = SweepScratch::default();
+        for nb in [64usize, 5, 33, 0, 64] {
+            let got = sweep_block_with(&params, nb, synth_scorer(0), &mut scratch);
+            let want = sweep_block(&params, nb, synth_scorer(0));
+            assert_same(got, &want);
+            assert_eq!(scratch.outcomes().len(), nb);
         }
     }
 

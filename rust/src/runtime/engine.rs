@@ -27,7 +27,7 @@ use crate::ensemble::BaseModel;
 use crate::ensemble::Ensemble;
 use crate::error::QwycError;
 use crate::plan::CompiledPlan;
-use crate::qwyc::sweep::SweepOutcome;
+use crate::qwyc::sweep::{SweepOutcome, SweepScratch};
 #[cfg(feature = "pjrt")]
 use crate::qwyc::FastClassifier;
 use crate::qwyc::SingleResult;
@@ -75,6 +75,22 @@ pub trait Engine {
     fn n_features(&self) -> usize;
     /// Classify a batch of examples (row-major `n × n_features`).
     fn classify_batch(&mut self, x: &[f32], n: usize) -> Result<Vec<Outcome>, QwycError>;
+    /// Classify a batch into a caller-owned outcome buffer (cleared and
+    /// refilled). The serving hot path uses this so a warmed shard
+    /// worker performs no per-batch allocation; results are identical to
+    /// [`Engine::classify_batch`] — the default simply delegates, and
+    /// backends that override it must preserve bitwise-equal outcomes.
+    fn classify_into(
+        &mut self,
+        x: &[f32],
+        n: usize,
+        out: &mut Vec<Outcome>,
+    ) -> Result<(), QwycError> {
+        let outcomes = self.classify_batch(x, n)?;
+        out.clear();
+        out.extend(outcomes);
+        Ok(())
+    }
     /// Human-readable backend name (metrics/logs).
     fn backend(&self) -> &'static str;
     /// Atomically adopt a new compiled plan (the serving `RELOAD` path).
@@ -104,10 +120,18 @@ pub trait Engine {
 /// Pure-rust early-exit evaluation: a shared immutable [`CompiledPlan`]
 /// plus the worker pool that fans its blocked sweep. N serving shards
 /// hold N `Arc` handles to ONE compiled plan — per-evaluation scratch
-/// lives inside the sweep call, so sharing is free and safe.
+/// is either allocated inside the sweep call ([`Engine::classify_batch`])
+/// or owned by this engine and recycled ([`Engine::classify_into`]), so
+/// sharing the plan is free and safe.
 pub struct NativeEngine {
     plan: Arc<CompiledPlan>,
     pool: Pool,
+    /// Recycled sweep working set for the single-block
+    /// [`Engine::classify_into`] path. Fully rewritten at the start of
+    /// every sweep, so reuse after an unwound call stays sound (see the
+    /// unwind-safety assertion below).
+    scratch: SweepScratch,
+    lat_scratch: Vec<f32>,
 }
 
 impl NativeEngine {
@@ -123,7 +147,7 @@ impl NativeEngine {
     /// Share an already-compiled plan (the sharded-server path: compile
     /// once, hand every shard a handle).
     pub fn from_shared(plan: Arc<CompiledPlan>, pool: Pool) -> NativeEngine {
-        NativeEngine { plan, pool }
+        NativeEngine { plan, pool, scratch: SweepScratch::default(), lat_scratch: Vec::new() }
     }
 
     pub fn plan(&self) -> &CompiledPlan {
@@ -142,6 +166,32 @@ impl Engine for NativeEngine {
         Ok(outcomes.into_iter().map(Outcome::from).collect())
     }
 
+    /// Allocation-free once warmed: batches up to [`ENGINE_BLOCK`] run
+    /// one sweep over the engine-owned scratch — bitwise-identical to
+    /// `classify_batch`, which fans the same batch as exactly one block
+    /// over the same scorer. Larger batches fall back to the pooled
+    /// allocating path (the serving coordinator's `max_batch` never
+    /// exceeds a block on the hot path, so this is the cold case).
+    fn classify_into(
+        &mut self,
+        x: &[f32],
+        n: usize,
+        out: &mut Vec<Outcome>,
+    ) -> Result<(), QwycError> {
+        if n > ENGINE_BLOCK {
+            let outcomes = self.classify_batch(x, n)?;
+            out.clear();
+            out.extend(outcomes);
+            return Ok(());
+        }
+        let d = self.plan.n_features();
+        let swept =
+            self.plan.sweep_features_into(x, n, d, &mut self.scratch, &mut self.lat_scratch);
+        out.clear();
+        out.extend(swept.iter().map(|&o| Outcome::from(o)));
+        Ok(())
+    }
+
     fn backend(&self) -> &'static str {
         "native"
     }
@@ -155,17 +205,21 @@ impl Engine for NativeEngine {
 
     fn reusable_after_panic(&self) -> bool {
         // Sound because of the unwind-safety shape asserted below: an
-        // immutable shared plan plus a stateless pool means an unwound
-        // `classify_batch` leaves nothing half-mutated behind.
+        // immutable shared plan, a stateless pool, and owned sweep
+        // scratch that every call clears and fully rewrites before
+        // reading. An unwound call can leave stale bytes in the scratch
+        // buffers, but no later call observes them.
         true
     }
 }
 
 // `reusable_after_panic` above relies on NativeEngine carrying no
 // interior mutability (`Arc<CompiledPlan>` of plain data + a stateless
-// pool descriptor). Assert that shape at compile time so a future
-// mutable cache on the engine breaks this line instead of silently
-// un-sounding the supervisor's engine reuse.
+// pool descriptor + plain-`Vec` sweep scratch with no cross-call
+// reads). Assert that shape at compile time so a future shared-state
+// cache on the engine breaks this line instead of silently un-sounding
+// the supervisor's engine reuse. (The response cache deliberately lives
+// in the shard worker, outside the engine, for exactly this reason.)
 const _: () = {
     const fn assert_unwind_safe<T: std::panic::UnwindSafe + std::panic::RefUnwindSafe>() {}
     assert_unwind_safe::<NativeEngine>()

@@ -1,0 +1,162 @@
+//! Allocation accounting for the serving hot path: after warmup, one
+//! steady-state `EVAL` round trip — line parse, cache lookup, classify,
+//! reply format, batch handoff — performs ZERO heap allocations on the
+//! measured thread. The TCP loop itself is excluded by design (std's
+//! mpsc channel allocates internal node blocks), so the harness drives
+//! the exact component functions the server composes, each with the
+//! same recycled buffers the server recycles through its pools.
+//!
+//! The counter is a thread-local wrapped around the system allocator,
+//! so allocator traffic on other test threads (the harness runs tests
+//! concurrently) cannot pollute a measurement.
+
+use qwyc::coordinator::{
+    batch_channel_with_cap, format_ok_reply, parse_eval, BatchPolicy, ResponseCache,
+};
+use qwyc::data::synth::{generate, Which};
+use qwyc::lattice::{train_joint, LatticeParams};
+use qwyc::plan::QwycPlan;
+use qwyc::qwyc::{optimize_order, QwycConfig};
+use qwyc::runtime::engine::{Engine, NativeEngine, Outcome};
+use qwyc::util::pool::Pool;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::time::Duration;
+
+thread_local! {
+    // const-initialized so reading the counter inside the allocator
+    // never triggers a lazy TLS init (which could itself allocate).
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// System allocator with a thread-local allocation counter. Frees are
+/// not counted: the contract under test is "no NEW heap memory on the
+/// steady-state path", and a free without a matching alloc would
+/// already imply an alloc we counted earlier.
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.with(|c| c.set(c.get() + 1));
+        unsafe { System.alloc(layout) }
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        unsafe { System.dealloc(ptr, layout) }
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.with(|c| c.set(c.get() + 1));
+        unsafe { System.realloc(ptr, layout, new_size) }
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.with(|c| c.set(c.get() + 1));
+        unsafe { System.alloc_zeroed(layout) }
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// Run `f` and return how many heap allocations it performed on this
+/// thread.
+fn allocations(f: impl FnOnce()) -> u64 {
+    let before = ALLOCS.with(|c| c.get());
+    f();
+    ALLOCS.with(|c| c.get()) - before
+}
+
+fn tiny_engine() -> (qwyc::data::Dataset, NativeEngine) {
+    let (tr, te) = generate(Which::Rw2Like, 55, 0.005);
+    let (ens, _) = train_joint(
+        &tr,
+        &LatticeParams { n_lattices: 6, dim: 4, steps: 80, batch: 64, ..Default::default() },
+    );
+    let sm = ens.score_matrix(&tr);
+    let fc = optimize_order(&sm, &QwycConfig { alpha: 0.01, ..Default::default() });
+    let plan = QwycPlan::bundle_with_width(ens, fc, "alloc-free", 0.01, te.d)
+        .expect("bundle")
+        .compile_shared()
+        .expect("compile");
+    // One worker: the per-request path never fans out, and the pool
+    // must not be part of the measurement.
+    (te, NativeEngine::from_shared(plan, Pool::new(1)))
+}
+
+#[test]
+fn steady_state_eval_components_do_not_allocate() {
+    let (te, mut engine) = tiny_engine();
+
+    // --- EVAL line parse into a recycled feature buffer ---
+    let line = {
+        let row = te.row(0);
+        let feats: Vec<String> = row.iter().map(|v| format!("{v}")).collect();
+        format!("17 DEADLINE_MS=250 {}", feats.join(","))
+    };
+    let mut features: Vec<f32> = Vec::new();
+    parse_eval(&line, &mut features).expect("warmup parse");
+    let n_parse = allocations(|| {
+        parse_eval(&line, &mut features).expect("parse");
+    });
+    assert_eq!(n_parse, 0, "parse_eval allocated {n_parse} times after warmup");
+
+    // --- classify a small batch into recycled outcome scratch ---
+    let batch_n = 4usize;
+    let mut xbuf: Vec<f32> = Vec::new();
+    for i in 0..batch_n {
+        xbuf.extend_from_slice(te.row(i));
+    }
+    let mut outcomes: Vec<Outcome> = Vec::new();
+    engine.classify_into(&xbuf, batch_n, &mut outcomes).expect("warmup classify");
+    engine.classify_into(&xbuf, batch_n, &mut outcomes).expect("warmup classify 2");
+    let n_classify = allocations(|| {
+        engine.classify_into(&xbuf, batch_n, &mut outcomes).expect("classify");
+    });
+    assert_eq!(n_classify, 0, "classify_into allocated {n_classify} times after warmup");
+    let outcome = outcomes[0];
+
+    // --- response-cache hit ---
+    let mut cache = ResponseCache::new(1 << 16, 0xfeed);
+    cache.insert(3, &features, outcome);
+    assert!(cache.lookup(3, &features).is_some(), "warmup lookup must hit");
+    let n_lookup = allocations(|| {
+        let hit = cache.lookup(3, &features);
+        assert!(hit.is_some());
+    });
+    assert_eq!(n_lookup, 0, "cache lookup allocated {n_lookup} times");
+
+    // --- OK reply formatting into a recycled string ---
+    let mut reply = String::new();
+    format_ok_reply(&mut reply, 17, &outcome, 133);
+    let n_format = allocations(|| {
+        format_ok_reply(&mut reply, 17, &outcome, 133);
+    });
+    assert_eq!(n_format, 0, "format_ok_reply allocated {n_format} times after warmup");
+
+    // --- batch handoff through a recycled batch buffer ---
+    let (tx, queue) = batch_channel_with_cap::<u64>(64);
+    let policy = BatchPolicy::fixed(8, Duration::ZERO);
+    let mut batch: Vec<u64> = Vec::new();
+    for i in 0..8u64 {
+        tx.try_send(i).expect("warmup send");
+    }
+    queue.next_batch_into(policy, &mut batch).expect("warmup batch");
+    assert_eq!(batch.len(), 8);
+    let n_queue = allocations(|| {
+        for i in 0..8u64 {
+            tx.try_send(i).expect("send");
+        }
+        queue.next_batch_into(policy, &mut batch).expect("batch");
+    });
+    assert_eq!(n_queue, 0, "batch queue round trip allocated {n_queue} times after warmup");
+}
+
+/// The cold path obviously allocates (buffers are born somewhere); the
+/// harness itself must be able to see that, or the zero assertions
+/// above would be vacuous.
+#[test]
+fn harness_counts_allocations_at_all() {
+    let n = allocations(|| {
+        let v: Vec<u64> = Vec::with_capacity(32);
+        std::hint::black_box(&v);
+    });
+    assert!(n >= 1, "counting allocator saw nothing");
+}

@@ -119,8 +119,9 @@ fn shard_panic_gets_terminal_errs_and_shard_recovers_bitwise() {
     let config = ServerConfig {
         shards: 1,
         queue_cap: 4096,
-        policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+        policy: BatchPolicy::fixed(8, Duration::from_millis(1)),
         default_deadline: None,
+        cache_bytes: 0,
     };
     let server = Server::start_with_plan("127.0.0.1:0", plan.clone(), config).expect("start");
     let mut client = Client::connect(&server.addr).expect("connect");
@@ -176,10 +177,11 @@ fn queued_past_deadline_requests_are_shed_with_timeout() {
     let config = ServerConfig {
         shards: 1,
         queue_cap: 4096,
-        policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+        policy: BatchPolicy::fixed(4, Duration::from_millis(1)),
         // Far below the 60ms injected stall: every defaulted request
         // expires while queued.
         default_deadline: Some(Duration::from_millis(15)),
+        cache_bytes: 0,
     };
     let server = Server::start_with_plan("127.0.0.1:0", plan, config).expect("start");
     let mut client = Client::connect(&server.addr).expect("connect");
@@ -224,8 +226,9 @@ fn rejected_reload_keeps_last_known_good_serving() {
     let config = ServerConfig {
         shards: 1,
         queue_cap: 4096,
-        policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+        policy: BatchPolicy::fixed(8, Duration::from_millis(1)),
         default_deadline: None,
+        cache_bytes: 0,
     };
     let server = Server::start_with_plan("127.0.0.1:0", plan.clone(), config).expect("start");
     let mut client = Client::connect(&server.addr).expect("connect");
@@ -310,8 +313,9 @@ fn drain_stops_admission_after_emptying_queues() {
     let config = ServerConfig {
         shards: 2,
         queue_cap: 4096,
-        policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+        policy: BatchPolicy::fixed(8, Duration::from_millis(1)),
         default_deadline: None,
+        cache_bytes: 0,
     };
     let server = Server::start_with_plan("127.0.0.1:0", plan, config).expect("start");
     let mut client = Client::connect(&server.addr).expect("connect");

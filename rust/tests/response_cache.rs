@@ -1,0 +1,237 @@
+//! Generation-keyed response cache + adaptive batching, end to end: a
+//! cache hit is bitwise-identical to the cold eval it memoizes, RELOAD
+//! (accepted or rejected) never lets a stale generation leak through,
+//! NaN features bypass the cache entirely, and an adaptive-policy
+//! server answers bitwise-identically to a fixed-policy one.
+
+use qwyc::coordinator::{BatchPolicy, Client, Server, ServerConfig};
+use qwyc::data::synth::{generate, Which};
+use qwyc::lattice::{train_joint, LatticeParams};
+use qwyc::plan::QwycPlan;
+use qwyc::qwyc::{optimize_order, QwycConfig};
+use std::time::Duration;
+
+fn tiny_model(
+    seed: u64,
+) -> (qwyc::data::Dataset, qwyc::ensemble::Ensemble, qwyc::qwyc::FastClassifier) {
+    let (tr, te) = generate(Which::Rw2Like, seed, 0.005);
+    let (ens, _) = train_joint(
+        &tr,
+        &LatticeParams { n_lattices: 6, dim: 4, steps: 80, batch: 64, ..Default::default() },
+    );
+    let sm = ens.score_matrix(&tr);
+    let fc = optimize_order(&sm, &QwycConfig { alpha: 0.01, ..Default::default() });
+    (te, ens, fc)
+}
+
+fn tiny_plan_shared(
+    ens: &qwyc::ensemble::Ensemble,
+    fc: &qwyc::qwyc::FastClassifier,
+    d: usize,
+    name: &str,
+) -> std::sync::Arc<qwyc::plan::CompiledPlan> {
+    QwycPlan::bundle_with_width(ens.clone(), fc.clone(), name, 0.01, d)
+        .expect("bundle")
+        .compile_shared()
+        .expect("compile")
+}
+
+/// Score as the wire prints it (`%.6f`), so comparisons go through the
+/// same rounding the protocol applies.
+fn wire_bits(score: f32) -> u32 {
+    format!("{score:.6}").parse::<f32>().unwrap().to_bits()
+}
+
+/// Pull `(hits, misses, evictions)` out of a STATS report's
+/// `cache(hit/miss/evict)=h/m/e` field.
+fn cache_counters(stats: &str) -> (u64, u64, u64) {
+    let tail = stats
+        .split("cache(hit/miss/evict)=")
+        .nth(1)
+        .unwrap_or_else(|| panic!("no cache field in: {stats}"));
+    let field = tail.split_whitespace().next().unwrap();
+    let mut parts = field.split('/').map(|p| p.parse::<u64>().unwrap());
+    (parts.next().unwrap(), parts.next().unwrap(), parts.next().unwrap())
+}
+
+fn cached_config() -> ServerConfig {
+    ServerConfig {
+        shards: 1,
+        queue_cap: 4096,
+        policy: BatchPolicy::fixed(16, Duration::from_millis(1)),
+        default_deadline: None,
+        cache_bytes: 1 << 20,
+    }
+}
+
+/// A repeated identical request is served from the cache (hit counters
+/// move) and the hit is bitwise-identical — decision, printed score
+/// bits, stop position — to the cold evaluation that populated it.
+#[test]
+fn cache_hit_is_bitwise_identical_to_cold_eval() {
+    let (te, ens, fc) = tiny_model(55);
+    let d = te.d;
+    let plan = tiny_plan_shared(&ens, &fc, d, "cache-hit");
+    let server =
+        Server::start_with_plan("127.0.0.1:0", plan, cached_config()).expect("server start");
+    let mut client = Client::connect(&server.addr).expect("connect");
+
+    for i in 0..20 {
+        let x = te.row(i);
+        let want = fc.eval_single(&ens, x);
+        let cold = client.eval(x).expect("cold eval");
+        for pass in 0..3 {
+            let hit = client.eval(x).expect("cached eval");
+            assert_eq!(hit.positive, cold.positive, "row {i} pass {pass}");
+            assert_eq!(hit.score.to_bits(), cold.score.to_bits(), "row {i} pass {pass}");
+            assert_eq!(hit.models, cold.models, "row {i} pass {pass}");
+        }
+        // And the cold path itself matches the reference classifier.
+        assert_eq!(cold.positive, want.positive, "row {i}");
+        assert_eq!(cold.score.to_bits(), wire_bits(want.score), "row {i}");
+        assert_eq!(cold.models as usize, want.models_evaluated, "row {i}");
+    }
+    let (hits, misses, _) = cache_counters(&client.stats().expect("stats"));
+    assert!(hits >= 60, "expected ≥60 cache hits, got {hits}");
+    assert!(misses >= 20, "expected ≥20 cache misses, got {misses}");
+    server.stop();
+}
+
+/// RELOAD bumps the plan generation, which implicitly invalidates every
+/// cached entry: post-swap replies match the NEW plan's cold path, and
+/// a rejected reload (generation unchanged) keeps serving the current
+/// plan — never a stale one.
+#[test]
+fn reload_and_rejected_rollback_never_serve_stale_generations() {
+    let (te, ens_a, fc_a) = tiny_model(55);
+    let d = te.d;
+    // A genuinely different model (different training split) so stale
+    // cache entries would be observable as wrong scores.
+    let (_, ens_b, fc_b) = tiny_model(99);
+    let mut plan_b = QwycPlan::bundle(ens_b.clone(), fc_b.clone(), "plan-b", 0.01).expect("bundle");
+    plan_b.meta.n_features = d;
+    let plan_b_path = std::env::temp_dir().join("qwyc_cache_reload_plan_b.json");
+    plan_b.save(&plan_b_path).expect("save plan-b");
+
+    let plan_a = tiny_plan_shared(&ens_a, &fc_a, d, "plan-a");
+    let server =
+        Server::start_with_plan("127.0.0.1:0", plan_a, cached_config()).expect("server start");
+    let mut client = Client::connect(&server.addr).expect("connect");
+
+    let n = 20usize;
+    // Populate the cache under generation 0 and keep the gen-0 answers.
+    let mut gen0 = Vec::new();
+    for i in 0..n {
+        client.eval(te.row(i)).expect("warm");
+        let r = client.eval(te.row(i)).expect("hit");
+        gen0.push((r.positive, r.score.to_bits(), r.models));
+    }
+
+    let mut ctl = Client::connect(&server.addr).expect("connect ctl");
+    let reply = ctl.reload(plan_b_path.to_str().unwrap()).expect("reload");
+    assert!(reply.starts_with("RELOADED plan-b gen=1"), "{reply}");
+
+    // Same rows, new generation: every reply must be plan B's cold
+    // answer, not the cached gen-0 one.
+    let mut any_changed = false;
+    for (i, g0) in gen0.iter().enumerate() {
+        let r = client.eval(te.row(i)).expect("post-reload eval");
+        let want = fc_b.eval_single(&ens_b, te.row(i));
+        assert_eq!(r.positive, want.positive, "row {i} served stale decision");
+        assert_eq!(r.score.to_bits(), wire_bits(want.score), "row {i} served stale score");
+        assert_eq!(r.models as usize, want.models_evaluated, "row {i} served stale stop pos");
+        any_changed |= (r.positive, r.score.to_bits(), r.models) != *g0;
+    }
+    assert!(any_changed, "plans A and B answered identically; stale reads would be invisible");
+
+    // A rejected reload must not disturb the live generation: replies
+    // still match plan B, and its cache keeps hitting.
+    let (hits_before, _, _) = cache_counters(&client.stats().expect("stats"));
+    let err = ctl.reload("/nonexistent/plan.json").expect("reload io");
+    assert!(err.starts_with("RELOAD_REJECTED io:"), "{err}");
+    for i in 0..n {
+        let r = client.eval(te.row(i)).expect("post-reject eval");
+        let want = fc_b.eval_single(&ens_b, te.row(i));
+        assert_eq!(r.positive, want.positive, "row {i} after rejected reload");
+        assert_eq!(r.score.to_bits(), wire_bits(want.score), "row {i} after rejected reload");
+    }
+    let (hits_after, _, _) = cache_counters(&client.stats().expect("stats"));
+    assert!(hits_after > hits_before, "cache stopped hitting after a rejected reload");
+    server.stop();
+    std::fs::remove_file(&plan_b_path).ok();
+}
+
+/// NaN features are legal inputs but poison bytewise key comparison
+/// (NaN != NaN), so they bypass the cache: neither hit nor miss
+/// counters move for them and each request is evaluated fresh.
+#[test]
+fn nan_features_bypass_the_cache() {
+    let (te, ens, fc) = tiny_model(55);
+    let d = te.d;
+    let plan = tiny_plan_shared(&ens, &fc, d, "cache-nan");
+    let server =
+        Server::start_with_plan("127.0.0.1:0", plan, cached_config()).expect("server start");
+    let mut client = Client::connect(&server.addr).expect("connect");
+
+    let mut x = te.row(0).to_vec();
+    x[1] = f32::NAN;
+    let (h0, m0, _) = cache_counters(&client.stats().expect("stats"));
+    for _ in 0..4 {
+        client.eval(&x).expect("nan eval");
+    }
+    let (h1, m1, _) = cache_counters(&client.stats().expect("stats"));
+    assert_eq!(h1, h0, "NaN requests must not hit the cache");
+    assert_eq!(m1, m0, "NaN requests must not count as cache misses");
+
+    // A clean repeated request on the same connection still caches.
+    client.eval(te.row(0)).expect("clean warm");
+    client.eval(te.row(0)).expect("clean hit");
+    let (h2, _, _) = cache_counters(&client.stats().expect("stats"));
+    assert!(h2 > h1, "cache stopped working after NaN traffic");
+    server.stop();
+}
+
+/// Batch composition must not perturb per-example outcomes: a server
+/// under the adaptive flush policy answers bitwise-identically to one
+/// under the fixed policy, and advertises `policy=adaptive` in STATS.
+#[test]
+fn adaptive_policy_is_bitwise_identical_to_fixed() {
+    let (te, ens, fc) = tiny_model(55);
+    let d = te.d;
+    let plan = tiny_plan_shared(&ens, &fc, d, "adaptive-equiv");
+    let n = 100.min(te.n);
+
+    let run = |policy: BatchPolicy| -> Vec<(bool, u32, u32)> {
+        let adaptive = policy.adaptive;
+        let config = ServerConfig {
+            shards: 2,
+            queue_cap: 4096,
+            policy,
+            default_deadline: None,
+            cache_bytes: 0,
+        };
+        let server =
+            Server::start_with_plan("127.0.0.1:0", plan.clone(), config).expect("server start");
+        let mut client = Client::connect(&server.addr).expect("connect");
+        for i in 0..n {
+            client.send_eval(te.row(i)).expect("send");
+        }
+        let mut by_id = vec![(false, 0u32, 0u32); n];
+        for _ in 0..n {
+            let r = client.read_response().expect("read");
+            by_id[r.id as usize] = (r.positive, r.score.to_bits(), r.models);
+        }
+        let stats = client.stats().expect("stats");
+        if adaptive {
+            assert!(stats.contains(" policy=adaptive"), "{stats}");
+        } else {
+            assert!(stats.contains(" policy=fixed"), "{stats}");
+        }
+        server.stop();
+        by_id
+    };
+
+    let fixed = run(BatchPolicy::fixed(16, Duration::from_millis(2)));
+    let adaptive = run(BatchPolicy::adaptive(16, Duration::from_millis(2)));
+    assert_eq!(fixed, adaptive, "adaptive flush policy changed scoring outcomes");
+}

@@ -56,7 +56,7 @@ fn server_answers_eval_requests_correctly() {
     let server = Server::start(
         "127.0.0.1:0",
         move |_shard| Box::new(native_engine(&ens2, &fc2, d)),
-        BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(1) },
+        BatchPolicy::fixed(32, Duration::from_millis(1)),
     )
     .expect("server start");
 
@@ -82,7 +82,7 @@ fn server_batches_pipelined_requests() {
     let server = Server::start(
         "127.0.0.1:0",
         move |_shard| Box::new(native_engine(&ens, &fc, d)),
-        BatchPolicy { max_batch: 64, max_wait: Duration::from_millis(5) },
+        BatchPolicy::fixed(64, Duration::from_millis(5)),
     )
     .expect("server start");
 
@@ -122,8 +122,9 @@ fn responses_bitwise_identical_at_1_and_4_shards() {
         let config = ServerConfig {
             shards,
             queue_cap: 4096,
-            policy: BatchPolicy { max_batch: 16, max_wait: Duration::from_millis(1) },
+            policy: BatchPolicy::fixed(16, Duration::from_millis(1)),
             default_deadline: None,
+            cache_bytes: 0,
         };
         let server =
             Server::start_with_plan("127.0.0.1:0", plan.clone(), config).expect("server start");
@@ -195,8 +196,9 @@ fn reload_swaps_plan_without_erroring_inflight_requests() {
     let config = ServerConfig {
         shards: 2,
         queue_cap: 4096,
-        policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+        policy: BatchPolicy::fixed(8, Duration::from_millis(1)),
         default_deadline: None,
+        cache_bytes: 0,
     };
     let server = Server::start_with_plan("127.0.0.1:0", plan_a, config).expect("server start");
 
@@ -310,8 +312,9 @@ fn full_queue_sheds_load_with_busy() {
     let config = ServerConfig {
         shards: 1,
         queue_cap: 1,
-        policy: BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(0) },
+        policy: BatchPolicy::fixed(1, Duration::from_millis(0)),
         default_deadline: None,
+        cache_bytes: 0,
     };
     let server =
         Server::start("127.0.0.1:0", |_shard| Box::new(Slow), config).expect("server start");
@@ -427,7 +430,7 @@ fn garbage_oversized_and_partial_lines_get_per_line_errors() {
     let server = Server::start(
         "127.0.0.1:0",
         move |_shard| Box::new(native_engine(&ens2, &fc2, d)),
-        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+        BatchPolicy::fixed(8, Duration::from_millis(1)),
     )
     .expect("server start");
 
@@ -506,7 +509,7 @@ fn pjrt_backend_serves_when_artifacts_exist() {
                 qwyc::runtime::engine::PjrtEngine::new(rt, "demo_stage", &ens2, &fc2).unwrap(),
             )
         },
-        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
+        BatchPolicy::fixed(8, Duration::from_millis(2)),
     )
     .expect("server start");
 

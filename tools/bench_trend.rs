@@ -1,0 +1,282 @@
+//! Perf-trajectory regression gate over the committed `BENCH_*.json`
+//! snapshots (ROADMAP item 5).
+//!
+//! Reads every `BENCH_<n>.json` at the repo root in PR order (plus a
+//! freshly generated `BENCH.json`, if present, as the newest snapshot),
+//! tracks each *paired* target — one carrying a non-null
+//! `speedup_vs_serial`, i.e. the optimized half of a baseline/optimized
+//! pair — and exits nonzero if the newest measured `mean_ns` regressed
+//! more than the threshold against the most recent earlier measured
+//! snapshot of the same target. Placeholder entries with `runs == 0`
+//! (snapshots authored where no measurement was possible) are skipped,
+//! so an all-placeholder trajectory passes vacuously.
+//!
+//! Usage: `bench_trend [--dir <repo-root>] [--threshold <pct>]`
+//! (defaults: the workspace root, 20%).
+
+use qwyc::util::json::{self, Json};
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// One bench target as trend tooling sees it.
+#[derive(Clone, Debug, PartialEq)]
+struct Target {
+    name: String,
+    mean_ns: f64,
+    runs: u64,
+    /// Non-null `speedup_vs_serial` → the optimized half of a pair.
+    paired: bool,
+}
+
+/// A paired target whose newest measurement is worse than the previous
+/// one by more than the threshold.
+#[derive(Clone, Debug, PartialEq)]
+struct Regression {
+    name: String,
+    from_label: String,
+    from_ns: f64,
+    to_label: String,
+    to_ns: f64,
+    pct: f64,
+}
+
+fn parse_snapshot(doc: &Json) -> Result<Vec<Target>, qwyc::error::QwycError> {
+    let schema = doc.req("schema")?.as_str()?;
+    if schema != "qwyc-bench-v1" {
+        return Err(qwyc::error::QwycError::Schema(format!("unknown bench schema '{schema}'")));
+    }
+    doc.req("targets")?
+        .as_arr()?
+        .iter()
+        .map(|t| {
+            Ok(Target {
+                name: t.req("name")?.as_str()?.to_string(),
+                mean_ns: t.req("mean_ns")?.as_f64()?,
+                runs: t.req("runs")?.as_f64()? as u64,
+                paired: !matches!(t.req("speedup_vs_serial")?, Json::Null),
+            })
+        })
+        .collect()
+}
+
+/// `BENCH_<n>.json` → n, for snapshot ordering.
+fn snapshot_index(file_name: &str) -> Option<u64> {
+    file_name.strip_prefix("BENCH_")?.strip_suffix(".json")?.parse().ok()
+}
+
+/// The trajectory files under `dir`, oldest first; a plain `BENCH.json`
+/// (a fresh local/CI run, not a committed snapshot) sorts last.
+fn bench_files(dir: &Path) -> Vec<PathBuf> {
+    let mut numbered: Vec<(u64, PathBuf)> = Vec::new();
+    if let Ok(entries) = std::fs::read_dir(dir) {
+        for e in entries.flatten() {
+            let name = e.file_name();
+            if let Some(n) = name.to_str().and_then(snapshot_index) {
+                numbered.push((n, e.path()));
+            }
+        }
+    }
+    numbered.sort_by_key(|(n, _)| *n);
+    let mut files: Vec<PathBuf> = numbered.into_iter().map(|(_, p)| p).collect();
+    let fresh = dir.join("BENCH.json");
+    if fresh.is_file() {
+        files.push(fresh);
+    }
+    files
+}
+
+/// Compare, per paired target, the newest measured snapshot against the
+/// most recent earlier measured one. `runs == 0` entries never
+/// participate on either side.
+fn find_regressions(history: &[(String, Vec<Target>)], threshold_pct: f64) -> Vec<Regression> {
+    let mut names: Vec<&str> = Vec::new();
+    for (_, targets) in history {
+        for t in targets {
+            if t.paired && !names.contains(&t.name.as_str()) {
+                names.push(&t.name);
+            }
+        }
+    }
+    let mut out = Vec::new();
+    for name in names {
+        let measured: Vec<(&str, f64)> = history
+            .iter()
+            .filter_map(|(label, targets)| {
+                let t = targets.iter().find(|t| t.name == name && t.paired && t.runs > 0)?;
+                Some((label.as_str(), t.mean_ns))
+            })
+            .collect();
+        if measured.len() < 2 {
+            continue;
+        }
+        let (prev_label, prev_ns) = measured[measured.len() - 2];
+        let (last_label, last_ns) = measured[measured.len() - 1];
+        if prev_ns > 0.0 && last_ns > prev_ns * (1.0 + threshold_pct / 100.0) {
+            out.push(Regression {
+                name: name.to_string(),
+                from_label: prev_label.to_string(),
+                from_ns: prev_ns,
+                to_label: last_label.to_string(),
+                to_ns: last_ns,
+                pct: (last_ns / prev_ns - 1.0) * 100.0,
+            });
+        }
+    }
+    out
+}
+
+fn main() -> ExitCode {
+    let mut dir = PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/.."));
+    let mut threshold = 20.0f64;
+    let mut argv = std::env::args().skip(1);
+    while let Some(a) = argv.next() {
+        match a.as_str() {
+            "--dir" => {
+                if let Some(p) = argv.next() {
+                    dir = p.into();
+                }
+            }
+            "--threshold" => {
+                if let Some(t) = argv.next() {
+                    threshold = t.parse().expect("--threshold takes a percentage");
+                }
+            }
+            other => {
+                eprintln!("bench_trend: unknown arg '{other}'");
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    let files = bench_files(&dir);
+    if files.is_empty() {
+        eprintln!("bench_trend: no BENCH_*.json under {}", dir.display());
+        return ExitCode::from(2);
+    }
+    let mut history: Vec<(String, Vec<Target>)> = Vec::new();
+    for f in &files {
+        let label = f.file_name().unwrap().to_string_lossy().into_owned();
+        match json::read_file(f).and_then(|doc| parse_snapshot(&doc)) {
+            Ok(targets) => {
+                let measured = targets.iter().filter(|t| t.runs > 0).count();
+                let paired = targets.iter().filter(|t| t.paired).count();
+                println!(
+                    "{label}: {} targets ({measured} measured, {paired} paired)",
+                    targets.len()
+                );
+                history.push((label, targets));
+            }
+            Err(e) => {
+                eprintln!("bench_trend: {label}: {e}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    let regressions = find_regressions(&history, threshold);
+    if regressions.is_empty() {
+        println!("bench_trend: no paired target regressed >{threshold}%");
+        return ExitCode::SUCCESS;
+    }
+    for r in &regressions {
+        eprintln!(
+            "REGRESSION {}: {} {:.0}ns -> {} {:.0}ns (+{:.1}%, threshold {threshold}%)",
+            r.name, r.from_label, r.from_ns, r.to_label, r.to_ns, r.pct
+        );
+    }
+    ExitCode::FAILURE
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn target(name: &str, mean_ns: f64, runs: u64, paired: bool) -> Target {
+        Target { name: name.to_string(), mean_ns, runs, paired }
+    }
+
+    #[test]
+    fn snapshot_names_sort_numerically_with_fresh_run_last() {
+        assert_eq!(snapshot_index("BENCH_6.json"), Some(6));
+        assert_eq!(snapshot_index("BENCH_10.json"), Some(10));
+        assert_eq!(snapshot_index("BENCH.json"), None);
+        assert_eq!(snapshot_index("BENCH_x.json"), None);
+        let dir = std::env::temp_dir().join(format!("qwyc-trend-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        for name in ["BENCH_10.json", "BENCH_2.json", "BENCH.json", "other.json"] {
+            std::fs::write(dir.join(name), "{}").unwrap();
+        }
+        let names: Vec<String> = bench_files(&dir)
+            .iter()
+            .map(|p| p.file_name().unwrap().to_string_lossy().into_owned())
+            .collect();
+        assert_eq!(names, ["BENCH_2.json", "BENCH_10.json", "BENCH.json"]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn parses_the_bench_report_schema() {
+        let doc = Json::parse(
+            r#"{"schema": "qwyc-bench-v1", "threads": 4, "targets": [
+                {"name": "a", "mean_ns": 10.0, "p50_ns": 0, "p99_ns": 0, "std_ns": 0,
+                 "runs": 5, "iters_per_run": 100, "speedup_vs_serial": null},
+                {"name": "b", "mean_ns": 5.0, "p50_ns": 0, "p99_ns": 0, "std_ns": 0,
+                 "runs": 5, "iters_per_run": 100, "speedup_vs_serial": 2.0}
+            ]}"#,
+        )
+        .unwrap();
+        let targets = parse_snapshot(&doc).unwrap();
+        assert_eq!(targets.len(), 2);
+        assert!(!targets[0].paired);
+        assert!(targets[1].paired && targets[1].mean_ns == 5.0);
+        let bad = Json::parse(r#"{"schema": "other", "targets": []}"#).unwrap();
+        assert!(parse_snapshot(&bad).is_err());
+    }
+
+    #[test]
+    fn regression_gate_compares_newest_measured_pair() {
+        let history = vec![
+            ("BENCH_1.json".to_string(), vec![target("k", 100.0, 5, true)]),
+            ("BENCH_2.json".to_string(), vec![target("k", 115.0, 5, true)]),
+            ("BENCH_3.json".to_string(), vec![target("k", 150.0, 5, true)]),
+        ];
+        // Newest vs previous: 150 vs 115 is a +30.4% regression...
+        let r = find_regressions(&history, 20.0);
+        assert_eq!(r.len(), 1);
+        assert_eq!(r[0].from_label, "BENCH_2.json");
+        assert_eq!(r[0].to_label, "BENCH_3.json");
+        assert!((r[0].pct - 30.434).abs() < 0.01, "{}", r[0].pct);
+        // ...but a looser threshold passes it.
+        assert!(find_regressions(&history, 35.0).is_empty());
+    }
+
+    #[test]
+    fn placeholders_and_unpaired_targets_are_skipped() {
+        let history = vec![
+            ("BENCH_1.json".to_string(), vec![target("k", 100.0, 5, true)]),
+            // runs == 0: an unmeasured placeholder, never compared.
+            ("BENCH_2.json".to_string(), vec![target("k", 0.0, 0, true)]),
+            ("BENCH_3.json".to_string(), vec![target("k", 500.0, 5, false)]),
+        ];
+        // The only later entries are a placeholder and an unpaired
+        // target, so nothing is comparable.
+        assert!(find_regressions(&history, 20.0).is_empty());
+        // A single measured snapshot has no baseline to regress from.
+        let solo = vec![("BENCH_9.json".to_string(), vec![target("k", 9e9, 5, true)])];
+        assert!(find_regressions(&solo, 20.0).is_empty());
+    }
+
+    #[test]
+    fn improvement_and_small_noise_pass() {
+        let history = vec![
+            ("BENCH_1.json".to_string(), vec![target("k", 100.0, 5, true)]),
+            ("BENCH_2.json".to_string(), vec![target("k", 119.0, 5, true)]),
+        ];
+        assert!(find_regressions(&history, 20.0).is_empty(), "+19% is inside the gate");
+        let better = vec![
+            ("BENCH_1.json".to_string(), vec![target("k", 100.0, 5, true)]),
+            ("BENCH_2.json".to_string(), vec![target("k", 40.0, 5, true)]),
+        ];
+        assert!(find_regressions(&better, 20.0).is_empty());
+    }
+}
