@@ -11,6 +11,13 @@
 //!   - plan_load: JSON parse+compile vs zero-copy binary artifact load
 //!   - sweep_branchless: branchy reference sweep vs the mask-and-compact
 //!     kernel on an alternating-exit workload
+//!   - sweep_quantized: the raw-f32 sweep vs the feature-quantized
+//!     integer kernel (bitwise-identical outputs; the pair measures the
+//!     win of binning features once per block)
+//!   - walk16_select: the 16-lane compare+select step, runtime-dispatched
+//!     SIMD vs the forced-scalar twin
+//!   - quantize_features: re-binning the block at every tree position vs
+//!     binning once per block (what the amortization is worth)
 //!   - serve_path: per-request fresh-buffer allocation vs the
 //!     zero-allocation scratch-reuse hot path (parse+classify+format)
 //!   - response_cache: cold classify (miss path) vs seeded-hash lookup
@@ -323,6 +330,109 @@ fn main() {
         println!("{}", rb.report());
         println!("  -> branchless sweep speedup: {:.2}x\n", rr.mean_ns / rb.mean_ns);
         report.push_pair(&rr, &rb);
+    }
+
+    // ---- feature-quantized sweep vs the raw f32 path ------------------
+    // Same compiled GBT plan, same rows, bitwise-identical outcomes
+    // (rust/tests/quantized_equiv.rs pins that); the pair is purely the
+    // kernel cost: one u16 binning pass per block, then integer
+    // compare+select tree walks instead of f32 compares. Serial pool so
+    // the delta is the kernel, not scheduling.
+    {
+        assert!(compiled.quant().is_some(), "GBT bench plan should quantize");
+        let nq = big.n.min(if quick { 1024 } else { 4096 });
+        let xq = &big.x[..nq * big.d];
+        let rr = bench_auto(
+            &format!("sweep_quantized raw f32 baseline (T={n_trees}, B={nq})"),
+            budget,
+            runs,
+            || {
+                black_box(compiled.sweep_features_raw(black_box(xq), nq, big.d, 256, &serial));
+            },
+        );
+        println!("{}", rr.report());
+        let rq = bench_auto(
+            &format!("sweep_quantized u16 kernel (T={n_trees}, B={nq})"),
+            budget,
+            runs,
+            || {
+                black_box(compiled.sweep_features(black_box(xq), nq, big.d, 256, &serial));
+            },
+        );
+        println!("{}", rq.report());
+        println!("  -> quantized sweep speedup: {:.2}x\n", rr.mean_ns / rq.mean_ns);
+        report.push_pair(&rr, &rq);
+    }
+
+    // ---- 16-lane compare+select: dispatched SIMD vs scalar twin -------
+    // The inner step of the quantized tree walk, isolated. Both produce
+    // identical indices; the pair records what the AVX2/SSE2 tier buys
+    // on this host (and collapses to ~1.0x under QWYC_FORCE_SCALAR=1).
+    {
+        use qwyc::util::simd;
+        let mut rng = Rng::new(9);
+        let mut mk = |hi: u32| -> [u32; 16] {
+            let mut a = [0u32; 16];
+            for v in a.iter_mut() {
+                *v = rng.next_u32() % hi;
+            }
+            a
+        };
+        let (qv, qt, lf, rt) = (mk(65536), mk(65534), mk(1 << 20), mk(1 << 20));
+        let mut idx = [0u32; 16];
+        let rs = bench_auto("walk16_select scalar twin (16 lanes)", budget, runs, || {
+            simd::select16_scalar(black_box(&qv), &qt, &lf, &rt, &mut idx);
+            black_box(&idx);
+        });
+        println!("{}", rs.report());
+        let rv = bench_auto("walk16_select simd dispatched (16 lanes)", budget, runs, || {
+            simd::select16(black_box(&qv), &qt, &lf, &rt, &mut idx);
+            black_box(&idx);
+        });
+        println!("{}", rv.report());
+        println!(
+            "  -> select16 simd speedup ({}): {:.2}x\n",
+            simd::tier().name(),
+            rs.mean_ns / rv.mean_ns
+        );
+        report.push_pair(&rs, &rv);
+    }
+
+    // ---- feature binning: per-position vs once per block --------------
+    // The quantized sweep bins each block exactly once; re-binning at
+    // every tree position (the naive placement inside the position
+    // loop) multiplies that cost by T. The pair documents why the
+    // binning lives outside the sweep.
+    {
+        let q = compiled.quant().expect("GBT bench plan should quantize");
+        let nq = big.n.min(if quick { 256 } else { 1024 });
+        let xq = &big.x[..nq * big.d];
+        let mut qx: Vec<u16> = Vec::new();
+        let reps = n_trees;
+        let rp = bench_auto(
+            &format!("quantize_features per position (T={reps}×, B={nq})"),
+            budget,
+            runs,
+            || {
+                for _ in 0..reps {
+                    q.quantize_block(black_box(xq), big.d, &mut qx);
+                }
+                black_box(&qx);
+            },
+        );
+        println!("{}", rp.report());
+        let ro = bench_auto(
+            &format!("quantize_features once per block (B={nq})"),
+            budget,
+            runs,
+            || {
+                q.quantize_block(black_box(xq), big.d, &mut qx);
+                black_box(&qx);
+            },
+        );
+        println!("{}", ro.report());
+        println!("  -> once-per-block amortization: {:.2}x\n", rp.mean_ns / ro.mean_ns);
+        report.push_pair(&rp, &ro);
     }
 
     // ---- sharded serving throughput (1/2/4 shards) -------------------

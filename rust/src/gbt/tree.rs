@@ -14,6 +14,11 @@
 
 use crate::error::QwycError;
 use crate::util::json::Json;
+use crate::util::simd;
+
+// The quantized walk stages per-lane node fields into fixed arrays for
+// the SIMD select; its lane width must match the walk's.
+const _: () = assert!(SOA_LANES == simd::SELECT_LANES);
 
 /// One node. Leaves have `feature == u32::MAX` and carry `value`.
 ///
@@ -152,7 +157,16 @@ impl Tree {
             }
             value.push(nd.value);
         }
-        TreeSoa { feature, threshold, left, right, value, depth: self.depth(), min_features }
+        TreeSoa {
+            feature,
+            threshold,
+            left,
+            right,
+            value,
+            qthreshold: Vec::new(),
+            depth: self.depth(),
+            min_features,
+        }
     }
 
     /// Batched evaluation of `out.len()` consecutive examples from the
@@ -248,6 +262,13 @@ pub struct TreeSoa {
     left: Vec<u32>,
     right: Vec<u32>,
     value: Vec<f32>,
+    /// Quantized thresholds: `qthreshold[i]` is the bin index k of
+    /// `threshold[i]` in its feature's edge table, chosen so that
+    /// `bin(x) <= k ⟺ x <= threshold[i]` (0 on leaf sentinels, whose
+    /// compares never change the walk). Empty until
+    /// [`TreeSoa::quantize_with`] succeeds — the raw f32 walk is always
+    /// available.
+    qthreshold: Vec<u16>,
     /// Maximum root-to-leaf depth: the fixed trip count of the walk.
     depth: usize,
     /// 1 + the largest split-feature index (0 for all-leaf trees): the
@@ -299,6 +320,109 @@ impl TreeSoa {
         for (slot, &row) in out.iter_mut().zip(rows.iter()).skip(base) {
             *slot = self.walk_one(x, d, row);
         }
+    }
+
+    /// Install quantized thresholds: `bin_of_threshold(feature, t)`
+    /// must return the bin k of threshold t in feature's edge table
+    /// (`bin(x) <= k ⟺ x <= t`), or `None` if t is unquantizable. On
+    /// any `None` the bank is left unquantized and `false` is returned;
+    /// leaf sentinels (self-loops) take bin 0, which is never acted on.
+    pub fn quantize_with(
+        &mut self,
+        bin_of_threshold: impl Fn(usize, f32) -> Option<u16>,
+    ) -> bool {
+        let mut q = Vec::with_capacity(self.left.len());
+        for (i, &l) in self.left.iter().enumerate() {
+            if l as usize == i {
+                q.push(0); // leaf self-loop: compare result is ignored
+            } else {
+                match bin_of_threshold(self.feature[i] as usize, self.threshold[i]) {
+                    Some(k) => q.push(k),
+                    None => {
+                        self.qthreshold.clear();
+                        return false;
+                    }
+                }
+            }
+        }
+        self.qthreshold = q;
+        true
+    }
+
+    /// Has [`TreeSoa::quantize_with`] installed a quantized bank?
+    pub fn is_quantized(&self) -> bool {
+        !self.qthreshold.is_empty()
+    }
+
+    /// The quantized threshold bank (empty when unquantized) — the
+    /// `quant_nodes` payload of the binary artifact.
+    pub fn qthresholds(&self) -> &[u16] {
+        &self.qthreshold
+    }
+
+    /// [`TreeSoa::eval_indexed`] over pre-quantized feature rows: the
+    /// gathered examples `rows` index the row-major u16 bin block `qx`
+    /// (same `n × d` layout as the raw rows, quantized once per
+    /// request). Requires [`TreeSoa::is_quantized`]. Outcomes are
+    /// bitwise-identical to the raw walk: the per-node compare
+    /// `bin(x) <= qthreshold` routes exactly like `x <= threshold`
+    /// (NaN carries the `NAN_BIN` sentinel and routes right), and leaf
+    /// values are the same f32s.
+    pub fn eval_indexed_quant(&self, qx: &[u16], d: usize, rows: &[u32], out: &mut [f32]) {
+        assert_eq!(rows.len(), out.len());
+        assert!(self.is_quantized(), "eval_indexed_quant on an unquantized bank");
+        assert!(d >= self.min_features, "tree needs {} features, rows have {d}", self.min_features);
+        let mut base = 0usize;
+        while base + SOA_LANES <= rows.len() {
+            let lanes: &[u32; SOA_LANES] = rows[base..base + SOA_LANES].try_into().unwrap();
+            let chunk: &mut [f32; SOA_LANES] =
+                (&mut out[base..base + SOA_LANES]).try_into().unwrap();
+            self.walk16q(qx, d, lanes, chunk);
+            base += SOA_LANES;
+        }
+        for (slot, &row) in out.iter_mut().zip(rows.iter()).skip(base) {
+            *slot = self.walk_one_q(qx, d, row);
+        }
+    }
+
+    /// Quantized [`TreeSoa::walk16`]: per level, the per-lane node
+    /// fields are staged into stack arrays with scalar loads (the
+    /// addresses are data-dependent; see `util/simd.rs` on why there
+    /// are no gathers) and the compare+select chain runs as one SIMD
+    /// [`simd::select16`] call.
+    #[inline]
+    fn walk16q(&self, qx: &[u16], d: usize, rows: &[u32; SOA_LANES], out: &mut [f32; SOA_LANES]) {
+        let mut idx = [0u32; SOA_LANES];
+        let mut qv = [0u32; SOA_LANES];
+        let mut qt = [0u32; SOA_LANES];
+        let mut lf = [0u32; SOA_LANES];
+        let mut rt = [0u32; SOA_LANES];
+        for _ in 0..self.depth {
+            for lane in 0..SOA_LANES {
+                let node = idx[lane] as usize;
+                qv[lane] = qx[rows[lane] as usize * d + self.feature[node] as usize] as u32;
+                qt[lane] = self.qthreshold[node] as u32;
+                lf[lane] = self.left[node];
+                rt[lane] = self.right[node];
+            }
+            simd::select16(&qv, &qt, &lf, &rt, &mut idx);
+        }
+        for lane in 0..SOA_LANES {
+            out[lane] = self.value[idx[lane] as usize];
+        }
+    }
+
+    /// Scalar quantized walk for tail lanes — the integer twin of
+    /// [`TreeSoa::walk_one`].
+    #[inline]
+    fn walk_one_q(&self, qx: &[u16], d: usize, row: u32) -> f32 {
+        let mut idx = 0u32;
+        for _ in 0..self.depth {
+            let node = idx as usize;
+            let qv = qx[row as usize * d + self.feature[node] as usize];
+            idx = if qv <= self.qthreshold[node] { self.left[node] } else { self.right[node] };
+        }
+        self.value[idx as usize]
     }
 
     /// Advance [`SOA_LANES`] root-to-leaf walks in lockstep for exactly
@@ -458,6 +582,59 @@ mod tests {
         for i in 0..3 {
             assert_eq!(got[i], t.eval(&x[i * 2..(i + 1) * 2]), "row {i}");
         }
+    }
+
+    /// Quantized walk vs raw walk, bit for bit, on rows that include
+    /// threshold-equal values, NaN (sentinel bin, routes right), and
+    /// ±∞ — across full 16-lane groups and the scalar tail.
+    #[test]
+    fn quantized_walk_matches_raw_walk_bitwise() {
+        let t = stump2();
+        let mut soa = t.to_soa();
+        assert!(!soa.is_quantized());
+        let edges: [Vec<f32>; 2] = [vec![0.5], vec![0.3]];
+        assert!(soa.quantize_with(|f, thr| {
+            edges[f].iter().position(|&e| e == thr).map(|k| k as u16)
+        }));
+        assert!(soa.is_quantized());
+        assert_eq!(soa.qthresholds().len(), 5);
+        let mut x = Vec::new();
+        for i in 0..37 {
+            x.push(match i % 5 {
+                0 => 0.5,
+                1 => f32::NAN,
+                2 => f32::INFINITY,
+                _ => (i as f32 * 0.037) % 1.0,
+            });
+            x.push(match i % 4 {
+                0 => 0.3,
+                1 => f32::NEG_INFINITY,
+                _ => (i as f32 * 0.101) % 1.0,
+            });
+        }
+        // bin(x) = #{e < x}, NaN ⇒ sentinel — quant::FeatureQuant's rule.
+        let bin = |es: &[f32], v: f32| -> u16 {
+            if v.is_nan() {
+                u16::MAX
+            } else {
+                es.iter().filter(|&&e| e < v).count() as u16
+            }
+        };
+        let qx: Vec<u16> =
+            x.iter().enumerate().map(|(p, &v)| bin(&edges[p % 2], v)).collect();
+        // Scattered rows: two full lane groups plus a tail.
+        let rows: Vec<u32> = (0..37u32).map(|i| 36 - i).collect();
+        let mut raw = vec![0f32; rows.len()];
+        let mut qnt = vec![0f32; rows.len()];
+        soa.eval_indexed(&x, 2, &rows, &mut raw);
+        soa.eval_indexed_quant(&qx, 2, &rows, &mut qnt);
+        for j in 0..rows.len() {
+            assert_eq!(raw[j].to_bits(), qnt[j].to_bits(), "gathered lane {j}");
+        }
+        // A failed quantization leaves the bank raw.
+        let mut soa2 = t.to_soa();
+        assert!(!soa2.quantize_with(|_, _| None));
+        assert!(!soa2.is_quantized());
     }
 
     #[test]

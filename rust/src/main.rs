@@ -39,7 +39,7 @@ use qwyc::experiments::{figures, tables, FigConfig};
 use qwyc::gbt::GbtParams;
 use qwyc::lattice::LatticeParams;
 use qwyc::pipeline::{ModelSpec, PlanBuilder, TrainSpec};
-use qwyc::plan::{ArtifactInfo, PlanArtifact, PlanFormat, QwycPlan};
+use qwyc::plan::{PlanArtifact, PlanFormat, QwycPlan};
 use qwyc::qwyc::{optimize_thresholds_for_order, simulate, FastClassifier, QwycConfig};
 #[cfg(feature = "pjrt")]
 use qwyc::runtime::engine::PjrtEngine;
@@ -321,23 +321,9 @@ fn plan_info(args: &Args) -> Result<(), QwycError> {
         None => return Err(QwycError::Config("usage: qwyc plan-info <plan.bin|plan.json>".into())),
     };
     args.check_unknown()?;
-    match PlanArtifact::info(&path)? {
-        ArtifactInfo::Json { name, t, n_features } => {
-            println!("{}: qwyc-plan-v1 (JSON)", path.display());
-            println!("  plan '{name}'  T={t}  n_features={n_features}");
-        }
-        ArtifactInfo::Binary(info) => {
-            println!("{}: qwyc-plan-bin-v1 version {}", path.display(), info.version);
-            println!(
-                "  plan '{}'  T={}  n_features={}  file_len={} bytes",
-                info.plan_name, info.t, info.n_features, info.file_len
-            );
-            println!("  {:<12} {:>10} {:>10}", "section", "offset", "bytes");
-            for s in &info.sections {
-                println!("  {:<12} {:>10} {:>10}", s.name, s.offset, s.len);
-            }
-        }
-    }
+    // The report body lives on ArtifactInfo::render so library tests pin
+    // the exact output shape the CI smoke greps.
+    print!("{}", PlanArtifact::info(&path)?.render(&path.display().to_string()));
     Ok(())
 }
 

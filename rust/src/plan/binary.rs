@@ -2,15 +2,24 @@
 //!
 //! A compiled plan flattened into one contiguous, alignment-padded
 //! buffer: a fixed 64-byte header (magic / version / endianness tag /
-//! section count), a fixed-width section table, and eight sections of
+//! section count), a fixed-width section table, and ten sections of
 //! fixed-width `#[repr(C)]` records — scalars, the four meta strings,
 //! the order π, the ε⁺/ε⁻ threshold vectors, per-position costs, a
-//! model directory, and the packed model payloads (16-byte tree node
-//! records, u32 lattice feature subsets + f32 vertex tables). Loading
-//! is one `read` into an 8-byte-aligned buffer followed by validated
-//! pointer casts — no parsing, no re-permutation — so a serving
-//! `RELOAD` costs little more than the file read plus the invariant
-//! checks every compile path runs.
+//! model directory, the packed model payloads (16-byte tree node
+//! records, u32 lattice feature subsets + f32 vertex tables), and the
+//! two quantization sections added in version 2: `bin_edges` (per-
+//! feature sorted distinct split thresholds) and `quant_nodes` (the
+//! trees' u16 threshold-bin banks in position order; both empty when
+//! the plan did not quantize — see `plan/quant.rs`). Loading is one
+//! `read` into an 8-byte-aligned buffer followed by validated pointer
+//! casts — no parsing, no re-permutation — so a serving `RELOAD` costs
+//! little more than the file read plus the invariant checks every
+//! compile path runs. The quantized layout itself is *rebuilt* by
+//! `CompiledPlan::from_parts` (like the SoA banks); the stored
+//! sections exist for `plan-info` inspection and are verified
+//! byte-for-byte against the rebuild at decode, so a flipped bit in
+//! either one fails loudly instead of shipping a silently divergent
+//! kernel.
 //!
 //! Layout rules (documented in README "Plan artifacts"):
 //! - all multi-byte fields are stored in the **writer's native byte
@@ -46,13 +55,25 @@ use std::path::Path;
 /// auto-detection is a one-byte sniff.
 pub const MAGIC: [u8; 8] = *b"QWYCBIN1";
 /// Current layout version; bumped on any change to the byte layout.
-pub const VERSION: u32 = 1;
+/// Version 2 appended the `bin_edges` and `quant_nodes` sections after
+/// `model_data`; sections 0–7 are laid out exactly as in version 1.
+pub const VERSION: u32 = 2;
 /// Stored natively by the writer; a reader that sees these bytes in a
 /// different order is running on hardware with the opposite endianness.
 const ENDIAN_TAG: u32 = 0x0102_0304;
-const N_SECTIONS: usize = 8;
-const SECTION_NAMES: [&str; N_SECTIONS] =
-    ["scalars", "strings", "order", "eps_pos", "eps_neg", "costs", "model_dir", "model_data"];
+const N_SECTIONS: usize = 10;
+const SECTION_NAMES: [&str; N_SECTIONS] = [
+    "scalars",
+    "strings",
+    "order",
+    "eps_pos",
+    "eps_neg",
+    "costs",
+    "model_dir",
+    "model_data",
+    "bin_edges",
+    "quant_nodes",
+];
 const FMT: &str = "qwyc-plan-bin-v1";
 
 // ---- on-disk records ---------------------------------------------------
@@ -71,7 +92,7 @@ pub struct FileHeader {
     pub version: u32,
     /// Endianness tag (must read back as `0x01020304`).
     pub endian: u32,
-    /// Total header size in bytes (64 for v1).
+    /// Total header size in bytes (64 for every version so far).
     pub header_len: u32,
     /// Number of section-table entries that follow the header.
     pub n_sections: u32,
@@ -85,7 +106,7 @@ pub struct FileHeader {
 #[repr(C)]
 #[derive(Clone, Copy, Debug)]
 pub struct SectionEntry {
-    /// Section kind; v1 requires the eight known kinds in order 0..=7.
+    /// Section kind; v2 requires the ten known kinds in order 0..=9.
     pub kind: u32,
     /// Reserved, zero.
     pub reserved: u32,
@@ -137,6 +158,7 @@ pub struct ModelRec {
 /// a valid value and whose layout has no padding bytes (both pinned by
 /// the const assertions in `plan/compiled.rs`).
 unsafe trait Pod: Copy {}
+unsafe impl Pod for u16 {}
 unsafe impl Pod for u32 {}
 unsafe impl Pod for f32 {}
 unsafe impl Pod for Node {}
@@ -241,6 +263,28 @@ fn push_str(buf: &mut Vec<u8>, s: &str) {
     buf.extend_from_slice(s.as_bytes());
 }
 
+/// Section 8 payload: `u32` feature-slot count, then one `u32` edge
+/// count per feature, then every feature's sorted distinct thresholds
+/// as concatenated `f32`s. Empty when the plan did not quantize.
+fn encode_bin_edges(cp: &CompiledPlan) -> Vec<u8> {
+    let Some(q) = cp.quant() else { return Vec::new() };
+    let counts = q.edge_counts();
+    let mut buf = Vec::with_capacity(4 * (1 + counts.len() + q.total_edges()));
+    buf.extend_from_slice(&(counts.len() as u32).to_ne_bytes());
+    buf.extend_from_slice(bytes_of_slice(&counts));
+    for f in 0..q.n_features() {
+        buf.extend_from_slice(bytes_of_slice(q.edges(f)));
+    }
+    buf
+}
+
+/// Section 9 payload: every tree's `u16` threshold-bin bank,
+/// concatenated in position (π) order. Empty when the plan did not
+/// quantize.
+fn encode_quant_nodes(cp: &CompiledPlan) -> Vec<u8> {
+    bytes_of_slice(&cp.quantized_node_bins()).to_vec()
+}
+
 /// Serialize a compiled plan (plus its meta and the ensemble name, which
 /// the compiled form does not carry) into a `qwyc-plan-bin-v1` buffer.
 pub(super) fn encode(meta: &PlanMeta, ensemble_name: &str, cp: &CompiledPlan) -> Vec<u8> {
@@ -290,6 +334,8 @@ pub(super) fn encode(meta: &PlanMeta, ensemble_name: &str, cp: &CompiledPlan) ->
         }
     }
 
+    let bin_edges = encode_bin_edges(cp);
+    let quant_nodes = encode_quant_nodes(cp);
     let payloads: [&[u8]; N_SECTIONS] = [
         bytes_of(&scalars),
         &strings,
@@ -299,6 +345,8 @@ pub(super) fn encode(meta: &PlanMeta, ensemble_name: &str, cp: &CompiledPlan) ->
         bytes_of_slice(cp.position_costs()),
         bytes_of_slice(&dir),
         &data,
+        &bin_edges,
+        &quant_nodes,
     ];
     let table_len = N_SECTIONS * size_of::<SectionEntry>();
     let mut file = vec![0u8; size_of::<FileHeader>() + table_len];
@@ -544,6 +592,23 @@ pub(super) fn decode(bytes: &[u8]) -> Result<DecodedPlan, QwycError> {
         costs.to_vec(),
         scalars.n_features as usize,
     )?;
+    // The quantized layout the kernel actually runs is rebuilt by
+    // `from_parts` from the model payloads; the stored sections are the
+    // writer's view of the same data. A byte-level mismatch means the
+    // artifact was corrupted or hand-edited, so fail loudly rather than
+    // serve a plan whose inspection output lies about its kernel.
+    for (k, mismatch) in [
+        (8usize, section(bytes, entries, 8) != encode_bin_edges(&compiled)),
+        (9usize, section(bytes, entries, 9) != encode_quant_nodes(&compiled)),
+    ] {
+        if mismatch {
+            return Err(QwycError::Schema(format!(
+                "{FMT}: section {}: stored quantization does not match the \
+                 layout rebuilt from the model payloads",
+                SECTION_NAMES[k]
+            )));
+        }
+    }
     let meta = PlanMeta {
         name: plan_name,
         alpha: scalars.alpha,
@@ -581,12 +646,40 @@ pub struct BinaryInfo {
     pub t: u64,
     /// Declared feature width (0 ⇒ inferred at compile).
     pub n_features: u64,
+    /// Per-feature bin-edge counts from the `bin_edges` section; empty
+    /// when the plan is not quantized.
+    pub edge_counts: Vec<u32>,
     /// The section table.
     pub sections: Vec<SectionInfo>,
 }
 
-/// Read only the header, section table, scalars, and plan name — the
-/// cheap ops-debugging view behind `plan-info`.
+/// Parse the per-feature edge counts out of a `bin_edges` section
+/// payload (layout documented on [`encode_bin_edges`]). An empty
+/// section means the plan is not quantized and yields an empty vector.
+fn parse_edge_counts(payload: &[u8]) -> Result<Vec<u32>, QwycError> {
+    let err = |m: &str| QwycError::Schema(format!("{FMT}: section bin_edges: {m}"));
+    if payload.is_empty() {
+        return Ok(Vec::new());
+    }
+    if payload.len() < 4 {
+        return Err(err("too short for the feature-count prefix"));
+    }
+    let f = u32::from_ne_bytes(payload[..4].try_into().unwrap()) as usize;
+    let counts_end = 4 + 4 * f;
+    if counts_end > payload.len() {
+        return Err(err("count table runs past section end"));
+    }
+    let counts: &[u32] = view_slice(&payload[4..counts_end], "bin_edges counts")?;
+    let total: u64 = counts.iter().map(|&c| u64::from(c)).sum();
+    if payload.len() as u64 != counts_end as u64 + 4 * total {
+        return Err(err("edge payload length does not match the count table"));
+    }
+    Ok(counts.to_vec())
+}
+
+/// Read only the header, section table, scalars, plan name, and the
+/// quantization edge counts — the cheap ops-debugging view behind
+/// `plan-info`.
 pub(super) fn inspect(bytes: &[u8]) -> Result<BinaryInfo, QwycError> {
     let hdr = parse_header(bytes)?;
     let entries = parse_sections(bytes)?;
@@ -599,6 +692,7 @@ pub(super) fn inspect(bytes: &[u8]) -> Result<BinaryInfo, QwycError> {
         plan_name,
         t: scalars.t,
         n_features: scalars.n_features,
+        edge_counts: parse_edge_counts(section(bytes, entries, 8))?,
         sections: entries
             .iter()
             .enumerate()

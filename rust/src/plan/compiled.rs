@@ -9,6 +9,7 @@
 //! downstream — `NativeEngine`, `FilterPipeline`, the CLI — holds a
 //! `CompiledPlan` and calls the shared sweep core without re-checking.
 
+use super::quant::FeatureQuant;
 use super::QwycPlan;
 use crate::ensemble::BaseModel;
 use crate::error::QwycError;
@@ -67,6 +68,13 @@ pub struct CompiledPlan {
     /// Largest feature index any base model reads, plus one — the floor
     /// every input row stride must meet.
     min_features: usize,
+    /// Per-feature split-threshold edge tables, present when every tree
+    /// threshold quantized (see `plan/quant.rs`). When present, the
+    /// sweep entry points quantize each request row once and walk the
+    /// trees' u16 banks — bitwise-identical outcomes, integer compares.
+    /// `None` ⇒ the raw f32 path serves (lattice-only plans, NaN
+    /// thresholds, edge-table overflow).
+    quant: Option<FeatureQuant>,
 }
 
 // Compile once, hand out `Arc<CompiledPlan>` to every shard: the plan
@@ -146,7 +154,7 @@ impl CompiledPlan {
         for (r, &c) in costs.iter().enumerate() {
             prefix_cost[r + 1] = prefix_cost[r] + c as f64;
         }
-        let soa: Vec<Option<TreeSoa>> = models
+        let mut soa: Vec<Option<TreeSoa>> = models
             .iter()
             .map(|m| match m {
                 BaseModel::Tree(tr) => Some(tr.to_soa()),
@@ -186,6 +194,22 @@ impl CompiledPlan {
         } else {
             min_features
         };
+        // Quantization is *rebuilt* at every load, exactly like the SoA
+        // banks — both artifact formats funnel through here, so the
+        // quantized layout can never drift from the stored f32 plan.
+        let mut quant = FeatureQuant::from_models(&models, n_features);
+        if let Some(q) = &quant {
+            let all_quantized = soa
+                .iter_mut()
+                .flatten()
+                .all(|s| s.quantize_with(|f, t| q.threshold_bin(f, t)));
+            if !all_quantized {
+                // Defensive: from_models collected these same thresholds,
+                // so every lookup should hit. Fall back to the raw path
+                // rather than serve a half-quantized plan.
+                quant = None;
+            }
+        }
         Ok(CompiledPlan {
             models,
             soa,
@@ -198,6 +222,7 @@ impl CompiledPlan {
             prefix_cost,
             n_features,
             min_features,
+            quant,
         })
     }
 
@@ -258,6 +283,28 @@ impl CompiledPlan {
         self.prefix_cost[self.t()]
     }
 
+    /// The feature-quantization tables, when the plan quantized (every
+    /// tree threshold rewritten as a u16 bin index). `None` means the
+    /// raw f32 path serves.
+    pub fn quant(&self) -> Option<&FeatureQuant> {
+        self.quant.as_ref()
+    }
+
+    /// Concatenated per-position quantized threshold banks in position
+    /// order (lattice positions contribute nothing) — the
+    /// `quant_nodes` payload of the binary artifact. Empty when the
+    /// plan is unquantized.
+    pub(super) fn quantized_node_bins(&self) -> Vec<u16> {
+        if self.quant.is_none() {
+            return Vec::new();
+        }
+        let mut bins = Vec::new();
+        for s in self.soa.iter().flatten() {
+            bins.extend_from_slice(s.qthresholds());
+        }
+        bins
+    }
+
     /// Threshold view for the shared sweep core.
     pub fn sweep_params(&self) -> SweepParams<'_> {
         SweepParams {
@@ -298,11 +345,72 @@ impl CompiledPlan {
         }
     }
 
+    /// [`CompiledPlan::score_position`] over a quantized block: tree
+    /// positions with a quantized bank walk the u16 bins in `qx`
+    /// (`bin(x) <= bin(t) ⟺ x <= t`, so scores are bitwise-identical);
+    /// lattices and unquantized banks read the raw rows in `x`.
+    #[allow(clippy::too_many_arguments)]
+    fn score_position_quant(
+        &self,
+        r: usize,
+        x: &[f32],
+        qx: &[u16],
+        d: usize,
+        rows: &[u32],
+        out: &mut [f32],
+        lat_scratch: &mut Vec<f32>,
+    ) {
+        match &self.soa[r] {
+            Some(s) if s.is_quantized() => s.eval_indexed_quant(qx, d, rows, out),
+            _ => self.score_position(r, x, d, rows, out, lat_scratch),
+        }
+    }
+
     /// Run the shared early-exit sweep over `n` row-major examples of
     /// stride `d` (must cover every feature the models read), in blocks
     /// of `block` fanned across `pool`. Outcomes are in example order and
     /// bit-identical at every thread count.
+    ///
+    /// When the plan quantized (see [`CompiledPlan::quant`]), each
+    /// block's rows are binned once and the tree walks run the integer
+    /// kernel — outcomes stay bitwise-identical to the raw path
+    /// ([`CompiledPlan::sweep_features_raw`], pinned by
+    /// rust/tests/quantized_equiv.rs).
     pub fn sweep_features(
+        &self,
+        x: &[f32],
+        n: usize,
+        d: usize,
+        block: usize,
+        pool: &Pool,
+    ) -> Vec<SweepOutcome> {
+        let Some(q) = &self.quant else {
+            return self.sweep_features_raw(x, n, d, block, pool);
+        };
+        assert!(
+            d >= self.min_features,
+            "row stride {d} < {} required by the base models",
+            self.min_features
+        );
+        assert_eq!(x.len(), n * d, "feature buffer is not n × d");
+        let params = self.sweep_params();
+        sweep_batched(&params, n, block, pool, |lo, hi| {
+            let xblk = &x[lo * d..hi * d];
+            let mut lat_scratch: Vec<f32> = Vec::new();
+            // Quantize the block once, in the worker that sweeps it.
+            let mut qx: Vec<u16> = Vec::new();
+            q.quantize_block(xblk, d, &mut qx);
+            move |r: usize, rows: &[u32], out: &mut [f32]| {
+                self.score_position_quant(r, xblk, &qx, d, rows, out, &mut lat_scratch)
+            }
+        })
+    }
+
+    /// The unquantized sweep: always walks the f32 `TreeSoa` banks.
+    /// Public as the reference path the quantized kernel is pinned
+    /// against (and the fallback [`CompiledPlan::sweep_features`] takes
+    /// when the plan did not quantize).
+    pub fn sweep_features_raw(
         &self,
         x: &[f32],
         n: usize,
@@ -326,13 +434,14 @@ impl CompiledPlan {
         })
     }
 
-    /// Single-block [`sweep_features`](Self::sweep_features) with
-    /// caller-owned scratch: the serving hot path's allocation-free
-    /// entry point. Bitwise-identical to `sweep_features` whenever
+    /// Single-block raw-path sweep with caller-owned scratch:
+    /// allocation-free once warmed. Bitwise-identical to
+    /// [`sweep_features_raw`](Self::sweep_features_raw) whenever
     /// `n ≤ block` there (the batched driver then runs exactly one
-    /// block over the same scorer); the caller is responsible for
-    /// splitting larger inputs. `lat_scratch` replaces the per-block
-    /// lattice scratch the batched path allocates.
+    /// block over the same scorer) — and, by the quantization
+    /// equivalence, to the quantized entry points too. The caller is
+    /// responsible for splitting larger inputs. `lat_scratch` replaces
+    /// the per-block lattice scratch the batched path allocates.
     pub fn sweep_features_into<'s>(
         &self,
         x: &[f32],
@@ -353,6 +462,42 @@ impl CompiledPlan {
             n,
             |r: usize, rows: &[u32], out: &mut [f32]| {
                 self.score_position(r, x, d, rows, out, lat_scratch)
+            },
+            scratch,
+        )
+    }
+
+    /// Quantized twin of [`CompiledPlan::sweep_features_into`] — the
+    /// serving hot path. The rows are binned once into the caller's
+    /// persistent `qx` buffer (allocation-free once warmed, like
+    /// `scratch`), then the single-block sweep walks the u16 banks.
+    /// Outcomes are bitwise-identical to the raw path; plans without
+    /// quantization fall through to it directly.
+    pub fn sweep_features_quant_into<'s>(
+        &self,
+        x: &[f32],
+        n: usize,
+        d: usize,
+        scratch: &'s mut SweepScratch,
+        lat_scratch: &mut Vec<f32>,
+        qx: &mut Vec<u16>,
+    ) -> &'s [SweepOutcome] {
+        let Some(q) = &self.quant else {
+            return self.sweep_features_into(x, n, d, scratch, lat_scratch);
+        };
+        assert!(
+            d >= self.min_features,
+            "row stride {d} < {} required by the base models",
+            self.min_features
+        );
+        assert_eq!(x.len(), n * d, "feature buffer is not n × d");
+        q.quantize_block(x, d, qx);
+        let params = self.sweep_params();
+        sweep_block_with(
+            &params,
+            n,
+            |r: usize, rows: &[u32], out: &mut [f32]| {
+                self.score_position_quant(r, x, qx, d, rows, out, lat_scratch)
             },
             scratch,
         )
@@ -413,6 +558,9 @@ mod tests {
         let mut plan = QwycPlan::bundle(ens, fc, "cp-test", 0.01).unwrap();
         plan.meta.n_features = te.d;
         let cp = plan.compile().unwrap();
+        // Tree plans quantize, so this equivalence now pins the
+        // quantized kernel against the raw eval_single walk.
+        assert!(cp.quant().is_some(), "tree plan should quantize");
         let n = te.n.min(400);
         for threads in [1, 4] {
             let outs = cp.sweep_features(&te.x[..n * te.d], n, te.d, 64, &Pool::new(threads));

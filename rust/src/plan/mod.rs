@@ -30,9 +30,11 @@
 
 mod binary;
 mod compiled;
+pub mod quant;
 
 pub use binary::{BinaryInfo, SectionInfo};
 pub use compiled::CompiledPlan;
+pub use quant::FeatureQuant;
 // Re-exported so plan consumers get the crate error type where the
 // artifact lives.
 pub use crate::error::QwycError;
@@ -287,6 +289,76 @@ pub enum ArtifactInfo {
     },
     /// A `qwyc-plan-bin-v1` binary artifact.
     Binary(BinaryInfo),
+}
+
+impl ArtifactInfo {
+    /// Render the `plan-info` report for this artifact. Lives on the
+    /// info type (not in main.rs) so the CLI output shape — which CI
+    /// smoke tests grep — is pinned by library tests.
+    ///
+    /// Binary artifacts get the full view: the section table (with the
+    /// writer's alignment padding per section), and a quantization
+    /// summary built from the `bin_edges`/`quant_nodes` sections.
+    pub fn render(&self, path_label: &str) -> String {
+        use std::fmt::Write;
+        let mut out = String::new();
+        match self {
+            ArtifactInfo::Json { name, t, n_features } => {
+                let _ = writeln!(out, "{path_label}: qwyc-plan-v1 (JSON)");
+                let _ = writeln!(out, "  plan '{name}'  T={t}  n_features={n_features}");
+            }
+            ArtifactInfo::Binary(info) => {
+                let _ =
+                    writeln!(out, "{path_label}: qwyc-plan-bin-v1 version {}", info.version);
+                let _ = writeln!(
+                    out,
+                    "  plan '{}'  T={}  n_features={}  file_len={} bytes",
+                    info.plan_name, info.t, info.n_features, info.file_len
+                );
+                let _ = writeln!(
+                    out,
+                    "  {:<12} {:>10} {:>10} {:>6}",
+                    "section", "offset", "bytes", "pad"
+                );
+                for (k, s) in info.sections.iter().enumerate() {
+                    // Alignment padding the writer inserted between this
+                    // payload's end and the next section's 64-byte start
+                    // (end of file for the last section).
+                    let next = info
+                        .sections
+                        .get(k + 1)
+                        .map_or(info.file_len, |n| n.offset);
+                    let pad = next.saturating_sub(s.offset + s.len);
+                    let _ = writeln!(
+                        out,
+                        "  {:<12} {:>10} {:>10} {:>6}",
+                        s.name, s.offset, s.len, pad
+                    );
+                }
+                if info.edge_counts.is_empty() {
+                    let _ = writeln!(out, "  quantization: none (raw f32 thresholds)");
+                } else {
+                    let total: u64 = info.edge_counts.iter().map(|&c| u64::from(c)).sum();
+                    let bank = info
+                        .sections
+                        .iter()
+                        .find(|s| s.name == "quant_nodes")
+                        .map_or(0, |s| s.len);
+                    let _ = writeln!(
+                        out,
+                        "  quantization: {} features, {} bin edges, quantized bank {} bytes",
+                        info.edge_counts.len(),
+                        total,
+                        bank
+                    );
+                    let per: Vec<String> =
+                        info.edge_counts.iter().map(|c| c.to_string()).collect();
+                    let _ = writeln!(out, "    edges/feature: {}", per.join(" "));
+                }
+            }
+        }
+        out
+    }
 }
 
 /// The single load/save surface for plan artifacts, format-agnostic.
@@ -805,6 +877,55 @@ mod tests {
         let again = PlanArtifact::load(&json2).unwrap();
         assert_eq!(bits(again.compiled().eps_neg()), bits(a.eps_neg()));
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn plan_info_render_pins_output_shape() {
+        // JSON view: exactly two lines; CI smoke greps the format tag.
+        let info = ArtifactInfo::Json { name: "toy-plan".into(), t: 2, n_features: 0 };
+        assert_eq!(
+            info.render("p.json"),
+            "p.json: qwyc-plan-v1 (JSON)\n  plan 'toy-plan'  T=2  n_features=0\n"
+        );
+
+        // Binary view from a real (lattice ⇒ unquantized) artifact: the
+        // version line, all ten section rows with a pad column, and the
+        // explicit not-quantized marker.
+        let dir = std::env::temp_dir().join(format!("qwyc-plan-info-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let bin = dir.join("plan.bin");
+        PlanArtifact::from_plan(toy_plan()).unwrap().save(&bin, PlanFormat::Binary).unwrap();
+        let rendered = PlanArtifact::info(&bin).unwrap().render("plan.bin");
+        assert!(rendered.starts_with("plan.bin: qwyc-plan-bin-v1 version 2\n"), "{rendered}");
+        assert!(rendered.contains(" pad\n"), "{rendered}");
+        for name in ["scalars", "model_data", "bin_edges", "quant_nodes"] {
+            assert!(rendered.contains(name), "missing section {name} in:\n{rendered}");
+        }
+        assert!(rendered.contains("quantization: none (raw f32 thresholds)"), "{rendered}");
+        let _ = std::fs::remove_dir_all(&dir);
+
+        // Quantized summary lines, pinned byte-for-byte on a synthetic
+        // info (the fields are public exactly so this stays testable).
+        let info = ArtifactInfo::Binary(BinaryInfo {
+            version: 2,
+            file_len: 1024,
+            plan_name: "q".into(),
+            t: 3,
+            n_features: 2,
+            edge_counts: vec![2, 1],
+            sections: vec![
+                SectionInfo { name: "bin_edges", offset: 832, len: 24 },
+                SectionInfo { name: "quant_nodes", offset: 896, len: 14 },
+            ],
+        });
+        let r = info.render("q.bin");
+        assert!(r.contains("  bin_edges           832         24     40\n"), "{r}");
+        assert!(r.contains("  quant_nodes         896         14    114\n"), "{r}");
+        assert!(
+            r.contains("  quantization: 2 features, 3 bin edges, quantized bank 14 bytes\n"),
+            "{r}"
+        );
+        assert!(r.contains("    edges/feature: 2 1\n"), "{r}");
     }
 
     #[test]

@@ -1,0 +1,309 @@
+//! Feature quantization for the compiled sweep kernel.
+//!
+//! At compile time, [`FeatureQuant::from_models`] collects every
+//! distinct split threshold each feature sees across the plan's trees
+//! into a sorted per-feature edge table. Bin indices are defined as
+//!
+//! ```text
+//! bin(x) = #{ e ∈ edges[f] : e < x }        (NaN ⇒ NAN_BIN)
+//! ```
+//!
+//! so a node splitting feature f at threshold t = edges\[f\]\[k\]
+//! satisfies `x <= t  ⟺  bin(x) <= k` for every non-NaN x (any edge
+//! below x is below t, so bin(x) ≤ k; conversely x > t makes all of
+//! edges\[0..=k\] < x, so bin(x) ≥ k+1). ±∞ and subnormals need no
+//! special cases — the proof only uses IEEE `<` on finite-or-infinite
+//! values. NaN *would* land in bin 0 (every compare false) and wrongly
+//! route LEFT where the raw walk's `v <= t` routes RIGHT; instead NaN
+//! quantizes to the [`NAN_BIN`] sentinel, which exceeds every
+//! threshold bin (edge counts are capped at [`MAX_EDGES_PER_FEATURE`]),
+//! so the quantized compare also routes RIGHT. The result: rewriting
+//! node thresholds as u16 bin indices and feature values as u16 bins
+//! is **bitwise-identical** to the raw f32 walk — leaf values are
+//! untouched and accumulate in π order exactly as before.
+//!
+//! Quantization is rebuilt deterministically at every plan load (both
+//! JSON and binary funnel through `CompiledPlan::from_parts`), like the
+//! SoA banks; the binary artifact additionally stores the edge tables
+//! and quantized node banks so `plan-info` can inspect them and the
+//! decoder can verify them against the rebuild.
+
+use crate::ensemble::BaseModel;
+
+/// Quantized value of a NaN feature: compares greater than every
+/// threshold bin, so NaN routes right exactly like the raw `v <= t`.
+pub const NAN_BIN: u16 = u16::MAX;
+
+/// Cap on distinct thresholds per feature: keeps every threshold bin
+/// ≤ 65533 and every finite value bin ≤ 65534, both strictly below the
+/// [`NAN_BIN`] sentinel. A feature with more distinct thresholds
+/// disables quantization for the whole plan (the raw path still
+/// serves it).
+pub const MAX_EDGES_PER_FEATURE: usize = 65534;
+
+/// Per-feature sorted distinct split-threshold tables, plus the bin
+/// mapping built on them. Immutable once constructed; shared by the
+/// compiled plan.
+#[derive(Clone, Debug)]
+pub struct FeatureQuant {
+    /// `edges[f]` is sorted ascending with no duplicates (IEEE `==`
+    /// dedup, so -0.0/+0.0 merge — they are the same split).
+    edges: Vec<Vec<f32>>,
+}
+
+impl FeatureQuant {
+    /// Collect each feature's distinct tree-split thresholds. Returns
+    /// `None` — quantization disabled, raw path serves — when the
+    /// models contain no tree splits at all, any split threshold is
+    /// NaN, or a feature exceeds [`MAX_EDGES_PER_FEATURE`] distinct
+    /// thresholds. Lattice models are untouched by quantization (the
+    /// sweep evaluates them on the raw rows) and don't affect the
+    /// decision.
+    pub fn from_models(models: &[BaseModel], n_features: usize) -> Option<FeatureQuant> {
+        let mut edges: Vec<Vec<f32>> = vec![Vec::new(); n_features];
+        let mut any_split = false;
+        for m in models {
+            if let BaseModel::Tree(tr) = m {
+                for node in &tr.nodes {
+                    if node.is_leaf() {
+                        continue;
+                    }
+                    if node.threshold.is_nan() {
+                        return None;
+                    }
+                    // from_parts validated feature < n_features via
+                    // min_features; stay defensive anyway.
+                    let f = node.feature as usize;
+                    if f >= n_features {
+                        return None;
+                    }
+                    edges[f].push(node.threshold);
+                    any_split = true;
+                }
+            }
+        }
+        if !any_split {
+            return None;
+        }
+        for per_feature in edges.iter_mut() {
+            per_feature.sort_unstable_by(f32::total_cmp);
+            per_feature.dedup_by(|a, b| a == b);
+            if per_feature.len() > MAX_EDGES_PER_FEATURE {
+                return None;
+            }
+        }
+        Some(FeatureQuant { edges })
+    }
+
+    /// Number of feature slots (the plan's `n_features`).
+    pub fn n_features(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Sorted distinct thresholds of feature `f` (empty when no tree
+    /// splits on it).
+    pub fn edges(&self, f: usize) -> &[f32] {
+        &self.edges[f]
+    }
+
+    /// Per-feature edge counts (the `bin_edges` section header in the
+    /// binary artifact).
+    pub fn edge_counts(&self) -> Vec<u32> {
+        self.edges.iter().map(|e| e.len() as u32).collect()
+    }
+
+    /// Total edges across all features.
+    pub fn total_edges(&self) -> usize {
+        self.edges.iter().map(Vec::len).sum()
+    }
+
+    /// Bin index of threshold `t` on feature `f`: the k with
+    /// `edges[f][k] == t`, the right-hand side of the equivalence
+    /// `x <= t ⟺ bin(x) <= k`. `None` if `t` is not in the table
+    /// (never happens for thresholds collected by
+    /// [`FeatureQuant::from_models`] from the same models).
+    pub fn threshold_bin(&self, f: usize, t: f32) -> Option<u16> {
+        if t.is_nan() {
+            return None;
+        }
+        let edges = self.edges.get(f)?;
+        // First index with edges[k] >= t; `e < t` is monotone over the
+        // sorted table for non-NaN t.
+        let k = edges.partition_point(|&e| e < t);
+        // IEEE == matches -0.0 against a stored +0.0 (they were
+        // deduped as one edge).
+        if k < edges.len() && edges[k] == t {
+            Some(k as u16)
+        } else {
+            None
+        }
+    }
+
+    /// Quantize one feature value against a sorted edge table:
+    /// branchless lower-bound binary search counting edges strictly
+    /// below `x`; NaN maps to [`NAN_BIN`].
+    #[inline]
+    pub fn bin_of(edges: &[f32], x: f32) -> u16 {
+        if x.is_nan() {
+            return NAN_BIN;
+        }
+        if edges.is_empty() {
+            return 0;
+        }
+        let mut lo = 0usize;
+        let mut n = edges.len();
+        while n > 1 {
+            let half = n / 2;
+            // Branchless: cmov-friendly select, no data-dependent jump.
+            lo = if edges[lo + half] < x { lo + half } else { lo };
+            n -= half;
+        }
+        (lo + usize::from(edges[lo] < x)) as u16
+    }
+
+    /// Quantize one row-major block of feature rows (stride `d`,
+    /// `x.len() == n·d`) into `out`, resized to match. Each value costs
+    /// one branchless binary search over its feature's edge table;
+    /// features beyond the plan's width (rows wider than `n_features`)
+    /// or without splits take the empty-table fast path (bin 0).
+    pub fn quantize_block(&self, x: &[f32], d: usize, out: &mut Vec<u16>) {
+        debug_assert!(d == 0 || x.len() % d == 0);
+        out.clear();
+        out.resize(x.len(), 0);
+        if d == 0 {
+            return;
+        }
+        for (row, qrow) in x.chunks_exact(d).zip(out.chunks_exact_mut(d)) {
+            for (f, (&v, q)) in row.iter().zip(qrow.iter_mut()).enumerate() {
+                let edges: &[f32] = if f < self.edges.len() { &self.edges[f] } else { &[] };
+                *q = FeatureQuant::bin_of(edges, v);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gbt::tree::{Node, Tree};
+
+    fn tree(splits: &[(u32, f32)]) -> Tree {
+        // A right-deep chain: each split's left child is a leaf.
+        let mut nodes = Vec::new();
+        for (i, &(f, t)) in splits.iter().enumerate() {
+            nodes.push(Node {
+                feature: f,
+                threshold: t,
+                left: (2 * i + 1) as u32,
+                value: 0.0,
+            });
+            nodes.push(Node::leaf(i as f32));
+        }
+        nodes.push(Node::leaf(-1.0));
+        let tr = Tree { nodes };
+        tr.validate().unwrap();
+        tr
+    }
+
+    #[test]
+    fn edges_are_sorted_distinct_per_feature() {
+        let models = vec![
+            BaseModel::Tree(tree(&[(0, 3.0), (1, -1.0)])),
+            BaseModel::Tree(tree(&[(0, 1.0), (0, 3.0)])),
+        ];
+        let q = FeatureQuant::from_models(&models, 4).unwrap();
+        assert_eq!(q.edges(0), &[1.0, 3.0]);
+        assert_eq!(q.edges(1), &[-1.0]);
+        assert!(q.edges(2).is_empty() && q.edges(3).is_empty());
+        assert_eq!(q.edge_counts(), vec![2, 1, 0, 0]);
+        assert_eq!(q.total_edges(), 3);
+        assert_eq!(q.threshold_bin(0, 1.0), Some(0));
+        assert_eq!(q.threshold_bin(0, 3.0), Some(1));
+        assert_eq!(q.threshold_bin(1, -1.0), Some(0));
+        assert_eq!(q.threshold_bin(0, 2.0), None);
+    }
+
+    #[test]
+    fn nan_threshold_or_no_splits_disables_quantization() {
+        assert!(FeatureQuant::from_models(&[], 3).is_none());
+        let leaf_only = vec![BaseModel::Tree(Tree::single_leaf(1.0))];
+        assert!(FeatureQuant::from_models(&leaf_only, 3).is_none());
+        let nan = vec![BaseModel::Tree(tree(&[(0, f32::NAN)]))];
+        assert!(FeatureQuant::from_models(&nan, 3).is_none());
+    }
+
+    #[test]
+    fn negative_zero_merges_with_positive_zero() {
+        let models =
+            vec![BaseModel::Tree(tree(&[(0, -0.0), (0, 0.0)]))];
+        let q = FeatureQuant::from_models(&models, 1).unwrap();
+        assert_eq!(q.edges(0).len(), 1);
+        // Both spellings of zero resolve to the same bin.
+        assert_eq!(q.threshold_bin(0, 0.0), Some(0));
+        assert_eq!(q.threshold_bin(0, -0.0), Some(0));
+        // And -0.0/+0.0 feature values quantize identically (IEEE ==).
+        let e = q.edges(0);
+        assert_eq!(FeatureQuant::bin_of(e, -0.0), FeatureQuant::bin_of(e, 0.0));
+    }
+
+    /// The theorem the whole kernel rests on: for every edge table and
+    /// every probe value (threshold-equal, between, ±∞, subnormal),
+    /// `x <= t ⟺ bin(x) <= bin(t)`.
+    #[test]
+    fn bin_mapping_preserves_threshold_compares() {
+        let tables: [&[f32]; 4] = [
+            &[1.0, 3.0, 5.0],
+            &[-2.5],
+            &[f32::MIN_POSITIVE / 2.0, 0.0, 1.0e-30, 7.0],
+            &[f32::NEG_INFINITY, -1.0, 1.0, f32::INFINITY],
+        ];
+        for edges in tables {
+            let mut probes: Vec<f32> = edges.to_vec();
+            probes.extend_from_slice(&[
+                f32::NEG_INFINITY,
+                -10.0,
+                -0.0,
+                0.0,
+                f32::MIN_POSITIVE / 4.0,
+                2.0,
+                4.0,
+                6.0,
+                1.0e30,
+                f32::INFINITY,
+            ]);
+            for &x in &probes {
+                let bx = FeatureQuant::bin_of(edges, x);
+                for (k, &t) in edges.iter().enumerate() {
+                    assert_eq!(
+                        x <= t,
+                        bx <= k as u16,
+                        "x={x} t={t} (bin {k}) bx={bx} edges={edges:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn nan_value_gets_the_sentinel_bin() {
+        let edges = [1.0f32, 2.0];
+        assert_eq!(FeatureQuant::bin_of(&edges, f32::NAN), NAN_BIN);
+        // Sentinel exceeds every representable threshold bin.
+        assert!(u64::from(NAN_BIN) > MAX_EDGES_PER_FEATURE as u64 - 1);
+    }
+
+    #[test]
+    fn quantize_block_handles_stride_and_empty() {
+        let models = vec![BaseModel::Tree(tree(&[(0, 1.0), (1, 5.0)]))];
+        let q = FeatureQuant::from_models(&models, 2).unwrap();
+        let x = [0.5f32, 6.0, 1.0, 5.0, f32::NAN, 4.0];
+        let mut out = Vec::new();
+        q.quantize_block(&x, 2, &mut out);
+        assert_eq!(out, vec![0, 1, 0, 0, NAN_BIN, 0]);
+        q.quantize_block(&[], 2, &mut out);
+        assert!(out.is_empty());
+        // Rows wider than n_features: extra columns bin to 0.
+        q.quantize_block(&[2.0, 6.0, 9.9], 3, &mut out);
+        assert_eq!(out, vec![1, 1, 0]);
+    }
+}

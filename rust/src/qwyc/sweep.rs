@@ -21,6 +21,7 @@
 
 use super::FastClassifier;
 use crate::util::pool::Pool;
+use crate::util::simd;
 
 /// Thresholds + bias/β view the sweep needs, position-major. Borrowed
 /// from either a [`FastClassifier`] or a
@@ -78,8 +79,9 @@ pub struct SweepOutcome {
 /// example — exiters keep theirs, survivors overwrite at a later
 /// position or in the final β pass — and stream-compacts `active`/`g` by
 /// the mask in one go. No branch in either loop depends on the scores,
-/// so mixed exit patterns cost the same as uniform ones and both loops
-/// auto-vectorize.
+/// so mixed exit patterns cost the same as uniform ones; pass 1 runs
+/// the explicitly vectorized, runtime-dispatched `util::simd` kernel
+/// (AVX2/SSE2/scalar) and pass 2 auto-vectorizes.
 ///
 /// The accumulation itself is untouched: per example, f32 adds in π
 /// order from `bias`, identical to the scalar path and to the previous
@@ -162,12 +164,12 @@ where
         }
         score_position(r, &active[..m], &mut scores[..m]);
         let (ep, en) = (params.eps_pos[r], params.eps_neg[r]);
-        // Pass 1: accumulate and build the keep mask. Linear, branchless.
-        for j in 0..m {
-            let gi = g[j] + scores[j];
-            g[j] = gi;
-            keep[j] = u8::from(!((gi > ep) | (gi < en)));
-        }
+        // Pass 1: accumulate and build the keep mask — the runtime-
+        // dispatched SIMD kernel (AVX2/SSE2/scalar, util::simd). Same
+        // per-element f32 add and strict compares on every tier, so
+        // outcomes stay bitwise-identical; a NaN running score fails
+        // both compares and keeps the example active.
+        simd::accumulate_keep_mask(&mut g[..m], &scores[..m], &mut keep[..m], ep, en);
         // Pass 2: record outcomes and stream-compact active/g by the
         // mask. Writing `out` for *every* active example is what removes
         // the branch: survivors' records are overwritten later, exiters'

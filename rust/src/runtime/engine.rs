@@ -132,6 +132,12 @@ pub struct NativeEngine {
     /// unwind-safety assertion below).
     scratch: SweepScratch,
     lat_scratch: Vec<f32>,
+    /// Recycled quantized-feature block for `classify_into` (one u16 bin
+    /// per feature value; see `plan/quant.rs`). Lives on the engine
+    /// rather than in `SweepScratch` because the sweep's scorer closure
+    /// reads it while the sweep holds the scratch mutably. Fully
+    /// rewritten per call, like the rest of the scratch.
+    qx: Vec<u16>,
 }
 
 impl NativeEngine {
@@ -147,7 +153,13 @@ impl NativeEngine {
     /// Share an already-compiled plan (the sharded-server path: compile
     /// once, hand every shard a handle).
     pub fn from_shared(plan: Arc<CompiledPlan>, pool: Pool) -> NativeEngine {
-        NativeEngine { plan, pool, scratch: SweepScratch::default(), lat_scratch: Vec::new() }
+        NativeEngine {
+            plan,
+            pool,
+            scratch: SweepScratch::default(),
+            lat_scratch: Vec::new(),
+            qx: Vec::new(),
+        }
     }
 
     pub fn plan(&self) -> &CompiledPlan {
@@ -167,11 +179,13 @@ impl Engine for NativeEngine {
     }
 
     /// Allocation-free once warmed: batches up to [`ENGINE_BLOCK`] run
-    /// one sweep over the engine-owned scratch — bitwise-identical to
-    /// `classify_batch`, which fans the same batch as exactly one block
-    /// over the same scorer. Larger batches fall back to the pooled
-    /// allocating path (the serving coordinator's `max_batch` never
-    /// exceeds a block on the hot path, so this is the cold case).
+    /// one quantized sweep over the engine-owned scratch (the feature
+    /// block is binned once into `qx`, then every tree walk is integer
+    /// compare+select) — bitwise-identical to `classify_batch`, which
+    /// fans the same batch as exactly one block over the same scorer.
+    /// Larger batches fall back to the pooled allocating path (the
+    /// serving coordinator's `max_batch` never exceeds a block on the
+    /// hot path, so this is the cold case).
     fn classify_into(
         &mut self,
         x: &[f32],
@@ -185,8 +199,14 @@ impl Engine for NativeEngine {
             return Ok(());
         }
         let d = self.plan.n_features();
-        let swept =
-            self.plan.sweep_features_into(x, n, d, &mut self.scratch, &mut self.lat_scratch);
+        let swept = self.plan.sweep_features_quant_into(
+            x,
+            n,
+            d,
+            &mut self.scratch,
+            &mut self.lat_scratch,
+            &mut self.qx,
+        );
         out.clear();
         out.extend(swept.iter().map(|&o| Outcome::from(o)));
         Ok(())

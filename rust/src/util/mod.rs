@@ -9,6 +9,7 @@ pub mod json;
 pub mod pool;
 pub mod proptest;
 pub mod rng;
+pub mod simd;
 pub mod stats;
 pub mod timer;
 

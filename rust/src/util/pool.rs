@@ -26,17 +26,24 @@ pub struct Pool {
     n_threads: usize,
 }
 
-/// Thread count from the `QWYC_THREADS` env var, falling back to
-/// `std::thread::available_parallelism` when unset or unparseable.
-/// A parsed value of 0 clamps to 1 (serial) — an operator disabling
-/// parallelism must never be silently handed every core.
+/// Thread count from the `QWYC_THREADS` env var. `0`, unset, and
+/// unparseable all mean *auto*: use `std::thread::available_parallelism`
+/// (so `QWYC_THREADS=0` matches the common "0 = all cores" convention
+/// instead of silently pinning the pool to one worker).
 pub fn threads_from_env() -> usize {
-    if let Ok(s) = std::env::var("QWYC_THREADS") {
-        if let Ok(v) = s.trim().parse::<usize>() {
-            return v.max(1);
-        }
+    let raw = std::env::var("QWYC_THREADS").ok();
+    let available = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
+    parse_threads(raw.as_deref(), available)
+}
+
+/// Pure core of [`threads_from_env`], separated so the policy is unit-
+/// testable without mutating process-global env state (tests run in
+/// parallel threads).
+fn parse_threads(raw: Option<&str>, available: usize) -> usize {
+    match raw.and_then(|s| s.trim().parse::<usize>().ok()) {
+        Some(0) | None => available.max(1),
+        Some(v) => v,
     }
-    std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1)
 }
 
 impl Pool {
@@ -198,5 +205,20 @@ mod tests {
     #[test]
     fn zero_threads_clamps_to_one() {
         assert_eq!(Pool::new(0).n_threads(), 1);
+    }
+
+    #[test]
+    fn env_thread_policy() {
+        // QWYC_THREADS=0 means auto (all available cores), not serial.
+        assert_eq!(parse_threads(Some("0"), 8), 8);
+        assert_eq!(parse_threads(Some(" 0 "), 8), 8);
+        // Explicit counts pass through untouched, even oversubscribed.
+        assert_eq!(parse_threads(Some("3"), 8), 3);
+        assert_eq!(parse_threads(Some("16"), 8), 16);
+        // Unset or garbage falls back to auto; auto itself clamps to ≥ 1.
+        assert_eq!(parse_threads(None, 8), 8);
+        assert_eq!(parse_threads(Some("lots"), 8), 8);
+        assert_eq!(parse_threads(Some("0"), 0), 1);
+        assert_eq!(parse_threads(None, 0), 1);
     }
 }

@@ -1,0 +1,388 @@
+//! Runtime-dispatched SIMD kernels for the two sweep inner loops.
+//!
+//! Exactly two loops dominate the serving hot path, and both live here
+//! as explicitly vectorized kernels with a scalar twin:
+//!
+//! - [`accumulate_keep_mask`] — the sweep core's pass 1
+//!   (`qwyc/sweep.rs`): `g[j] += scores[j]` plus the branchless exit
+//!   mask `keep = !((g > ε⁺) | (g < ε⁻))` over the compacted active
+//!   block.
+//! - [`select16`] — one level of the quantized 16-lane tree walk
+//!   (`gbt/tree.rs`): `idx = if qv <= qt { left } else { right }`, an
+//!   integer compare+select over u16 bin indices widened to u32 lanes.
+//!
+//! Dispatch is decided **once per process** by [`tier`]:
+//! `is_x86_feature_detected!` picks AVX2 where available, SSE2
+//! otherwise (baseline on x86-64), and the scalar twins everywhere else
+//! — or everywhere, when the `QWYC_FORCE_SCALAR=1` override is set (CI
+//! runs the whole test suite once per tier this way). The scalar twins
+//! are public so equivalence tests can pin `dispatched == scalar`
+//! in-process without mutating the environment.
+//!
+//! Bitwise contract: every tier computes the *same* IEEE-754 result.
+//! The accumulate kernel performs the identical per-element `f32` add
+//! (no reassociation, no FMA contraction — `std::arch` intrinsics map
+//! to fixed instructions), and the compares are ordered/quiet, so a NaN
+//! running score fails both threshold compares and stays active exactly
+//! as in the scalar code. The select kernel is pure integer lane math.
+//!
+//! Design note — no gathers: the quantized walk's per-lane node fetches
+//! stay scalar (stack-array staging in `gbt/tree.rs`) and only the
+//! compare+select is vectorized. AVX2 `vpgatherdd` over u16 banks would
+//! need 2-byte-past-the-end reads or widened banks, is microcoded on
+//! common cores, and buys little when the fetch addresses are
+//! data-dependent anyway; the select chain is where the lane-parallel
+//! work is.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Lane count of [`select16`]; must equal the tree walk's
+/// `SOA_LANES` (asserted at compile time in `gbt/tree.rs`).
+pub const SELECT_LANES: usize = 16;
+
+/// Instruction-set tier selected at runtime for the sweep kernels.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdTier {
+    /// 256-bit `std::arch` AVX2 paths.
+    Avx2,
+    /// 128-bit SSE2 paths (baseline on x86-64).
+    Sse2,
+    /// The portable scalar twins (non-x86 targets, or
+    /// `QWYC_FORCE_SCALAR=1`).
+    Scalar,
+}
+
+impl SimdTier {
+    /// Stable name for logs and bench labels.
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdTier::Avx2 => "avx2",
+            SimdTier::Sse2 => "sse2",
+            SimdTier::Scalar => "scalar",
+        }
+    }
+}
+
+// 0 = not yet detected; otherwise SimdTier discriminant + 1.
+static TIER: AtomicU8 = AtomicU8::new(0);
+
+fn detect() -> SimdTier {
+    if std::env::var("QWYC_FORCE_SCALAR").map(|v| v.trim() == "1").unwrap_or(false) {
+        return SimdTier::Scalar;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return SimdTier::Avx2;
+        }
+        if std::arch::is_x86_feature_detected!("sse2") {
+            return SimdTier::Sse2;
+        }
+    }
+    SimdTier::Scalar
+}
+
+/// The process-wide kernel tier: detected once (honoring
+/// `QWYC_FORCE_SCALAR=1`), then cached. Every dispatched kernel call
+/// pays one relaxed atomic load.
+pub fn tier() -> SimdTier {
+    match TIER.load(Ordering::Relaxed) {
+        1 => SimdTier::Avx2,
+        2 => SimdTier::Sse2,
+        3 => SimdTier::Scalar,
+        _ => {
+            let t = detect();
+            let code = match t {
+                SimdTier::Avx2 => 1,
+                SimdTier::Sse2 => 2,
+                SimdTier::Scalar => 3,
+            };
+            TIER.store(code, Ordering::Relaxed);
+            t
+        }
+    }
+}
+
+// ---- accumulate + keep mask ---------------------------------------------
+
+/// Sweep pass 1 over one active block: `g[j] += scores[j]`, then
+/// `keep[j] = !((g[j] > ep) | (g[j] < en))` as 0/1 bytes. All three
+/// slices must have equal length. Bitwise-identical across tiers (see
+/// the module docs); a NaN sum fails both compares and keeps the
+/// example active.
+pub fn accumulate_keep_mask(g: &mut [f32], scores: &[f32], keep: &mut [u8], ep: f32, en: f32) {
+    assert_eq!(g.len(), scores.len());
+    assert_eq!(g.len(), keep.len());
+    match tier() {
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Avx2 => {
+            // SAFETY: tier() returned Avx2 only after
+            // is_x86_feature_detected!("avx2") succeeded.
+            unsafe { accumulate_keep_mask_avx2(g, scores, keep, ep, en) }
+        }
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Sse2 => {
+            // SAFETY: SSE2 is baseline on x86-64 and was detected.
+            unsafe { accumulate_keep_mask_sse2(g, scores, keep, ep, en) }
+        }
+        _ => accumulate_keep_mask_scalar(g, scores, keep, ep, en),
+    }
+}
+
+/// Scalar twin of [`accumulate_keep_mask`] — the reference semantics,
+/// kept public so tests can pin the dispatched kernel against it.
+pub fn accumulate_keep_mask_scalar(
+    g: &mut [f32],
+    scores: &[f32],
+    keep: &mut [u8],
+    ep: f32,
+    en: f32,
+) {
+    for ((gi, &s), k) in g.iter_mut().zip(scores.iter()).zip(keep.iter_mut()) {
+        let v = *gi + s;
+        *gi = v;
+        *k = u8::from(!((v > ep) | (v < en)));
+    }
+}
+
+/// # Safety
+/// Caller must have verified AVX2 support.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn accumulate_keep_mask_avx2(
+    g: &mut [f32],
+    scores: &[f32],
+    keep: &mut [u8],
+    ep: f32,
+    en: f32,
+) {
+    use std::arch::x86_64::*;
+    let m = g.len();
+    let vep = _mm256_set1_ps(ep);
+    let ven = _mm256_set1_ps(en);
+    let mut j = 0usize;
+    while j + 8 <= m {
+        let gv = _mm256_loadu_ps(g.as_ptr().add(j));
+        let sv = _mm256_loadu_ps(scores.as_ptr().add(j));
+        // One f32 add per element, same operand order as the scalar twin.
+        let sum = _mm256_add_ps(gv, sv);
+        _mm256_storeu_ps(g.as_mut_ptr().add(j), sum);
+        // Ordered/quiet compares: NaN ⇒ false on both, so NaN keeps.
+        let gt = _mm256_cmp_ps::<_CMP_GT_OQ>(sum, vep);
+        let lt = _mm256_cmp_ps::<_CMP_LT_OQ>(sum, ven);
+        let bits = _mm256_movemask_ps(_mm256_or_ps(gt, lt)) as u32;
+        for (lane, k) in keep[j..j + 8].iter_mut().enumerate() {
+            *k = ((!bits >> lane) & 1) as u8;
+        }
+        j += 8;
+    }
+    accumulate_keep_mask_scalar(&mut g[j..], &scores[j..], &mut keep[j..], ep, en);
+}
+
+/// # Safety
+/// Caller must have verified SSE2 support (baseline on x86-64).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "sse2")]
+unsafe fn accumulate_keep_mask_sse2(
+    g: &mut [f32],
+    scores: &[f32],
+    keep: &mut [u8],
+    ep: f32,
+    en: f32,
+) {
+    use std::arch::x86_64::*;
+    let m = g.len();
+    let vep = _mm_set1_ps(ep);
+    let ven = _mm_set1_ps(en);
+    let mut j = 0usize;
+    while j + 4 <= m {
+        let gv = _mm_loadu_ps(g.as_ptr().add(j));
+        let sv = _mm_loadu_ps(scores.as_ptr().add(j));
+        let sum = _mm_add_ps(gv, sv);
+        _mm_storeu_ps(g.as_mut_ptr().add(j), sum);
+        // CMPPS with NaN operands compares false on both predicates.
+        let gt = _mm_cmpgt_ps(sum, vep);
+        let lt = _mm_cmplt_ps(sum, ven);
+        let bits = _mm_movemask_ps(_mm_or_ps(gt, lt)) as u32;
+        for (lane, k) in keep[j..j + 4].iter_mut().enumerate() {
+            *k = ((!bits >> lane) & 1) as u8;
+        }
+        j += 4;
+    }
+    accumulate_keep_mask_scalar(&mut g[j..], &scores[j..], &mut keep[j..], ep, en);
+}
+
+// ---- 16-lane quantized select -------------------------------------------
+
+/// One level of the quantized tree walk, [`SELECT_LANES`] lanes wide:
+/// `idx[lane] = if qv[lane] <= qt[lane] { left[lane] } else
+/// { right[lane] }`. Values are u16 bin indices (plus the `u16::MAX`
+/// NaN sentinel) widened to u32 by the caller, so the x86 paths'
+/// signed 32-bit compares are exact.
+pub fn select16(
+    qv: &[u32; SELECT_LANES],
+    qt: &[u32; SELECT_LANES],
+    left: &[u32; SELECT_LANES],
+    right: &[u32; SELECT_LANES],
+    idx: &mut [u32; SELECT_LANES],
+) {
+    match tier() {
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Avx2 => {
+            // SAFETY: tier() returned Avx2 only after detection.
+            unsafe { select16_avx2(qv, qt, left, right, idx) }
+        }
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Sse2 => {
+            // SAFETY: SSE2 is baseline on x86-64 and was detected.
+            unsafe { select16_sse2(qv, qt, left, right, idx) }
+        }
+        _ => select16_scalar(qv, qt, left, right, idx),
+    }
+}
+
+/// Scalar twin of [`select16`] — reference semantics, public for tests
+/// and for the forced-scalar tier.
+pub fn select16_scalar(
+    qv: &[u32; SELECT_LANES],
+    qt: &[u32; SELECT_LANES],
+    left: &[u32; SELECT_LANES],
+    right: &[u32; SELECT_LANES],
+    idx: &mut [u32; SELECT_LANES],
+) {
+    for lane in 0..SELECT_LANES {
+        idx[lane] = if qv[lane] <= qt[lane] { left[lane] } else { right[lane] };
+    }
+}
+
+/// # Safety
+/// Caller must have verified AVX2 support.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn select16_avx2(
+    qv: &[u32; SELECT_LANES],
+    qt: &[u32; SELECT_LANES],
+    left: &[u32; SELECT_LANES],
+    right: &[u32; SELECT_LANES],
+    idx: &mut [u32; SELECT_LANES],
+) {
+    use std::arch::x86_64::*;
+    for half in 0..2 {
+        let o = half * 8;
+        let v = _mm256_loadu_si256(qv.as_ptr().add(o).cast());
+        let t = _mm256_loadu_si256(qt.as_ptr().add(o).cast());
+        let lv = _mm256_loadu_si256(left.as_ptr().add(o).cast());
+        let rv = _mm256_loadu_si256(right.as_ptr().add(o).cast());
+        // Values fit in 16 bits, so the signed epi32 compare is exact:
+        // qv > qt ⇒ all-ones lane ⇒ pick right (`<=` goes left).
+        let gt = _mm256_cmpgt_epi32(v, t);
+        let sel = _mm256_blendv_epi8(lv, rv, gt);
+        _mm256_storeu_si256(idx.as_mut_ptr().add(o).cast(), sel);
+    }
+}
+
+/// # Safety
+/// Caller must have verified SSE2 support (baseline on x86-64).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "sse2")]
+unsafe fn select16_sse2(
+    qv: &[u32; SELECT_LANES],
+    qt: &[u32; SELECT_LANES],
+    left: &[u32; SELECT_LANES],
+    right: &[u32; SELECT_LANES],
+    idx: &mut [u32; SELECT_LANES],
+) {
+    use std::arch::x86_64::*;
+    for quarter in 0..4 {
+        let o = quarter * 4;
+        let v = _mm_loadu_si128(qv.as_ptr().add(o).cast());
+        let t = _mm_loadu_si128(qt.as_ptr().add(o).cast());
+        let lv = _mm_loadu_si128(left.as_ptr().add(o).cast());
+        let rv = _mm_loadu_si128(right.as_ptr().add(o).cast());
+        let gt = _mm_cmpgt_epi32(v, t);
+        // SSE2 has no blendv: (gt & right) | (!gt & left).
+        let sel = _mm_or_si128(_mm_and_si128(gt, rv), _mm_andnot_si128(gt, lv));
+        _mm_storeu_si128(idx.as_mut_ptr().add(o).cast(), sel);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synth(i: usize, salt: u32) -> f32 {
+        let h = (i as u32).wrapping_mul(2654435761).wrapping_add(salt).wrapping_mul(40503);
+        ((h >> 16) as f32 / 65536.0) - 0.5
+    }
+
+    /// Dispatched kernel vs the scalar twin, bit for bit, across sizes
+    /// that cover the vector body and the scalar tail — including NaN,
+    /// ±∞, and threshold-equal sums.
+    #[test]
+    fn accumulate_matches_scalar_bitwise() {
+        for m in [0usize, 1, 3, 4, 7, 8, 9, 16, 31, 97] {
+            let mut g1: Vec<f32> = (0..m).map(|i| synth(i, 1)).collect();
+            let mut s: Vec<f32> = (0..m).map(|i| synth(i, 2)).collect();
+            // Adversarial values in fixed slots.
+            if m > 4 {
+                g1[0] = f32::NAN;
+                g1[1] = f32::INFINITY;
+                s[2] = f32::NEG_INFINITY;
+                g1[3] = 0.25;
+                s[3] = 0.0; // sum exactly equal to ep below: > is false ⇒ keep
+                s[4] = f32::NAN;
+            }
+            let mut g2 = g1.clone();
+            let mut k1 = vec![9u8; m];
+            let mut k2 = vec![7u8; m];
+            accumulate_keep_mask(&mut g1, &s, &mut k1, 0.25, -0.25);
+            accumulate_keep_mask_scalar(&mut g2, &s, &mut k2, 0.25, -0.25);
+            for j in 0..m {
+                assert_eq!(g1[j].to_bits(), g2[j].to_bits(), "m={m} j={j}: g bits");
+                assert_eq!(k1[j], k2[j], "m={m} j={j}: keep");
+            }
+        }
+    }
+
+    /// NaN sums keep the example active on every tier, and an exactly
+    /// threshold-equal sum does not exit (strict compares).
+    #[test]
+    fn keep_mask_contract_nan_and_edges() {
+        let mut g = [f32::NAN, 1.0, -1.0, 0.5, -0.5, 0.0, 2.0, -2.0];
+        let s = [0.0f32; 8];
+        let mut keep = [0u8; 8];
+        accumulate_keep_mask(&mut g, &s, &mut keep, 0.5, -0.5);
+        // NaN keeps; ±1 exit; ±0.5 are == thresholds ⇒ keep; 0 keeps;
+        // ±2 exit.
+        assert_eq!(keep, [1, 0, 0, 1, 1, 1, 0, 0]);
+    }
+
+    #[test]
+    fn select16_matches_scalar_on_sentinels_and_edges() {
+        // qv covers: below, equal, above, NaN sentinel, max finite bin.
+        let qv: [u32; 16] = [
+            0, 5, 6, 65535, 65534, 1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11,
+        ];
+        let qt: [u32; 16] = [5; 16];
+        let left: [u32; 16] = core::array::from_fn(|i| 100 + i as u32);
+        let right: [u32; 16] = core::array::from_fn(|i| 200 + i as u32);
+        let mut got = [0u32; 16];
+        let mut want = [0u32; 16];
+        select16(&qv, &qt, &left, &right, &mut got);
+        select16_scalar(&qv, &qt, &left, &right, &mut want);
+        assert_eq!(got, want);
+        // Spot-check the contract itself: <= goes left.
+        assert_eq!(want[0], 100); // 0 <= 5
+        assert_eq!(want[1], 101); // 5 <= 5
+        assert_eq!(want[2], 202); // 6 > 5
+        assert_eq!(want[3], 203); // NaN sentinel routes right
+    }
+
+    #[test]
+    fn tier_is_cached_and_named() {
+        let t1 = tier();
+        let t2 = tier();
+        assert_eq!(t1, t2);
+        assert!(["avx2", "sse2", "scalar"].contains(&t1.name()));
+    }
+}

@@ -1,0 +1,247 @@
+//! The feature-quantized sweep kernel against the raw f32 path: the
+//! two must be **bitwise identical** — same exit positions, same score
+//! bits — on adversarial inputs (feature values exactly equal to split
+//! thresholds, NaN, ±∞, subnormals, both zeros) at 1 and 4 threads,
+//! through every serving entry point (pooled sweep, the engine's
+//! allocation-free `classify_into`, `eval_single`). Also covers the
+//! runtime-dispatched SIMD kernels against their scalar twins and the
+//! binary artifact's quantization sections (round-trip + corruption).
+
+use qwyc::data::synth::{generate, Which};
+use qwyc::gbt::{train, GbtParams};
+use qwyc::plan::{CompiledPlan, PlanArtifact, PlanFormat, QwycPlan};
+use qwyc::qwyc::sweep::SweepOutcome;
+use qwyc::qwyc::{optimize_order, QwycConfig};
+use qwyc::runtime::engine::{Engine, NativeEngine, ENGINE_BLOCK};
+use qwyc::util::pool::Pool;
+use qwyc::util::simd;
+use std::path::PathBuf;
+
+/// A small but real GBT plan — trees are what quantization rewrites.
+fn gbt_plan() -> QwycPlan {
+    let (tr, _) = generate(Which::AdultLike, 77, 0.02);
+    let (ens, _) = train(&tr, &GbtParams { n_trees: 10, max_depth: 3, ..Default::default() });
+    let sm = ens.score_matrix(&tr);
+    let fc = optimize_order(&sm, &QwycConfig { alpha: 0.01, ..Default::default() });
+    QwycPlan::bundle_with_width(ens, fc, "quant-equiv", 0.01, tr.d).expect("bundle plan")
+}
+
+/// Rows engineered against the plan's own edge tables: every feature
+/// cycles through values *exactly equal* to its split thresholds (the
+/// `x <= t` boundary the bin mapping must preserve), between-edge
+/// midpoints, ±∞, NaN, subnormals, and both zeros.
+fn adversarial_rows(cp: &CompiledPlan, n: usize) -> Vec<f32> {
+    let q = cp.quant().expect("tree plan should quantize");
+    let d = cp.n_features();
+    let specials = [
+        f32::NAN,
+        f32::INFINITY,
+        f32::NEG_INFINITY,
+        f32::from_bits(1), // smallest positive subnormal
+        f32::MIN_POSITIVE / 2.0,
+        -0.0,
+        0.0,
+        1.0e30,
+        -1.0e30,
+    ];
+    let mut x = vec![0f32; n * d];
+    for i in 0..n {
+        for f in 0..d {
+            let edges = q.edges(f);
+            let pick = i.wrapping_mul(31).wrapping_add(f * 7);
+            x[i * d + f] = if !edges.is_empty() && pick % 3 == 0 {
+                // Exactly a threshold: the hardest case for any binning.
+                edges[pick / 3 % edges.len()]
+            } else if !edges.is_empty() && pick % 3 == 1 {
+                // Just above an edge (midpoint to the next, or +1).
+                let k = pick / 3 % edges.len();
+                let e = edges[k];
+                edges.get(k + 1).map_or(e + 1.0, |&hi| e + (hi - e) / 2.0)
+            } else {
+                specials[pick % specials.len()]
+            };
+        }
+    }
+    x
+}
+
+fn assert_outcomes_bitwise(a: &[SweepOutcome], b: &[SweepOutcome], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (oa, ob)) in a.iter().zip(b.iter()).enumerate() {
+        assert_eq!(oa.positive, ob.positive, "{what}: example {i}: positive");
+        assert_eq!(oa.stop, ob.stop, "{what}: example {i}: stop position");
+        assert_eq!(oa.early, ob.early, "{what}: example {i}: early flag");
+        assert_eq!(
+            oa.score.to_bits(),
+            ob.score.to_bits(),
+            "{what}: example {i}: score bits diverge ({} vs {})",
+            oa.score,
+            ob.score
+        );
+    }
+}
+
+/// The tentpole contract: quantized sweep ≡ raw f32 sweep, bit for bit,
+/// on adversarial inputs, at 1 and 4 threads.
+#[test]
+fn quantized_sweep_matches_raw_sweep_bitwise() {
+    let cp = gbt_plan().compile().expect("compile");
+    assert!(cp.quant().is_some(), "GBT plan must quantize");
+    let d = cp.n_features();
+    let n = 403; // odd, spans many blocks and a ragged 16-lane tail
+    let x = adversarial_rows(&cp, n);
+    for threads in [1, 4] {
+        let pool = Pool::new(threads);
+        let quantized = cp.sweep_features(&x, n, d, 64, &pool);
+        let raw = cp.sweep_features_raw(&x, n, d, 64, &pool);
+        assert_outcomes_bitwise(&quantized, &raw, &format!("{threads} threads"));
+    }
+    // eval_single (the raw reference walk) agrees with both.
+    let pool = Pool::new(1);
+    let quantized = cp.sweep_features(&x, n, d, 1, &pool);
+    for (i, o) in quantized.iter().enumerate().take(64) {
+        let r = cp.eval_single(&x[i * d..(i + 1) * d]);
+        assert_eq!(o.score.to_bits(), r.score.to_bits(), "eval_single {i}");
+        assert_eq!(o.stop as usize, r.models_evaluated, "eval_single {i}");
+    }
+}
+
+/// NaN features must not change the exit behaviour: a NaN-laden row
+/// takes the same path (NaN routes right in both walks, and the keep
+/// mask's ordered compares keep NaN scores active) in both kernels.
+#[test]
+fn nan_rows_quantize_to_the_same_path() {
+    let cp = gbt_plan().compile().expect("compile");
+    let d = cp.n_features();
+    // Rows 0..d: one NaN feature each; last row all NaN.
+    let n = d + 1;
+    let mut x = vec![0.25f32; n * d];
+    for i in 0..d {
+        x[i * d + i] = f32::NAN;
+    }
+    for v in x[d * d..].iter_mut() {
+        *v = f32::NAN;
+    }
+    let pool = Pool::new(1);
+    let quantized = cp.sweep_features(&x, n, d, 64, &pool);
+    let raw = cp.sweep_features_raw(&x, n, d, 64, &pool);
+    assert_outcomes_bitwise(&quantized, &raw, "nan rows");
+}
+
+/// The engine's allocation-free path (`classify_into`, which quantizes
+/// the block once into its recycled `qx`) agrees bitwise with the raw
+/// pooled sweep.
+#[test]
+fn engine_classify_into_matches_raw_sweep_bitwise() {
+    let plan = gbt_plan();
+    let cp = plan.clone().compile().expect("compile");
+    let d = cp.n_features();
+    let n = ENGINE_BLOCK.min(197);
+    let x = adversarial_rows(&cp, n);
+    for threads in [1, 4] {
+        let mut engine =
+            NativeEngine::from_plan_with_pool(plan.clone().compile().unwrap(), Pool::new(threads));
+        let mut out = Vec::new();
+        engine.classify_into(&x, n, &mut out).expect("classify_into");
+        let raw = cp.sweep_features_raw(&x, n, d, ENGINE_BLOCK, &Pool::new(threads));
+        assert_eq!(out.len(), raw.len());
+        for (i, (o, r)) in out.iter().zip(raw.iter()).enumerate() {
+            assert_eq!(o.positive, r.positive, "example {i} ({threads} threads)");
+            assert_eq!(o.models_evaluated, r.stop, "example {i} ({threads} threads)");
+            assert_eq!(o.early, r.early, "example {i} ({threads} threads)");
+            assert_eq!(
+                o.score.to_bits(),
+                r.score.to_bits(),
+                "example {i} ({threads} threads): score bits"
+            );
+        }
+    }
+}
+
+/// The runtime-dispatched SIMD kernels against their scalar twins on
+/// the same adversarial values, in-process (CI additionally re-runs the
+/// whole suite with `QWYC_FORCE_SCALAR=1`, exercising the scalar tier
+/// through the dispatcher itself).
+#[test]
+fn dispatched_simd_kernels_match_scalar_twins() {
+    // accumulate + keep mask over every length with a ragged tail.
+    let specials = [f32::NAN, f32::INFINITY, f32::NEG_INFINITY, 0.5, -0.5, 0.0, -0.0, 1.0e-40];
+    for m in [1usize, 3, 7, 8, 15, 16, 31, 97] {
+        let scores: Vec<f32> = (0..m).map(|i| specials[i % specials.len()]).collect();
+        let (ep, en) = (0.5f32, -0.5f32);
+        let mut g_simd: Vec<f32> = (0..m).map(|i| (i as f32) * 0.125 - 2.0).collect();
+        let mut g_scalar = g_simd.clone();
+        let mut keep_simd = vec![0u8; m];
+        let mut keep_scalar = vec![0u8; m];
+        simd::accumulate_keep_mask(&mut g_simd, &scores, &mut keep_simd, ep, en);
+        simd::accumulate_keep_mask_scalar(&mut g_scalar, &scores, &mut keep_scalar, ep, en);
+        assert_eq!(keep_simd, keep_scalar, "m={m}");
+        for (i, (a, b)) in g_simd.iter().zip(g_scalar.iter()).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "m={m} lane {i}");
+        }
+    }
+    // 16-lane select on sentinel and threshold-equal bins.
+    let qv: [u32; 16] =
+        [0, 1, 2, 3, 65533, 65534, 65535, 7, 8, 9, 10, 11, 65535, 13, 0, 65534];
+    let qt: [u32; 16] = [0, 0, 2, 4, 65533, 65533, 65533, 7, 7, 9, 9, 12, 0, 13, 1, 65533];
+    let left: [u32; 16] = std::array::from_fn(|i| 100 + i as u32);
+    let right: [u32; 16] = std::array::from_fn(|i| 200 + i as u32);
+    let mut idx_simd = [0u32; 16];
+    let mut idx_scalar = [0u32; 16];
+    simd::select16(&qv, &qt, &left, &right, &mut idx_simd);
+    simd::select16_scalar(&qv, &qt, &left, &right, &mut idx_scalar);
+    assert_eq!(idx_simd, idx_scalar, "tier {:?}", simd::tier());
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("qwyc-quant-equiv-{}-{name}", std::process::id()))
+}
+
+/// The binary artifact's quantization sections: preserved through a
+/// round-trip (rebuilt tables bitwise-equal), and any corruption of the
+/// stored sections is rejected by the decode-time verification with a
+/// schema error naming the section.
+#[test]
+fn binary_artifact_preserves_and_verifies_quantization() {
+    let cp = gbt_plan().compile().expect("compile");
+    let dir = tmp("roundtrip");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join("plan.bin");
+    PlanArtifact::from_plan(gbt_plan()).unwrap().save(&p, PlanFormat::Binary).unwrap();
+
+    let loaded = PlanArtifact::load(&p).expect("load bin");
+    let (qa, qb) = (cp.quant().unwrap(), loaded.compiled().quant().expect("still quantized"));
+    assert_eq!(qa.n_features(), qb.n_features());
+    for f in 0..qa.n_features() {
+        let (ea, eb) = (qa.edges(f), qb.edges(f));
+        assert_eq!(ea.len(), eb.len(), "feature {f}");
+        for (a, b) in ea.iter().zip(eb.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "feature {f} edge bits");
+        }
+    }
+
+    // plan-info sees the edge tables without compiling.
+    let info = PlanArtifact::info(&p).expect("info").render("plan.bin");
+    assert!(info.contains("quantization: "), "{info}");
+    assert!(info.contains("bin_edges"), "{info}");
+    assert!(info.contains("quant_nodes"), "{info}");
+    assert!(!info.contains("quantization: none"), "{info}");
+
+    // Corrupt one byte inside each quantization section payload: the
+    // decoder's rebuild-and-compare must name the section.
+    let good = std::fs::read(&p).unwrap();
+    for (k, name) in [(8usize, "bin_edges"), (9usize, "quant_nodes")] {
+        let entry = 64 + 24 * k;
+        let off = u64::from_ne_bytes(good[entry + 8..entry + 16].try_into().unwrap()) as usize;
+        let len = u64::from_ne_bytes(good[entry + 16..entry + 24].try_into().unwrap()) as usize;
+        assert!(len > 0, "{name} must be populated for a quantized plan");
+        let mut bad = good.clone();
+        bad[off + len / 2] ^= 0x40;
+        let bp = dir.join(format!("bad-{name}.bin"));
+        std::fs::write(&bp, &bad).unwrap();
+        let e = PlanArtifact::load(&bp).expect_err("corrupted quant section must not load");
+        assert_eq!(e.stage(), "schema", "{e}");
+        assert!(e.message().contains(name), "expected '{name}' in: {e}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -9,7 +9,9 @@
 //! more than the threshold against the most recent earlier measured
 //! snapshot of the same target. Placeholder entries with `runs == 0`
 //! (snapshots authored where no measurement was possible) are skipped,
-//! so an all-placeholder trajectory passes vacuously.
+//! so an all-placeholder trajectory passes vacuously. Every run also
+//! prints a per-target delta table — the newest measured step of each
+//! paired target — so the trajectory stays visible when the gate passes.
 //!
 //! Usage: `bench_trend [--dir <repo-root>] [--threshold <pct>]`
 //! (defaults: the workspace root, 20%).
@@ -85,10 +87,9 @@ fn bench_files(dir: &Path) -> Vec<PathBuf> {
     files
 }
 
-/// Compare, per paired target, the newest measured snapshot against the
-/// most recent earlier measured one. `runs == 0` entries never
-/// participate on either side.
-fn find_regressions(history: &[(String, Vec<Target>)], threshold_pct: f64) -> Vec<Regression> {
+/// Every paired target name seen anywhere in the trajectory, in
+/// first-appearance order.
+fn paired_names(history: &[(String, Vec<Target>)]) -> Vec<&str> {
     let mut names: Vec<&str> = Vec::new();
     for (_, targets) in history {
         for t in targets {
@@ -97,15 +98,68 @@ fn find_regressions(history: &[(String, Vec<Target>)], threshold_pct: f64) -> Ve
             }
         }
     }
-    let mut out = Vec::new();
+    names
+}
+
+/// The measured (`runs > 0`) trajectory of one paired target, oldest
+/// first, as (snapshot label, mean_ns). Placeholder entries never
+/// participate. Shared by the regression gate and the delta table so
+/// the two views can't disagree about what was compared.
+fn measured_series<'a>(
+    history: &'a [(String, Vec<Target>)],
+    name: &str,
+) -> Vec<(&'a str, f64)> {
+    history
+        .iter()
+        .filter_map(|(label, targets)| {
+            let t = targets.iter().find(|t| t.name == name && t.paired && t.runs > 0)?;
+            Some((label.as_str(), t.mean_ns))
+        })
+        .collect()
+}
+
+/// Human-readable per-target delta view of the newest measured step —
+/// printed on every run (pass or fail) so the trajectory stays visible
+/// even when the gate is green.
+fn delta_table(history: &[(String, Vec<Target>)]) -> String {
+    use std::fmt::Write;
+    let mut out = String::new();
+    let _ = writeln!(out, "per-target trend (newest measured step):");
+    let names = paired_names(history);
+    if names.is_empty() {
+        let _ = writeln!(out, "  (no paired targets in any snapshot)");
+        return out;
+    }
     for name in names {
-        let measured: Vec<(&str, f64)> = history
-            .iter()
-            .filter_map(|(label, targets)| {
-                let t = targets.iter().find(|t| t.name == name && t.paired && t.runs > 0)?;
-                Some((label.as_str(), t.mean_ns))
-            })
-            .collect();
+        let series = measured_series(history, name);
+        match series.as_slice() {
+            [] => {
+                let _ = writeln!(out, "  {name:<52} unmeasured (placeholders only)");
+            }
+            [(label, ns)] => {
+                let _ =
+                    writeln!(out, "  {name:<52} {ns:>11.0}ns  (first measured: {label})");
+            }
+            [.., (from, from_ns), (to, to_ns)] => {
+                let pct = (to_ns / from_ns - 1.0) * 100.0;
+                let _ = writeln!(
+                    out,
+                    "  {name:<52} {from_ns:>11.0}ns -> {to_ns:>11.0}ns  \
+                     {pct:>+7.1}%  ({from} -> {to})"
+                );
+            }
+        }
+    }
+    out
+}
+
+/// Compare, per paired target, the newest measured snapshot against the
+/// most recent earlier measured one. `runs == 0` entries never
+/// participate on either side.
+fn find_regressions(history: &[(String, Vec<Target>)], threshold_pct: f64) -> Vec<Regression> {
+    let mut out = Vec::new();
+    for name in paired_names(history) {
+        let measured = measured_series(history, name);
         if measured.len() < 2 {
             continue;
         }
@@ -172,6 +226,8 @@ fn main() -> ExitCode {
             }
         }
     }
+
+    print!("{}", delta_table(&history));
 
     let regressions = find_regressions(&history, threshold);
     if regressions.is_empty() {
@@ -264,6 +320,39 @@ mod tests {
         // A single measured snapshot has no baseline to regress from.
         let solo = vec![("BENCH_9.json".to_string(), vec![target("k", 9e9, 5, true)])];
         assert!(find_regressions(&solo, 20.0).is_empty());
+    }
+
+    #[test]
+    fn delta_table_reports_every_paired_target() {
+        let history = vec![
+            (
+                "BENCH_1.json".to_string(),
+                vec![target("k", 100.0, 5, true), target("solo", 40.0, 5, true)],
+            ),
+            // k regresses; "fresh" appears only as a placeholder.
+            (
+                "BENCH_2.json".to_string(),
+                vec![target("k", 150.0, 5, true), target("fresh", 0.0, 0, true)],
+            ),
+        ];
+        let table = delta_table(&history);
+        assert!(table.starts_with("per-target trend"), "{table}");
+        // Newest measured step with labels and signed percent.
+        assert!(table.contains("100ns ->"), "{table}");
+        assert!(table.contains("150ns"), "{table}");
+        assert!(table.contains("+50.0%"), "{table}");
+        assert!(table.contains("(BENCH_1.json -> BENCH_2.json)"), "{table}");
+        // Single measurement and placeholder-only rows are labeled, not
+        // silently dropped.
+        assert!(table.contains("first measured: BENCH_1.json"), "{table}");
+        assert!(table.contains("unmeasured (placeholders only)"), "{table}");
+        // The table and the gate agree on what was compared.
+        let r = find_regressions(&history, 20.0);
+        assert_eq!(r.len(), 1);
+        assert_eq!(r[0].name, "k");
+        // No paired targets at all is stated explicitly.
+        let none = vec![("BENCH_1.json".to_string(), vec![target("u", 9.0, 5, false)])];
+        assert!(delta_table(&none).contains("no paired targets"), "{}", delta_table(&none));
     }
 
     #[test]
