@@ -23,6 +23,9 @@
 //!   - response_cache: cold classify (miss path) vs seeded-hash lookup
 //!   - serve policy: fixed vs adaptive batch flush at low/high load,
 //!     end-to-end through the TCP coordinator
+//!   - http_vs_line: the HTTP/1.1 front-end vs the line protocol over
+//!     the SAME 2-shard server (attach_http) — the pair is the wire
+//!     tax of head parsing + JSON rendering
 //!   - PJRT stage execution (per-batch and per-example amortized)
 //!
 //! Every target lands in `BENCH.json` (schema `qwyc-bench-v1`, see
@@ -622,6 +625,127 @@ fn main() {
         }
     }
 
+    // ---- HTTP front-end vs line protocol on one shard set ------------
+    // Both listeners attached to the SAME 2-shard server (attach_http),
+    // driven with identical windowed closed loops, so the pair is
+    // purely the wire tax: request-line + header parse + JSON render
+    // on the HTTP side vs the line codec. p50/p99 are the
+    // server-reported per-request latencies either way.
+    {
+        use qwyc::coordinator::{BatchPolicy, Client, Server, ServerConfig};
+        use qwyc::http::HttpClient;
+        let conns = 4usize;
+        let per_conn = if quick { 150 } else { 2_000 };
+        let window = 16usize;
+        let total = conns * per_conn;
+        let config = ServerConfig {
+            shards: 2,
+            queue_cap: 0, // unbounded: measure the codecs, not shedding
+            policy: BatchPolicy::fixed(64, Duration::from_micros(200)),
+            default_deadline: None,
+            cache_bytes: 0,
+        };
+        let mut server =
+            Server::start_with_plan("127.0.0.1:0", compiled.clone(), config).expect("bench server");
+        let http_addr = server.attach_http("127.0.0.1:0").expect("attach http");
+        let addr = server.addr;
+
+        let sw = qwyc::util::timer::Stopwatch::new();
+        let mut line_lat: Vec<f64> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..conns)
+                .map(|c| {
+                    let tr = &tr;
+                    s.spawn(move || {
+                        let mut client = Client::connect(&addr).expect("connect");
+                        let (mut sent, mut recv) = (0usize, 0usize);
+                        let mut lat = Vec::with_capacity(per_conn);
+                        while recv < per_conn {
+                            while sent < per_conn && sent - recv < window {
+                                let row = tr.row((c * per_conn + sent) % tr.n);
+                                client.send_eval(row).expect("send");
+                                sent += 1;
+                            }
+                            let resp = client.read_response().expect("read");
+                            lat.push(resp.latency_us as f64 * 1e3);
+                            recv += 1;
+                        }
+                        lat
+                    })
+                })
+                .collect();
+            handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+        });
+        let line_el = sw.elapsed_s();
+
+        let sw = qwyc::util::timer::Stopwatch::new();
+        let mut http_lat: Vec<f64> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..conns)
+                .map(|c| {
+                    let tr = &tr;
+                    s.spawn(move || {
+                        use std::fmt::Write as _;
+                        let mut client = HttpClient::connect(&http_addr).expect("connect");
+                        let mut body = String::new();
+                        let (mut sent, mut recv) = (0usize, 0usize);
+                        let mut lat = Vec::with_capacity(per_conn);
+                        while recv < per_conn {
+                            while sent < per_conn && sent - recv < window {
+                                let row = tr.row((c * per_conn + sent) % tr.n);
+                                body.clear();
+                                body.push('[');
+                                for (j, v) in row.iter().enumerate() {
+                                    if j > 0 {
+                                        body.push(',');
+                                    }
+                                    let _ = write!(body, "{v}");
+                                }
+                                body.push(']');
+                                client
+                                    .send("POST", "/v1/score", &[], body.as_bytes())
+                                    .expect("send");
+                                sent += 1;
+                            }
+                            let resp = client.read_response().expect("read");
+                            assert_eq!(resp.status, 200, "score reply: {}", resp.body);
+                            lat.push(latency_us_from_body(&resp.body) * 1e3);
+                            recv += 1;
+                        }
+                        lat
+                    })
+                })
+                .collect();
+            handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+        });
+        let http_el = sw.elapsed_s();
+        server.stop();
+
+        line_lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        http_lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mk = |name: &str, el: f64, lat: &[f64]| qwyc::util::timer::BenchResult {
+            name: name.to_string(),
+            mean_ns: el * 1e9 / total as f64,
+            std_ns: 0.0,
+            p50_ns: qwyc::util::stats::percentile_sorted(lat, 50.0),
+            p99_ns: qwyc::util::stats::percentile_sorted(lat, 99.0),
+            runs: 1,
+            iters_per_run: total as u64,
+        };
+        let rl = mk(
+            &format!("http_vs_line line EVAL (reqs={total}, conns={conns})"),
+            line_el,
+            &line_lat,
+        );
+        let rh = mk(
+            &format!("http_vs_line http POST /v1/score (reqs={total}, conns={conns})"),
+            http_el,
+            &http_lat,
+        );
+        println!("{}", rl.report());
+        println!("{}", rh.report());
+        println!("  -> http/line mean ratio: {:.3}x\n", rh.mean_ns / rl.mean_ns);
+        report.push_pair(&rl, &rh);
+    }
+
     // ---- PJRT stage (needs --features pjrt and artifacts) ------------
     #[cfg(feature = "pjrt")]
     if std::path::Path::new("artifacts/manifest.json").exists() {
@@ -726,6 +850,14 @@ fn serve_e2e(
         runs: 1,
         iters_per_run: total as u64,
     }
+}
+
+/// Pull the server-reported `latency_us` out of a `/v1/score` JSON
+/// reply without a full parse (the bench loop is the hot path).
+fn latency_us_from_body(body: &str) -> f64 {
+    body.rsplit_once("\"latency_us\":")
+        .and_then(|(_, tail)| tail.trim_end().trim_end_matches('}').parse::<f64>().ok())
+        .unwrap_or(0.0)
 }
 
 /// The per-example branchy sweep `qwyc::sweep` used before the

@@ -10,6 +10,7 @@
 //! dispatcher balanced load.
 
 use super::batcher::FlushReason;
+use crate::util::json::Json;
 use crate::util::stats::LatencyHist;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -419,29 +420,100 @@ impl Snapshot {
         out
     }
 
+    /// Structured rendering of the full snapshot — the single
+    /// formatting authority for serving metrics. Both human surfaces
+    /// derive from this document: the line protocol's `STATS` text
+    /// ([`Snapshot::report`] formats these values) and the HTTP admin
+    /// plane's `GET /stats` (serves it verbatim as JSON), so the two
+    /// cannot drift. u64 counters fit `f64` exactly up to 2^53 —
+    /// unreachable for per-process request counts.
+    pub fn to_json(&self) -> Json {
+        let o = &self.ops;
+        let arr_u64 = |xs: &[u64]| Json::Arr(xs.iter().map(|&v| Json::Num(v as f64)).collect());
+        Json::obj(vec![
+            ("requests", Json::Num(self.requests as f64)),
+            ("throughput_rps", Json::Num(self.throughput_rps)),
+            (
+                "latency_us",
+                Json::obj(vec![
+                    ("mean", Json::Num(self.mean_latency_us)),
+                    ("p50", Json::Num(self.p50_latency_us)),
+                    ("p99", Json::Num(self.p99_latency_us)),
+                ]),
+            ),
+            ("mean_models", Json::Num(self.mean_models)),
+            ("early_frac", Json::Num(self.early_frac)),
+            (
+                "exit_pos",
+                Json::obj(vec![
+                    ("p50", Json::Num(self.stop_percentile(50.0) as f64)),
+                    ("p99", Json::Num(self.stop_percentile(99.0) as f64)),
+                ]),
+            ),
+            ("exit_hist", arr_u64(&self.stop_histogram(STOP_REPORT_BINS))),
+            ("mean_batch", Json::Num(self.mean_batch)),
+            (
+                "flush",
+                Json::obj(vec![
+                    ("idle", Json::Num(self.flush_idle as f64)),
+                    ("full", Json::Num(self.flush_full as f64)),
+                    ("deadline", Json::Num(self.flush_deadline as f64)),
+                ]),
+            ),
+            (
+                "policy",
+                if self.policy.is_empty() { Json::Null } else { Json::str(&self.policy) },
+            ),
+            (
+                "cache",
+                Json::obj(vec![
+                    ("hits", Json::Num(o.cache_hits as f64)),
+                    ("misses", Json::Num(o.cache_misses as f64)),
+                    ("evictions", Json::Num(o.cache_evictions as f64)),
+                ]),
+            ),
+            ("busy_shed", Json::Num(o.busy_shed as f64)),
+            ("timeouts", Json::Num(o.timeouts as f64)),
+            ("shard_restarts", Json::Num(o.shard_restarts as f64)),
+            ("reload_ok", Json::Num(o.reload_ok as f64)),
+            ("reload_rejected", Json::Num(o.reload_rejected as f64)),
+            ("shard_requests", arr_u64(&self.shard_requests)),
+            ("stop_counts", arr_u64(&self.stop_counts)),
+        ])
+    }
+
+    /// The `STATS` line, formatted from [`Snapshot::to_json`] so the
+    /// text report and the JSON document read the same values by
+    /// construction. The wire shape is pinned by tests and grepped by
+    /// CI — it must not change. Field lookups `expect`: `to_json`
+    /// constructs every field this reads.
     pub fn report(&self) -> String {
-        let hist = self
-            .stop_histogram(STOP_REPORT_BINS)
-            .iter()
-            .map(|c| c.to_string())
-            .collect::<Vec<_>>()
-            .join(",");
-        let shards = if self.shard_requests.len() > 1 {
-            let per = self
-                .shard_requests
+        let j = self.to_json();
+        let num = |v: &Json, k: &str| v.req(k).and_then(Json::as_f64).expect("to_json field");
+        let int = |v: &Json, k: &str| num(v, k) as u64;
+        let list = |v: &Json, k: &str| -> Vec<u64> {
+            v.req(k)
+                .and_then(Json::as_arr)
+                .expect("to_json field")
                 .iter()
-                .map(|c| c.to_string())
-                .collect::<Vec<_>>()
-                .join(",");
-            format!(" shard_requests=[{per}]")
+                .map(|e| e.as_f64().expect("to_json element") as u64)
+                .collect()
+        };
+        let join = |xs: &[u64]| xs.iter().map(|c| c.to_string()).collect::<Vec<_>>().join(",");
+        let lat = j.req("latency_us").expect("to_json field");
+        let exit = j.req("exit_pos").expect("to_json field");
+        let flush = j.req("flush").expect("to_json field");
+        let cache = j.req("cache").expect("to_json field");
+        let hist = join(&list(&j, "exit_hist"));
+        let shard_requests = list(&j, "shard_requests");
+        let shards = if shard_requests.len() > 1 {
+            format!(" shard_requests=[{}]", join(&shard_requests))
         } else {
             String::new()
         };
-        let o = &self.ops;
-        let policy = if self.policy.is_empty() {
-            String::new()
-        } else {
-            format!(" policy={}", self.policy)
+        let policy = match j.req("policy").expect("to_json field") {
+            Json::Null => String::new(),
+            p => format!(" policy={}", p.as_str().expect("to_json field")),
         };
         format!(
             "requests={} throughput={:.0}/s latency(mean/p50/p99)={:.1}/{:.1}/{:.1}us \
@@ -449,27 +521,27 @@ impl Snapshot {
              mean_batch={:.1} flush(idle/full/deadline)={}/{}/{}{policy} \
              cache(hit/miss/evict)={}/{}/{} busy_shed={} timeouts={} shard_restarts={} \
              reload_ok={} reload_rejected={}{shards}",
-            self.requests,
-            self.throughput_rps,
-            self.mean_latency_us,
-            self.p50_latency_us,
-            self.p99_latency_us,
-            self.mean_models,
-            self.early_frac * 100.0,
-            self.stop_percentile(50.0),
-            self.stop_percentile(99.0),
-            self.mean_batch,
-            self.flush_idle,
-            self.flush_full,
-            self.flush_deadline,
-            o.cache_hits,
-            o.cache_misses,
-            o.cache_evictions,
-            o.busy_shed,
-            o.timeouts,
-            o.shard_restarts,
-            o.reload_ok,
-            o.reload_rejected
+            int(&j, "requests"),
+            num(&j, "throughput_rps"),
+            num(lat, "mean"),
+            num(lat, "p50"),
+            num(lat, "p99"),
+            num(&j, "mean_models"),
+            num(&j, "early_frac") * 100.0,
+            int(exit, "p50"),
+            int(exit, "p99"),
+            num(&j, "mean_batch"),
+            int(flush, "idle"),
+            int(flush, "full"),
+            int(flush, "deadline"),
+            int(cache, "hits"),
+            int(cache, "misses"),
+            int(cache, "evictions"),
+            int(&j, "busy_shed"),
+            int(&j, "timeouts"),
+            int(&j, "shard_restarts"),
+            int(&j, "reload_ok"),
+            int(&j, "reload_rejected")
         )
     }
 }
@@ -637,6 +709,35 @@ mod tests {
         // The cached report always matches a fresh snapshot's fields.
         assert!(third.contains("requests=2"), "{third}");
         assert!(third.contains(" policy=fixed"), "{third}");
+    }
+
+    #[test]
+    fn report_and_json_read_the_same_values() {
+        let sm = ShardedMetrics::new(2);
+        sm.set_policy_label("adaptive");
+        sm.shard(0).record_request(1_000, 2, true);
+        sm.shard(1).record_request(2_000, 5, false);
+        sm.ops().cache_hits.fetch_add(3, Ordering::Relaxed);
+        let s = sm.snapshot();
+        let j = s.to_json();
+        assert_eq!(j.req("requests").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(j.req("policy").unwrap().as_str().unwrap(), "adaptive");
+        assert_eq!(j.req("cache").unwrap().req("hits").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(j.req("shard_requests").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(j.req("exit_pos").unwrap().req("p99").unwrap().as_usize().unwrap(), 5);
+        // The document round-trips through the crate's parser — it is
+        // exactly what the HTTP admin plane serves from GET /stats.
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.req("requests").unwrap().as_usize().unwrap(), 2);
+        // A snapshot with no policy renders JSON null and drops the
+        // `policy=` token from the text form.
+        let bare = sm.shard_snapshots()[0].to_json();
+        assert!(matches!(bare.req("policy").unwrap(), Json::Null));
+        // The text report is formatted from the same document.
+        let rep = s.report();
+        assert!(rep.contains("requests=2"), "{rep}");
+        assert!(rep.contains(" policy=adaptive"), "{rep}");
+        assert!(rep.contains("cache(hit/miss/evict)=3/0/0"), "{rep}");
     }
 
     #[test]

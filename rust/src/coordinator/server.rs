@@ -73,9 +73,10 @@ use super::batcher::{
 use super::cache::ResponseCache;
 use super::metrics::{Metrics, OpsCounters, ShardedMetrics};
 use crate::error::QwycError;
-use crate::plan::{CompiledPlan, PlanArtifact, PlanSlot, ProbeSet, DEFAULT_PROBES};
+use crate::plan::{CompiledPlan, PlanArtifact, PlanMeta, PlanSlot, ProbeSet, DEFAULT_PROBES};
 use crate::runtime::engine::{Engine, NativeEngine, Outcome};
 use crate::util::failpoints;
+use crate::util::lineio::{read_line_capped, LineRead};
 use crate::util::pool::{threads_from_env, Pool};
 use std::fmt::Write as _;
 use std::io::{BufRead, BufReader, Write};
@@ -103,9 +104,9 @@ const BACKOFF_CAP_MS: u64 = 1_000;
 /// reproduces from the reply alone.
 const CANARY_SEED: u64 = 0xca9a41;
 
-/// Upper bound on how long a `DRAIN` command waits for the shard
-/// backlogs to empty before reporting failure.
-const DRAIN_TIMEOUT: Duration = Duration::from_secs(10);
+/// Upper bound on how long a `DRAIN` command (either protocol) waits
+/// for the shard backlogs to empty before reporting failure.
+pub(crate) const DRAIN_TIMEOUT: Duration = Duration::from_secs(10);
 
 /// Seed for each shard's response-cache hash; xor'd with the shard
 /// index so shards don't share collision patterns.
@@ -120,25 +121,27 @@ const BUF_POOL_CAP: usize = 256;
 /// reply strings travel shard worker → pump thread → back. After warmup
 /// every buffer on a steady-state EVAL round trip comes from here
 /// instead of the allocator (rust/tests/alloc_free.rs pins the
-/// component functions).
-struct BufPool {
+/// component functions). The HTTP front-end (`crate::http`) keeps one
+/// per connection too, so its warmed data path recycles through the
+/// same mechanism.
+pub(crate) struct BufPool {
     strings: std::sync::Mutex<Vec<String>>,
     feats: std::sync::Mutex<Vec<Vec<f32>>>,
 }
 
 impl BufPool {
-    fn new() -> BufPool {
+    pub(crate) fn new() -> BufPool {
         BufPool {
             strings: std::sync::Mutex::new(Vec::new()),
             feats: std::sync::Mutex::new(Vec::new()),
         }
     }
 
-    fn get_string(&self) -> String {
+    pub(crate) fn get_string(&self) -> String {
         self.strings.lock().unwrap().pop().unwrap_or_default()
     }
 
-    fn put_string(&self, mut s: String) {
+    pub(crate) fn put_string(&self, mut s: String) {
         s.clear();
         let mut pool = self.strings.lock().unwrap();
         if pool.len() < BUF_POOL_CAP {
@@ -146,11 +149,11 @@ impl BufPool {
         }
     }
 
-    fn get_feats(&self) -> Vec<f32> {
+    pub(crate) fn get_feats(&self) -> Vec<f32> {
         self.feats.lock().unwrap().pop().unwrap_or_default()
     }
 
-    fn put_feats(&self, mut v: Vec<f32>) {
+    pub(crate) fn put_feats(&self, mut v: Vec<f32>) {
         v.clear();
         let mut pool = self.feats.lock().unwrap();
         if pool.len() < BUF_POOL_CAP {
@@ -159,21 +162,23 @@ impl BufPool {
     }
 }
 
-/// One in-flight request.
-struct Request {
-    id: u64,
-    features: Vec<f32>,
-    enqueued: Instant,
+/// One in-flight request. Both front-ends (line protocol and HTTP)
+/// build these; the shard workers never know which surface a request
+/// came from.
+pub(crate) struct Request {
+    pub(crate) id: u64,
+    pub(crate) features: Vec<f32>,
+    pub(crate) enqueued: Instant,
     /// Shed with `TIMEOUT` if still queued past this instant.
-    deadline: Option<Instant>,
-    respond: Sender<String>,
+    pub(crate) deadline: Option<Instant>,
+    pub(crate) respond: Sender<String>,
     /// The owning connection's buffer pool; `features` and every reply
     /// `String` cycle back through it instead of being reallocated.
-    pool: Arc<BufPool>,
+    pub(crate) pool: Arc<BufPool>,
 }
 
 /// Return a finished request's feature buffer to its connection's pool.
-fn recycle(r: Request) {
+pub(crate) fn recycle(r: Request) {
     let Request { features, pool, .. } = r;
     pool.put_feats(features);
 }
@@ -226,20 +231,22 @@ impl From<BatchPolicy> for ServerConfig {
 
 /// Routes each request to the least-queued shard; a full shard queue
 /// surfaces as BUSY instead of blocking the connection thread, and a
-/// draining server refuses admission outright.
-struct Dispatcher {
+/// draining server refuses admission outright. Shared verbatim by the
+/// line protocol and the HTTP front-end — one admission policy, two
+/// wire formats.
+pub(crate) struct Dispatcher {
     shards: Vec<(BatchSender<Request>, Arc<BatchQueue<Request>>)>,
     draining: AtomicBool,
 }
 
-enum RouteError {
+pub(crate) enum RouteError {
     Busy(Request),
     Draining(Request),
     Closed(Request),
 }
 
 impl Dispatcher {
-    fn route(&self, req: Request) -> Result<(), RouteError> {
+    pub(crate) fn route(&self, req: Request) -> Result<(), RouteError> {
         if self.draining.load(Ordering::Relaxed) {
             return Err(RouteError::Draining(req));
         }
@@ -266,7 +273,7 @@ impl Dispatcher {
     /// empty. Returns the number of requests still queued at timeout
     /// (0 = fully drained). In-flight batches answer through their own
     /// response channels as usual.
-    fn drain(&self, timeout: Duration) -> usize {
+    pub(crate) fn drain(&self, timeout: Duration) -> usize {
         self.draining.store(true, Ordering::SeqCst);
         let deadline = Instant::now() + timeout;
         for (_, q) in &self.shards {
@@ -278,28 +285,60 @@ impl Dispatcher {
         }
         self.shards.iter().map(|(_, q)| q.len()).sum()
     }
+
+    /// Whether admission has been stopped by a drain (either protocol's
+    /// health surface reports this).
+    pub(crate) fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::Relaxed)
+    }
+
+    /// Number of engine shards behind this dispatcher.
+    pub(crate) fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
 }
 
-/// Everything a connection thread needs, bundled so the acceptor clones
-/// one Arc per connection.
-struct ConnShared {
-    dispatch: Dispatcher,
-    metrics: Arc<ShardedMetrics>,
-    plan_slot: Option<Arc<PlanSlot>>,
-    default_deadline: Option<Duration>,
+/// Name + provenance of the plan currently in the slot, kept alongside
+/// it so `GET /plan` can re-encode and describe the LIVE generation
+/// (the slot itself only holds the compiled form). Updated atomically
+/// with every accepted reload.
+#[derive(Clone)]
+pub(crate) struct PlanIdentity {
+    pub(crate) meta: PlanMeta,
+    pub(crate) ensemble_name: String,
+}
+
+/// Everything a connection thread needs, bundled so the acceptors (line
+/// protocol and HTTP share one instance over one shard set) clone one
+/// Arc per connection.
+pub(crate) struct ConnShared {
+    pub(crate) dispatch: Dispatcher,
+    pub(crate) metrics: Arc<ShardedMetrics>,
+    pub(crate) plan_slot: Option<Arc<PlanSlot>>,
+    /// Present exactly when `plan_slot` is (native serving).
+    pub(crate) identity: Option<std::sync::Mutex<PlanIdentity>>,
+    pub(crate) default_deadline: Option<Duration>,
 }
 
 /// Server handle: address, shutdown flag, worker/acceptor joins.
 pub struct Server {
     pub addr: std::net::SocketAddr,
+    /// HTTP listener address once [`Server::attach_http`] has run.
+    pub http_addr: Option<std::net::SocketAddr>,
     /// Per-shard metrics; `metrics.snapshot()` aggregates all shards.
     pub metrics: Arc<ShardedMetrics>,
     shutdown: Arc<AtomicBool>,
     acceptor: Option<std::thread::JoinHandle<()>>,
+    http_acceptor: Option<std::thread::JoinHandle<()>>,
     workers: Vec<std::thread::JoinHandle<()>>,
     /// Live connection streams; shut down on stop so connection threads
     /// (which hold request-channel senders) exit and the workers drain.
     conns: Arc<std::sync::Mutex<Vec<TcpStream>>>,
+    /// Shared dispatch context, kept so a second front-end can be
+    /// attached after start. `stop()` drops it before joining workers —
+    /// its dispatcher senders would otherwise keep the shard queues
+    /// open forever.
+    ctx: Option<Arc<ConnShared>>,
 }
 
 impl Server {
@@ -314,7 +353,7 @@ impl Server {
         F: Fn(usize) -> Box<dyn Engine> + Send + Sync + 'static,
         C: Into<ServerConfig>,
     {
-        Server::start_inner(bind_addr, Arc::new(engine_factory), config.into(), None)
+        Server::start_inner(bind_addr, Arc::new(engine_factory), config.into(), None, None)
     }
 
     /// Native sharded serving from one shared compiled plan: every shard
@@ -322,6 +361,11 @@ impl Server {
     /// plan is immutable and `Send + Sync` by construction) plus a
     /// private worker pool splitting `QWYC_THREADS` across shards.
     /// Enables `RELOAD <path>` validated hot-swap through a [`PlanSlot`].
+    ///
+    /// The plan identity reported by `GET /plan` is synthesized (the
+    /// bare compiled form carries no provenance); serving from a loaded
+    /// artifact should prefer [`Server::start_with_artifact`], which
+    /// keeps the artifact's real name and metadata.
     pub fn start_with_plan<C>(
         bind_addr: &str,
         plan: Arc<CompiledPlan>,
@@ -330,7 +374,44 @@ impl Server {
     where
         C: Into<ServerConfig>,
     {
-        let config = config.into();
+        let identity = PlanIdentity {
+            meta: PlanMeta {
+                name: "live-plan".to_string(),
+                alpha: 0.0,
+                neg_only: false,
+                source: String::new(),
+                created_by: "qwyc-serve".to_string(),
+                n_features: plan.n_features(),
+            },
+            ensemble_name: "live".to_string(),
+        };
+        Server::start_native(bind_addr, plan, config.into(), identity)
+    }
+
+    /// Native sharded serving from a loaded [`PlanArtifact`], keeping
+    /// its metadata as the live plan identity so the admin surface
+    /// (`GET /plan`) describes what is actually deployed.
+    pub fn start_with_artifact<C>(
+        bind_addr: &str,
+        artifact: &PlanArtifact,
+        config: C,
+    ) -> std::io::Result<Server>
+    where
+        C: Into<ServerConfig>,
+    {
+        let identity = PlanIdentity {
+            meta: artifact.meta().clone(),
+            ensemble_name: artifact.ensemble_name().to_string(),
+        };
+        Server::start_native(bind_addr, artifact.compiled(), config.into(), identity)
+    }
+
+    fn start_native(
+        bind_addr: &str,
+        plan: Arc<CompiledPlan>,
+        config: ServerConfig,
+        identity: PlanIdentity,
+    ) -> std::io::Result<Server> {
         let slot = Arc::new(PlanSlot::new(plan));
         let per_shard_threads = (threads_from_env() / config.shards.max(1)).max(1);
         let factory_slot = slot.clone();
@@ -340,7 +421,7 @@ impl Server {
                 Pool::new(per_shard_threads),
             ))
         };
-        Server::start_inner(bind_addr, Arc::new(factory), config, Some(slot))
+        Server::start_inner(bind_addr, Arc::new(factory), config, Some(slot), Some(identity))
     }
 
     fn start_inner(
@@ -348,6 +429,7 @@ impl Server {
         factory: Arc<dyn Fn(usize) -> Box<dyn Engine> + Send + Sync>,
         config: ServerConfig,
         plan_slot: Option<Arc<PlanSlot>>,
+        identity: Option<PlanIdentity>,
     ) -> std::io::Result<Server> {
         let listener = TcpListener::bind(bind_addr)?;
         let addr = listener.local_addr()?;
@@ -379,6 +461,7 @@ impl Server {
             dispatch: Dispatcher { shards: shard_channels, draining: AtomicBool::new(false) },
             metrics: metrics.clone(),
             plan_slot,
+            identity: identity.map(std::sync::Mutex::new),
             default_deadline: config.default_deadline,
         });
 
@@ -388,6 +471,7 @@ impl Server {
             Arc::new(std::sync::Mutex::new(Vec::new()));
         let acc_shutdown = shutdown.clone();
         let acc_conns = conns.clone();
+        let acc_ctx = ctx.clone();
         let acceptor = std::thread::spawn(move || {
             listener.set_nonblocking(true).ok();
             loop {
@@ -400,7 +484,7 @@ impl Server {
                         if let Ok(dup) = stream.try_clone() {
                             acc_conns.lock().unwrap().push(dup);
                         }
-                        let ctx = ctx.clone();
+                        let ctx = acc_ctx.clone();
                         std::thread::spawn(move || handle_conn(stream, ctx));
                     }
                     Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -409,19 +493,59 @@ impl Server {
                     Err(_) => break,
                 }
             }
-            // The shared context (and the dispatcher's senders) drops
-            // here → once connection threads exit too, the shard queues
-            // close and every worker drains.
         });
 
         Ok(Server {
             addr,
+            http_addr: None,
             metrics,
             shutdown,
             acceptor: Some(acceptor),
+            http_acceptor: None,
             workers,
             conns,
+            ctx: Some(ctx),
         })
+    }
+
+    /// Bind a second listener serving the HTTP/1.1 front-end
+    /// (`crate::http`) over the SAME dispatcher, shard set, plan slot,
+    /// and metrics as the line protocol — dual-protocol serving, one
+    /// runtime. Returns the bound address (use port 0 to let the OS
+    /// pick). Connections accepted here are severed by [`Server::stop`]
+    /// exactly like line-protocol ones.
+    pub fn attach_http(&mut self, bind_addr: &str) -> std::io::Result<std::net::SocketAddr> {
+        let ctx = self.ctx.as_ref().expect("attach_http on a running server").clone();
+        let listener = TcpListener::bind(bind_addr)?;
+        let addr = listener.local_addr()?;
+        let state = Arc::new(crate::http::HttpState::new(ctx));
+        let acc_shutdown = self.shutdown.clone();
+        let acc_conns = self.conns.clone();
+        let acceptor = std::thread::spawn(move || {
+            listener.set_nonblocking(true).ok();
+            loop {
+                if acc_shutdown.load(Ordering::Relaxed) {
+                    break;
+                }
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        stream.set_nonblocking(false).ok();
+                        if let Ok(dup) = stream.try_clone() {
+                            acc_conns.lock().unwrap().push(dup);
+                        }
+                        let state = state.clone();
+                        std::thread::spawn(move || crate::http::serve_conn(stream, state));
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(1));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        self.http_acceptor = Some(acceptor);
+        self.http_addr = Some(addr);
+        Ok(addr)
     }
 
     /// Signal shutdown, sever open connections, and join threads.
@@ -430,9 +554,13 @@ impl Server {
         if let Some(a) = self.acceptor.take() {
             let _ = a.join();
         }
-        // Force connection reader loops to end so their request senders
-        // drop; otherwise the workers would wait on clients that outlive
-        // the server handle.
+        if let Some(a) = self.http_acceptor.take() {
+            let _ = a.join();
+        }
+        // Drop the handle's dispatcher senders, then force connection
+        // reader loops to end so theirs drop too; otherwise the workers
+        // would wait on clients that outlive the server handle.
+        drop(self.ctx.take());
         for c in self.conns.lock().unwrap().drain(..) {
             let _ = c.shutdown(std::net::Shutdown::Both);
         }
@@ -801,13 +929,51 @@ pub fn format_ok_reply(buf: &mut String, id: u64, o: &Outcome, latency_us: u64) 
     );
 }
 
-/// Handle the `RELOAD <path>` control command: load + compile the
-/// candidate off the request path (on this connection's thread), canary
-/// it against probes captured from the LIVE plan, and only then publish
-/// into the slot. Any failure — unreadable artifact, schema error, or a
-/// canary violation (feature-width change, non-finite score, broken
-/// early-exit invariant) — keeps last-known-good serving and replies
-/// `RELOAD_REJECTED <stage>: <why>`.
+/// Typed verdict of a reload attempt, shared by the line protocol
+/// (`RELOAD <path>` → [`ReloadOutcome::into_line`]) and the HTTP admin
+/// plane (`POST /reload` → 200/400/409/501 with a JSON body) so both
+/// surfaces report the same staged decision from the same gate.
+pub(crate) enum ReloadOutcome {
+    /// Candidate accepted and published into the slot.
+    Swapped {
+        /// The artifact's plan name.
+        name: String,
+        /// New slot generation.
+        generation: u64,
+        /// Positions T of the accepted plan.
+        t: usize,
+    },
+    /// Candidate refused at `stage` (`io`, `schema`, `canary`, ...);
+    /// last-known-good keeps serving.
+    Rejected { stage: String, why: String },
+    /// This server has no plan slot (generic-factory backend).
+    Unsupported,
+    /// Empty path.
+    Malformed,
+}
+
+impl ReloadOutcome {
+    /// The line protocol's reply for this verdict (exact legacy shapes).
+    pub(crate) fn into_line(self) -> String {
+        match self {
+            ReloadOutcome::Swapped { name, generation, t } => {
+                format!("RELOADED {name} gen={generation} T={t}")
+            }
+            ReloadOutcome::Rejected { stage, why } => format!("RELOAD_REJECTED {stage}: {why}"),
+            ReloadOutcome::Unsupported => "ERR - reload unsupported for this backend".into(),
+            ReloadOutcome::Malformed => "ERR - malformed RELOAD (usage: RELOAD <path>)".into(),
+        }
+    }
+}
+
+/// Validated hot-reload: load + compile the candidate off the request
+/// path (on the calling connection's thread), canary it against probes
+/// captured from the LIVE plan, and only then publish into the slot
+/// (updating the plan identity the admin surface reports). Any failure
+/// — unreadable artifact, schema error, or a canary violation
+/// (feature-width change, non-finite score, broken early-exit
+/// invariant) — keeps last-known-good serving and yields the staged
+/// rejection.
 ///
 /// Shard workers adopt an accepted plan at their next batch boundary: a
 /// batch mid-classification finishes on its old plan, and an accepted
@@ -818,16 +984,17 @@ pub fn format_ok_reply(buf: &mut String, id: u64, o: &Outcome, latency_us: u64) 
 /// sniffs the magic bytes. Deploying the zero-copy `qwyc-plan-bin-v1`
 /// form makes the reload near-free: one read + validated pointer casts
 /// instead of a JSON parse + re-permute.
-fn handle_reload(path: &str, slot: &Option<Arc<PlanSlot>>, ops: &OpsCounters) -> String {
-    let Some(slot) = slot else {
-        return "ERR - reload unsupported for this backend".into();
+pub(crate) fn reload_plan(path: &str, ctx: &ConnShared) -> ReloadOutcome {
+    let Some(slot) = &ctx.plan_slot else {
+        return ReloadOutcome::Unsupported;
     };
     if path.is_empty() {
-        return "ERR - malformed RELOAD (usage: RELOAD <path>)".into();
+        return ReloadOutcome::Malformed;
     }
+    let ops = ctx.metrics.ops();
     let reject = |e: QwycError| {
         ops.reload_rejected.fetch_add(1, Ordering::Relaxed);
-        format!("RELOAD_REJECTED {}: {}", e.stage(), e.message())
+        ReloadOutcome::Rejected { stage: e.stage().to_string(), why: e.message().to_string() }
     };
     let candidate = match PlanArtifact::load(Path::new(path)) {
         Ok(artifact) => artifact,
@@ -848,74 +1015,21 @@ fn handle_reload(path: &str, slot: &Option<Arc<PlanSlot>>, ops: &OpsCounters) ->
         // underlying error variant: the operator's question is "which
         // reload gate failed", not "which crate stage built the error".
         ops.reload_rejected.fetch_add(1, Ordering::Relaxed);
-        return format!("RELOAD_REJECTED canary: {}", e.message());
+        return ReloadOutcome::Rejected {
+            stage: "canary".to_string(),
+            why: e.message().to_string(),
+        };
     }
     let t = compiled.t();
-    let gen = slot.swap(compiled);
-    ops.reload_ok.fetch_add(1, Ordering::Relaxed);
-    format!("RELOADED {} gen={gen} T={t}", candidate.name())
-}
-
-/// One line read with a hard byte cap. The bytes land in the caller's
-/// reusable buffer; `Line` just flags that it holds a complete line.
-enum LineRead {
-    Line,
-    /// The line exceeded the cap; it has been consumed from the stream.
-    TooLong,
-    Eof,
-}
-
-/// Read one `\n`-terminated line of at most `cap` bytes into `buf`
-/// (cleared first) via `fill_buf`/`consume` — unlike
-/// `BufRead::read_line`, an oversized (or maliciously endless) line is
-/// discarded as it streams in instead of being accumulated, so one bad
-/// client line costs O(cap) memory, and the reused buffer means a
-/// steady request stream stops allocating here after warmup. A final
-/// unterminated line (client half-wrote then shut down its write side)
-/// is returned as a normal line at EOF. Decoding stays lossy at the
-/// call site (`String::from_utf8_lossy`) — binary garbage turns into a
-/// line the protocol parser rejects, which is the per-line error
-/// behavior we want.
-fn read_line_capped<R: BufRead>(
-    reader: &mut R,
-    cap: usize,
-    buf: &mut Vec<u8>,
-) -> std::io::Result<LineRead> {
-    buf.clear();
-    let mut discarding = false;
-    loop {
-        let chunk = reader.fill_buf()?;
-        if chunk.is_empty() {
-            // EOF.
-            if discarding {
-                return Ok(LineRead::TooLong);
-            }
-            if buf.is_empty() {
-                return Ok(LineRead::Eof);
-            }
-            return Ok(LineRead::Line);
-        }
-        let (take, found_newline) = match chunk.iter().position(|&b| b == b'\n') {
-            Some(i) => (i + 1, true),
-            None => (chunk.len(), false),
+    let generation = slot.swap(compiled);
+    if let Some(identity) = &ctx.identity {
+        *identity.lock().unwrap() = PlanIdentity {
+            meta: candidate.meta().clone(),
+            ensemble_name: candidate.ensemble_name().to_string(),
         };
-        if !discarding {
-            let keep = take - usize::from(found_newline);
-            if buf.len() + keep > cap {
-                discarding = true;
-                buf.clear();
-            } else {
-                buf.extend_from_slice(&chunk[..keep]);
-            }
-        }
-        reader.consume(take);
-        if found_newline {
-            if discarding {
-                return Ok(LineRead::TooLong);
-            }
-            return Ok(LineRead::Line);
-        }
     }
+    ops.reload_ok.fetch_add(1, Ordering::Relaxed);
+    ReloadOutcome::Swapped { name: candidate.name().to_string(), generation, t }
 }
 
 fn handle_conn(stream: TcpStream, ctx: Arc<ConnShared>) {
@@ -971,7 +1085,7 @@ fn handle_conn(stream: TcpStream, ctx: Arc<ConnShared>) {
             "RELOAD" => {
                 // The path is everything after the verb (paths may
                 // contain spaces).
-                let reply = handle_reload(rest.trim(), &ctx.plan_slot, ctx.metrics.ops());
+                let reply = reload_plan(rest.trim(), &ctx).into_line();
                 let _ = resp_tx.send(reply);
             }
             "DRAIN" => {
@@ -1285,49 +1399,6 @@ mod tests {
             Reply::Other(s) => assert!(s.starts_with("DRAINED")),
             other => panic!("{other:?}"),
         }
-    }
-
-    #[test]
-    fn capped_reader_handles_long_partial_and_binary_lines() {
-        use std::io::Cursor;
-        let cap = 16;
-        let mut buf: Vec<u8> = Vec::new();
-        // Normal short lines pass through, CRLF and all. The buffer is
-        // reused across reads (cleared each time, never reallocated).
-        let mut r = Cursor::new(b"hello\nworld\r\n".to_vec());
-        match read_line_capped(&mut r, cap, &mut buf).unwrap() {
-            LineRead::Line => assert_eq!(String::from_utf8_lossy(&buf), "hello"),
-            _ => panic!("expected line"),
-        }
-        match read_line_capped(&mut r, cap, &mut buf).unwrap() {
-            LineRead::Line => assert_eq!(String::from_utf8_lossy(&buf), "world\r"),
-            _ => panic!("expected line"),
-        }
-        assert!(matches!(read_line_capped(&mut r, cap, &mut buf).unwrap(), LineRead::Eof));
-        // An oversized line is consumed (not buffered) and the stream
-        // stays usable for the next line.
-        let mut big = vec![b'x'; 100];
-        big.push(b'\n');
-        big.extend_from_slice(b"next\n");
-        let mut r = Cursor::new(big);
-        assert!(matches!(read_line_capped(&mut r, cap, &mut buf).unwrap(), LineRead::TooLong));
-        match read_line_capped(&mut r, cap, &mut buf).unwrap() {
-            LineRead::Line => assert_eq!(String::from_utf8_lossy(&buf), "next"),
-            _ => panic!("expected line"),
-        }
-        // A half-written final line (no newline before EOF) is returned
-        // as a line; binary garbage is replaced lossily, not fatal.
-        let mut r = Cursor::new(b"\xff\xfepartial".to_vec());
-        match read_line_capped(&mut r, cap, &mut buf).unwrap() {
-            LineRead::Line => {
-                let l = String::from_utf8_lossy(&buf);
-                assert!(l.contains("partial"));
-            }
-            _ => panic!("expected line"),
-        }
-        // An oversized line that never terminates before EOF is TooLong.
-        let mut r = Cursor::new(vec![b'y'; 50]);
-        assert!(matches!(read_line_capped(&mut r, cap, &mut buf).unwrap(), LineRead::TooLong));
     }
 
     #[test]

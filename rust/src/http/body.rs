@@ -1,0 +1,243 @@
+//! Request/response body codecs for the scoring data plane: JSON
+//! (`[1,2,3]` or `[[...],[...]]`) and CSV (one row per line) decoded
+//! into feature vectors drawn from the connection's [`BufPool`] — the
+//! same recycled buffers the line protocol parses into, so the warmed
+//! HTTP path allocates nothing per row either. The JSON decoder is a
+//! purpose-built scanner (rows are arrays of numbers, nothing else)
+//! rather than a trip through `util::json`, which would allocate a
+//! `Json` tree per row.
+
+use crate::coordinator::server::BufPool;
+use super::parse::BodyKind;
+
+/// Decode the rows of a scoring request into pooled feature vectors,
+/// appended to `rows` (caller recycles them after replying). Errors
+/// name the offending row/token; any partial rows are returned to the
+/// pool before erroring so a bad batch leaks nothing.
+pub(crate) fn parse_rows(
+    text: &str,
+    kind: BodyKind,
+    pool: &BufPool,
+    rows: &mut Vec<Vec<f32>>,
+) -> Result<(), String> {
+    let start = rows.len();
+    let result = match kind {
+        BodyKind::Json => parse_json_rows(text, pool, rows),
+        BodyKind::Csv => parse_csv_rows(text, pool, rows),
+    };
+    match result {
+        Ok(()) if rows.len() == start => Err("no rows in body".to_string()),
+        Ok(()) => Ok(()),
+        Err(e) => {
+            for row in rows.drain(start..) {
+                pool.put_feats(row);
+            }
+            Err(e)
+        }
+    }
+}
+
+/// `[1,2,3]` (one row) or `[[1,2],[3,4]]` (a batch). Numbers only —
+/// the feature space is f32 by contract.
+fn parse_json_rows(text: &str, pool: &BufPool, rows: &mut Vec<Vec<f32>>) -> Result<(), String> {
+    let mut s = Scanner { b: text.as_bytes(), i: 0 };
+    s.skip_ws();
+    s.expect(b'[').map_err(|e| format!("body: {e}"))?;
+    s.skip_ws();
+    if s.peek() == Some(b'[') {
+        // Batch: [[...],[...],...]
+        loop {
+            let mut row = pool.get_feats();
+            if let Err(e) = parse_json_row(&mut s, &mut row) {
+                pool.put_feats(row);
+                return Err(format!("row {}: {e}", rows.len()));
+            }
+            rows.push(row);
+            s.skip_ws();
+            match s.next() {
+                Some(b',') => s.skip_ws(),
+                Some(b']') => break,
+                _ => return Err(format!("row {}: expected ',' or ']'", rows.len())),
+            }
+        }
+    } else {
+        // Single row: the '[' already consumed is the row's own.
+        s.i -= 1;
+        let mut row = pool.get_feats();
+        if let Err(e) = parse_json_row(&mut s, &mut row) {
+            pool.put_feats(row);
+            return Err(format!("row 0: {e}"));
+        }
+        rows.push(row);
+    }
+    s.skip_ws();
+    if s.i != s.b.len() {
+        return Err("trailing bytes after rows".to_string());
+    }
+    Ok(())
+}
+
+/// One `[n, n, ...]` into a pooled buffer.
+fn parse_json_row(s: &mut Scanner<'_>, row: &mut Vec<f32>) -> Result<(), String> {
+    s.expect(b'[')?;
+    s.skip_ws();
+    if s.peek() == Some(b']') {
+        s.i += 1;
+        return Err("empty row".to_string());
+    }
+    loop {
+        let v = s.number()?;
+        row.push(v);
+        s.skip_ws();
+        match s.next() {
+            Some(b',') => s.skip_ws(),
+            Some(b']') => return Ok(()),
+            _ => return Err("expected ',' or ']'".to_string()),
+        }
+    }
+}
+
+/// One row per non-empty line, comma-separated f32s.
+fn parse_csv_rows(text: &str, pool: &BufPool, rows: &mut Vec<Vec<f32>>) -> Result<(), String> {
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut row = pool.get_feats();
+        for token in line.split(',') {
+            match token.trim().parse::<f32>() {
+                Ok(v) => row.push(v),
+                Err(_) => {
+                    pool.put_feats(row);
+                    return Err(format!("row {}: bad number '{}'", rows.len(), token.trim()));
+                }
+            }
+        }
+        rows.push(row);
+    }
+    Ok(())
+}
+
+/// Byte scanner for the row decoder.
+struct Scanner<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl Scanner<'_> {
+    fn skip_ws(&mut self) {
+        while self.i < self.b.len() && self.b[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn next(&mut self) -> Option<u8> {
+        let c = self.peek()?;
+        self.i += 1;
+        Some(c)
+    }
+
+    fn expect(&mut self, want: u8) -> Result<(), String> {
+        match self.next() {
+            Some(c) if c == want => Ok(()),
+            Some(c) => Err(format!("expected '{}', found '{}'", want as char, c as char)),
+            None => Err(format!("expected '{}', found end of body", want as char)),
+        }
+    }
+
+    /// Scan one JSON number token and parse it as f32.
+    fn number(&mut self) -> Result<f32, String> {
+        let start = self.i;
+        while let Some(c) = self.peek() {
+            if c.is_ascii_digit() || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E') {
+                self.i += 1;
+            } else {
+                break;
+            }
+        }
+        let token = &self.b[start..self.i];
+        // Valid UTF-8 by construction (ASCII digits/signs only).
+        std::str::from_utf8(token)
+            .ok()
+            .and_then(|t| t.parse::<f32>().ok())
+            .ok_or_else(|| "expected a number".to_string())
+    }
+}
+
+/// Append `s` to `out` as a JSON string literal (quotes included).
+/// Covers the control characters the encoder in `util::json` covers;
+/// lives here so the zero-alloc data plane can write error bodies into
+/// its reused buffer without building a `Json` tree.
+pub(crate) fn write_json_str(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                use std::fmt::Write as _;
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rows_of(text: &str, kind: BodyKind) -> Result<Vec<Vec<f32>>, String> {
+        let pool = BufPool::new();
+        let mut rows = Vec::new();
+        parse_rows(text, kind, &pool, &mut rows)?;
+        Ok(rows)
+    }
+
+    #[test]
+    fn json_single_row_and_batch() {
+        assert_eq!(rows_of("[1, 2.5, -3e1]", BodyKind::Json).unwrap(), vec![vec![
+            1.0, 2.5, -30.0
+        ]]);
+        assert_eq!(
+            rows_of(" [[1,2],[3,4]] ", BodyKind::Json).unwrap(),
+            vec![vec![1.0, 2.0], vec![3.0, 4.0]]
+        );
+    }
+
+    #[test]
+    fn json_rejects_garbage_and_returns_buffers() {
+        for bad in ["", "[]", "[[]]", "[1,2", "[[1],[x]]", "[1,2]trail", "{\"a\":1}", "[[1],2]"] {
+            assert!(rows_of(bad, BodyKind::Json).is_err(), "{bad:?} should fail");
+        }
+        // Errors name the failing row.
+        let e = rows_of("[[1],[2],[bad]]", BodyKind::Json).unwrap_err();
+        assert!(e.starts_with("row 2:"), "{e}");
+    }
+
+    #[test]
+    fn csv_rows() {
+        assert_eq!(
+            rows_of("1,2\n\n3.5, 4\n", BodyKind::Csv).unwrap(),
+            vec![vec![1.0, 2.0], vec![3.5, 4.0]]
+        );
+        assert!(rows_of("1,zap", BodyKind::Csv).is_err());
+        assert!(rows_of("\n\n", BodyKind::Csv).is_err());
+    }
+
+    #[test]
+    fn json_string_escaping() {
+        let mut out = String::new();
+        write_json_str(&mut out, "a\"b\\c\nd\u{1}");
+        assert_eq!(out, "\"a\\\"b\\\\c\\nd\\u0001\"");
+    }
+}

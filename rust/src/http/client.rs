@@ -1,0 +1,135 @@
+//! Minimal blocking HTTP/1.1 client for tests, the CI smoke driver,
+//! and `bench-client --http`. Send and read are split so a load
+//! generator can pipeline: issue several `send` calls back-to-back,
+//! then drain the responses in order (the server answers FIFO per
+//! connection).
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+
+/// One parsed HTTP response.
+#[derive(Clone, Debug)]
+pub struct HttpResponse {
+    pub status: u16,
+    /// Header (name, value) pairs in arrival order; names as sent.
+    pub headers: Vec<(String, String)>,
+    pub body: String,
+}
+
+impl HttpResponse {
+    /// First header value matching `name` (ASCII case-insensitive).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(n, _)| n.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// Blocking keep-alive client over one connection.
+pub struct HttpClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl HttpClient {
+    pub fn connect(addr: &SocketAddr) -> std::io::Result<HttpClient> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        let writer = stream.try_clone()?;
+        Ok(HttpClient { reader: BufReader::new(stream), writer })
+    }
+
+    /// Write one request (does not wait for the response). `headers`
+    /// are extra headers; `Host` and `Content-Length` are always sent.
+    pub fn send(
+        &mut self,
+        method: &str,
+        path: &str,
+        headers: &[(&str, &str)],
+        body: &[u8],
+    ) -> std::io::Result<()> {
+        write!(self.writer, "{method} {path} HTTP/1.1\r\nHost: qwyc\r\n")?;
+        for (name, value) in headers {
+            write!(self.writer, "{name}: {value}\r\n")?;
+        }
+        write!(self.writer, "Content-Length: {}\r\n\r\n", body.len())?;
+        self.writer.write_all(body)?;
+        self.writer.flush()
+    }
+
+    /// Read one response (blocking). Interim `100 Continue` responses
+    /// are skipped transparently; the body is framed by the server's
+    /// `Content-Length`.
+    pub fn read_response(&mut self) -> std::io::Result<HttpResponse> {
+        read_response_from(&mut self.reader)
+    }
+
+    /// Convenience: send one request and wait for its response.
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        headers: &[(&str, &str)],
+        body: &[u8],
+    ) -> std::io::Result<HttpResponse> {
+        self.send(method, path, headers, body)?;
+        self.read_response()
+    }
+
+}
+
+/// Read one response from any buffered reader. Shared by
+/// [`HttpClient::read_response`] and load generators that split the
+/// stream into a writer half and a dedicated reader thread.
+pub fn read_response_from<R: BufRead>(reader: &mut R) -> std::io::Result<HttpResponse> {
+    loop {
+        let status_line = read_line_from(reader)?;
+        let status = status_line
+            .split(' ')
+            .nth(1)
+            .and_then(|t| t.parse::<u16>().ok())
+            .ok_or_else(|| {
+                std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!("bad status line '{status_line}'"),
+                )
+            })?;
+        let mut headers = Vec::new();
+        let mut content_length = 0usize;
+        loop {
+            let line = read_line_from(reader)?;
+            if line.is_empty() {
+                break;
+            }
+            if let Some((name, value)) = line.split_once(':') {
+                let value = value.trim().to_string();
+                if name.eq_ignore_ascii_case("content-length") {
+                    content_length = value.parse().unwrap_or(0);
+                }
+                headers.push((name.to_string(), value));
+            }
+        }
+        if status == 100 {
+            continue;
+        }
+        let mut body = vec![0u8; content_length];
+        reader.read_exact(&mut body)?;
+        let body = String::from_utf8_lossy(&body).into_owned();
+        return Ok(HttpResponse { status, headers, body });
+    }
+}
+
+fn read_line_from<R: BufRead>(reader: &mut R) -> std::io::Result<String> {
+    let mut line = String::new();
+    if reader.read_line(&mut line)? == 0 {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::UnexpectedEof,
+            "server closed the connection",
+        ));
+    }
+    while line.ends_with('\n') || line.ends_with('\r') {
+        line.pop();
+    }
+    Ok(line)
+}

@@ -1,0 +1,538 @@
+//! Per-connection HTTP loop: keep-alive + pipelined request handling,
+//! the router, and the data/admin-plane handlers.
+//!
+//! The scoring path mirrors the line protocol's connection loop
+//! byte-for-byte where it matters: rows parse into pooled feature
+//! buffers, requests route through the shared least-queued dispatcher,
+//! and shard replies come back on this connection's channel as the
+//! exact reply strings the line protocol would send. The `score` token
+//! of an `OK` reply is spliced VERBATIM into the JSON response —
+//! re-parsing and re-formatting an f32 is not an identity at the edges,
+//! and the bitwise-equivalence guarantee (`/v1/score` ≡ `EVAL` ≡
+//! `eval_single`) rides on that token.
+//!
+//! Error framing: a request whose head cannot be parsed (or whose body
+//! cannot be fully read) loses the request boundary, so the connection
+//! answers once and closes. A request with a well-framed but bad body
+//! (or an unknown route) errors alone — the connection survives, which
+//! is what keeps one bad pipelined request from poisoning the rest.
+
+use super::body::{parse_rows, write_json_str};
+use super::metrics::{render_engine_prometheus, route_index, ROUTE_LABELS};
+use super::parse::{read_head, HeadError, Method, RequestHead};
+use super::HttpState;
+use crate::coordinator::server::{
+    recycle, reload_plan, BufPool, ConnShared, ReloadOutcome, Request, RouteError, DRAIN_TIMEOUT,
+};
+use crate::plan::PlanArtifact;
+use crate::util::json::Json;
+use std::fmt::Write as _;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const CT_JSON: &str = "application/json";
+const CT_PROM: &str = "text/plain; version=0.0.4; charset=utf-8";
+
+/// Everything the handlers need from the connection, bundled so the
+/// router's signature stays flat.
+struct Conn<'a> {
+    ctx: &'a ConnShared,
+    pool: &'a Arc<BufPool>,
+    resp_tx: &'a Sender<String>,
+    resp_rx: &'a Receiver<String>,
+}
+
+/// Buffers reused across requests on one connection (the HTTP analogue
+/// of the line protocol's recycled line/feature buffers).
+#[derive(Default)]
+struct Scratch {
+    rows: Vec<Vec<f32>>,
+    slots: Vec<Option<String>>,
+}
+
+/// Serve one accepted HTTP connection until it closes.
+pub(crate) fn serve_conn(stream: TcpStream, state: Arc<HttpState>) {
+    stream.set_nodelay(true).ok();
+    let Ok(write_half) = stream.try_clone() else {
+        return;
+    };
+    let mut w = BufWriter::new(write_half);
+    let mut reader = BufReader::new(stream);
+    let pool = Arc::new(BufPool::new());
+    // Shard replies for THIS connection's in-flight rows; held for the
+    // connection's lifetime so a late TIMEOUT reply can never hit a
+    // closed channel.
+    let (resp_tx, resp_rx) = mpsc::channel::<String>();
+    let conn = Conn { ctx: &state.ctx, pool: &pool, resp_tx: &resp_tx, resp_rx: &resp_rx };
+    let mut head = RequestHead::default();
+    let mut line_buf: Vec<u8> = Vec::new();
+    let mut body_buf: Vec<u8> = Vec::new();
+    let mut out = String::new();
+    let mut scratch = Scratch::default();
+    loop {
+        match read_head(&mut reader, &mut line_buf, &mut head) {
+            Ok(()) => {}
+            Err(HeadError::Closed) => break,
+            Err(HeadError::Fatal { status, message }) => {
+                let status = error_status(&mut out, status, &message);
+                let _ = write_response(&mut w, status, CT_JSON, &out, false);
+                state.routes.record(route_index(""), status, 0);
+                break;
+            }
+        }
+        // curl waits for this interim line before streaming larger
+        // bodies; answering it keeps `curl --data-binary @plan` fast.
+        if head.expect_continue
+            && head.content_length > 0
+            && (w.write_all(b"HTTP/1.1 100 Continue\r\n\r\n").is_err() || w.flush().is_err())
+        {
+            break;
+        }
+        body_buf.resize(head.content_length, 0);
+        if reader.read_exact(&mut body_buf).is_err() {
+            let status = error_status(&mut out, 400, "truncated body");
+            let _ = write_response(&mut w, status, CT_JSON, &out, false);
+            state.routes.record(route_index(&head.target), status, 0);
+            break;
+        }
+        let route = route_index(&head.target);
+        let started = Instant::now();
+        out.clear();
+        let (status, content_type) =
+            handle_request(&state, &conn, &head, &body_buf, &mut scratch, &mut out);
+        let wrote = write_response(&mut w, status, content_type, &out, head.keep_alive);
+        state.routes.record(route, status, started.elapsed().as_nanos() as u64);
+        if wrote.is_err() || !head.keep_alive {
+            break;
+        }
+    }
+}
+
+/// Route one well-framed request to its handler. Anything that reaches
+/// here is framing-safe: the body was fully read, so even an error
+/// response leaves the connection usable.
+fn handle_request(
+    state: &HttpState,
+    conn: &Conn<'_>,
+    head: &RequestHead,
+    body: &[u8],
+    scratch: &mut Scratch,
+    out: &mut String,
+) -> (u16, &'static str) {
+    match (head.method, head.target.as_str()) {
+        (Method::Post, "/v1/score") => (score(conn, head, body, scratch, out, true), CT_JSON),
+        (Method::Post, "/v1/score-batch") => {
+            (score(conn, head, body, scratch, out, false), CT_JSON)
+        }
+        (Method::Get, "/healthz") => (healthz(conn.ctx, out), CT_JSON),
+        (Method::Get, "/stats") => (stats(state, out), CT_JSON),
+        (Method::Get, "/metrics") => (metrics_text(state, out), CT_PROM),
+        (Method::Get, "/plan") => (plan_info(conn.ctx, out), CT_JSON),
+        (Method::Post, "/reload") => (reload(conn.ctx, body, out), CT_JSON),
+        (Method::Post, "/drain") => (drain(conn.ctx, out), CT_JSON),
+        (_, path) if ROUTE_LABELS.contains(&path) => {
+            (error_status(out, 405, "method not allowed for this route"), CT_JSON)
+        }
+        _ => (error_status(out, 404, "not found"), CT_JSON),
+    }
+}
+
+/// Per-request outcome tallies for a scoring call.
+#[derive(Default)]
+struct Counts {
+    ok: u64,
+    busy: u64,
+    timeout: u64,
+    err: u64,
+}
+
+/// `POST /v1/score` (`single`) and `POST /v1/score-batch`: decode rows,
+/// route every row through the shared dispatcher, collect exactly one
+/// terminal reply per row, and render the replies as JSON. Status
+/// precedence across rows: any BUSY → 503, else any TIMEOUT → 504,
+/// else any row error → 422, else 200 (the JSON body always carries
+/// the per-row detail).
+fn score(
+    conn: &Conn<'_>,
+    head: &RequestHead,
+    body: &[u8],
+    scratch: &mut Scratch,
+    out: &mut String,
+    single: bool,
+) -> u16 {
+    let ctx = conn.ctx;
+    let pool = conn.pool;
+    let Ok(text) = std::str::from_utf8(body) else {
+        return error_status(out, 400, "body is not UTF-8");
+    };
+    let rows = &mut scratch.rows;
+    rows.clear();
+    if let Err(e) = parse_rows(text, head.content_type, pool, rows) {
+        return error_status(out, 400, &e);
+    }
+    if single && rows.len() != 1 {
+        for r in rows.drain(..) {
+            pool.put_feats(r);
+        }
+        return error_status(out, 400, "expected exactly one row (use /v1/score-batch)");
+    }
+    // Same deadline semantics as the line protocol's `DEADLINE_MS=`
+    // token: the header overrides the server default, 0 opts out.
+    let deadline = match head.deadline_ms {
+        Some(0) => None,
+        Some(ms) => Some(Instant::now() + Duration::from_millis(ms)),
+        None => ctx.default_deadline.map(|d| Instant::now() + d),
+    };
+    let n = rows.len();
+    let slots = &mut scratch.slots;
+    slots.clear();
+    slots.resize_with(n, || None);
+    let mut pending = 0usize;
+    for (i, features) in rows.drain(..).enumerate() {
+        let req = Request {
+            id: i as u64,
+            features,
+            enqueued: Instant::now(),
+            deadline,
+            respond: conn.resp_tx.clone(),
+            pool: pool.clone(),
+        };
+        // Admission verdicts that never reach a shard are synthesized
+        // as the reply line a shard would have sent, so the rendering
+        // below has exactly one format to deal with.
+        let verdict = match ctx.dispatch.route(req) {
+            Ok(()) => {
+                pending += 1;
+                continue;
+            }
+            Err(RouteError::Busy(r)) => {
+                ctx.metrics.ops().busy_shed.fetch_add(1, Ordering::Relaxed);
+                (r, format!("BUSY {i}"))
+            }
+            Err(RouteError::Draining(r)) => (r, format!("ERR {i} draining")),
+            Err(RouteError::Closed(r)) => (r, format!("ERR {i} server shutting down")),
+        };
+        let (r, line) = verdict;
+        let mut s = pool.get_string();
+        s.push_str(&line);
+        slots[i] = Some(s);
+        recycle(r);
+    }
+    // One terminal reply per routed row is guaranteed (timeout shedding,
+    // panic recovery, and engine errors all answer), and this function
+    // holds its own sender — recv only fails if the runtime is gone.
+    while pending > 0 {
+        let Ok(line) = conn.resp_rx.recv() else {
+            break;
+        };
+        pending -= 1;
+        let id = line.split(' ').nth(1).and_then(|t| t.parse::<usize>().ok());
+        match id {
+            Some(i) if i < slots.len() && slots[i].is_none() => slots[i] = Some(line),
+            _ => pool.put_string(line),
+        }
+    }
+    let mut counts = Counts::default();
+    if !single {
+        out.push_str("{\"results\":[");
+    }
+    for (i, slot) in slots.iter().enumerate() {
+        if !single && i > 0 {
+            out.push(',');
+        }
+        match slot {
+            Some(line) => write_row(out, i, line, &mut counts),
+            None => {
+                let _ = write!(out, "{{\"id\":{i},\"error\":\"no reply (server stopped)\"}}");
+                counts.err += 1;
+            }
+        }
+    }
+    for s in slots.drain(..).flatten() {
+        pool.put_string(s);
+    }
+    if !single {
+        let _ = write!(
+            out,
+            "],\"ok\":{},\"busy\":{},\"timeout\":{},\"error\":{}}}",
+            counts.ok, counts.busy, counts.timeout, counts.err
+        );
+    }
+    if counts.busy > 0 {
+        503
+    } else if counts.timeout > 0 {
+        504
+    } else if counts.err > 0 {
+        422
+    } else {
+        200
+    }
+}
+
+/// Render one reply line — `OK <id> <pos|neg> <score> <models>
+/// <latency_us>`, `BUSY <id>`, `TIMEOUT <id>`, or `ERR <id> <msg>` —
+/// as this row's JSON object.
+fn write_row(out: &mut String, i: usize, line: &str, counts: &mut Counts) {
+    let mut parts = line.split(' ');
+    match parts.next() {
+        Some("OK") => {
+            counts.ok += 1;
+            let _id = parts.next();
+            let label = if parts.next() == Some("pos") { "pos" } else { "neg" };
+            let score = parts.next().unwrap_or("0");
+            let models = parts.next().and_then(|t| t.parse::<u64>().ok()).unwrap_or(0);
+            let latency = parts.next().and_then(|t| t.parse::<u64>().ok()).unwrap_or(0);
+            let _ = write!(out, "{{\"id\":{i},\"label\":\"{label}\",\"score\":");
+            // The bitwise-equivalence contract: the score token goes out
+            // exactly as the shard formatted it. A non-finite score is
+            // not a JSON number, so it ships as a string.
+            if score.parse::<f64>().map(f64::is_finite).unwrap_or(false) {
+                out.push_str(score);
+            } else {
+                write_json_str(out, score);
+            }
+            let _ = write!(out, ",\"models\":{models},\"latency_us\":{latency}}}");
+        }
+        Some("BUSY") => {
+            counts.busy += 1;
+            let _ = write!(out, "{{\"id\":{i},\"status\":\"busy\"}}");
+        }
+        Some("TIMEOUT") => {
+            counts.timeout += 1;
+            let _ = write!(out, "{{\"id\":{i},\"status\":\"timeout\"}}");
+        }
+        _ => {
+            counts.err += 1;
+            let msg = line.splitn(3, ' ').nth(2).unwrap_or(line);
+            let _ = write!(out, "{{\"id\":{i},\"error\":");
+            write_json_str(out, msg);
+            out.push('}');
+        }
+    }
+}
+
+/// `GET /healthz` — liveness plus shard count; 503 once draining so a
+/// load balancer stops sending traffic before the listener goes away.
+fn healthz(ctx: &ConnShared, out: &mut String) -> u16 {
+    let shards = ctx.dispatch.n_shards();
+    if ctx.dispatch.is_draining() {
+        let _ = write!(out, "{{\"status\":\"draining\",\"shards\":{shards}}}");
+        503
+    } else {
+        let _ = write!(out, "{{\"status\":\"ok\",\"shards\":{shards}}}");
+        200
+    }
+}
+
+/// `GET /stats` — the aggregated serving snapshot (the same document
+/// the line protocol's `STATS` formats) plus per-route HTTP latency.
+fn stats(state: &HttpState, out: &mut String) -> u16 {
+    let doc = Json::obj(vec![
+        ("serving", state.ctx.metrics.snapshot().to_json()),
+        ("http", state.routes.to_json()),
+    ]);
+    out.push_str(&doc.to_string_pretty());
+    200
+}
+
+/// `GET /metrics` — Prometheus text exposition: engine families from
+/// the serving snapshot, then the HTTP middleware's own families.
+fn metrics_text(state: &HttpState, out: &mut String) -> u16 {
+    render_engine_prometheus(&state.ctx.metrics.snapshot(), out);
+    state.routes.render_prometheus(out);
+    200
+}
+
+/// `GET /plan` — re-encode the LIVE plan and describe it: generation,
+/// section table, and quantization summary, exactly as `qwyc inspect`
+/// would describe the artifact on disk.
+fn plan_info(ctx: &ConnShared, out: &mut String) -> u16 {
+    let (Some(slot), Some(identity)) = (&ctx.plan_slot, &ctx.identity) else {
+        return error_status(out, 404, "no live plan (generic engine backend)");
+    };
+    let ident = identity.lock().unwrap().clone();
+    let compiled = slot.load();
+    match PlanArtifact::live_info(&ident.meta, &ident.ensemble_name, &compiled) {
+        Ok(info) => {
+            let doc = Json::obj(vec![
+                ("generation", Json::Num(slot.generation() as f64)),
+                ("plan", info.to_json()),
+            ]);
+            out.push_str(&doc.to_string_pretty());
+            200
+        }
+        Err(e) => error_status(out, 500, &format!("plan inspection failed: {e}")),
+    }
+}
+
+/// `POST /reload` — body is the artifact path (bare, or
+/// `{"path": "..."}`). Same validated-with-rollback gate as the line
+/// protocol's `RELOAD`; a refusal reports the failing stage on 409.
+fn reload(ctx: &ConnShared, body: &[u8], out: &mut String) -> u16 {
+    let Ok(text) = std::str::from_utf8(body) else {
+        return error_status(out, 400, "body is not UTF-8");
+    };
+    let trimmed = text.trim();
+    let path: String = if trimmed.starts_with('{') {
+        let parsed = Json::parse(trimmed)
+            .ok()
+            .and_then(|j| j.get("path").and_then(|p| p.as_str().ok()).map(str::to_string));
+        match parsed {
+            Some(p) => p,
+            None => {
+                return error_status(out, 400, "reload body must be a path or {\"path\": \"...\"}")
+            }
+        }
+    } else {
+        trimmed.to_string()
+    };
+    match reload_plan(&path, ctx) {
+        ReloadOutcome::Swapped { name, generation, t } => {
+            out.push_str("{\"status\":\"reloaded\",\"plan\":");
+            write_json_str(out, &name);
+            let _ = write!(out, ",\"generation\":{generation},\"t\":{t}}}");
+            200
+        }
+        ReloadOutcome::Rejected { stage, why } => {
+            out.push_str("{\"status\":\"rejected\",\"stage\":");
+            write_json_str(out, &stage);
+            out.push_str(",\"why\":");
+            write_json_str(out, &why);
+            out.push('}');
+            409
+        }
+        ReloadOutcome::Unsupported => {
+            error_status(out, 501, "reload unsupported for this backend")
+        }
+        ReloadOutcome::Malformed => error_status(out, 400, "missing plan path"),
+    }
+}
+
+/// `POST /drain` — stop admission and wait (bounded) for the shard
+/// queues to empty; the line protocol's `DRAIN` with a JSON reply.
+fn drain(ctx: &ConnShared, out: &mut String) -> u16 {
+    let queued = ctx.dispatch.drain(DRAIN_TIMEOUT);
+    if queued == 0 {
+        out.push_str("{\"status\":\"drained\",\"queued\":0}");
+        200
+    } else {
+        let _ = write!(out, "{{\"status\":\"drain_timeout\",\"queued\":{queued}}}");
+        503
+    }
+}
+
+/// Replace `out` with `{"error": message}` and pass the status through.
+fn error_status(out: &mut String, status: u16, message: &str) -> u16 {
+    out.clear();
+    out.push_str("{\"error\":");
+    write_json_str(out, message);
+    out.push('}');
+    status
+}
+
+/// Write one response with explicit `Content-Length` framing.
+fn write_response(
+    w: &mut impl Write,
+    status: u16,
+    content_type: &str,
+    body: &str,
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\n\
+         Connection: {}\r\n\r\n",
+        reason(status),
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" }
+    )?;
+    w.write_all(body.as_bytes())?;
+    w.flush()
+}
+
+/// Reason phrases for the statuses this server emits.
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        409 => "Conflict",
+        413 => "Payload Too Large",
+        422 => "Unprocessable Entity",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        505 => "HTTP Version Not Supported",
+        _ => "",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_render_with_the_raw_score_token() {
+        let mut out = String::new();
+        let mut c = Counts::default();
+        write_row(&mut out, 0, "OK 0 pos 1.250000 7 12", &mut c);
+        assert_eq!(
+            out,
+            "{\"id\":0,\"label\":\"pos\",\"score\":1.250000,\"models\":7,\"latency_us\":12}"
+        );
+        assert_eq!(c.ok, 1);
+        // Non-finite scores are not JSON numbers; they ship quoted.
+        out.clear();
+        write_row(&mut out, 1, "OK 1 neg NaN 2 5", &mut c);
+        assert!(out.contains("\"score\":\"NaN\""), "{out}");
+        out.clear();
+        write_row(&mut out, 2, "BUSY 2", &mut c);
+        assert_eq!(out, "{\"id\":2,\"status\":\"busy\"}");
+        out.clear();
+        write_row(&mut out, 3, "TIMEOUT 3", &mut c);
+        assert_eq!(out, "{\"id\":3,\"status\":\"timeout\"}");
+        out.clear();
+        write_row(&mut out, 4, "ERR 4 engine: \"boom\"", &mut c);
+        assert_eq!(out, "{\"id\":4,\"error\":\"engine: \\\"boom\\\"\"}");
+        assert_eq!((c.ok, c.busy, c.timeout, c.err), (2, 1, 1, 1));
+    }
+
+    #[test]
+    fn responses_are_framed_with_content_length() {
+        let mut buf = Vec::new();
+        write_response(&mut buf, 200, CT_JSON, "{\"a\":1}", true).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"), "{text}");
+        assert!(text.contains("Content-Length: 7\r\n"), "{text}");
+        assert!(text.contains("Connection: keep-alive\r\n"), "{text}");
+        assert!(text.ends_with("\r\n\r\n{\"a\":1}"), "{text}");
+        let mut buf = Vec::new();
+        write_response(&mut buf, 503, CT_JSON, "", false).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.starts_with("HTTP/1.1 503 Service Unavailable\r\n"), "{text}");
+        assert!(text.contains("Connection: close\r\n"), "{text}");
+    }
+
+    #[test]
+    fn reason_phrases_cover_the_emitted_statuses() {
+        for s in [200, 400, 404, 405, 409, 413, 422, 431, 500, 501, 503, 504, 505] {
+            assert!(!reason(s).is_empty(), "status {s}");
+        }
+        assert_eq!(reason(418), "");
+    }
+
+    #[test]
+    fn error_bodies_escape_the_message() {
+        let mut out = String::from("stale");
+        let status = error_status(&mut out, 400, "bad \"row\"");
+        assert_eq!(status, 400);
+        assert_eq!(out, "{\"error\":\"bad \\\"row\\\"\"}");
+    }
+}

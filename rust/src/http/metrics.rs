@@ -1,0 +1,294 @@
+//! Per-route latency middleware and the Prometheus text exposition.
+//!
+//! Every HTTP request is timed around its handler and recorded under a
+//! fixed route label ([`ROUTE_LABELS`]); the recorded p50/p99 surface
+//! in the very `/metrics` and `/stats` responses the middleware wraps,
+//! so the admin plane observes itself. The engine-side families render
+//! from the same [`Snapshot`] that backs the line protocol's `STATS`
+//! (single formatting authority — see [`Snapshot::to_json`]).
+//!
+//! [`Snapshot`]: crate::coordinator::Snapshot
+//! [`Snapshot::to_json`]: crate::coordinator::Snapshot::to_json
+
+use crate::coordinator::Snapshot;
+use crate::util::json::Json;
+use crate::util::stats::LatencyHist;
+use std::fmt::Write as _;
+use std::sync::Mutex;
+
+/// Route labels for the middleware, in dispatch order. Unknown paths
+/// fold into `"other"` so an attacker probing random URLs cannot grow
+/// the label set (Prometheus cardinality stays fixed).
+pub(crate) const ROUTE_LABELS: [&str; 9] = [
+    "/v1/score",
+    "/v1/score-batch",
+    "/healthz",
+    "/stats",
+    "/metrics",
+    "/plan",
+    "/reload",
+    "/drain",
+    "other",
+];
+
+/// Index into [`ROUTE_LABELS`] for a request path.
+pub(crate) fn route_index(path: &str) -> usize {
+    ROUTE_LABELS.iter().position(|&r| r == path).unwrap_or(ROUTE_LABELS.len() - 1)
+}
+
+#[derive(Default)]
+struct RouteStat {
+    lat: LatencyHist,
+    /// (status, count) pairs; a route answers with a handful of distinct
+    /// statuses, so a tiny linear-scan vec beats a map here.
+    statuses: Vec<(u16, u64)>,
+}
+
+/// One latency/status sink per route label. Each route has its own
+/// mutex so `/metrics` scrapes don't contend with `/v1/score` traffic.
+pub(crate) struct HttpMetrics {
+    routes: Vec<Mutex<RouteStat>>,
+}
+
+impl HttpMetrics {
+    pub(crate) fn new() -> HttpMetrics {
+        let routes = ROUTE_LABELS.iter().map(|_| Mutex::new(RouteStat::default())).collect();
+        HttpMetrics { routes }
+    }
+
+    /// Record one completed request (the middleware's single call site).
+    pub(crate) fn record(&self, route: usize, status: u16, latency_ns: u64) {
+        let mut r = self.routes[route].lock().unwrap();
+        r.lat.record_ns(latency_ns);
+        match r.statuses.iter_mut().find(|(s, _)| *s == status) {
+            Some((_, c)) => *c += 1,
+            None => r.statuses.push((status, 1)),
+        }
+    }
+
+    /// Per-route request counts, latency percentiles, and status
+    /// breakdown — the `"http"` section of `GET /stats`. Routes with no
+    /// traffic are omitted.
+    pub(crate) fn to_json(&self) -> Json {
+        let mut routes = Vec::new();
+        for (label, stat) in ROUTE_LABELS.iter().zip(self.routes.iter()) {
+            let r = stat.lock().unwrap();
+            if r.lat.count() == 0 {
+                continue;
+            }
+            let statuses =
+                r.statuses.iter().map(|&(s, c)| (s.to_string(), Json::Num(c as f64))).collect();
+            routes.push((
+                *label,
+                Json::obj(vec![
+                    ("requests", Json::Num(r.lat.count() as f64)),
+                    ("p50_us", Json::Num(r.lat.percentile_ns(50.0) / 1e3)),
+                    ("p99_us", Json::Num(r.lat.percentile_ns(99.0) / 1e3)),
+                    ("status", Json::Obj(statuses)),
+                ]),
+            ));
+        }
+        Json::obj(routes)
+    }
+
+    /// The HTTP-side Prometheus families: request counts by
+    /// route × status and a latency summary (p50/p99 quantiles) by
+    /// route.
+    pub(crate) fn render_prometheus(&self, out: &mut String) {
+        out.push_str("# HELP qwyc_http_requests_total HTTP requests by route and status.\n");
+        out.push_str("# TYPE qwyc_http_requests_total counter\n");
+        for (label, stat) in ROUTE_LABELS.iter().zip(self.routes.iter()) {
+            let r = stat.lock().unwrap();
+            for &(status, count) in &r.statuses {
+                let _ = writeln!(
+                    out,
+                    "qwyc_http_requests_total{{route=\"{label}\",status=\"{status}\"}} {count}"
+                );
+            }
+        }
+        out.push_str("# HELP qwyc_http_request_latency_us HTTP request latency by route.\n");
+        out.push_str("# TYPE qwyc_http_request_latency_us summary\n");
+        for (label, stat) in ROUTE_LABELS.iter().zip(self.routes.iter()) {
+            let r = stat.lock().unwrap();
+            let n = r.lat.count();
+            if n == 0 {
+                continue;
+            }
+            let p50 = r.lat.percentile_ns(50.0) / 1e3;
+            let p99 = r.lat.percentile_ns(99.0) / 1e3;
+            let sum = r.lat.mean_ns() * n as f64 / 1e3;
+            let _ = writeln!(
+                out,
+                "qwyc_http_request_latency_us{{route=\"{label}\",quantile=\"0.5\"}} {p50:.1}"
+            );
+            let _ = writeln!(
+                out,
+                "qwyc_http_request_latency_us{{route=\"{label}\",quantile=\"0.99\"}} {p99:.1}"
+            );
+            let _ = writeln!(out, "qwyc_http_request_latency_us_sum{{route=\"{label}\"}} {sum:.1}");
+            let _ = writeln!(out, "qwyc_http_request_latency_us_count{{route=\"{label}\"}} {n}");
+        }
+    }
+}
+
+/// The engine-side Prometheus families, rendered from the aggregated
+/// serving [`Snapshot`]: per-shard request counters, the exit-position
+/// histogram (the serving-side view of the paper's Figures 5-6),
+/// batch-flush/cache/ops counters, and the end-to-end latency summary.
+pub(crate) fn render_engine_prometheus(snap: &Snapshot, out: &mut String) {
+    out.push_str("# HELP qwyc_requests_total Requests scored across all shards.\n");
+    out.push_str("# TYPE qwyc_requests_total counter\n");
+    let _ = writeln!(out, "qwyc_requests_total {}", snap.requests);
+
+    out.push_str("# HELP qwyc_shard_requests_total Requests scored per shard.\n");
+    out.push_str("# TYPE qwyc_shard_requests_total counter\n");
+    for (i, &n) in snap.shard_requests.iter().enumerate() {
+        let _ = writeln!(out, "qwyc_shard_requests_total{{shard=\"{i}\"}} {n}");
+    }
+
+    out.push_str("# HELP qwyc_request_latency_us End-to-end scoring latency.\n");
+    out.push_str("# TYPE qwyc_request_latency_us summary\n");
+    let _ = writeln!(out, "qwyc_request_latency_us{{quantile=\"0.5\"}} {:.1}", snap.p50_latency_us);
+    let _ = writeln!(
+        out,
+        "qwyc_request_latency_us{{quantile=\"0.99\"}} {:.1}",
+        snap.p99_latency_us
+    );
+    let _ = writeln!(
+        out,
+        "qwyc_request_latency_us_sum {:.1}",
+        snap.mean_latency_us * snap.requests as f64
+    );
+    let _ = writeln!(out, "qwyc_request_latency_us_count {}", snap.requests);
+
+    out.push_str("# HELP qwyc_mean_models Mean base models evaluated per request.\n");
+    out.push_str("# TYPE qwyc_mean_models gauge\n");
+    let _ = writeln!(out, "qwyc_mean_models {:.4}", snap.mean_models);
+    out.push_str("# HELP qwyc_early_exit_fraction Fraction of requests that quit early.\n");
+    out.push_str("# TYPE qwyc_early_exit_fraction gauge\n");
+    let _ = writeln!(out, "qwyc_early_exit_fraction {:.4}", snap.early_frac);
+
+    // Exit positions as a classic cumulative histogram: one bucket per
+    // position that actually saw an exit (bounded by the engine's
+    // position cap, so cardinality cannot run away).
+    out.push_str("# HELP qwyc_exit_position Base models evaluated before the ensemble quit.\n");
+    out.push_str("# TYPE qwyc_exit_position histogram\n");
+    let mut acc = 0u64;
+    let mut models_sum = 0u64;
+    for (pos, &c) in snap.stop_counts.iter().enumerate() {
+        if c == 0 {
+            continue;
+        }
+        acc += c;
+        models_sum += c * pos as u64;
+        let _ = writeln!(out, "qwyc_exit_position_bucket{{le=\"{pos}\"}} {acc}");
+    }
+    let _ = writeln!(out, "qwyc_exit_position_bucket{{le=\"+Inf\"}} {acc}");
+    let _ = writeln!(out, "qwyc_exit_position_sum {models_sum}");
+    let _ = writeln!(out, "qwyc_exit_position_count {acc}");
+
+    out.push_str("# HELP qwyc_batch_flush_total Batch flushes by reason.\n");
+    out.push_str("# TYPE qwyc_batch_flush_total counter\n");
+    let _ = writeln!(out, "qwyc_batch_flush_total{{reason=\"idle\"}} {}", snap.flush_idle);
+    let _ = writeln!(out, "qwyc_batch_flush_total{{reason=\"full\"}} {}", snap.flush_full);
+    let _ = writeln!(out, "qwyc_batch_flush_total{{reason=\"deadline\"}} {}", snap.flush_deadline);
+
+    let o = &snap.ops;
+    out.push_str("# HELP qwyc_cache_events_total Response-cache events.\n");
+    out.push_str("# TYPE qwyc_cache_events_total counter\n");
+    let _ = writeln!(out, "qwyc_cache_events_total{{event=\"hit\"}} {}", o.cache_hits);
+    let _ = writeln!(out, "qwyc_cache_events_total{{event=\"miss\"}} {}", o.cache_misses);
+    let _ = writeln!(out, "qwyc_cache_events_total{{event=\"eviction\"}} {}", o.cache_evictions);
+
+    out.push_str("# HELP qwyc_busy_shed_total Requests refused at admission (all queues full).\n");
+    out.push_str("# TYPE qwyc_busy_shed_total counter\n");
+    let _ = writeln!(out, "qwyc_busy_shed_total {}", o.busy_shed);
+    out.push_str("# HELP qwyc_timeouts_total Requests shed after their deadline expired.\n");
+    out.push_str("# TYPE qwyc_timeouts_total counter\n");
+    let _ = writeln!(out, "qwyc_timeouts_total {}", o.timeouts);
+    out.push_str("# HELP qwyc_shard_restarts_total Shard workers restarted after a panic.\n");
+    out.push_str("# TYPE qwyc_shard_restarts_total counter\n");
+    let _ = writeln!(out, "qwyc_shard_restarts_total {}", o.shard_restarts);
+    out.push_str("# HELP qwyc_reload_total Plan hot-reload attempts by outcome.\n");
+    out.push_str("# TYPE qwyc_reload_total counter\n");
+    let _ = writeln!(out, "qwyc_reload_total{{result=\"ok\"}} {}", o.reload_ok);
+    let _ = writeln!(out, "qwyc_reload_total{{result=\"rejected\"}} {}", o.reload_rejected);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Metrics, ShardedMetrics};
+
+    #[test]
+    fn routes_fold_unknown_paths_into_other() {
+        assert_eq!(route_index("/v1/score"), 0);
+        assert_eq!(route_index("/drain"), 7);
+        assert_eq!(route_index("/.git/config"), ROUTE_LABELS.len() - 1);
+        assert_eq!(ROUTE_LABELS[route_index("/nope")], "other");
+    }
+
+    #[test]
+    fn record_surfaces_in_json_and_prometheus() {
+        let m = HttpMetrics::new();
+        m.record(route_index("/v1/score"), 200, 50_000);
+        m.record(route_index("/v1/score"), 200, 70_000);
+        m.record(route_index("/v1/score"), 503, 10_000);
+        m.record(route_index("/healthz"), 200, 5_000);
+        let j = m.to_json();
+        let score = j.req("/v1/score").unwrap();
+        assert_eq!(score.req("requests").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(score.req("status").unwrap().req("200").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(score.req("status").unwrap().req("503").unwrap().as_usize().unwrap(), 1);
+        assert!(score.req("p99_us").unwrap().as_f64().unwrap() > 0.0);
+        // Untouched routes are omitted from the JSON view.
+        assert!(j.get("/drain").is_none());
+        let mut out = String::new();
+        m.render_prometheus(&mut out);
+        assert!(
+            out.contains("qwyc_http_requests_total{route=\"/v1/score\",status=\"200\"} 2"),
+            "{out}"
+        );
+        assert!(
+            out.contains("qwyc_http_requests_total{route=\"/healthz\",status=\"200\"} 1"),
+            "{out}"
+        );
+        assert!(
+            out.contains("qwyc_http_request_latency_us{route=\"/v1/score\",quantile=\"0.99\"}"),
+            "{out}"
+        );
+        assert!(out.contains("qwyc_http_request_latency_us_count{route=\"/v1/score\"} 3"), "{out}");
+    }
+
+    #[test]
+    fn engine_families_render_from_a_snapshot() {
+        let sm = ShardedMetrics::new(2);
+        sm.shard(0).record_request(10_000, 2, true);
+        sm.shard(0).record_request(12_000, 2, true);
+        sm.shard(1).record_request(20_000, 7, false);
+        sm.ops().cache_hits.fetch_add(4, std::sync::atomic::Ordering::Relaxed);
+        let mut out = String::new();
+        render_engine_prometheus(&sm.snapshot(), &mut out);
+        assert!(out.contains("qwyc_requests_total 3"), "{out}");
+        assert!(out.contains("qwyc_shard_requests_total{shard=\"0\"} 2"), "{out}");
+        assert!(out.contains("qwyc_shard_requests_total{shard=\"1\"} 1"), "{out}");
+        // Cumulative histogram: 2 exits at position 2, all 3 by 7.
+        assert!(out.contains("qwyc_exit_position_bucket{le=\"2\"} 2"), "{out}");
+        assert!(out.contains("qwyc_exit_position_bucket{le=\"7\"} 3"), "{out}");
+        assert!(out.contains("qwyc_exit_position_bucket{le=\"+Inf\"} 3"), "{out}");
+        assert!(out.contains("qwyc_exit_position_sum 11"), "{out}");
+        assert!(out.contains("qwyc_exit_position_count 3"), "{out}");
+        assert!(out.contains("qwyc_cache_events_total{event=\"hit\"} 4"), "{out}");
+        assert!(out.contains("qwyc_reload_total{result=\"ok\"} 0"), "{out}");
+    }
+
+    #[test]
+    fn bare_sink_snapshot_renders_without_shards() {
+        let m = Metrics::new();
+        m.record_request(1_000, 1, true);
+        let mut out = String::new();
+        render_engine_prometheus(&m.snapshot(), &mut out);
+        assert!(out.contains("qwyc_requests_total 1"), "{out}");
+        assert!(!out.contains("shard=\""), "{out}");
+    }
+}

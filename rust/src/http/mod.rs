@@ -1,0 +1,72 @@
+//! Std-only HTTP/1.1 front-end over the sharded serving runtime — the
+//! second protocol surface of one serving stack, NOT a parallel path.
+//! [`crate::coordinator::Server::attach_http`] binds this listener over
+//! the SAME least-queued dispatcher, per-shard [`BatchQueue`] set,
+//! response cache, deadlines, and [`PlanSlot`] as the line protocol, so
+//! a `/v1/score` response is bitwise-identical to the `EVAL` reply for
+//! the same row (rust/tests/http_api.rs pins this at 1 and 4 shards).
+//!
+//! Data plane (keep-alive + pipelining, per-connection recycled
+//! buffers through the coordinator's [`BufPool`]):
+//!
+//! | route             | body                              | reply |
+//! |-------------------|-----------------------------------|-------|
+//! | `POST /v1/score`  | one row (JSON array or CSV line)  | `{"id","label","score","models","latency_us"}` |
+//! | `POST /v1/score-batch` | rows (JSON array-of-arrays or CSV lines) | `{"results":[...],"ok","busy","timeout","error"}` |
+//!
+//! An `X-Deadline-Ms` header bounds queueing latency exactly like the
+//! line protocol's `DEADLINE_MS=` token (`0` opts out of the server
+//! default). Admission verdicts map onto status codes: queue-full
+//! `BUSY` → 503, deadline `TIMEOUT` → 504, per-row engine errors →
+//! 422; the JSON body carries the per-row detail either way.
+//!
+//! Admin plane, all behind per-route latency middleware
+//! ([`metrics::HttpMetrics`]) whose p50/p99 surface in the metrics it
+//! serves:
+//!
+//! - `GET /healthz` — liveness (503 once draining)
+//! - `GET /stats` — [`Snapshot::to_json`] + per-route HTTP latency
+//! - `GET /metrics` — Prometheus text exposition (shard counters,
+//!   exit-position histogram, flush/cache/ops counters, HTTP routes)
+//! - `GET /plan` — live [`ArtifactInfo`] (section table + quantization)
+//! - `POST /reload` — validated hot-swap; staged rejection on 409
+//! - `POST /drain` — stop admission, wait for shard queues to empty
+//!
+//! Request heads are parsed with the same capped reader as the line
+//! protocol (`util::lineio`), headers and body are bounded
+//! ([`parse::MAX_HEADER_LINE`], [`parse::MAX_BODY_BYTES`]), and a
+//! framing-safe bad request (bad body, unknown route) errors that
+//! request only — the connection survives (rust/tests/http_api.rs).
+//!
+//! [`BatchQueue`]: crate::coordinator::BatchQueue
+//! [`PlanSlot`]: crate::plan::PlanSlot
+//! [`BufPool`]: crate::coordinator::server::BufPool
+//! [`Snapshot::to_json`]: crate::coordinator::Snapshot::to_json
+//! [`ArtifactInfo`]: crate::plan::ArtifactInfo
+
+mod body;
+mod client;
+mod conn;
+mod metrics;
+mod parse;
+
+pub use client::{read_response_from, HttpClient, HttpResponse};
+
+pub(crate) use conn::serve_conn;
+
+use crate::coordinator::server::ConnShared;
+use std::sync::Arc;
+
+/// Shared state for every HTTP connection: the same dispatcher/metrics
+/// context the line protocol's connections use, plus the per-route
+/// latency middleware sinks (one instance per listener).
+pub(crate) struct HttpState {
+    pub(crate) ctx: Arc<ConnShared>,
+    pub(crate) routes: metrics::HttpMetrics,
+}
+
+impl HttpState {
+    pub(crate) fn new(ctx: Arc<ConnShared>) -> HttpState {
+        HttpState { ctx, routes: metrics::HttpMetrics::new() }
+    }
+}

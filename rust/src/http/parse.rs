@@ -1,0 +1,328 @@
+//! HTTP/1.1 request-head parsing over the shared capped line reader
+//! (`util::lineio`) — the same oversized-input hardening the line
+//! protocol uses, applied per header line. Everything is bounded:
+//! one line ([`MAX_HEADER_LINE`]), the header count ([`MAX_HEADERS`]),
+//! and the declared body ([`MAX_BODY_BYTES`]). The head lands in a
+//! caller-owned [`RequestHead`] whose `String` fields are reused across
+//! requests on a keep-alive connection.
+
+use crate::util::lineio::{read_line_capped, LineRead};
+use std::io::BufRead;
+
+/// Hard cap on the request line and each header line. 8 KiB matches
+/// the de-facto server default; an oversized line answers 431 and
+/// closes (framing is unrecoverable once a line is discarded).
+pub(crate) const MAX_HEADER_LINE: usize = 8 * 1024;
+
+/// Cap on header count per request.
+pub(crate) const MAX_HEADERS: usize = 64;
+
+/// Cap on a request body (`Content-Length`). Scoring batches are rows
+/// of f32 text — 1 MiB is thousands of rows.
+pub(crate) const MAX_BODY_BYTES: usize = 1024 * 1024;
+
+/// Request body encoding, from `Content-Type`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum BodyKind {
+    /// `application/json` (the default when absent).
+    Json,
+    /// Any `Content-Type` mentioning `csv` (e.g. `text/csv`).
+    Csv,
+}
+
+/// Request method; only the two the router serves are distinguished.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum Method {
+    Get,
+    Post,
+    Other,
+}
+
+/// One parsed request head: the request line plus the few headers the
+/// server acts on. Reused across requests on a connection (the
+/// `target` buffer is cleared and refilled, not reallocated).
+#[derive(Debug)]
+pub(crate) struct RequestHead {
+    pub(crate) method: Method,
+    pub(crate) target: String,
+    /// HTTP/1.1 defaults to keep-alive; `Connection: close` (or an
+    /// HTTP/1.0 peer without `keep-alive`) turns it off.
+    pub(crate) keep_alive: bool,
+    pub(crate) content_length: usize,
+    pub(crate) content_type: BodyKind,
+    /// `X-Deadline-Ms` header (0 = explicit opt-out of the server
+    /// default, like the line protocol's `DEADLINE_MS=0`).
+    pub(crate) deadline_ms: Option<u64>,
+    /// Peer sent `Expect: 100-continue` and is waiting for the interim
+    /// response before streaming the body (curl does this for larger
+    /// POSTs).
+    pub(crate) expect_continue: bool,
+}
+
+impl Default for RequestHead {
+    fn default() -> Self {
+        RequestHead {
+            method: Method::Other,
+            target: String::new(),
+            keep_alive: true,
+            content_length: 0,
+            content_type: BodyKind::Json,
+            deadline_ms: None,
+            expect_continue: false,
+        }
+    }
+}
+
+/// Why a request head could not be produced.
+pub(crate) enum HeadError {
+    /// Clean end of the connection between requests (or plain I/O
+    /// failure) — nothing to answer.
+    Closed,
+    /// Malformed or oversized head. Framing is lost, so the caller
+    /// answers `status`/`message` once and closes the connection.
+    Fatal { status: u16, message: String },
+}
+
+/// Read and parse one request head. Blank lines before the request
+/// line are skipped (robustness; RFC 9112 §2.2). On `Fatal` the
+/// connection must close after the error response: an unparseable or
+/// discarded line means the next request boundary is unknown.
+pub(crate) fn read_head<R: BufRead>(
+    reader: &mut R,
+    line_buf: &mut Vec<u8>,
+    head: &mut RequestHead,
+) -> Result<(), HeadError> {
+    *head = RequestHead { target: std::mem::take(&mut head.target), ..RequestHead::default() };
+    head.target.clear();
+    // Request line (skipping interstitial blank lines).
+    loop {
+        match read_line_capped(reader, MAX_HEADER_LINE, line_buf) {
+            Err(_) | Ok(LineRead::Eof) => return Err(HeadError::Closed),
+            Ok(LineRead::TooLong) => {
+                return Err(HeadError::Fatal {
+                    status: 431,
+                    message: format!("request line exceeds {MAX_HEADER_LINE} bytes"),
+                })
+            }
+            Ok(LineRead::Line) => {}
+        }
+        let line = trim_crlf(line_buf);
+        if line.is_empty() {
+            continue;
+        }
+        parse_request_line(line, head)?;
+        break;
+    }
+    // Header lines until the blank separator.
+    for _ in 0..=MAX_HEADERS {
+        match read_line_capped(reader, MAX_HEADER_LINE, line_buf) {
+            Err(_) | Ok(LineRead::Eof) => {
+                return Err(HeadError::Fatal {
+                    status: 400,
+                    message: "truncated request head".to_string(),
+                })
+            }
+            Ok(LineRead::TooLong) => {
+                return Err(HeadError::Fatal {
+                    status: 431,
+                    message: format!("header line exceeds {MAX_HEADER_LINE} bytes"),
+                })
+            }
+            Ok(LineRead::Line) => {}
+        }
+        let line = trim_crlf(line_buf);
+        if line.is_empty() {
+            return Ok(());
+        }
+        parse_header_line(line, head)?;
+    }
+    Err(HeadError::Fatal {
+        status: 431,
+        message: format!("more than {MAX_HEADERS} headers"),
+    })
+}
+
+/// Strip one trailing `\r` (the reader already stripped the `\n`) and
+/// decode lossily — garbage bytes become characters the parser rejects.
+fn trim_crlf(buf: &[u8]) -> std::borrow::Cow<'_, str> {
+    let b = buf.strip_suffix(b"\r").unwrap_or(buf);
+    String::from_utf8_lossy(b)
+}
+
+fn parse_request_line(line: &str, head: &mut RequestHead) -> Result<(), HeadError> {
+    let bad = || HeadError::Fatal {
+        status: 400,
+        message: "malformed request line (want: METHOD TARGET HTTP/1.x)".to_string(),
+    };
+    let mut parts = line.split(' ');
+    let method = parts.next().ok_or_else(bad)?;
+    let target = parts.next().ok_or_else(bad)?;
+    let version = parts.next().ok_or_else(bad)?;
+    if parts.next().is_some() || method.is_empty() || target.is_empty() {
+        return Err(bad());
+    }
+    head.method = match method {
+        "GET" => Method::Get,
+        "POST" => Method::Post,
+        _ => Method::Other,
+    };
+    // Ignore any query string: the API carries parameters in headers
+    // and bodies.
+    let path = target.split('?').next().unwrap_or(target);
+    head.target.push_str(path);
+    match version {
+        "HTTP/1.1" => head.keep_alive = true,
+        "HTTP/1.0" => head.keep_alive = false,
+        _ => {
+            return Err(HeadError::Fatal {
+                status: 505,
+                message: format!("unsupported protocol version '{version}'"),
+            })
+        }
+    }
+    Ok(())
+}
+
+fn parse_header_line(line: &str, head: &mut RequestHead) -> Result<(), HeadError> {
+    let Some((name, value)) = line.split_once(':') else {
+        return Err(HeadError::Fatal {
+            status: 400,
+            message: format!("malformed header line '{line}'"),
+        });
+    };
+    let value = value.trim();
+    // Header names are ASCII; eq_ignore_ascii_case avoids allocating a
+    // lowercased copy per header.
+    if name.eq_ignore_ascii_case("content-length") {
+        let n = value.parse::<usize>().map_err(|_| HeadError::Fatal {
+            status: 400,
+            message: format!("bad Content-Length '{value}'"),
+        })?;
+        if n > MAX_BODY_BYTES {
+            return Err(HeadError::Fatal {
+                status: 413,
+                message: format!("body of {n} bytes exceeds cap {MAX_BODY_BYTES}"),
+            });
+        }
+        head.content_length = n;
+    } else if name.eq_ignore_ascii_case("connection") {
+        if value.eq_ignore_ascii_case("close") {
+            head.keep_alive = false;
+        } else if value.eq_ignore_ascii_case("keep-alive") {
+            head.keep_alive = true;
+        }
+    } else if name.eq_ignore_ascii_case("content-type") {
+        if value.to_ascii_lowercase().contains("csv") {
+            head.content_type = BodyKind::Csv;
+        }
+    } else if name.eq_ignore_ascii_case("x-deadline-ms") {
+        let ms = value.parse::<u64>().map_err(|_| HeadError::Fatal {
+            status: 400,
+            message: format!("bad X-Deadline-Ms '{value}'"),
+        })?;
+        head.deadline_ms = Some(ms);
+    } else if name.eq_ignore_ascii_case("transfer-encoding") {
+        // Content-Length framing only: a chunked body we cannot frame
+        // is fatal by definition.
+        return Err(HeadError::Fatal {
+            status: 501,
+            message: "Transfer-Encoding is not supported (use Content-Length)".to_string(),
+        });
+    } else if name.eq_ignore_ascii_case("expect") {
+        if value.eq_ignore_ascii_case("100-continue") {
+            head.expect_continue = true;
+        }
+    }
+    // Every other header is ignored.
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn parse(raw: &[u8]) -> Result<RequestHead, HeadError> {
+        let mut head = RequestHead::default();
+        let mut buf = Vec::new();
+        read_head(&mut Cursor::new(raw.to_vec()), &mut buf, &mut head)?;
+        Ok(head)
+    }
+
+    #[test]
+    fn parses_a_full_head() {
+        let head = parse(
+            b"POST /v1/score?x=1 HTTP/1.1\r\nHost: a\r\nContent-Type: text/csv\r\n\
+              Content-Length: 12\r\nX-Deadline-Ms: 250\r\nConnection: close\r\n\r\n",
+        )
+        .unwrap_or_else(|_| panic!("head should parse"));
+        assert_eq!(head.method, Method::Post);
+        assert_eq!(head.target, "/v1/score");
+        assert_eq!(head.content_length, 12);
+        assert_eq!(head.content_type, BodyKind::Csv);
+        assert_eq!(head.deadline_ms, Some(250));
+        assert!(!head.keep_alive);
+    }
+
+    #[test]
+    fn defaults_and_blank_line_skip() {
+        let head = parse(b"\r\n\r\nGET /healthz HTTP/1.1\r\n\r\n")
+            .unwrap_or_else(|_| panic!("head should parse"));
+        assert_eq!(head.method, Method::Get);
+        assert_eq!(head.target, "/healthz");
+        assert!(head.keep_alive);
+        assert_eq!(head.content_length, 0);
+        assert_eq!(head.content_type, BodyKind::Json);
+        assert_eq!(head.deadline_ms, None);
+    }
+
+    #[test]
+    fn rejects_malformed_and_oversized_input() {
+        match parse(b"GARBAGE\r\n\r\n") {
+            Err(HeadError::Fatal { status: 400, .. }) => {}
+            _ => panic!("expected 400"),
+        }
+        match parse(b"GET / HTTP/2.0\r\n\r\n") {
+            Err(HeadError::Fatal { status: 505, .. }) => {}
+            _ => panic!("expected 505"),
+        }
+        let mut big = b"GET / HTTP/1.1\r\nX-Big: ".to_vec();
+        let target = big.len() + MAX_HEADER_LINE + 10;
+        big.resize(target, b'a');
+        big.extend_from_slice(b"\r\n\r\n");
+        match parse(&big) {
+            Err(HeadError::Fatal { status: 431, .. }) => {}
+            _ => panic!("expected 431"),
+        }
+        match parse(b"POST / HTTP/1.1\r\nContent-Length: 99999999\r\n\r\n") {
+            Err(HeadError::Fatal { status: 413, .. }) => {}
+            _ => panic!("expected 413"),
+        }
+        match parse(b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n") {
+            Err(HeadError::Fatal { status: 501, .. }) => {}
+            _ => panic!("expected 501"),
+        }
+        match parse(b"GET / HTTP/1.1\r\nContent-Length") {
+            Err(HeadError::Fatal { status: 400, .. }) => {}
+            _ => panic!("expected 400 for truncated head"),
+        }
+    }
+
+    #[test]
+    fn head_buffer_is_reused_across_requests() {
+        let raw = b"GET /stats HTTP/1.1\r\n\r\nGET /healthz HTTP/1.0\r\n\r\n";
+        let mut r = Cursor::new(raw.to_vec());
+        let mut head = RequestHead::default();
+        let mut buf = Vec::new();
+        assert!(read_head(&mut r, &mut buf, &mut head).is_ok());
+        assert_eq!(head.target, "/stats");
+        assert!(read_head(&mut r, &mut buf, &mut head).is_ok());
+        // The second parse fully resets the first request's state.
+        assert_eq!(head.target, "/healthz");
+        assert!(!head.keep_alive);
+        assert!(matches!(
+            read_head(&mut r, &mut buf, &mut head),
+            Err(HeadError::Closed)
+        ));
+    }
+}

@@ -17,7 +17,9 @@
 //!   `qwyc-plan-bin-v1`, compiled into one
 //!   [`plan::CompiledPlan`]) every evaluator consumes through one shared
 //!   sweep core ([`qwyc::sweep`]), and a serving [`coordinator`] with
-//!   dynamic batching and early-exit scheduling, backed by [`runtime`]
+//!   dynamic batching and early-exit scheduling — exposed over two wire
+//!   surfaces sharing one shard set: the line protocol and a std-only
+//!   HTTP/1.1 front-end ([`http`]) — backed by [`runtime`]
 //!   (PJRT) for the AOT-compiled dense path. Embedders program the whole
 //!   train → optimize → compile → evaluate flow through the typed
 //!   [`pipeline`] facade (`use qwyc::prelude::*`); every fallible API
@@ -36,6 +38,7 @@ pub mod error;
 pub mod experiments;
 pub mod fan;
 pub mod gbt;
+pub mod http;
 pub mod lattice;
 pub mod orderings;
 pub mod pipeline;

@@ -10,12 +10,15 @@
 //!   plan-info    print an artifact's header/version/section sizes
 //!   simulate     evaluate a plan on a dataset
 //!   serve        start the supervised sharded TCP coordinator from a plan
+//!                (--http-port N additionally binds the std-only HTTP/1.1
+//!                 front-end over the same shard set)
 //!   reload       validated hot-swap of a running server's plan (RELOAD)
 //!   drain        stop admission on a running server and drain its queues
 //!   bench-client load-test a running server — closed-loop (N pipelined
 //!                connections, BUSY retried with jittered exponential
 //!                backoff) or open-loop (`--target-rps`: fixed-rate
-//!                lateness-corrected arrival schedule, no retries)
+//!                lateness-corrected arrival schedule, no retries); --http
+//!                drives POST /v1/score instead of the line protocol
 //!   experiment   regenerate paper figures/tables (fig1..fig6, tables, all)
 //!
 //! Every subcommand that takes `--plan` accepts either artifact format
@@ -37,6 +40,7 @@ use qwyc::ensemble::Ensemble;
 use qwyc::error::QwycError;
 use qwyc::experiments::{figures, tables, FigConfig};
 use qwyc::gbt::GbtParams;
+use qwyc::http::HttpClient;
 use qwyc::lattice::LatticeParams;
 use qwyc::pipeline::{ModelSpec, PlanBuilder, TrainSpec};
 use qwyc::plan::{PlanArtifact, PlanFormat, QwycPlan};
@@ -44,6 +48,7 @@ use qwyc::qwyc::{optimize_thresholds_for_order, simulate, FastClassifier, QwycCo
 #[cfg(feature = "pjrt")]
 use qwyc::runtime::engine::PjrtEngine;
 use qwyc::util::cli::Args;
+use qwyc::util::json::Json;
 use qwyc::util::pool::Pool;
 use std::path::{Path, PathBuf};
 use std::time::Duration;
@@ -108,12 +113,17 @@ USAGE: qwyc <subcommand> [flags]
                [--adaptive  (depth-scaled flush deadlines; shows as policy= in STATS)]
                [--cache-bytes 0  (per-shard response-cache budget; 0 = off)]
                [--deadline-ms 0  (default request deadline; 0 = none)]
+               [--http-port 0  (also serve HTTP/1.1 on the same host over the
+                same shards: POST /v1/score[-batch], GET /healthz /stats
+                /metrics /plan, POST /reload /drain; 0 = line protocol only)]
   reload       --addr 127.0.0.1:7077 --plan plan.bin     (validated hot-swap;
                either artifact format; exits non-zero on RELOAD_REJECTED)
   drain        --addr 127.0.0.1:7077     (stop admission, drain the queues)
   bench-client --addr 127.0.0.1:7077 --dataset ... --requests 5000
                [--pipeline 64 --concurrency 1 --deadline-ms 0]
                [--target-rps 0  (open-loop: fixed-rate arrivals; 0 = closed loop)]
+               [--http  (--addr is an HTTP listener: drive POST /v1/score with
+                the same closed/open-loop shapes, 503 retried like BUSY)]
   experiment   fig1|fig2|fig3|fig4|fig5|fig6|table1|tables|all
                [--scale 0.1 --trees 500 --max-opt 3000 --runs 5 --out results/]
 ";
@@ -383,6 +393,7 @@ fn serve(args: &Args) -> Result<(), QwycError> {
         },
         cache_bytes: args.get_usize("cache-bytes", 0)?,
     };
+    let http_port = args.get_u64("http-port", 0)?;
     let loaded = load_artifact(args)?;
     args.check_unknown()?;
 
@@ -413,7 +424,7 @@ fn serve(args: &Args) -> Result<(), QwycError> {
         // No PlanSlot → the server answers RELOAD with an ERR.
         let plan = loaded.to_plan()?;
         let (ens, fc) = (plan.ensemble.clone(), plan.fc.clone());
-        let server = Server::start(
+        let mut server = Server::start(
             &addr,
             move |_shard| -> Box<dyn qwyc::runtime::engine::Engine> {
                 let rt = qwyc::runtime::Runtime::open(Path::new(&artifacts_dir))
@@ -422,14 +433,34 @@ fn serve(args: &Args) -> Result<(), QwycError> {
             },
             config,
         )?;
+        attach_http_if(&mut server, &addr, http_port)?;
         return stats_loop(server);
     }
     let _ = (&backend, &artifact, &artifacts_dir);
     // The artifact is already compiled (for binary plans, load itself was
     // near-free); all shards share the same immutable Arc'd plan, and
-    // RELOAD swaps it at batch boundaries.
-    let server = Server::start_with_plan(&addr, loaded.compiled(), config)?;
+    // RELOAD swaps it at batch boundaries. start_with_artifact (vs
+    // start_with_plan) keeps the artifact's real name/metadata so
+    // `GET /plan` reports the deployed identity, not a placeholder.
+    let mut server = Server::start_with_artifact(&addr, &loaded, config)?;
+    attach_http_if(&mut server, &addr, http_port)?;
     stats_loop(server)
+}
+
+/// Bind the HTTP/1.1 front-end next to the line-protocol listener —
+/// same host as `--addr`, port `--http-port` — over the SAME shard set.
+/// Port 0 leaves the line protocol as the only surface.
+fn attach_http_if(server: &mut Server, addr: &str, http_port: u64) -> Result<(), QwycError> {
+    if http_port == 0 {
+        return Ok(());
+    }
+    let host = addr.rsplit_once(':').map(|(h, _)| h).unwrap_or("127.0.0.1");
+    let bound = server.attach_http(&format!("{host}:{http_port}"))?;
+    println!(
+        "http listening on {bound} (POST /v1/score[-batch], GET /healthz /stats /metrics /plan, \
+         POST /reload /drain)"
+    );
+    Ok(())
 }
 
 /// Print the aggregated per-shard metrics every 10s, forever. Uses the
@@ -502,10 +533,11 @@ fn bench_client(args: &Args) -> Result<(), QwycError> {
     let concurrency = args.get_usize("concurrency", 1)?.max(1);
     let deadline_ms = args.get_u64("deadline-ms", 0)?;
     let target_rps = args.get_f64("target-rps", 0.0)?;
+    let http = args.get_bool("http", false)?;
     let (_, te) = load_data(args)?;
     args.check_unknown()?;
     if target_rps > 0.0 {
-        return bench_open_loop(&addr, &te, requests, concurrency, deadline_ms, target_rps);
+        return bench_open_loop(&addr, &te, requests, concurrency, deadline_ms, target_rps, http);
     }
 
     // `--concurrency N` opens N pipelined connections so an N-shard
@@ -520,7 +552,13 @@ fn bench_client(args: &Args) -> Result<(), QwycError> {
             .enumerate()
             .map(|(c, &n)| {
                 let te = &te;
-                s.spawn(move || run_conn_load(&addr, te, n, pipeline, c * 7919, deadline_ms))
+                s.spawn(move || {
+                    if http {
+                        run_conn_load_http(&addr, te, n, pipeline, c * 7919, deadline_ms)
+                    } else {
+                        run_conn_load(&addr, te, n, pipeline, c * 7919, deadline_ms)
+                    }
+                })
             })
             .collect();
         handles.into_iter().map(|h| h.join().unwrap()).collect()
@@ -579,8 +617,20 @@ fn bench_client(args: &Args) -> Result<(), QwycError> {
         qwyc::util::stats::percentile_sorted(&lat_us, 99.0),
         tot.models_sum as f64 / answered as f64
     );
-    let mut client = Client::connect(&addr)?;
-    println!("server: {}", client.stats()?);
+    print_server_stats(&addr, http)
+}
+
+/// Post-run server-side view: `STATS` over the line protocol, or
+/// `GET /stats` when the benchmark drove the HTTP front-end.
+fn print_server_stats(addr: &std::net::SocketAddr, http: bool) -> Result<(), QwycError> {
+    if http {
+        let mut client = HttpClient::connect(addr)?;
+        let resp = client.request("GET", "/stats", &[], b"")?;
+        println!("server stats:\n{}", resp.body.trim_end());
+    } else {
+        let mut client = Client::connect(addr)?;
+        println!("server: {}", client.stats()?);
+    }
     Ok(())
 }
 
@@ -625,6 +675,7 @@ fn bench_open_loop(
     concurrency: usize,
     deadline_ms: u64,
     target_rps: f64,
+    http: bool,
 ) -> Result<(), QwycError> {
     let counts: Vec<usize> = (0..concurrency)
         .map(|c| requests / concurrency + usize::from(c < requests % concurrency))
@@ -645,7 +696,13 @@ fn bench_open_loop(
                     deadline_ms,
                     start,
                 };
-                s.spawn(move || run_conn_open(addr, te, cfg))
+                s.spawn(move || {
+                    if http {
+                        run_conn_open_http(addr, te, cfg)
+                    } else {
+                        run_conn_open(addr, te, cfg)
+                    }
+                })
             })
             .collect();
         handles.into_iter().map(|h| h.join().unwrap()).collect()
@@ -685,9 +742,7 @@ fn bench_open_loop(
         qwyc::util::stats::percentile_sorted(&lat_us, 99.0),
         tot.models_sum as f64 / tot.ok.max(1) as f64
     );
-    let mut client = Client::connect(addr)?;
-    println!("server: {}", client.stats()?);
-    Ok(())
+    print_server_stats(addr, http)
 }
 
 /// One open-loop connection: the writer (this thread) follows the
@@ -778,6 +833,79 @@ fn run_conn_open(
             wr.write_all(buf.as_bytes()).map_err(io_err)?;
         }
         read_side.join().expect("open-loop reader thread")
+    })
+}
+
+/// [`run_conn_open`] over the HTTP front-end: the writer half follows
+/// the same absolute arrival schedule issuing raw `POST /v1/score`
+/// requests while a reader thread drains responses. HTTP/1.1 answers
+/// FIFO per connection, so the k-th response pairs with the k-th send —
+/// no id lookup — but the send-instant slots stay atomic because the
+/// reader races the writer for fresh entries.
+fn run_conn_open_http(
+    addr: &std::net::SocketAddr,
+    te: &Dataset,
+    cfg: OpenLoopConn,
+) -> Result<OpenLoad, QwycError> {
+    use std::fmt::Write as _;
+    use std::io::Write;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    let io_err = |e: std::io::Error| QwycError::Io(format!("open-loop http connection: {e}"));
+    let stream = std::net::TcpStream::connect(addr).map_err(io_err)?;
+    stream.set_nodelay(true).ok();
+    let mut wr = stream.try_clone().map_err(io_err)?;
+    let mut reader = std::io::BufReader::new(stream);
+    // Send instants in nanos since `cfg.start`, indexed by send order.
+    let sends: Vec<AtomicU64> = (0..cfg.requests).map(|_| AtomicU64::new(0)).collect();
+
+    std::thread::scope(|s| -> Result<OpenLoad, QwycError> {
+        let sends_ref = &sends;
+        let reader_cfg = &cfg;
+        let read_side = s.spawn(move || -> Result<OpenLoad, QwycError> {
+            let mut load = OpenLoad::default();
+            for k in 0..reader_cfg.requests {
+                let resp = qwyc::http::read_response_from(&mut reader).map_err(io_err)?;
+                let now_ns = reader_cfg.start.elapsed().as_nanos() as u64;
+                match resp.status {
+                    200 => {
+                        let sent_ns = sends_ref[k].load(Ordering::Acquire);
+                        load.lat_us.push(now_ns.saturating_sub(sent_ns) as f64 / 1_000.0);
+                        if let Ok(j) = Json::parse(&resp.body) {
+                            if let Some(m) = j.get("models") {
+                                load.models_sum += m.as_f64().unwrap_or(0.0) as u64;
+                            }
+                        }
+                        load.ok += 1;
+                    }
+                    503 => load.busy += 1,
+                    504 => load.timeouts += 1,
+                    _ => load.errors += 1,
+                }
+            }
+            Ok(load)
+        });
+
+        let mut body = String::new();
+        let mut req = String::new();
+        for k in 0..cfg.requests {
+            let sched = cfg.start + Duration::from_nanos(cfg.phase_ns + k as u64 * cfg.interval_ns);
+            let now = std::time::Instant::now();
+            if sched > now {
+                std::thread::sleep(sched - now);
+            }
+            // Late? Send immediately — the schedule is never re-based.
+            write_row_body(&mut body, te.row((cfg.row_offset + k) % te.n));
+            req.clear();
+            let _ = write!(req, "POST /v1/score HTTP/1.1\r\nHost: qwyc\r\n");
+            if cfg.deadline_ms > 0 {
+                let _ = write!(req, "X-Deadline-Ms: {}\r\n", cfg.deadline_ms);
+            }
+            let _ = write!(req, "Content-Length: {}\r\n\r\n{body}", body.len());
+            sends[k].store(cfg.start.elapsed().as_nanos() as u64, Ordering::Release);
+            wr.write_all(req.as_bytes()).map_err(io_err)?;
+        }
+        read_side.join().expect("open-loop http reader thread")
     })
 }
 
@@ -891,6 +1019,115 @@ fn run_conn_load(
                 return Err(QwycError::Io(format!(
                     "unexpected reply: RELOAD_REJECTED {stage}: {why}"
                 )))
+            }
+        }
+    }
+    Ok(load)
+}
+
+/// Format a feature row as the JSON array body `POST /v1/score` takes,
+/// with the same `{v}` float formatting the line protocol's `EVAL`
+/// encoder uses — both surfaces put byte-identical feature text on the
+/// wire, which is what makes the bitwise-equivalence test meaningful.
+fn write_row_body(body: &mut String, row: &[f32]) {
+    use std::fmt::Write as _;
+    body.clear();
+    body.push('[');
+    for (i, v) in row.iter().enumerate() {
+        if i > 0 {
+            body.push(',');
+        }
+        let _ = write!(body, "{v}");
+    }
+    body.push(']');
+}
+
+/// One pipelined `POST /v1/score` send (no response read).
+fn send_score(
+    client: &mut HttpClient,
+    body: &mut String,
+    row: &[f32],
+    deadline_hdr: &str,
+    deadline_ms: u64,
+) -> Result<(), QwycError> {
+    write_row_body(body, row);
+    let with_deadline = [("X-Deadline-Ms", deadline_hdr)];
+    let headers: &[(&str, &str)] = if deadline_ms > 0 { &with_deadline } else { &[] };
+    client
+        .send("POST", "/v1/score", headers, body.as_bytes())
+        .map_err(|e| QwycError::Io(format!("http send: {e}")))
+}
+
+/// [`run_conn_load`] over the HTTP front-end: the same closed-loop
+/// pipelined shape (keep up to `pipeline` `POST /v1/score` sends in
+/// flight, then drain) and the same retry policy, with 503 standing in
+/// for `BUSY` and 504 for `TIMEOUT`. HTTP/1.1 answers FIFO per
+/// connection, so in-flight requests live in a queue matched by arrival
+/// order instead of a by-id map.
+fn run_conn_load_http(
+    addr: &std::net::SocketAddr,
+    te: &Dataset,
+    requests: usize,
+    pipeline: usize,
+    row_offset: usize,
+    deadline_ms: u64,
+) -> Result<ConnLoad, QwycError> {
+    let mut client = HttpClient::connect(addr)?;
+    let mut rng = qwyc::util::rng::Rng::new(0x9e3779b9 ^ row_offset as u64);
+    let (mut sent, mut done) = (0usize, 0usize);
+    let mut load = ConnLoad { lat_us: Vec::with_capacity(requests), ..Default::default() };
+    let mut outstanding: std::collections::VecDeque<(usize, u32)> =
+        std::collections::VecDeque::new();
+    let deadline_hdr = deadline_ms.to_string();
+    let mut body = String::new();
+    let mut err_shown = 0usize;
+    while done < requests {
+        while sent < requests && outstanding.len() < pipeline {
+            let row = row_offset + sent;
+            send_score(&mut client, &mut body, te.row(row % te.n), &deadline_hdr, deadline_ms)?;
+            outstanding.push_back((row, 1));
+            sent += 1;
+        }
+        let resp = client.read_response().map_err(|e| QwycError::Io(format!("http: {e}")))?;
+        let (row, attempt) = outstanding
+            .pop_front()
+            .ok_or_else(|| QwycError::Io("response without an in-flight request".into()))?;
+        match resp.status {
+            200 => {
+                let j = Json::parse(&resp.body)?;
+                load.models_sum += j.req("models")?.as_f64()? as u64;
+                load.lat_us.push(j.req("latency_us")?.as_f64()?);
+                done += 1;
+            }
+            503 => {
+                load.busy += 1;
+                if attempt >= RETRY_MAX_ATTEMPTS {
+                    load.shed += 1;
+                    done += 1;
+                } else {
+                    std::thread::sleep(retry_backoff(attempt, &mut rng));
+                    let r = te.row(row % te.n);
+                    send_score(&mut client, &mut body, r, &deadline_hdr, deadline_ms)?;
+                    // A retry goes to the back of the FIFO — it is also
+                    // the newest send on the wire, so order holds.
+                    outstanding.push_back((row, attempt + 1));
+                    load.retries += 1;
+                }
+            }
+            504 => {
+                load.timeouts += 1;
+                done += 1;
+            }
+            422 => {
+                load.errors += 1;
+                done += 1;
+                if err_shown < 3 {
+                    eprintln!("request for row {row} failed: {}", resp.body);
+                    err_shown += 1;
+                }
+            }
+            other => {
+                return Err(QwycError::Io(format!("unexpected HTTP {other}: {}", resp.body)));
             }
         }
     }

@@ -359,6 +359,74 @@ impl ArtifactInfo {
         }
         out
     }
+
+    /// Structured render of the same report — what the HTTP admin plane
+    /// serves from `GET /plan`. Binary artifacts carry the full section
+    /// table (with the writer's per-section alignment padding, computed
+    /// exactly as in [`ArtifactInfo::render`]) and the quantization
+    /// summary (`null` for raw-threshold plans).
+    pub fn to_json(&self) -> Json {
+        match self {
+            ArtifactInfo::Json { name, t, n_features } => Json::obj(vec![
+                ("format", Json::str("qwyc-plan-v1")),
+                ("name", Json::str(name)),
+                ("t", Json::Num(*t as f64)),
+                ("n_features", Json::Num(*n_features as f64)),
+            ]),
+            ArtifactInfo::Binary(info) => {
+                let sections: Vec<Json> = info
+                    .sections
+                    .iter()
+                    .enumerate()
+                    .map(|(k, s)| {
+                        let next =
+                            info.sections.get(k + 1).map_or(info.file_len, |n| n.offset);
+                        let pad = next.saturating_sub(s.offset + s.len);
+                        Json::obj(vec![
+                            ("name", Json::str(&s.name)),
+                            ("offset", Json::Num(s.offset as f64)),
+                            ("bytes", Json::Num(s.len as f64)),
+                            ("pad", Json::Num(pad as f64)),
+                        ])
+                    })
+                    .collect();
+                let quantization = if info.edge_counts.is_empty() {
+                    Json::Null
+                } else {
+                    let total: u64 = info.edge_counts.iter().map(|&c| u64::from(c)).sum();
+                    let bank = info
+                        .sections
+                        .iter()
+                        .find(|s| s.name == "quant_nodes")
+                        .map_or(0, |s| s.len);
+                    Json::obj(vec![
+                        ("features", Json::Num(info.edge_counts.len() as f64)),
+                        ("bin_edges", Json::Num(total as f64)),
+                        ("bank_bytes", Json::Num(bank as f64)),
+                        (
+                            "edges_per_feature",
+                            Json::Arr(
+                                info.edge_counts
+                                    .iter()
+                                    .map(|&c| Json::Num(f64::from(c)))
+                                    .collect(),
+                            ),
+                        ),
+                    ])
+                };
+                Json::obj(vec![
+                    ("format", Json::str("qwyc-plan-bin-v1")),
+                    ("version", Json::Num(f64::from(info.version))),
+                    ("name", Json::str(&info.plan_name)),
+                    ("t", Json::Num(info.t as f64)),
+                    ("n_features", Json::Num(info.n_features as f64)),
+                    ("file_len", Json::Num(info.file_len as f64)),
+                    ("sections", Json::Arr(sections)),
+                    ("quantization", quantization),
+                ])
+            }
+        }
+    }
 }
 
 /// The single load/save surface for plan artifacts, format-agnostic.
@@ -520,6 +588,22 @@ impl PlanArtifact {
             t: plan.fc.t(),
             n_features: plan.meta.n_features,
         })
+    }
+
+    /// Header-level view of a LIVE compiled plan, no file involved: the
+    /// plan is encoded to the binary layout in memory and inspected —
+    /// exactly what `GET /plan` reports for the currently-deployed
+    /// generation (section table, padding, quantization summary).
+    pub fn live_info(
+        meta: &PlanMeta,
+        ensemble_name: &str,
+        compiled: &CompiledPlan,
+    ) -> Result<ArtifactInfo, QwycError> {
+        let bytes = binary::encode(meta, ensemble_name, compiled);
+        // `inspect` validates section alignment against the buffer base,
+        // so route through the same aligned storage loads use.
+        let buf = binary::AlignedBuf::from_bytes(&bytes);
+        Ok(ArtifactInfo::Binary(binary::inspect(buf.bytes())?))
     }
 }
 

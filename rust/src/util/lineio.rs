@@ -1,0 +1,128 @@
+//! Capped line reading over any [`BufRead`] — the oversized-input
+//! hardening shared by every text front-end. Both protocol surfaces
+//! parse with it:
+//!
+//! - the line protocol (`coordinator::server`, one request per line,
+//!   capped at `MAX_LINE_BYTES`), and
+//! - the HTTP/1.1 request parser (`http::parse`, request line and each
+//!   header line capped independently),
+//!
+//! so "a hostile peer streams an endless line" costs O(cap) memory in
+//! one audited place instead of per-protocol copies drifting apart.
+
+use std::io::BufRead;
+
+/// One line read with a hard byte cap. The bytes land in the caller's
+/// reusable buffer; `Line` just flags that it holds a complete line.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LineRead {
+    /// The buffer holds one complete line (terminator stripped).
+    Line,
+    /// The line exceeded the cap; it has been consumed from the stream.
+    TooLong,
+    /// Clean end of stream with no pending bytes.
+    Eof,
+}
+
+/// Read one `\n`-terminated line of at most `cap` bytes into `buf`
+/// (cleared first) via `fill_buf`/`consume` — unlike
+/// `BufRead::read_line`, an oversized (or maliciously endless) line is
+/// discarded as it streams in instead of being accumulated, so one bad
+/// client line costs O(cap) memory, and the reused buffer means a
+/// steady request stream stops allocating here after warmup. A final
+/// unterminated line (client half-wrote then shut down its write side)
+/// is returned as a normal line at EOF. Decoding stays lossy at the
+/// call site (`String::from_utf8_lossy`) — binary garbage turns into a
+/// line the protocol parser rejects, which is the per-line error
+/// behavior we want. Only the trailing `\n` is stripped; a `\r` before
+/// it is the caller's to trim (the line protocol trims whitespace, the
+/// HTTP parser strips the single optional `\r`).
+pub fn read_line_capped<R: BufRead>(
+    reader: &mut R,
+    cap: usize,
+    buf: &mut Vec<u8>,
+) -> std::io::Result<LineRead> {
+    buf.clear();
+    let mut discarding = false;
+    loop {
+        let chunk = reader.fill_buf()?;
+        if chunk.is_empty() {
+            // EOF.
+            if discarding {
+                return Ok(LineRead::TooLong);
+            }
+            if buf.is_empty() {
+                return Ok(LineRead::Eof);
+            }
+            return Ok(LineRead::Line);
+        }
+        let (take, found_newline) = match chunk.iter().position(|&b| b == b'\n') {
+            Some(i) => (i + 1, true),
+            None => (chunk.len(), false),
+        };
+        if !discarding {
+            let keep = take - usize::from(found_newline);
+            if buf.len() + keep > cap {
+                discarding = true;
+                buf.clear();
+            } else {
+                buf.extend_from_slice(&chunk[..keep]);
+            }
+        }
+        reader.consume(take);
+        if found_newline {
+            if discarding {
+                return Ok(LineRead::TooLong);
+            }
+            return Ok(LineRead::Line);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capped_reader_handles_long_partial_and_binary_lines() {
+        use std::io::Cursor;
+        let cap = 16;
+        let mut buf: Vec<u8> = Vec::new();
+        // Normal short lines pass through, CRLF and all. The buffer is
+        // reused across reads (cleared each time, never reallocated).
+        let mut r = Cursor::new(b"hello\nworld\r\n".to_vec());
+        match read_line_capped(&mut r, cap, &mut buf).unwrap() {
+            LineRead::Line => assert_eq!(String::from_utf8_lossy(&buf), "hello"),
+            _ => panic!("expected line"),
+        }
+        match read_line_capped(&mut r, cap, &mut buf).unwrap() {
+            LineRead::Line => assert_eq!(String::from_utf8_lossy(&buf), "world\r"),
+            _ => panic!("expected line"),
+        }
+        assert!(matches!(read_line_capped(&mut r, cap, &mut buf).unwrap(), LineRead::Eof));
+        // An oversized line is consumed (not buffered) and the stream
+        // stays usable for the next line.
+        let mut big = vec![b'x'; 100];
+        big.push(b'\n');
+        big.extend_from_slice(b"next\n");
+        let mut r = Cursor::new(big);
+        assert!(matches!(read_line_capped(&mut r, cap, &mut buf).unwrap(), LineRead::TooLong));
+        match read_line_capped(&mut r, cap, &mut buf).unwrap() {
+            LineRead::Line => assert_eq!(String::from_utf8_lossy(&buf), "next"),
+            _ => panic!("expected line"),
+        }
+        // A half-written final line (no newline before EOF) is returned
+        // as a line; binary garbage is replaced lossily, not fatal.
+        let mut r = Cursor::new(b"\xff\xfepartial".to_vec());
+        match read_line_capped(&mut r, cap, &mut buf).unwrap() {
+            LineRead::Line => {
+                let l = String::from_utf8_lossy(&buf);
+                assert!(l.contains("partial"));
+            }
+            _ => panic!("expected line"),
+        }
+        // An oversized line that never terminates before EOF is TooLong.
+        let mut r = Cursor::new(vec![b'y'; 50]);
+        assert!(matches!(read_line_capped(&mut r, cap, &mut buf).unwrap(), LineRead::TooLong));
+    }
+}

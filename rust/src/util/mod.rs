@@ -6,6 +6,7 @@
 pub mod cli;
 pub mod failpoints;
 pub mod json;
+pub mod lineio;
 pub mod pool;
 pub mod proptest;
 pub mod rng;

@@ -1,0 +1,412 @@
+//! End-to-end tests for the HTTP/1.1 front-end (`qwyc::http`) served by
+//! `Server::attach_http` — the SECOND protocol surface over the same
+//! shard set as the line protocol, not a parallel serving path.
+//!
+//! The headline pin: a `POST /v1/score` response carries the score
+//! token BITWISE-identical to the line protocol's `EVAL` reply and to
+//! `CompiledPlan::eval_single` through the same `%.6f` formatting, at 1
+//! and 4 shards. The robustness pins: framing-lost errors (bad request
+//! line, oversized header, truncated body) answer once and close, while
+//! framing-safe errors (bad body, unknown route, wrong method) fail
+//! alone and the pipelined connection survives.
+//!
+//! Failpoint state is process-global, so every test takes the same
+//! serializing guard the chaos harness uses.
+
+use qwyc::coordinator::{BatchPolicy, Server, ServerConfig};
+use qwyc::ensemble::{BaseModel, Ensemble};
+use qwyc::http::{read_response_from, HttpClient, HttpResponse};
+use qwyc::lattice::Lattice;
+use qwyc::plan::{PlanArtifact, PlanFormat, QwycPlan};
+use qwyc::qwyc::FastClassifier;
+use qwyc::util::failpoints;
+use qwyc::util::json::Json;
+use std::io::{BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::{Mutex, MutexGuard};
+use std::time::Duration;
+
+static FP_LOCK: Mutex<()> = Mutex::new(());
+
+struct FpGuard<'a>(#[allow(dead_code)] MutexGuard<'a, ()>);
+
+impl Drop for FpGuard<'_> {
+    fn drop(&mut self) {
+        failpoints::configure("").expect("clear failpoints");
+    }
+}
+
+fn failpoints_guard(spec: &str) -> FpGuard<'static> {
+    let g = FP_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    failpoints::configure(spec).expect("configure failpoints");
+    FpGuard(g)
+}
+
+/// Tiny deterministic 2-feature plan (f0 = x0, f1 = 1 - x1; neg-only ε)
+/// — the same shape the chaos harness uses.
+fn toy_plan(name: &str) -> QwycPlan {
+    let l0 = Lattice::from_params(vec![0], vec![0.0, 1.0]);
+    let l1 = Lattice::from_params(vec![1], vec![1.0, 0.0]);
+    let ens =
+        Ensemble::new("toy", vec![BaseModel::Lattice(l0), BaseModel::Lattice(l1)], 0.25, 1.0);
+    let fc = FastClassifier {
+        order: vec![1, 0],
+        eps_pos: vec![f32::INFINITY, f32::INFINITY],
+        eps_neg: vec![-0.5, f32::NEG_INFINITY],
+        bias: 0.25,
+        beta: 1.0,
+    };
+    QwycPlan::bundle_with_width(ens, fc, name, 0.01, 2).unwrap()
+}
+
+fn rows(n: usize) -> Vec<[f32; 2]> {
+    (0..n).map(|i| [(i as f32 * 0.137) % 1.0, (i as f32 * 0.291) % 1.0]).collect()
+}
+
+fn config(shards: usize, queue_cap: usize, max_batch: usize) -> ServerConfig {
+    ServerConfig {
+        shards,
+        queue_cap,
+        policy: BatchPolicy::fixed(max_batch, Duration::from_millis(1)),
+        default_deadline: None,
+        cache_bytes: 0,
+    }
+}
+
+/// Start a dual-protocol server from the toy artifact; returns the
+/// server (line-protocol addr in `server.addr`) and the HTTP address.
+fn start_http(name: &str, cfg: ServerConfig) -> (Server, SocketAddr, PlanArtifact) {
+    let artifact = PlanArtifact::from_plan(toy_plan(name)).unwrap();
+    let mut server = Server::start_with_artifact("127.0.0.1:0", &artifact, cfg).unwrap();
+    let http = server.attach_http("127.0.0.1:0").unwrap();
+    (server, http, artifact)
+}
+
+/// Raw TCP connection + buffered reader, for driving malformed bytes.
+fn raw(addr: &SocketAddr) -> (TcpStream, BufReader<TcpStream>) {
+    let s = TcpStream::connect(addr).unwrap();
+    s.set_nodelay(true).ok();
+    let r = BufReader::new(s.try_clone().unwrap());
+    (s, r)
+}
+
+/// The verbatim score token of a single-row `/v1/score` response body.
+fn http_score_token(body: &str) -> &str {
+    let start = body.find("\"score\":").expect("score field") + "\"score\":".len();
+    let len = body[start..].find(",\"models\"").expect("models field");
+    &body[start..start + len]
+}
+
+/// All score tokens of a `/v1/score-batch` response body, in row order.
+fn batch_score_tokens(body: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut rest = body;
+    while let Some(i) = rest.find("\"score\":") {
+        rest = &rest[i + "\"score\":".len()..];
+        let end = rest.find(",\"models\"").expect("models field");
+        out.push(rest[..end].to_string());
+        rest = &rest[end..];
+    }
+    out
+}
+
+fn post_score(client: &mut HttpClient, row: &[f32]) -> HttpResponse {
+    let body = format!("[{}]", row.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(","));
+    client.request("POST", "/v1/score", &[], body.as_bytes()).expect("POST /v1/score")
+}
+
+/// Headline acceptance: `/v1/score` ≡ line-protocol `EVAL` ≡
+/// `eval_single`, token-for-token, at 1 and 4 shards.
+#[test]
+fn score_matches_line_protocol_and_eval_single_bitwise() {
+    let _fp = failpoints_guard("");
+    for shards in [1usize, 4] {
+        let (server, http, artifact) = start_http("http-equiv", config(shards, 4096, 8));
+        let compiled = artifact.compiled();
+        let mut hc = HttpClient::connect(&http).unwrap();
+        let (mut line_wr, mut line_rd) = raw(&server.addr);
+        let mut line = String::new();
+        for (k, row) in rows(24).iter().enumerate() {
+            // Line protocol: "OK <id> <pos|neg> <score> <models> <latency_us>".
+            writeln!(line_wr, "EVAL {k} {},{}", row[0], row[1]).unwrap();
+            line.clear();
+            std::io::BufRead::read_line(&mut line_rd, &mut line).unwrap();
+            let line_token = line.trim().split(' ').nth(3).expect("score token").to_string();
+
+            let resp = post_score(&mut hc, row);
+            assert_eq!(resp.status, 200, "{}", resp.body);
+            let http_token = http_score_token(&resp.body);
+
+            let reference = format!("{:.6}", compiled.eval_single(row).score);
+            assert_eq!(http_token, line_token, "shards={shards} row={k}");
+            assert_eq!(http_token, reference, "shards={shards} row={k}");
+        }
+        server.stop();
+    }
+}
+
+/// A framing-safe bad request (well-framed body that fails to parse)
+/// fails alone: the pipelined good requests around it still answer on
+/// the SAME connection, in order.
+#[test]
+fn pipelined_connection_survives_a_bad_request_mid_stream() {
+    let _fp = failpoints_guard("");
+    let (server, http, _) = start_http("http-pipeline", config(1, 4096, 8));
+    let mut hc = HttpClient::connect(&http).unwrap();
+    // Three requests on the wire before any response is read.
+    hc.send("POST", "/v1/score", &[], b"[0.25,0.5]").unwrap();
+    hc.send("POST", "/v1/score", &[], b"[0.25").unwrap();
+    hc.send("POST", "/v1/score", &[], b"[0.25,0.5]").unwrap();
+    let first = hc.read_response().unwrap();
+    let bad = hc.read_response().unwrap();
+    let third = hc.read_response().unwrap();
+    assert_eq!(first.status, 200, "{}", first.body);
+    assert_eq!(bad.status, 400, "{}", bad.body);
+    assert!(bad.body.contains("error"), "{}", bad.body);
+    assert_eq!(third.status, 200, "{}", third.body);
+    assert_eq!(
+        http_score_token(&first.body),
+        http_score_token(&third.body),
+        "same row, same score"
+    );
+    // And the connection still serves the admin plane afterwards.
+    let health = hc.request("GET", "/healthz", &[], b"").unwrap();
+    assert_eq!(health.status, 200);
+    server.stop();
+}
+
+/// A request line that is not HTTP answers 400 once, then the
+/// connection closes (the request boundary is lost).
+#[test]
+fn malformed_request_line_answers_400_then_closes() {
+    let _fp = failpoints_guard("");
+    let (server, http, _) = start_http("http-badline", config(1, 4096, 8));
+    let (mut wr, mut rd) = raw(&http);
+    wr.write_all(b"NOT-AN-HTTP-LINE\r\n\r\n").unwrap();
+    let resp = read_response_from(&mut rd).unwrap();
+    assert_eq!(resp.status, 400, "{}", resp.body);
+    assert_eq!(resp.header("Connection"), Some("close"));
+    assert!(read_response_from(&mut rd).is_err(), "connection must be closed");
+    server.stop();
+}
+
+/// A header line past the cap answers 431 and closes.
+#[test]
+fn oversized_header_line_answers_431_then_closes() {
+    let _fp = failpoints_guard("");
+    let (server, http, _) = start_http("http-bighdr", config(1, 4096, 8));
+    let (mut wr, mut rd) = raw(&http);
+    let big = "a".repeat(9 * 1024);
+    write!(wr, "GET /healthz HTTP/1.1\r\nX-Big: {big}\r\n\r\n").unwrap();
+    let resp = read_response_from(&mut rd).unwrap();
+    assert_eq!(resp.status, 431, "{}", resp.body);
+    assert!(read_response_from(&mut rd).is_err(), "connection must be closed");
+    server.stop();
+}
+
+/// A body shorter than its declared `Content-Length` answers 400 and
+/// closes — the framing is unrecoverable.
+#[test]
+fn truncated_body_answers_400_then_closes() {
+    let _fp = failpoints_guard("");
+    let (server, http, _) = start_http("http-trunc", config(1, 4096, 8));
+    let (mut wr, mut rd) = raw(&http);
+    wr.write_all(b"POST /v1/score HTTP/1.1\r\nContent-Length: 50\r\n\r\n[0.1,").unwrap();
+    wr.shutdown(std::net::Shutdown::Write).unwrap();
+    let resp = read_response_from(&mut rd).unwrap();
+    assert_eq!(resp.status, 400, "{}", resp.body);
+    assert!(resp.body.contains("truncated body"), "{}", resp.body);
+    assert!(read_response_from(&mut rd).is_err(), "connection must be closed");
+    server.stop();
+}
+
+/// Unknown routes (404) and known routes with the wrong method (405)
+/// are framing-safe: the keep-alive connection keeps serving.
+#[test]
+fn unknown_route_and_wrong_method_keep_the_connection_alive() {
+    let _fp = failpoints_guard("");
+    let (server, http, _) = start_http("http-routes", config(1, 4096, 8));
+    let mut hc = HttpClient::connect(&http).unwrap();
+    let resp = hc.request("GET", "/nope", &[], b"").unwrap();
+    assert_eq!(resp.status, 404, "{}", resp.body);
+    let resp = hc.request("POST", "/healthz", &[], b"").unwrap();
+    assert_eq!(resp.status, 405, "{}", resp.body);
+    let resp = hc.request("GET", "/v1/score", &[], b"").unwrap();
+    assert_eq!(resp.status, 405, "{}", resp.body);
+    let resp = hc.request("GET", "/healthz", &[], b"").unwrap();
+    assert_eq!(resp.status, 200, "{}", resp.body);
+    server.stop();
+}
+
+/// The same rows through `/v1/score-batch` as a JSON array-of-arrays
+/// and as a CSV body yield token-identical scores, and the batch
+/// summary counts every row as ok.
+#[test]
+fn csv_and_json_batch_bodies_agree() {
+    let _fp = failpoints_guard("");
+    let (server, http, _) = start_http("http-csv", config(2, 4096, 8));
+    let mut hc = HttpClient::connect(&http).unwrap();
+    let rows = rows(6);
+    let json_body = format!(
+        "[{}]",
+        rows.iter().map(|r| format!("[{},{}]", r[0], r[1])).collect::<Vec<_>>().join(",")
+    );
+    let csv_body =
+        rows.iter().map(|r| format!("{},{}", r[0], r[1])).collect::<Vec<_>>().join("\n");
+    let from_json = hc.request("POST", "/v1/score-batch", &[], json_body.as_bytes()).unwrap();
+    assert_eq!(from_json.status, 200, "{}", from_json.body);
+    assert!(from_json.body.contains("\"ok\":6"), "{}", from_json.body);
+    let from_csv = hc
+        .request("POST", "/v1/score-batch", &[("Content-Type", "text/csv")], csv_body.as_bytes())
+        .unwrap();
+    assert_eq!(from_csv.status, 200, "{}", from_csv.body);
+    let json_tokens = batch_score_tokens(&from_json.body);
+    let csv_tokens = batch_score_tokens(&from_csv.body);
+    assert_eq!(json_tokens.len(), 6);
+    assert_eq!(json_tokens, csv_tokens);
+    server.stop();
+}
+
+/// The `X-Deadline-Ms` header carries the line protocol's deadline
+/// semantics: a short deadline under an injected batch stall maps to
+/// 504, and `X-Deadline-Ms: 0` opts out and rides the stall to a 200.
+#[test]
+fn deadline_header_maps_timeout_to_504_and_zero_opts_out() {
+    let _fp = failpoints_guard("slow_batch@ms=60");
+    let (server, http, _) = start_http("http-deadline", config(1, 4096, 4));
+    let mut hc = HttpClient::connect(&http).unwrap();
+    let resp = hc.request("POST", "/v1/score", &[("X-Deadline-Ms", "15")], b"[0.3,0.7]").unwrap();
+    assert_eq!(resp.status, 504, "{}", resp.body);
+    assert!(resp.body.contains("\"status\":\"timeout\""), "{}", resp.body);
+    let resp = hc.request("POST", "/v1/score", &[("X-Deadline-Ms", "0")], b"[0.3,0.7]").unwrap();
+    assert_eq!(resp.status, 200, "{}", resp.body);
+    server.stop();
+}
+
+/// With a one-deep queue, a one-row batch policy, and a stalled shard,
+/// most rows of a batch are refused at admission: BUSY dominates the
+/// batch status (503) and the refused rows are itemized as busy.
+#[test]
+fn full_queue_maps_busy_to_503() {
+    let _fp = failpoints_guard("slow_batch@ms=80");
+    let (server, http, _) = start_http("http-busy", config(1, 1, 1));
+    let mut hc = HttpClient::connect(&http).unwrap();
+    let body = format!(
+        "[{}]",
+        (0..16).map(|i| format!("[0.{},0.5]", i % 10)).collect::<Vec<_>>().join(",")
+    );
+    let resp = hc.request("POST", "/v1/score-batch", &[], body.as_bytes()).unwrap();
+    assert_eq!(resp.status, 503, "{}", resp.body);
+    assert!(resp.body.contains("\"status\":\"busy\""), "{}", resp.body);
+    // The batch summary accounts for every row exactly once.
+    let j = Json::parse(&resp.body).unwrap();
+    let total = ["ok", "busy", "timeout", "error"]
+        .iter()
+        .map(|k| j.req(k).unwrap().as_usize().unwrap())
+        .sum::<usize>();
+    assert_eq!(total, 16);
+    assert!(j.req("busy").unwrap().as_usize().unwrap() >= 1);
+    server.stop();
+}
+
+/// The admin plane, end to end on one server: healthz, stats, metrics,
+/// plan, a rejected and a successful reload (generation bump visible in
+/// `GET /plan`), then drain — after which healthz flips to 503 and
+/// scoring reports the drain.
+#[test]
+fn admin_surface_round_trip() {
+    let _fp = failpoints_guard("");
+    let (server, http, _) = start_http("http-admin", config(2, 4096, 8));
+    let mut hc = HttpClient::connect(&http).unwrap();
+
+    let health = hc.request("GET", "/healthz", &[], b"").unwrap();
+    assert_eq!(health.status, 200, "{}", health.body);
+    assert!(health.body.contains("\"shards\":2"), "{}", health.body);
+
+    for row in rows(4) {
+        assert_eq!(post_score(&mut hc, &row).status, 200);
+    }
+
+    // /stats: one JSON document — the serving snapshot plus the HTTP
+    // middleware's own per-route latencies (it has seen itself? no:
+    // recording happens after the response is written, so /stats sees
+    // every EARLIER request).
+    let stats = hc.request("GET", "/stats", &[], b"").unwrap();
+    assert_eq!(stats.status, 200);
+    let j = Json::parse(&stats.body).unwrap();
+    assert_eq!(j.req("serving").unwrap().req("requests").unwrap().as_usize().unwrap(), 4);
+    let score_route = j.req("http").unwrap().req("/v1/score").unwrap();
+    assert_eq!(score_route.req("requests").unwrap().as_usize().unwrap(), 4);
+    assert_eq!(score_route.req("status").unwrap().req("200").unwrap().as_usize().unwrap(), 4);
+
+    // /metrics: engine families and HTTP families in one exposition.
+    let metrics = hc.request("GET", "/metrics", &[], b"").unwrap();
+    assert_eq!(metrics.status, 200);
+    assert!(metrics.header("Content-Type").unwrap().starts_with("text/plain"), "{metrics:?}");
+    assert!(metrics.body.contains("qwyc_requests_total 4"), "{}", metrics.body);
+    assert!(metrics.body.contains("qwyc_shard_requests_total{shard=\"0\"}"), "{}", metrics.body);
+    assert!(
+        metrics.body.contains("qwyc_http_requests_total{route=\"/v1/score\",status=\"200\"} 4"),
+        "{}",
+        metrics.body
+    );
+
+    // /plan: the live artifact at generation 0.
+    let plan = hc.request("GET", "/plan", &[], b"").unwrap();
+    assert_eq!(plan.status, 200, "{}", plan.body);
+    let j = Json::parse(&plan.body).unwrap();
+    assert_eq!(j.req("generation").unwrap().as_usize().unwrap(), 0);
+    let info = j.req("plan").unwrap();
+    assert_eq!(info.req("format").unwrap().as_str().unwrap(), "qwyc-plan-bin-v1");
+    assert_eq!(info.req("name").unwrap().as_str().unwrap(), "http-admin");
+
+    // Rejected reloads: unreadable path (staged io reason), then a
+    // truncated artifact — both 409, last-known-good keeps serving.
+    let resp = hc.request("POST", "/reload", &[], b"/nonexistent/plan.bin").unwrap();
+    assert_eq!(resp.status, 409, "{}", resp.body);
+    let j = Json::parse(&resp.body).unwrap();
+    assert_eq!(j.req("status").unwrap().as_str().unwrap(), "rejected");
+    assert_eq!(j.req("stage").unwrap().as_str().unwrap(), "io");
+
+    let tmp = std::env::temp_dir();
+    let good_path = tmp.join("qwyc_http_reload.bin");
+    PlanArtifact::from_plan(toy_plan("http-v2"))
+        .unwrap()
+        .save(&good_path, PlanFormat::Binary)
+        .unwrap();
+    let bytes = std::fs::read(&good_path).unwrap();
+    let trunc_path = tmp.join("qwyc_http_trunc.bin");
+    std::fs::write(&trunc_path, &bytes[..128.min(bytes.len())]).unwrap();
+    let resp = hc.request("POST", "/reload", &[], trunc_path.to_str().unwrap().as_bytes()).unwrap();
+    assert_eq!(resp.status, 409, "{}", resp.body);
+    assert!(resp.body.contains("\"status\":\"rejected\""), "{}", resp.body);
+    assert_eq!(post_score(&mut hc, &[0.3, 0.7]).status, 200, "LKG must keep serving");
+
+    // Successful reload via the JSON body form; generation bumps.
+    let body = format!("{{\"path\": \"{}\"}}", good_path.to_str().unwrap().replace('\\', "/"));
+    let resp = hc.request("POST", "/reload", &[], body.as_bytes()).unwrap();
+    assert_eq!(resp.status, 200, "{}", resp.body);
+    let j = Json::parse(&resp.body).unwrap();
+    assert_eq!(j.req("status").unwrap().as_str().unwrap(), "reloaded");
+    assert_eq!(j.req("plan").unwrap().as_str().unwrap(), "http-v2");
+    assert_eq!(j.req("generation").unwrap().as_usize().unwrap(), 1);
+    let plan = hc.request("GET", "/plan", &[], b"").unwrap();
+    let j = Json::parse(&plan.body).unwrap();
+    assert_eq!(j.req("generation").unwrap().as_usize().unwrap(), 1);
+    assert_eq!(j.req("plan").unwrap().req("name").unwrap().as_str().unwrap(), "http-v2");
+
+    // Drain: queues empty, admission closed, health flips to 503.
+    let resp = hc.request("POST", "/drain", &[], b"").unwrap();
+    assert_eq!(resp.status, 200, "{}", resp.body);
+    assert!(resp.body.contains("\"queued\":0"), "{}", resp.body);
+    let health = hc.request("GET", "/healthz", &[], b"").unwrap();
+    assert_eq!(health.status, 503, "{}", health.body);
+    assert!(health.body.contains("draining"), "{}", health.body);
+    let resp = post_score(&mut hc, &[0.3, 0.7]);
+    assert_eq!(resp.status, 422, "{}", resp.body);
+    assert!(resp.body.contains("draining"), "{}", resp.body);
+
+    server.stop();
+    std::fs::remove_file(&good_path).ok();
+    std::fs::remove_file(&trunc_path).ok();
+}
